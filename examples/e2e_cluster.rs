@@ -1,0 +1,116 @@
+//! End-to-end driver (DESIGN.md): the full system on a realistic small
+//! workload, proving all layers compose.
+//!
+//! 200 peers across the paper's five regions; a mixed-size corpus of 30
+//! objects is stored, the cluster then lives through Poisson churn,
+//! 10% Byzantine conversion and a targeted attack while decentralized
+//! repair runs; finally every object is read back bit-exact and the run
+//! reports latency/throughput/repair statistics (recorded in
+//! EXPERIMENTS.md §E2E).
+//!
+//! Run: `cargo run --release --example e2e_cluster [-- --peers 200 --objects 30]`
+
+use vault::coordinator::{workload::Corpus, Cluster, ClusterConfig};
+use vault::proto::AppEvent;
+use vault::util::cli::Args;
+use vault::util::stats::Samples;
+use vault::util::Timer;
+
+fn main() {
+    let args = Args::from_env();
+    let peers = args.get("peers", 200usize);
+    let n_objects = args.get("objects", 30usize);
+    let wall = Timer::start();
+
+    let mut cfg = ClusterConfig::small_test(peers);
+    cfg.vault.heartbeat_ms = 10_000;
+    cfg.vault.suspicion_ms = 30_000;
+    cfg.vault.tick_ms = 10_000;
+    cfg.vault.cache_ttl_ms = 48 * 3_600 * 1_000;
+    cfg.vault.op_deadline_ms = 120_000;
+    let r_target = cfg.vault.r_inner;
+    println!(
+        "== e2e: {peers} peers / 5 regions, inner ({},{}), outer ({},{}), 48h chunk cache ==",
+        cfg.vault.k_inner, cfg.vault.r_inner, cfg.vault.k_outer, cfg.vault.n_outer
+    );
+    let mut cluster = Cluster::start(cfg);
+
+    // Phase 1: ingest a mixed-size corpus (4 KiB – 1 MiB).
+    let corpus = Corpus::generate_mixed(77, n_objects, 4 << 10, 1 << 20);
+    let mut store_lat = Samples::new();
+    let mut handles = Vec::new();
+    let ingest_start = cluster.net.now_ms();
+    for (i, (data, secret)) in corpus.objects.iter().enumerate() {
+        let client = cluster.random_client();
+        let res = cluster.store_blocking(client, data, secret, 0).expect("store");
+        store_lat.push(res.latency_ms as f64);
+        handles.push((res.value, data.clone()));
+        if i % 10 == 9 {
+            println!("  ingested {}/{n_objects}", i + 1);
+        }
+    }
+    let ingest_virtual_s = (cluster.net.now_ms() - ingest_start) as f64 / 1e3;
+    println!(
+        "phase 1 STORE: {} objects, latency {} (virtual ms), {:.1} obj/s virtual",
+        n_objects,
+        store_lat.summary(),
+        n_objects as f64 / ingest_virtual_s.max(0.001)
+    );
+
+    // Phase 2: adversity — churn 10% of peers, convert 10% to Byzantine,
+    // blackhole 5%; let repair work for 10 virtual minutes.
+    println!("phase 2: churn {}, byzantine {}, attack {} peers", peers / 10, peers / 10, peers / 20);
+    cluster.churn(peers / 10);
+    for i in 0..peers / 10 {
+        let idx = (i * 13 + 1) % cluster.net.len();
+        cluster.net.peer_mut(idx).cfg.byzantine = true;
+    }
+    cluster.attack_random(peers / 20);
+    let mut repairs = 0usize;
+    for _ in 0..60 {
+        for (_, ev) in cluster.net.run_for(10_000) {
+            if matches!(ev, AppEvent::RepairJoined { .. }) {
+                repairs += 1;
+            }
+        }
+    }
+    let healthy = handles
+        .iter()
+        .flat_map(|(id, _)| id.chunks.iter())
+        .filter(|c| cluster.net.surviving_fragments(c) >= r_target)
+        .count();
+    let total_chunks: usize = handles.iter().map(|(id, _)| id.chunks.len()).sum();
+    println!(
+        "phase 2 done: {repairs} repair joins, {healthy}/{total_chunks} groups back at R, \
+         repair traffic {:.2} MiB",
+        cluster.net.total_repair_traffic() as f64 / (1 << 20) as f64
+    );
+
+    // Phase 3: read everything back, bit-exact.
+    let mut query_lat = Samples::new();
+    let mut intact = 0usize;
+    for (id, want) in &handles {
+        let client = cluster.random_client();
+        match cluster.query_blocking(client, id) {
+            Ok(res) => {
+                assert_eq!(&res.value, want, "silent corruption!");
+                intact += 1;
+                query_lat.push(res.latency_ms as f64);
+            }
+            Err(e) => println!("  QUERY FAILED: {e}"),
+        }
+    }
+    println!(
+        "phase 3 QUERY: {intact}/{} objects intact, latency {} (virtual ms)",
+        handles.len(),
+        query_lat.summary()
+    );
+    println!(
+        "== e2e complete: {:.1}s wall, {:.1} min virtual, {} msgs, {:.1} MiB on the wire ==",
+        wall.elapsed_s(),
+        cluster.net.now_ms() as f64 / 60_000.0,
+        cluster.net.stats.msgs,
+        cluster.net.stats.bytes as f64 / (1 << 20) as f64
+    );
+    assert_eq!(intact, handles.len(), "durability violated");
+}

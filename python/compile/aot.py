@@ -1,0 +1,140 @@
+"""AOT lowering: JAX graphs -> HLO text artifacts for the rust runtime.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what
+the published ``xla`` 0.1.6 crate links) rejects (``proto.id() <=
+INT_MAX``).  The text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Emits one ``<name>.hlo.txt`` per graph variant plus ``manifest.json``
+describing shapes so the rust runtime can discover and validate them.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import ctmc, model  # noqa: E402
+
+# (k, r) inner-code configurations used by the evaluation:
+#   (32, 80)  — paper default (K_inner=32, R=80)
+#   (16, 40)  — "small" config in Fig 5/6/7 sweeps
+#   (64, 160) — "conservative" config
+# w is the word-panel width the rust runtime tiles chunks into.
+ENCODE_VARIANTS = [
+    (32, 80, 1024),
+    (16, 40, 1024),
+    (64, 160, 1024),
+    (32, 80, 64),  # small panel used by tests
+]
+DECODE_VARIANTS = [
+    (32, 1024),
+    (16, 1024),
+    (64, 1024),
+    (32, 64),
+]
+CTMC_STATES = 64  # padded s; serves any (n, k) with n-k+2 <= 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_artifacts():
+    """Yield (name, hlo_text, manifest_entry) for every artifact."""
+    for k, r, w in ENCODE_VARIANTS:
+        name = f"rlf_encode_k{k}_r{r}_w{w}"
+        lowered = jax.jit(model.rlf_encode).lower(
+            _spec((r, k), jnp.uint32), _spec((k, w), jnp.uint32)
+        )
+        yield name, to_hlo_text(lowered), {
+            "kind": "encode",
+            "k": k,
+            "r": r,
+            "w": w,
+            "inputs": [["u32", [r, k]], ["u32", [k, w]]],
+            "outputs": [["u32", [r, w]]],
+        }
+
+    for k, w in DECODE_VARIANTS:
+        kw = (k + 31) // 32
+        name = f"rlf_decode_k{k}_w{w}"
+        lowered = jax.jit(model.rlf_decode).lower(
+            _spec((k, kw), jnp.uint32), _spec((k, w), jnp.uint32)
+        )
+        yield name, to_hlo_text(lowered), {
+            "kind": "decode",
+            "k": k,
+            "kw": kw,
+            "w": w,
+            "inputs": [["u32", [k, kw]], ["u32", [k, w]]],
+            "outputs": [["u32", [k, w]], ["u32", []]],
+        }
+
+    s, t = CTMC_STATES, ctmc._SCAN_STEPS
+    name = f"ctmc_absorb_s{s}_t{t}"
+    lowered = jax.jit(ctmc.ctmc_absorb_series_with_final).lower(
+        _spec((s, s), jnp.float64), _spec((s,), jnp.float64), _spec((s,), jnp.float64)
+    )
+    yield name, to_hlo_text(lowered), {
+        "kind": "ctmc",
+        "s": s,
+        "t": t,
+        "inputs": [["f64", [s, s]], ["f64", [s]], ["f64", [s]]],
+        "outputs": [["f64", [t]], ["f64", [s]]],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {}
+    for name, text, entry in build_artifacts():
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entry["file"] = f"{name}.hlo.txt"
+        manifest[name] = entry
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+
+    # Tab-separated manifest for the (serde-less) rust runtime:
+    # name  kind  k  r  w  file   — ctmc packs (s, 0, t).
+    with open(os.path.join(args.out, "manifest.tsv"), "w") as f:
+        for name, entry in sorted(manifest.items()):
+            if entry["kind"] == "encode":
+                k, r, w = entry["k"], entry["r"], entry["w"]
+            elif entry["kind"] == "decode":
+                k, r, w = entry["k"], 0, entry["w"]
+            else:  # ctmc
+                k, r, w = entry["s"], 0, entry["t"]
+            f.write(f"{name}\t{entry['kind']}\t{k}\t{r}\t{w}\t{entry['file']}\n")
+    print(f"wrote manifests ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

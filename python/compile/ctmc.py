@@ -1,0 +1,58 @@
+"""L2 JAX graph for the Appendix-A CTMC durability model (Lemma 4.1).
+
+The durability of one chunk group is a Markov chain over the number of
+Byzantine members b in {0..n-k} plus one absorbing "lost" state.  Given
+the (s x s) stochastic matrix Theta (built natively by
+``rust/src/analysis/ctmc.rs`` from churn rate, eviction rate and group
+parameters) and the hypergeometric initial vector I, the probability the
+group is lost by step T is the absorbing component of I @ Theta^T.
+
+The graph scans T = 1..t mat-vec steps and emits the whole series — the
+quantity inside Eq. (1) of the paper.  Matrices are padded to a fixed
+size ``s`` so one artifact serves every (n, k) configuration with
+n-k+2 <= s; padding rows/cols are identity and never mix (the native
+builder guarantees pad states are self-absorbing).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ctmc_absorb_series(theta: jax.Array, init: jax.Array, absorb_idx: jax.Array):
+    """Absorbing-probability series for T = 1..t.
+
+    Args:
+      theta: f64[s, s] row-stochastic transition matrix.
+      init:  f64[s] initial distribution.
+      absorb_idx: s-length one-hot f64 selector of the absorbing state.
+
+    Returns:
+      f64[t] where entry T-1 = (init @ theta^T) . absorb_idx.
+    """
+
+    def step(v, _):
+        v = v @ theta
+        return v, v @ absorb_idx
+
+    t = _SCAN_STEPS
+    _, series = jax.lax.scan(step, init, None, length=t)
+    return series
+
+
+# Fixed trip count baked into the artifact; the rust side chains multiple
+# executions (warm-starting from the final vector) for longer horizons.
+_SCAN_STEPS = 512
+
+
+def ctmc_absorb_series_with_final(theta, init, absorb_idx):
+    """Like ``ctmc_absorb_series`` but also returns the final state vector
+    so the caller can chain windows of ``_SCAN_STEPS`` steps."""
+
+    def step(v, _):
+        v = v @ theta
+        return v, v @ absorb_idx
+
+    final, series = jax.lax.scan(step, init, None, length=_SCAN_STEPS)
+    return series, final

@@ -1,0 +1,69 @@
+"""Pure-jnp correctness oracles for the VAULT coding kernels.
+
+The inner rateless code of VAULT is a random linear fountain over GF(2):
+fragment ``r`` is the XOR of the source blocks selected by coefficient row
+``C[r, :]``.  Treating blocks as vectors of uint32 words, encoding is a
+matrix product in the (AND, XOR) semiring:
+
+    out[r, w] = XOR_i ( C[r, i] ? B[i, w] : 0 )
+
+These oracles are deliberately simple (no tiling, no pallas) and are the
+ground truth pytest pins the L1 kernel and the rust native codec against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def xor_gemm_ref(coeff: jax.Array, blocks: jax.Array) -> jax.Array:
+    """GF(2) mat-mul reference.
+
+    Args:
+      coeff:  uint32[r, k] with entries in {0, 1}.
+      blocks: uint32[k, w] packed words.
+
+    Returns:
+      uint32[r, w] fragments.
+    """
+    coeff = coeff.astype(jnp.uint32)
+    blocks = blocks.astype(jnp.uint32)
+    # Select (multiply by 0/1) then XOR-reduce over the k axis.  The mask
+    # multiply is exact for 0/1 coefficients in uint32.
+    masked = coeff[:, :, None] * blocks[None, :, :]
+    return jax.lax.reduce(masked, jnp.uint32(0), jax.lax.bitwise_xor, [1])
+
+
+def gf2_decode_ref(coeff_bits, payload):
+    """Reference GF(2) Gauss-Jordan solve, plain numpy (host only).
+
+    Args:
+      coeff_bits: uint32[k, kw] bit-packed coefficient rows (kw*32 >= k).
+      payload:    uint32[k, w] fragment payloads.
+
+    Returns:
+      (blocks uint32[k, w], ok bool) — ``ok`` False when the coefficient
+      matrix is singular.
+    """
+    import numpy as np
+
+    C = np.array(coeff_bits, dtype=np.uint64)
+    F = np.array(payload, dtype=np.uint64)
+    k = C.shape[0]
+    used = np.zeros(k, dtype=bool)
+    perm = np.zeros(k, dtype=np.int64)
+    for col in range(k):
+        word, bit = divmod(col, 32)
+        colbits = (C[:, word] >> np.uint64(bit)) & np.uint64(1)
+        elig = np.where(~used, colbits, 0)
+        p = int(np.argmax(elig))
+        if elig[p] == 0:
+            return np.zeros_like(F, dtype=np.uint32), False
+        used[p] = True
+        perm[col] = p
+        mask = colbits == 1
+        mask[p] = False
+        C[mask] ^= C[p]
+        F[mask] ^= F[p]
+    return F[perm].astype(np.uint32), True

@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: GF(2) XOR-GEMM — VAULT's inner-code encode hot loop.
+
+Encoding ``r`` fragments from ``k`` source blocks of ``w`` uint32 words is
+a matrix product in the (AND, XOR) semiring:
+
+    out[r, w] = XOR_i ( C[r, i] ? B[i, w] : 0 )
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the kernel is tiled the
+way an MXU matmul would be — a grid over (R-tiles, W-tiles, K-tiles) with
+the K axis innermost so each output tile accumulates (XOR) while K-panels
+of the source blocks stream HBM→VMEM.  On real TPU hardware this runs on
+the VPU (integer XOR); under the CPU PJRT plugin we lower with
+``interpret=True`` which expands to plain HLO.
+
+VMEM footprint per grid step (defaults bR=64, bK=32, bW=256, 4-byte
+words): (bR*bK + bK*bW + bR*bW) * 4 B = 112 KiB — far below the ~16 MiB
+VMEM budget, leaving room for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xor_gemm_kernel(c_ref, b_ref, o_ref):
+    """One (bR, bW) output tile; accumulates one K-panel per grid step."""
+    c = c_ref[...].astype(jnp.uint32)  # (bR, bK) 0/1 coefficients
+    b = b_ref[...].astype(jnp.uint32)  # (bK, bW) packed words
+    masked = c[:, :, None] * b[None, :, :]  # (bR, bK, bW)
+    acc = jax.lax.reduce(masked, jnp.uint32(0), jax.lax.bitwise_xor, [1])
+
+    # K is the innermost grid axis: zero the tile on the first panel, then
+    # XOR-accumulate the remaining panels into the same output block.
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] ^= acc
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_k", "block_w"))
+def xor_gemm(
+    coeff: jax.Array,
+    blocks: jax.Array,
+    *,
+    block_r: int = 64,
+    block_k: int = 32,
+    block_w: int = 256,
+) -> jax.Array:
+    """GF(2) mat-mul via the Pallas kernel.
+
+    Args:
+      coeff:  uint32[r, k], entries in {0, 1}.
+      blocks: uint32[k, w].
+
+    Returns:
+      uint32[r, w].
+    """
+    r, k = coeff.shape
+    k2, w = blocks.shape
+    assert k == k2, f"coeff k={k} != blocks k={k2}"
+
+    br = min(block_r, _ceil_to(r, 8))
+    bk = min(block_k, _ceil_to(k, 8))
+    bw = min(block_w, _ceil_to(w, 8))
+    rp, kp, wp = _ceil_to(r, br), _ceil_to(k, bk), _ceil_to(w, bw)
+
+    # Zero-pad to tile multiples: XOR with zero is identity, and 0-coeff
+    # rows/cols contribute nothing, so padding never changes the result.
+    cpad = jnp.zeros((rp, kp), jnp.uint32).at[:r, :k].set(coeff)
+    bpad = jnp.zeros((kp, wp), jnp.uint32).at[:k, :w].set(blocks)
+
+    grid = (rp // br, wp // bw, kp // bk)
+    out = pl.pallas_call(
+        _xor_gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bw), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bw), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rp, wp), jnp.uint32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(cpad, bpad)
+    return out[:r, :w]

@@ -1,0 +1,71 @@
+"""L2 JAX compute graphs for VAULT's inner rateless code.
+
+Two graphs, both AOT-lowered by ``aot.py`` and executed from the rust
+runtime (``rust/src/runtime``) on the PJRT CPU client:
+
+* ``rlf_encode`` — batch fragment generation (STORE / repair hot path);
+  thin wrapper over the L1 Pallas kernel so both lower into one HLO.
+* ``rlf_decode`` — GF(2) Gauss-Jordan elimination recovering the k source
+  blocks from k fragments (QUERY / repair path).  Branchless masked
+  elimination inside a fixed k-step ``fori_loop``; pivot permutation is
+  applied with a gather at the end.
+
+Shapes are static per artifact; the rust runtime tiles arbitrary chunk
+sizes into fixed-width word panels and loops.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.xorgemm import xor_gemm
+
+
+def rlf_encode(coeff: jax.Array, blocks: jax.Array) -> jax.Array:
+    """Encode ``r`` fragments from ``k`` blocks.  See ``xor_gemm``."""
+    return xor_gemm(coeff, blocks)
+
+
+def rlf_decode(coeff_bits: jax.Array, payload: jax.Array):
+    """Solve the GF(2) system ``C @ X = F`` for the source blocks ``X``.
+
+    Args:
+      coeff_bits: uint32[k, kw] bit-packed coefficient rows (row i is the
+        coefficient vector of fragment i; bit c of row i set means block c
+        participates in fragment i).
+      payload: uint32[k, w] fragment payload words.
+
+    Returns:
+      (blocks uint32[k, w], ok uint32) — ``ok`` is 1 when the system was
+      full rank and ``blocks`` holds the decoded source blocks, else 0.
+    """
+    k, kw = coeff_bits.shape
+    _, w = payload.shape
+    rows = jnp.arange(k, dtype=jnp.uint32)
+
+    def step(col, state):
+        c, f, used, perm, ok = state
+        word = col // 32
+        bit = jnp.uint32(col % 32)
+        colbits = (c[:, word] >> bit) & jnp.uint32(1)  # (k,)
+        elig = jnp.where(used == 0, colbits, jnp.uint32(0))
+        p = jnp.argmax(elig)  # first eligible pivot row
+        ok = ok & (elig[p] > 0).astype(jnp.uint32)
+        used = used.at[p].set(jnp.uint32(1))
+        perm = perm.at[col].set(p.astype(jnp.uint32))
+        # Eliminate the pivot row from every other row that has this bit.
+        elim = colbits * (rows != p.astype(jnp.uint32)).astype(jnp.uint32)
+        c = c ^ elim[:, None] * c[p]
+        f = f ^ elim[:, None] * f[p]
+        return c, f, used, perm, ok
+
+    init = (
+        coeff_bits.astype(jnp.uint32),
+        payload.astype(jnp.uint32),
+        jnp.zeros((k,), jnp.uint32),
+        jnp.zeros((k,), jnp.uint32),
+        jnp.uint32(1),
+    )
+    _, f, _, perm, ok = jax.lax.fori_loop(0, k, step, init)
+    return f[perm], ok

@@ -1,0 +1,90 @@
+"""L1 kernel roofline / VMEM analysis (DESIGN.md §Hardware-Adaptation).
+
+Under ``interpret=True`` the Pallas kernel's wall time is CPU-numpy, not
+a TPU proxy, so the perf pass optimizes *structure*: this tool computes,
+for a sweep of (bR, bK, bW) block shapes, the per-grid-step VMEM
+footprint, the HBM traffic per output byte (arithmetic-intensity dual),
+and the resulting roofline bound on a nominal TPU memory system — the
+quantities that decide whether a tile schedule is sound before any
+hardware run.
+
+Usage:  cd python && python -m compile.roofline [r] [k] [w]
+"""
+
+from __future__ import annotations
+
+import sys
+
+WORD = 4  # uint32
+VMEM_BUDGET = 16 << 20  # ~16 MiB per TPU core
+HBM_GBPS = 1200.0  # nominal v4-ish HBM bandwidth
+VPU_GOPS = 4000.0  # nominal vector-unit 32-bit ops/s (GOP/s)
+
+
+def analyze(r: int, k: int, w: int, br: int, bk: int, bw: int) -> dict:
+    """Static cost model for one block shape on the (r,k,w) problem."""
+    br, bk, bw = min(br, r), min(bk, k), min(bw, w)
+    grid = ((r + br - 1) // br, (w + bw - 1) // bw, (k + bk - 1) // bk)
+    steps = grid[0] * grid[1] * grid[2]
+    vmem = (br * bk + bk * bw + br * bw) * WORD
+    # HBM traffic: every grid step streams its C and B tiles; the output
+    # tile is resident across the K axis (innermost) and written once.
+    bytes_in = steps * (br * bk + bk * bw) * WORD
+    bytes_out = grid[0] * grid[1] * br * bw * WORD
+    total_bytes = bytes_in + bytes_out
+    # Work: one AND+XOR per (r,k,w) cell.
+    ops = 2 * r * k * w
+    intensity = ops / total_bytes  # ops per HBM byte
+    # Roofline: min(compute bound, bandwidth bound), seconds.
+    t_bw = total_bytes / (HBM_GBPS * 1e9)
+    t_compute = ops / (VPU_GOPS * 1e9)
+    return {
+        "block": (br, bk, bw),
+        "grid": grid,
+        "steps": steps,
+        "vmem": vmem,
+        "vmem_ok": vmem * 2 <= VMEM_BUDGET,  # x2 for double buffering
+        "hbm_bytes": total_bytes,
+        "intensity": intensity,
+        "bound": "bandwidth" if t_bw > t_compute else "compute",
+        "t_roofline_us": max(t_bw, t_compute) * 1e6,
+    }
+
+
+def sweep(r: int, k: int, w: int):
+    shapes = [
+        (8, 8, 128),
+        (32, 32, 128),
+        (64, 32, 256),  # shipped default
+        (64, 64, 256),
+        (128, 32, 512),
+        (r, k, 1024),
+    ]
+    rows = [analyze(r, k, w, *s) for s in shapes]
+    return rows
+
+
+def main() -> None:
+    args = [int(a) for a in sys.argv[1:4]] or []
+    r, k, w = (args + [80, 32, 4096])[:3]
+    print(f"# XOR-GEMM roofline sweep for r={r}, k={k}, w={w} (uint32 words)")
+    print(
+        f"{'block(bR,bK,bW)':>18} {'grid':>12} {'VMEM/step':>10} {'2xbuf?':>7} "
+        f"{'HBM MiB':>9} {'ops/B':>7} {'bound':>10} {'t_roof':>9}"
+    )
+    for row in sweep(r, k, w):
+        print(
+            f"{str(row['block']):>18} {str(row['grid']):>12} "
+            f"{row['vmem'] / 1024:>8.0f}KB {str(row['vmem_ok']):>7} "
+            f"{row['hbm_bytes'] / (1 << 20):>9.2f} {row['intensity']:>7.2f} "
+            f"{row['bound']:>10} {row['t_roofline_us']:>7.1f}us"
+        )
+    best = min(
+        (r for r in sweep(r, k, w) if r["vmem_ok"]), key=lambda r: r["t_roofline_us"]
+    )
+    print(f"# best feasible shape: {best['block']} ({best['bound']}-bound, "
+          f"{best['t_roofline_us']:.1f} us roofline)")
+
+
+if __name__ == "__main__":
+    main()

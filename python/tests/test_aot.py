@@ -1,0 +1,44 @@
+"""AOT smoke: every artifact lowers to parseable HLO text with entry shapes."""
+
+import json
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    # Lowering all variants once per test session.
+    return list(aot.build_artifacts())
+
+
+def test_all_variants_lower(artifacts):
+    names = [n for n, _, _ in artifacts]
+    assert len(names) == len(set(names))
+    assert len(names) == len(aot.ENCODE_VARIANTS) + len(aot.DECODE_VARIANTS) + 1
+
+
+def test_hlo_text_looks_like_hlo(artifacts):
+    for name, text, _ in artifacts:
+        assert "HloModule" in text, name
+        assert "ENTRY" in text, name
+
+
+def test_manifest_entries_consistent(artifacts):
+    for name, _, entry in artifacts:
+        assert entry["kind"] in ("encode", "decode", "ctmc")
+        for dt, shape in entry["inputs"]:
+            assert dt in ("u32", "f64")
+            assert all(isinstance(d, int) for d in shape)
+        json.dumps(entry)  # serializable
+
+
+def test_encode_entry_shapes_in_text(artifacts):
+    # The HLO entry computation should mention the u32 parameter shapes.
+    for name, text, entry in artifacts:
+        if entry["kind"] != "encode":
+            continue
+        r, k, w = entry["r"], entry["k"], entry["w"]
+        assert f"u32[{r},{k}]" in text, name
+        assert f"u32[{k},{w}]" in text, name

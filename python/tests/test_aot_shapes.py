@@ -1,0 +1,70 @@
+"""Shape/semantics checks for the exact AOT variants the rust runtime
+loads: the encode graph must equal the oracle at every (k, r, w) shipped
+in the manifest, and panel-tiling (how rust feeds wide chunks through
+fixed-width artifacts) must be equivalent to one wide call."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.kernels.ref import xor_gemm_ref
+from compile.model import rlf_encode
+
+
+def rand(seed, r, k, w):
+    rng = np.random.default_rng(seed)
+    coeff = rng.integers(0, 2, size=(r, k), dtype=np.uint32)
+    blocks = rng.integers(0, 2**32, size=(k, w), dtype=np.uint32)
+    return coeff, blocks
+
+
+@pytest.mark.parametrize("k,r,w", aot.ENCODE_VARIANTS)
+def test_every_shipped_encode_variant_matches_oracle(k, r, w):
+    # Use a reduced word count for the very wide variants to keep the
+    # interpret-mode run fast; the artifact shape itself is exercised by
+    # the rust integration tests.
+    w_eff = min(w, 128)
+    coeff, blocks = rand(k * r, r, k, w_eff)
+    got = rlf_encode(jnp.asarray(coeff), jnp.asarray(blocks))
+    want = xor_gemm_ref(jnp.asarray(coeff), jnp.asarray(blocks))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_panel_tiling_equivalence():
+    # rust runtime splits a wide chunk into fixed-w panels and loops the
+    # artifact; XOR-GEMM must commute with column partitioning.
+    k, r, w, panel = 16, 24, 96, 32
+    coeff, blocks = rand(3, r, k, w)
+    whole = np.asarray(rlf_encode(jnp.asarray(coeff), jnp.asarray(blocks)))
+    parts = [
+        np.asarray(rlf_encode(jnp.asarray(coeff), jnp.asarray(blocks[:, i : i + panel])))
+        for i in range(0, w, panel)
+    ]
+    np.testing.assert_array_equal(whole, np.concatenate(parts, axis=1))
+
+
+def test_row_batching_equivalence():
+    # rust batches fragment indices into r-row calls with zero padding;
+    # zero coefficient rows must produce zero fragments and not disturb
+    # the real rows.
+    k, r, w = 16, 24, 64
+    coeff, blocks = rand(4, r, k, w)
+    coeff[r // 2 :, :] = 0  # padded tail
+    out = np.asarray(rlf_encode(jnp.asarray(coeff), jnp.asarray(blocks)))
+    assert not out[r // 2 :, :].any()
+    want = np.asarray(
+        xor_gemm_ref(jnp.asarray(coeff[: r // 2]), jnp.asarray(blocks))
+    )
+    np.testing.assert_array_equal(out[: r // 2], want)
+
+
+def test_manifest_tsv_format():
+    # The rust runtime parses name\tkind\tk\tr\tw\tfile.
+    rows = []
+    for name, _, entry in aot.build_artifacts():
+        if entry["kind"] == "encode":
+            rows.append((name, entry["k"], entry["r"], entry["w"]))
+    assert len(rows) == len(aot.ENCODE_VARIANTS)
+    names = [r[0] for r in rows]
+    assert all("\t" not in n for n in names)

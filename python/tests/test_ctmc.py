@@ -1,0 +1,78 @@
+"""CTMC absorbing-series graph vs dense numpy oracle."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.ctmc import _SCAN_STEPS, ctmc_absorb_series_with_final
+
+
+def random_stochastic(rng, s, absorbing):
+    m = rng.random((s, s))
+    m[absorbing, :] = 0.0
+    m[absorbing, absorbing] = 1.0
+    m /= m.sum(axis=1, keepdims=True)
+    return m
+
+
+def numpy_series(theta, init, idx, t):
+    v = init.copy()
+    out = np.zeros(t)
+    for i in range(t):
+        v = v @ theta
+        out[i] = v @ idx
+    return out, v
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), s=st.sampled_from([4, 16, 64]))
+def test_series_matches_numpy(seed, s):
+    rng = np.random.default_rng(seed)
+    absorbing = s - 1
+    theta = random_stochastic(rng, s, absorbing)
+    init = rng.random(s)
+    init /= init.sum()
+    idx = np.zeros(s)
+    idx[absorbing] = 1.0
+    want, want_final = numpy_series(theta, init, idx, _SCAN_STEPS)
+    got, got_final = ctmc_absorb_series_with_final(
+        jnp.asarray(theta), jnp.asarray(init), jnp.asarray(idx)
+    )
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-10, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(got_final), want_final, rtol=1e-10, atol=1e-12)
+
+
+def test_series_monotone_for_absorbing_chain():
+    # Probability mass in an absorbing state never decreases.
+    rng = np.random.default_rng(0)
+    s = 8
+    theta = random_stochastic(rng, s, s - 1)
+    init = np.zeros(s)
+    init[0] = 1.0
+    idx = np.zeros(s)
+    idx[-1] = 1.0
+    got, _ = ctmc_absorb_series_with_final(
+        jnp.asarray(theta), jnp.asarray(init), jnp.asarray(idx)
+    )
+    g = np.asarray(got)
+    assert (np.diff(g) >= -1e-15).all()
+    assert g[-1] <= 1.0 + 1e-12
+
+
+def test_chaining_windows_is_consistent():
+    # Running two chained windows == one longer numpy run.
+    rng = np.random.default_rng(3)
+    s = 6
+    theta = random_stochastic(rng, s, s - 1)
+    init = np.zeros(s)
+    init[0] = 1.0
+    idx = np.zeros(s)
+    idx[-1] = 1.0
+    _, f1 = ctmc_absorb_series_with_final(jnp.asarray(theta), jnp.asarray(init), jnp.asarray(idx))
+    s2, _ = ctmc_absorb_series_with_final(jnp.asarray(theta), f1, jnp.asarray(idx))
+    want, _ = numpy_series(theta, init, idx, 2 * _SCAN_STEPS)
+    np.testing.assert_allclose(np.asarray(s2), want[_SCAN_STEPS:], rtol=1e-9, atol=1e-12)

@@ -1,0 +1,82 @@
+"""L2 decode graph: Gauss-Jordan over GF(2) vs numpy oracle + identities."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import gf2_decode_ref, xor_gemm_ref
+from compile.model import rlf_decode
+
+
+def pack_bits(rows: np.ndarray) -> np.ndarray:
+    """uint32[k,k] 0/1 -> bit-packed uint32[k, ceil(k/32)]."""
+    k = rows.shape[1]
+    kw = (k + 31) // 32
+    out = np.zeros((rows.shape[0], kw), dtype=np.uint32)
+    for c in range(k):
+        out[:, c // 32] |= (rows[:, c].astype(np.uint32) & 1) << (c % 32)
+    return out
+
+
+def full_rank_coeff(rng, k):
+    """Random full-rank GF(2) k x k matrix (rejection sampling)."""
+    while True:
+        m = rng.integers(0, 2, size=(k, k), dtype=np.uint32)
+        _, ok = gf2_decode_ref(pack_bits(m), np.zeros((k, 1), np.uint32))
+        if ok:
+            return m
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.sampled_from([4, 8, 16, 32]), w=st.integers(1, 40))
+def test_decode_recovers_encode(seed, k, w):
+    rng = np.random.default_rng(seed)
+    blocks = rng.integers(0, 2**32, size=(k, w), dtype=np.uint32)
+    coeff = full_rank_coeff(rng, k)
+    frags = np.asarray(xor_gemm_ref(jnp.asarray(coeff), jnp.asarray(blocks)))
+    got, ok = rlf_decode(jnp.asarray(pack_bits(coeff)), jnp.asarray(frags))
+    assert int(ok) == 1
+    np.testing.assert_array_equal(np.asarray(got), blocks)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.sampled_from([8, 16]), w=st.integers(1, 16))
+def test_decode_matches_numpy_oracle(seed, k, w):
+    rng = np.random.default_rng(seed)
+    coeff = rng.integers(0, 2, size=(k, k), dtype=np.uint32)
+    payload = rng.integers(0, 2**32, size=(k, w), dtype=np.uint32)
+    cb = pack_bits(coeff)
+    want, want_ok = gf2_decode_ref(cb, payload)
+    got, got_ok = rlf_decode(jnp.asarray(cb), jnp.asarray(payload))
+    assert int(got_ok) == int(want_ok)
+    if want_ok:
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_decode_singular_flags_zero():
+    k = 8
+    coeff = np.zeros((k, k), np.uint32)  # rank 0
+    payload = np.ones((k, 4), np.uint32)
+    _, ok = rlf_decode(jnp.asarray(pack_bits(coeff)), jnp.asarray(payload))
+    assert int(ok) == 0
+
+
+def test_decode_duplicate_rows_singular():
+    rng = np.random.default_rng(0)
+    k = 16
+    coeff = full_rank_coeff(rng, k)
+    coeff[3] = coeff[7]  # duplicate row -> singular
+    payload = rng.integers(0, 2**32, size=(k, 8), dtype=np.uint32)
+    _, ok = rlf_decode(jnp.asarray(pack_bits(coeff)), jnp.asarray(payload))
+    assert int(ok) == 0
+
+
+def test_decode_identity_matrix_passthrough():
+    k = 32
+    rng = np.random.default_rng(1)
+    payload = rng.integers(0, 2**32, size=(k, 8), dtype=np.uint32)
+    cb = pack_bits(np.eye(k, dtype=np.uint32))
+    got, ok = rlf_decode(jnp.asarray(cb), jnp.asarray(payload))
+    assert int(ok) == 1
+    np.testing.assert_array_equal(np.asarray(got), payload)

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel vs pure-jnp oracle: hypothesis sweeps shapes/seeds."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import xor_gemm_ref
+from compile.kernels.xorgemm import xor_gemm
+
+
+def rand_case(seed: int, r: int, k: int, w: int):
+    rng = np.random.default_rng(seed)
+    coeff = rng.integers(0, 2, size=(r, k), dtype=np.uint32)
+    blocks = rng.integers(0, 2**32, size=(k, w), dtype=np.uint32)
+    return jnp.asarray(coeff), jnp.asarray(blocks)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    r=st.integers(1, 96),
+    k=st.integers(1, 48),
+    w=st.integers(1, 80),
+)
+def test_xor_gemm_matches_ref_random_shapes(seed, r, k, w):
+    coeff, blocks = rand_case(seed, r, k, w)
+    got = xor_gemm(coeff, blocks, block_r=16, block_k=16, block_w=32)
+    want = xor_gemm_ref(coeff, blocks)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("r,k,w", [(80, 32, 64), (40, 16, 128), (160, 64, 32), (1, 32, 256)])
+def test_xor_gemm_paper_configs(r, k, w):
+    coeff, blocks = rand_case(7, r, k, w)
+    got = xor_gemm(coeff, blocks)
+    want = xor_gemm_ref(coeff, blocks)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("br,bk,bw", [(8, 8, 8), (64, 32, 256), (16, 48, 64)])
+def test_xor_gemm_block_shapes_are_equivalent(br, bk, bw):
+    coeff, blocks = rand_case(13, 48, 24, 100)
+    want = xor_gemm_ref(coeff, blocks)
+    got = xor_gemm(coeff, blocks, block_r=br, block_k=bk, block_w=bw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_xor_gemm_zero_coeff_is_zero():
+    coeff = jnp.zeros((8, 8), jnp.uint32)
+    blocks = jnp.ones((8, 16), jnp.uint32) * jnp.uint32(0xDEADBEEF)
+    out = xor_gemm(coeff, blocks)
+    assert not np.asarray(out).any()
+
+
+def test_xor_gemm_identity_coeff_is_passthrough():
+    k = 16
+    coeff = jnp.eye(k, dtype=jnp.uint32)
+    _, blocks = rand_case(3, k, k, 32)
+    out = xor_gemm(coeff, blocks)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(blocks))
+
+
+def test_xor_gemm_linearity():
+    # (C1 ^ C2 rows disjoint) encode == encode(C1) ^ encode(C2)
+    c1, blocks = rand_case(5, 24, 16, 40)
+    c2, _ = rand_case(6, 24, 16, 40)
+    both = jnp.asarray(np.asarray(c1) ^ np.asarray(c2))
+    lhs = xor_gemm(both, blocks)
+    rhs = np.asarray(xor_gemm(c1, blocks)) ^ np.asarray(xor_gemm(c2, blocks))
+    np.testing.assert_array_equal(np.asarray(lhs), rhs)

@@ -1,0 +1,35 @@
+"""Static cost-model sanity for the L1 block-shape sweep."""
+
+from compile.roofline import analyze, sweep
+
+
+def test_default_shape_fits_vmem_with_double_buffering():
+    row = analyze(80, 32, 4096, 64, 32, 256)
+    assert row["vmem_ok"]
+    assert row["vmem"] == (64 * 32 + 32 * 256 + 64 * 256) * 4  # 112 KiB
+
+
+def test_bound_flips_with_tile_size():
+    # Tiny output tiles re-stream B constantly -> bandwidth-bound;
+    # the shipped 64x32x256 tile amortizes enough to cross the ridge.
+    tiny = analyze(80, 32, 4096, 8, 8, 128)
+    shipped = analyze(80, 32, 4096, 64, 32, 256)
+    assert tiny["bound"] == "bandwidth"
+    assert shipped["bound"] == "compute"
+    assert shipped["intensity"] > tiny["intensity"]
+
+
+def test_bigger_r_tiles_reduce_hbm_traffic():
+    # B-panel re-reads scale with r/bR: doubling the output-row tile
+    # halves the dominant traffic term.
+    small = analyze(128, 32, 4096, 16, 32, 256)
+    large = analyze(128, 32, 4096, 64, 32, 256)
+    assert large["hbm_bytes"] < small["hbm_bytes"]
+
+
+def test_sweep_contains_a_feasible_shape():
+    rows = sweep(80, 32, 4096)
+    assert any(r["vmem_ok"] for r in rows)
+    for r in rows:
+        assert r["steps"] >= 1
+        assert r["t_roofline_us"] > 0

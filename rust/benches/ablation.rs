@@ -1,0 +1,94 @@
+//! Ablations over DESIGN.md's called-out design choices:
+//!
+//! 1. heartbeat/suspicion period vs repair convergence and overhead;
+//! 2. chunk-cache TTL vs repair traffic (protocol-level, not sim-level);
+//! 3. QUERY fan-out vs latency/overhead;
+//! 4. MTTDL vs inner-code redundancy (the headline durability metric)
+//!    and vs the Byzantine-free ideal.
+//!
+//! Run: `cargo bench --bench ablation`
+
+use vault::analysis::{ctmc, mttdl};
+use vault::coordinator::{Cluster, ClusterConfig};
+use vault::proto::AppEvent;
+use vault::util::rng::Rng;
+use vault::util::stats::Samples;
+
+fn repair_convergence(heartbeat_ms: u64, fanout: usize, cache_ttl: u64, seed: u64) -> (f64, u64, u64) {
+    let mut cfg = ClusterConfig::small_test(64);
+    cfg.seed = seed;
+    cfg.vault.heartbeat_ms = heartbeat_ms;
+    cfg.vault.suspicion_ms = heartbeat_ms * 3;
+    cfg.vault.tick_ms = heartbeat_ms;
+    cfg.vault.fetch_fanout = fanout;
+    cfg.vault.cache_ttl_ms = cache_ttl;
+    let mut cluster = Cluster::start(cfg);
+    let mut rng = Rng::new(seed);
+    let mut data = vec![0u8; 64 << 10];
+    rng.fill_bytes(&mut data);
+    let id = cluster.store_blocking(0, &data, b"abl", 0).expect("store").value;
+    let base_msgs = cluster.net.stats.msgs;
+    let mut lat = Samples::new();
+    for round in 0..4 {
+        let chash = id.chunks[round % id.chunks.len()];
+        cluster.evict_one_member(&chash);
+        let start = cluster.net.now_ms();
+        'wait: while cluster.net.now_ms() < start + 20 * heartbeat_ms {
+            for (_, ev) in cluster.net.run_for(heartbeat_ms / 2) {
+                if let AppEvent::RepairJoined { chash: c, .. } = ev {
+                    if c == chash {
+                        lat.push((cluster.net.now_ms() - start) as f64);
+                        break 'wait;
+                    }
+                }
+            }
+        }
+    }
+    (lat.mean(), cluster.net.stats.msgs - base_msgs, cluster.net.total_repair_traffic())
+}
+
+fn main() {
+    println!("# Ablation 1: heartbeat period vs repair convergence (4 forced evictions)");
+    println!("{:>14} {:>14} {:>12} {:>14}", "heartbeat_ms", "repair_ms", "msgs", "repair_bytes");
+    for hb in [2_000u64, 5_000, 15_000, 30_000] {
+        let (lat, msgs, traffic) = repair_convergence(hb, 12, 0, 1);
+        println!("{hb:>14} {lat:>14.0} {msgs:>12} {traffic:>14}");
+    }
+
+    println!("\n# Ablation 2: chunk-cache TTL vs protocol repair traffic");
+    println!("{:>14} {:>14} {:>14}", "cache_ttl_ms", "repair_ms", "repair_bytes");
+    for ttl in [0u64, 60_000, 3_600_000] {
+        let (lat, _, traffic) = repair_convergence(5_000, 12, ttl, 2);
+        println!("{ttl:>14} {lat:>14.0} {traffic:>14}");
+    }
+
+    println!("\n# Ablation 3: QUERY fan-out vs latency and message cost");
+    println!("{:>10} {:>12} {:>12}", "fanout", "query_ms", "msgs");
+    for fanout in [9usize, 12, 16, 24] {
+        let mut cfg = ClusterConfig::small_test(64);
+        cfg.vault.fetch_fanout = fanout;
+        cfg.seed = 50 + fanout as u64;
+        let mut cluster = Cluster::start(cfg);
+        let mut rng = Rng::new(fanout as u64);
+        let mut data = vec![0u8; 128 << 10];
+        rng.fill_bytes(&mut data);
+        let id = cluster.store_blocking(0, &data, b"f", 0).expect("store").value;
+        let before = cluster.net.stats.msgs;
+        let q = cluster.query_blocking(3, &id).expect("query");
+        assert_eq!(q.value, data);
+        println!("{fanout:>10} {:>12} {:>12}", q.latency_ms, cluster.net.stats.msgs - before);
+    }
+
+    println!("\n# Ablation 4: MTTDL vs inner-code redundancy (chain steps; churn_q=0.02)");
+    println!("{:>12} {:>16} {:>16} {:>10}", "code (n,k)", "mttdl", "ideal (f=0)", "ratio");
+    for (n, k) in [(48usize, 32usize), (64, 32), (80, 32), (112, 32)] {
+        let cfg = ctmc::CtmcConfig { n, k, churn_q: 0.02, ..Default::default() };
+        match mttdl::mttdl_vs_ideal(&cfg) {
+            Some((real, ideal, ratio)) => println!(
+                "{:>12} {real:>16.3e} {ideal:>16.3e} {ratio:>10.3}",
+                format!("({n},{k})")
+            ),
+            None => println!("{:>12} {:>16}", format!("({n},{k})"), "inf"),
+        }
+    }
+}

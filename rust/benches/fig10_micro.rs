@@ -1,0 +1,101 @@
+//! Fig. 10: CPU micro-benchmarks — object encode/decode time across
+//! coding parameters (top), and single-fragment repair cost (bottom).
+//! Reported for both the native codec and the XLA artifact path (when
+//! `artifacts/` is built).
+//!
+//! Run: `cargo bench --bench fig10_micro [-- --size 16777216]`
+
+use vault::codec::outer::encode_object;
+use vault::codec::{InnerDecoder, InnerEncoder, OuterDecoder};
+use vault::runtime::{default_artifact_dir, Runtime};
+use vault::util::cli::Args;
+use vault::util::rng::Rng;
+use vault::util::Timer;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    // 16 MiB stands in for the paper's 1 GiB single-host object.
+    let size = args.get("size", 16usize << 20);
+    let mut rng = Rng::new(1);
+    let mut object = vec![0u8; size];
+    rng.fill_bytes(&mut object);
+
+    let rt = Runtime::artifacts_available(&default_artifact_dir())
+        .then(|| Runtime::load(&default_artifact_dir()).expect("artifacts"));
+
+    println!("# Fig 10 (top): encode/decode one {}-MiB object (ms CPU)", size >> 20);
+    println!(
+        "{:>14} {:>10} {:>10} {:>12} {:>12}",
+        "config", "encode", "decode", "encode-xla", "repair-frag"
+    );
+    for (k_inner, r_inner, n_outer, k_outer) in
+        [(16usize, 40usize, 10usize, 8usize), (32, 80, 10, 8), (64, 160, 10, 8), (32, 80, 14, 8)]
+    {
+        // Encode: outer + inner fragment generation for all chunks.
+        let t = Timer::start();
+        let (_, chunks) = encode_object(&object, b"bench", k_outer, n_outer);
+        let mut encoders = Vec::new();
+        let indices: Vec<u64> = (0..r_inner as u64).collect();
+        let mut all_frags = Vec::new();
+        for c in &chunks {
+            let enc = InnerEncoder::new(c.chash, &c.bytes, k_inner);
+            all_frags.push(enc.fragments(&indices));
+            encoders.push(enc);
+        }
+        let encode_ms = t.elapsed_ms();
+
+        // Decode: k_outer chunks from k_inner+eps fragments each.
+        let t = Timer::start();
+        let mut outer = OuterDecoder::new(k_outer);
+        for (ci, c) in chunks.iter().enumerate().take(k_outer + 1) {
+            let mut dec = InnerDecoder::new(c.chash, k_inner);
+            for f in &all_frags[ci] {
+                if dec.is_complete() {
+                    break;
+                }
+                dec.push(f);
+            }
+            outer.push(&dec.recover().unwrap());
+            if outer.is_complete() {
+                break;
+            }
+        }
+        assert_eq!(outer.recover().unwrap(), object);
+        let decode_ms = t.elapsed_ms();
+
+        // XLA artifact encode of one chunk's worth, scaled to the object.
+        let xla_ms = rt
+            .as_ref()
+            .and_then(|rt| {
+                if ![16, 32, 64].contains(&k_inner) {
+                    return None;
+                }
+                let c = &chunks[0];
+                let t = Timer::start();
+                rt.encode_chunk(&c.chash, &c.bytes, k_inner, &indices).ok()?;
+                Some(t.elapsed_ms() * n_outer as f64)
+            })
+            .map(|ms| format!("{ms:>12.0}"))
+            .unwrap_or_else(|| format!("{:>12}", "n/a"));
+
+        // Repair: reconstruct one fragment from k_inner fragments.
+        let t = Timer::start();
+        let c = &chunks[0];
+        let mut dec = InnerDecoder::new(c.chash, k_inner);
+        for f in &all_frags[0] {
+            if dec.is_complete() {
+                break;
+            }
+            dec.push(f);
+        }
+        let chunk = dec.recover().unwrap();
+        let _new_frag = InnerEncoder::new(c.chash, &chunk, k_inner).fragment(999_999);
+        let repair_ms = t.elapsed_ms();
+
+        println!(
+            "{:>14} {encode_ms:>10.0} {decode_ms:>10.0} {xla_ms} {repair_ms:>12.1}",
+            format!("({n_outer},{k_outer})x({k_inner},{r_inner})")
+        );
+    }
+    println!("# shape check: encode/decode stable across params; repair << decode");
+}

@@ -1,0 +1,74 @@
+//! Fig. 4: repair traffic (object-size units, first year) vs number of
+//! objects (left) and churn rate (right); VAULT with chunk-cache TTLs
+//! {0, 24, 48}h vs the Ceph-like replicated baseline.
+//!
+//! Run: `cargo bench --bench fig4_repair_traffic [-- --nodes 100000]`
+
+use vault::sim::{durability, replica};
+use vault::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let nodes = args.get("nodes", 20_000usize);
+    let seed = args.get("seed", 42u64);
+
+    println!("# Fig 4 (left): repair traffic vs number of objects (churn=2/yr, 1 year)");
+    println!("{:>8} {:>12} {:>12} {:>12} {:>12}", "objects", "vault_0h", "vault_24h", "vault_48h", "baseline");
+    for objects in [500usize, 1000, 2000, 4000] {
+        let mut row = Vec::new();
+        for cache in [0.0, 24.0, 48.0] {
+            let r = durability::run(&durability::SimConfig {
+                n_nodes: nodes,
+                n_objects: objects,
+                churn_per_year: 2.0,
+                cache_ttl_hours: cache,
+                duration_years: 1.0,
+                seed,
+                ..Default::default()
+            });
+            row.push(r.repair_traffic_objects);
+        }
+        let b = replica::run(&replica::ReplicaConfig {
+            n_nodes: nodes,
+            n_objects: objects,
+            churn_per_year: 2.0,
+            duration_years: 1.0,
+            seed,
+            ..Default::default()
+        });
+        println!(
+            "{objects:>8} {:>12.1} {:>12.1} {:>12.1} {:>12.1}",
+            row[0], row[1], row[2], b.repair_traffic_objects
+        );
+    }
+
+    println!("\n# Fig 4 (right): repair traffic vs churn rate (1000 objects, 1 year)");
+    println!("{:>10} {:>12} {:>12} {:>12} {:>12}", "churn/yr", "vault_0h", "vault_24h", "vault_48h", "baseline");
+    for churn in [0.5f64, 1.0, 2.0, 4.0, 8.0] {
+        let mut row = Vec::new();
+        for cache in [0.0, 24.0, 48.0] {
+            let r = durability::run(&durability::SimConfig {
+                n_nodes: nodes,
+                n_objects: 1000,
+                churn_per_year: churn,
+                cache_ttl_hours: cache,
+                duration_years: 1.0,
+                seed,
+                ..Default::default()
+            });
+            row.push(r.repair_traffic_objects);
+        }
+        let b = replica::run(&replica::ReplicaConfig {
+            n_nodes: nodes,
+            n_objects: 1000,
+            churn_per_year: churn,
+            duration_years: 1.0,
+            seed,
+            ..Default::default()
+        });
+        println!(
+            "{churn:>10.1} {:>12.1} {:>12.1} {:>12.1} {:>12.1}",
+            row[0], row[1], row[2], b.repair_traffic_objects
+        );
+    }
+}

@@ -1,0 +1,77 @@
+//! Fig. 6: percentage of lost objects under Byzantine participants (top)
+//! and targeted attacks (bottom); three VAULT configurations each vs the
+//! replicated baseline.
+//!
+//! Run: `cargo bench --bench fig6_fault_tolerance`
+
+use vault::sim::{attack, durability, replica};
+use vault::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let nodes = args.get("nodes", 10_000usize);
+    let objects = args.get("objects", 400usize);
+    let churn = args.get("churn", 6.0f64);
+
+    println!("# Fig 6 (top): lost objects vs byzantine fraction (1 year, churn {churn}/yr)");
+    println!(
+        "{:>8} {:>12} {:>12} {:>12} {:>12}",
+        "byz", "vault(32,48)", "vault(32,80)", "vault(32,112)", "baseline"
+    );
+    for byz in [0.0f64, 0.05, 0.1, 0.2, 0.3, 0.4, 0.5] {
+        let mut row = Vec::new();
+        for r_inner in [48usize, 80, 112] {
+            let rep = durability::run(&durability::SimConfig {
+                n_nodes: nodes,
+                n_objects: objects,
+                r_inner,
+                churn_per_year: churn,
+                byzantine_frac: byz,
+                duration_years: 1.0,
+                seed: 9,
+                ..Default::default()
+            });
+            row.push(rep.lost_object_frac * 100.0);
+        }
+        let b = replica::run(&replica::ReplicaConfig {
+            n_nodes: nodes,
+            n_objects: objects,
+            churn_per_year: churn,
+            byzantine_frac: byz,
+            duration_years: 1.0,
+            seed: 9,
+            ..Default::default()
+        });
+        println!(
+            "{byz:>8.2} {:>11.1}% {:>11.1}% {:>11.1}% {:>11.1}%",
+            row[0], row[1], row[2],
+            b.lost_object_frac * 100.0
+        );
+    }
+
+    println!("\n# Fig 6 (bottom): lost objects vs targeted-attack fraction");
+    println!(
+        "{:>8} {:>12} {:>12} {:>12} {:>12}",
+        "attacked", "vault(10,8)", "vault(12,8)", "vault(14,8)", "baseline"
+    );
+    for frac in [0.01f64, 0.02, 0.05, 0.1, 0.15, 0.2, 0.25, 0.3] {
+        let mut row = Vec::new();
+        for n_outer in [10usize, 12, 14] {
+            let loss = attack::vault_attack_loss(&attack::AttackConfig {
+                n_nodes: nodes,
+                n_objects: objects,
+                n_outer,
+                attacked_frac: frac,
+                trials: 8,
+                seed: 11,
+                ..Default::default()
+            });
+            row.push(loss * 100.0);
+        }
+        let b = attack::baseline_attack_loss(nodes, objects, 256, 3, frac, 11) * 100.0;
+        println!(
+            "{frac:>8.2} {:>11.1}% {:>11.1}% {:>11.1}% {b:>11.1}%",
+            row[0], row[1], row[2]
+        );
+    }
+}

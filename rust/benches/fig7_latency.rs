@@ -1,0 +1,137 @@
+//! Fig. 7: STORE / QUERY / repair latency in a world-wide (5-region)
+//! deployment, varying the outer code (top) and inner code (bottom),
+//! against the IPFS-like Kademlia baseline.
+//!
+//! Latencies are virtual-time over the measured inter-region RTT matrix
+//! (DESIGN.md §Substitutions). Run:
+//! `cargo bench --bench fig7_latency [-- --peers 400 --ops 3]`
+
+use vault::baseline::ipfs_like::{IpfsConfig, IpfsNet};
+use vault::coordinator::{Cluster, ClusterConfig};
+use vault::proto::{AppEvent, ClaimVerify, VaultConfig};
+use vault::util::cli::Args;
+use vault::util::rng::Rng;
+use vault::util::stats::Samples;
+
+struct Measured {
+    store: Samples,
+    query: Samples,
+    repair: Samples,
+}
+
+fn measure(peers: usize, ops: usize, size: usize, vault_cfg: VaultConfig, seed: u64) -> Measured {
+    let cfg = ClusterConfig {
+        peers,
+        seed,
+        vault: vault_cfg,
+        byzantine_frac: 0.0,
+        ..Default::default()
+    };
+    let mut cluster = Cluster::start(cfg);
+    let mut rng = Rng::new(seed);
+    let mut m = Measured { store: Samples::new(), query: Samples::new(), repair: Samples::new() };
+    for _ in 0..ops {
+        let mut data = vec![0u8; size];
+        rng.fill_bytes(&mut data);
+        let c1 = cluster.random_client();
+        let Ok(stored) = cluster.store_blocking(c1, &data, b"fig7", 0) else { continue };
+        m.store.push(stored.latency_ms as f64);
+        let c2 = cluster.random_client();
+        if let Ok(q) = cluster.query_blocking(c2, &stored.value) {
+            assert_eq!(q.value, data);
+            m.query.push(q.latency_ms as f64);
+        }
+        // Repair latency: evict one member, time until a RepairJoined
+        // event for that chunk arrives.
+        let chash = stored.value.chunks[0];
+        cluster.evict_one_member(&chash);
+        let start = cluster.net.now_ms();
+        let deadline = start + 240_000;
+        'repair: while cluster.net.now_ms() < deadline {
+            for (_, ev) in cluster.net.run_for(2_000) {
+                if let AppEvent::RepairJoined { chash: c, .. } = ev {
+                    if c == chash {
+                        m.repair.push((cluster.net.now_ms() - start) as f64);
+                        break 'repair;
+                    }
+                }
+            }
+        }
+    }
+    m
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let peers = args.get("peers", 300usize);
+    let ops = args.get("ops", 2usize);
+    let size = args.get("size", 1 << 22); // 4 MiB (1 GiB in the paper)
+
+    let base_cfg = |k_inner: usize, r_inner: usize, k_outer: usize, n_outer: usize| VaultConfig {
+        k_inner,
+        r_inner,
+        k_outer,
+        n_outer,
+        n_nodes: peers,
+        candidates: (3 * r_inner).min(peers),
+        fetch_fanout: k_inner + 8,
+        heartbeat_ms: 20_000,
+        suspicion_ms: 60_000,
+        tick_ms: 10_000,
+        claim_verify: ClaimVerify::Never, // harness knob; see DESIGN.md
+        ..Default::default()
+    };
+
+    println!("# Fig 7 (top): latency vs outer code (inner fixed (32,80)); ms virtual");
+    println!("{:>12} {:>10} {:>10} {:>10}", "outer", "store", "query", "repair");
+    for (n_outer, k_outer) in [(10usize, 8usize), (12, 8), (14, 8)] {
+        let m = measure(peers, ops, size, base_cfg(32, 80, k_outer, n_outer), 21);
+        println!(
+            "{:>12} {:>10.0} {:>10.0} {:>10.0}",
+            format!("({n_outer},{k_outer})"),
+            m.store.mean(),
+            m.query.mean(),
+            m.repair.mean()
+        );
+    }
+
+    println!("\n# Fig 7 (bottom): latency vs inner code (outer fixed (10,8)); ms virtual");
+    println!("{:>12} {:>10} {:>10} {:>10}", "inner", "store", "query", "repair");
+    for (k_inner, r_inner) in [(16usize, 40usize), (32, 80), (48, 120)] {
+        let m = measure(peers, ops, size, base_cfg(k_inner, r_inner, 8, 10), 22);
+        println!(
+            "{:>12} {:>10.0} {:>10.0} {:>10.0}",
+            format!("({k_inner},{r_inner})"),
+            m.store.mean(),
+            m.query.mean(),
+            m.repair.mean()
+        );
+    }
+
+    println!("\n# IPFS-like baseline (replication 3, 256 records/object)");
+    let mut net = IpfsNet::new(IpfsConfig { n_peers: peers, seed: 23, ..Default::default() });
+    let mut store = Samples::new();
+    let mut query = Samples::new();
+    let mut repair = Samples::new();
+    for i in 0..ops as u64 {
+        let (handle, op) = net.store((i % 5) as u8, size, i);
+        if let Some(lat) = net.run_until_op(op) {
+            store.push(lat as f64);
+        }
+        let qop = net.query(((i + 2) % 5) as u8, &handle);
+        if let Some(lat) = net.run_until_op(qop) {
+            query.push(lat as f64);
+        }
+        let rop = net.repair_record(&handle.keys[0], handle.record_size);
+        if let Some(lat) = net.run_until_op(rop) {
+            repair.push(lat as f64);
+        }
+    }
+    println!(
+        "{:>12} {:>10.0} {:>10.0} {:>10.0}",
+        "baseline",
+        store.mean(),
+        query.mean(),
+        repair.mean()
+    );
+}

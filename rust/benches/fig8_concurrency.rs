@@ -1,0 +1,133 @@
+//! Fig. 8: latency under concurrent STORE+QUERY pairs and concurrent
+//! repairs, plus the derived per-day capacity claims (§6.2: "more than
+//! 400K STORE and 720K QUERY per day ... over 13M daily object repairs").
+//!
+//! Run: `cargo bench --bench fig8_concurrency [-- --peers 200]`
+
+use vault::coordinator::{Cluster, ClusterConfig};
+use vault::proto::AppEvent;
+use vault::util::cli::Args;
+use vault::util::rng::Rng;
+use vault::util::stats::Samples;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let peers = args.get("peers", 200usize);
+    let size = args.get("size", 1 << 18); // 256 KiB
+
+    println!("# Fig 8: mean latency vs concurrent STORE/QUERY pairs (ms virtual)");
+    println!("{:>12} {:>10} {:>10}", "concurrent", "store", "query");
+    let mut per_day = (0.0, 0.0);
+    for conc in [1usize, 5, 20, 50] {
+        let mut cfg = ClusterConfig::small_test(peers);
+        cfg.vault.op_deadline_ms = 300_000;
+        cfg.seed = conc as u64;
+        let mut cluster = Cluster::start(cfg);
+        let mut rng = Rng::new(conc as u64);
+        let mut store_lat = Samples::new();
+        let mut query_lat = Samples::new();
+        // Launch `conc` stores concurrently.
+        let mut objects = Vec::new();
+        let mut ops = Vec::new();
+        for i in 0..conc {
+            let mut data = vec![0u8; size];
+            rng.fill_bytes(&mut data);
+            let client = (i * 13) % peers;
+            ops.push(cluster.net.store(client, &data, format!("c{i}").as_bytes(), 0));
+            objects.push(data);
+        }
+        let mut ids = vec![None; conc];
+        let deadline = cluster.net.now_ms() + 400_000;
+        while ids.iter().any(|x| x.is_none()) && cluster.net.now_ms() < deadline {
+            for (_, ev) in cluster.net.run_for(500) {
+                if let AppEvent::StoreDone { op, id, latency_ms } = ev {
+                    if let Some(p) = ops.iter().position(|&o| o == op) {
+                        ids[p] = Some(id);
+                        store_lat.push(latency_ms as f64);
+                    }
+                }
+            }
+        }
+        // Then `conc` queries concurrently.
+        let qops: Vec<u64> = ids
+            .iter()
+            .enumerate()
+            .filter_map(|(i, id)| {
+                id.as_ref().map(|id| cluster.net.query((i * 17 + 1) % peers, id))
+            })
+            .collect();
+        let mut done = 0;
+        let deadline = cluster.net.now_ms() + 400_000;
+        while done < qops.len() && cluster.net.now_ms() < deadline {
+            for (_, ev) in cluster.net.run_for(500) {
+                if let AppEvent::QueryDone { op, latency_ms, .. } = ev {
+                    if qops.contains(&op) {
+                        query_lat.push(latency_ms as f64);
+                        done += 1;
+                    }
+                }
+            }
+        }
+        println!("{conc:>12} {:>10.0} {:>10.0}", store_lat.mean(), query_lat.mean());
+        if conc == 50 {
+            // Derived capacity: conc ops per mean-latency window.
+            let day_ms = 86_400_000.0;
+            per_day = (
+                conc as f64 * day_ms / store_lat.mean().max(1.0),
+                conc as f64 * day_ms / query_lat.mean().max(1.0),
+            );
+        }
+    }
+    println!(
+        "# derived capacity at 50 concurrent: {:.0} STOREs/day, {:.0} QUERYs/day",
+        per_day.0, per_day.1
+    );
+
+    println!("\n# Fig 8 (repairs): mean repair latency vs concurrent repairs");
+    println!("{:>12} {:>10}", "concurrent", "repair_ms");
+    for conc in [10usize, 50, 150] {
+        let mut cfg = ClusterConfig::small_test(peers);
+        cfg.vault.heartbeat_ms = 5_000;
+        cfg.vault.suspicion_ms = 15_000;
+        cfg.vault.tick_ms = 5_000;
+        cfg.seed = 100 + conc as u64;
+        let mut cluster = Cluster::start(cfg);
+        let mut rng = Rng::new(conc as u64);
+        // Store ceil(conc / n_outer) objects to get enough chunks.
+        let n_outer = cluster.config().vault.n_outer;
+        let objs = conc.div_ceil(n_outer);
+        let mut chashes = Vec::new();
+        for i in 0..objs {
+            let mut data = vec![0u8; 1 << 16];
+            rng.fill_bytes(&mut data);
+            if let Ok(res) = cluster.store_blocking((i * 3) % peers, &data, b"r", 0) {
+                chashes.extend(res.value.chunks);
+            }
+        }
+        chashes.truncate(conc);
+        let start = cluster.net.now_ms();
+        for c in &chashes {
+            cluster.evict_one_member(c);
+        }
+        let mut lat = Samples::new();
+        let deadline = start + 900_000;
+        let mut seen = std::collections::HashSet::new();
+        while seen.len() < chashes.len() && cluster.net.now_ms() < deadline {
+            for (_, ev) in cluster.net.run_for(2_000) {
+                if let AppEvent::RepairJoined { chash, .. } = ev {
+                    if chashes.contains(&chash) && seen.insert(chash) {
+                        lat.push((cluster.net.now_ms() - start) as f64);
+                    }
+                }
+            }
+        }
+        println!("{conc:>12} {:>10.0}   (completed {}/{})", lat.mean(), seen.len(), chashes.len());
+        if conc == 150 {
+            let day_ms = 86_400_000.0;
+            println!(
+                "# derived repair capacity: {:.0} repairs/day",
+                conc as f64 * day_ms / lat.mean().max(1.0)
+            );
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! Fig. 9: STORE/QUERY/repair latency with increasing system size —
+//! near-constant latency is the expected shape.
+//!
+//! Run: `cargo bench --bench fig9_scalability [-- --sweep 100,250,500,1000]`
+
+use vault::coordinator::{Cluster, ClusterConfig};
+use vault::proto::AppEvent;
+use vault::util::cli::Args;
+use vault::util::rng::Rng;
+use vault::util::stats::Samples;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let sweep = args.list("sweep", &[100usize, 250, 500, 800]);
+    let ops = args.get("ops", 3usize);
+    let size = args.get("size", 1 << 18);
+
+    println!("# Fig 9: latency vs number of peers (ms virtual)");
+    println!("{:>8} {:>10} {:>10} {:>10}", "peers", "store", "query", "repair");
+    for &peers in &sweep {
+        let mut cfg = ClusterConfig::small_test(peers);
+        cfg.seed = peers as u64;
+        cfg.vault.heartbeat_ms = 5_000;
+        cfg.vault.suspicion_ms = 15_000;
+        cfg.vault.tick_ms = 5_000;
+        let mut cluster = Cluster::start(cfg);
+        let mut rng = Rng::new(peers as u64);
+        let (mut s, mut q, mut r) = (Samples::new(), Samples::new(), Samples::new());
+        for _ in 0..ops {
+            let mut data = vec![0u8; size];
+            rng.fill_bytes(&mut data);
+            let c = cluster.random_client();
+            let Ok(stored) = cluster.store_blocking(c, &data, b"f9", 0) else { continue };
+            s.push(stored.latency_ms as f64);
+            let c = cluster.random_client();
+            if let Ok(got) = cluster.query_blocking(c, &stored.value) {
+                assert_eq!(got.value, data);
+                q.push(got.latency_ms as f64);
+            }
+            let chash = stored.value.chunks[0];
+            cluster.evict_one_member(&chash);
+            let start = cluster.net.now_ms();
+            'rep: while cluster.net.now_ms() < start + 300_000 {
+                for (_, ev) in cluster.net.run_for(2_000) {
+                    if let AppEvent::RepairJoined { chash: c2, .. } = ev {
+                        if c2 == chash {
+                            r.push((cluster.net.now_ms() - start) as f64);
+                            break 'rep;
+                        }
+                    }
+                }
+            }
+        }
+        println!("{peers:>8} {:>10.0} {:>10.0} {:>10.0}", s.mean(), q.mean(), r.mean());
+    }
+}

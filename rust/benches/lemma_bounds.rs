@@ -1,0 +1,75 @@
+//! Appendix A reproductions: Lemma 4.1 CTMC absorbing series (native +
+//! XLA artifact), Eq. (3)/(4) initial-state validity, and the Lemma 4.2
+//! targeted-attack bound.
+//!
+//! Run: `cargo bench --bench lemma_bounds`
+
+use vault::analysis::{bounds, ctmc};
+use vault::runtime::{default_artifact_dir, Runtime};
+use vault::util::Timer;
+
+fn main() {
+    println!("# Lemma 4.1: group-loss probability series (I*Theta^T)_absorb");
+    println!("{:>14} {:>12} {:>12} {:>12} {:>12}", "config", "T=24", "T=168", "T=512", "object(K+R)");
+    for (n, k, q) in [(80usize, 32usize, 0.002f64), (80, 32, 0.01), (48, 32, 0.002), (160, 64, 0.01)] {
+        let chain = ctmc::build_chain(&ctmc::CtmcConfig { n, k, churn_q: q, ..Default::default() });
+        let s = chain.absorb_series(512);
+        println!(
+            "{:>14} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e}",
+            format!("({n},{k})q={q}"),
+            s[23],
+            s[167],
+            s[511],
+            chain.object_loss_bound(512, 10)
+        );
+    }
+
+    // Native vs artifact timing + agreement.
+    if Runtime::artifacts_available(&default_artifact_dir()) {
+        let rt = Runtime::load(&default_artifact_dir()).expect("artifacts");
+        let chain = ctmc::build_chain(&ctmc::CtmcConfig {
+            n: 60,
+            k: 32,
+            churn_q: 0.01,
+            ..Default::default()
+        });
+        let t = Timer::start();
+        let native = chain.absorb_series(512);
+        let native_ms = t.elapsed_ms();
+        let (theta, init, absorb) = chain.padded(64);
+        let t = Timer::start();
+        let art = rt.ctmc_series(&theta, &init, absorb, 512).expect("artifact");
+        let art_ms = t.elapsed_ms();
+        let max_err = native
+            .iter()
+            .zip(&art)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        println!("# ctmc artifact vs native: max |err| = {max_err:.2e} (native {native_ms:.1} ms, artifact {art_ms:.1} ms)");
+    } else {
+        println!("# (ctmc artifact not built — run `make artifacts`)");
+    }
+
+    println!("\n# Eq. (3)/(4): initial-state invalid probability, F = N/3");
+    println!("{:>10} {:>6} {:>14} {:>14}", "n", "k", "exact", "hoeffding");
+    for (n, k) in [(80u64, 32u64), (80, 40), (48, 32), (160, 64), (40, 32)] {
+        println!(
+            "{n:>10} {k:>6} {:>14.3e} {:>14.3e}",
+            bounds::initial_invalid_prob(100_000, 33_333, n, k),
+            bounds::initial_invalid_hoeffding(n, k)
+        );
+    }
+
+    println!("\n# Lemma 4.2: targeted-attack success bound (Omega objects, K=8, R=2)");
+    println!("{:>10} {:>10} {:>8} {:>14}", "objects", "phi", "mu", "bound");
+    for omega in [1_000u64, 10_000, 100_000] {
+        for phi in [100u64, 1_000, 10_000] {
+            for mu in [1u64, 8] {
+                println!(
+                    "{omega:>10} {phi:>10} {mu:>8} {:>14.3e}",
+                    bounds::targeted_attack_bound(omega, 8, 2, phi, mu)
+                );
+            }
+        }
+    }
+}

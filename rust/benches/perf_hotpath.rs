@@ -1,0 +1,134 @@
+//! §Perf instrument: micro-benchmarks of every hot path the protocol
+//! touches. Feeds EXPERIMENTS.md §Perf before/after entries.
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use vault::codec::rateless::{coeff_row, InnerDecoder, InnerEncoder};
+use vault::codec::xor::xor_into;
+use vault::codec::{gf256, outer};
+use vault::crypto::ed25519::SigningKey;
+use vault::crypto::{vrf, Hash256};
+use vault::proto::selection;
+use vault::util::rng::Rng;
+use vault::util::Timer;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, bytes_per_iter: usize, mut f: F) {
+    // Warmup.
+    for _ in 0..iters.div_ceil(10).min(3) {
+        f();
+    }
+    let t = Timer::start();
+    for _ in 0..iters {
+        f();
+    }
+    let total_s = t.elapsed_s();
+    let per_iter = total_s / iters as f64;
+    if bytes_per_iter > 0 {
+        let mbps = bytes_per_iter as f64 * iters as f64 / total_s / 1e6;
+        println!("{name:<38} {:>10.3} ms/iter {:>10.0} MB/s", per_iter * 1e3, mbps);
+    } else {
+        println!("{name:<38} {:>10.3} ms/iter", per_iter * 1e3);
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(0xBE);
+
+    // L3 byte-level hot loops.
+    let mut a = vec![0u8; 1 << 20];
+    let mut b = vec![0u8; 1 << 20];
+    rng.fill_bytes(&mut a);
+    rng.fill_bytes(&mut b);
+    bench("xor_into 1MiB", 200, 1 << 20, || xor_into(&mut a, &b));
+    bench("gf256::addmul 1MiB", 50, 1 << 20, || gf256::addmul_slice(&mut a, &b, 0xA7));
+
+    // Fountain code.
+    let chunk = {
+        let mut c = vec![0u8; 512 << 10]; // one paper chunk (4MiB/8)
+        rng.fill_bytes(&mut c);
+        c
+    };
+    let chash = Hash256::of(&chunk);
+    let enc = InnerEncoder::new(chash, &chunk, 32);
+    bench("inner fragment encode (512KiB/32)", 100, chunk.len() / 32, || {
+        let _ = enc.fragment(12345);
+    });
+    bench("inner full encode R=80", 5, chunk.len() * 80 / 32, || {
+        let _ = enc.fragments(&(0..80u64).collect::<Vec<_>>());
+    });
+    let frags: Vec<_> = (0..40u64).map(|i| enc.fragment(i)).collect();
+    bench("inner decode (k=32)", 5, chunk.len(), || {
+        let mut dec = InnerDecoder::new(chash, 32);
+        for f in &frags {
+            if dec.is_complete() {
+                break;
+            }
+            dec.push(f);
+        }
+        assert!(dec.is_complete());
+    });
+    bench("coeff_row derivation (k=32)", 2000, 0, || {
+        let _ = coeff_row(&chash, rng.next_u64(), 32);
+    });
+
+    // Outer code.
+    let object = {
+        let mut o = vec![0u8; 4 << 20];
+        rng.fill_bytes(&mut o);
+        o
+    };
+    bench("outer encode 4MiB (10,8)", 5, object.len(), || {
+        let _ = outer::encode_object(&object, b"s", 8, 10);
+    });
+
+    // Crypto. "before" = generic double-and-add base multiplication;
+    // "after" = the Point::mul_base fixed-base table (see the §Perf log).
+    use vault::crypto::bigint::U256;
+    use vault::crypto::point::Point;
+    let k_scalar = U256::from_le_bytes(&{
+        let mut b = [0u8; 32];
+        rng.fill_bytes(&mut b);
+        b[31] &= 0x0f;
+        b
+    });
+    bench("base mult, double-and-add (before)", 50, 0, || {
+        let _ = Point::base().mul_scalar(&k_scalar);
+    });
+    bench("base mult, fixed-base table (after)", 50, 0, || {
+        let _ = Point::mul_base(&k_scalar);
+    });
+    let sk = SigningKey::from_seed(&[7; 32]);
+    bench("ed25519 sign", 50, 0, || {
+        let _ = sk.sign(b"persistence claim");
+    });
+    let sig = sk.sign(b"persistence claim");
+    bench("ed25519 verify", 50, 0, || {
+        assert!(vault::crypto::ed25519::verify(&sk.public, b"persistence claim", &sig));
+    });
+    bench("vrf prove", 20, 0, || {
+        let _ = vrf::prove(&sk, b"chunk-selection-alpha");
+    });
+    let (_, proof) = vrf::prove(&sk, b"chunk-selection-alpha");
+    bench("vrf verify", 20, 0, || {
+        assert!(vrf::verify(&sk.public, b"chunk-selection-alpha", &proof).is_some());
+    });
+    bench("selection prove (eligible path)", 20, 0, || {
+        let _ = selection::prove_selection(&sk, &chash, 1, 80, 100);
+    });
+
+    // End-to-end simnet event throughput.
+    use vault::coordinator::{Cluster, ClusterConfig};
+    let t = Timer::start();
+    let mut cluster = Cluster::start(ClusterConfig::small_test(64));
+    let data = vec![9u8; 64 << 10];
+    let id = cluster.store_blocking(0, &data, b"p", 0).unwrap().value;
+    let _ = cluster.query_blocking(1, &id).unwrap();
+    let msgs = cluster.net.stats.msgs;
+    println!(
+        "{:<38} {:>10.3} s wall ({} msgs, {:.0} msg/s)",
+        "simnet store+query (64 peers)",
+        t.elapsed_s(),
+        msgs,
+        msgs as f64 / t.elapsed_s()
+    );
+}

@@ -1,0 +1,181 @@
+//! Closed-form durability bounds (Appendix A).
+//!
+//! All heavy combinatorics run in log space: the Lemma 4.2 exponent
+//! `C(Φ·μ, R+1)` and the chunk-count products overflow f64 instantly
+//! otherwise.
+
+/// ln(n!) via Stirling's series for large n, exact summation below 32.
+pub fn ln_factorial(n: u64) -> f64 {
+    if n < 32 {
+        let mut acc = 0.0;
+        for i in 2..=n {
+            acc += (i as f64).ln();
+        }
+        return acc;
+    }
+    let n = n as f64;
+    // Stirling with 1/(12n) and 1/(360n^3) corrections.
+    n * n.ln() - n + 0.5 * (2.0 * std::f64::consts::PI * n).ln() + 1.0 / (12.0 * n)
+        - 1.0 / (360.0 * n * n * n)
+}
+
+/// ln C(n, k); `-inf` when k > n.
+pub fn ln_choose(n: u64, k: u64) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    ln_factorial(n) - ln_factorial(k) - ln_factorial(n - k)
+}
+
+/// Hypergeometric PMF: P(X = b) drawing n from N with F marked
+/// (Appendix A Eq. 6).
+pub fn hypergeom_pmf(big_n: u64, f: u64, n: u64, b: u64) -> f64 {
+    if b > f || n < b || (n - b) > (big_n - f) {
+        return 0.0;
+    }
+    (ln_choose(f, b) + ln_choose(big_n - f, n - b) - ln_choose(big_n, n)).exp()
+}
+
+/// Eq. (3): P(b > n − k) — the probability a freshly sampled group of n
+/// (from N nodes, F Byzantine) starts with too few honest members.
+pub fn initial_invalid_prob(big_n: u64, f: u64, n: u64, k: u64) -> f64 {
+    let max_b = n - k; // largest tolerable Byzantine count
+    let mut ok = 0.0;
+    for b in 0..=max_b {
+        ok += hypergeom_pmf(big_n, f, n, b);
+    }
+    (1.0 - ok).max(0.0)
+}
+
+/// Eq. (4): Hoeffding upper bound on the same tail with F = N/3:
+/// `exp(−2 (2n/3 − k)² / n)`.
+pub fn initial_invalid_hoeffding(n: u64, k: u64) -> f64 {
+    let n_f = n as f64;
+    let margin = 2.0 * n_f / 3.0 - k as f64;
+    if margin <= 0.0 {
+        return 1.0;
+    }
+    (-2.0 * margin * margin / n_f).exp()
+}
+
+/// Lemma 4.2 / Eq. (2): upper bound on the probability a targeted
+/// adversary destroys at least one data object.
+///
+/// * `omega` — total data objects Ω;
+/// * `kk`, `r` — outer code (K chunks needed, R redundancy chunks);
+/// * `phi` — groups the attacker can force into absorption (Φ);
+/// * `mu` — max fragments (group memberships) per physical node.
+///
+/// The success probability of hitting R+1 chunks of one object is a
+/// birthday-attack product; the number of "tries" is `C(Φ·μ, R+1)`,
+/// astronomically large, so we combine them as
+/// `1 − exp(C · ln(1 − p)) ≈ −expm1(exp(ln C + ln(1−p)·…))` in logs.
+pub fn targeted_attack_bound(omega: u64, kk: u64, r: u64, phi: u64, mu: u64) -> f64 {
+    let total_chunks = omega * (kk + r);
+    if phi == 0 || r + 1 > phi * mu {
+        return 0.0;
+    }
+    // ln p = Σ_{i=1..R} ln((K+R−i)/(Ω(K+R)−i))
+    let mut ln_p = 0.0f64;
+    for i in 1..=r {
+        let num = (kk + r - i) as f64;
+        let den = (total_chunks - i) as f64;
+        if num <= 0.0 || den <= 0.0 {
+            return 0.0;
+        }
+        ln_p += (num / den).ln();
+    }
+    let ln_trials = ln_choose(phi * mu, r + 1);
+    // 1 − (1 − p)^C, with ln(1−p) ≈ −p for tiny p:
+    // exponent = C·ln(1−p) ≈ −exp(ln_trials + ln_p).
+    let ln_cp = ln_trials + ln_p;
+    if ln_cp > 700.0 {
+        return 1.0; // overwhelming
+    }
+    let cp = ln_cp.exp();
+    -(-cp).exp_m1()
+}
+
+/// Convenience: the ε = 2⁻¹²⁸ "negligible" threshold the paper uses.
+pub const NEGLIGIBLE: f64 = 2.9387358770557188e-39; // 2^-128
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_factorial_matches_exact() {
+        // 20! = 2432902008176640000
+        let exact = 2432902008176640000f64.ln();
+        assert!((ln_factorial(20) - exact).abs() < 1e-9);
+        // Stirling region consistency: ln(100!) via sum vs formula.
+        let sum: f64 = (2..=100u64).map(|i| (i as f64).ln()).sum();
+        assert!((ln_factorial(100) - sum).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ln_choose_small_cases() {
+        assert!((ln_choose(5, 2) - 10f64.ln()).abs() < 1e-9);
+        assert!((ln_choose(10, 0)).abs() < 1e-12);
+        assert_eq!(ln_choose(3, 5), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn hypergeom_sums_to_one() {
+        let (big_n, f, n) = (1000, 333, 80);
+        let total: f64 = (0..=n).map(|b| hypergeom_pmf(big_n, f, n, b)).sum();
+        assert!((total - 1.0).abs() < 1e-9, "total {total}");
+    }
+
+    #[test]
+    fn initial_validity_paper_params() {
+        // N=100K, F=N/3, group n=80, k=32: invalid probability must be
+        // tiny, and the Hoeffding bound must dominate the exact tail.
+        let exact = initial_invalid_prob(100_000, 33_333, 80, 32);
+        let hoeff = initial_invalid_hoeffding(80, 32);
+        assert!(exact < 1e-3, "exact {exact}");
+        assert!(hoeff >= exact * 0.9, "hoeffding {hoeff} must bound exact {exact}");
+    }
+
+    #[test]
+    fn initial_validity_monotone_in_k() {
+        // Demanding more honest members can only increase failure prob.
+        let mut prev = 0.0;
+        for k in [16u64, 24, 32, 40, 48] {
+            let p = initial_invalid_prob(100_000, 33_333, 80, k);
+            assert!(p >= prev - 1e-15);
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn targeted_bound_zero_attack() {
+        assert_eq!(targeted_attack_bound(1000, 8, 2, 0, 1), 0.0);
+    }
+
+    #[test]
+    fn targeted_bound_grows_with_phi() {
+        let mut prev = -1.0;
+        for phi in [10u64, 100, 1000, 5000] {
+            let b = targeted_attack_bound(10_000, 8, 2, phi, 4);
+            assert!(b >= prev, "phi {phi}: {b} < {prev}");
+            assert!((0.0..=1.0).contains(&b));
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn targeted_bound_shrinks_with_more_objects() {
+        // More objects ⇒ harder to hit R+1 chunks of the same one.
+        let small = targeted_attack_bound(100, 8, 2, 50, 1);
+        let large = targeted_attack_bound(100_000, 8, 2, 50, 1);
+        assert!(large < small, "{large} !< {small}");
+    }
+
+    #[test]
+    fn targeted_bound_shrinks_with_redundancy() {
+        let low_r = targeted_attack_bound(10_000, 8, 2, 500, 2);
+        let high_r = targeted_attack_bound(10_000, 8, 6, 500, 2);
+        assert!(high_r < low_r, "{high_r} !< {low_r}");
+    }
+}

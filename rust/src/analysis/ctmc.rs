@@ -1,0 +1,337 @@
+//! The Appendix-A CTMC durability model (Lemmas A.1/A.2 = Lemma 4.1).
+//!
+//! One chunk group is a Markov chain over the number of Byzantine
+//! members `i ∈ [0, n−k]` plus an absorbing "lost" state. Per step:
+//!
+//! 1. every member independently churns out with probability `q`
+//!    (the discretized Poisson churn of Eq. 7);
+//! 2. additionally `Υ` members are evicted uniformly at random
+//!    (the paper's eviction parameter);
+//! 3. if fewer than `k` honest members survive, the group is absorbed;
+//! 4. otherwise repair refills the group to `n`, each replacement
+//!    Byzantine with probability `f` (the hypergeometric refill of
+//!    Eq. 10, in its N→∞ binomial form).
+//!
+//! The paper's printed Eq. (8)–(11) contain several typos (`e^{-c}`
+//! instead of `e^{-λ}`, index mismatches); we implement the model the
+//! equations describe rather than the typos — see DESIGN.md. The
+//! initial distribution is exactly the hypergeometric of Eq. (6).
+//!
+//! The `(I·Θ^T)` series can be evaluated natively ([`absorb_series`]) or
+//! through the AOT `ctmc_absorb` artifact (`runtime::Runtime::ctmc_series`)
+//! — the integration tests pin them against each other.
+
+use super::bounds::{hypergeom_pmf, ln_choose};
+
+#[derive(Clone, Debug)]
+pub struct CtmcConfig {
+    /// Total nodes and Byzantine nodes in the network.
+    pub big_n: u64,
+    pub byzantine: u64,
+    /// Group size n and honest threshold k.
+    pub n: usize,
+    pub k: usize,
+    /// Per-member churn probability per step.
+    pub churn_q: f64,
+    /// Members force-evicted per step (Υ).
+    pub evict: usize,
+}
+
+impl Default for CtmcConfig {
+    fn default() -> Self {
+        CtmcConfig {
+            big_n: 100_000,
+            byzantine: 33_333,
+            n: crate::params::R_INNER,
+            k: crate::params::K_INNER,
+            churn_q: 0.01,
+            evict: 0,
+        }
+    }
+}
+
+/// The chain: `states = n−k+2` (byzantine counts 0..=n−k, then lost).
+pub struct Chain {
+    pub states: usize,
+    /// Row-major stochastic matrix, `states × states`.
+    pub theta: Vec<f64>,
+    /// Initial distribution (hypergeometric over Byzantine counts).
+    pub init: Vec<f64>,
+    pub absorb: usize,
+}
+
+/// ln P(Binomial(n, p) = x).
+fn ln_binom_pmf(n: usize, p: f64, x: usize) -> f64 {
+    if x > n {
+        return f64::NEG_INFINITY;
+    }
+    if p <= 0.0 {
+        return if x == 0 { 0.0 } else { f64::NEG_INFINITY };
+    }
+    if p >= 1.0 {
+        return if x == n { 0.0 } else { f64::NEG_INFINITY };
+    }
+    ln_choose(n as u64, x as u64) + (x as f64) * p.ln() + ((n - x) as f64) * (1.0 - p).ln()
+}
+
+fn binom_pmf(n: usize, p: f64, x: usize) -> f64 {
+    ln_binom_pmf(n, p, x).exp()
+}
+
+pub fn build_chain(cfg: &CtmcConfig) -> Chain {
+    let max_b = cfg.n - cfg.k; // tolerable Byzantine members
+    let states = max_b + 2; // + absorbing
+    let absorb = states - 1;
+    let f = cfg.byzantine as f64 / cfg.big_n as f64;
+
+    let mut theta = vec![0.0; states * states];
+    for i in 0..=max_b {
+        let h = cfg.n - i; // honest members in state i
+        let row = &mut theta[i * states..(i + 1) * states];
+        // Convolve: honest churn c_h ~ Bin(h, q), byz churn c_b ~ Bin(i, q),
+        // then Υ uniform evictions over survivors, then refill with
+        // Bernoulli(f) replacements.
+        for c_h in 0..=h {
+            let p_ch = binom_pmf(h, cfg.churn_q, c_h);
+            if p_ch < 1e-300 {
+                continue;
+            }
+            for c_b in 0..=i {
+                let p_cb = binom_pmf(i, cfg.churn_q, c_b);
+                let p_churn = p_ch * p_cb;
+                if p_churn < 1e-300 {
+                    continue;
+                }
+                let h_left = h - c_h;
+                let b_left = i - c_b;
+                let survivors = h_left + b_left;
+                let evict = cfg.evict.min(survivors);
+                // Evicted split: v honest evicted ~ hypergeometric.
+                for v in 0..=evict.min(h_left) {
+                    let b_ev = evict - v;
+                    if b_ev > b_left {
+                        continue;
+                    }
+                    let p_ev = hypergeom_pmf(
+                        survivors as u64,
+                        h_left as u64,
+                        evict as u64,
+                        v as u64,
+                    );
+                    if p_ev < 1e-300 {
+                        continue;
+                    }
+                    let h_after = h_left - v;
+                    let b_after = b_left - b_ev;
+                    if h_after < cfg.k {
+                        row[absorb] += p_churn * p_ev;
+                        continue;
+                    }
+                    // Refill to n: add (n − h_after − b_after) members,
+                    // each Byzantine with probability f.
+                    let refill = cfg.n - h_after - b_after;
+                    for nb in 0..=refill {
+                        let p_nb = binom_pmf(refill, f, nb);
+                        let j = b_after + nb;
+                        let p = p_churn * p_ev * p_nb;
+                        if j > max_b {
+                            // Too many Byzantine: honest < k at refill.
+                            // The group is not yet *lost* (honest data
+                            // still ≥ k until churned), but the paper's
+                            // chain treats crossing max_b as absorbing.
+                            row[absorb] += p;
+                        } else {
+                            row[j] += p;
+                        }
+                    }
+                }
+            }
+        }
+        // Normalize tiny numeric drift.
+        let total: f64 = row.iter().sum();
+        if (total - 1.0).abs() > 1e-9 && total > 0.0 {
+            for v in row.iter_mut() {
+                *v /= total;
+            }
+        }
+    }
+    theta[absorb * states + absorb] = 1.0;
+
+    // Initial distribution: hypergeometric Byzantine count (Eq. 6);
+    // mass beyond max_b starts absorbed.
+    let mut init = vec![0.0; states];
+    for b in 0..=max_b {
+        init[b] = hypergeom_pmf(cfg.big_n, cfg.byzantine, cfg.n as u64, b as u64);
+    }
+    init[absorb] = (1.0 - init.iter().take(max_b + 1).sum::<f64>()).max(0.0);
+
+    Chain { states, theta, init, absorb }
+}
+
+impl Chain {
+    /// Native `(I·Θ^T)_absorb` series for T = 1..=steps.
+    pub fn absorb_series(&self, steps: usize) -> Vec<f64> {
+        let s = self.states;
+        let mut v = self.init.clone();
+        let mut out = Vec::with_capacity(steps);
+        let mut next = vec![0.0; s];
+        for _ in 0..steps {
+            next.fill(0.0);
+            for i in 0..s {
+                let vi = v[i];
+                if vi == 0.0 {
+                    continue;
+                }
+                let row = &self.theta[i * s..(i + 1) * s];
+                for (nj, rj) in next.iter_mut().zip(row) {
+                    *nj += vi * rj;
+                }
+            }
+            std::mem::swap(&mut v, &mut next);
+            out.push(v[self.absorb]);
+        }
+        out
+    }
+
+    /// Lemma 4.1 / Eq. (1): bound over all K+R groups of one object.
+    pub fn object_loss_bound(&self, steps: usize, chunks: usize) -> f64 {
+        let p = self.absorb_series(steps).last().copied().unwrap_or(0.0);
+        1.0 - (1.0 - p).powi(chunks as i32)
+    }
+
+    /// Pad the matrix/vector to the artifact size `s_pad` (extra states
+    /// are self-absorbing and carry no mass).
+    pub fn padded(&self, s_pad: usize) -> (Vec<f64>, Vec<f64>, usize) {
+        assert!(s_pad >= self.states);
+        let mut theta = vec![0.0; s_pad * s_pad];
+        for i in 0..self.states {
+            theta[i * s_pad..i * s_pad + self.states]
+                .copy_from_slice(&self.theta[i * self.states..(i + 1) * self.states]);
+        }
+        for i in self.states..s_pad {
+            theta[i * s_pad + i] = 1.0;
+        }
+        let mut init = vec![0.0; s_pad];
+        init[..self.states].copy_from_slice(&self.init);
+        (theta, init, self.absorb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows_stochastic(chain: &Chain) {
+        let s = chain.states;
+        for i in 0..s {
+            let total: f64 = chain.theta[i * s..(i + 1) * s].iter().sum();
+            assert!((total - 1.0).abs() < 1e-6, "row {i} sums to {total}");
+            assert!(chain.theta[i * s..(i + 1) * s].iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn chain_is_stochastic() {
+        rows_stochastic(&build_chain(&CtmcConfig::default()));
+        rows_stochastic(&build_chain(&CtmcConfig {
+            n: 20,
+            k: 8,
+            churn_q: 0.05,
+            evict: 2,
+            ..Default::default()
+        }));
+    }
+
+    #[test]
+    fn init_sums_to_one() {
+        let c = build_chain(&CtmcConfig::default());
+        let total: f64 = c.init.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn absorb_series_is_monotone() {
+        let c = build_chain(&CtmcConfig { churn_q: 0.05, ..Default::default() });
+        let series = c.absorb_series(200);
+        for w in series.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12);
+        }
+        assert!(series[199] <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn healthy_params_are_durable() {
+        // Paper defaults: (n=80, k=32), f=1/3, mild churn. The absorbing
+        // mass is dominated by the hypergeometric initial-state tail
+        // (Eq. 3, ~5e-6 at these parameters); the *churn-driven*
+        // increment over 500 steps must be negligible on top of it.
+        let c = build_chain(&CtmcConfig { churn_q: 0.001, ..Default::default() });
+        let series = c.absorb_series(500);
+        let p_end = *series.last().unwrap();
+        let p_start = series[0];
+        assert!(p_end < 1e-4, "total loss prob {p_end}");
+        assert!(
+            p_end - p_start < 1e-5,
+            "churn-driven loss {} too high",
+            p_end - p_start
+        );
+    }
+
+    #[test]
+    fn weak_code_fails_faster() {
+        let strong = build_chain(&CtmcConfig { churn_q: 0.05, ..Default::default() });
+        let weak = build_chain(&CtmcConfig {
+            n: 40, // half the redundancy, same k
+            churn_q: 0.05,
+            ..Default::default()
+        });
+        let ps = strong.absorb_series(300).last().copied().unwrap();
+        let pw = weak.absorb_series(300).last().copied().unwrap();
+        assert!(pw > ps, "weak {pw} !> strong {ps}");
+    }
+
+    #[test]
+    fn eviction_hurts_durability() {
+        let none = build_chain(&CtmcConfig { churn_q: 0.03, evict: 0, ..Default::default() });
+        let some = build_chain(&CtmcConfig { churn_q: 0.03, evict: 4, ..Default::default() });
+        let p0 = none.absorb_series(200).last().copied().unwrap();
+        let p4 = some.absorb_series(200).last().copied().unwrap();
+        assert!(p4 >= p0);
+    }
+
+    #[test]
+    fn object_bound_exceeds_single_group() {
+        let c = build_chain(&CtmcConfig { churn_q: 0.05, ..Default::default() });
+        let single = c.absorb_series(100).last().copied().unwrap();
+        let object = c.object_loss_bound(100, 10);
+        assert!(object >= single);
+        assert!(object <= 10.0 * single + 1e-12, "union bound sanity");
+    }
+
+    #[test]
+    fn padded_preserves_series() {
+        let c = build_chain(&CtmcConfig { n: 20, k: 8, churn_q: 0.05, ..Default::default() });
+        let native = c.absorb_series(50);
+        let (theta, init, absorb) = c.padded(64);
+        // Simulate the padded chain natively and compare.
+        let s = 64;
+        let mut v = init;
+        let mut out = Vec::new();
+        for _ in 0..50 {
+            let mut next = vec![0.0; s];
+            for i in 0..s {
+                if v[i] == 0.0 {
+                    continue;
+                }
+                for j in 0..s {
+                    next[j] += v[i] * theta[i * s + j];
+                }
+            }
+            v = next;
+            out.push(v[absorb]);
+        }
+        for (a, b) in native.iter().zip(&out) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Analytical durability models from Appendix A.
+//!
+//! * [`ctmc`] — the inner-code Markov-chain durability model
+//!   (Lemmas A.1/A.2 = Lemma 4.1): build the stochastic matrix Θ over
+//!   Byzantine-member counts, compute the absorbing-probability series
+//!   `(I·Θ^T)` natively or through the AOT `ctmc_absorb` artifact.
+//! * [`bounds`] — closed-form bounds: hypergeometric initial-state
+//!   validity (Eq. 3), the Hoeffding relaxation (Eq. 4), and the
+//!   targeted-attack birthday bound (Lemma 4.2/A.3, Eq. 2).
+
+pub mod bounds;
+pub mod ctmc;
+pub mod mttdl;

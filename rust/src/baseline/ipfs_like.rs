@@ -1,0 +1,341 @@
+//! IPFS-like Kademlia record store (§6.2 comparison system).
+//!
+//! Objects are split into `records_per_object` equal records; each
+//! record is `PUT_RECORD`-replicated on the `replicas` peers closest to
+//! its key on the hash ring (publisher records in real IPFS; the paper's
+//! baseline stores the data itself). QUERY fetches every record from the
+//! nearest live holder. Repair re-replicates a record's survivors when a
+//! holder is evicted.
+//!
+//! Same virtual-time event loop, region latency matrix, bandwidth model
+//! and jitter as the VAULT simnet — measured latencies differ only by
+//! protocol, not by harness.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::crypto::Hash256;
+use crate::net::{DEFAULT_BANDWIDTH_BYTES_PER_MS, REGION_LATENCY_MS};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct IpfsConfig {
+    pub n_peers: usize,
+    pub replicas: usize,
+    pub records_per_object: usize,
+    pub regions: usize,
+    pub bandwidth: u64,
+    pub jitter: f64,
+    pub seed: u64,
+}
+
+impl Default for IpfsConfig {
+    fn default() -> Self {
+        IpfsConfig {
+            n_peers: 500,
+            replicas: crate::params::BASELINE_REPLICAS,
+            records_per_object: crate::params::K_INNER * crate::params::K_OUTER,
+            regions: 5,
+            bandwidth: DEFAULT_BANDWIDTH_BYTES_PER_MS,
+            jitter: 0.1,
+            seed: 11,
+        }
+    }
+}
+
+struct Peer {
+    ring_pos: u128,
+    region: u8,
+    up: bool,
+    records: HashMap<Hash256, usize>, // key -> record size
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ObjectHandle {
+    pub keys: Vec<Hash256>,
+    pub record_size: usize,
+}
+
+enum Ev {
+    PutAck { op: u64 },
+    GetReply { op: u64, ok: bool },
+    ReplicaInstalled { key: Hash256, peer: usize },
+}
+
+/// The IPFS-like network simulator.
+pub struct IpfsNet {
+    cfg: IpfsConfig,
+    peers: Vec<Peer>,
+    order: Vec<usize>, // peer indices sorted by ring_pos
+    now_ms: u64,
+    events: BinaryHeap<Reverse<(u64, u64, usize)>>,
+    payloads: Vec<Option<Ev>>,
+    seq: u64,
+    rng: Rng,
+    pending: HashMap<u64, (usize, u64)>, // op -> (outstanding, start_ms)
+    next_op: u64,
+    pub msgs: u64,
+    pub bytes: u64,
+}
+
+impl IpfsNet {
+    pub fn new(cfg: IpfsConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let peers: Vec<Peer> = (0..cfg.n_peers)
+            .map(|i| {
+                let mut b = [0u8; 32];
+                rng.fill_bytes(&mut b);
+                Peer {
+                    ring_pos: Hash256(b).prefix_u128(),
+                    region: (i % cfg.regions.max(1)) as u8,
+                    up: true,
+                    records: HashMap::new(),
+                }
+            })
+            .collect();
+        let mut order: Vec<usize> = (0..peers.len()).collect();
+        order.sort_by_key(|&i| peers[i].ring_pos);
+        IpfsNet {
+            cfg,
+            peers,
+            order,
+            now_ms: 0,
+            events: BinaryHeap::new(),
+            payloads: Vec::new(),
+            seq: 0,
+            rng,
+            pending: HashMap::new(),
+            next_op: 1,
+            msgs: 0,
+            bytes: 0,
+        }
+    }
+
+    pub fn now_ms(&self) -> u64 {
+        self.now_ms
+    }
+
+    fn latency(&mut self, a: u8, b: u8, bytes: usize) -> u64 {
+        let base = REGION_LATENCY_MS[a as usize % 5][b as usize % 5];
+        let transfer = bytes as u64 / self.cfg.bandwidth.max(1);
+        let jit = 1.0 + self.cfg.jitter * (2.0 * self.rng.f64() - 1.0);
+        self.msgs += 1;
+        self.bytes += bytes as u64;
+        (((base + transfer) as f64) * jit).max(1.0) as u64
+    }
+
+    fn schedule(&mut self, at: u64, ev: Ev) {
+        self.seq += 1;
+        self.payloads.push(Some(ev));
+        self.events.push(Reverse((at, self.seq, self.payloads.len() - 1)));
+    }
+
+    /// The `replicas` live peers closest to `key` on the ring.
+    fn holders_for(&self, key: &Hash256, count: usize) -> Vec<usize> {
+        let t = key.prefix_u128();
+        let start = self.order.partition_point(|&i| self.peers[i].ring_pos < t);
+        let n = self.order.len();
+        let mut out = Vec::with_capacity(count);
+        let mut off = 0usize;
+        while out.len() < count && off < n {
+            let i = self.order[(start + off) % n];
+            if self.peers[i].up {
+                out.push(i);
+            }
+            off += 1;
+        }
+        out
+    }
+
+    pub fn kill(&mut self, peer: usize) {
+        self.peers[peer].up = false;
+    }
+
+    /// PUT all records of an object from `client_region`; returns
+    /// (handle, op). Run the net until the op completes to get latency.
+    pub fn store(&mut self, client_region: u8, object_size: usize, tag: u64) -> (ObjectHandle, u64) {
+        let rec_size = object_size.div_ceil(self.cfg.records_per_object).max(1);
+        let keys: Vec<Hash256> = (0..self.cfg.records_per_object)
+            .map(|i| Hash256::of_parts(&[&tag.to_le_bytes(), &(i as u64).to_le_bytes()]))
+            .collect();
+        let op = self.next_op;
+        self.next_op += 1;
+        let mut outstanding = 0usize;
+        for key in &keys {
+            for h in self.holders_for(key, self.cfg.replicas) {
+                let region = self.peers[h].region;
+                let lat = self.latency(client_region, region, rec_size);
+                self.peers[h].records.insert(*key, rec_size);
+                // ack = request + reply round trip
+                let back = self.latency(region, client_region, 64);
+                self.schedule(self.now_ms + lat + back, Ev::PutAck { op });
+                outstanding += 1;
+            }
+        }
+        self.pending.insert(op, (outstanding, self.now_ms));
+        (ObjectHandle { keys, record_size: rec_size }, op)
+    }
+
+    /// GET all records; completes when every record is fetched.
+    pub fn query(&mut self, client_region: u8, handle: &ObjectHandle) -> u64 {
+        let op = self.next_op;
+        self.next_op += 1;
+        let mut outstanding = 0usize;
+        for key in &handle.keys {
+            // Nearest holder by latency from the client (IPFS fetches
+            // from the closest responding provider).
+            let holders = self.holders_for(key, self.cfg.replicas);
+            let holder = holders
+                .iter()
+                .copied()
+                .filter(|&h| self.peers[h].records.contains_key(key))
+                .min_by_key(|&h| {
+                    REGION_LATENCY_MS[client_region as usize % 5]
+                        [self.peers[h].region as usize % 5]
+                });
+            match holder {
+                Some(h) => {
+                    let region = self.peers[h].region;
+                    let req = self.latency(client_region, region, 64);
+                    let resp = self.latency(region, client_region, handle.record_size);
+                    self.schedule(self.now_ms + req + resp, Ev::GetReply { op, ok: true });
+                    outstanding += 1;
+                }
+                None => {
+                    self.schedule(self.now_ms + 1, Ev::GetReply { op, ok: false });
+                    outstanding += 1;
+                }
+            }
+        }
+        self.pending.insert(op, (outstanding, self.now_ms));
+        op
+    }
+
+    /// Re-replicate one record after a holder eviction; returns the op.
+    pub fn repair_record(&mut self, key: &Hash256, record_size: usize) -> u64 {
+        let op = self.next_op;
+        self.next_op += 1;
+        let holders = self.holders_for(key, self.cfg.replicas);
+        let survivors: Vec<usize> = holders
+            .iter()
+            .copied()
+            .filter(|&h| self.peers[h].records.contains_key(key))
+            .collect();
+        let mut outstanding = 0usize;
+        if let Some(&src) = survivors.first() {
+            // Copy to the nearest live non-holder.
+            if let Some(dst) = holders.iter().copied().find(|h| !survivors.contains(h)) {
+                let lat = self.latency(
+                    self.peers[src].region,
+                    self.peers[dst].region,
+                    record_size,
+                );
+                self.schedule(self.now_ms + lat, Ev::ReplicaInstalled { key: *key, peer: dst });
+                self.schedule(self.now_ms + lat, Ev::PutAck { op });
+                outstanding = 1;
+            }
+        }
+        if outstanding == 0 {
+            self.schedule(self.now_ms + 1, Ev::PutAck { op });
+            outstanding = 1;
+        }
+        self.pending.insert(op, (outstanding, self.now_ms));
+        op
+    }
+
+    /// Run until `op` completes; returns its latency (virtual ms), or
+    /// `None` if any record fetch failed.
+    pub fn run_until_op(&mut self, op: u64) -> Option<u64> {
+        let mut failed = false;
+        while let Some(&Reverse((t, _, slot))) = self.events.peek() {
+            let (outstanding, _) = *self.pending.get(&op)?;
+            if outstanding == 0 {
+                break;
+            }
+            self.events.pop();
+            self.now_ms = t;
+            let Some(ev) = self.payloads[slot].take() else { continue };
+            match ev {
+                Ev::PutAck { op: o } | Ev::GetReply { op: o, ok: true } => {
+                    if let Some(e) = self.pending.get_mut(&o) {
+                        e.0 = e.0.saturating_sub(1);
+                    }
+                }
+                Ev::GetReply { op: o, ok: false } => {
+                    if o == op {
+                        failed = true;
+                    }
+                    if let Some(e) = self.pending.get_mut(&o) {
+                        e.0 = e.0.saturating_sub(1);
+                    }
+                }
+                Ev::ReplicaInstalled { key, peer } => {
+                    let size = 0usize;
+                    self.peers[peer].records.insert(key, size);
+                }
+            }
+        }
+        let (outstanding, start) = self.pending.remove(&op)?;
+        if outstanding > 0 || failed {
+            return None;
+        }
+        Some(self.now_ms - start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_then_query_completes() {
+        let mut net = IpfsNet::new(IpfsConfig { n_peers: 100, ..Default::default() });
+        let (handle, op) = net.store(0, 1 << 20, 1);
+        let store_lat = net.run_until_op(op).expect("store completes");
+        assert!(store_lat > 0);
+        let qop = net.query(1, &handle);
+        let query_lat = net.run_until_op(qop).expect("query completes");
+        assert!(query_lat > 0);
+    }
+
+    #[test]
+    fn query_fails_after_all_replicas_killed() {
+        let mut net = IpfsNet::new(IpfsConfig { n_peers: 60, ..Default::default() });
+        let (handle, op) = net.store(0, 100_000, 2);
+        net.run_until_op(op).unwrap();
+        // Kill every holder of the first record key.
+        let holders = net.holders_for(&handle.keys[0], 3);
+        for h in holders {
+            net.kill(h);
+        }
+        let qop = net.query(0, &handle);
+        assert!(net.run_until_op(qop).is_none(), "lost record must fail the query");
+    }
+
+    #[test]
+    fn repair_restores_replication() {
+        let mut net = IpfsNet::new(IpfsConfig { n_peers: 100, ..Default::default() });
+        let (handle, op) = net.store(0, 1 << 18, 3);
+        net.run_until_op(op).unwrap();
+        let key = handle.keys[0];
+        let victim = net.holders_for(&key, 1)[0];
+        net.kill(victim);
+        let rop = net.repair_record(&key, handle.record_size);
+        let lat = net.run_until_op(rop).expect("repair completes");
+        assert!(lat > 0);
+    }
+
+    #[test]
+    fn records_balance_across_peers() {
+        let mut net = IpfsNet::new(IpfsConfig { n_peers: 200, ..Default::default() });
+        for tag in 0..20 {
+            let (_, op) = net.store((tag % 5) as u8, 1 << 16, tag);
+            net.run_until_op(op).unwrap();
+        }
+        let loads: Vec<usize> = net.peers.iter().map(|p| p.records.len()).collect();
+        let loaded = loads.iter().filter(|&&l| l > 0).count();
+        // 20 objects x 256 records x 3 replicas over 200 peers: nearly
+        // every peer should hold something.
+        assert!(loaded > 150, "only {loaded} peers loaded");
+    }
+}

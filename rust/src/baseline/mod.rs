@@ -1,0 +1,12 @@
+//! Baseline systems the paper's evaluation compares against.
+//!
+//! * [`ipfs_like`] — the §6.2 deployment baseline: "an IPFS-like
+//!   decentralized storage system using Kademlia DHT ... directly uses
+//!   DHT PUT_RECORD to store object data", replication factor 3, each
+//!   object split into `K_inner · K_outer` records for load balancing.
+//!   Runs on the same virtual-time/latency model as
+//!   [`crate::net::simnet`] so Fig. 7–9 comparisons are apples-to-apples.
+//! * The §6.1 simulation baseline (Ceph-like 3-replication) lives in
+//!   [`crate::sim::replica`] next to the VAULT durability simulator.
+
+pub mod ipfs_like;

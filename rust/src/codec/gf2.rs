@@ -1,0 +1,200 @@
+//! Bit-packed GF(2) linear algebra — coefficient-matrix side of the
+//! inner fountain code (the payload side lives in [`super::xor`]).
+
+/// Dense bit matrix, row-major, 64-bit word packed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    words_per_row: usize,
+    data: Vec<u64>,
+}
+
+impl BitMatrix {
+    pub fn zero(rows: usize, cols: usize) -> Self {
+        let wpr = cols.div_ceil(64);
+        BitMatrix { rows, cols, words_per_row: wpr, data: vec![0; rows * wpr] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zero(n, n);
+        for i in 0..n {
+            m.set(i, i, true);
+        }
+        m
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        debug_assert!(r < self.rows && c < self.cols);
+        (self.data[r * self.words_per_row + c / 64] >> (c % 64)) & 1 == 1
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        debug_assert!(r < self.rows && c < self.cols);
+        let w = &mut self.data[r * self.words_per_row + c / 64];
+        if v {
+            *w |= 1 << (c % 64);
+        } else {
+            *w &= !(1 << (c % 64));
+        }
+    }
+
+    pub fn row_words(&self, r: usize) -> &[u64] {
+        &self.data[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    /// rows[dst] ^= rows[src]
+    pub fn xor_row(&mut self, dst: usize, src: usize) {
+        assert_ne!(dst, src);
+        let wpr = self.words_per_row;
+        let (a, b) = if dst < src {
+            let (lo, hi) = self.data.split_at_mut(src * wpr);
+            (&mut lo[dst * wpr..(dst + 1) * wpr], &hi[..wpr])
+        } else {
+            let (lo, hi) = self.data.split_at_mut(dst * wpr);
+            (&mut hi[..wpr], &lo[src * wpr..(src + 1) * wpr])
+        };
+        for (x, y) in a.iter_mut().zip(b) {
+            *x ^= y;
+        }
+    }
+
+    pub fn set_row_from_bits(&mut self, r: usize, bits: &[bool]) {
+        assert_eq!(bits.len(), self.cols);
+        for (c, &b) in bits.iter().enumerate() {
+            self.set(r, c, b);
+        }
+    }
+
+    pub fn row_is_zero(&self, r: usize) -> bool {
+        self.row_words(r).iter().all(|&w| w == 0)
+    }
+
+    /// Rank via Gaussian elimination on a copy.
+    pub fn rank(&self) -> usize {
+        let mut m = self.clone();
+        let mut rank = 0;
+        let mut pivot_row = 0;
+        for col in 0..m.cols {
+            // Find a row at or below pivot_row with this column set.
+            let mut found = None;
+            for r in pivot_row..m.rows {
+                if m.get(r, col) {
+                    found = Some(r);
+                    break;
+                }
+            }
+            let Some(p) = found else { continue };
+            if p != pivot_row {
+                // Swap rows p and pivot_row.
+                let wpr = m.words_per_row;
+                for wi in 0..wpr {
+                    m.data.swap(p * wpr + wi, pivot_row * wpr + wi);
+                }
+            }
+            for r in 0..m.rows {
+                if r != pivot_row && m.get(r, col) {
+                    m.xor_row(r, pivot_row);
+                }
+            }
+            rank += 1;
+            pivot_row += 1;
+            if pivot_row == m.rows {
+                break;
+            }
+        }
+        rank
+    }
+
+    pub fn is_full_rank(&self) -> bool {
+        self.rank() == self.rows.min(self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_matrix(rng: &mut Rng, rows: usize, cols: usize) -> BitMatrix {
+        let mut m = BitMatrix::zero(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.set(r, c, rng.chance(0.5));
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut m = BitMatrix::zero(3, 130);
+        m.set(0, 0, true);
+        m.set(2, 129, true);
+        m.set(1, 64, true);
+        assert!(m.get(0, 0));
+        assert!(m.get(2, 129));
+        assert!(m.get(1, 64));
+        assert!(!m.get(0, 1));
+        m.set(0, 0, false);
+        assert!(!m.get(0, 0));
+    }
+
+    #[test]
+    fn identity_full_rank() {
+        for n in [1, 7, 64, 65, 100] {
+            assert_eq!(BitMatrix::identity(n).rank(), n);
+        }
+    }
+
+    #[test]
+    fn zero_rank_zero() {
+        assert_eq!(BitMatrix::zero(5, 5).rank(), 0);
+    }
+
+    #[test]
+    fn duplicate_rows_reduce_rank() {
+        let mut rng = Rng::new(60);
+        let mut m = random_matrix(&mut rng, 8, 8);
+        // copy row 0 into row 7
+        for c in 0..8 {
+            let v = m.get(0, c);
+            m.set(7, c, v);
+        }
+        assert!(m.rank() < 8);
+    }
+
+    #[test]
+    fn xor_row_changes_and_restores() {
+        let mut rng = Rng::new(61);
+        let mut m = random_matrix(&mut rng, 4, 100);
+        let orig = m.clone();
+        m.xor_row(1, 3);
+        m.xor_row(1, 3);
+        assert_eq!(m, orig);
+    }
+
+    #[test]
+    fn random_square_rank_statistics() {
+        // P(full rank) for random k x k GF(2) ~ 0.2887 (k >= 10). Check
+        // the observed rate is in a plausible band.
+        let mut rng = Rng::new(62);
+        let trials = 400;
+        let mut full = 0;
+        for _ in 0..trials {
+            if random_matrix(&mut rng, 16, 16).is_full_rank() {
+                full += 1;
+            }
+        }
+        let frac = full as f64 / trials as f64;
+        assert!((0.20..0.38).contains(&frac), "frac={frac}");
+    }
+
+    #[test]
+    fn rank_of_rectangular() {
+        let mut rng = Rng::new(63);
+        // With 8 extra random rows, rank k is overwhelmingly likely.
+        let m = random_matrix(&mut rng, 40, 32);
+        assert_eq!(m.rank(), 32);
+    }
+}

@@ -1,0 +1,241 @@
+//! GF(2^8) arithmetic for the *outer* fountain code.
+//!
+//! The outer code works over k_outer = 8 source blocks; random GF(2)
+//! rows at that size would fail to reach full rank too often (a random
+//! 8×8 GF(2) matrix is singular with probability ≈ 0.71), so the outer
+//! layer uses random linear combinations over GF(256) instead, where an
+//! 8×8 random matrix is full rank with probability ≈ 0.9961 and any 8
+//! of the 10 stored chunks decode essentially always. The inner code
+//! (the hot path) stays GF(2)/XOR — see DESIGN.md §Substitutions.
+//!
+//! Standard AES-polynomial field (0x11B) with log/exp tables.
+
+use std::sync::OnceLock;
+
+struct Tables {
+    exp: [u8; 512],
+    log: [u8; 256],
+}
+
+fn tables() -> &'static Tables {
+    static CELL: OnceLock<Tables> = OnceLock::new();
+    CELL.get_or_init(|| {
+        let mut exp = [0u8; 512];
+        let mut log = [0u8; 256];
+        let mut x: u16 = 1;
+        for i in 0..255 {
+            exp[i] = x as u8;
+            log[x as usize] = i as u8;
+            // Multiply by the generator 0x03 (note: 0x02 is NOT a
+            // generator of GF(256)/0x11B — its order is only 51).
+            let mut x2 = x << 1;
+            if x2 & 0x100 != 0 {
+                x2 ^= 0x11B;
+            }
+            x = x2 ^ x;
+        }
+        for i in 255..512 {
+            exp[i] = exp[i - 255];
+        }
+        Tables { exp, log }
+    })
+}
+
+/// Multiply in GF(256).
+pub fn mul(a: u8, b: u8) -> u8 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    let t = tables();
+    t.exp[t.log[a as usize] as usize + t.log[b as usize] as usize]
+}
+
+/// Multiplicative inverse; panics on 0.
+pub fn inv(a: u8) -> u8 {
+    assert_ne!(a, 0, "gf256 inverse of zero");
+    let t = tables();
+    t.exp[255 - t.log[a as usize] as usize]
+}
+
+pub fn div(a: u8, b: u8) -> u8 {
+    mul(a, inv(b))
+}
+
+/// dst += c * src (GF(256) — addition is XOR). The outer-code hot loop.
+pub fn addmul_slice(dst: &mut [u8], src: &[u8], c: u8) {
+    assert_eq!(dst.len(), src.len());
+    if c == 0 {
+        return;
+    }
+    if c == 1 {
+        super::xor::xor_into(dst, src);
+        return;
+    }
+    let t = tables();
+    let lc = t.log[c as usize] as usize;
+    // Per-byte table lookups; the outer code touches k_outer=8 blocks
+    // only, so this is never the system bottleneck (see §Perf).
+    for (d, &s) in dst.iter_mut().zip(src) {
+        if s != 0 {
+            *d ^= t.exp[lc + t.log[s as usize] as usize];
+        }
+    }
+}
+
+/// Solve the dense GF(256) system `C x = F` in place, returning the
+/// recovered blocks in source order. `coeff` is row-major k×k, `payload`
+/// rows are the combined blocks. Returns `None` if singular.
+pub fn solve(coeff: &mut [Vec<u8>], payload: &mut [Vec<u8>]) -> Option<Vec<Vec<u8>>> {
+    let k = coeff.len();
+    assert_eq!(payload.len(), k);
+    let mut perm = vec![0usize; k];
+    let mut used = vec![false; k];
+    for col in 0..k {
+        // Pivot: first unused row with nonzero coefficient.
+        let p = (0..k).find(|&r| !used[r] && coeff[r][col] != 0)?;
+        used[p] = true;
+        perm[col] = p;
+        // Normalize pivot row.
+        let pc = coeff[p][col];
+        if pc != 1 {
+            let ipc = inv(pc);
+            for v in coeff[p].iter_mut() {
+                *v = mul(*v, ipc);
+            }
+            let row = std::mem::take(&mut payload[p]);
+            let mut scaled = row;
+            scale_slice(&mut scaled, ipc);
+            payload[p] = scaled;
+        }
+        // Eliminate from all other rows.
+        for r in 0..k {
+            if r == p || coeff[r][col] == 0 {
+                continue;
+            }
+            let factor = coeff[r][col];
+            let pivot_coeff = coeff[p].clone();
+            for (v, pv) in coeff[r].iter_mut().zip(&pivot_coeff) {
+                *v ^= mul(factor, *pv);
+            }
+            let (pr, rr) = if p < r {
+                let (lo, hi) = payload.split_at_mut(r);
+                (&lo[p], &mut hi[0])
+            } else {
+                let (lo, hi) = payload.split_at_mut(p);
+                (&hi[0], &mut lo[r])
+            };
+            addmul_slice(rr, pr, factor);
+        }
+    }
+    Some(perm.iter().map(|&p| payload[p].clone()).collect())
+}
+
+/// In-place slice scaling by `c`.
+pub fn scale_slice(data: &mut [u8], c: u8) {
+    if c == 1 {
+        return;
+    }
+    if c == 0 {
+        data.fill(0);
+        return;
+    }
+    let t = tables();
+    let lc = t.log[c as usize] as usize;
+    for d in data.iter_mut() {
+        if *d != 0 {
+            *d = t.exp[lc + t.log[*d as usize] as usize];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn field_axioms() {
+        let mut rng = Rng::new(70);
+        for _ in 0..500 {
+            let a = rng.next_u32() as u8;
+            let b = rng.next_u32() as u8;
+            let c = rng.next_u32() as u8;
+            assert_eq!(mul(a, b), mul(b, a));
+            assert_eq!(mul(a, mul(b, c)), mul(mul(a, b), c));
+            assert_eq!(mul(a, b ^ c), mul(a, b) ^ mul(a, c)); // distributive
+            assert_eq!(mul(a, 1), a);
+            assert_eq!(mul(a, 0), 0);
+        }
+    }
+
+    #[test]
+    fn inverse_works() {
+        for a in 1..=255u8 {
+            assert_eq!(mul(a, inv(a)), 1, "a={a}");
+            assert_eq!(div(mul(7, a), a), 7);
+        }
+    }
+
+    #[test]
+    fn known_products() {
+        // AES field: 0x53 * 0xCA = 0x01 (classic inverse pair)
+        assert_eq!(mul(0x53, 0xCA), 0x01);
+        assert_eq!(mul(2, 0x80), 0x1B); // x * x^7 = x^8 = 0x1B
+    }
+
+    #[test]
+    fn addmul_matches_scalar() {
+        let mut rng = Rng::new(71);
+        let mut dst = vec![0u8; 257];
+        let mut src = vec![0u8; 257];
+        rng.fill_bytes(&mut dst);
+        rng.fill_bytes(&mut src);
+        let c = 0xA7;
+        let want: Vec<u8> = dst.iter().zip(&src).map(|(&d, &s)| d ^ mul(c, s)).collect();
+        addmul_slice(&mut dst, &src, c);
+        assert_eq!(dst, want);
+    }
+
+    #[test]
+    fn solve_recovers_random_system() {
+        let mut rng = Rng::new(72);
+        let k = 8;
+        let blk = 64;
+        let blocks: Vec<Vec<u8>> = (0..k)
+            .map(|_| {
+                let mut b = vec![0u8; blk];
+                rng.fill_bytes(&mut b);
+                b
+            })
+            .collect();
+        // Build k random combinations.
+        let mut coeff: Vec<Vec<u8>> = Vec::new();
+        let mut payload: Vec<Vec<u8>> = Vec::new();
+        loop {
+            coeff.clear();
+            payload.clear();
+            for _ in 0..k {
+                let row: Vec<u8> = (0..k).map(|_| rng.next_u32() as u8).collect();
+                let mut p = vec![0u8; blk];
+                for (c, b) in row.iter().zip(&blocks) {
+                    addmul_slice(&mut p, b, *c);
+                }
+                coeff.push(row);
+                payload.push(p);
+            }
+            if let Some(got) = solve(&mut coeff.clone(), &mut payload.clone()) {
+                assert_eq!(got, blocks);
+                break;
+            }
+            // singular draw (prob ~0.4%) — retry
+        }
+    }
+
+    #[test]
+    fn solve_singular_returns_none() {
+        let k = 4;
+        let mut coeff: Vec<Vec<u8>> = vec![vec![1, 2, 3, 4]; k]; // rank 1
+        let mut payload: Vec<Vec<u8>> = vec![vec![0u8; 8]; k];
+        assert!(solve(&mut coeff, &mut payload).is_none());
+    }
+}

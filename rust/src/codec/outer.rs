@@ -1,0 +1,352 @@
+//! The outer rateless code: object → opaque encoded chunks (§4.2).
+//!
+//! The client applies a random linear fountain over GF(256) to the
+//! object's `K_outer` source blocks, then uses *private information*
+//! (its secret key + the object hash) to pick `N_outer` indices from the
+//! infinite encoding stream. The index is embedded in the chunk payload
+//! (it reveals nothing about which object the chunk belongs to), so the
+//! chunk-to-object mapping stays opaque to everyone but the owner: a
+//! targeted adversary "can do no better than compromising randomly
+//! selected chunks".
+
+use crate::crypto::Hash256;
+use crate::util::rng::HashDrbg;
+use crate::wire::{Decode, Encode, Reader, WireResult, Writer};
+
+use super::gf256;
+
+/// Header prepended to every encoded chunk (serialized with [`crate::wire`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkHeader {
+    /// Position of this chunk in the outer encoding stream.
+    pub outer_index: u64,
+    /// Outer-code dimension used at encode time.
+    pub k_outer: u16,
+    /// Original object length in bytes.
+    pub object_len: u64,
+}
+
+crate::wire_struct!(ChunkHeader { outer_index, k_outer, object_len });
+
+/// Opaque object handle: the chunk hashes returned by STORE (paper
+/// Algorithm 1: "return chashes"). Only the owner holds it; IDs are
+/// private to protect against targeted attacks (§4.1).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ObjectId {
+    pub chunks: Vec<Hash256>,
+}
+
+crate::wire_struct!(ObjectId { chunks });
+
+impl ObjectId {
+    /// Content-addressed digest over all chunk hashes.
+    pub fn digest(&self) -> Hash256 {
+        let mut parts: Vec<&[u8]> = Vec::with_capacity(self.chunks.len());
+        for c in &self.chunks {
+            parts.push(&c.0);
+        }
+        Hash256::of_parts(&parts)
+    }
+}
+
+/// GF(256) coefficient row for outer-stream index `i`: `k` bytes, never
+/// all-zero, derived from public information only (anyone holding a
+/// chunk can derive its row from the embedded index).
+pub fn outer_row(index: u64, k: usize) -> Vec<u8> {
+    for attempt in 0u32.. {
+        let mut seed = Vec::with_capacity(32);
+        seed.extend_from_slice(b"vault-outer-row-v1");
+        seed.extend_from_slice(&index.to_le_bytes());
+        seed.extend_from_slice(&attempt.to_le_bytes());
+        let mut drbg = HashDrbg::new(&seed);
+        let mut row = vec![0u8; k];
+        drbg.fill(&mut row);
+        if row.iter().any(|&c| c != 0) {
+            return row;
+        }
+    }
+    unreachable!()
+}
+
+/// Private index selection: `n` distinct indices drawn from the client's
+/// secret and the object hash (§4.2 "uses its private key and the object
+/// hash to deterministically select ... irreversible").
+pub fn select_indices(secret: &[u8], object_hash: &Hash256, n: usize) -> Vec<u64> {
+    let mut seed = Vec::with_capacity(64);
+    seed.extend_from_slice(b"vault-outer-select-v1");
+    seed.extend_from_slice(secret);
+    seed.extend_from_slice(&object_hash.0);
+    let mut drbg = HashDrbg::new(&seed);
+    let mut out = Vec::with_capacity(n);
+    let mut seen = std::collections::HashSet::with_capacity(n * 2);
+    while out.len() < n {
+        let idx = drbg.next_u64();
+        if seen.insert(idx) {
+            out.push(idx);
+        }
+    }
+    out
+}
+
+/// One materialized encoded chunk: bytes = header ‖ payload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EncodedChunk {
+    pub chash: Hash256,
+    pub bytes: Vec<u8>,
+}
+
+/// Outer-encode `object` into `n` opaque chunks selected by `secret`.
+pub fn encode_object(object: &[u8], secret: &[u8], k: usize, n: usize) -> (ObjectId, Vec<EncodedChunk>) {
+    assert!(k >= 1 && n >= k);
+    let bs = object.len().div_ceil(k).max(1);
+    let mut blocks = vec![0u8; k * bs];
+    blocks[..object.len()].copy_from_slice(object);
+    let ohash = Hash256::of(object);
+    let indices = select_indices(secret, &ohash, n);
+
+    let mut chunks = Vec::with_capacity(n);
+    let mut hashes = Vec::with_capacity(n);
+    for &idx in &indices {
+        let row = outer_row(idx, k);
+        let mut payload = vec![0u8; bs];
+        for (j, &c) in row.iter().enumerate() {
+            gf256::addmul_slice(&mut payload, &blocks[j * bs..(j + 1) * bs], c);
+        }
+        let header = ChunkHeader { outer_index: idx, k_outer: k as u16, object_len: object.len() as u64 };
+        let mut w = Writer::with_capacity(payload.len() + 24);
+        header.encode(&mut w);
+        w.bytes(&payload);
+        let bytes = w.into_bytes();
+        let chash = Hash256::of(&bytes);
+        hashes.push(chash);
+        chunks.push(EncodedChunk { chash, bytes });
+    }
+    (ObjectId { chunks: hashes }, chunks)
+}
+
+/// Parse a chunk blob into its header and payload.
+pub fn parse_chunk(bytes: &[u8]) -> WireResult<(ChunkHeader, &[u8])> {
+    let mut r = Reader::new(bytes);
+    let header = ChunkHeader::decode(&mut r)?;
+    let payload_len = r.remaining();
+    let payload = r.take(payload_len)?;
+    Ok((header, payload))
+}
+
+/// Incremental outer-code decoder over GF(256).
+pub struct OuterDecoder {
+    k: usize,
+    object_len: Option<u64>,
+    block_size: usize,
+    /// pivot[c] = row index with unit leading coefficient at column c.
+    pivot: Vec<Option<usize>>,
+    rows: Vec<(Vec<u8>, Vec<u8>)>,
+}
+
+impl OuterDecoder {
+    pub fn new(k: usize) -> Self {
+        OuterDecoder { k, object_len: None, block_size: 0, pivot: vec![None; k], rows: Vec::new() }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rows.len()
+    }
+    pub fn is_complete(&self) -> bool {
+        self.rows.len() == self.k
+    }
+
+    /// Feed one encoded-chunk blob. Returns true if rank increased.
+    pub fn push(&mut self, chunk_bytes: &[u8]) -> bool {
+        if self.is_complete() {
+            return false;
+        }
+        let Ok((header, payload)) = parse_chunk(chunk_bytes) else { return false };
+        if header.k_outer as usize != self.k {
+            return false;
+        }
+        match self.object_len {
+            None => {
+                self.object_len = Some(header.object_len);
+                self.block_size = payload.len();
+            }
+            Some(len) => {
+                if len != header.object_len || payload.len() != self.block_size {
+                    return false;
+                }
+            }
+        }
+        let mut row = outer_row(header.outer_index, self.k);
+        let mut pay = payload.to_vec();
+        // Eliminate against existing pivots.
+        for c in 0..self.k {
+            if row[c] == 0 {
+                continue;
+            }
+            if let Some(pr) = self.pivot[c] {
+                let factor = row[c];
+                let (prow, ppay) = &self.rows[pr];
+                let prow = prow.clone();
+                let ppay = ppay.clone();
+                for (v, pv) in row.iter_mut().zip(&prow) {
+                    *v ^= gf256::mul(factor, *pv);
+                }
+                gf256::addmul_slice(&mut pay, &ppay, factor);
+            }
+        }
+        let Some(lead) = row.iter().position(|&v| v != 0) else { return false };
+        // Normalize to unit pivot.
+        let ilead = gf256::inv(row[lead]);
+        for v in row.iter_mut() {
+            *v = gf256::mul(*v, ilead);
+        }
+        gf256::scale_slice(&mut pay, ilead);
+        // Back-substitute into existing rows.
+        for r in 0..self.rows.len() {
+            let factor = self.rows[r].0[lead];
+            if factor != 0 {
+                let row_c = row.clone();
+                let pay_c = pay.clone();
+                let (erow, epay) = &mut self.rows[r];
+                for (v, nv) in erow.iter_mut().zip(&row_c) {
+                    *v ^= gf256::mul(factor, *nv);
+                }
+                gf256::addmul_slice(epay, &pay_c, factor);
+            }
+        }
+        self.pivot[lead] = Some(self.rows.len());
+        self.rows.push((row, pay));
+        true
+    }
+
+    /// Recover the original object once complete.
+    pub fn recover(&self) -> Option<Vec<u8>> {
+        if !self.is_complete() {
+            return None;
+        }
+        let len = self.object_len? as usize;
+        let mut out = vec![0u8; self.k * self.block_size];
+        for c in 0..self.k {
+            let r = self.pivot[c]?;
+            out[c * self.block_size..(c + 1) * self.block_size].copy_from_slice(&self.rows[r].1);
+        }
+        out.truncate(len);
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_obj(seed: u64, len: usize) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0u8; len];
+        rng.fill_bytes(&mut v);
+        v
+    }
+
+    #[test]
+    fn encode_decode_all_chunks() {
+        for (seed, len) in [(1u64, 100_000usize), (2, 1), (3, 7), (4, 8), (5, 65536)] {
+            let obj = rand_obj(seed, len);
+            let (id, chunks) = encode_object(&obj, b"secret", 8, 10);
+            assert_eq!(id.chunks.len(), 10);
+            let mut dec = OuterDecoder::new(8);
+            for c in &chunks {
+                dec.push(&c.bytes);
+                if dec.is_complete() {
+                    break;
+                }
+            }
+            assert!(dec.is_complete());
+            assert_eq!(dec.recover().unwrap(), obj);
+        }
+    }
+
+    #[test]
+    fn any_k_of_n_subset_decodes() {
+        // GF(256) rows: essentially every k-subset is full rank.
+        let obj = rand_obj(10, 10_000);
+        let (_, chunks) = encode_object(&obj, b"s", 8, 10);
+        let mut rng = Rng::new(11);
+        let mut failures = 0;
+        for _ in 0..20 {
+            let pick = rng.sample_indices(10, 8);
+            let mut dec = OuterDecoder::new(8);
+            for &i in &pick {
+                dec.push(&chunks[i].bytes);
+            }
+            if dec.is_complete() {
+                assert_eq!(dec.recover().unwrap(), obj);
+            } else {
+                failures += 1;
+            }
+        }
+        // P(singular 8x8 over GF(256)) ≈ 0.4%; 20 trials should all pass.
+        assert_eq!(failures, 0);
+    }
+
+    #[test]
+    fn chunks_are_opaque_and_content_addressed() {
+        let obj = rand_obj(20, 4096);
+        let (id_a, chunks_a) = encode_object(&obj, b"alice", 8, 10);
+        let (id_b, chunks_b) = encode_object(&obj, b"bob", 8, 10);
+        // Different secrets pick different stream indices ⇒ different
+        // chunks & IDs for the same object (owner privacy).
+        assert_ne!(id_a, id_b);
+        for c in &chunks_a {
+            assert_eq!(c.chash, Hash256::of(&c.bytes));
+        }
+        // Same secret is deterministic.
+        let (id_a2, chunks_a2) = encode_object(&obj, b"alice", 8, 10);
+        assert_eq!(id_a, id_a2);
+        assert_eq!(chunks_a, chunks_a2);
+        drop(chunks_b);
+    }
+
+    #[test]
+    fn select_indices_distinct_and_private() {
+        let h = Hash256::of(b"obj");
+        let a = select_indices(b"k1", &h, 10);
+        let b = select_indices(b"k2", &h, 10);
+        assert_ne!(a, b);
+        let set: std::collections::HashSet<_> = a.iter().collect();
+        assert_eq!(set.len(), 10);
+    }
+
+    #[test]
+    fn wrong_k_chunks_rejected() {
+        let obj = rand_obj(30, 1000);
+        let (_, chunks) = encode_object(&obj, b"s", 4, 6);
+        let mut dec = OuterDecoder::new(8);
+        assert!(!dec.push(&chunks[0].bytes));
+        assert_eq!(dec.rank(), 0);
+    }
+
+    #[test]
+    fn dependent_chunk_does_not_advance() {
+        let obj = rand_obj(31, 1000);
+        let (_, chunks) = encode_object(&obj, b"s", 8, 10);
+        let mut dec = OuterDecoder::new(8);
+        assert!(dec.push(&chunks[0].bytes));
+        assert!(!dec.push(&chunks[0].bytes));
+        assert_eq!(dec.rank(), 1);
+    }
+
+    #[test]
+    fn object_id_wire_roundtrip() {
+        use crate::wire::{Decode, Encode};
+        let obj = rand_obj(32, 100);
+        let (id, _) = encode_object(&obj, b"s", 8, 10);
+        let got = ObjectId::from_bytes(&id.to_bytes()).unwrap();
+        assert_eq!(got, id);
+    }
+}
+
+impl OuterDecoder {
+    /// Test/debug introspection.
+    pub fn debug_pivots(&self) -> Vec<Option<usize>> {
+        self.pivot.clone()
+    }
+}

@@ -1,0 +1,88 @@
+//! XOR hot loops — the innermost operation of the GF(2) fountain code.
+//!
+//! `xor_into` is on the per-fragment encode/decode/repair path; it works
+//! u64-wide with an unrolled main loop so the compiler autovectorizes.
+
+/// dst ^= src (lengths must match).
+pub fn xor_into(dst: &mut [u8], src: &[u8]) {
+    assert_eq!(dst.len(), src.len());
+    // u64-wide main loop.
+    let n = dst.len() / 8;
+    let (d_head, d_tail) = dst.split_at_mut(n * 8);
+    let (s_head, s_tail) = src.split_at(n * 8);
+    // Unroll by 4 words (32 bytes) — matches one AVX2 lane pair.
+    let mut i = 0;
+    while i + 32 <= d_head.len() {
+        for j in (i..i + 32).step_by(8) {
+            let d = u64::from_ne_bytes(d_head[j..j + 8].try_into().unwrap());
+            let s = u64::from_ne_bytes(s_head[j..j + 8].try_into().unwrap());
+            d_head[j..j + 8].copy_from_slice(&(d ^ s).to_ne_bytes());
+        }
+        i += 32;
+    }
+    while i + 8 <= d_head.len() {
+        let d = u64::from_ne_bytes(d_head[i..i + 8].try_into().unwrap());
+        let s = u64::from_ne_bytes(s_head[i..i + 8].try_into().unwrap());
+        d_head[i..i + 8].copy_from_slice(&(d ^ s).to_ne_bytes());
+        i += 8;
+    }
+    for (d, s) in d_tail.iter_mut().zip(s_tail) {
+        *d ^= s;
+    }
+}
+
+/// out = XOR of the rows of `src` selected by `mask` (one bit per row).
+/// `src` is a flat row-major [rows × row_len] buffer.
+pub fn xor_select(out: &mut [u8], src: &[u8], row_len: usize, mask: impl Iterator<Item = usize>) {
+    out.fill(0);
+    for row in mask {
+        let start = row * row_len;
+        xor_into(out, &src[start..start + row_len]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn xor_into_matches_naive() {
+        let mut rng = Rng::new(50);
+        for len in [0usize, 1, 7, 8, 9, 31, 32, 33, 100, 4096, 4097] {
+            let mut a = vec![0u8; len];
+            let mut b = vec![0u8; len];
+            rng.fill_bytes(&mut a);
+            rng.fill_bytes(&mut b);
+            let want: Vec<u8> = a.iter().zip(&b).map(|(x, y)| x ^ y).collect();
+            xor_into(&mut a, &b);
+            assert_eq!(a, want, "len={len}");
+        }
+    }
+
+    #[test]
+    fn xor_into_is_involution() {
+        let mut rng = Rng::new(51);
+        let mut a = vec![0u8; 1000];
+        let b = {
+            let mut b = vec![0u8; 1000];
+            rng.fill_bytes(&mut b);
+            b
+        };
+        let orig = a.clone();
+        xor_into(&mut a, &b);
+        xor_into(&mut a, &b);
+        assert_eq!(a, orig);
+    }
+
+    #[test]
+    fn xor_select_basic() {
+        let row_len = 16;
+        let src: Vec<u8> = (0..4 * row_len).map(|i| i as u8).collect();
+        let mut out = vec![0u8; row_len];
+        xor_select(&mut out, &src, row_len, [0usize, 2].into_iter());
+        for i in 0..row_len {
+            assert_eq!(out[i], src[i] ^ src[2 * row_len + i]);
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! Cluster orchestration: spawn a network, drive client workloads,
+//! inject churn/attacks, and collect latency/throughput measurements.
+//!
+//! This is the embedding layer the examples and §6.2 benches use —
+//! the equivalent of the paper's EC2 deployment driver, but pointed at
+//! the virtual-time [`SimNet`].
+
+pub mod workload;
+
+use crate::codec::ObjectId;
+use crate::net::simnet::{SimNet, SimOpts};
+use crate::proto::{AppEvent, VaultConfig};
+use crate::util::rng::Rng;
+
+/// How the cluster is shaped.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub peers: usize,
+    pub seed: u64,
+    pub vault: VaultConfig,
+    pub sim: SimOpts,
+    /// Fraction of peers behaving Byzantine (Fig. 6 top).
+    pub byzantine_frac: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            peers: 64,
+            seed: 7,
+            vault: VaultConfig::default(),
+            sim: SimOpts::default(),
+            byzantine_frac: 0.0,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Down-scaled coding parameters for small test clusters (groups
+    /// must fit the population).
+    pub fn small_test(peers: usize) -> Self {
+        let vault = VaultConfig {
+            k_inner: 8,
+            r_inner: 20,
+            k_outer: 4,
+            n_outer: 5,
+            candidates: peers.min(60),
+            fetch_fanout: 12,
+            n_nodes: peers,
+            ..Default::default()
+        };
+        ClusterConfig { peers, vault, ..Default::default() }
+    }
+}
+
+/// Outcome of a blocking client operation (latency is virtual time).
+#[derive(Debug)]
+pub struct OpResult<T> {
+    pub value: T,
+    pub latency_ms: u64,
+}
+
+pub struct Cluster {
+    pub net: SimNet,
+    rng: Rng,
+    cfg: ClusterConfig,
+}
+
+impl Cluster {
+    pub fn start(cfg: ClusterConfig) -> Cluster {
+        let mut vault = cfg.vault.clone();
+        vault.n_nodes = cfg.peers;
+        let mut sim = cfg.sim.clone();
+        sim.seed = cfg.seed;
+        let mut net = SimNet::new(vault, cfg.peers, sim);
+        let mut rng = Rng::new(cfg.seed ^ 0xC0FFEE);
+        if cfg.byzantine_frac > 0.0 {
+            let n_byz = (cfg.peers as f64 * cfg.byzantine_frac) as usize;
+            for i in rng.sample_indices(cfg.peers, n_byz) {
+                net.peer_mut(i).cfg.byzantine = true;
+            }
+        }
+        Cluster { net, rng, cfg }
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// A uniformly random live peer index to act as client.
+    pub fn random_client(&mut self) -> usize {
+        loop {
+            let i = self.rng.range(0, self.net.len());
+            if self.net.is_up(i) && !self.net.peer(i).cfg.byzantine {
+                return i;
+            }
+        }
+    }
+
+    /// STORE and advance virtual time until completion.
+    pub fn store_blocking(
+        &mut self,
+        client: usize,
+        object: &[u8],
+        secret: &[u8],
+        expires_ms: u64,
+    ) -> Result<OpResult<ObjectId>, String> {
+        let op = self.net.store(client, object, secret, expires_ms);
+        let node = self.net.peer(client).info.id;
+        let deadline = self.net.now_ms() + self.net.peer(client).cfg.op_deadline_ms + 10_000;
+        match self.net.run_until_op_from(node, op, deadline) {
+            Some(AppEvent::StoreDone { id, latency_ms, .. }) => {
+                Ok(OpResult { value: id, latency_ms })
+            }
+            Some(AppEvent::OpFailed { reason, .. }) => Err(reason),
+            other => Err(format!("store did not complete: {other:?}")),
+        }
+    }
+
+    /// QUERY and advance virtual time until completion.
+    pub fn query_blocking(
+        &mut self,
+        client: usize,
+        id: &ObjectId,
+    ) -> Result<OpResult<Vec<u8>>, String> {
+        let op = self.net.query(client, id);
+        let node = self.net.peer(client).info.id;
+        let deadline = self.net.now_ms() + self.net.peer(client).cfg.op_deadline_ms + 10_000;
+        match self.net.run_until_op_from(node, op, deadline) {
+            Some(AppEvent::QueryDone { data, latency_ms, .. }) => {
+                Ok(OpResult { value: data, latency_ms })
+            }
+            Some(AppEvent::OpFailed { reason, .. }) => Err(reason),
+            other => Err(format!("query did not complete: {other:?}")),
+        }
+    }
+
+    /// Kill `n` random live peers and join `n` fresh ones — one churn
+    /// step. Returns the killed indices.
+    pub fn churn(&mut self, n: usize) -> Vec<usize> {
+        let mut killed = Vec::with_capacity(n);
+        for _ in 0..n {
+            for _ in 0..self.net.len() * 2 {
+                let i = self.rng.range(0, self.net.len());
+                if self.net.is_up(i) {
+                    self.net.kill(i);
+                    killed.push(i);
+                    break;
+                }
+            }
+            let region = (self.rng.range(0, self.cfg.sim.regions.max(1))) as u8;
+            self.net.spawn_peer(region);
+        }
+        killed
+    }
+
+    /// Launch a targeted attack on `n` random live peers (Fig. 6 bottom).
+    pub fn attack_random(&mut self, n: usize) -> Vec<usize> {
+        let mut hit = Vec::with_capacity(n);
+        for _ in 0..n {
+            for _ in 0..self.net.len() * 2 {
+                let i = self.rng.range(0, self.net.len());
+                if self.net.is_up(i) {
+                    self.net.attack(i);
+                    hit.push(i);
+                    break;
+                }
+            }
+        }
+        hit
+    }
+
+    /// Kill the first live holder of a fragment of `chash` — the §6.2
+    /// repair-latency trigger ("force nodes to evict the oldest member
+    /// that stores the chunk").
+    pub fn evict_one_member(&mut self, chash: &crate::crypto::Hash256) -> Option<usize> {
+        let holder = (0..self.net.len())
+            .find(|&i| self.net.is_up(i) && self.net.peer(i).fragment_index(chash).is_some())?;
+        self.net.kill(holder);
+        Some(holder)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_store_query_roundtrip() {
+        let mut cluster = Cluster::start(ClusterConfig::small_test(48));
+        let obj: Vec<u8> = (0..20_000u32).map(|i| (i * 7) as u8).collect();
+        let stored = cluster.store_blocking(0, &obj, b"secret", 0).expect("store");
+        assert_eq!(stored.value.chunks.len(), 5);
+        assert!(stored.latency_ms > 0);
+        let got = cluster.query_blocking(5, &stored.value).expect("query");
+        assert_eq!(got.value, obj);
+    }
+
+    #[test]
+    fn groups_reach_target_size() {
+        let mut cluster = Cluster::start(ClusterConfig::small_test(48));
+        let obj = vec![42u8; 10_000];
+        let stored = cluster.store_blocking(1, &obj, b"s", 0).expect("store");
+        for chash in &stored.value.chunks {
+            let survivors = cluster.net.surviving_fragments(chash);
+            assert!(
+                survivors >= cluster.config().vault.r_inner,
+                "group for {chash:?} has {survivors} members"
+            );
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! Fixed-width big integers (U256/U512) for scalar arithmetic mod the
+//! Ed25519 group order `l`. Simplicity over speed: products go through
+//! schoolbook multiplication and reduction through binary long division.
+//! Scalar ops are not on the fragment hot path (field arithmetic in
+//! [`super::fe`] has its own fast limb representation).
+
+/// 256-bit unsigned integer, little-endian u64 limbs.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct U256(pub [u64; 4]);
+
+/// 512-bit unsigned integer, little-endian u64 limbs.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct U512(pub [u64; 8]);
+
+impl U256 {
+    pub const ZERO: U256 = U256([0; 4]);
+    pub const ONE: U256 = U256([1, 0, 0, 0]);
+
+    pub fn from_u64(v: u64) -> Self {
+        U256([v, 0, 0, 0])
+    }
+
+    pub fn from_le_bytes(b: &[u8; 32]) -> Self {
+        let mut limbs = [0u64; 4];
+        for (i, limb) in limbs.iter_mut().enumerate() {
+            *limb = u64::from_le_bytes(b[i * 8..(i + 1) * 8].try_into().unwrap());
+        }
+        U256(limbs)
+    }
+
+    pub fn to_le_bytes(&self) -> [u8; 32] {
+        let mut out = [0u8; 32];
+        for (i, limb) in self.0.iter().enumerate() {
+            out[i * 8..(i + 1) * 8].copy_from_slice(&limb.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.0 == [0; 4]
+    }
+
+    pub fn bit(&self, i: usize) -> bool {
+        (self.0[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Index of highest set bit plus one (0 for zero).
+    pub fn bits(&self) -> usize {
+        for i in (0..4).rev() {
+            if self.0[i] != 0 {
+                return i * 64 + (64 - self.0[i].leading_zeros() as usize);
+            }
+        }
+        0
+    }
+
+    pub fn cmp_u(&self, other: &U256) -> std::cmp::Ordering {
+        for i in (0..4).rev() {
+            match self.0[i].cmp(&other.0[i]) {
+                std::cmp::Ordering::Equal => continue,
+                ord => return ord,
+            }
+        }
+        std::cmp::Ordering::Equal
+    }
+
+    pub fn lt(&self, other: &U256) -> bool {
+        self.cmp_u(other) == std::cmp::Ordering::Less
+    }
+
+    pub fn add_carry(&self, other: &U256) -> (U256, bool) {
+        let mut out = [0u64; 4];
+        let mut carry = 0u64;
+        for i in 0..4 {
+            let (s1, c1) = self.0[i].overflowing_add(other.0[i]);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out[i] = s2;
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        (U256(out), carry != 0)
+    }
+
+    pub fn sub_borrow(&self, other: &U256) -> (U256, bool) {
+        let mut out = [0u64; 4];
+        let mut borrow = 0u64;
+        for i in 0..4 {
+            let (d1, b1) = self.0[i].overflowing_sub(other.0[i]);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            out[i] = d2;
+            borrow = (b1 as u64) + (b2 as u64);
+        }
+        (U256(out), borrow != 0)
+    }
+
+    /// Full 256x256 -> 512 schoolbook product.
+    pub fn mul_wide(&self, other: &U256) -> U512 {
+        let mut out = [0u64; 8];
+        for i in 0..4 {
+            let mut carry = 0u128;
+            for j in 0..4 {
+                let cur = out[i + j] as u128
+                    + (self.0[i] as u128) * (other.0[j] as u128)
+                    + carry;
+                out[i + j] = cur as u64;
+                carry = cur >> 64;
+            }
+            out[i + 4] = carry as u64;
+        }
+        U512(out)
+    }
+
+    /// `(self + other) mod m` — requires self, other < m.
+    pub fn add_mod(&self, other: &U256, m: &U256) -> U256 {
+        let (sum, carry) = self.add_carry(other);
+        if carry || !sum.lt(m) {
+            sum.sub_borrow(m).0
+        } else {
+            sum
+        }
+    }
+
+    /// `(self - other) mod m` — requires self, other < m.
+    pub fn sub_mod(&self, other: &U256, m: &U256) -> U256 {
+        let (diff, borrow) = self.sub_borrow(other);
+        if borrow {
+            diff.add_carry(m).0
+        } else {
+            diff
+        }
+    }
+
+    /// `(self * other) mod m`.
+    pub fn mul_mod(&self, other: &U256, m: &U256) -> U256 {
+        self.mul_wide(other).reduce_mod(m)
+    }
+}
+
+impl U512 {
+    pub fn from_le_bytes(b: &[u8; 64]) -> Self {
+        let mut limbs = [0u64; 8];
+        for (i, limb) in limbs.iter_mut().enumerate() {
+            *limb = u64::from_le_bytes(b[i * 8..(i + 1) * 8].try_into().unwrap());
+        }
+        U512(limbs)
+    }
+
+    pub fn bit(&self, i: usize) -> bool {
+        (self.0[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    pub fn bits(&self) -> usize {
+        for i in (0..8).rev() {
+            if self.0[i] != 0 {
+                return i * 64 + (64 - self.0[i].leading_zeros() as usize);
+            }
+        }
+        0
+    }
+
+    /// Binary long-division remainder: `self mod m`.
+    pub fn reduce_mod(&self, m: &U256) -> U256 {
+        assert!(!m.is_zero());
+        let mut r = U256::ZERO;
+        for i in (0..self.bits()).rev() {
+            // r = (r << 1) | bit(i); r < 2m after shift since r < m before.
+            let mut carry = (self.bit(i)) as u64;
+            for limb in r.0.iter_mut() {
+                let hi = *limb >> 63;
+                *limb = (*limb << 1) | carry;
+                carry = hi;
+            }
+            // carry can only be set if r had bit 255 set, i.e. r >= 2^255;
+            // since m < 2^256 and r < m before the shift, shifted r < 2^257.
+            if carry != 0 || !r.lt(m) {
+                r = r.sub_borrow(m).0;
+            }
+            if !r.lt(m) {
+                r = r.sub_borrow(m).0;
+            }
+        }
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_u256(rng: &mut Rng) -> U256 {
+        U256([rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()])
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let a = rand_u256(&mut rng);
+            let b = rand_u256(&mut rng);
+            let (sum, carry) = a.add_carry(&b);
+            let (back, borrow) = sum.sub_borrow(&b);
+            assert_eq!(back, a);
+            assert_eq!(carry, borrow);
+        }
+    }
+
+    #[test]
+    fn mul_wide_small_values() {
+        let a = U256::from_u64(0xFFFF_FFFF_FFFF_FFFF);
+        let b = U256::from_u64(2);
+        let p = a.mul_wide(&b);
+        assert_eq!(p.0[0], 0xFFFF_FFFF_FFFF_FFFE);
+        assert_eq!(p.0[1], 1);
+    }
+
+    #[test]
+    fn reduce_mod_matches_u128_model() {
+        let mut rng = Rng::new(2);
+        for _ in 0..300 {
+            let a = (rng.next_u64() as u128) << 64 | rng.next_u64() as u128;
+            let m = (rng.next_u64() as u128).max(1);
+            let a256 = U256([(a & u64::MAX as u128) as u64, (a >> 64) as u64, 0, 0]);
+            let wide = a256.mul_wide(&U256::ONE);
+            let got = wide.reduce_mod(&U256::from_u64(m as u64));
+            assert_eq!(got.0[0] as u128, a % m);
+            assert_eq!(got.0[1], 0);
+        }
+    }
+
+    #[test]
+    fn mul_mod_commutes_and_distributes() {
+        let mut rng = Rng::new(3);
+        // l = ed25519 group order
+        let l = U256::from_le_bytes(&{
+            let mut b = [0u8; 32];
+            b[..16].copy_from_slice(&[
+                0xed, 0xd3, 0xf5, 0x5c, 0x1a, 0x63, 0x12, 0x58, 0xd6, 0x9c, 0xf7, 0xa2, 0xde,
+                0xf9, 0xde, 0x14,
+            ]);
+            b[31] = 0x10;
+            b
+        });
+        for _ in 0..50 {
+            let a = rand_u256(&mut rng).mul_wide(&U256::ONE).reduce_mod(&l);
+            let b = rand_u256(&mut rng).mul_wide(&U256::ONE).reduce_mod(&l);
+            let c = rand_u256(&mut rng).mul_wide(&U256::ONE).reduce_mod(&l);
+            assert_eq!(a.mul_mod(&b, &l), b.mul_mod(&a, &l));
+            // a*(b+c) == a*b + a*c  (mod l)
+            let lhs = a.mul_mod(&b.add_mod(&c, &l), &l);
+            let rhs = a.mul_mod(&b, &l).add_mod(&a.mul_mod(&c, &l), &l);
+            assert_eq!(lhs, rhs);
+        }
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let a = rand_u256(&mut rng);
+            assert_eq!(U256::from_le_bytes(&a.to_le_bytes()), a);
+        }
+    }
+
+    #[test]
+    fn bits_counts() {
+        assert_eq!(U256::ZERO.bits(), 0);
+        assert_eq!(U256::ONE.bits(), 1);
+        assert_eq!(U256::from_u64(0x8000_0000_0000_0000).bits(), 64);
+        assert_eq!(U256([0, 1, 0, 0]).bits(), 65);
+    }
+}

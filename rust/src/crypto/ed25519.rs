@@ -1,0 +1,222 @@
+//! Ed25519 signatures (RFC 8032) on top of [`super::fe`]/[`super::point`].
+//!
+//! Persistence claims in chunk-group heartbeats are signed with this
+//! (paper §5: "persistence claim's signature use ed25519 curve").
+
+use super::bigint::{U256, U512};
+use super::point::Point;
+use sha2::{Digest, Sha512};
+
+/// Group order l = 2^252 + 27742317777372353535851937790883648493,
+/// little-endian bytes.
+pub fn group_order_bytes() -> [u8; 32] {
+    let mut b = [0u8; 32];
+    b[..16].copy_from_slice(&[
+        0xed, 0xd3, 0xf5, 0x5c, 0x1a, 0x63, 0x12, 0x58, 0xd6, 0x9c, 0xf7, 0xa2, 0xde, 0xf9,
+        0xde, 0x14,
+    ]);
+    b[31] = 0x10;
+    b
+}
+
+pub fn group_order() -> U256 {
+    U256::from_le_bytes(&group_order_bytes())
+}
+
+/// Reduce a 64-byte hash to a scalar mod l.
+pub fn reduce_wide(bytes: &[u8; 64]) -> U256 {
+    U512::from_le_bytes(bytes).reduce_mod(&group_order())
+}
+
+/// Reduce 32 bytes mod l.
+pub fn reduce_32(bytes: &[u8; 32]) -> U256 {
+    let mut wide = [0u8; 64];
+    wide[..32].copy_from_slice(bytes);
+    reduce_wide(&wide)
+}
+
+/// RFC 8032 scalar clamp.
+pub fn clamp(mut b: [u8; 32]) -> [u8; 32] {
+    b[0] &= 248;
+    b[31] &= 127;
+    b[31] |= 64;
+    b
+}
+
+fn sha512(parts: &[&[u8]]) -> [u8; 64] {
+    let mut h = Sha512::new();
+    for p in parts {
+        h.update(p);
+    }
+    h.finalize().into()
+}
+
+/// An Ed25519 signing key expanded from a 32-byte seed.
+#[derive(Clone)]
+pub struct SigningKey {
+    /// Clamped secret scalar `a`.
+    pub scalar: U256,
+    /// Nonce-derivation prefix (second half of SHA-512(seed)).
+    pub prefix: [u8; 32],
+    /// Compressed public key `A = a·B`.
+    pub public: [u8; 32],
+}
+
+impl SigningKey {
+    pub fn from_seed(seed: &[u8; 32]) -> SigningKey {
+        let h = sha512(&[seed]);
+        let mut scalar_bytes = [0u8; 32];
+        scalar_bytes.copy_from_slice(&h[..32]);
+        let scalar_bytes = clamp(scalar_bytes);
+        let mut prefix = [0u8; 32];
+        prefix.copy_from_slice(&h[32..]);
+        // The clamped scalar is < 2^255; reduce mod l for point math.
+        let scalar_raw = U256::from_le_bytes(&scalar_bytes);
+        let public = Point::mul_base(&scalar_raw).compress();
+        // Keep the *unreduced* clamped scalar semantics by reducing mod l
+        // (identical point: l·B = identity).
+        let scalar = reduce_32(&scalar_bytes);
+        SigningKey { scalar, prefix, public }
+    }
+
+    pub fn sign(&self, msg: &[u8]) -> [u8; 64] {
+        let r = reduce_wide(&sha512(&[&self.prefix, msg]));
+        let r_point = Point::mul_base(&r).compress();
+        let k = reduce_wide(&sha512(&[&r_point, &self.public, msg]));
+        let l = group_order();
+        let s = r.add_mod(&k.mul_mod(&self.scalar, &l), &l);
+        let mut sig = [0u8; 64];
+        sig[..32].copy_from_slice(&r_point);
+        sig[32..].copy_from_slice(&s.to_le_bytes());
+        sig
+    }
+}
+
+/// Verify an Ed25519 signature. Checks `s < l`, valid `R`/`A` encodings,
+/// and `s·B == R + k·A`.
+pub fn verify(public: &[u8; 32], msg: &[u8], sig: &[u8; 64]) -> bool {
+    let mut r_enc = [0u8; 32];
+    r_enc.copy_from_slice(&sig[..32]);
+    let mut s_enc = [0u8; 32];
+    s_enc.copy_from_slice(&sig[32..]);
+    let s = U256::from_le_bytes(&s_enc);
+    if !s.lt(&group_order()) {
+        return false; // malleability check
+    }
+    let a = match Point::decompress(public) {
+        Some(p) => p,
+        None => return false,
+    };
+    let r = match Point::decompress(&r_enc) {
+        Some(p) => p,
+        None => return false,
+    };
+    let k = reduce_wide(&sha512(&[&r_enc, public, msg]));
+    let lhs = Point::mul_base(&s);
+    let rhs = r.add(&a.mul_scalar(&k));
+    lhs.eq_point(&rhs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util;
+    use crate::util::rng::Rng;
+
+    /// RFC 8032 test vector 1 (empty message).
+    #[test]
+    fn rfc8032_vector_1() {
+        let seed: [u8; 32] = util::unhex(
+            "9d61b19deffd5a60ba844af492ec2cc44449c5697b326919703bac031cae7f60",
+        )
+        .unwrap()
+        .try_into()
+        .unwrap();
+        let sk = SigningKey::from_seed(&seed);
+        assert_eq!(
+            util::hex(&sk.public),
+            "d75a980182b10ab7d54bfed3c964073a0ee172f3daa62325af021a68f707511a"
+        );
+        let sig = sk.sign(b"");
+        assert_eq!(
+            util::hex(&sig),
+            "e5564300c360ac729086e2cc806e828a84877f1eb8e5d974d873e06522490155\
+             5fb8821590a33bacc61e39701cf9b46bd25bf5f0595bbe24655141438e7a100b"
+        );
+        assert!(verify(&sk.public, b"", &sig));
+    }
+
+    /// RFC 8032 test vector 2 (one-byte message 0x72).
+    #[test]
+    fn rfc8032_vector_2() {
+        let seed: [u8; 32] = util::unhex(
+            "4ccd089b28ff96da9db6c346ec114e0f5b8a319f35aba624da8cf6ed4fb8a6fb",
+        )
+        .unwrap()
+        .try_into()
+        .unwrap();
+        let sk = SigningKey::from_seed(&seed);
+        assert_eq!(
+            util::hex(&sk.public),
+            "3d4017c3e843895a92b70aa74d1b7ebc9c982ccf2ec4968cc0cd55f12af4660c"
+        );
+        let sig = sk.sign(&[0x72]);
+        assert!(verify(&sk.public, &[0x72], &sig));
+    }
+
+    #[test]
+    fn sign_verify_roundtrip_random() {
+        let mut rng = Rng::new(31);
+        for _ in 0..6 {
+            let mut seed = [0u8; 32];
+            rng.fill_bytes(&mut seed);
+            let sk = SigningKey::from_seed(&seed);
+            let mut msg = vec![0u8; rng.range(0, 200)];
+            rng.fill_bytes(&mut msg);
+            let sig = sk.sign(&msg);
+            assert!(verify(&sk.public, &msg, &sig));
+        }
+    }
+
+    #[test]
+    fn tampered_message_rejected() {
+        let sk = SigningKey::from_seed(&[7u8; 32]);
+        let sig = sk.sign(b"hello");
+        assert!(!verify(&sk.public, b"hello!", &sig));
+    }
+
+    #[test]
+    fn tampered_signature_rejected() {
+        let sk = SigningKey::from_seed(&[8u8; 32]);
+        let mut sig = sk.sign(b"msg");
+        sig[5] ^= 1;
+        assert!(!verify(&sk.public, b"msg", &sig));
+        let mut sig2 = sk.sign(b"msg");
+        sig2[40] ^= 1; // corrupt s
+        assert!(!verify(&sk.public, b"msg", &sig2));
+    }
+
+    #[test]
+    fn wrong_key_rejected() {
+        let sk1 = SigningKey::from_seed(&[9u8; 32]);
+        let sk2 = SigningKey::from_seed(&[10u8; 32]);
+        let sig = sk1.sign(b"msg");
+        assert!(!verify(&sk2.public, b"msg", &sig));
+    }
+
+    #[test]
+    fn high_s_rejected() {
+        // Forge s' = s + l: must be rejected by the s < l check.
+        let sk = SigningKey::from_seed(&[11u8; 32]);
+        let sig = sk.sign(b"m");
+        let mut s_enc = [0u8; 32];
+        s_enc.copy_from_slice(&sig[32..]);
+        let s = U256::from_le_bytes(&s_enc);
+        let (s_plus_l, overflow) = s.add_carry(&group_order());
+        if !overflow {
+            let mut forged = sig;
+            forged[32..].copy_from_slice(&s_plus_l.to_le_bytes());
+            assert!(!verify(&sk.public, b"m", &forged));
+        }
+    }
+}

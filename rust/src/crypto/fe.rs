@@ -1,0 +1,347 @@
+//! Field arithmetic modulo p = 2^255 - 19, the Curve25519 base field.
+//!
+//! Radix-2^51 representation (5 × 51-bit limbs, u128 accumulation) —
+//! the classic "donna"/ref10 layout. This is the hot arithmetic under
+//! Ed25519/VRF selection proofs, so unlike [`super::bigint`] it avoids
+//! generic division entirely.
+
+/// Field element; limbs are kept loosely reduced (< 2^52) between ops,
+/// fully canonicalized only in `to_bytes`.
+#[derive(Clone, Copy, Debug)]
+pub struct Fe(pub [u64; 5]);
+
+const MASK: u64 = (1u64 << 51) - 1;
+
+impl Fe {
+    pub const ZERO: Fe = Fe([0; 5]);
+    pub const ONE: Fe = Fe([1, 0, 0, 0, 0]);
+
+    pub fn from_u64(v: u64) -> Fe {
+        Fe([v & MASK, v >> 51, 0, 0, 0])
+    }
+
+    /// Parse 32 little-endian bytes; the top bit is ignored (as in
+    /// RFC 8032 point decoding).
+    pub fn from_bytes(b: &[u8; 32]) -> Fe {
+        let load = |i: usize| -> u64 {
+            let mut v = [0u8; 8];
+            v.copy_from_slice(&b[i..i + 8]);
+            u64::from_le_bytes(v)
+        };
+        let mut out = [0u64; 5];
+        out[0] = load(0) & MASK;
+        out[1] = (load(6) >> 3) & MASK;
+        out[2] = (load(12) >> 6) & MASK;
+        out[3] = (load(19) >> 1) & MASK;
+        out[4] = (load(24) >> 12) & ((1u64 << 51) - 1) & MASK;
+        // top bit (bit 255) dropped by the final mask
+        Fe(out)
+    }
+
+    /// Serialize to canonical 32 little-endian bytes (value fully reduced
+    /// into [0, p)).
+    pub fn to_bytes(&self) -> [u8; 32] {
+        let mut t = self.carried().0;
+        // After carrying, value < 2^255 + small; subtract p up to twice.
+        for _ in 0..2 {
+            // compute t - p; p = 2^255 - 19
+            let mut borrow: i128 = 0;
+            let p = [MASK - 18, MASK, MASK, MASK, MASK]; // p in radix 2^51
+            let mut d = [0u64; 5];
+            let mut neg = false;
+            for i in 0..5 {
+                let v = t[i] as i128 - p[i] as i128 - borrow;
+                if v < 0 {
+                    d[i] = (v + (1i128 << 51)) as u64;
+                    borrow = 1;
+                } else {
+                    d[i] = v as u64;
+                    borrow = 0;
+                }
+            }
+            if borrow != 0 {
+                neg = true;
+            }
+            if !neg {
+                t = d;
+            }
+        }
+        let mut out = [0u8; 32];
+        let mut acc: u128 = 0;
+        let mut acc_bits = 0u32;
+        let mut idx = 0;
+        for (i, &limb) in t.iter().enumerate() {
+            acc |= (limb as u128) << acc_bits;
+            acc_bits += 51;
+            let _ = i;
+            while acc_bits >= 8 && idx < 32 {
+                out[idx] = acc as u8;
+                acc >>= 8;
+                acc_bits -= 8;
+                idx += 1;
+            }
+        }
+        while idx < 32 {
+            out[idx] = acc as u8;
+            acc >>= 8;
+            idx += 1;
+        }
+        out
+    }
+
+    /// Propagate carries so every limb fits in 51 bits.
+    pub fn carried(&self) -> Fe {
+        let mut t = self.0;
+        // Two passes handle any loosely-reduced input produced by our ops.
+        for _ in 0..2 {
+            let mut carry: u64;
+            for i in 0..4 {
+                carry = t[i] >> 51;
+                t[i] &= MASK;
+                t[i + 1] += carry;
+            }
+            carry = t[4] >> 51;
+            t[4] &= MASK;
+            t[0] += carry * 19;
+        }
+        Fe(t)
+    }
+
+    pub fn add(&self, o: &Fe) -> Fe {
+        let mut t = [0u64; 5];
+        for i in 0..5 {
+            t[i] = self.0[i] + o.0[i];
+        }
+        Fe(t).carried()
+    }
+
+    pub fn sub(&self, o: &Fe) -> Fe {
+        // Add 2p (in radix form, each limb scaled) to stay non-negative.
+        let mut t = [0u64; 5];
+        let two_p = [2 * (MASK - 18), 2 * MASK, 2 * MASK, 2 * MASK, 2 * MASK];
+        for i in 0..5 {
+            t[i] = self.0[i] + two_p[i] - o.0[i];
+        }
+        Fe(t).carried()
+    }
+
+    pub fn neg(&self) -> Fe {
+        Fe::ZERO.sub(self)
+    }
+
+    pub fn mul(&self, o: &Fe) -> Fe {
+        let a = self.carried().0;
+        let b = o.carried().0;
+        let b1_19 = b[1] * 19;
+        let b2_19 = b[2] * 19;
+        let b3_19 = b[3] * 19;
+        let b4_19 = b[4] * 19;
+        let m = |x: u64, y: u64| -> u128 { (x as u128) * (y as u128) };
+        let mut r = [0u128; 5];
+        r[0] = m(a[0], b[0]) + m(a[1], b4_19) + m(a[2], b3_19) + m(a[3], b2_19) + m(a[4], b1_19);
+        r[1] = m(a[0], b[1]) + m(a[1], b[0]) + m(a[2], b4_19) + m(a[3], b3_19) + m(a[4], b2_19);
+        r[2] = m(a[0], b[2]) + m(a[1], b[1]) + m(a[2], b[0]) + m(a[3], b4_19) + m(a[4], b3_19);
+        r[3] = m(a[0], b[3]) + m(a[1], b[2]) + m(a[2], b[1]) + m(a[3], b[0]) + m(a[4], b4_19);
+        r[4] = m(a[0], b[4]) + m(a[1], b[3]) + m(a[2], b[2]) + m(a[3], b[1]) + m(a[4], b[0]);
+
+        let mut t = [0u64; 5];
+        let mut carry: u128 = 0;
+        for i in 0..5 {
+            let v = r[i] + carry;
+            t[i] = (v as u64) & MASK;
+            carry = v >> 51;
+        }
+        t[0] += (carry as u64) * 19;
+        Fe(t).carried()
+    }
+
+    pub fn square(&self) -> Fe {
+        self.mul(self)
+    }
+
+    /// Exponentiation by a little-endian byte exponent (square & multiply).
+    pub fn pow_bytes(&self, exp_le: &[u8; 32]) -> Fe {
+        let mut result = Fe::ONE;
+        let base = self.carried();
+        // MSB-first over 256 bits.
+        for i in (0..256).rev() {
+            result = result.square();
+            if (exp_le[i / 8] >> (i % 8)) & 1 == 1 {
+                result = result.mul(&base);
+            }
+        }
+        result
+    }
+
+    /// Multiplicative inverse via Fermat: self^(p-2).
+    pub fn invert(&self) -> Fe {
+        self.pow_bytes(&exp_p_minus(21)) // p-2 = 2^255 - 21
+    }
+
+    /// self^((p-5)/8) — the core of the square-root computation.
+    pub fn pow_p58(&self) -> Fe {
+        // (p-5)/8 = (2^255 - 24)/8 = 2^252 - 3
+        let mut e = [0xffu8; 32];
+        e[0] = 0xfd;
+        e[31] = 0x0f;
+        self.pow_bytes(&e)
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.to_bytes() == [0u8; 32]
+    }
+
+    /// "Negative" per RFC 8032: lowest bit of the canonical encoding.
+    pub fn is_negative(&self) -> bool {
+        self.to_bytes()[0] & 1 == 1
+    }
+
+    pub fn eq_ct(&self, o: &Fe) -> bool {
+        self.to_bytes() == o.to_bytes()
+    }
+
+    /// sqrt(-1) = 2^((p-1)/4), memoized.
+    pub fn sqrt_m1() -> Fe {
+        use std::sync::OnceLock;
+        static CELL: OnceLock<[u64; 5]> = OnceLock::new();
+        Fe(*CELL.get_or_init(|| {
+            // (p-1)/4 = (2^255 - 20) / 4 = 2^253 - 5
+            let mut e = [0xffu8; 32];
+            e[0] = 0xfb;
+            e[31] = 0x1f;
+            Fe::from_u64(2).pow_bytes(&e).carried().0
+        }))
+    }
+
+    /// Square root of `u/v` if it exists (RFC 8032 decompression step).
+    /// Returns `(x, true)` with `v*x^2 == u`, or `(_, false)`.
+    pub fn sqrt_ratio(u: &Fe, v: &Fe) -> (Fe, bool) {
+        let v3 = v.square().mul(v);
+        let v7 = v3.square().mul(v);
+        let mut x = u.mul(&v3).mul(&u.mul(&v7).pow_p58());
+        let vx2 = v.mul(&x.square());
+        if vx2.eq_ct(u) {
+            return (x, true);
+        }
+        if vx2.eq_ct(&u.neg()) {
+            x = x.mul(&Fe::sqrt_m1());
+            return (x, true);
+        }
+        (x, false)
+    }
+}
+
+/// Exponent p - small = 2^255 - 19 - (small - 19), little-endian bytes.
+/// `exp_p_minus(21)` gives p-2, etc. `small` is the value subtracted from
+/// 2^255.
+fn exp_p_minus(small: u16) -> [u8; 32] {
+    // 2^255 - small for small < 256: low byte = 256 - (small & 0xff) with
+    // borrow into all-ones middle bytes and 0x7f top byte.
+    assert!(small >= 1 && small < 256);
+    let mut e = [0xffu8; 32];
+    e[0] = (256u16 - small) as u8;
+    e[31] = 0x7f;
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_fe(rng: &mut Rng) -> Fe {
+        let mut b = [0u8; 32];
+        rng.fill_bytes(&mut b);
+        b[31] &= 0x7f;
+        Fe::from_bytes(&b)
+    }
+
+    #[test]
+    fn bytes_roundtrip_canonical() {
+        let mut rng = Rng::new(10);
+        for _ in 0..200 {
+            let a = rand_fe(&mut rng);
+            let b = Fe::from_bytes(&a.to_bytes());
+            assert_eq!(a.to_bytes(), b.to_bytes());
+        }
+    }
+
+    #[test]
+    fn add_sub_inverse() {
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            let a = rand_fe(&mut rng);
+            let b = rand_fe(&mut rng);
+            assert_eq!(a.add(&b).sub(&b).to_bytes(), a.to_bytes());
+            assert_eq!(a.sub(&a).to_bytes(), [0u8; 32]);
+        }
+    }
+
+    #[test]
+    fn mul_commutative_associative_distributive() {
+        let mut rng = Rng::new(12);
+        for _ in 0..100 {
+            let a = rand_fe(&mut rng);
+            let b = rand_fe(&mut rng);
+            let c = rand_fe(&mut rng);
+            assert_eq!(a.mul(&b).to_bytes(), b.mul(&a).to_bytes());
+            assert_eq!(a.mul(&b).mul(&c).to_bytes(), a.mul(&b.mul(&c)).to_bytes());
+            assert_eq!(
+                a.mul(&b.add(&c)).to_bytes(),
+                a.mul(&b).add(&a.mul(&c)).to_bytes()
+            );
+        }
+    }
+
+    #[test]
+    fn invert_is_inverse() {
+        let mut rng = Rng::new(13);
+        for _ in 0..20 {
+            let a = rand_fe(&mut rng);
+            if a.is_zero() {
+                continue;
+            }
+            assert_eq!(a.mul(&a.invert()).to_bytes(), Fe::ONE.to_bytes());
+        }
+    }
+
+    #[test]
+    fn p_reduces_to_zero() {
+        // p = 2^255 - 19 encoded in bytes reduces to 0.
+        let mut p = [0xffu8; 32];
+        p[0] = 0xed;
+        p[31] = 0x7f;
+        assert!(Fe::from_bytes(&p).is_zero());
+        // p + 1 reduces to 1
+        let mut p1 = p;
+        p1[0] = 0xee;
+        assert_eq!(Fe::from_bytes(&p1).to_bytes(), Fe::ONE.to_bytes());
+    }
+
+    #[test]
+    fn sqrt_m1_squares_to_minus_one() {
+        let i = Fe::sqrt_m1();
+        assert_eq!(i.square().to_bytes(), Fe::ONE.neg().to_bytes());
+    }
+
+    #[test]
+    fn sqrt_ratio_roundtrip() {
+        let mut rng = Rng::new(14);
+        let mut found = 0;
+        for _ in 0..40 {
+            let x = rand_fe(&mut rng);
+            let u = x.square(); // guaranteed square
+            let (r, ok) = Fe::sqrt_ratio(&u, &Fe::ONE);
+            assert!(ok);
+            assert_eq!(r.square().to_bytes(), u.to_bytes());
+            found += 1;
+        }
+        assert!(found > 0);
+    }
+
+    #[test]
+    fn two_times_inverse_of_two_is_one() {
+        let two = Fe::from_u64(2);
+        assert_eq!(two.mul(&two.invert()).to_bytes(), Fe::ONE.to_bytes());
+    }
+}

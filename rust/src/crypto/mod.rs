@@ -1,0 +1,143 @@
+//! Cryptographic substrate: SHA-2 wrappers and hash-ring types, plus
+//! from-scratch Ed25519 and ECVRF (the offline build has no curve
+//! crates; see DESIGN.md §Substitutions).
+
+pub mod bigint;
+pub mod ed25519;
+pub mod fe;
+pub mod point;
+pub mod vrf;
+
+use crate::wire::{Decode, Encode, Reader, WireResult, Writer};
+use sha2::{Digest, Sha256};
+
+/// A 256-bit hash value — object IDs, chunk hashes, node IDs all live on
+/// this hash ring.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Hash256(pub [u8; 32]);
+
+impl Hash256 {
+    pub const ZERO: Hash256 = Hash256([0; 32]);
+
+    pub fn of(data: &[u8]) -> Hash256 {
+        Hash256(Sha256::digest(data).into())
+    }
+
+    pub fn of_parts(parts: &[&[u8]]) -> Hash256 {
+        let mut h = Sha256::new();
+        for p in parts {
+            h.update(p);
+        }
+        Hash256(h.finalize().into())
+    }
+
+    /// XOR metric (Kademlia distance).
+    pub fn xor(&self, other: &Hash256) -> Hash256 {
+        let mut out = [0u8; 32];
+        for i in 0..32 {
+            out[i] = self.0[i] ^ other.0[i];
+        }
+        Hash256(out)
+    }
+
+    /// Leading zero bits of the XOR distance — bucket index helper.
+    pub fn leading_zeros(&self) -> u32 {
+        let mut n = 0;
+        for &b in &self.0 {
+            if b == 0 {
+                n += 8;
+            } else {
+                n += b.leading_zeros();
+                break;
+            }
+        }
+        n
+    }
+
+    /// The top 128 bits as a u128 (big-endian interpretation) — used for
+    /// ring-distance arithmetic in the selection rule.
+    pub fn prefix_u128(&self) -> u128 {
+        u128::from_be_bytes(self.0[..16].try_into().unwrap())
+    }
+
+    pub fn to_hex(&self) -> String {
+        crate::util::hex(&self.0)
+    }
+
+    pub fn short(&self) -> String {
+        crate::util::hex(&self.0[..4])
+    }
+}
+
+impl std::fmt::Debug for Hash256 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Hash256({}..)", self.short())
+    }
+}
+
+impl std::fmt::Display for Hash256 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_hex())
+    }
+}
+
+impl Encode for Hash256 {
+    fn encode(&self, w: &mut Writer) {
+        w.bytes(&self.0);
+    }
+}
+
+impl Decode for Hash256 {
+    fn decode(r: &mut Reader<'_>) -> WireResult<Self> {
+        Ok(Hash256(<[u8; 32]>::decode(r)?))
+    }
+}
+
+/// SHA-512 convenience.
+pub fn sha512(parts: &[&[u8]]) -> [u8; 64] {
+    use sha2::Sha512;
+    let mut h = Sha512::new();
+    for p in parts {
+        h.update(p);
+    }
+    h.finalize().into()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sha256_known_vector() {
+        // SHA-256("abc")
+        assert_eq!(
+            Hash256::of(b"abc").to_hex(),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+    }
+
+    #[test]
+    fn of_parts_equals_concat() {
+        assert_eq!(Hash256::of_parts(&[b"ab", b"c"]), Hash256::of(b"abc"));
+    }
+
+    #[test]
+    fn xor_distance_properties() {
+        let a = Hash256::of(b"a");
+        let b = Hash256::of(b"b");
+        assert_eq!(a.xor(&a), Hash256::ZERO);
+        assert_eq!(a.xor(&b), b.xor(&a));
+        assert_eq!(a.xor(&Hash256::ZERO), a);
+    }
+
+    #[test]
+    fn leading_zeros() {
+        assert_eq!(Hash256::ZERO.leading_zeros(), 256);
+        let mut one = [0u8; 32];
+        one[0] = 0x80;
+        assert_eq!(Hash256(one).leading_zeros(), 0);
+        let mut small = [0u8; 32];
+        small[1] = 0x01;
+        assert_eq!(Hash256(small).leading_zeros(), 15);
+    }
+}

@@ -1,0 +1,292 @@
+//! Edwards25519 group operations (extended coordinates).
+//!
+//! Twisted Edwards curve `-x^2 + y^2 = 1 + d x^2 y^2` over GF(2^255-19)
+//! with `d = -121665/121666`. Points are `(X:Y:Z:T)` with `x = X/Z`,
+//! `y = Y/Z`, `xy = T/Z`. Formulas are the standard HWCD'08 unified
+//! add/double used by ref10. Scalar multiplication is plain
+//! double-and-add (variable time — selection proofs sign *public*
+//! protocol data; see module docs in [`super::vrf`]).
+
+use super::bigint::U256;
+use super::fe::Fe;
+use std::sync::OnceLock;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Point {
+    pub x: Fe,
+    pub y: Fe,
+    pub z: Fe,
+    pub t: Fe,
+}
+
+/// d = -121665/121666 (memoized).
+fn d() -> &'static Fe {
+    static CELL: OnceLock<Fe> = OnceLock::new();
+    CELL.get_or_init(|| Fe::from_u64(121665).neg().mul(&Fe::from_u64(121666).invert()))
+}
+
+/// 2d (memoized).
+fn d2() -> &'static Fe {
+    static CELL: OnceLock<Fe> = OnceLock::new();
+    CELL.get_or_init(|| {
+        let d = d();
+        d.add(d)
+    })
+}
+
+impl Point {
+    pub fn identity() -> Point {
+        Point { x: Fe::ZERO, y: Fe::ONE, z: Fe::ONE, t: Fe::ZERO }
+    }
+
+    /// The Ed25519 base point: y = 4/5, x recovered with even sign.
+    pub fn base() -> Point {
+        static CELL: OnceLock<Point> = OnceLock::new();
+        *CELL.get_or_init(|| {
+            let y = Fe::from_u64(4).mul(&Fe::from_u64(5).invert());
+            let mut enc = y.to_bytes();
+            enc[31] &= 0x7f; // sign bit 0
+            Point::decompress(&enc).expect("base point decompression")
+        })
+    }
+
+    /// Unified point addition (HWCD'08, a = -1, "add-2008-hwcd-3").
+    pub fn add(&self, o: &Point) -> Point {
+        let a = self.y.sub(&self.x).mul(&o.y.sub(&o.x));
+        let b = self.y.add(&self.x).mul(&o.y.add(&o.x));
+        let c = self.t.mul(d2()).mul(&o.t);
+        let dd = self.z.mul(&o.z);
+        let dd = dd.add(&dd);
+        let e = b.sub(&a);
+        let f = dd.sub(&c);
+        let g = dd.add(&c);
+        let h = b.add(&a);
+        Point { x: e.mul(&f), y: g.mul(&h), z: f.mul(&g), t: e.mul(&h) }
+    }
+
+    /// Dedicated doubling (HWCD'08 "dbl-2008-hwcd", a = -1).
+    pub fn double(&self) -> Point {
+        let a = self.x.square();
+        let b = self.y.square();
+        let c = self.z.square();
+        let c = c.add(&c);
+        let d = a.neg(); // a = -1
+        let e = self.x.add(&self.y).square().sub(&a).sub(&b);
+        let g = d.add(&b);
+        let f = g.sub(&c);
+        let h = d.sub(&b);
+        Point { x: e.mul(&f), y: g.mul(&h), z: f.mul(&g), t: e.mul(&h) }
+    }
+
+    pub fn neg(&self) -> Point {
+        Point { x: self.x.neg(), y: self.y, z: self.z, t: self.t.neg() }
+    }
+
+    /// Scalar multiplication, MSB-first double-and-add.
+    pub fn mul_scalar(&self, k: &U256) -> Point {
+        let mut acc = Point::identity();
+        let bits = k.bits();
+        for i in (0..bits).rev() {
+            acc = acc.double();
+            if k.bit(i) {
+                acc = acc.add(self);
+            }
+        }
+        acc
+    }
+
+    /// Fixed-base scalar multiplication: `k·B` via a once-computed table
+    /// of `2^i·B`, replacing 256 doublings with ~128 additions. This is
+    /// the hot operation of every signature and VRF proof (§Perf).
+    pub fn mul_base(k: &U256) -> Point {
+        static TABLE: OnceLock<Vec<Point>> = OnceLock::new();
+        let table = TABLE.get_or_init(|| {
+            let mut t = Vec::with_capacity(256);
+            let mut p = Point::base();
+            for _ in 0..256 {
+                t.push(p);
+                p = p.double();
+            }
+            t
+        });
+        let mut acc = Point::identity();
+        for i in 0..k.bits() {
+            if k.bit(i) {
+                acc = acc.add(&table[i]);
+            }
+        }
+        acc
+    }
+
+    /// Multiply by the cofactor 8 (torsion clearing in hash-to-curve).
+    pub fn mul_by_cofactor(&self) -> Point {
+        self.double().double().double()
+    }
+
+    /// Compress to the 32-byte RFC 8032 encoding.
+    pub fn compress(&self) -> [u8; 32] {
+        let zi = self.z.invert();
+        let x = self.x.mul(&zi);
+        let y = self.y.mul(&zi);
+        let mut out = y.to_bytes();
+        if x.is_negative() {
+            out[31] |= 0x80;
+        }
+        out
+    }
+
+    /// Decompress per RFC 8032 §5.1.3; `None` for invalid encodings.
+    pub fn decompress(enc: &[u8; 32]) -> Option<Point> {
+        let sign = enc[31] >> 7 == 1;
+        let y = Fe::from_bytes(enc); // drops the sign bit
+        // Reject non-canonical y (y >= p).
+        {
+            let mut canon = y.to_bytes();
+            canon[31] |= (sign as u8) << 7;
+            if &canon != enc {
+                return None;
+            }
+        }
+        let y2 = y.square();
+        let u = y2.sub(&Fe::ONE);
+        let v = y2.mul(d()).add(&Fe::ONE);
+        let (mut x, ok) = Fe::sqrt_ratio(&u, &v);
+        if !ok {
+            return None;
+        }
+        if x.is_zero() && sign {
+            return None; // x = 0 with sign bit set is invalid
+        }
+        if x.is_negative() != sign {
+            x = x.neg();
+        }
+        Some(Point { x, y, z: Fe::ONE, t: x.mul(&y) })
+    }
+
+    pub fn is_identity(&self) -> bool {
+        // x == 0 and y == z
+        self.x.is_zero() && self.y.eq_ct(&self.z)
+    }
+
+    /// Projective equality: X1*Z2 == X2*Z1 && Y1*Z2 == Y2*Z1.
+    pub fn eq_point(&self, o: &Point) -> bool {
+        self.x.mul(&o.z).eq_ct(&o.x.mul(&self.z)) && self.y.mul(&o.z).eq_ct(&o.y.mul(&self.z))
+    }
+
+    /// Curve membership check (tests / decompression validation).
+    pub fn is_on_curve(&self) -> bool {
+        // (-x^2 + y^2) * z^2 == z^4 + d * x^2 * y^2  (projective form)
+        let zi = self.z.invert();
+        let x = self.x.mul(&zi);
+        let y = self.y.mul(&zi);
+        let x2 = x.square();
+        let y2 = y.square();
+        let lhs = y2.sub(&x2);
+        let rhs = Fe::ONE.add(&d().mul(&x2).mul(&y2));
+        lhs.eq_ct(&rhs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_scalar(rng: &mut Rng) -> U256 {
+        U256([rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64() >> 4])
+    }
+
+    #[test]
+    fn base_point_on_curve() {
+        assert!(Point::base().is_on_curve());
+    }
+
+    #[test]
+    fn identity_laws() {
+        let b = Point::base();
+        assert!(b.add(&Point::identity()).eq_point(&b));
+        assert!(b.add(&b.neg()).is_identity());
+    }
+
+    #[test]
+    fn double_matches_add() {
+        let b = Point::base();
+        assert!(b.double().eq_point(&b.add(&b)));
+        let p = b.mul_scalar(&U256::from_u64(7));
+        assert!(p.double().eq_point(&p.add(&p)));
+    }
+
+    #[test]
+    fn scalar_mul_small_values() {
+        let b = Point::base();
+        let two = b.mul_scalar(&U256::from_u64(2));
+        assert!(two.eq_point(&b.double()));
+        let five = b.mul_scalar(&U256::from_u64(5));
+        let manual = b.double().double().add(&b);
+        assert!(five.eq_point(&manual));
+    }
+
+    #[test]
+    fn scalar_mul_distributes() {
+        let mut rng = Rng::new(21);
+        let b = Point::base();
+        for _ in 0..5 {
+            let k1 = U256::from_u64(rng.next_u64() >> 8);
+            let k2 = U256::from_u64(rng.next_u64() >> 8);
+            let (sum, _) = k1.add_carry(&k2);
+            let lhs = b.mul_scalar(&sum);
+            let rhs = b.mul_scalar(&k1).add(&b.mul_scalar(&k2));
+            assert!(lhs.eq_point(&rhs));
+        }
+    }
+
+    #[test]
+    fn compress_decompress_roundtrip() {
+        let mut rng = Rng::new(22);
+        let b = Point::base();
+        for _ in 0..10 {
+            let k = rand_scalar(&mut rng);
+            let p = b.mul_scalar(&k);
+            let enc = p.compress();
+            let q = Point::decompress(&enc).expect("valid encoding");
+            assert!(p.eq_point(&q));
+            assert!(q.is_on_curve());
+        }
+    }
+
+    #[test]
+    fn mul_base_matches_generic_scalar_mul() {
+        let mut rng = Rng::new(24);
+        let b = Point::base();
+        for _ in 0..6 {
+            let k = rand_scalar(&mut rng);
+            assert!(Point::mul_base(&k).eq_point(&b.mul_scalar(&k)));
+        }
+        assert!(Point::mul_base(&U256::ZERO).is_identity());
+        assert!(Point::mul_base(&U256::ONE).eq_point(&b));
+    }
+
+    #[test]
+    fn group_order_times_base_is_identity() {
+        // l * B == identity
+        let l = U256::from_le_bytes(&super::super::ed25519::group_order_bytes());
+        assert!(Point::base().mul_scalar(&l).is_identity());
+    }
+
+    #[test]
+    fn decompress_rejects_garbage() {
+        // A y with no valid x: search a few.
+        let mut rng = Rng::new(23);
+        let mut rejected = 0;
+        for _ in 0..64 {
+            let mut enc = [0u8; 32];
+            rng.fill_bytes(&mut enc);
+            enc[31] &= 0x7f;
+            if Point::decompress(&enc).is_none() {
+                rejected += 1;
+            }
+        }
+        // About half of all y are non-square; expect plenty of rejects.
+        assert!(rejected > 8, "rejected={rejected}");
+    }
+}

@@ -1,0 +1,247 @@
+//! Verifiable random function — ECVRF over edwards25519 (RFC 9381
+//! construction with try-and-increment hash-to-curve).
+//!
+//! VAULT's peer selection (§3.3, §4.3.2) needs exactly the VRF contract:
+//! `prove(sk, alpha)` yields a hash output `beta` that is uniformly
+//! distributed and *unforgeable*, plus a proof `pi` such that anyone
+//! holding `pk` can check `beta` was derived from `alpha` by that key
+//! and that key only. The chunk hash is the public input `alpha`, so
+//! selection outcomes are publicly re-derivable but not forgeable.
+//!
+//! Differences from RFC 9381 (documented, not protocol-visible): domain
+//! separation tags are VAULT-specific and hash-to-curve is TAI over
+//! SHA-256 candidates; test vectors are therefore internal
+//! (roundtrip/tamper properties) rather than the RFC's.
+
+use super::bigint::U256;
+use super::ed25519::{group_order, reduce_wide, SigningKey};
+use super::point::Point;
+use crate::wire::{Decode, Encode, Reader, WireResult, Writer};
+use sha2::{Digest, Sha256, Sha512};
+
+/// VRF proof: (Gamma, c, s) — 80 bytes on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VrfProof {
+    pub gamma: [u8; 32],
+    /// 16-byte challenge (stored zero-extended to a scalar).
+    pub c: [u8; 16],
+    pub s: [u8; 32],
+}
+
+impl Encode for VrfProof {
+    fn encode(&self, w: &mut Writer) {
+        w.bytes(&self.gamma);
+        w.bytes(&self.c);
+        w.bytes(&self.s);
+    }
+}
+
+impl Decode for VrfProof {
+    fn decode(r: &mut Reader<'_>) -> WireResult<Self> {
+        Ok(VrfProof {
+            gamma: <[u8; 32]>::decode(r)?,
+            c: <[u8; 16]>::decode(r)?,
+            s: <[u8; 32]>::decode(r)?,
+        })
+    }
+}
+
+/// Try-and-increment hash-to-curve: hash (pk, alpha, ctr) to candidate
+/// y-encodings until one decompresses, then clear the cofactor.
+fn hash_to_curve(pk: &[u8; 32], alpha: &[u8]) -> Point {
+    for ctr in 0u8..=255 {
+        let mut h = Sha256::new();
+        h.update(b"vault-ecvrf-h2c-v1");
+        h.update(pk);
+        h.update(alpha);
+        h.update([ctr]);
+        let cand: [u8; 32] = h.finalize().into();
+        if let Some(p) = Point::decompress(&cand) {
+            let p8 = p.mul_by_cofactor();
+            if !p8.is_identity() {
+                return p8;
+            }
+        }
+    }
+    // Probability 2^-256-ish; a fixed generator keeps the API total.
+    Point::base()
+}
+
+/// 16-byte challenge from the transcript points.
+fn challenge(h: &[u8; 32], gamma: &[u8; 32], u: &[u8; 32], v: &[u8; 32]) -> [u8; 16] {
+    let mut hash = Sha512::new();
+    hash.update(b"vault-ecvrf-chal-v1");
+    hash.update(h);
+    hash.update(gamma);
+    hash.update(u);
+    hash.update(v);
+    let out: [u8; 64] = hash.finalize().into();
+    out[..16].try_into().unwrap()
+}
+
+fn challenge_scalar(c: &[u8; 16]) -> U256 {
+    let mut b = [0u8; 32];
+    b[..16].copy_from_slice(c);
+    U256::from_le_bytes(&b)
+}
+
+/// VRF output `beta` from Gamma (already torsion-free by construction).
+fn beta_from_gamma(gamma: &[u8; 32]) -> [u8; 32] {
+    let mut h = Sha512::new();
+    h.update(b"vault-ecvrf-beta-v1");
+    h.update(gamma);
+    let out: [u8; 64] = h.finalize().into();
+    out[..32].try_into().unwrap()
+}
+
+/// Produce `(beta, proof)` for input `alpha` under `sk`.
+pub fn prove(sk: &SigningKey, alpha: &[u8]) -> ([u8; 32], VrfProof) {
+    let h_point = hash_to_curve(&sk.public, alpha);
+    let h_enc = h_point.compress();
+    let gamma = h_point.mul_scalar(&sk.scalar);
+    let gamma_enc = gamma.compress();
+
+    // Deterministic nonce (RFC 8032 style): H(prefix || H_enc) mod l.
+    let mut nh = Sha512::new();
+    nh.update(b"vault-ecvrf-nonce-v1");
+    nh.update(sk.prefix);
+    nh.update(h_enc);
+    let nonce_wide: [u8; 64] = nh.finalize().into();
+    let k = reduce_wide(&nonce_wide);
+
+    let u = Point::mul_base(&k).compress();
+    let v = h_point.mul_scalar(&k).compress();
+    let c = challenge(&h_enc, &gamma_enc, &u, &v);
+    let l = group_order();
+    let s = k.add_mod(&challenge_scalar(&c).mul_mod(&sk.scalar, &l), &l);
+
+    let proof = VrfProof { gamma: gamma_enc, c, s: s.to_le_bytes() };
+    (beta_from_gamma(&gamma_enc), proof)
+}
+
+/// Verify `proof` for `(pk, alpha)`; returns `Some(beta)` iff valid.
+pub fn verify(pk: &[u8; 32], alpha: &[u8], proof: &VrfProof) -> Option<[u8; 32]> {
+    let a = Point::decompress(pk)?;
+    let gamma = Point::decompress(&proof.gamma)?;
+    let s = U256::from_le_bytes(&proof.s);
+    if !s.lt(&group_order()) {
+        return None;
+    }
+    let c = challenge_scalar(&proof.c);
+    let h_point = hash_to_curve(pk, alpha);
+    let h_enc = h_point.compress();
+
+    // U = s·B − c·A ;  V = s·H − c·Γ
+    let u = Point::mul_base(&s).add(&a.mul_scalar(&c).neg());
+    let v = h_point.mul_scalar(&s).add(&gamma.mul_scalar(&c).neg());
+    let c_check = challenge(&h_enc, &proof.gamma, &u.compress(), &v.compress());
+    if c_check != proof.c {
+        return None;
+    }
+    Some(beta_from_gamma(&proof.gamma))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn keypair(seed: u8) -> SigningKey {
+        SigningKey::from_seed(&[seed; 32])
+    }
+
+    #[test]
+    fn prove_verify_roundtrip() {
+        let sk = keypair(1);
+        for alpha in [b"chunk-0".as_ref(), b"".as_ref(), &[0xffu8; 100]] {
+            let (beta, proof) = prove(&sk, alpha);
+            let got = verify(&sk.public, alpha, &proof).expect("valid proof");
+            assert_eq!(got, beta);
+        }
+    }
+
+    #[test]
+    fn beta_is_deterministic_per_key_input() {
+        let sk = keypair(2);
+        let (b1, _) = prove(&sk, b"x");
+        let (b2, _) = prove(&sk, b"x");
+        assert_eq!(b1, b2);
+        let (b3, _) = prove(&sk, b"y");
+        assert_ne!(b1, b3);
+        let sk2 = keypair(3);
+        let (b4, _) = prove(&sk2, b"x");
+        assert_ne!(b1, b4);
+    }
+
+    #[test]
+    fn wrong_key_rejected() {
+        let sk = keypair(4);
+        let other = keypair(5);
+        let (_, proof) = prove(&sk, b"alpha");
+        assert!(verify(&other.public, b"alpha", &proof).is_none());
+    }
+
+    #[test]
+    fn wrong_alpha_rejected() {
+        let sk = keypair(6);
+        let (_, proof) = prove(&sk, b"alpha");
+        assert!(verify(&sk.public, b"beta-input", &proof).is_none());
+    }
+
+    #[test]
+    fn tampered_proof_rejected() {
+        let sk = keypair(7);
+        let (_, proof) = prove(&sk, b"alpha");
+        let mut p = proof;
+        p.gamma[0] ^= 1;
+        assert!(verify(&sk.public, b"alpha", &p).is_none());
+        let mut p = proof;
+        p.c[3] ^= 0x80;
+        assert!(verify(&sk.public, b"alpha", &p).is_none());
+        let mut p = proof;
+        p.s[10] ^= 4;
+        assert!(verify(&sk.public, b"alpha", &p).is_none());
+    }
+
+    #[test]
+    fn beta_looks_uniform() {
+        // Crude bit-balance check across many inputs.
+        let sk = keypair(8);
+        let mut ones = 0u32;
+        let n = 64;
+        for i in 0..n {
+            let (beta, _) = prove(&sk, &[i as u8]);
+            ones += beta.iter().map(|b| b.count_ones()).sum::<u32>();
+        }
+        let total = n * 256;
+        let frac = ones as f64 / total as f64;
+        assert!((frac - 0.5).abs() < 0.05, "bit balance {frac}");
+    }
+
+    #[test]
+    fn proof_wire_roundtrip() {
+        use crate::wire::{Decode, Encode};
+        let sk = keypair(9);
+        let (_, proof) = prove(&sk, b"wire");
+        let bytes = proof.to_bytes();
+        assert_eq!(bytes.len(), 80);
+        let got = VrfProof::from_bytes(&bytes).unwrap();
+        assert_eq!(got, proof);
+    }
+
+    #[test]
+    fn hash_to_curve_is_torsion_free_and_on_curve() {
+        let mut rng = Rng::new(41);
+        for _ in 0..8 {
+            let mut pk = [0u8; 32];
+            let mut alpha = [0u8; 16];
+            rng.fill_bytes(&mut pk);
+            rng.fill_bytes(&mut alpha);
+            let p = hash_to_curve(&pk, &alpha);
+            assert!(p.is_on_curve());
+            // order divides l: l·P == identity
+            let l = group_order();
+            assert!(p.mul_scalar(&l).is_identity());
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Iterative Kademlia lookup as a transport-agnostic state machine.
+//!
+//! Used by the TCP deployment mode, where no oracle exists. The simnet
+//! evaluation path uses constant-time oracle discovery instead — the
+//! same simplification the paper makes in §6.2 ("a simulated DHT
+//! routing system that provides node discovery in constant time ...
+//! mitigates the effect of DHT routing performance on the result").
+
+use super::{xor_distance, NodeId, PeerInfo};
+use crate::crypto::Hash256;
+use std::collections::HashSet;
+
+pub const ALPHA: usize = 3; // lookup parallelism
+
+/// One in-flight iterative FIND_NODE lookup.
+#[derive(Debug)]
+pub struct Lookup {
+    pub target: Hash256,
+    want: usize,
+    /// Known candidates, sorted by XOR distance, with query state.
+    shortlist: Vec<(PeerInfo, QueryState)>,
+    queried: HashSet<NodeId>,
+    in_flight: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum QueryState {
+    Fresh,
+    InFlight,
+    Responded,
+    Failed,
+}
+
+/// What the driver should do next.
+#[derive(Debug, PartialEq, Eq)]
+pub enum LookupAction {
+    /// Send FIND_NODE(target) to these peers.
+    Query(Vec<PeerInfo>),
+    /// Lookup converged; the closest `want` responsive peers.
+    Done(Vec<PeerInfo>),
+    /// Waiting for in-flight replies.
+    Wait,
+}
+
+impl Lookup {
+    pub fn new(target: Hash256, seeds: Vec<PeerInfo>, want: usize) -> Self {
+        let mut l = Lookup {
+            target,
+            want,
+            shortlist: Vec::new(),
+            queried: HashSet::new(),
+            in_flight: 0,
+        };
+        for s in seeds {
+            l.insert(s);
+        }
+        l
+    }
+
+    fn insert(&mut self, peer: PeerInfo) {
+        if self.shortlist.iter().any(|(p, _)| p.id == peer.id) {
+            return;
+        }
+        self.shortlist.push((peer, QueryState::Fresh));
+        let t = self.target;
+        self.shortlist.sort_by_key(|(p, _)| xor_distance(&p.id, &t));
+    }
+
+    /// Ask the state machine what to do.
+    pub fn next_action(&mut self) -> LookupAction {
+        // Converged when the closest `want` responsive candidates have
+        // all responded and nothing fresh is closer.
+        let mut to_query = Vec::new();
+        for (p, st) in self.shortlist.iter_mut() {
+            if to_query.len() + self.in_flight >= ALPHA {
+                break;
+            }
+            if *st == QueryState::Fresh {
+                *st = QueryState::InFlight;
+                to_query.push(*p);
+            }
+        }
+        if !to_query.is_empty() {
+            self.in_flight += to_query.len();
+            for p in &to_query {
+                self.queried.insert(p.id);
+            }
+            return LookupAction::Query(to_query);
+        }
+        if self.in_flight > 0 {
+            return LookupAction::Wait;
+        }
+        // No fresh, none in flight: done.
+        let done: Vec<PeerInfo> = self
+            .shortlist
+            .iter()
+            .filter(|(_, st)| *st == QueryState::Responded)
+            .map(|(p, _)| *p)
+            .take(self.want)
+            .collect();
+        LookupAction::Done(done)
+    }
+
+    /// Record a FIND_NODE reply carrying closer peers.
+    pub fn on_reply(&mut self, from: NodeId, closer: Vec<PeerInfo>) {
+        let mut was_in_flight = false;
+        for (p, st) in self.shortlist.iter_mut() {
+            if p.id == from && *st == QueryState::InFlight {
+                *st = QueryState::Responded;
+                was_in_flight = true;
+                break;
+            }
+        }
+        if was_in_flight {
+            self.in_flight -= 1;
+        }
+        for c in closer {
+            if !self.queried.contains(&c.id) {
+                self.insert(c);
+            }
+        }
+    }
+
+    /// Record a query failure (timeout / refused).
+    pub fn on_failure(&mut self, from: NodeId) {
+        for (p, st) in self.shortlist.iter_mut() {
+            if p.id == from && *st == QueryState::InFlight {
+                *st = QueryState::Failed;
+                self.in_flight -= 1;
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dht::routing::RoutingTable;
+    use crate::util::rng::Rng;
+
+    /// Simulate a static network of `n` peers with full routing tables
+    /// and drive a lookup to completion synchronously.
+    fn run_lookup(n: usize, seed: u64) -> (Vec<PeerInfo>, Vec<PeerInfo>) {
+        let mut rng = Rng::new(seed);
+        let peers: Vec<PeerInfo> = (0..n)
+            .map(|_| {
+                let mut pk = [0u8; 32];
+                rng.fill_bytes(&mut pk);
+                PeerInfo { id: NodeId::from_pk(&pk), pk, region: 0 }
+            })
+            .collect();
+        let mut tables: std::collections::HashMap<NodeId, RoutingTable> =
+            std::collections::HashMap::new();
+        for p in &peers {
+            let mut rt = RoutingTable::new(p.id);
+            for q in &peers {
+                rt.touch(*q);
+            }
+            tables.insert(p.id, rt);
+        }
+        let target = Hash256::of(&seed.to_le_bytes());
+        let seeds = vec![peers[0], peers[1], peers[2]];
+        let mut lookup = Lookup::new(target, seeds, 8);
+        loop {
+            match lookup.next_action() {
+                LookupAction::Query(qs) => {
+                    for q in qs {
+                        let closer = tables[&q.id].closest(&target, 20);
+                        lookup.on_reply(q.id, closer);
+                    }
+                }
+                LookupAction::Wait => unreachable!("synchronous driver"),
+                LookupAction::Done(found) => {
+                    let mut truth = peers.clone();
+                    truth.sort_by_key(|p| xor_distance(&p.id, &target));
+                    truth.truncate(8);
+                    return (found, truth);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_finds_globally_closest() {
+        for seed in [1u64, 2, 3] {
+            let (found, truth) = run_lookup(300, seed);
+            assert_eq!(found.len(), 8);
+            let found_ids: std::collections::HashSet<_> = found.iter().map(|p| p.id).collect();
+            // All of the true top-8 should be discovered (full tables).
+            for t in &truth {
+                assert!(found_ids.contains(&t.id), "missing {:?}", t.id);
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_survives_failures() {
+        let mut rng = Rng::new(7);
+        let peers: Vec<PeerInfo> = (0..100)
+            .map(|_| {
+                let mut pk = [0u8; 32];
+                rng.fill_bytes(&mut pk);
+                PeerInfo { id: NodeId::from_pk(&pk), pk, region: 0 }
+            })
+            .collect();
+        let target = Hash256::of(b"t");
+        let mut lookup = Lookup::new(target, peers[..10].to_vec(), 5);
+        let mut done = None;
+        let mut step = 0;
+        while done.is_none() {
+            step += 1;
+            assert!(step < 1000);
+            match lookup.next_action() {
+                LookupAction::Query(qs) => {
+                    for (i, q) in qs.into_iter().enumerate() {
+                        if i % 2 == 0 {
+                            lookup.on_failure(q.id); // half the queries fail
+                        } else {
+                            lookup.on_reply(q.id, peers[10..40].to_vec());
+                        }
+                    }
+                }
+                LookupAction::Wait => unreachable!(),
+                LookupAction::Done(found) => done = Some(found),
+            }
+        }
+        assert!(!done.unwrap().is_empty());
+    }
+}

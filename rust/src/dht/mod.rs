@@ -1,0 +1,171 @@
+//! DHT substrate: node identity, ring distance, routing tables and
+//! iterative Kademlia-style lookup.
+//!
+//! VAULT "uses a distributed hash table, but mainly for its routing and
+//! peer lookup functionality" (§4.1) with weak assumptions: lookups are
+//! best-effort and return peers close to a hash with high probability.
+//! Node IDs are `SHA256(pk)` so they are uniformly distributed on the
+//! ring (§4.3) — that uniformity is what makes chunk groups
+//! hypergeometric samples of the population (Appendix A).
+
+pub mod kademlia;
+pub mod routing;
+
+use crate::crypto::Hash256;
+use crate::wire::{Decode, Encode, Reader, WireResult, Writer};
+
+/// Node identity = SHA-256 of the node's Ed25519 public key.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct NodeId(pub Hash256);
+
+impl NodeId {
+    pub fn from_pk(pk: &[u8; 32]) -> NodeId {
+        NodeId(Hash256::of(pk))
+    }
+    pub fn short(&self) -> String {
+        self.0.short()
+    }
+}
+
+impl std::fmt::Debug for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "NodeId({}..)", self.short())
+    }
+}
+
+impl Encode for NodeId {
+    fn encode(&self, w: &mut Writer) {
+        self.0.encode(w);
+    }
+}
+impl Decode for NodeId {
+    fn decode(r: &mut Reader<'_>) -> WireResult<Self> {
+        Ok(NodeId(Hash256::decode(r)?))
+    }
+}
+
+/// Contact info advertised through the DHT.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PeerInfo {
+    pub id: NodeId,
+    pub pk: [u8; 32],
+    /// Region index (0..NUM_REGIONS) — simnet latency class.
+    pub region: u8,
+}
+
+crate::wire_struct!(PeerInfo { id, pk, region });
+
+/// Circular distance between two points on the 2^128-normalized ring
+/// (we fold 256-bit hashes to their top 128 bits; the fold preserves
+/// uniformity and makes distance arithmetic cheap).
+pub fn ring_distance(a: &Hash256, b: &Hash256) -> u128 {
+    let x = a.prefix_u128();
+    let y = b.prefix_u128();
+    let d = x.wrapping_sub(y);
+    let d2 = y.wrapping_sub(x);
+    d.min(d2)
+}
+
+/// Paper Algorithm 2 `Distance`: distance expressed in expected numbers
+/// of nodes between the two points, 1-based: `|a-b| / (2^hashlen / N) + 1`.
+pub fn rank_distance(a: &Hash256, b: &Hash256, n_nodes: usize) -> f64 {
+    let d = ring_distance(a, b) as f64;
+    let spacing = (u128::MAX as f64 + 1.0) / (n_nodes.max(1) as f64);
+    // Ring distance counts one direction only; expected #nodes within
+    // circular distance d of the target is 2d/spacing.
+    2.0 * d / spacing + 1.0
+}
+
+/// XOR distance (Kademlia metric) — used for routing, not selection.
+pub fn xor_distance(a: &NodeId, b: &Hash256) -> Hash256 {
+    a.0.xor(b)
+}
+
+/// Sort peers by ring distance to `target` (nearest first).
+pub fn sort_by_ring_distance(peers: &mut [PeerInfo], target: &Hash256) {
+    peers.sort_by_key(|p| ring_distance(&p.id.0, target));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn h(tag: u64) -> Hash256 {
+        Hash256::of(&tag.to_le_bytes())
+    }
+
+    #[test]
+    fn ring_distance_symmetric_and_zero_on_self() {
+        let a = h(1);
+        let b = h(2);
+        assert_eq!(ring_distance(&a, &b), ring_distance(&b, &a));
+        assert_eq!(ring_distance(&a, &a), 0);
+    }
+
+    #[test]
+    fn ring_distance_wraparound() {
+        let lo = Hash256([0u8; 32]);
+        let mut hi_bytes = [0xffu8; 32];
+        hi_bytes[16..].fill(0);
+        let hi = Hash256(hi_bytes); // prefix = u128::MAX
+        assert_eq!(ring_distance(&lo, &hi), 1); // adjacent across the seam
+    }
+
+    #[test]
+    fn rank_distance_scales_with_population() {
+        let a = h(3);
+        let b = h(4);
+        let d_small = rank_distance(&a, &b, 100);
+        let d_large = rank_distance(&a, &b, 10_000);
+        assert!(d_large > d_small);
+        assert!(rank_distance(&a, &a, 1000) >= 1.0);
+    }
+
+    #[test]
+    fn rank_distance_matches_expected_rank_statistically() {
+        // For random points, the j-th nearest of n nodes should have
+        // rank_distance ≈ j on average.
+        let mut rng = Rng::new(90);
+        let n = 2000;
+        let ids: Vec<Hash256> = (0..n).map(|_| {
+            let mut b = [0u8; 32];
+            rng.fill_bytes(&mut b);
+            Hash256(b)
+        }).collect();
+        let target = h(99);
+        let mut dists: Vec<u128> = ids.iter().map(|i| ring_distance(i, &target)).collect();
+        dists.sort_unstable();
+        // 10th nearest (index 9, 1-based rank 10)
+        let mut fake = [0u8; 32];
+        fake[..16].copy_from_slice(
+            &target.prefix_u128().wrapping_add(dists[9]).to_be_bytes(),
+        );
+        let rd = rank_distance(&Hash256(fake), &target, n);
+        assert!((2.0..40.0).contains(&rd), "rank of 10th nearest ≈ 10, got {rd}");
+    }
+
+    #[test]
+    fn node_id_from_pk_deterministic() {
+        let pk = [7u8; 32];
+        assert_eq!(NodeId::from_pk(&pk), NodeId::from_pk(&pk));
+        assert_ne!(NodeId::from_pk(&pk), NodeId::from_pk(&[8u8; 32]));
+    }
+
+    #[test]
+    fn sort_by_distance_orders() {
+        let mut rng = Rng::new(91);
+        let mut peers: Vec<PeerInfo> = (0..50)
+            .map(|_| {
+                let mut pk = [0u8; 32];
+                rng.fill_bytes(&mut pk);
+                PeerInfo { id: NodeId::from_pk(&pk), pk, region: 0 }
+            })
+            .collect();
+        let target = h(5);
+        sort_by_ring_distance(&mut peers, &target);
+        for w in peers.windows(2) {
+            assert!(ring_distance(&w[0].id.0, &target) <= ring_distance(&w[1].id.0, &target));
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Kademlia-style k-bucket routing table.
+//!
+//! Buckets are indexed by the length of the common prefix between the
+//! local ID and the contact (XOR metric). Least-recently-seen contacts
+//! are evicted first when a bucket overflows, which biases the table
+//! toward long-lived peers — the classic Kademlia churn resistance.
+
+use super::{xor_distance, NodeId, PeerInfo};
+use crate::crypto::Hash256;
+
+pub const BUCKET_SIZE: usize = 20; // Kademlia k
+
+#[derive(Clone, Debug)]
+pub struct RoutingTable {
+    local: NodeId,
+    /// buckets[i] holds contacts whose XOR distance has i leading zeros.
+    buckets: Vec<Vec<PeerInfo>>,
+}
+
+impl RoutingTable {
+    pub fn new(local: NodeId) -> Self {
+        RoutingTable { local, buckets: vec![Vec::new(); 257] }
+    }
+
+    pub fn local(&self) -> NodeId {
+        self.local
+    }
+
+    fn bucket_index(&self, id: &NodeId) -> usize {
+        (self.local.0.xor(&id.0).leading_zeros() as usize).min(256)
+    }
+
+    /// Record contact with a peer (moves it to most-recently-seen).
+    pub fn touch(&mut self, peer: PeerInfo) {
+        if peer.id == self.local {
+            return;
+        }
+        let idx = self.bucket_index(&peer.id);
+        let bucket = &mut self.buckets[idx];
+        if let Some(pos) = bucket.iter().position(|p| p.id == peer.id) {
+            bucket.remove(pos);
+            bucket.push(peer);
+            return;
+        }
+        if bucket.len() < BUCKET_SIZE {
+            bucket.push(peer);
+        } else {
+            // Evict least-recently-seen (front). Production Kademlia
+            // pings it first; our transports report failures directly
+            // via `remove`, so immediate replacement is fine.
+            bucket.remove(0);
+            bucket.push(peer);
+        }
+    }
+
+    pub fn remove(&mut self, id: &NodeId) {
+        let idx = self.bucket_index(id);
+        self.buckets[idx].retain(|p| p.id != *id);
+    }
+
+    pub fn contains(&self, id: &NodeId) -> bool {
+        let idx = self.bucket_index(id);
+        self.buckets[idx].iter().any(|p| p.id == *id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.buckets.iter().map(|b| b.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The `count` known contacts closest (XOR metric) to `target`.
+    pub fn closest(&self, target: &Hash256, count: usize) -> Vec<PeerInfo> {
+        let mut all: Vec<PeerInfo> = self.buckets.iter().flatten().copied().collect();
+        all.sort_by_key(|p| xor_distance(&p.id, target));
+        all.truncate(count);
+        all
+    }
+
+    pub fn all(&self) -> Vec<PeerInfo> {
+        self.buckets.iter().flatten().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn peer(rng: &mut Rng) -> PeerInfo {
+        let mut pk = [0u8; 32];
+        rng.fill_bytes(&mut pk);
+        PeerInfo { id: NodeId::from_pk(&pk), pk, region: 0 }
+    }
+
+    #[test]
+    fn touch_and_contains() {
+        let mut rng = Rng::new(100);
+        let local = peer(&mut rng);
+        let mut rt = RoutingTable::new(local.id);
+        let p = peer(&mut rng);
+        rt.touch(p);
+        assert!(rt.contains(&p.id));
+        assert_eq!(rt.len(), 1);
+        rt.remove(&p.id);
+        assert!(!rt.contains(&p.id));
+    }
+
+    #[test]
+    fn ignores_self() {
+        let mut rng = Rng::new(101);
+        let local = peer(&mut rng);
+        let mut rt = RoutingTable::new(local.id);
+        rt.touch(local);
+        assert_eq!(rt.len(), 0);
+    }
+
+    #[test]
+    fn closest_returns_sorted_by_xor() {
+        let mut rng = Rng::new(102);
+        let local = peer(&mut rng);
+        let mut rt = RoutingTable::new(local.id);
+        for _ in 0..200 {
+            rt.touch(peer(&mut rng));
+        }
+        let target = Hash256::of(b"target");
+        let closest = rt.closest(&target, 10);
+        assert_eq!(closest.len(), 10);
+        for w in closest.windows(2) {
+            assert!(
+                xor_distance(&w[0].id, &target).0 <= xor_distance(&w[1].id, &target).0
+            );
+        }
+        // Must actually be the globally closest among table entries.
+        let mut all = rt.all();
+        all.sort_by_key(|p| xor_distance(&p.id, &target));
+        assert_eq!(closest[0].id, all[0].id);
+    }
+
+    #[test]
+    fn bucket_overflow_evicts_lru() {
+        let mut rng = Rng::new(103);
+        let local = peer(&mut rng);
+        let mut rt = RoutingTable::new(local.id);
+        // Flood with many random peers; table must stay bounded.
+        for _ in 0..5000 {
+            rt.touch(peer(&mut rng));
+        }
+        assert!(rt.len() <= 257 * BUCKET_SIZE);
+        // Most-recently-touched stays resident.
+        let p = peer(&mut rng);
+        rt.touch(p);
+        for _ in 0..BUCKET_SIZE * 2 {
+            rt.touch(peer(&mut rng));
+            rt.touch(p); // keep refreshing
+        }
+        assert!(rt.contains(&p.id));
+    }
+}

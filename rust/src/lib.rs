@@ -1,0 +1,63 @@
+//! # VAULT: Decentralized Storage Made Durable — reproduction library
+//!
+//! A full reproduction of the VAULT decentralized object store (Sun et
+//! al., 2023): rateless-fountain-coded objects, VRF-based verifiable
+//! random peer selection, gossip chunk-group maintenance, and fully
+//! decentralized repair — plus every substrate the paper depends on
+//! (Kademlia-style DHT, Ed25519/ECVRF crypto, wire codec, transports),
+//! the two baselines its evaluation compares against, a discrete-event
+//! simulator for the Fig. 4–6 experiments, and the Appendix-A analytical
+//! durability models.
+//!
+//! ## Layering
+//!
+//! * **L3 (this crate)** — the coordinator: protocol, DHT, networking,
+//!   simulator, benches. Runs self-contained; Python never touches the
+//!   request path.
+//! * **L2/L1 (build time)** — `python/compile/` lowers the GF(2)
+//!   XOR-GEMM Pallas kernel (encode) and the Gauss–Jordan decode /
+//!   CTMC-durability graphs to HLO text in `artifacts/`, which
+//!   [`runtime`] loads and executes through the PJRT CPU client.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use vault::coordinator::{Cluster, ClusterConfig};
+//!
+//! let mut cluster = Cluster::start(ClusterConfig::small_test(64));
+//! let id = cluster
+//!     .store_blocking(0, b"hello vault", b"owner-secret", 0)
+//!     .unwrap()
+//!     .value;
+//! let data = cluster.query_blocking(1, &id).unwrap().value;
+//! assert_eq!(data, b"hello vault");
+//! ```
+
+pub mod analysis;
+pub mod baseline;
+pub mod codec;
+pub mod coordinator;
+pub mod crypto;
+pub mod dht;
+pub mod net;
+pub mod node;
+pub mod proto;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod wire;
+
+/// Paper-default coding parameters (§6): inner code `(K_inner=32, R=80)`,
+/// outer code `(K_outer=8, 10 chunks)` ⇒ redundancy 3.125×.
+pub mod params {
+    /// Inner-code data symbols per chunk (`K_inner`).
+    pub const K_INNER: usize = 32;
+    /// Chunk-group target size / fragment store threshold (`R`).
+    pub const R_INNER: usize = 80;
+    /// Outer-code data chunks needed to rebuild an object (`K_outer`).
+    pub const K_OUTER: usize = 8;
+    /// Encoded chunks materialized per object.
+    pub const N_OUTER: usize = 10;
+    /// Baseline replication factor (§6: "replication factor ... to 3").
+    pub const BASELINE_REPLICAS: usize = 3;
+}

@@ -1,0 +1,298 @@
+//! `vault` — CLI entry point for the VAULT reproduction.
+//!
+//! Subcommands:
+//! * `cluster`      — run a virtual-time cluster, store + query objects.
+//! * `tcp-demo`     — bring up a real-TCP localhost cluster and do one
+//!                    store/query round trip.
+//! * `sim`          — §6.1 durability simulations (fig4|fig5|fig6).
+//! * `analyze`      — Appendix-A CTMC + closed-form bounds.
+//! * `artifacts`    — load the AOT artifacts and cross-check them
+//!                    against the native codec.
+
+use vault::analysis::{bounds, ctmc};
+use vault::coordinator::{workload::Corpus, Cluster, ClusterConfig};
+use vault::crypto::Hash256;
+use vault::runtime::Runtime;
+use vault::sim::{attack, durability, replica};
+use vault::util::cli::Args;
+use vault::util::rng::Rng;
+use vault::util::Timer;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "cluster" => cmd_cluster(&args),
+        "tcp-demo" => cmd_tcp_demo(&args),
+        "sim" => cmd_sim(&args),
+        "analyze" => cmd_analyze(&args),
+        "artifacts" => cmd_artifacts(&args),
+        _ => {
+            eprintln!(
+                "usage: vault <cluster|tcp-demo|sim|analyze|artifacts> [--flags]\n\
+                 \n\
+                 cluster   --peers 128 --objects 4 --size 262144 [--byzantine 0.1] [--churn 4]\n\
+                 tcp-demo  --peers 8 --size 65536\n\
+                 sim       --fig 4|5|6 [--nodes 100000] [--objects 1000] [--churn 2.0] [--years 1]\n\
+                 analyze   [--n 80] [--k 32] [--churn-q 0.01] [--evict 0] [--steps 512]\n\
+                 artifacts [--dir artifacts]"
+            );
+        }
+    }
+}
+
+fn cmd_cluster(args: &Args) {
+    let peers = args.get("peers", 128usize);
+    let objects = args.get("objects", 4usize);
+    let size = args.get("size", 256 * 1024usize);
+    let byz = args.get("byzantine", 0.0f64);
+    let churn = args.get("churn", 0usize);
+
+    let mut cfg = ClusterConfig::small_test(peers);
+    cfg.byzantine_frac = byz;
+    println!(
+        "cluster: {peers} peers x5 regions, inner ({},{}), outer ({},{}), byz {byz}",
+        cfg.vault.k_inner, cfg.vault.r_inner, cfg.vault.k_outer, cfg.vault.n_outer
+    );
+    let mut cluster = Cluster::start(cfg);
+    let corpus = Corpus::generate(1, objects, size);
+    let wall = Timer::start();
+    let mut ids = Vec::new();
+    for (i, (data, secret)) in corpus.objects.iter().enumerate() {
+        let client = cluster.random_client();
+        match cluster.store_blocking(client, data, secret, 0) {
+            Ok(res) => {
+                println!("store #{i}: {} ms (virtual)", res.latency_ms);
+                ids.push((res.value, data.clone()));
+            }
+            Err(e) => println!("store #{i} FAILED: {e}"),
+        }
+    }
+    if churn > 0 {
+        println!("churning {churn} peers and letting repair run...");
+        cluster.churn(churn);
+        cluster.net.run_for(600_000);
+    }
+    for (i, (id, want)) in ids.iter().enumerate() {
+        let client = cluster.random_client();
+        match cluster.query_blocking(client, id) {
+            Ok(res) => {
+                let ok = &res.value == want;
+                println!("query #{i}: {} ms (virtual), intact={ok}", res.latency_ms);
+                assert!(ok, "data corruption");
+            }
+            Err(e) => println!("query #{i} FAILED: {e}"),
+        }
+    }
+    println!(
+        "done in {:.1}s wall; virtual time {} s; net msgs {} bytes {}",
+        wall.elapsed_s(),
+        cluster.net.now_ms() / 1000,
+        cluster.net.stats.msgs,
+        cluster.net.stats.bytes
+    );
+}
+
+fn cmd_tcp_demo(args: &Args) {
+    use vault::net::tcp::TcpCluster;
+    let peers = args.get("peers", 8usize);
+    let size = args.get("size", 65536usize);
+    let mut cfg = ClusterConfig::small_test(peers).vault;
+    cfg.k_inner = 4;
+    cfg.r_inner = peers.min(6);
+    cfg.k_outer = 2;
+    cfg.n_outer = 3;
+    cfg.op_timeout_ms = 1000;
+    println!("starting {peers} TCP nodes on localhost...");
+    let cluster = TcpCluster::start(cfg, peers, 5).expect("cluster up");
+    let mut rng = Rng::new(9);
+    let mut data = vec![0u8; size];
+    rng.fill_bytes(&mut data);
+    let wall = Timer::start();
+    let op = cluster.nodes[0].store(data.clone(), b"tcp-secret".to_vec(), 0);
+    let ev = cluster.nodes[0]
+        .wait_op(op, std::time::Duration::from_secs(30))
+        .expect("store completes");
+    let id = match ev {
+        vault::proto::AppEvent::StoreDone { id, latency_ms, .. } => {
+            println!("store: {latency_ms} ms");
+            id
+        }
+        other => panic!("store failed: {other:?}"),
+    };
+    let op = cluster.nodes[1].query(&id);
+    match cluster.nodes[1].wait_op(op, std::time::Duration::from_secs(30)) {
+        Some(vault::proto::AppEvent::QueryDone { data: got, latency_ms, .. }) => {
+            println!("query: {latency_ms} ms, intact={}", got == data);
+            assert_eq!(got, data);
+        }
+        other => panic!("query failed: {other:?}"),
+    }
+    println!("tcp round trip OK in {:.1}s wall", wall.elapsed_s());
+    cluster.shutdown();
+}
+
+fn cmd_sim(args: &Args) {
+    let fig = args.get("fig", 4usize);
+    let nodes = args.get("nodes", 100_000usize);
+    let objects = args.get("objects", 1000usize);
+    let churn = args.get("churn", 2.0f64);
+    let years = args.get("years", 1.0f64);
+    let seed = args.get("seed", 42u64);
+    match fig {
+        4 => {
+            for cache in [0.0, 24.0, 48.0] {
+                let cfg = durability::SimConfig {
+                    n_nodes: nodes,
+                    n_objects: objects,
+                    churn_per_year: churn,
+                    cache_ttl_hours: cache,
+                    duration_years: years,
+                    seed,
+                    ..Default::default()
+                };
+                let r = durability::run(&cfg);
+                println!(
+                    "vault cache={cache:>4}h: traffic={:.1} obj-units repairs={} hits={} lost={}",
+                    r.repair_traffic_objects, r.repairs, r.cache_hits, r.lost_objects
+                );
+            }
+            let rep = replica::run(&replica::ReplicaConfig {
+                n_nodes: nodes,
+                n_objects: objects,
+                churn_per_year: churn,
+                duration_years: years,
+                seed,
+                ..Default::default()
+            });
+            println!(
+                "replicated baseline: traffic={:.1} obj-units repairs={} lost={}",
+                rep.repair_traffic_objects, rep.repairs, rep.lost_objects
+            );
+        }
+        5 => {
+            for (k, r) in [(32usize, 80usize), (32, 48)] {
+                let cfg = durability::SimConfig {
+                    n_nodes: nodes,
+                    n_objects: 1,
+                    k_inner: k,
+                    r_inner: r,
+                    churn_per_year: churn,
+                    duration_years: years.max(10.0),
+                    trace: true,
+                    seed,
+                    ..Default::default()
+                };
+                let rep = durability::run(&cfg);
+                println!("config ({k},{r}): trace of honest fragments (hours,count):");
+                for (t, c) in rep.trace.iter().step_by(4) {
+                    println!("  {t:>9.0} {c}");
+                }
+            }
+        }
+        6 => {
+            println!("byzantine sweep (1-year loss fraction):");
+            for f in [0.0, 0.1, 0.2, 0.3, 0.4, 0.5] {
+                let r = durability::run(&durability::SimConfig {
+                    n_nodes: nodes,
+                    n_objects: objects,
+                    churn_per_year: churn.max(4.0),
+                    byzantine_frac: f,
+                    duration_years: years,
+                    seed,
+                    ..Default::default()
+                });
+                let b = replica::run(&replica::ReplicaConfig {
+                    n_nodes: nodes,
+                    n_objects: objects,
+                    churn_per_year: churn.max(4.0),
+                    byzantine_frac: f,
+                    duration_years: years,
+                    seed,
+                    ..Default::default()
+                });
+                println!(
+                    "  byz={f:.2}: vault lost {:.3} | baseline lost {:.3}",
+                    r.lost_object_frac, b.lost_object_frac
+                );
+            }
+            println!("targeted-attack sweep:");
+            for frac in [0.02, 0.05, 0.1, 0.2, 0.3] {
+                let v = attack::vault_attack_loss(&attack::AttackConfig {
+                    n_nodes: nodes,
+                    n_objects: objects,
+                    attacked_frac: frac,
+                    ..Default::default()
+                });
+                let b = attack::baseline_attack_loss(nodes, objects, 256, 3, frac, seed);
+                println!("  attacked={frac:.2}: vault lost {v:.3} | baseline lost {b:.3}");
+            }
+        }
+        other => eprintln!("unknown --fig {other}"),
+    }
+}
+
+fn cmd_analyze(args: &Args) {
+    let n = args.get("n", 80usize);
+    let k = args.get("k", 32usize);
+    let churn_q = args.get("churn-q", 0.01f64);
+    let evict = args.get("evict", 0usize);
+    let steps = args.get("steps", 512usize);
+    let cfg = ctmc::CtmcConfig { n, k, churn_q, evict, ..Default::default() };
+    let chain = ctmc::build_chain(&cfg);
+    let series = chain.absorb_series(steps);
+    println!("CTMC (n={n}, k={k}, q={churn_q}, Y={evict}): P(lost) after T steps");
+    for t in [1, 8, 64, steps.min(256), steps] {
+        println!("  T={t:>5}: {:.3e}", series[t - 1]);
+    }
+    println!(
+        "object bound over {} chunks: {:.3e}",
+        vault::params::N_OUTER,
+        chain.object_loss_bound(steps, vault::params::N_OUTER)
+    );
+    println!(
+        "initial-state invalid (exact): {:.3e} | hoeffding: {:.3e}",
+        bounds::initial_invalid_prob(100_000, 33_333, n as u64, k as u64),
+        bounds::initial_invalid_hoeffding(n as u64, k as u64),
+    );
+    for phi in [100u64, 1_000, 10_000] {
+        println!(
+            "targeted bound (O=1e4, K=8, R=2, phi={phi}, mu=8): {:.3e}",
+            bounds::targeted_attack_bound(10_000, 8, 2, phi, 8)
+        );
+    }
+}
+
+fn cmd_artifacts(args: &Args) {
+    let dir = std::path::PathBuf::from(args.str("dir", "artifacts"));
+    let rt = match Runtime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("failed to load artifacts from {dir:?}: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    println!("loaded artifacts: encoders {:?}", rt.encoder_variants());
+    // Cross-check against the native codec.
+    let mut rng = Rng::new(3);
+    let mut chunk = vec![0u8; 200_000];
+    rng.fill_bytes(&mut chunk);
+    let chash = Hash256::of(&chunk);
+    let k = vault::params::K_INNER;
+    let indices: Vec<u64> = (0..vault::params::R_INNER as u64).collect();
+    let native = vault::codec::InnerEncoder::new(chash, &chunk, k);
+    let t = Timer::start();
+    let frags = rt.encode_chunk(&chash, &chunk, k, &indices).expect("encode");
+    println!("artifact encode of {} fragments: {:.1} ms", frags.len(), t.elapsed_ms());
+    for f in &frags {
+        assert_eq!(*f, native.fragment(f.index), "artifact/native mismatch");
+    }
+    let t = Timer::start();
+    let decoded = rt
+        .decode_chunk(&chash, k, &frags[..k])
+        .expect("decode")
+        .expect("full rank");
+    println!("artifact decode: {:.1} ms, intact={}", t.elapsed_ms(), decoded == chunk);
+    assert_eq!(decoded, chunk);
+    println!("artifacts cross-check OK");
+}

@@ -1,0 +1,48 @@
+//! Transports that drive the [`crate::proto::peer::VaultPeer`] state
+//! machine.
+//!
+//! * [`simnet`] — deterministic virtual-time network with the paper's
+//!   five AWS regions and a measured inter-region RTT matrix. All of
+//!   §6.2's latency/concurrency/scalability experiments (Figs. 7–9) run
+//!   here; this mirrors the paper's own use of "a simulated DHT routing
+//!   system that provides node discovery in constant time".
+//! * [`tcp`] — real sockets (length-prefixed frames, single dispatcher +
+//!   reader threads, mirroring the paper's actix single-server-thread +
+//!   worker-pool shape) for localhost cluster deployments.
+
+pub mod simnet;
+pub mod tcp;
+
+/// The paper's five deployment regions (§6.2).
+pub const REGIONS: [&str; 5] = ["us-west", "ap-southeast", "eu-central", "sa-east", "af-south"];
+
+/// One-way inter-region latency in milliseconds (approximate public RTT
+/// measurements between the paper's AWS zones, halved).
+pub const REGION_LATENCY_MS: [[u64; 5]; 5] = [
+    //  us-w  ap-se  eu-c  sa-e  af-s
+    [1, 85, 75, 90, 145],   // us-west
+    [85, 1, 80, 165, 125],  // ap-southeast
+    [75, 80, 1, 105, 80],   // eu-central
+    [90, 165, 105, 1, 170], // sa-east
+    [145, 125, 80, 170, 1], // af-south
+];
+
+/// Default per-peer bandwidth for transfer-time modelling: the paper's
+/// instances share 12 Gbps across 100 peers ⇒ ~15 MB/s ≈ 15000 bytes/ms.
+pub const DEFAULT_BANDWIDTH_BYTES_PER_MS: u64 = 15_000;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_matrix_symmetric_positive() {
+        for i in 0..5 {
+            for j in 0..5 {
+                assert_eq!(REGION_LATENCY_MS[i][j], REGION_LATENCY_MS[j][i]);
+                assert!(REGION_LATENCY_MS[i][j] >= 1);
+            }
+            assert_eq!(REGION_LATENCY_MS[i][i], 1);
+        }
+    }
+}

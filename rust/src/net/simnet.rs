@@ -1,0 +1,477 @@
+//! Deterministic virtual-time network simulation.
+//!
+//! A single-threaded discrete-event loop owns every peer, delivers
+//! messages with region-matrix latency plus bandwidth-proportional
+//! transfer time, fires timers, and exposes churn/attack injection.
+//! Virtual time makes hour-scale protocol behaviour (heartbeats,
+//! suspicion, repair convergence) measurable in milliseconds of wall
+//! time, and makes every run exactly reproducible from its seed.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::codec::ObjectId;
+use crate::crypto::Hash256;
+use crate::dht::{ring_distance, NodeId, PeerInfo};
+use crate::proto::messages::Msg;
+use crate::proto::peer::VaultPeer;
+use crate::proto::{AppEvent, Directory, Outbox, TimerKind, VaultConfig};
+use crate::util::rng::Rng;
+
+use super::{DEFAULT_BANDWIDTH_BYTES_PER_MS, REGION_LATENCY_MS};
+
+#[derive(Clone, Debug)]
+pub struct SimOpts {
+    pub regions: usize,
+    /// bytes per virtual millisecond per link.
+    pub bandwidth: u64,
+    /// +/- fractional jitter applied to each delivery latency.
+    pub jitter: f64,
+    /// Probability a message is silently dropped in flight (WAN loss /
+    /// transient unreachability — §3.2's "high degree of asynchrony").
+    pub drop_prob: f64,
+    pub seed: u64,
+}
+
+impl Default for SimOpts {
+    fn default() -> Self {
+        SimOpts {
+            regions: 5,
+            bandwidth: DEFAULT_BANDWIDTH_BYTES_PER_MS,
+            jitter: 0.1,
+            drop_prob: 0.0,
+            seed: 7,
+        }
+    }
+}
+
+struct Event {
+    at_ms: u64,
+    seq: u64,
+    kind: EventKind,
+}
+
+enum EventKind {
+    Deliver { to: usize, from: NodeId, msg: Msg },
+    Timer { peer: usize, kind: TimerKind },
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.at_ms == other.at_ms && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at_ms, self.seq).cmp(&(other.at_ms, other.seq))
+    }
+}
+
+struct Slot {
+    peer: VaultPeer,
+    up: bool,
+    /// Targeted attack (§6.1): all traffic to/from the node is dropped
+    /// while the node itself may still believe it is alive.
+    attacked: bool,
+}
+
+/// Constant-time peer discovery oracle, sorted by ring position.
+pub struct OracleDirectory {
+    /// (ring prefix, info) for all *up* peers, sorted by prefix.
+    ring: Vec<(u128, PeerInfo)>,
+    n: usize,
+}
+
+impl OracleDirectory {
+    fn rebuild(slots: &[Slot]) -> Self {
+        let mut ring: Vec<(u128, PeerInfo)> = slots
+            .iter()
+            .filter(|s| s.up && !s.attacked)
+            .map(|s| (s.peer.info.id.0.prefix_u128(), s.peer.info))
+            .collect();
+        ring.sort_by_key(|(p, _)| *p);
+        let n = ring.len();
+        OracleDirectory { ring, n }
+    }
+}
+
+impl Directory for OracleDirectory {
+    fn closest(&self, target: &Hash256, count: usize) -> Vec<PeerInfo> {
+        let n = self.ring.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let count = count.min(n);
+        let t = target.prefix_u128();
+        let start = self.ring.partition_point(|(p, _)| *p < t);
+        // Collect a circular window around the insertion point (the
+        // nearest `count` by ring distance must lie within `count`
+        // positions on either side), then sort by true distance.
+        let window = (2 * count + 2).min(n);
+        let mut cand: Vec<PeerInfo> = Vec::with_capacity(window);
+        let lo = start as isize - count as isize - 1;
+        for off in 0..window as isize + count as isize {
+            let i = (((lo + off) % n as isize) + n as isize) as usize % n;
+            cand.push(self.ring[i].1);
+            if cand.len() >= 2 * count + 2 || cand.len() == n {
+                break;
+            }
+        }
+        cand.sort_by_key(|p| p.id);
+        cand.dedup_by_key(|p| p.id);
+        cand.sort_by_key(|p| ring_distance(&p.id.0, target));
+        cand.truncate(count);
+        cand
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.n
+    }
+}
+
+/// Aggregate network statistics.
+#[derive(Clone, Debug, Default)]
+pub struct NetStats {
+    pub msgs: u64,
+    pub bytes: u64,
+    pub dropped: u64,
+}
+
+pub struct SimNet {
+    slots: Vec<Slot>,
+    by_id: HashMap<NodeId, usize>,
+    directory: OracleDirectory,
+    dir_dirty: bool,
+    events: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    now_ms: u64,
+    opts: SimOpts,
+    rng: Rng,
+    pub stats: NetStats,
+    app_events: Vec<(NodeId, AppEvent)>,
+}
+
+impl SimNet {
+    /// Build a network of `n` peers from a config template. Peer `i`
+    /// gets region `i % opts.regions` and a deterministic identity.
+    pub fn new(mut cfg: VaultConfig, n: usize, opts: SimOpts) -> Self {
+        cfg.n_nodes = n;
+        let mut rng = Rng::new(opts.seed);
+        let mut slots = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut seed = [0u8; 32];
+            rng.fill_bytes(&mut seed);
+            let region = (i % opts.regions.max(1)) as u8;
+            let peer = VaultPeer::new(cfg.clone(), &seed, region);
+            slots.push(Slot { peer, up: true, attacked: false });
+        }
+        let by_id = slots.iter().enumerate().map(|(i, s)| (s.peer.info.id, i)).collect();
+        let directory = OracleDirectory::rebuild(&slots);
+        let mut net = SimNet {
+            slots,
+            by_id,
+            directory,
+            dir_dirty: false,
+            events: BinaryHeap::new(),
+            seq: 0,
+            now_ms: 0,
+            opts,
+            rng,
+            stats: NetStats::default(),
+            app_events: Vec::new(),
+        };
+        // Start maintenance timers on every peer.
+        for i in 0..n {
+            let mut out = Outbox::at(0);
+            net.slots[i].peer.init(&mut out);
+            net.drain(i, out);
+        }
+        net
+    }
+
+    pub fn now_ms(&self) -> u64 {
+        self.now_ms
+    }
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+    pub fn peer(&self, i: usize) -> &VaultPeer {
+        &self.slots[i].peer
+    }
+    pub fn peer_mut(&mut self, i: usize) -> &mut VaultPeer {
+        &mut self.slots[i].peer
+    }
+    pub fn peer_index(&self, id: &NodeId) -> Option<usize> {
+        self.by_id.get(id).copied()
+    }
+    pub fn is_up(&self, i: usize) -> bool {
+        self.slots[i].up && !self.slots[i].attacked
+    }
+
+    fn refresh_directory(&mut self) {
+        if self.dir_dirty {
+            self.directory = OracleDirectory::rebuild(&self.slots);
+            self.dir_dirty = false;
+        }
+    }
+
+    pub fn directory(&mut self) -> &OracleDirectory {
+        self.refresh_directory();
+        &self.directory
+    }
+
+    // ---- fault injection -------------------------------------------------
+
+    /// Permanent departure / crash: node stops processing entirely.
+    pub fn kill(&mut self, i: usize) {
+        self.slots[i].up = false;
+        self.dir_dirty = true;
+    }
+
+    /// Join a brand-new peer (churn arrivals). Returns its slot index.
+    pub fn spawn_peer(&mut self, region: u8) -> usize {
+        let mut seed = [0u8; 32];
+        self.rng.fill_bytes(&mut seed);
+        let mut cfg = self.slots[0].peer.cfg.clone();
+        cfg.byzantine = false;
+        let peer = VaultPeer::new(cfg, &seed, region);
+        let id = peer.info.id;
+        let idx = self.slots.len();
+        self.slots.push(Slot { peer, up: true, attacked: false });
+        self.by_id.insert(id, idx);
+        self.dir_dirty = true;
+        let mut out = Outbox::at(self.now_ms);
+        self.slots[idx].peer.init(&mut out);
+        self.drain(idx, out);
+        idx
+    }
+
+    /// Targeted attack (§6.1): traffic blackholed, node state intact.
+    pub fn attack(&mut self, i: usize) {
+        self.slots[i].attacked = true;
+        self.dir_dirty = true;
+    }
+
+    pub fn restore(&mut self, i: usize) {
+        self.slots[i].up = true;
+        self.slots[i].attacked = false;
+        self.dir_dirty = true;
+        // Restart its tick timer.
+        let mut out = Outbox::at(self.now_ms);
+        self.slots[i].peer.init(&mut out);
+        self.drain(i, out);
+    }
+
+    // ---- client operations -----------------------------------------------
+
+    pub fn store(&mut self, client: usize, object: &[u8], secret: &[u8], expires_ms: u64) -> u64 {
+        self.refresh_directory();
+        let mut out = Outbox::at(self.now_ms);
+        let op =
+            self.slots[client].peer.client_store(&self.directory, &mut out, object, secret, expires_ms);
+        self.drain(client, out);
+        op
+    }
+
+    pub fn query(&mut self, client: usize, id: &ObjectId) -> u64 {
+        self.refresh_directory();
+        let mut out = Outbox::at(self.now_ms);
+        let op = self.slots[client].peer.client_query(&self.directory, &mut out, id);
+        self.drain(client, out);
+        op
+    }
+
+    // ---- event loop --------------------------------------------------------
+
+    fn latency_for(&mut self, from_region: u8, to_region: u8, bytes: usize) -> u64 {
+        let base = REGION_LATENCY_MS[from_region as usize % 5][to_region as usize % 5];
+        let transfer = bytes as u64 / self.opts.bandwidth.max(1);
+        let raw = (base + transfer) as f64;
+        let jit = 1.0 + self.opts.jitter * (2.0 * self.rng.f64() - 1.0);
+        (raw * jit).max(0.1) as u64 + 1
+    }
+
+    fn drain(&mut self, from_slot: usize, out: Outbox) {
+        let from_info = self.slots[from_slot].peer.info;
+        let sender_blocked = !self.slots[from_slot].up || self.slots[from_slot].attacked;
+        for (to, msg) in out.sends {
+            self.slots[from_slot].peer.metrics.msgs_sent += 1;
+            let size = msg.approx_size();
+            self.slots[from_slot].peer.metrics.bytes_sent += size as u64;
+            if sender_blocked {
+                self.stats.dropped += 1;
+                continue;
+            }
+            let Some(&ti) = self.by_id.get(&to) else {
+                self.stats.dropped += 1;
+                continue;
+            };
+            if !self.slots[ti].up || self.slots[ti].attacked {
+                self.stats.dropped += 1;
+                continue;
+            }
+            if self.opts.drop_prob > 0.0 && self.rng.chance(self.opts.drop_prob) {
+                self.stats.dropped += 1;
+                continue;
+            }
+            let to_region = self.slots[ti].peer.info.region;
+            let lat = self.latency_for(from_info.region, to_region, size);
+            self.stats.msgs += 1;
+            self.stats.bytes += size as u64;
+            self.push_event(self.now_ms + lat, EventKind::Deliver { to: ti, from: from_info.id, msg });
+        }
+        for (delay, kind) in out.timers {
+            self.push_event(self.now_ms + delay.max(1), EventKind::Timer { peer: from_slot, kind });
+        }
+        for ev in out.app {
+            self.app_events.push((from_info.id, ev));
+        }
+    }
+
+    fn push_event(&mut self, at_ms: u64, kind: EventKind) {
+        self.seq += 1;
+        self.events.push(Reverse(Event { at_ms, seq: self.seq, kind }));
+    }
+
+    /// Advance virtual time until `t_ms`, returning app events emitted.
+    pub fn run_until(&mut self, t_ms: u64) -> Vec<(NodeId, AppEvent)> {
+        loop {
+            let Some(at) = self.events.peek().map(|Reverse(e)| e.at_ms) else { break };
+            if at > t_ms {
+                break;
+            }
+            let Reverse(event) = self.events.pop().unwrap();
+            self.now_ms = event.at_ms;
+            self.dispatch(event);
+        }
+        self.now_ms = self.now_ms.max(t_ms);
+        std::mem::take(&mut self.app_events)
+    }
+
+    /// Run for `d_ms` more virtual milliseconds.
+    pub fn run_for(&mut self, d_ms: u64) -> Vec<(NodeId, AppEvent)> {
+        self.run_until(self.now_ms + d_ms)
+    }
+
+    /// Run until a specific client op completes (or `deadline_ms`
+    /// passes). Op ids are per-peer counters, so the issuing client's
+    /// NodeId disambiguates concurrent ops across peers.
+    pub fn run_until_op_from(
+        &mut self,
+        client: NodeId,
+        op: u64,
+        deadline_ms: u64,
+    ) -> Option<AppEvent> {
+        let mut leftover = Vec::new();
+        let mut found = None;
+        while self.now_ms < deadline_ms {
+            let step = (self.now_ms + 200).min(deadline_ms);
+            for (id, ev) in self.run_until(step) {
+                let matches = id == client
+                    && matches!(
+                        &ev,
+                        AppEvent::StoreDone { op: o, .. } | AppEvent::QueryDone { op: o, .. } | AppEvent::OpFailed { op: o, .. } if *o == op
+                    );
+                if matches && found.is_none() {
+                    found = Some(ev);
+                } else {
+                    leftover.push((id, ev));
+                }
+            }
+            if found.is_some() {
+                break;
+            }
+            if self.events.is_empty() {
+                break;
+            }
+        }
+        self.app_events = leftover;
+        found
+    }
+
+    /// Back-compat wrapper matching by op id only (single-client runs).
+    pub fn run_until_op(&mut self, op: u64, deadline_ms: u64) -> Option<AppEvent> {
+        let mut leftover = Vec::new();
+        let mut found = None;
+        while self.now_ms < deadline_ms {
+            let step = (self.now_ms + 200).min(deadline_ms);
+            for (id, ev) in self.run_until(step) {
+                let matches = matches!(
+                    &ev,
+                    AppEvent::StoreDone { op: o, .. } | AppEvent::QueryDone { op: o, .. } | AppEvent::OpFailed { op: o, .. } if *o == op
+                );
+                if matches && found.is_none() {
+                    found = Some(ev);
+                } else {
+                    leftover.push((id, ev));
+                }
+            }
+            if found.is_some() {
+                break;
+            }
+            if self.events.is_empty() {
+                break;
+            }
+        }
+        self.app_events = leftover;
+        found
+    }
+
+    fn dispatch(&mut self, event: Event) {
+        match event.kind {
+            EventKind::Deliver { to, from, msg } => {
+                if !self.slots[to].up || self.slots[to].attacked {
+                    self.stats.dropped += 1;
+                    return;
+                }
+                self.refresh_directory();
+                let mut out = Outbox::at(self.now_ms);
+                // Take the directory out to satisfy the borrow checker.
+                let dir = std::mem::replace(
+                    &mut self.directory,
+                    OracleDirectory { ring: Vec::new(), n: 0 },
+                );
+                self.slots[to].peer.on_message(&dir, &mut out, from, msg);
+                self.directory = dir;
+                self.drain(to, out);
+            }
+            EventKind::Timer { peer, kind } => {
+                if !self.slots[peer].up {
+                    return; // dead peers lose their timers
+                }
+                self.refresh_directory();
+                let mut out = Outbox::at(self.now_ms);
+                let dir = std::mem::replace(
+                    &mut self.directory,
+                    OracleDirectory { ring: Vec::new(), n: 0 },
+                );
+                self.slots[peer].peer.on_timer(&dir, &mut out, kind);
+                self.directory = dir;
+                self.drain(peer, out);
+            }
+        }
+    }
+
+    /// Total fragments currently held across up peers for `chash`.
+    pub fn surviving_fragments(&self, chash: &Hash256) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| s.up && !s.attacked && !s.peer.cfg.byzantine)
+            .filter(|s| s.peer.fragment_index(chash).is_some())
+            .count()
+    }
+
+    /// Aggregate repair traffic across all peers (bytes pulled by joiners).
+    pub fn total_repair_traffic(&self) -> u64 {
+        self.slots.iter().map(|s| s.peer.metrics.repair_traffic_bytes).sum()
+    }
+}

@@ -1,0 +1,9 @@
+//! Long-running node support: persistent fragment storage.
+//!
+//! The protocol state machine ([`crate::proto::peer`]) keeps fragments
+//! in memory; a real deployment must survive process restarts without
+//! losing its chunk-group memberships. [`storage::DiskStore`] provides
+//! the crash-safe on-disk fragment store the `vault node` daemon
+//! snapshots into and recovers from.
+
+pub mod storage;

@@ -1,0 +1,159 @@
+//! Crash-safe on-disk fragment store.
+//!
+//! Layout: `<root>/<chash-hex>.frag`, one file per stored fragment,
+//! containing the wire-encoded [`StoredFragment`] (fragment + own
+//! selection proof + expiry). Writes go through a temp file + rename so
+//! a crash never leaves a torn record; unparseable files are skipped at
+//! recovery (treated as lost fragments — the group repairs them).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::codec::rateless::Fragment;
+use crate::crypto::vrf::VrfProof;
+use crate::crypto::Hash256;
+use crate::util;
+use crate::wire::{Decode, Encode};
+
+/// Everything a node must persist per fragment to resume group duty.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StoredFragment {
+    pub chash: Hash256,
+    pub frag: Fragment,
+    pub proof: VrfProof,
+    pub expires_ms: u64,
+}
+
+crate::wire_struct!(StoredFragment { chash, frag, proof, expires_ms });
+
+pub struct DiskStore {
+    root: PathBuf,
+}
+
+impl DiskStore {
+    pub fn open(root: impl Into<PathBuf>) -> std::io::Result<DiskStore> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)?;
+        Ok(DiskStore { root })
+    }
+
+    fn path_for(&self, chash: &Hash256) -> PathBuf {
+        self.root.join(format!("{}.frag", chash.to_hex()))
+    }
+
+    /// Atomic write: temp file in the same directory, fsync, rename.
+    pub fn put(&self, rec: &StoredFragment) -> std::io::Result<()> {
+        let final_path = self.path_for(&rec.chash);
+        let tmp_path = self.root.join(format!(".tmp-{}", util::now_ms()));
+        {
+            let mut f = std::fs::File::create(&tmp_path)?;
+            f.write_all(&rec.to_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp_path, &final_path)?;
+        Ok(())
+    }
+
+    pub fn get(&self, chash: &Hash256) -> Option<StoredFragment> {
+        let bytes = std::fs::read(self.path_for(chash)).ok()?;
+        StoredFragment::from_bytes(&bytes).ok()
+    }
+
+    pub fn remove(&self, chash: &Hash256) -> std::io::Result<bool> {
+        match std::fs::remove_file(self.path_for(chash)) {
+            Ok(()) => Ok(true),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Recover every parseable fragment (crash recovery path).
+    pub fn load_all(&self) -> std::io::Result<Vec<StoredFragment>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.root)? {
+            let entry = entry?;
+            let path = entry.path();
+            if path.extension().map(|e| e != "frag").unwrap_or(true) {
+                continue;
+            }
+            if let Ok(bytes) = std::fs::read(&path) {
+                if let Ok(rec) = StoredFragment::from_bytes(&bytes) {
+                    out.push(rec);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::ed25519::SigningKey;
+    use crate::crypto::vrf;
+
+    fn rec(tag: u8) -> StoredFragment {
+        let sk = SigningKey::from_seed(&[tag; 32]);
+        let (_, proof) = vrf::prove(&sk, &[tag]);
+        StoredFragment {
+            chash: Hash256::of(&[tag]),
+            frag: Fragment { index: tag as u64, chunk_len: 100, payload: vec![tag; 64] },
+            proof,
+            expires_ms: 12345,
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("vault-store-test-{tag}-{}", util::now_ms()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn put_get_remove_roundtrip() {
+        let store = DiskStore::open(tmpdir("rt")).unwrap();
+        let r = rec(1);
+        store.put(&r).unwrap();
+        assert_eq!(store.get(&r.chash), Some(r.clone()));
+        assert!(store.remove(&r.chash).unwrap());
+        assert_eq!(store.get(&r.chash), None);
+        assert!(!store.remove(&r.chash).unwrap());
+    }
+
+    #[test]
+    fn load_all_recovers_everything() {
+        let store = DiskStore::open(tmpdir("all")).unwrap();
+        for t in 1..=5 {
+            store.put(&rec(t)).unwrap();
+        }
+        let mut all = store.load_all().unwrap();
+        all.sort_by_key(|r| r.frag.index);
+        assert_eq!(all.len(), 5);
+        assert_eq!(all[0], rec(1));
+    }
+
+    #[test]
+    fn corrupt_files_are_skipped() {
+        let dir = tmpdir("corrupt");
+        let store = DiskStore::open(&dir).unwrap();
+        store.put(&rec(2)).unwrap();
+        std::fs::write(dir.join("garbage.frag"), b"not a fragment").unwrap();
+        let all = store.load_all().unwrap();
+        assert_eq!(all.len(), 1);
+    }
+
+    #[test]
+    fn overwrite_is_atomic_replacement() {
+        let store = DiskStore::open(tmpdir("ow")).unwrap();
+        let mut r = rec(3);
+        store.put(&r).unwrap();
+        r.expires_ms = 999;
+        store.put(&r).unwrap();
+        assert_eq!(store.get(&r.chash).unwrap().expires_ms, 999);
+        assert_eq!(store.load_all().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,400 @@
+//! Client-side STORE / QUERY sagas (paper Algorithm 1).
+//!
+//! Client operations run *on* a participating peer (§4.3.1: "client
+//! operations are issued on participating nodes"). Both sagas fan out
+//! per chunk and complete when enough fragments/chunks are in:
+//!
+//! * STORE — outer-encode the object into opaque chunks, then for each
+//!   chunk assign fragment index `i` to the i-th nearest candidate,
+//!   request its selection proof, verify, ship the fragment, and count
+//!   acks until R members hold fragments.
+//! * QUERY — for each chunk hash, pull fragments from candidates near
+//!   the hash until the inner decoder completes, verify the chunk's
+//!   content address, and feed the outer decoder until K_outer chunks
+//!   reconstruct the object.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::codec::outer::{encode_object, OuterDecoder};
+use crate::codec::rateless::{Fragment, InnerDecoder, InnerEncoder};
+use crate::codec::ObjectId;
+use crate::crypto::vrf::VrfProof;
+use crate::crypto::Hash256;
+use crate::dht::{NodeId, PeerInfo};
+
+use super::messages::Msg;
+use super::peer::VaultPeer;
+use super::{AppEvent, Directory, Outbox, TimerKind};
+
+/// Per-chunk STORE progress.
+pub(super) struct StoreChunk {
+    pub chash: Hash256,
+    pub encoder: InnerEncoder,
+    /// Candidate peers sorted by ring distance to `chash`.
+    pub candidates: Vec<PeerInfo>,
+    /// node -> (assigned index, sent_at_ms, frag_shipped)
+    pub assigned: HashMap<NodeId, (u64, u64, bool)>,
+    /// Confirmed group members.
+    pub acked: HashMap<NodeId, PeerInfo>,
+    pub next_index: u64,
+    pub next_candidate: usize,
+    pub done: bool,
+}
+
+pub(super) struct StoreOp {
+    pub started_ms: u64,
+    pub id: ObjectId,
+    pub expires_ms: u64,
+    pub chunks: HashMap<Hash256, StoreChunk>,
+    pub done_chunks: usize,
+}
+
+/// Per-chunk QUERY progress.
+pub(super) struct QueryChunk {
+    pub decoder: InnerDecoder,
+    pub candidates: Vec<PeerInfo>,
+    pub asked: HashSet<NodeId>,
+    pub next_candidate: usize,
+    pub complete: bool,
+}
+
+pub(super) struct QueryOp {
+    pub op: u64,
+    pub started_ms: u64,
+    pub outer: OuterDecoder,
+    pub chunks: HashMap<Hash256, QueryChunk>,
+    pub done: bool,
+}
+
+impl QueryOp {
+    pub(super) fn owns_op(&self, op: u64) -> bool {
+        self.op == op
+    }
+}
+
+impl VaultPeer {
+    /// Issue a STORE (Algorithm 1). Returns the op id; completion is
+    /// reported through [`AppEvent::StoreDone`].
+    pub fn client_store(
+        &mut self,
+        dir: &dyn Directory,
+        out: &mut Outbox,
+        object: &[u8],
+        secret: &[u8],
+        expires_ms: u64,
+    ) -> u64 {
+        let op = self.fresh_op();
+        let (id, chunks) = encode_object(object, secret, self.cfg.k_outer, self.cfg.n_outer);
+        let mut chunk_states = HashMap::new();
+        for c in chunks {
+            let candidates = dir.closest(&c.chash, self.cfg.candidates);
+            let encoder = InnerEncoder::new(c.chash, &c.bytes, self.cfg.k_inner);
+            let mut sc = StoreChunk {
+                chash: c.chash,
+                encoder,
+                candidates,
+                assigned: HashMap::new(),
+                acked: HashMap::new(),
+                next_index: 0,
+                next_candidate: 0,
+                done: false,
+            };
+            // Kick off: one fragment index per nearest candidate.
+            let r = self.cfg.r_inner;
+            Self::store_assign_more(&mut sc, out, op, r);
+            chunk_states.insert(c.chash, sc);
+        }
+        self.store_ops.insert(
+            op,
+            StoreOp {
+                started_ms: out.now_ms,
+                id,
+                expires_ms,
+                chunks: chunk_states,
+                done_chunks: 0,
+            },
+        );
+        out.timer(self.cfg.op_timeout_ms, TimerKind::OpTimeout { op });
+        op
+    }
+
+    /// Assign fresh fragment indices to unassigned candidates until R
+    /// assignments are outstanding or candidates run out.
+    fn store_assign_more(sc: &mut StoreChunk, out: &mut Outbox, op: u64, r_target: usize) {
+        while sc.acked.len() + sc.assigned.len() < r_target
+            && sc.next_candidate < sc.candidates.len()
+        {
+            let cand = sc.candidates[sc.next_candidate];
+            sc.next_candidate += 1;
+            if sc.acked.contains_key(&cand.id) || sc.assigned.contains_key(&cand.id) {
+                continue;
+            }
+            let index = sc.next_index;
+            sc.next_index += 1;
+            sc.assigned.insert(cand.id, (index, out.now_ms, false));
+            out.send(cand.id, Msg::GetProofs { op, chash: sc.chash, indices: vec![index] });
+        }
+    }
+
+    /// A STORE candidate proved (or failed to prove) eligibility.
+    pub(super) fn store_proofs_reply(
+        &mut self,
+        _dir: &dyn Directory,
+        out: &mut Outbox,
+        from: NodeId,
+        op: u64,
+        chash: Hash256,
+        pk: [u8; 32],
+        proofs: Vec<(u64, VrfProof)>,
+    ) {
+        let r_inner = self.cfg.r_inner;
+        let n_nodes = self.cfg.n_nodes;
+        let Some(sop) = self.store_ops.get_mut(&op) else { return };
+        let expires = sop.expires_ms;
+        let Some(sc) = sop.chunks.get_mut(&chash) else { return };
+        if sc.done {
+            return;
+        }
+        let Some(&(index, _, shipped)) = sc.assigned.get(&from) else { return };
+        if shipped {
+            return;
+        }
+        let proof = proofs.iter().find(|(i, _)| *i == index).map(|(_, p)| *p);
+        let valid = proof
+            .map(|p| {
+                self.metrics.vrf_verifies += 1;
+                super::selection::verify_selection(&pk, &chash, index, &p, r_inner, n_nodes)
+            })
+            .unwrap_or(false);
+        let sop = self.store_ops.get_mut(&op).unwrap();
+        let sc = sop.chunks.get_mut(&chash).unwrap();
+        if !valid {
+            // Not eligible (or bogus proof): reassign this index to the
+            // next candidate.
+            sc.assigned.remove(&from);
+            let idx_reuse = index;
+            // Reuse the same index on a fresh candidate.
+            while sc.next_candidate < sc.candidates.len() {
+                let cand = sc.candidates[sc.next_candidate];
+                sc.next_candidate += 1;
+                if !sc.acked.contains_key(&cand.id) && !sc.assigned.contains_key(&cand.id) {
+                    sc.assigned.insert(cand.id, (idx_reuse, out.now_ms, false));
+                    out.send(
+                        cand.id,
+                        Msg::GetProofs { op, chash, indices: vec![idx_reuse] },
+                    );
+                    break;
+                }
+            }
+            return;
+        }
+        // Ship the fragment.
+        let frag = sc.encoder.fragment(index);
+        let members: Vec<PeerInfo> = sc.acked.values().copied().collect();
+        sc.assigned.insert(from, (index, out.now_ms, true));
+        out.send(from, Msg::StoreFrag { op, chash, frag, members, expires_ms: expires });
+    }
+
+    pub(super) fn handle_store_ack(
+        &mut self,
+        _dir: &dyn Directory,
+        out: &mut Outbox,
+        from: NodeId,
+        op: u64,
+        chash: Hash256,
+        _index: u64,
+        ok: bool,
+    ) {
+        let r_target = self.cfg.r_inner;
+        let n_chunks = self.cfg.n_outer;
+        let Some(sop) = self.store_ops.get_mut(&op) else { return };
+        let started = sop.started_ms;
+        let Some(sc) = sop.chunks.get_mut(&chash) else { return };
+        if sc.done {
+            return;
+        }
+        let Some((_, _, _)) = sc.assigned.remove(&from) else { return };
+        if ok {
+            if let Some(info) = sc.candidates.iter().find(|c| c.id == from).copied() {
+                sc.acked.insert(from, info);
+            }
+        }
+        if sc.acked.len() >= r_target {
+            sc.done = true;
+            // Bootstrap the group with the final membership (§4.3.1).
+            let members: Vec<PeerInfo> = sc.acked.values().copied().collect();
+            for m in &members {
+                out.send(m.id, Msg::Members { chash, members: members.clone() });
+            }
+            sop.done_chunks += 1;
+            if sop.done_chunks == n_chunks {
+                let id = sop.id.clone();
+                let latency = out.now_ms.saturating_sub(started);
+                self.store_ops.remove(&op);
+                out.emit(AppEvent::StoreDone { op, id, latency_ms: latency });
+            }
+            return;
+        }
+        if !ok {
+            Self::store_assign_more(sc, out, op, r_target);
+        }
+    }
+
+    pub(super) fn store_op_timeout(&mut self, _dir: &dyn Directory, out: &mut Outbox, op: u64) {
+        let timeout = self.cfg.op_timeout_ms;
+        let deadline = self.cfg.op_deadline_ms;
+        let r_target = self.cfg.r_inner;
+        let Some(sop) = self.store_ops.get_mut(&op) else { return };
+        if out.now_ms.saturating_sub(sop.started_ms) > deadline {
+            let done = sop.done_chunks;
+            self.store_ops.remove(&op);
+            out.emit(AppEvent::OpFailed {
+                op,
+                kind: "store",
+                reason: format!("deadline exceeded ({done} chunks placed)"),
+            });
+            return;
+        }
+        let now = out.now_ms;
+        for sc in sop.chunks.values_mut() {
+            if sc.done {
+                continue;
+            }
+            // Drop stalled assignments, reassign to fresh candidates.
+            let stalled: Vec<NodeId> = sc
+                .assigned
+                .iter()
+                .filter(|(_, (_, sent, _))| now.saturating_sub(*sent) >= timeout)
+                .map(|(id, _)| *id)
+                .collect();
+            for id in stalled {
+                sc.assigned.remove(&id);
+            }
+            Self::store_assign_more(sc, out, op, r_target);
+        }
+        out.timer(timeout, TimerKind::OpTimeout { op });
+    }
+
+    /// Issue a QUERY (Algorithm 1). Completion via [`AppEvent::QueryDone`].
+    pub fn client_query(&mut self, dir: &dyn Directory, out: &mut Outbox, id: &ObjectId) -> u64 {
+        let op = self.fresh_op();
+        let mut chunks = HashMap::new();
+        for chash in &id.chunks {
+            let candidates = dir.closest(chash, self.cfg.candidates);
+            let mut qc = QueryChunk {
+                decoder: InnerDecoder::new(*chash, self.cfg.k_inner),
+                candidates,
+                asked: HashSet::new(),
+                next_candidate: 0,
+                complete: false,
+            };
+            let fanout = self.cfg.fetch_fanout;
+            Self::query_fan_out(&mut qc, out, op, *chash, fanout);
+            chunks.insert(*chash, qc);
+        }
+        self.query_ops.insert(
+            op,
+            QueryOp {
+                op,
+                started_ms: out.now_ms,
+                outer: OuterDecoder::new(self.cfg.k_outer),
+                chunks,
+                done: false,
+            },
+        );
+        out.timer(self.cfg.op_timeout_ms, TimerKind::OpTimeout { op });
+        op
+    }
+
+    fn query_fan_out(qc: &mut QueryChunk, out: &mut Outbox, op: u64, chash: Hash256, n: usize) {
+        let mut sent = 0;
+        while sent < n && qc.next_candidate < qc.candidates.len() {
+            let cand = qc.candidates[qc.next_candidate];
+            qc.next_candidate += 1;
+            if qc.asked.insert(cand.id) {
+                out.send(cand.id, Msg::GetFrag { op, chash });
+                sent += 1;
+            }
+        }
+    }
+
+    pub(super) fn query_frag_reply(
+        &mut self,
+        _dir: &dyn Directory,
+        out: &mut Outbox,
+        _from: NodeId,
+        op: u64,
+        chash: Hash256,
+        frag: Option<Fragment>,
+    ) {
+        let k_outer = self.cfg.k_outer;
+        let Some(qop) = self.query_ops.get_mut(&op) else { return };
+        if qop.done {
+            return;
+        }
+        let Some(qc) = qop.chunks.get_mut(&chash) else { return };
+        if qc.complete {
+            return;
+        }
+        match frag {
+            Some(f) => {
+                qc.decoder.push(&f);
+            }
+            None => {
+                // Miss: try one more candidate.
+                Self::query_fan_out(qc, out, op, chash, 1);
+                return;
+            }
+        }
+        if !qc.decoder.is_complete() {
+            return;
+        }
+        qc.complete = true;
+        let Some(bytes) = qc.decoder.recover() else { return };
+        crate::log_debug!("query op={op} chunk {chash:?} recovered ({} bytes)", bytes.len());
+        if Hash256::of(&bytes) != chash {
+            // Corrupted reconstruction (Byzantine payloads) — restart
+            // this chunk from scratch with a wider ask.
+            qc.complete = false;
+            qc.decoder = InnerDecoder::new(chash, self.cfg.k_inner);
+            Self::query_fan_out(qc, out, op, chash, 4);
+            return;
+        }
+        let advanced = qop.outer.push(&bytes);
+        crate::log_debug!(
+            "query op={op} outer push advanced={advanced} rank={}/{k_outer}",
+            qop.outer.rank()
+        );
+        if qop.outer.rank() >= k_outer {
+            if let Some(object) = qop.outer.recover() {
+                let latency = out.now_ms.saturating_sub(qop.started_ms);
+                qop.done = true;
+                self.query_ops.remove(&op);
+                out.emit(AppEvent::QueryDone { op, data: object, latency_ms: latency });
+            }
+        }
+    }
+
+    pub(super) fn query_op_timeout(&mut self, _dir: &dyn Directory, out: &mut Outbox, op: u64) {
+        let timeout = self.cfg.op_timeout_ms;
+        let deadline = self.cfg.op_deadline_ms;
+        let fanout = self.cfg.fetch_fanout;
+        let Some(qop) = self.query_ops.get_mut(&op) else { return };
+        if out.now_ms.saturating_sub(qop.started_ms) > deadline {
+            let rank = qop.outer.rank();
+            self.query_ops.remove(&op);
+            out.emit(AppEvent::OpFailed {
+                op,
+                kind: "query",
+                reason: format!("deadline exceeded ({rank} chunks recovered)"),
+            });
+            return;
+        }
+        for (chash, qc) in qop.chunks.iter_mut() {
+            if !qc.complete {
+                Self::query_fan_out(qc, out, op, *chash, fanout);
+            }
+        }
+        out.timer(timeout, TimerKind::OpTimeout { op });
+    }
+}

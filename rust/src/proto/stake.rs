@@ -1,0 +1,245 @@
+//! Stake registry — the proof-of-stake Sybil defense layer (§4.1).
+//!
+//! The paper assumes "adversaries do not possess more than 1/3 of the
+//! system stakes in aggregate" and uses stake only to gate identity
+//! creation ("Vault only leverages stake to defend against strong Sybil
+//! attacks"). This module provides that substrate: a registry mapping
+//! node identities to stake, an admission rule (minimum bond), and a
+//! stake-weighted variant of the selection threshold so an adversary
+//! minting many low-stake identities gains no aggregate eligibility.
+
+use std::collections::HashMap;
+
+use crate::crypto::vrf::VrfProof;
+use crate::crypto::Hash256;
+use crate::dht::{rank_distance, NodeId};
+
+/// Minimum stake to admit an identity (arbitrary protocol unit).
+pub const MIN_BOND: u64 = 1;
+
+#[derive(Clone, Debug, Default)]
+pub struct StakeRegistry {
+    stakes: HashMap<NodeId, u64>,
+    total: u64,
+}
+
+impl StakeRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Admit (or top up) an identity. Rejects sub-bond registrations —
+    /// the Sybil gate.
+    pub fn bond(&mut self, id: NodeId, stake: u64) -> bool {
+        if stake < MIN_BOND {
+            return false;
+        }
+        *self.stakes.entry(id).or_insert(0) += stake;
+        self.total += stake;
+        true
+    }
+
+    /// Slash / withdraw stake; identity is expelled at zero.
+    pub fn unbond(&mut self, id: &NodeId, stake: u64) -> u64 {
+        let Some(s) = self.stakes.get_mut(id) else { return 0 };
+        let taken = stake.min(*s);
+        *s -= taken;
+        self.total -= taken;
+        if *s == 0 {
+            self.stakes.remove(id);
+        }
+        taken
+    }
+
+    pub fn stake_of(&self, id: &NodeId) -> u64 {
+        self.stakes.get(id).copied().unwrap_or(0)
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_member(&self, id: &NodeId) -> bool {
+        self.stakes.contains_key(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.stakes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stakes.is_empty()
+    }
+
+    /// Aggregate stake fraction held by a set of identities — the
+    /// quantity the 1/3 assumption constrains.
+    pub fn fraction_of(&self, ids: impl Iterator<Item = NodeId>) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let held: u64 = ids.map(|id| self.stake_of(&id)).sum();
+        held as f64 / self.total as f64
+    }
+
+    /// Stake-weighted selection probability: a node's eligibility scales
+    /// with its share of total stake relative to the mean, so splitting
+    /// one identity's stake across many Sybils leaves the *aggregate*
+    /// selection probability unchanged (to first order).
+    pub fn weighted_probability(
+        &self,
+        id: &NodeId,
+        chash: &Hash256,
+        r_target: usize,
+        n_nodes: usize,
+    ) -> f64 {
+        let base = {
+            let d = rank_distance(&id.0, chash, n_nodes);
+            (r_target as f64 / d.max(1.0)).min(1.0)
+        };
+        if self.total == 0 || self.stakes.is_empty() {
+            return base;
+        }
+        let mean_stake = self.total as f64 / self.stakes.len() as f64;
+        let weight = (self.stake_of(id) as f64 / mean_stake).min(4.0); // cap boost
+        (base * weight).min(1.0)
+    }
+
+    /// Stake-weighted variant of `beta_selects`.
+    pub fn beta_selects_weighted(
+        &self,
+        beta: &[u8; 32],
+        id: &NodeId,
+        chash: &Hash256,
+        r_target: usize,
+        n_nodes: usize,
+    ) -> bool {
+        let p = self.weighted_probability(id, chash, r_target, n_nodes);
+        let frac = u128::from_be_bytes(beta[..16].try_into().unwrap()) as f64
+            / (u128::MAX as f64 + 1.0);
+        frac < p
+    }
+
+    /// Verify a stake-weighted selection proof (registry-gated: unknown
+    /// identities are never eligible regardless of VRF output).
+    pub fn verify_weighted_selection(
+        &self,
+        pk: &[u8; 32],
+        chash: &Hash256,
+        index: u64,
+        proof: &VrfProof,
+        r_target: usize,
+        n_nodes: usize,
+    ) -> bool {
+        let id = NodeId::from_pk(pk);
+        if !self.is_member(&id) {
+            return false;
+        }
+        let alpha = super::selection::selection_alpha(chash, index);
+        let Some(beta) = crate::crypto::vrf::verify(pk, &alpha, proof) else {
+            return false;
+        };
+        self.beta_selects_weighted(&beta, &id, chash, r_target, n_nodes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::ed25519::SigningKey;
+    use crate::crypto::vrf;
+    use crate::util::rng::Rng;
+
+    fn id(tag: u8) -> NodeId {
+        NodeId::from_pk(&[tag; 32])
+    }
+
+    #[test]
+    fn bond_unbond_accounting() {
+        let mut reg = StakeRegistry::new();
+        assert!(reg.bond(id(1), 100));
+        assert!(reg.bond(id(2), 50));
+        assert!(!reg.bond(id(3), 0), "sub-bond rejected");
+        assert_eq!(reg.total(), 150);
+        assert_eq!(reg.stake_of(&id(1)), 100);
+        assert_eq!(reg.unbond(&id(1), 40), 40);
+        assert_eq!(reg.stake_of(&id(1)), 60);
+        assert_eq!(reg.unbond(&id(1), 1000), 60, "over-withdraw clamps");
+        assert!(!reg.is_member(&id(1)));
+        assert_eq!(reg.total(), 50);
+    }
+
+    #[test]
+    fn fraction_of_measures_adversary_share() {
+        let mut reg = StakeRegistry::new();
+        for t in 1..=9 {
+            reg.bond(id(t), 100);
+        }
+        let adv = [id(1), id(2), id(3)];
+        let f = reg.fraction_of(adv.into_iter());
+        assert!((f - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sybil_split_does_not_amplify_eligibility() {
+        // One identity with stake 100 vs the same stake split over 10
+        // Sybils: aggregate weighted probability must not grow.
+        let chash = Hash256::of(b"sybil");
+        let n_nodes = 100;
+        let r = 10;
+        let mut whale = StakeRegistry::new();
+        whale.bond(id(1), 100);
+        for t in 50..149 {
+            whale.bond(id(t as u8), 100); // 99 honest peers
+        }
+        let p_whale = whale.weighted_probability(&id(1), &chash, r, n_nodes);
+
+        let mut sybil = StakeRegistry::new();
+        for t in 1..=10 {
+            sybil.bond(id(t), 10); // split
+        }
+        for t in 50..149 {
+            sybil.bond(id(t as u8), 100);
+        }
+        let p_sybils: f64 =
+            (1..=10).map(|t| sybil.weighted_probability(&id(t), &chash, r, n_nodes)).sum();
+        assert!(
+            p_sybils <= p_whale * 1.5 + 0.05,
+            "sybil aggregate {p_sybils} vs whale {p_whale}"
+        );
+    }
+
+    #[test]
+    fn unregistered_identities_never_verify() {
+        let mut rng = Rng::new(1);
+        let mut seed = [0u8; 32];
+        rng.fill_bytes(&mut seed);
+        let sk = SigningKey::from_seed(&seed);
+        let chash = Hash256::of(b"gate");
+        let alpha = crate::proto::selection::selection_alpha(&chash, 0);
+        let (_, proof) = vrf::prove(&sk, &alpha);
+        let reg = StakeRegistry::new();
+        assert!(!reg.verify_weighted_selection(&sk.public, &chash, 0, &proof, 1000, 10));
+    }
+
+    #[test]
+    fn registered_identity_with_valid_proof_verifies() {
+        let mut rng = Rng::new(2);
+        // Find an eligible (key, index) pair under generous r_target.
+        for _ in 0..20 {
+            let mut seed = [0u8; 32];
+            rng.fill_bytes(&mut seed);
+            let sk = SigningKey::from_seed(&seed);
+            let nid = NodeId::from_pk(&sk.public);
+            let chash = Hash256::of(b"ok");
+            let mut reg = StakeRegistry::new();
+            reg.bond(nid, 100);
+            let alpha = crate::proto::selection::selection_alpha(&chash, 3);
+            let (beta, proof) = vrf::prove(&sk, &alpha);
+            if reg.beta_selects_weighted(&beta, &nid, &chash, 1000, 1) {
+                assert!(reg.verify_weighted_selection(&sk.public, &chash, 3, &proof, 1000, 1));
+                return;
+            }
+        }
+        panic!("no eligible key found under generous threshold");
+    }
+}

@@ -1,0 +1,375 @@
+//! XLA/PJRT runtime: load the AOT-compiled L1/L2 artifacts and execute
+//! them from the rust hot path.
+//!
+//! `python/compile/aot.py` lowers the Pallas XOR-GEMM encode kernel, the
+//! GF(2) Gauss–Jordan decode graph, and the CTMC durability solver to
+//! HLO *text* (xla_extension 0.5.1 rejects jax≥0.5 serialized protos);
+//! this module compiles them once on the PJRT CPU client and exposes
+//! typed entry points whose outputs are bit-identical to the native
+//! [`crate::codec`] implementations (asserted by
+//! `tests/integration_runtime.rs`). When `artifacts/` is absent the
+//! callers fall back to the native paths, so the library never requires
+//! Python at run time.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::codec::rateless::{self, Fragment};
+use crate::crypto::Hash256;
+
+/// Artifact descriptor parsed from `manifest.tsv`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub k: usize,
+    pub r: usize,
+    pub w: usize,
+    pub file: String,
+}
+
+/// Parse the tab-separated manifest emitted by `aot.py`
+/// (`name\tkind\tk\tr\tw\tfile`).
+pub fn parse_manifest(text: &str) -> Vec<ArtifactMeta> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty() && !l.starts_with('#'))
+        .filter_map(|l| {
+            let f: Vec<&str> = l.split('\t').collect();
+            if f.len() != 6 {
+                return None;
+            }
+            Some(ArtifactMeta {
+                name: f[0].to_string(),
+                kind: f[1].to_string(),
+                k: f[2].parse().ok()?,
+                r: f[3].parse().ok()?,
+                w: f[4].parse().ok()?,
+                file: f[5].to_string(),
+            })
+        })
+        .collect()
+}
+
+struct Exec {
+    exe: xla::PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+}
+
+/// Compiled artifact registry bound to a PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    encoders: HashMap<(usize, usize, usize), Exec>, // (k, r, w)
+    decoders: HashMap<(usize, usize), Exec>,        // (k, w)
+    ctmc: Option<Exec>,                             // (s=r, t=w) in meta
+}
+
+/// Locate the artifacts directory: `$VAULT_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("VAULT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+impl Runtime {
+    /// Are artifacts present without loading them?
+    pub fn artifacts_available(dir: &Path) -> bool {
+        dir.join("manifest.tsv").exists()
+    }
+
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(&default_artifact_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest_path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let metas = parse_manifest(&text);
+        if metas.is_empty() {
+            bail!("empty manifest at {manifest_path:?}");
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut rt = Runtime { client, encoders: HashMap::new(), decoders: HashMap::new(), ctmc: None };
+        for meta in metas {
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path utf8")?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = rt
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", meta.name))?;
+            let exec = Exec { exe, meta: meta.clone() };
+            match meta.kind.as_str() {
+                "encode" => {
+                    rt.encoders.insert((meta.k, meta.r, meta.w), exec);
+                }
+                "decode" => {
+                    rt.decoders.insert((meta.k, meta.w), exec);
+                }
+                "ctmc" => rt.ctmc = Some(exec),
+                other => bail!("unknown artifact kind {other:?}"),
+            }
+        }
+        Ok(rt)
+    }
+
+    pub fn encoder_variants(&self) -> Vec<(usize, usize, usize)> {
+        self.encoders.keys().copied().collect()
+    }
+
+    /// Pick the encode artifact for dimension `k` with the widest panel.
+    fn best_encoder(&self, k: usize) -> Option<&Exec> {
+        self.encoders
+            .iter()
+            .filter(|((ak, _, _), _)| *ak == k)
+            .max_by_key(|((_, _, w), _)| *w)
+            .map(|(_, e)| e)
+    }
+
+    fn best_decoder(&self, k: usize) -> Option<&Exec> {
+        self.decoders
+            .iter()
+            .filter(|((ak, _), _)| *ak == k)
+            .max_by_key(|((_, w), _)| *w)
+            .map(|(_, e)| e)
+    }
+
+    /// Batch-encode fragments of a chunk through the XOR-GEMM artifact.
+    /// Output is bit-identical to [`rateless::InnerEncoder`].
+    pub fn encode_chunk(
+        &self,
+        chash: &Hash256,
+        chunk: &[u8],
+        k: usize,
+        indices: &[u64],
+    ) -> Result<Vec<Fragment>> {
+        let exec = self.best_encoder(k).context("no encode artifact for k")?;
+        let (ak, ar, aw) = (exec.meta.k, exec.meta.r, exec.meta.w);
+        debug_assert_eq!(ak, k);
+
+        // Pack chunk into k source blocks of u32 words (LE), padded to a
+        // whole number of w-panels.
+        let bs_bytes = rateless::block_size(chunk.len(), k);
+        let words_per_block = bs_bytes.div_ceil(4);
+        let panels = words_per_block.div_ceil(aw).max(1);
+        let padded_words = panels * aw;
+        let mut blocks = vec![0u32; k * padded_words];
+        for b in 0..k {
+            let start = b * bs_bytes;
+            let end = ((b + 1) * bs_bytes).min(chunk.len());
+            if start >= chunk.len() {
+                break;
+            }
+            let slice = &chunk[start..end];
+            for (wi, wchunk) in slice.chunks(4).enumerate() {
+                let mut word = [0u8; 4];
+                word[..wchunk.len()].copy_from_slice(wchunk);
+                blocks[b * padded_words + wi] = u32::from_le_bytes(word);
+            }
+        }
+
+        // Coefficient matrix: artifact is fixed at r rows; process the
+        // requested indices in r-sized batches (zero rows are harmless).
+        let mut out: Vec<Fragment> = Vec::with_capacity(indices.len());
+        for batch in indices.chunks(ar) {
+            let mut coeff = vec![0u32; ar * k];
+            for (row, &idx) in batch.iter().enumerate() {
+                for (c, bit) in rateless::coeff_row(chash, idx, k).into_iter().enumerate() {
+                    coeff[row * k + c] = bit as u32;
+                }
+            }
+            let coeff_lit = xla::Literal::vec1(&coeff)
+                .reshape(&[ar as i64, k as i64])
+                .map_err(|e| anyhow!("coeff reshape: {e:?}"))?;
+            // Accumulate per-panel results.
+            let mut payloads = vec![vec![0u32; padded_words]; batch.len()];
+            for p in 0..panels {
+                let mut panel = vec![0u32; k * aw];
+                for b in 0..k {
+                    let src = &blocks[b * padded_words + p * aw..b * padded_words + (p + 1) * aw];
+                    panel[b * aw..(b + 1) * aw].copy_from_slice(src);
+                }
+                let panel_lit = xla::Literal::vec1(&panel)
+                    .reshape(&[k as i64, aw as i64])
+                    .map_err(|e| anyhow!("panel reshape: {e:?}"))?;
+                let result = exec
+                    .exe
+                    .execute::<xla::Literal>(&[coeff_lit.clone(), panel_lit])
+                    .map_err(|e| anyhow!("execute encode: {e:?}"))?[0][0]
+                    .to_literal_sync()
+                    .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+                let frag_panel = result
+                    .to_tuple1()
+                    .map_err(|e| anyhow!("tuple1: {e:?}"))?
+                    .to_vec::<u32>()
+                    .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+                // frag_panel is (ar, aw) row-major.
+                for (row, payload) in payloads.iter_mut().enumerate() {
+                    payload[p * aw..(p + 1) * aw]
+                        .copy_from_slice(&frag_panel[row * aw..(row + 1) * aw]);
+                }
+            }
+            for (row, &idx) in batch.iter().enumerate() {
+                let mut bytes: Vec<u8> = Vec::with_capacity(bs_bytes);
+                for w in &payloads[row] {
+                    bytes.extend_from_slice(&w.to_le_bytes());
+                }
+                bytes.truncate(bs_bytes);
+                out.push(Fragment { index: idx, chunk_len: chunk.len() as u32, payload: bytes });
+            }
+        }
+        Ok(out)
+    }
+
+    /// Decode a chunk from exactly `k` fragments through the Gauss–Jordan
+    /// artifact. Returns `Ok(None)` when the fragment set is singular.
+    pub fn decode_chunk(
+        &self,
+        chash: &Hash256,
+        k: usize,
+        frags: &[Fragment],
+    ) -> Result<Option<Vec<u8>>> {
+        if frags.len() != k {
+            bail!("decode_chunk needs exactly k={k} fragments, got {}", frags.len());
+        }
+        let exec = self.best_decoder(k).context("no decode artifact for k")?;
+        let aw = exec.meta.w;
+        let kw = k.div_ceil(32);
+        let chunk_len = frags[0].chunk_len as usize;
+        let bs_bytes = frags[0].payload.len();
+        let words_per_block = bs_bytes.div_ceil(4);
+        let panels = words_per_block.div_ceil(aw).max(1);
+        let padded_words = panels * aw;
+
+        let mut coeff_bits = vec![0u32; k * kw];
+        let mut payload = vec![0u32; k * padded_words];
+        for (row, f) in frags.iter().enumerate() {
+            if f.payload.len() != bs_bytes || f.chunk_len as usize != chunk_len {
+                bail!("inconsistent fragment metadata");
+            }
+            let packed = rateless::coeff_row_packed(chash, f.index, k);
+            coeff_bits[row * kw..(row + 1) * kw].copy_from_slice(&packed);
+            for (wi, wchunk) in f.payload.chunks(4).enumerate() {
+                let mut word = [0u8; 4];
+                word[..wchunk.len()].copy_from_slice(wchunk);
+                payload[row * padded_words + wi] = u32::from_le_bytes(word);
+            }
+        }
+        let coeff_lit = xla::Literal::vec1(&coeff_bits)
+            .reshape(&[k as i64, kw as i64])
+            .map_err(|e| anyhow!("coeff reshape: {e:?}"))?;
+
+        let mut blocks = vec![0u32; k * padded_words];
+        for p in 0..panels {
+            let mut panel = vec![0u32; k * aw];
+            for row in 0..k {
+                panel[row * aw..(row + 1) * aw].copy_from_slice(
+                    &payload[row * padded_words + p * aw..row * padded_words + (p + 1) * aw],
+                );
+            }
+            let panel_lit = xla::Literal::vec1(&panel)
+                .reshape(&[k as i64, aw as i64])
+                .map_err(|e| anyhow!("panel reshape: {e:?}"))?;
+            let result = exec
+                .exe
+                .execute::<xla::Literal>(&[coeff_lit.clone(), panel_lit])
+                .map_err(|e| anyhow!("execute decode: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            let (blocks_lit, ok_lit) =
+                result.to_tuple2().map_err(|e| anyhow!("tuple2: {e:?}"))?;
+            let ok = ok_lit.to_vec::<u32>().map_err(|e| anyhow!("ok vec: {e:?}"))?;
+            if ok.first().copied().unwrap_or(0) == 0 {
+                return Ok(None); // singular system
+            }
+            let vals = blocks_lit.to_vec::<u32>().map_err(|e| anyhow!("blocks vec: {e:?}"))?;
+            for row in 0..k {
+                blocks[row * padded_words + p * aw..row * padded_words + (p + 1) * aw]
+                    .copy_from_slice(&vals[row * aw..(row + 1) * aw]);
+            }
+        }
+        // Reassemble chunk bytes: k blocks of bs_bytes each, truncated.
+        let mut out = Vec::with_capacity(k * bs_bytes);
+        for row in 0..k {
+            let mut bytes = Vec::with_capacity(padded_words * 4);
+            for w in &blocks[row * padded_words..(row + 1) * padded_words] {
+                bytes.extend_from_slice(&w.to_le_bytes());
+            }
+            bytes.truncate(bs_bytes);
+            out.extend_from_slice(&bytes);
+        }
+        out.truncate(chunk_len);
+        Ok(Some(out))
+    }
+
+    /// CTMC absorbing-probability series (Lemma 4.1) for `steps` steps,
+    /// chaining fixed-size artifact windows. `theta` is row-major s×s
+    /// padded to the artifact size; `absorb` is the absorbing index.
+    pub fn ctmc_series(
+        &self,
+        theta: &[f64],
+        init: &[f64],
+        absorb: usize,
+        steps: usize,
+    ) -> Result<Vec<f64>> {
+        let exec = self.ctmc.as_ref().context("no ctmc artifact")?;
+        let s = exec.meta.k; // states
+        let t_window = exec.meta.w; // scan steps per execution
+        if theta.len() != s * s || init.len() != s || absorb >= s {
+            bail!("ctmc shapes: need theta {s}x{s}, init {s}");
+        }
+        let theta_lit = xla::Literal::vec1(theta)
+            .reshape(&[s as i64, s as i64])
+            .map_err(|e| anyhow!("theta reshape: {e:?}"))?;
+        let mut idx = vec![0f64; s];
+        idx[absorb] = 1.0;
+        let idx_lit = xla::Literal::vec1(&idx);
+        let mut v = init.to_vec();
+        let mut series = Vec::with_capacity(steps);
+        while series.len() < steps {
+            let v_lit = xla::Literal::vec1(&v);
+            let result = exec
+                .exe
+                .execute::<xla::Literal>(&[theta_lit.clone(), v_lit, idx_lit.clone()])
+                .map_err(|e| anyhow!("execute ctmc: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            let (series_lit, final_lit) =
+                result.to_tuple2().map_err(|e| anyhow!("tuple2: {e:?}"))?;
+            let window = series_lit.to_vec::<f64>().map_err(|e| anyhow!("series: {e:?}"))?;
+            v = final_lit.to_vec::<f64>().map_err(|e| anyhow!("final: {e:?}"))?;
+            let take = (steps - series.len()).min(t_window);
+            series.extend_from_slice(&window[..take]);
+        }
+        Ok(series)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let text = "rlf_encode_k32_r80_w1024\tencode\t32\t80\t1024\trlf_encode_k32_r80_w1024.hlo.txt\n\
+                    # comment\n\
+                    ctmc_absorb_s64_t512\tctmc\t64\t0\t512\tctmc_absorb_s64_t512.hlo.txt\n";
+        let metas = parse_manifest(text);
+        assert_eq!(metas.len(), 2);
+        assert_eq!(metas[0].kind, "encode");
+        assert_eq!(metas[0].k, 32);
+        assert_eq!(metas[1].kind, "ctmc");
+        assert_eq!(metas[1].w, 512);
+    }
+
+    #[test]
+    fn malformed_lines_skipped() {
+        let metas = parse_manifest("bad line\nonly\tthree\tfields\n");
+        assert!(metas.is_empty());
+    }
+}

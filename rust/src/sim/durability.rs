@@ -1,0 +1,344 @@
+//! The VAULT chunk-group durability simulator (Figs. 4, 5, 6-top).
+//!
+//! Model (matching §6.1's setup):
+//! * `n_nodes` slots; the occupant of a slot fails after an Exp(λ)
+//!   lifetime (λ = churn rate) and is immediately replaced by a fresh
+//!   node (constant population, like the paper's one-churn-rate world).
+//! * Each object materializes `n_outer` chunks; each chunk group starts
+//!   with `r_inner` members sampled uniformly (node IDs are hashes, so
+//!   uniform sampling is exactly the protocol's behaviour).
+//! * A fraction of nodes is Byzantine: they heartbeat (count toward the
+//!   group-size check, suppressing repair) but store nothing.
+//! * When a group's *apparent* size drops below `r_inner`, a repair
+//!   fires after `detect_hours`: each missing fragment is installed on a
+//!   fresh random node, costing `k_inner` fragment transfers — or one,
+//!   if any live member holds a chunk-cache entry (the §4.3.4
+//!   optimization). Slow-path repairers refresh the cache.
+//! * A chunk is *recoverable* while ≥ `k_inner` honest members hold
+//!   fragments; dropping below is absorbing (Appendix A). An object is
+//!   lost when fewer than `k_outer` of its chunks are recoverable.
+
+use crate::util::rng::Rng;
+
+use super::{EventQueue, HOURS_PER_YEAR};
+
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub n_nodes: usize,
+    pub n_objects: usize,
+    /// Chunks per object (outer code: `n_outer` total, `k_outer` needed).
+    pub n_outer: usize,
+    pub k_outer: usize,
+    /// Inner code: `k_inner` needed, group target `r_inner`.
+    pub k_inner: usize,
+    pub r_inner: usize,
+    /// Mean node failures per node-year (Poisson churn rate).
+    pub churn_per_year: f64,
+    /// Failure-detection delay before repair starts (heartbeat lag).
+    pub detect_hours: f64,
+    /// Chunk-cache TTL in hours; 0 disables the cache (Fig. 4 subscript).
+    pub cache_ttl_hours: f64,
+    /// Fraction of (re)joining nodes that are Byzantine (Fig. 6 top).
+    pub byzantine_frac: f64,
+    pub duration_years: f64,
+    pub seed: u64,
+    /// Record the Fig. 5 per-chunk honest-fragment trace for group 0.
+    pub trace: bool,
+    pub trace_interval_hours: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            n_nodes: 100_000,
+            n_objects: 1_000,
+            n_outer: crate::params::N_OUTER,
+            k_outer: crate::params::K_OUTER,
+            k_inner: crate::params::K_INNER,
+            r_inner: crate::params::R_INNER,
+            churn_per_year: 2.0,
+            detect_hours: 1.0,
+            cache_ttl_hours: 0.0,
+            byzantine_frac: 0.0,
+            duration_years: 1.0,
+            seed: 42,
+            trace: false,
+            trace_interval_hours: 24.0 * 30.0,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct SimReport {
+    /// Total repair traffic in units of *object size*.
+    pub repair_traffic_objects: f64,
+    /// Fraction of objects permanently lost at the end.
+    pub lost_object_frac: f64,
+    pub lost_objects: usize,
+    pub repairs: u64,
+    pub cache_hits: u64,
+    pub node_failures: u64,
+    /// Fig. 5 trace: (hours, honest fragments alive) for group 0.
+    pub trace: Vec<(f64, usize)>,
+    /// Storage overhead: fragments currently stored / (objects · k_outer · k_inner).
+    pub redundancy: f64,
+}
+
+enum Ev {
+    NodeFail(usize),
+    Repair(usize), // group id
+    Trace,
+}
+
+struct Group {
+    /// (slot, epoch, honest) — epoch guards against slot reoccupation.
+    members: Vec<(u32, u32, bool)>,
+    /// Cache holders: (slot, epoch, expires_hours).
+    cache: Vec<(u32, u32, f64)>,
+    repair_scheduled: bool,
+    dead: bool, // honest-recoverable threshold crossed (absorbing)
+}
+
+pub fn run(cfg: &SimConfig) -> SimReport {
+    assert!(cfg.r_inner <= cfg.n_nodes, "group must fit population");
+    let mut rng = Rng::new(cfg.seed);
+    let n = cfg.n_nodes;
+    let lambda_per_hour = cfg.churn_per_year / HOURS_PER_YEAR;
+
+    // Node slots: epoch increments at each replacement; byz flag per occupant.
+    let mut epoch = vec![0u32; n];
+    let mut byz: Vec<bool> = (0..n).map(|_| rng.chance(cfg.byzantine_frac)).collect();
+    // Reverse index: groups each slot currently participates in.
+    let mut node_groups: Vec<Vec<u32>> = vec![Vec::new(); n];
+
+    let n_groups = cfg.n_objects * cfg.n_outer;
+    let mut groups: Vec<Group> = Vec::with_capacity(n_groups);
+    for g in 0..n_groups {
+        let picks = rng.sample_indices(n, cfg.r_inner);
+        let members: Vec<(u32, u32, bool)> =
+            picks.iter().map(|&s| (s as u32, epoch[s], !byz[s])).collect();
+        for &s in &picks {
+            node_groups[s].push(g as u32);
+        }
+        groups.push(Group { members, cache: Vec::new(), repair_scheduled: false, dead: false });
+    }
+
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    for s in 0..n {
+        q.push(rng.exp(lambda_per_hour), Ev::NodeFail(s));
+    }
+    if cfg.trace {
+        q.push(0.0, Ev::Trace);
+    }
+
+    let horizon = cfg.duration_years * HOURS_PER_YEAR;
+    let frag_units = 1.0 / (cfg.k_outer as f64 * cfg.k_inner as f64); // object-size units
+    let mut report = SimReport::default();
+    let mut now = 0.0f64;
+
+    while let Some((t, ev)) = q.pop() {
+        if t > horizon {
+            break;
+        }
+        now = t;
+        match ev {
+            Ev::NodeFail(slot) => {
+                report.node_failures += 1;
+                // Remove this occupant's fragments from all its groups.
+                let gs = std::mem::take(&mut node_groups[slot]);
+                let old_epoch = epoch[slot];
+                for &g in &gs {
+                    let group = &mut groups[g as usize];
+                    group.members.retain(|&(s, e, _)| !(s == slot as u32 && e == old_epoch));
+                    if group.dead {
+                        continue;
+                    }
+                    // Absorbing check: honest fragments below k_inner.
+                    let honest = group.members.iter().filter(|&&(_, _, h)| h).count();
+                    if honest < cfg.k_inner {
+                        group.dead = true;
+                        continue;
+                    }
+                    if group.members.len() < cfg.r_inner && !group.repair_scheduled {
+                        group.repair_scheduled = true;
+                        q.push(now + cfg.detect_hours, Ev::Repair(g as usize));
+                    }
+                }
+                // Replacement occupant.
+                epoch[slot] = epoch[slot].wrapping_add(1);
+                byz[slot] = rng.chance(cfg.byzantine_frac);
+                q.push(now + rng.exp(lambda_per_hour), Ev::NodeFail(slot));
+            }
+            Ev::Repair(g) => {
+                let group = &mut groups[g];
+                group.repair_scheduled = false;
+                if group.dead {
+                    continue;
+                }
+                // Drop expired cache entries & entries on departed nodes.
+                group.cache.retain(|&(s, e, exp)| exp > now && epoch[s as usize] == e);
+                let deficit = cfg.r_inner.saturating_sub(group.members.len());
+                for _ in 0..deficit {
+                    // Pick a fresh random node not already a member.
+                    let mut slot;
+                    loop {
+                        slot = rng.range(0, n);
+                        if !group.members.iter().any(|&(s, e, _)| {
+                            s == slot as u32 && e == epoch[slot]
+                        }) {
+                            break;
+                        }
+                    }
+                    report.repairs += 1;
+                    let cache_hit = !group.cache.is_empty();
+                    if cache_hit {
+                        report.cache_hits += 1;
+                        report.repair_traffic_objects += frag_units;
+                    } else {
+                        // Pull k_inner fragments, decode, construct; the
+                        // repairer now holds the chunk in cache.
+                        report.repair_traffic_objects += cfg.k_inner as f64 * frag_units;
+                        if cfg.cache_ttl_hours > 0.0 && !byz[slot] {
+                            group.cache.push((
+                                slot as u32,
+                                epoch[slot],
+                                now + cfg.cache_ttl_hours,
+                            ));
+                        }
+                    }
+                    group.members.push((slot as u32, epoch[slot], !byz[slot]));
+                    node_groups[slot].push(g as u32);
+                }
+            }
+            Ev::Trace => {
+                let g = &groups[0];
+                let honest = if g.dead {
+                    g.members.iter().filter(|&&(_, _, h)| h).count().min(cfg.k_inner - 1)
+                } else {
+                    g.members.iter().filter(|&&(_, _, h)| h).count()
+                };
+                report.trace.push((now, honest));
+                if now + cfg.trace_interval_hours <= horizon {
+                    q.push(now + cfg.trace_interval_hours, Ev::Trace);
+                }
+            }
+        }
+    }
+    let _ = now;
+
+    // Final accounting.
+    let mut lost = 0usize;
+    for obj in 0..cfg.n_objects {
+        let dead_chunks = (0..cfg.n_outer)
+            .filter(|&c| groups[obj * cfg.n_outer + c].dead)
+            .count();
+        if cfg.n_outer - dead_chunks < cfg.k_outer {
+            lost += 1;
+        }
+    }
+    report.lost_objects = lost;
+    report.lost_object_frac = lost as f64 / cfg.n_objects.max(1) as f64;
+    // Redundancy = stored bytes / logical bytes: each fragment is
+    // 1/(k_inner·k_outer) of an object.
+    let stored: usize = groups.iter().map(|g| g.members.len()).sum();
+    report.redundancy =
+        stored as f64 / (cfg.k_inner as f64 * cfg.k_outer as f64) / cfg.n_objects as f64;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(over: impl FnOnce(&mut SimConfig)) -> SimConfig {
+        let mut cfg = SimConfig {
+            n_nodes: 2_000,
+            n_objects: 50,
+            churn_per_year: 2.0,
+            duration_years: 0.5,
+            ..Default::default()
+        };
+        over(&mut cfg);
+        cfg
+    }
+
+    #[test]
+    fn no_churn_no_traffic_no_loss() {
+        let cfg = small(|c| c.churn_per_year = 1e-9);
+        let r = run(&cfg);
+        assert_eq!(r.lost_objects, 0);
+        assert_eq!(r.repairs, 0);
+        assert!(r.repair_traffic_objects < 1e-9);
+    }
+
+    #[test]
+    fn healthy_system_loses_nothing() {
+        let r = run(&small(|_| {}));
+        assert_eq!(r.lost_objects, 0, "default params must be durable");
+        assert!(r.repairs > 0, "churn must trigger repairs");
+        assert!(r.repair_traffic_objects > 0.0);
+    }
+
+    #[test]
+    fn traffic_scales_with_objects() {
+        let r1 = run(&small(|c| c.n_objects = 25));
+        let r2 = run(&small(|c| {
+            c.n_objects = 100;
+            c.seed = 43;
+        }));
+        assert!(
+            r2.repair_traffic_objects > r1.repair_traffic_objects * 2.0,
+            "4x objects should be >2x traffic ({} vs {})",
+            r2.repair_traffic_objects,
+            r1.repair_traffic_objects
+        );
+    }
+
+    #[test]
+    fn cache_reduces_traffic() {
+        let no_cache = run(&small(|c| c.churn_per_year = 6.0));
+        let cache = run(&small(|c| {
+            c.churn_per_year = 6.0;
+            c.cache_ttl_hours = 48.0;
+        }));
+        assert!(
+            cache.repair_traffic_objects < no_cache.repair_traffic_objects,
+            "cache {} !< nocache {}",
+            cache.repair_traffic_objects,
+            no_cache.repair_traffic_objects
+        );
+        assert!(cache.cache_hits > 0);
+    }
+
+    #[test]
+    fn extreme_byzantine_loses_objects() {
+        let r = run(&small(|c| {
+            c.byzantine_frac = 0.8;
+            c.churn_per_year = 12.0;
+            c.duration_years = 1.0;
+        }));
+        assert!(r.lost_object_frac > 0.5, "80% byz should destroy data, lost {}", r.lost_object_frac);
+    }
+
+    #[test]
+    fn moderate_byzantine_survives() {
+        let r = run(&small(|c| {
+            c.byzantine_frac = 0.2;
+            c.churn_per_year = 4.0;
+        }));
+        assert!(r.lost_object_frac < 0.05, "20% byz should be tolerated, lost {}", r.lost_object_frac);
+    }
+
+    #[test]
+    fn trace_is_recorded_and_bounded() {
+        let cfg = small(|c| {
+            c.trace = true;
+            c.trace_interval_hours = 24.0 * 14.0;
+        });
+        let r = run(&cfg);
+        assert!(r.trace.len() >= 10);
+        for &(_, frags) in &r.trace {
+            assert!(frags <= cfg.r_inner + 8, "honest never wildly exceeds R");
+        }
+    }
+}

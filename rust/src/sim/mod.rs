@@ -1,0 +1,120 @@
+//! Year-scale discrete-event durability simulation (paper §6.1).
+//!
+//! The §6.1 experiments (Figs. 4–6) run over 100K nodes and up to ten
+//! simulated years — far beyond what the message-level
+//! [`crate::net::simnet`] should carry. Following the paper ("we use
+//! two types of experiments ... discrete event simulation and physical
+//! deployment"), this module simulates at the *chunk-group* level:
+//! nodes fail as Poisson processes, groups lose members, repairs pull
+//! K_inner fragments (or one, on a chunk-cache hit) after a detection
+//! delay, and Byzantine members claim liveness while storing nothing.
+//!
+//! * [`durability`] — the VAULT group simulator (Figs. 4, 5, 6-top).
+//! * [`replica`] — the Ceph-like 3-replica baseline (Figs. 4, 6-top).
+//! * [`attack`] — targeted-attack Monte Carlo per Appendix A.2
+//!   (Fig. 6-bottom).
+
+pub mod attack;
+pub mod durability;
+pub mod replica;
+
+/// Common simulation clock units: hours.
+pub const HOURS_PER_YEAR: f64 = 24.0 * 365.0;
+
+/// A min-heap event queue keyed by f64 time.
+pub(crate) struct EventQueue<T> {
+    heap: std::collections::BinaryHeap<std::cmp::Reverse<(ordered::F64, u64, usize)>>,
+    payloads: Vec<Option<T>>,
+    free: Vec<usize>,
+    seq: u64,
+}
+
+pub(crate) mod ordered {
+    /// Total-ordered f64 wrapper for heap keys (no NaNs by construction).
+    #[derive(Clone, Copy, PartialEq)]
+    pub struct F64(pub f64);
+    impl Eq for F64 {}
+    impl PartialOrd for F64 {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for F64 {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            self.0.partial_cmp(&other.0).expect("NaN time")
+        }
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: std::collections::BinaryHeap::new(),
+            payloads: Vec::new(),
+            free: Vec::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn push(&mut self, at: f64, payload: T) {
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.payloads[s] = Some(payload);
+                s
+            }
+            None => {
+                self.payloads.push(Some(payload));
+                self.payloads.len() - 1
+            }
+        };
+        self.seq += 1;
+        self.heap.push(std::cmp::Reverse((ordered::F64(at), self.seq, slot)));
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        while let Some(std::cmp::Reverse((t, _, slot))) = self.heap.pop() {
+            if let Some(p) = self.payloads[slot].take() {
+                self.free.push(slot);
+                return Some((t.0, p));
+            }
+        }
+        None
+    }
+
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|std::cmp::Reverse((t, _, _))| t.0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_queue_orders_by_time() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        assert_eq!(q.pop().unwrap(), (1.0, "a"));
+        assert_eq!(q.pop().unwrap(), (2.0, "b"));
+        assert_eq!(q.peek_time(), Some(3.0));
+        assert_eq!(q.pop().unwrap(), (3.0, "c"));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ties_fifo() {
+        let mut q = EventQueue::new();
+        q.push(1.0, 1);
+        q.push(1.0, 2);
+        q.push(1.0, 3);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert_eq!(q.pop().unwrap().1, 3);
+    }
+}

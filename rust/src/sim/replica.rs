@@ -1,0 +1,197 @@
+//! Ceph-like replicated-storage baseline (§6.1: "replicates each object
+//! on 3 randomly selected peers, and performs object repair immediately
+//! after one of the replicas fails").
+//!
+//! Same node-churn machinery as [`super::durability`]; groups are
+//! 3-replica sets and repair copies a whole object from any surviving
+//! *honest* replica. Byzantine replicas ack storage but cannot be read
+//! back — repair from them silently propagates nothing, so an object is
+//! lost the moment no honest replica remains.
+
+use crate::util::rng::Rng;
+
+use super::{EventQueue, HOURS_PER_YEAR};
+
+#[derive(Clone, Debug)]
+pub struct ReplicaConfig {
+    pub n_nodes: usize,
+    pub n_objects: usize,
+    pub replicas: usize,
+    pub churn_per_year: f64,
+    pub detect_hours: f64,
+    pub byzantine_frac: f64,
+    pub duration_years: f64,
+    pub seed: u64,
+}
+
+impl Default for ReplicaConfig {
+    fn default() -> Self {
+        ReplicaConfig {
+            n_nodes: 100_000,
+            n_objects: 1_000,
+            replicas: crate::params::BASELINE_REPLICAS,
+            churn_per_year: 2.0,
+            detect_hours: 1.0,
+            byzantine_frac: 0.0,
+            duration_years: 1.0,
+            seed: 42,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ReplicaReport {
+    /// Repair traffic in object-size units (1 per replica re-copy).
+    pub repair_traffic_objects: f64,
+    pub lost_object_frac: f64,
+    pub lost_objects: usize,
+    pub repairs: u64,
+    pub node_failures: u64,
+}
+
+enum Ev {
+    NodeFail(usize),
+    Repair(usize),
+}
+
+struct RGroup {
+    members: Vec<(u32, u32, bool)>, // (slot, epoch, honest)
+    repair_scheduled: bool,
+    dead: bool,
+}
+
+pub fn run(cfg: &ReplicaConfig) -> ReplicaReport {
+    let mut rng = Rng::new(cfg.seed);
+    let n = cfg.n_nodes;
+    let lambda = cfg.churn_per_year / HOURS_PER_YEAR;
+
+    let mut epoch = vec![0u32; n];
+    let mut byz: Vec<bool> = (0..n).map(|_| rng.chance(cfg.byzantine_frac)).collect();
+    let mut node_groups: Vec<Vec<u32>> = vec![Vec::new(); n];
+
+    let mut groups: Vec<RGroup> = Vec::with_capacity(cfg.n_objects);
+    for g in 0..cfg.n_objects {
+        let picks = rng.sample_indices(n, cfg.replicas);
+        let members = picks.iter().map(|&s| (s as u32, epoch[s], !byz[s])).collect();
+        for &s in &picks {
+            node_groups[s].push(g as u32);
+        }
+        groups.push(RGroup { members, repair_scheduled: false, dead: false });
+    }
+
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    for s in 0..n {
+        q.push(rng.exp(lambda), Ev::NodeFail(s));
+    }
+
+    let horizon = cfg.duration_years * HOURS_PER_YEAR;
+    let mut report = ReplicaReport::default();
+
+    while let Some((t, ev)) = q.pop() {
+        if t > horizon {
+            break;
+        }
+        match ev {
+            Ev::NodeFail(slot) => {
+                report.node_failures += 1;
+                let gs = std::mem::take(&mut node_groups[slot]);
+                let old_epoch = epoch[slot];
+                for &g in &gs {
+                    let group = &mut groups[g as usize];
+                    group.members.retain(|&(s, e, _)| !(s == slot as u32 && e == old_epoch));
+                    if group.dead {
+                        continue;
+                    }
+                    // Lost iff no honest replica remains to copy from.
+                    if !group.members.iter().any(|&(_, _, h)| h) {
+                        group.dead = true;
+                        continue;
+                    }
+                    if group.members.len() < cfg.replicas && !group.repair_scheduled {
+                        group.repair_scheduled = true;
+                        q.push(t + cfg.detect_hours, Ev::Repair(g as usize));
+                    }
+                }
+                epoch[slot] = epoch[slot].wrapping_add(1);
+                byz[slot] = rng.chance(cfg.byzantine_frac);
+                q.push(t + rng.exp(lambda), Ev::NodeFail(slot));
+            }
+            Ev::Repair(g) => {
+                let group = &mut groups[g];
+                group.repair_scheduled = false;
+                if group.dead {
+                    continue;
+                }
+                let deficit = cfg.replicas.saturating_sub(group.members.len());
+                for _ in 0..deficit {
+                    let mut slot;
+                    loop {
+                        slot = rng.range(0, n);
+                        if !group
+                            .members
+                            .iter()
+                            .any(|&(s, e, _)| s == slot as u32 && e == epoch[slot])
+                        {
+                            break;
+                        }
+                    }
+                    report.repairs += 1;
+                    report.repair_traffic_objects += 1.0; // whole-object copy
+                    group.members.push((slot as u32, epoch[slot], !byz[slot]));
+                    node_groups[slot].push(g as u32);
+                }
+            }
+        }
+    }
+
+    report.lost_objects = groups.iter().filter(|g| g.dead).count();
+    report.lost_object_frac = report.lost_objects as f64 / cfg.n_objects.max(1) as f64;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(over: impl FnOnce(&mut ReplicaConfig)) -> ReplicaConfig {
+        let mut cfg = ReplicaConfig {
+            n_nodes: 2_000,
+            n_objects: 100,
+            churn_per_year: 2.0,
+            duration_years: 0.5,
+            ..Default::default()
+        };
+        over(&mut cfg);
+        cfg
+    }
+
+    #[test]
+    fn honest_network_is_durable() {
+        let r = run(&small(|_| {}));
+        assert_eq!(r.lost_objects, 0);
+        assert!(r.repairs > 0);
+    }
+
+    #[test]
+    fn byzantine_replicas_destroy_the_baseline() {
+        // The paper: "the baseline system loses all of its objects when
+        // less than 5% of the nodes are faulty" (over a year of churn).
+        let r = run(&small(|c| {
+            c.byzantine_frac = 0.10;
+            c.churn_per_year = 6.0;
+            c.duration_years = 1.0;
+        }));
+        assert!(
+            r.lost_object_frac > 0.05,
+            "10% byz should already lose objects, lost {}",
+            r.lost_object_frac
+        );
+    }
+
+    #[test]
+    fn traffic_is_per_object_per_failure() {
+        let r = run(&small(|_| {}));
+        // Every repair copies exactly one object.
+        assert!((r.repair_traffic_objects - r.repairs as f64).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,100 @@
+//! Tiny CLI argument parser (offline env has no clap).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and
+//! positional arguments. Used by `vault` subcommands, examples and the
+//! bench harness.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    flags.insert(stripped.to_string(), v);
+                } else {
+                    flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { flags, positional }
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.flags.get(key) {
+            Some(v) => v.parse().unwrap_or(default),
+            None => default,
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Parse a comma-separated list, e.g. `--sweep 1,2,4`.
+    pub fn list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.flags.get(key) {
+            Some(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = args(&["run", "--peers", "64", "--fast", "--mode=tcp"]);
+        assert_eq!(a.positional(), &["run".to_string()]);
+        assert_eq!(a.get("peers", 0usize), 64);
+        assert!(a.bool("fast"));
+        assert_eq!(a.str("mode", "sim"), "tcp");
+        assert_eq!(a.get("missing", 7u32), 7);
+    }
+
+    #[test]
+    fn parses_lists() {
+        let a = args(&["--sweep", "1,2,4"]);
+        assert_eq!(a.list("sweep", &[9usize]), vec![1, 2, 4]);
+        assert_eq!(a.list("other", &[9usize]), vec![9]);
+    }
+}

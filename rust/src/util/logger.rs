@@ -1,0 +1,82 @@
+//! Minimal leveled logger (offline env has no `env_logger`).
+//!
+//! Level comes from `VAULT_LOG` (`error|warn|info|debug|trace`), default
+//! `info`. Thread-safe; output goes to stderr.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn init_level() -> u8 {
+    let lvl = match std::env::var("VAULT_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    } as u8;
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+pub fn enabled(level: Level) -> bool {
+    let mut cur = LEVEL.load(Ordering::Relaxed);
+    if cur == u8::MAX {
+        cur = init_level();
+    }
+    (level as u8) <= cur
+}
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn log(level: Level, module: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let tag = match level {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{tag}] {module}: {args}");
+}
+
+#[macro_export]
+macro_rules! log_error { ($($a:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Error, module_path!(), format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($a:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Warn, module_path!(), format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($a:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Info, module_path!(), format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($a:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Debug, module_path!(), format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($a:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Trace, module_path!(), format_args!($($a)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+}

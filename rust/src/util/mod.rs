@@ -1,0 +1,90 @@
+//! Small shared utilities: hex, time, logging, RNGs, thread pool,
+//! statistics, CLI parsing. These stand in for the usual crates.io
+//! helpers (the build environment is fully offline).
+
+pub mod cli;
+pub mod logger;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+/// Lowercase hex encoding.
+pub fn hex(bytes: &[u8]) -> String {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        s.push(HEX[(b >> 4) as usize] as char);
+        s.push(HEX[(b & 0xf) as usize] as char);
+    }
+    s
+}
+
+/// Hex decoding; `None` on odd length or non-hex characters.
+pub fn unhex(s: &str) -> Option<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return None;
+    }
+    let nib = |c: u8| -> Option<u8> {
+        match c {
+            b'0'..=b'9' => Some(c - b'0'),
+            b'a'..=b'f' => Some(c - b'a' + 10),
+            b'A'..=b'F' => Some(c - b'A' + 10),
+            _ => None,
+        }
+    };
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len() / 2);
+    for i in (0..b.len()).step_by(2) {
+        out.push((nib(b[i])? << 4) | nib(b[i + 1])?);
+    }
+    Some(out)
+}
+
+/// Wall-clock milliseconds since the unix epoch.
+pub fn now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Monotonic nanoseconds timer for benches.
+pub struct Timer(std::time::Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(std::time::Instant::now())
+    }
+    pub fn elapsed_ns(&self) -> u64 {
+        self.0.elapsed().as_nanos() as u64
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex_roundtrip() {
+        let data = [0u8, 1, 0x7f, 0x80, 0xff, 0xde, 0xad];
+        assert_eq!(unhex(&hex(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn hex_known() {
+        assert_eq!(hex(&[0xde, 0xad, 0xbe, 0xef]), "deadbeef");
+        assert_eq!(unhex("DEADbeef").unwrap(), vec![0xde, 0xad, 0xbe, 0xef]);
+    }
+
+    #[test]
+    fn unhex_rejects_bad() {
+        assert!(unhex("abc").is_none());
+        assert!(unhex("zz").is_none());
+    }
+}

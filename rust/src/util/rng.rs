@@ -1,0 +1,335 @@
+//! Deterministic pseudo-random generators.
+//!
+//! * [`Rng`] — xoshiro256** seeded via SplitMix64: fast, reproducible;
+//!   used everywhere randomness is needed for *simulation/workloads*.
+//! * [`HashDrbg`] — SHA-256 counter DRBG; used where byte streams must be
+//!   derivable from protocol material (e.g. the client's private-key
+//!   based outer-chunk selection, fountain-code coefficient rows).
+
+use sha2::{Digest, Sha256};
+
+/// SplitMix64 step — used for seeding and as a cheap standalone mixer.
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** — the workhorse simulation RNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for v in s.iter_mut() {
+            *v = splitmix64(&mut sm);
+        }
+        Rng { s }
+    }
+
+    /// Derive an independent stream (for per-entity RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)`. Uses Lemire-style rejection to avoid modulo bias.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = {
+                let m = (x as u128) * (n as u128);
+                ((m >> 64) as u64, m as u64)
+            };
+            if lo < n {
+                let threshold = n.wrapping_neg() % n;
+                if lo < threshold {
+                    continue;
+                }
+            }
+            return hi;
+        }
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Exponential variate with rate `lambda` (inter-arrival times of a
+    /// Poisson process — the paper's churn model).
+    pub fn exp(&mut self, lambda: f64) -> f64 {
+        assert!(lambda > 0.0);
+        let u = loop {
+            let u = self.f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -u.ln() / lambda
+    }
+
+    /// Poisson variate (Knuth for small mean, normal approx for large).
+    pub fn poisson(&mut self, mean: f64) -> u64 {
+        if mean <= 0.0 {
+            return 0;
+        }
+        if mean < 30.0 {
+            let l = (-mean).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            // Normal approximation with continuity correction.
+            let g = self.gaussian();
+            let v = mean + mean.sqrt() * g + 0.5;
+            if v < 0.0 {
+                0
+            } else {
+                v as u64
+            }
+        }
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn gaussian(&mut self) -> f64 {
+        let u1 = loop {
+            let u = self.f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (partial Fisher-Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        if k * 4 >= n {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            all.truncate(k);
+            return all;
+        }
+        let mut seen = std::collections::HashSet::with_capacity(k * 2);
+        let mut out = Vec::with_capacity(k);
+        while out.len() < k {
+            let i = self.below(n as u64) as usize;
+            if seen.insert(i) {
+                out.push(i);
+            }
+        }
+        out
+    }
+
+    pub fn fill_bytes(&mut self, out: &mut [u8]) {
+        for chunk in out.chunks_mut(8) {
+            let v = self.next_u64().to_le_bytes();
+            chunk.copy_from_slice(&v[..chunk.len()]);
+        }
+    }
+}
+
+/// SHA-256 counter DRBG: an infinite deterministic byte stream from a
+/// seed. Protocol-visible randomness (coefficient rows, chunk picks) is
+/// drawn from this so all parties derive identical streams.
+pub struct HashDrbg {
+    seed: [u8; 32],
+    counter: u64,
+    buf: [u8; 32],
+    pos: usize,
+}
+
+impl HashDrbg {
+    pub fn new(seed_material: &[u8]) -> Self {
+        let mut h = Sha256::new();
+        h.update(b"vault-drbg-v1");
+        h.update(seed_material);
+        let seed: [u8; 32] = h.finalize().into();
+        HashDrbg { seed, counter: 0, buf: [0; 32], pos: 32 }
+    }
+
+    fn refill(&mut self) {
+        let mut h = Sha256::new();
+        h.update(self.seed);
+        h.update(self.counter.to_le_bytes());
+        self.buf = h.finalize().into();
+        self.counter += 1;
+        self.pos = 0;
+    }
+
+    pub fn next_byte(&mut self) -> u8 {
+        if self.pos >= 32 {
+            self.refill();
+        }
+        let b = self.buf[self.pos];
+        self.pos += 1;
+        b
+    }
+
+    pub fn fill(&mut self, out: &mut [u8]) {
+        for b in out.iter_mut() {
+            *b = self.next_byte();
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut b = [0u8; 8];
+        self.fill(&mut b);
+        u64::from_le_bytes(b)
+    }
+
+    /// Uniform below `n` by rejection on 64-bit draws.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let x = self.next_u64();
+            if x < zone {
+                return x % n;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(1);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = r.below(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(2);
+        for _ in 0..1000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn poisson_mean_roughly_right() {
+        let mut r = Rng::new(3);
+        for &mean in &[0.5, 5.0, 80.0] {
+            let n = 4000;
+            let total: u64 = (0..n).map(|_| r.poisson(mean)).sum();
+            let got = total as f64 / n as f64;
+            assert!((got - mean).abs() < mean.max(1.0) * 0.15, "mean {mean} got {got}");
+        }
+    }
+
+    #[test]
+    fn exp_mean_roughly_right() {
+        let mut r = Rng::new(4);
+        let lambda = 2.5;
+        let n = 20000;
+        let total: f64 = (0..n).map(|_| r.exp(lambda)).sum();
+        let got = total / n as f64;
+        assert!((got - 1.0 / lambda).abs() < 0.05, "got {got}");
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(5);
+        for &(n, k) in &[(10usize, 10usize), (1000, 5), (100, 50)] {
+            let s = r.sample_indices(n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn drbg_deterministic_and_spread() {
+        let mut a = HashDrbg::new(b"seed");
+        let mut b = HashDrbg::new(b"seed");
+        let mut c = HashDrbg::new(b"other");
+        let mut xa = [0u8; 64];
+        let mut xb = [0u8; 64];
+        let mut xc = [0u8; 64];
+        a.fill(&mut xa);
+        b.fill(&mut xb);
+        c.fill(&mut xc);
+        assert_eq!(xa, xb);
+        assert_ne!(xa, xc);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

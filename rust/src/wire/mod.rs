@@ -1,0 +1,460 @@
+//! Compact binary wire codec — the bincode substitute.
+//!
+//! All protocol messages (§5: "all messages are serialized using
+//! bincode") are encoded through [`Encode`]/[`Decode`]: little-endian
+//! fixed-width integers, LEB128 varints for lengths, no padding, no
+//! schema. Decoding is strict: trailing bytes or truncation are errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Input ended before the value was complete.
+    Truncated,
+    /// A tag/enum discriminant was out of range.
+    BadTag(u32),
+    /// Varint longer than 10 bytes.
+    BadVarint,
+    /// Payload length exceeded the configured cap.
+    TooLarge(usize),
+    /// Trailing bytes after a complete decode.
+    Trailing(usize),
+    /// Invalid UTF-8 in a string.
+    BadUtf8,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "truncated input"),
+            WireError::BadTag(t) => write!(f, "bad enum tag {t}"),
+            WireError::BadVarint => write!(f, "malformed varint"),
+            WireError::TooLarge(n) => write!(f, "length {n} exceeds cap"),
+            WireError::Trailing(n) => write!(f, "{n} trailing bytes"),
+            WireError::BadUtf8 => write!(f, "invalid utf-8"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+pub type WireResult<T> = Result<T, WireError>;
+
+/// Max element count for decoded collections — caps allocation from
+/// untrusted peers (Byzantine nodes can send arbitrary bytes).
+pub const MAX_SEQ_LEN: usize = 1 << 24;
+
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Writer { buf: Vec::new() }
+    }
+    pub fn with_capacity(cap: usize) -> Self {
+        Writer { buf: Vec::with_capacity(cap) }
+    }
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    pub fn u16(&mut self, v: u16) {
+        self.bytes(&v.to_le_bytes());
+    }
+    pub fn u32(&mut self, v: u32) {
+        self.bytes(&v.to_le_bytes());
+    }
+    pub fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+    pub fn i64(&mut self, v: i64) {
+        self.bytes(&v.to_le_bytes());
+    }
+    pub fn f64(&mut self, v: f64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    /// LEB128 varint — lengths and counts.
+    pub fn varint(&mut self, mut v: u64) {
+        loop {
+            let b = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(b);
+                break;
+            }
+            self.buf.push(b | 0x80);
+        }
+    }
+}
+
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn take(&mut self, n: usize) -> WireResult<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> WireResult<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn u16(&mut self) -> WireResult<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    pub fn u32(&mut self) -> WireResult<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn u64(&mut self) -> WireResult<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn i64(&mut self) -> WireResult<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn f64(&mut self) -> WireResult<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn varint(&mut self) -> WireResult<u64> {
+        let mut v = 0u64;
+        for shift in (0..64).step_by(7) {
+            let b = self.u8()?;
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+        }
+        Err(WireError::BadVarint)
+    }
+
+    pub fn seq_len(&mut self) -> WireResult<usize> {
+        let n = self.varint()? as usize;
+        if n > MAX_SEQ_LEN {
+            return Err(WireError::TooLarge(n));
+        }
+        Ok(n)
+    }
+
+    pub fn finish(self) -> WireResult<()> {
+        if self.remaining() != 0 {
+            Err(WireError::Trailing(self.remaining()))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+pub trait Encode {
+    fn encode(&self, w: &mut Writer);
+
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        self.encode(&mut w);
+        w.into_bytes()
+    }
+}
+
+pub trait Decode: Sized {
+    fn decode(r: &mut Reader<'_>) -> WireResult<Self>;
+
+    /// Strict decode: consumes the whole buffer.
+    fn from_bytes(buf: &[u8]) -> WireResult<Self> {
+        let mut r = Reader::new(buf);
+        let v = Self::decode(&mut r)?;
+        r.finish()?;
+        Ok(v)
+    }
+}
+
+// ---- primitive impls -------------------------------------------------
+
+macro_rules! prim {
+    ($t:ty, $wm:ident, $rm:ident) => {
+        impl Encode for $t {
+            fn encode(&self, w: &mut Writer) {
+                w.$wm(*self);
+            }
+        }
+        impl Decode for $t {
+            fn decode(r: &mut Reader<'_>) -> WireResult<Self> {
+                r.$rm()
+            }
+        }
+    };
+}
+prim!(u8, u8, u8);
+prim!(u16, u16, u16);
+prim!(u32, u32, u32);
+prim!(u64, u64, u64);
+prim!(i64, i64, i64);
+prim!(f64, f64, f64);
+
+impl Encode for bool {
+    fn encode(&self, w: &mut Writer) {
+        w.u8(*self as u8);
+    }
+}
+impl Decode for bool {
+    fn decode(r: &mut Reader<'_>) -> WireResult<Self> {
+        match r.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            t => Err(WireError::BadTag(t as u32)),
+        }
+    }
+}
+
+impl Encode for usize {
+    fn encode(&self, w: &mut Writer) {
+        w.varint(*self as u64);
+    }
+}
+impl Decode for usize {
+    fn decode(r: &mut Reader<'_>) -> WireResult<Self> {
+        Ok(r.varint()? as usize)
+    }
+}
+
+impl<const N: usize> Encode for [u8; N] {
+    fn encode(&self, w: &mut Writer) {
+        w.bytes(self);
+    }
+}
+impl<const N: usize> Decode for [u8; N] {
+    fn decode(r: &mut Reader<'_>) -> WireResult<Self> {
+        Ok(r.take(N)?.try_into().unwrap())
+    }
+}
+
+impl Encode for String {
+    fn encode(&self, w: &mut Writer) {
+        w.varint(self.len() as u64);
+        w.bytes(self.as_bytes());
+    }
+}
+impl Decode for String {
+    fn decode(r: &mut Reader<'_>) -> WireResult<Self> {
+        let n = r.seq_len()?;
+        let b = r.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|_| WireError::BadUtf8)
+    }
+}
+
+impl<T: Encode> Encode for Vec<T> {
+    fn encode(&self, w: &mut Writer) {
+        w.varint(self.len() as u64);
+        for item in self {
+            item.encode(w);
+        }
+    }
+}
+impl<T: Decode> Decode for Vec<T> {
+    fn decode(r: &mut Reader<'_>) -> WireResult<Self> {
+        let n = r.seq_len()?;
+        // Guard reserve by remaining bytes: each element takes >= 1 byte.
+        let mut v = Vec::with_capacity(n.min(r.remaining()));
+        for _ in 0..n {
+            v.push(T::decode(r)?);
+        }
+        Ok(v)
+    }
+}
+
+impl<T: Encode> Encode for Option<T> {
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            None => w.u8(0),
+            Some(v) => {
+                w.u8(1);
+                v.encode(w);
+            }
+        }
+    }
+}
+impl<T: Decode> Decode for Option<T> {
+    fn decode(r: &mut Reader<'_>) -> WireResult<Self> {
+        match r.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(T::decode(r)?)),
+            t => Err(WireError::BadTag(t as u32)),
+        }
+    }
+}
+
+impl<A: Encode, B: Encode> Encode for (A, B) {
+    fn encode(&self, w: &mut Writer) {
+        self.0.encode(w);
+        self.1.encode(w);
+    }
+}
+impl<A: Decode, B: Decode> Decode for (A, B) {
+    fn decode(r: &mut Reader<'_>) -> WireResult<Self> {
+        Ok((A::decode(r)?, B::decode(r)?))
+    }
+}
+
+impl<K: Encode + Ord, V: Encode> Encode for BTreeMap<K, V> {
+    fn encode(&self, w: &mut Writer) {
+        w.varint(self.len() as u64);
+        for (k, v) in self {
+            k.encode(w);
+            v.encode(w);
+        }
+    }
+}
+impl<K: Decode + Ord, V: Decode> Decode for BTreeMap<K, V> {
+    fn decode(r: &mut Reader<'_>) -> WireResult<Self> {
+        let n = r.seq_len()?;
+        let mut m = BTreeMap::new();
+        for _ in 0..n {
+            let k = K::decode(r)?;
+            let v = V::decode(r)?;
+            m.insert(k, v);
+        }
+        Ok(m)
+    }
+}
+
+/// Derive-free struct codec helper: `wire_struct!(Foo { a, b, c });`
+/// encodes/decodes fields in declaration order.
+#[macro_export]
+macro_rules! wire_struct {
+    ($name:ident { $($field:ident),+ $(,)? }) => {
+        impl $crate::wire::Encode for $name {
+            fn encode(&self, w: &mut $crate::wire::Writer) {
+                $( self.$field.encode(w); )+
+            }
+        }
+        impl $crate::wire::Decode for $name {
+            fn decode(r: &mut $crate::wire::Reader<'_>) -> $crate::wire::WireResult<Self> {
+                Ok($name { $( $field: $crate::wire::Decode::decode(r)?, )+ })
+            }
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip<T: Encode + Decode + PartialEq + std::fmt::Debug>(v: T) {
+        let b = v.to_bytes();
+        let got = T::from_bytes(&b).unwrap();
+        assert_eq!(got, v);
+    }
+
+    #[test]
+    fn primitives_roundtrip() {
+        roundtrip(0u8);
+        roundtrip(255u8);
+        roundtrip(u16::MAX);
+        roundtrip(u32::MAX);
+        roundtrip(u64::MAX);
+        roundtrip(-42i64);
+        roundtrip(3.14159f64);
+        roundtrip(true);
+        roundtrip(String::from("héllo"));
+        roundtrip(vec![1u32, 2, 3]);
+        roundtrip(Option::<u32>::None);
+        roundtrip(Some(9u64));
+        roundtrip([7u8; 32]);
+        roundtrip((1u8, String::from("x")));
+    }
+
+    #[test]
+    fn varint_boundaries() {
+        for v in [0u64, 127, 128, 16383, 16384, u64::MAX] {
+            let mut w = Writer::new();
+            w.varint(v);
+            let bytes = w.into_bytes();
+            let mut r = Reader::new(&bytes);
+            assert_eq!(r.varint().unwrap(), v);
+            r.finish().unwrap();
+        }
+    }
+
+    #[test]
+    fn strict_decode_rejects_trailing() {
+        let mut b = 7u32.to_bytes();
+        b.push(0);
+        assert_eq!(u32::from_bytes(&b), Err(WireError::Trailing(1)));
+    }
+
+    #[test]
+    fn truncation_is_error() {
+        let b = vec![1u8, 2];
+        assert_eq!(u32::from_bytes(&b), Err(WireError::Truncated));
+    }
+
+    #[test]
+    fn hostile_length_is_capped() {
+        // A vec claiming 2^40 elements must not allocate.
+        let mut w = Writer::new();
+        w.varint(1u64 << 40);
+        let b = w.into_bytes();
+        assert!(matches!(Vec::<u64>::from_bytes(&b), Err(WireError::TooLarge(_))));
+    }
+
+    #[test]
+    fn bad_bool_tag() {
+        assert_eq!(bool::from_bytes(&[2]), Err(WireError::BadTag(2)));
+    }
+
+    #[test]
+    fn property_random_vecs_roundtrip() {
+        let mut rng = Rng::new(0xC0DE);
+        for _ in 0..200 {
+            let n = rng.range(0, 64);
+            let v: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            roundtrip(v);
+            let s: String = (0..rng.range(0, 32)).map(|_| (b'a' + (rng.below(26) as u8)) as char).collect();
+            roundtrip(s);
+        }
+    }
+
+    struct Demo {
+        a: u32,
+        b: String,
+        c: Vec<u8>,
+    }
+    wire_struct!(Demo { a, b, c });
+
+    #[test]
+    fn wire_struct_macro() {
+        let d = Demo { a: 5, b: "hi".into(), c: vec![1, 2, 3] };
+        let b = d.to_bytes();
+        let got = Demo::from_bytes(&b).unwrap();
+        assert_eq!(got.a, 5);
+        assert_eq!(got.b, "hi");
+        assert_eq!(got.c, vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,232 @@
+//! End-to-end protocol tests over the virtual-time cluster: STORE/QUERY
+//! round trips, churn + decentralized repair, Byzantine tolerance, and
+//! membership convergence.
+
+use vault::coordinator::{Cluster, ClusterConfig};
+use vault::proto::{AppEvent, ClaimVerify};
+use vault::util::rng::Rng;
+
+fn obj(seed: u64, len: usize) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0u8; len];
+    rng.fill_bytes(&mut v);
+    v
+}
+
+#[test]
+fn store_query_from_every_region() {
+    let mut cluster = Cluster::start(ClusterConfig::small_test(60));
+    let data = obj(1, 50_000);
+    let id = cluster.store_blocking(0, &data, b"s", 0).expect("store").value;
+    // Clients in all five regions read the same bytes.
+    for client in [0, 1, 2, 3, 4] {
+        let got = cluster.query_blocking(client, &id).expect("query");
+        assert_eq!(got.value, data, "client {client}");
+        assert!(got.latency_ms > 0);
+    }
+}
+
+#[test]
+fn repair_restores_group_after_churn() {
+    let mut cfg = ClusterConfig::small_test(64);
+    // Fast maintenance so repair converges quickly in virtual time.
+    cfg.vault.heartbeat_ms = 5_000;
+    cfg.vault.suspicion_ms = 15_000;
+    cfg.vault.tick_ms = 5_000;
+    let r_target = cfg.vault.r_inner;
+    let mut cluster = Cluster::start(cfg);
+    let data = obj(2, 30_000);
+    let id = cluster.store_blocking(0, &data, b"s", 0).expect("store").value;
+    let chash = id.chunks[0];
+    assert!(cluster.net.surviving_fragments(&chash) >= r_target);
+
+    // Kill a third of the first chunk's group.
+    let mut killed = 0;
+    for _ in 0..r_target / 3 {
+        if cluster.evict_one_member(&chash).is_some() {
+            killed += 1;
+        }
+    }
+    assert!(killed > 0);
+    let after_kill = cluster.net.surviving_fragments(&chash);
+    assert!(after_kill < r_target);
+
+    // Let heartbeats detect and repair.
+    let mut repaired = false;
+    for _ in 0..60 {
+        cluster.net.run_for(10_000);
+        if cluster.net.surviving_fragments(&chash) >= r_target {
+            repaired = true;
+            break;
+        }
+    }
+    assert!(
+        repaired,
+        "group must be repaired back to R={r_target}, have {}",
+        cluster.net.surviving_fragments(&chash)
+    );
+    // Repair traffic was actually accounted.
+    assert!(cluster.net.total_repair_traffic() > 0);
+    // And the object still reads back (from a *live* client — the
+    // evictions may have killed low-index peers).
+    let client = cluster.random_client();
+    let got = cluster.query_blocking(client, &id).expect("query after repair");
+    assert_eq!(got.value, data);
+}
+
+#[test]
+fn byzantine_third_tolerated_with_full_verification() {
+    let mut cfg = ClusterConfig::small_test(90);
+    cfg.byzantine_frac = 0.33;
+    cfg.vault.claim_verify = ClaimVerify::Always;
+    // More headroom: Byzantine members serve nothing on query.
+    cfg.vault.fetch_fanout = 24;
+    cfg.vault.op_deadline_ms = 120_000;
+    let mut cluster = Cluster::start(cfg);
+    let data = obj(3, 20_000);
+    let client = cluster.random_client();
+    let id = cluster.store_blocking(client, &data, b"s", 0).expect("store").value;
+    let client = cluster.random_client();
+    let got = cluster.query_blocking(client, &id).expect("query despite 33% byzantine");
+    assert_eq!(got.value, data);
+}
+
+#[test]
+fn targeted_attack_below_margin_survives() {
+    let mut cfg = ClusterConfig::small_test(80);
+    cfg.vault.op_deadline_ms = 120_000;
+    let mut cluster = Cluster::start(cfg);
+    let data = obj(4, 25_000);
+    let id = cluster.store_blocking(0, &data, b"s", 0).expect("store").value;
+    // Attack ~8% of nodes (blackholed, not dead).
+    cluster.attack_random(6);
+    let client = cluster.random_client();
+    let got = cluster.query_blocking(client, &id).expect("query under attack");
+    assert_eq!(got.value, data);
+}
+
+#[test]
+fn expired_objects_are_garbage_collected() {
+    let mut cfg = ClusterConfig::small_test(48);
+    cfg.vault.tick_ms = 5_000;
+    let mut cluster = Cluster::start(cfg);
+    let data = obj(5, 10_000);
+    let expires = cluster.net.now_ms() + 60_000;
+    let id = cluster.store_blocking(0, &data, b"s", expires).expect("store").value;
+    assert!(cluster.net.surviving_fragments(&id.chunks[0]) > 0);
+    cluster.net.run_for(300_000); // long past expiry
+    assert_eq!(
+        cluster.net.surviving_fragments(&id.chunks[0]),
+        0,
+        "expired fragments must be GCed"
+    );
+}
+
+#[test]
+fn concurrent_stores_and_queries_all_complete() {
+    let mut cfg = ClusterConfig::small_test(72);
+    cfg.vault.op_deadline_ms = 120_000;
+    let mut cluster = Cluster::start(cfg);
+    let objects: Vec<Vec<u8>> = (0..6).map(|i| obj(10 + i, 15_000)).collect();
+    // Launch all stores concurrently from different clients. Op ids are
+    // per-peer counters, so track (client NodeId, op) pairs.
+    let ops: Vec<(vault::dht::NodeId, u64)> = objects
+        .iter()
+        .enumerate()
+        .map(|(i, o)| {
+            let client = i * 7 % 72;
+            let node = cluster.net.peer(client).info.id;
+            (node, cluster.net.store(client, o, format!("s{i}").as_bytes(), 0))
+        })
+        .collect();
+    let mut ids = vec![None; ops.len()];
+    let deadline = cluster.net.now_ms() + 200_000;
+    while ids.iter().any(|i| i.is_none()) && cluster.net.now_ms() < deadline {
+        for (node, ev) in cluster.net.run_for(1000) {
+            if let AppEvent::StoreDone { op, id, .. } = ev {
+                if let Some(pos) = ops.iter().position(|&(n, o)| n == node && o == op) {
+                    ids[pos] = Some(id);
+                }
+            }
+        }
+    }
+    for (i, id) in ids.iter().enumerate() {
+        let id = id.as_ref().expect("store completed");
+        let got = cluster.query_blocking((i * 11 + 3) % 72, id).expect("query");
+        assert_eq!(got.value, objects[i]);
+    }
+}
+
+#[test]
+fn group_membership_views_converge() {
+    let mut cfg = ClusterConfig::small_test(48);
+    cfg.vault.heartbeat_ms = 5_000;
+    cfg.vault.tick_ms = 5_000;
+    let mut cluster = Cluster::start(cfg);
+    let data = obj(6, 10_000);
+    let id = cluster.store_blocking(0, &data, b"s", 0).expect("store").value;
+    let chash = id.chunks[0];
+    cluster.net.run_for(60_000); // several heartbeat rounds
+    // Every member's view contains (almost) the whole group.
+    let holders: Vec<usize> = (0..cluster.net.len())
+        .filter(|&i| cluster.net.peer(i).fragment_index(&chash).is_some())
+        .collect();
+    let r = cluster.config().vault.r_inner;
+    assert!(holders.len() >= r);
+    for &h in &holders {
+        let view = cluster.net.peer(h).group_view(&chash);
+        assert!(
+            view.len() >= r * 9 / 10,
+            "holder {h} sees only {} of {} members",
+            view.len(),
+            holders.len()
+        );
+    }
+}
+
+#[test]
+fn chunk_cache_reduces_repair_traffic() {
+    // Two identical clusters, one with the cache enabled. After forced
+    // evictions + repair, the cached cluster must transfer fewer bytes.
+    let run = |cache_ttl: u64, seed: u64| -> u64 {
+        let mut cfg = ClusterConfig::small_test(64);
+        cfg.seed = seed;
+        cfg.vault.heartbeat_ms = 5_000;
+        cfg.vault.suspicion_ms = 15_000;
+        cfg.vault.tick_ms = 5_000;
+        cfg.vault.cache_ttl_ms = cache_ttl;
+        let mut cluster = Cluster::start(cfg);
+        let data = obj(7, 40_000);
+        let id = cluster.store_blocking(0, &data, b"s", 0).expect("store").value;
+        let chash = id.chunks[0];
+        // Two eviction rounds: the first repair populates caches (slow
+        // path), later repairs should hit them.
+        for _ in 0..3 {
+            cluster.evict_one_member(&chash);
+            cluster.net.run_for(120_000);
+        }
+        cluster.net.total_repair_traffic()
+    };
+    let without = run(0, 1);
+    let with = run(3_600_000, 1);
+    assert!(with > 0 && without > 0);
+    assert!(
+        with < without,
+        "cache should reduce repair traffic: with={with} without={without}"
+    );
+}
+
+#[test]
+fn survives_five_percent_message_loss() {
+    // WAN loss/asynchrony: 5% of messages silently dropped. Timeout
+    // retries and fan-out expansion must still complete both sagas.
+    let mut cfg = ClusterConfig::small_test(64);
+    cfg.sim.drop_prob = 0.05;
+    cfg.vault.op_deadline_ms = 180_000;
+    let mut cluster = Cluster::start(cfg);
+    let data = obj(8, 30_000);
+    let id = cluster.store_blocking(0, &data, b"s", 0).expect("store despite loss").value;
+    let got = cluster.query_blocking(9, &id).expect("query despite loss");
+    assert_eq!(got.value, data);
+    assert!(cluster.net.stats.dropped > 0, "loss injection must actually drop messages");
+}

@@ -1,0 +1,117 @@
+//! Cross-layer numerics: the AOT artifacts (Pallas XOR-GEMM encode,
+//! Gauss-Jordan decode, CTMC solver) must agree bit-for-bit /
+//! to-f64-precision with the native rust implementations.
+//!
+//! Skipped (with a loud message) when `artifacts/` has not been built —
+//! run `make artifacts` first.
+
+use vault::analysis::ctmc;
+use vault::codec::{InnerDecoder, InnerEncoder};
+use vault::crypto::Hash256;
+use vault::runtime::{default_artifact_dir, Runtime};
+use vault::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = default_artifact_dir();
+    if !Runtime::artifacts_available(&dir) {
+        eprintln!("SKIP: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("artifacts load"))
+}
+
+#[test]
+fn artifact_encode_matches_native_exactly() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(1);
+    for (k, len) in [(32usize, 100_000usize), (32, 31), (16, 4096), (64, 65_537)] {
+        let mut chunk = vec![0u8; len];
+        rng.fill_bytes(&mut chunk);
+        let chash = Hash256::of(&chunk);
+        let native = InnerEncoder::new(chash, &chunk, k);
+        let indices: Vec<u64> = (0..(2 * k as u64)).chain([u64::MAX, 1 << 40]).collect();
+        let frags = rt.encode_chunk(&chash, &chunk, k, &indices).expect("encode");
+        assert_eq!(frags.len(), indices.len());
+        for f in &frags {
+            assert_eq!(*f, native.fragment(f.index), "k={k} len={len} idx={}", f.index);
+        }
+    }
+}
+
+#[test]
+fn artifact_decode_roundtrips_and_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(2);
+    for (k, len) in [(32usize, 50_000usize), (16, 1000), (64, 20_000)] {
+        let mut chunk = vec![0u8; len];
+        rng.fill_bytes(&mut chunk);
+        let chash = Hash256::of(&chunk);
+        let enc = InnerEncoder::new(chash, &chunk, k);
+        // Find k linearly-independent fragments via the native decoder.
+        let mut dec = InnerDecoder::new(chash, k);
+        let mut picked = Vec::new();
+        let mut idx = 1000u64;
+        while !dec.is_complete() {
+            let f = enc.fragment(idx);
+            if dec.push(&f) {
+                picked.push(f);
+            }
+            idx += 1;
+        }
+        let native_chunk = dec.recover().unwrap();
+        let artifact_chunk = rt
+            .decode_chunk(&chash, k, &picked)
+            .expect("decode")
+            .expect("independent set must be full rank");
+        assert_eq!(artifact_chunk, native_chunk);
+        assert_eq!(artifact_chunk, chunk);
+    }
+}
+
+#[test]
+fn artifact_decode_flags_singular_systems() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(3);
+    let k = 32;
+    let mut chunk = vec![0u8; 10_000];
+    rng.fill_bytes(&mut chunk);
+    let chash = Hash256::of(&chunk);
+    let enc = InnerEncoder::new(chash, &chunk, k);
+    // k copies of the same fragment: rank 1.
+    let frags: Vec<_> = (0..k).map(|_| enc.fragment(7)).collect();
+    let out = rt.decode_chunk(&chash, k, &frags).expect("decode call");
+    assert!(out.is_none(), "duplicate fragments must be singular");
+}
+
+#[test]
+fn ctmc_artifact_matches_native_series() {
+    let Some(rt) = runtime() else { return };
+    for (n, k, q) in [(20usize, 8usize, 0.05f64), (40, 16, 0.02), (60, 32, 0.01)] {
+        let chain = ctmc::build_chain(&ctmc::CtmcConfig {
+            n,
+            k,
+            churn_q: q,
+            ..Default::default()
+        });
+        let native = chain.absorb_series(700);
+        let (theta, init, absorb) = chain.padded(64);
+        let artifact = rt.ctmc_series(&theta, &init, absorb, 700).expect("ctmc artifact");
+        assert_eq!(artifact.len(), native.len());
+        for (i, (a, b)) in artifact.iter().zip(&native).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-10,
+                "(n={n},k={k}) step {i}: artifact {a} vs native {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn artifact_encode_is_deterministic_across_calls() {
+    let Some(rt) = runtime() else { return };
+    let chunk = vec![0xA5u8; 8192];
+    let chash = Hash256::of(&chunk);
+    let a = rt.encode_chunk(&chash, &chunk, 32, &[0, 1, 2]).unwrap();
+    let b = rt.encode_chunk(&chash, &chunk, 32, &[0, 1, 2]).unwrap();
+    assert_eq!(a, b);
+}
