@@ -1,0 +1,52 @@
+"""Minimal deterministic stand-in for `hypothesis` (offline environment).
+
+Implements just the surface these tests use — ``@given`` with keyword
+strategies, ``@settings(max_examples=..., deadline=...)``,
+``st.integers`` and ``st.sampled_from`` — drawing examples from a fixed
+seed so runs are reproducible. When the real hypothesis package is
+installed, conftest.py leaves it alone and this module is unused.
+"""
+
+import random
+from types import SimpleNamespace
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(lo, hi):
+    return _Strategy(lambda rng: rng.randint(lo, hi))
+
+
+def _sampled_from(seq):
+    items = list(seq)
+    return _Strategy(lambda rng: rng.choice(items))
+
+
+strategies = SimpleNamespace(integers=_integers, sampled_from=_sampled_from)
+
+
+def given(**strategy_kw):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", 20)
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strategy_kw.items()}
+                fn(*args, **{**kwargs, **drawn})
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples=20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco

@@ -151,6 +151,42 @@ impl IpfsNet {
         self.peers[peer].up = false;
     }
 
+    /// The informed targeted adversary (§6.1): record placement is
+    /// public DHT state, so the attacker spends its node budget killing
+    /// whole `replicas`-node record neighborhoods — any record it
+    /// finishes off takes its object with it. Keys are attacked in
+    /// deterministic (sorted) order; returns the record keys destroyed.
+    pub fn attack_record_neighborhoods(&mut self, budget_nodes: usize) -> Vec<Hash256> {
+        let mut keys: Vec<Hash256> = self
+            .peers
+            .iter()
+            .flat_map(|p| p.records.keys().copied())
+            .collect();
+        keys.sort();
+        keys.dedup();
+        let mut budget = budget_nodes;
+        let mut destroyed = Vec::new();
+        for key in keys {
+            if budget < self.cfg.replicas {
+                break;
+            }
+            let holders: Vec<usize> = self
+                .holders_for(&key, self.cfg.replicas)
+                .into_iter()
+                .filter(|&h| self.peers[h].records.contains_key(&key))
+                .collect();
+            if holders.is_empty() || holders.len() > budget {
+                continue;
+            }
+            for &h in &holders {
+                self.peers[h].up = false;
+            }
+            budget -= holders.len();
+            destroyed.push(key);
+        }
+        destroyed
+    }
+
     /// PUT all records of an object from `client_region`; returns
     /// (handle, op). Run the net until the op completes to get latency.
     pub fn store(&mut self, client_region: u8, object_size: usize, tag: u64) -> (ObjectHandle, u64) {

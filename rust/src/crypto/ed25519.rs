@@ -5,7 +5,7 @@
 
 use super::bigint::{U256, U512};
 use super::point::Point;
-use sha2::{Digest, Sha512};
+use super::sha2::{Digest, Sha512};
 
 /// Group order l = 2^252 + 27742317777372353535851937790883648493,
 /// little-endian bytes.

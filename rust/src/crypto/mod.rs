@@ -6,10 +6,11 @@ pub mod bigint;
 pub mod ed25519;
 pub mod fe;
 pub mod point;
+pub mod sha2;
 pub mod vrf;
 
 use crate::wire::{Decode, Encode, Reader, WireResult, Writer};
-use sha2::{Digest, Sha256};
+use self::sha2::{Digest, Sha256};
 
 /// A 256-bit hash value — object IDs, chunk hashes, node IDs all live on
 /// this hash ring.
@@ -95,7 +96,7 @@ impl Decode for Hash256 {
 
 /// SHA-512 convenience.
 pub fn sha512(parts: &[&[u8]]) -> [u8; 64] {
-    use sha2::Sha512;
+    use self::sha2::Sha512;
     let mut h = Sha512::new();
     for p in parts {
         h.update(p);

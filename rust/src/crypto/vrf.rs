@@ -16,8 +16,8 @@
 use super::bigint::U256;
 use super::ed25519::{group_order, reduce_wide, SigningKey};
 use super::point::Point;
+use super::sha2::{Digest, Sha256, Sha512};
 use crate::wire::{Decode, Encode, Reader, WireResult, Writer};
-use sha2::{Digest, Sha256, Sha512};
 
 /// VRF proof: (Gamma, c, s) — 80 bytes on the wire.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -9,7 +9,11 @@
 //! * [`tcp`] — real sockets (length-prefixed frames, single dispatcher +
 //!   reader threads, mirroring the paper's actix single-server-thread +
 //!   worker-pool shape) for localhost cluster deployments.
+//! * [`shardnet`] — the simnet contract over sharded per-queue
+//!   conservative parallel simulation (worker pool, batched cross-shard
+//!   delivery) for 1k+-node scenario runs; see DESIGN.md §Shard model.
 
+pub mod shardnet;
 pub mod simnet;
 pub mod tcp;
 

@@ -1,0 +1,768 @@
+//! Sharded deterministic virtual-time network runtime.
+//!
+//! [`super::simnet::SimNet`] processes every event on one thread from a
+//! single global heap — fine for ≤100 peers, too slow for the 1k+ node
+//! scenario matrix. [`ShardNet`] partitions peers across shards, each
+//! with its **own virtual-time event queue and RNG stream**, and runs a
+//! conservative parallel discrete-event loop over
+//! [`crate::util::threadpool::ThreadPool`] workers:
+//!
+//! 1. **Window selection** — the next global timestamp `T` is the
+//!    minimum head across shard queues.
+//! 2. **Parallel window** — every shard with events at `T` processes
+//!    them independently. This is safe because every message and timer
+//!    is scheduled at least 1 virtual ms in the future (the network
+//!    lookahead), so nothing produced inside the window can land in it.
+//! 3. **Batched exchange** — cross-shard messages produced in the
+//!    window are buffered per shard and delivered at the barrier, in
+//!    shard-id order, before the next window is chosen.
+//!
+//! ## Determinism
+//!
+//! A run is a pure function of `(VaultConfig, n, SimOpts.seed, shards)`:
+//! within a shard, events execute in `(time, seq)` order; per-shard seq
+//! counters and the fixed barrier exchange order make cross-shard
+//! delivery order independent of worker count and OS scheduling. The
+//! worker pool size changes wall-clock time only, never the outcome —
+//! `shard_layout_is_part_of_the_seed` below asserts exactly this, and
+//! DESIGN.md §Scenario engine documents the contract.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::codec::ObjectId;
+use crate::crypto::Hash256;
+use crate::dht::{NodeId, PeerInfo};
+use crate::proto::messages::Msg;
+use crate::proto::peer::VaultPeer;
+use crate::proto::{AppEvent, Outbox, TimerKind, VaultConfig};
+use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
+
+use super::simnet::{NetStats, OracleDirectory, SimOpts};
+use super::REGION_LATENCY_MS;
+
+/// Where a node lives: shard, slot within the shard, latency region.
+#[derive(Clone, Copy, Debug)]
+struct Route {
+    shard: u32,
+    local: u32,
+    region: u8,
+}
+
+type RouteMap = HashMap<NodeId, Route>;
+
+struct Event {
+    at_ms: u64,
+    seq: u64,
+    kind: EventKind,
+}
+
+enum EventKind {
+    Deliver { to_local: usize, from: NodeId, msg: Msg },
+    Timer { peer_local: usize, kind: TimerKind },
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.at_ms == other.at_ms && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at_ms, self.seq).cmp(&(other.at_ms, other.seq))
+    }
+}
+
+struct Slot {
+    peer: VaultPeer,
+    up: bool,
+    attacked: bool,
+}
+
+/// A cross-shard message buffered during a window, delivered at the
+/// barrier.
+struct OutMsg {
+    dst_shard: usize,
+    at_ms: u64,
+    to_local: usize,
+    from: NodeId,
+    msg: Msg,
+}
+
+struct Shard {
+    id: usize,
+    slots: Vec<Slot>,
+    events: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    /// Private stream: latency jitter + drop decisions for messages
+    /// *sent* by this shard's peers.
+    rng: Rng,
+    stats: NetStats,
+    app_events: Vec<(NodeId, AppEvent)>,
+    outbound: Vec<OutMsg>,
+}
+
+fn link_latency(opts: &SimOpts, rng: &mut Rng, from_region: u8, to_region: u8, bytes: usize) -> u64 {
+    let base = REGION_LATENCY_MS[from_region as usize % 5][to_region as usize % 5];
+    let transfer = bytes as u64 / opts.bandwidth.max(1);
+    let raw = (base + transfer) as f64;
+    let jit = 1.0 + opts.jitter * (2.0 * rng.f64() - 1.0);
+    (raw * jit).max(0.1) as u64 + 1
+}
+
+impl Shard {
+    fn peek_time(&self) -> Option<u64> {
+        self.events.peek().map(|Reverse(e)| e.at_ms)
+    }
+
+    fn push_local(&mut self, at_ms: u64, kind: EventKind) {
+        self.seq += 1;
+        self.events.push(Reverse(Event { at_ms, seq: self.seq, kind }));
+    }
+
+    /// Route a peer's outbox: timers and same-shard sends enqueue
+    /// locally; cross-shard sends are buffered for the barrier exchange.
+    fn drain(&mut self, now_ms: u64, from_local: usize, out: Outbox, routes: &RouteMap, opts: &SimOpts) {
+        let from_info = self.slots[from_local].peer.info;
+        let sender_blocked = !self.slots[from_local].up || self.slots[from_local].attacked;
+        for (to, msg) in out.sends {
+            let size = msg.approx_size();
+            {
+                let m = &mut self.slots[from_local].peer.metrics;
+                m.msgs_sent += 1;
+                m.bytes_sent += size as u64;
+            }
+            if sender_blocked {
+                self.stats.dropped += 1;
+                continue;
+            }
+            let Some(route) = routes.get(&to).copied() else {
+                self.stats.dropped += 1;
+                continue;
+            };
+            if opts.drop_prob > 0.0 && self.rng.chance(opts.drop_prob) {
+                self.stats.dropped += 1;
+                continue;
+            }
+            let lat = link_latency(opts, &mut self.rng, from_info.region, route.region, size);
+            self.stats.msgs += 1;
+            self.stats.bytes += size as u64;
+            let at = now_ms + lat;
+            let to_local = route.local as usize;
+            if route.shard as usize == self.id {
+                self.push_local(at, EventKind::Deliver { to_local, from: from_info.id, msg });
+            } else {
+                self.outbound.push(OutMsg {
+                    dst_shard: route.shard as usize,
+                    at_ms: at,
+                    to_local,
+                    from: from_info.id,
+                    msg,
+                });
+            }
+        }
+        for (delay, kind) in out.timers {
+            self.push_local(now_ms + delay.max(1), EventKind::Timer { peer_local: from_local, kind });
+        }
+        for ev in out.app {
+            self.app_events.push((from_info.id, ev));
+        }
+    }
+
+    /// Execute every event scheduled at exactly `t`. Anything produced
+    /// lands at `t + lookahead(≥1)`, so shards never race within a
+    /// window.
+    fn process_window(&mut self, t: u64, dir: &OracleDirectory, routes: &RouteMap, opts: &SimOpts) {
+        while self.peek_time() == Some(t) {
+            let Reverse(event) = self.events.pop().unwrap();
+            match event.kind {
+                EventKind::Deliver { to_local, from, msg } => {
+                    if !self.slots[to_local].up || self.slots[to_local].attacked {
+                        self.stats.dropped += 1;
+                        continue;
+                    }
+                    let mut out = Outbox::at(t);
+                    self.slots[to_local].peer.on_message(dir, &mut out, from, msg);
+                    self.drain(t, to_local, out, routes, opts);
+                }
+                EventKind::Timer { peer_local, kind } => {
+                    if !self.slots[peer_local].up {
+                        continue; // dead peers lose their timers
+                    }
+                    let mut out = Outbox::at(t);
+                    self.slots[peer_local].peer.on_timer(dir, &mut out, kind);
+                    self.drain(t, peer_local, out, routes, opts);
+                }
+            }
+        }
+    }
+}
+
+/// Sharded virtual-time network: the [`SimNet`](super::simnet::SimNet)
+/// contract (store/query/churn/attack + virtual-time stepping) over
+/// parallel per-shard event queues.
+pub struct ShardNet {
+    shards: Vec<Option<Shard>>,
+    /// Global peer index → (shard, local slot).
+    index: Vec<(usize, usize)>,
+    by_id: HashMap<NodeId, usize>,
+    routes: Arc<RouteMap>,
+    directory: Arc<OracleDirectory>,
+    dir_dirty: bool,
+    cfg_template: VaultConfig,
+    opts: SimOpts,
+    master_rng: Rng,
+    now_ms: u64,
+    app_events: Vec<(NodeId, AppEvent)>,
+    pool: Option<ThreadPool>,
+    /// Messages and drops accounted before the current shards existed
+    /// (kept for completeness; per-shard stats hold the rest).
+    base_stats: NetStats,
+}
+
+impl ShardNet {
+    /// Build `n` peers over `n_shards` shards. Worker count only affects
+    /// wall-clock speed; the event order is fixed by `(cfg, n, opts,
+    /// n_shards)`.
+    pub fn new(mut cfg: VaultConfig, n: usize, opts: SimOpts, n_shards: usize) -> Self {
+        cfg.n_nodes = n;
+        let n_shards = n_shards.clamp(1, n.max(1));
+        let mut master_rng = Rng::new(opts.seed);
+        let mut shards: Vec<Shard> = (0..n_shards)
+            .map(|id| Shard {
+                id,
+                slots: Vec::new(),
+                events: BinaryHeap::new(),
+                seq: 0,
+                rng: Rng::new(opts.seed ^ (0x5AD0_u64.wrapping_add(id as u64).wrapping_mul(0x9E3779B97F4A7C15))),
+                stats: NetStats::default(),
+                app_events: Vec::new(),
+                outbound: Vec::new(),
+            })
+            .collect();
+        let mut index = Vec::with_capacity(n);
+        let mut by_id = HashMap::with_capacity(n);
+        let mut routes = RouteMap::with_capacity(n);
+        for i in 0..n {
+            let mut seed = [0u8; 32];
+            master_rng.fill_bytes(&mut seed);
+            let region = (i % opts.regions.max(1)) as u8;
+            let peer = VaultPeer::new(cfg.clone(), &seed, region);
+            let shard = i % n_shards;
+            let local = shards[shard].slots.len();
+            by_id.insert(peer.info.id, i);
+            routes.insert(
+                peer.info.id,
+                Route { shard: shard as u32, local: local as u32, region },
+            );
+            shards[shard].slots.push(Slot { peer, up: true, attacked: false });
+            index.push((shard, local));
+        }
+        let directory = Arc::new(OracleDirectory::from_peers(
+            shards.iter().flat_map(|s| s.slots.iter().map(|sl| sl.peer.info)),
+        ));
+        let workers = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4)
+            .min(n_shards);
+        let pool = (workers > 1 && n_shards > 1).then(|| ThreadPool::new(workers));
+        let routes = Arc::new(routes);
+        let mut net = ShardNet {
+            shards: shards.into_iter().map(Some).collect(),
+            index,
+            by_id,
+            routes,
+            directory,
+            dir_dirty: false,
+            cfg_template: cfg,
+            opts,
+            master_rng,
+            now_ms: 0,
+            app_events: Vec::new(),
+            pool,
+            base_stats: NetStats::default(),
+        };
+        // Start maintenance timers on every peer (global index order for
+        // a reproducible initial schedule).
+        for i in 0..n {
+            let (s, l) = net.index[i];
+            let mut out = Outbox::at(0);
+            let shard = net.shards[s].as_mut().unwrap();
+            shard.slots[l].peer.init(&mut out);
+            let routes = Arc::clone(&net.routes);
+            let opts = net.opts.clone();
+            shard.drain(0, l, out, &routes, &opts);
+        }
+        net.exchange();
+        net
+    }
+
+    // ---- accessors ---------------------------------------------------------
+
+    pub fn now_ms(&self) -> u64 {
+        self.now_ms
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn slot(&self, i: usize) -> &Slot {
+        let (s, l) = self.index[i];
+        &self.shards[s].as_ref().expect("shard in flight").slots[l]
+    }
+
+    fn slot_mut(&mut self, i: usize) -> &mut Slot {
+        let (s, l) = self.index[i];
+        &mut self.shards[s].as_mut().expect("shard in flight").slots[l]
+    }
+
+    pub fn peer(&self, i: usize) -> &VaultPeer {
+        &self.slot(i).peer
+    }
+
+    pub fn peer_mut(&mut self, i: usize) -> &mut VaultPeer {
+        &mut self.slot_mut(i).peer
+    }
+
+    pub fn peer_index(&self, id: &NodeId) -> Option<usize> {
+        self.by_id.get(id).copied()
+    }
+
+    pub fn is_up(&self, i: usize) -> bool {
+        let s = self.slot(i);
+        s.up && !s.attacked
+    }
+
+    /// Aggregate network statistics across shards.
+    pub fn stats(&self) -> NetStats {
+        let mut total = self.base_stats.clone();
+        for s in self.shards.iter().flatten() {
+            total.msgs += s.stats.msgs;
+            total.bytes += s.stats.bytes;
+            total.dropped += s.stats.dropped;
+        }
+        total
+    }
+
+    fn refresh_directory(&mut self) {
+        if self.dir_dirty {
+            self.directory = Arc::new(OracleDirectory::from_peers(
+                self.shards
+                    .iter()
+                    .flatten()
+                    .flat_map(|s| s.slots.iter())
+                    .filter(|sl| sl.up && !sl.attacked)
+                    .map(|sl| sl.peer.info),
+            ));
+            self.dir_dirty = false;
+        }
+    }
+
+    // ---- fault injection ---------------------------------------------------
+
+    pub fn kill(&mut self, i: usize) {
+        self.slot_mut(i).up = false;
+        self.dir_dirty = true;
+    }
+
+    pub fn attack(&mut self, i: usize) {
+        self.slot_mut(i).attacked = true;
+        self.dir_dirty = true;
+    }
+
+    pub fn restore(&mut self, i: usize) {
+        let was_down = {
+            let slot = self.slot_mut(i);
+            let was_down = !slot.up;
+            slot.up = true;
+            slot.attacked = false;
+            was_down
+        };
+        self.dir_dirty = true;
+        // Killed peers lost their timer chain; attacked peers kept it
+        // running (the Timer arm only gates on `up`), so re-initing
+        // them would double the Tick chain.
+        if was_down {
+            let now = self.now_ms;
+            let (s, l) = self.index[i];
+            let routes = Arc::clone(&self.routes);
+            let opts = self.opts.clone();
+            let shard = self.shards[s].as_mut().unwrap();
+            let mut out = Outbox::at(now);
+            shard.slots[l].peer.init(&mut out);
+            shard.drain(now, l, out, &routes, &opts);
+            self.exchange();
+        }
+    }
+
+    /// Is the peer currently blackholed by a targeted attack (state and
+    /// timer chain intact, unlike a killed peer)?
+    pub fn is_attacked(&self, i: usize) -> bool {
+        self.slot(i).attacked
+    }
+
+    /// Join a brand-new peer (churn arrivals). Returns its global index.
+    pub fn spawn_peer(&mut self, region: u8) -> usize {
+        let mut seed = [0u8; 32];
+        self.master_rng.fill_bytes(&mut seed);
+        let mut cfg = self.cfg_template.clone();
+        cfg.byzantine = false;
+        let peer = VaultPeer::new(cfg, &seed, region);
+        let id = peer.info.id;
+        let idx = self.index.len();
+        let shard_idx = idx % self.shards.len();
+        let shard = self.shards[shard_idx].as_mut().unwrap();
+        let local = shard.slots.len();
+        shard.slots.push(Slot { peer, up: true, attacked: false });
+        self.index.push((shard_idx, local));
+        self.by_id.insert(id, idx);
+        Arc::make_mut(&mut self.routes).insert(
+            id,
+            Route { shard: shard_idx as u32, local: local as u32, region },
+        );
+        self.dir_dirty = true;
+        let now = self.now_ms;
+        let routes = Arc::clone(&self.routes);
+        let opts = self.opts.clone();
+        let shard = self.shards[shard_idx].as_mut().unwrap();
+        let mut out = Outbox::at(now);
+        shard.slots[local].peer.init(&mut out);
+        shard.drain(now, local, out, &routes, &opts);
+        self.exchange();
+        idx
+    }
+
+    /// Scenario hook: change in-flight message loss mid-run.
+    pub fn set_drop_prob(&mut self, p: f64) {
+        self.opts.drop_prob = p.clamp(0.0, 1.0);
+    }
+
+    /// Scenario hook: change the per-link bandwidth model mid-run.
+    pub fn set_bandwidth(&mut self, bytes_per_ms: u64) {
+        self.opts.bandwidth = bytes_per_ms.max(1);
+    }
+
+    // ---- client operations -------------------------------------------------
+
+    pub fn store(&mut self, client: usize, object: &[u8], secret: &[u8], expires_ms: u64) -> u64 {
+        self.refresh_directory();
+        let dir = Arc::clone(&self.directory);
+        let routes = Arc::clone(&self.routes);
+        let opts = self.opts.clone();
+        let now = self.now_ms;
+        let (s, l) = self.index[client];
+        let shard = self.shards[s].as_mut().unwrap();
+        let mut out = Outbox::at(now);
+        let op = shard.slots[l].peer.client_store(&*dir, &mut out, object, secret, expires_ms);
+        shard.drain(now, l, out, &routes, &opts);
+        self.exchange();
+        op
+    }
+
+    pub fn query(&mut self, client: usize, id: &ObjectId) -> u64 {
+        self.refresh_directory();
+        let dir = Arc::clone(&self.directory);
+        let routes = Arc::clone(&self.routes);
+        let opts = self.opts.clone();
+        let now = self.now_ms;
+        let (s, l) = self.index[client];
+        let shard = self.shards[s].as_mut().unwrap();
+        let mut out = Outbox::at(now);
+        let op = shard.slots[l].peer.client_query(&*dir, &mut out, id);
+        shard.drain(now, l, out, &routes, &opts);
+        self.exchange();
+        op
+    }
+
+    // ---- event loop --------------------------------------------------------
+
+    fn next_event_time(&self) -> Option<u64> {
+        self.shards
+            .iter()
+            .flatten()
+            .filter_map(|s| s.peek_time())
+            .min()
+    }
+
+    /// Barrier: move buffered cross-shard messages into destination
+    /// queues in shard-id order, then surface app events, also in
+    /// shard-id order. Both orders are fixed, so delivery seq numbers
+    /// (and therefore tie-breaks) are reproducible.
+    fn exchange(&mut self) {
+        let mut moved: Vec<OutMsg> = Vec::new();
+        for shard in self.shards.iter_mut().flatten() {
+            moved.append(&mut shard.outbound);
+        }
+        for m in moved {
+            let dst = self.shards[m.dst_shard].as_mut().expect("shard in flight");
+            dst.push_local(
+                m.at_ms,
+                EventKind::Deliver { to_local: m.to_local, from: m.from, msg: m.msg },
+            );
+        }
+        for shard in self.shards.iter_mut().flatten() {
+            if !shard.app_events.is_empty() {
+                self.app_events.append(&mut shard.app_events);
+            }
+        }
+    }
+
+    /// Run one window: process every event at the global minimum
+    /// timestamp, in parallel across busy shards, then exchange.
+    fn step_window(&mut self) -> bool {
+        let Some(t) = self.next_event_time() else { return false };
+        self.refresh_directory();
+        let dir = Arc::clone(&self.directory);
+        let routes = Arc::clone(&self.routes);
+        let opts = self.opts.clone();
+        let busy: Vec<usize> = (0..self.shards.len())
+            .filter(|&i| {
+                self.shards[i]
+                    .as_ref()
+                    .is_some_and(|s| s.peek_time() == Some(t))
+            })
+            .collect();
+        if busy.len() <= 1 || self.pool.is_none() {
+            for &i in &busy {
+                let shard = self.shards[i].as_mut().unwrap();
+                shard.process_window(t, &dir, &routes, &opts);
+            }
+        } else {
+            let pool = self.pool.as_ref().unwrap();
+            let (tx, rx) = mpsc::channel::<(usize, Shard)>();
+            for &i in &busy {
+                let mut shard = self.shards[i].take().expect("shard double-take");
+                let dir = Arc::clone(&dir);
+                let routes = Arc::clone(&routes);
+                let opts = opts.clone();
+                let tx = tx.clone();
+                pool.execute(move || {
+                    shard.process_window(t, &dir, &routes, &opts);
+                    let _ = tx.send((shard.id, shard));
+                });
+            }
+            drop(tx);
+            for (i, shard) in rx {
+                self.shards[i] = Some(shard);
+            }
+        }
+        self.now_ms = t;
+        self.exchange();
+        true
+    }
+
+    /// Advance virtual time until `t_ms`, returning app events emitted.
+    pub fn run_until(&mut self, t_ms: u64) -> Vec<(NodeId, AppEvent)> {
+        while let Some(next) = self.next_event_time() {
+            if next > t_ms {
+                break;
+            }
+            self.step_window();
+        }
+        self.now_ms = self.now_ms.max(t_ms);
+        std::mem::take(&mut self.app_events)
+    }
+
+    /// Run for `d_ms` more virtual milliseconds.
+    pub fn run_for(&mut self, d_ms: u64) -> Vec<(NodeId, AppEvent)> {
+        self.run_until(self.now_ms + d_ms)
+    }
+
+    /// Run until a specific client op completes (or `deadline_ms`
+    /// passes). Mirrors `SimNet::run_until_op_from`.
+    pub fn run_until_op_from(
+        &mut self,
+        client: NodeId,
+        op: u64,
+        deadline_ms: u64,
+    ) -> Option<AppEvent> {
+        let mut leftover = Vec::new();
+        let mut found = None;
+        while self.now_ms < deadline_ms {
+            let step = (self.now_ms + 200).min(deadline_ms);
+            for (id, ev) in self.run_until(step) {
+                let matches = id == client
+                    && matches!(
+                        &ev,
+                        AppEvent::StoreDone { op: o, .. } | AppEvent::QueryDone { op: o, .. } | AppEvent::OpFailed { op: o, .. } if *o == op
+                    );
+                if matches && found.is_none() {
+                    found = Some(ev);
+                } else {
+                    leftover.push((id, ev));
+                }
+            }
+            if found.is_some() {
+                break;
+            }
+            if self.next_event_time().is_none() {
+                break;
+            }
+        }
+        self.app_events = leftover;
+        found
+    }
+
+    // ---- cluster-wide introspection ---------------------------------------
+
+    /// Total fragments currently held across up, honest peers for `chash`.
+    pub fn surviving_fragments(&self, chash: &Hash256) -> usize {
+        self.shards
+            .iter()
+            .flatten()
+            .flat_map(|s| s.slots.iter())
+            .filter(|sl| sl.up && !sl.attacked && !sl.peer.cfg.byzantine)
+            .filter(|sl| sl.peer.fragment_index(chash).is_some())
+            .count()
+    }
+
+    /// Aggregate repair traffic across all peers.
+    pub fn total_repair_traffic(&self) -> u64 {
+        self.shards
+            .iter()
+            .flatten()
+            .flat_map(|s| s.slots.iter())
+            .map(|sl| sl.peer.metrics.repair_traffic_bytes)
+            .sum()
+    }
+
+    /// Live peers (by global index) located in `region`.
+    pub fn peers_in_region(&self, region: u8) -> Vec<usize> {
+        (0..self.len())
+            .filter(|&i| self.peer(i).info.region == region && self.slot(i).up)
+            .collect()
+    }
+
+    /// Directory view for harnesses (refreshes if membership changed).
+    pub fn directory(&mut self) -> Arc<OracleDirectory> {
+        self.refresh_directory();
+        Arc::clone(&self.directory)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::VaultConfig;
+
+    fn small_cfg(peers: usize) -> VaultConfig {
+        VaultConfig {
+            k_inner: 8,
+            r_inner: 20,
+            k_outer: 4,
+            n_outer: 5,
+            candidates: peers.min(60),
+            fetch_fanout: 12,
+            n_nodes: peers,
+            ..Default::default()
+        }
+    }
+
+    fn roundtrip(shards: usize, seed: u64) -> (Vec<u8>, Vec<u8>, u64, u64) {
+        let peers = 48;
+        let opts = SimOpts { seed, ..Default::default() };
+        let mut net = ShardNet::new(small_cfg(peers), peers, opts, shards);
+        let obj: Vec<u8> = (0..20_000u32).map(|i| (i * 7) as u8).collect();
+        let op = net.store(0, &obj, b"secret", 0);
+        let client = net.peer(0).info.id;
+        let deadline = net.now_ms() + 70_000;
+        let stored = match net.run_until_op_from(client, op, deadline) {
+            Some(AppEvent::StoreDone { id, .. }) => id,
+            other => panic!("store failed: {other:?}"),
+        };
+        let op = net.query(5, &stored);
+        let client = net.peer(5).info.id;
+        let deadline = net.now_ms() + 70_000;
+        let got = match net.run_until_op_from(client, op, deadline) {
+            Some(AppEvent::QueryDone { data, .. }) => data,
+            other => panic!("query failed: {other:?}"),
+        };
+        let stats = net.stats();
+        (obj, got, net.now_ms(), stats.msgs)
+    }
+
+    #[test]
+    fn sharded_store_query_roundtrip() {
+        let (obj, got, _, _) = roundtrip(4, 7);
+        assert_eq!(obj, got);
+    }
+
+    #[test]
+    fn single_shard_also_works() {
+        let (obj, got, _, _) = roundtrip(1, 7);
+        assert_eq!(obj, got);
+    }
+
+    #[test]
+    fn shard_layout_is_part_of_the_seed() {
+        // Same (seed, shards) twice ⇒ bit-identical trajectory, no
+        // matter how the pool interleaves threads.
+        let a = roundtrip(4, 11);
+        let b = roundtrip(4, 11);
+        assert_eq!(a.2, b.2, "virtual completion time must match");
+        assert_eq!(a.3, b.3, "message count must match");
+        assert_eq!(a.1, b.1);
+    }
+
+    #[test]
+    fn kill_then_repair_recovers_group() {
+        let peers = 48;
+        let mut cfg = small_cfg(peers);
+        cfg.heartbeat_ms = 5_000;
+        cfg.suspicion_ms = 15_000;
+        cfg.tick_ms = 5_000;
+        let r = cfg.r_inner;
+        let opts = SimOpts { seed: 3, ..Default::default() };
+        let mut net = ShardNet::new(cfg, peers, opts, 4);
+        let obj = vec![9u8; 12_000];
+        let op = net.store(1, &obj, b"s", 0);
+        let client = net.peer(1).info.id;
+        let deadline = net.now_ms() + 70_000;
+        let id = match net.run_until_op_from(client, op, deadline) {
+            Some(AppEvent::StoreDone { id, .. }) => id,
+            other => panic!("store failed: {other:?}"),
+        };
+        let chash = id.chunks[0];
+        assert!(net.surviving_fragments(&chash) >= r);
+        // Kill a few members, then let suspicion + repair run.
+        let mut killed = 0;
+        for i in 0..peers {
+            if killed >= 5 {
+                break;
+            }
+            if net.is_up(i) && net.peer(i).fragment_index(&chash).is_some() {
+                net.kill(i);
+                killed += 1;
+            }
+        }
+        assert!(net.surviving_fragments(&chash) < r);
+        let mut repaired = false;
+        for _ in 0..60 {
+            net.run_for(10_000);
+            if net.surviving_fragments(&chash) >= r {
+                repaired = true;
+                break;
+            }
+        }
+        assert!(repaired, "sharded runtime must repair back to R={r}");
+        assert!(net.total_repair_traffic() > 0);
+    }
+}

@@ -90,14 +90,28 @@ pub struct OracleDirectory {
 
 impl OracleDirectory {
     fn rebuild(slots: &[Slot]) -> Self {
-        let mut ring: Vec<(u128, PeerInfo)> = slots
-            .iter()
-            .filter(|s| s.up && !s.attacked)
-            .map(|s| (s.peer.info.id.0.prefix_u128(), s.peer.info))
-            .collect();
+        Self::from_peers(
+            slots
+                .iter()
+                .filter(|s| s.up && !s.attacked)
+                .map(|s| s.peer.info),
+        )
+    }
+
+    /// Build a directory from an arbitrary set of live peers — the
+    /// sharded runtime ([`super::shardnet`]) assembles its view across
+    /// shards through this.
+    pub fn from_peers(peers: impl Iterator<Item = PeerInfo>) -> Self {
+        let mut ring: Vec<(u128, PeerInfo)> =
+            peers.map(|info| (info.id.0.prefix_u128(), info)).collect();
         ring.sort_by_key(|(p, _)| *p);
         let n = ring.len();
         OracleDirectory { ring, n }
+    }
+
+    /// An empty directory (borrow-checker shuffle placeholder).
+    pub fn empty() -> Self {
+        OracleDirectory { ring: Vec::new(), n: 0 }
     }
 }
 
@@ -231,6 +245,17 @@ impl SimNet {
 
     // ---- fault injection -------------------------------------------------
 
+    /// Scenario hook: change in-flight message loss mid-run (slow-link /
+    /// WAN-degradation phases).
+    pub fn set_drop_prob(&mut self, p: f64) {
+        self.opts.drop_prob = p.clamp(0.0, 1.0);
+    }
+
+    /// Scenario hook: change the per-link bandwidth model mid-run.
+    pub fn set_bandwidth(&mut self, bytes_per_ms: u64) {
+        self.opts.bandwidth = bytes_per_ms.max(1);
+    }
+
     /// Permanent departure / crash: node stops processing entirely.
     pub fn kill(&mut self, i: usize) {
         self.slots[i].up = false;
@@ -262,13 +287,25 @@ impl SimNet {
     }
 
     pub fn restore(&mut self, i: usize) {
+        let was_down = !self.slots[i].up;
         self.slots[i].up = true;
         self.slots[i].attacked = false;
         self.dir_dirty = true;
-        // Restart its tick timer.
-        let mut out = Outbox::at(self.now_ms);
-        self.slots[i].peer.init(&mut out);
-        self.drain(i, out);
+        // Restart the tick chain only if the peer was actually down:
+        // killed peers lose their timers, but attacked (blackholed)
+        // peers kept processing them, and a second init() would leave a
+        // doubled self-perpetuating Tick chain behind.
+        if was_down {
+            let mut out = Outbox::at(self.now_ms);
+            self.slots[i].peer.init(&mut out);
+            self.drain(i, out);
+        }
+    }
+
+    /// Is the peer currently blackholed by a targeted attack (its state
+    /// and timer chain are intact, unlike a [`Self::kill`]ed peer)?
+    pub fn is_attacked(&self, i: usize) -> bool {
+        self.slots[i].attacked
     }
 
     // ---- client operations -----------------------------------------------
@@ -438,7 +475,7 @@ impl SimNet {
                 // Take the directory out to satisfy the borrow checker.
                 let dir = std::mem::replace(
                     &mut self.directory,
-                    OracleDirectory { ring: Vec::new(), n: 0 },
+                    OracleDirectory::empty(),
                 );
                 self.slots[to].peer.on_message(&dir, &mut out, from, msg);
                 self.directory = dir;
@@ -452,7 +489,7 @@ impl SimNet {
                 let mut out = Outbox::at(self.now_ms);
                 let dir = std::mem::replace(
                     &mut self.directory,
-                    OracleDirectory { ring: Vec::new(), n: 0 },
+                    OracleDirectory::empty(),
                 );
                 self.slots[peer].peer.on_timer(&dir, &mut out, kind);
                 self.directory = dir;

@@ -13,7 +13,7 @@
 //!   content address, and feed the outer decoder until K_outer chunks
 //!   reconstruct the object.
 
-use std::collections::{HashMap, HashSet};
+use crate::util::detmap::{DetHashMap as HashMap, DetHashSet as HashSet};
 
 use crate::codec::outer::{encode_object, OuterDecoder};
 use crate::codec::rateless::{Fragment, InnerDecoder, InnerEncoder};
@@ -85,7 +85,7 @@ impl VaultPeer {
     ) -> u64 {
         let op = self.fresh_op();
         let (id, chunks) = encode_object(object, secret, self.cfg.k_outer, self.cfg.n_outer);
-        let mut chunk_states = HashMap::new();
+        let mut chunk_states = HashMap::default();
         for c in chunks {
             let candidates = dir.closest(&c.chash, self.cfg.candidates);
             let encoder = InnerEncoder::new(c.chash, &c.bytes, self.cfg.k_inner);
@@ -93,8 +93,8 @@ impl VaultPeer {
                 chash: c.chash,
                 encoder,
                 candidates,
-                assigned: HashMap::new(),
-                acked: HashMap::new(),
+                assigned: HashMap::default(),
+                acked: HashMap::default(),
                 next_index: 0,
                 next_candidate: 0,
                 done: false,
@@ -278,13 +278,13 @@ impl VaultPeer {
     /// Issue a QUERY (Algorithm 1). Completion via [`AppEvent::QueryDone`].
     pub fn client_query(&mut self, dir: &dyn Directory, out: &mut Outbox, id: &ObjectId) -> u64 {
         let op = self.fresh_op();
-        let mut chunks = HashMap::new();
+        let mut chunks = HashMap::default();
         for chash in &id.chunks {
             let candidates = dir.closest(chash, self.cfg.candidates);
             let mut qc = QueryChunk {
                 decoder: InnerDecoder::new(*chash, self.cfg.k_inner),
                 candidates,
-                asked: HashSet::new(),
+                asked: HashSet::default(),
                 next_candidate: 0,
                 complete: false,
             };

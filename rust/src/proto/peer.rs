@@ -4,7 +4,10 @@
 //! Client STORE/QUERY sagas live in [`super::client`]; this module owns
 //! everything a peer does as a *group member*.
 
-use std::collections::{HashMap, HashSet};
+// Deterministic-hasher maps: protocol paths iterate these while
+// building outboxes, so iteration order must be a pure function of
+// history (see util::detmap).
+use crate::util::detmap::{DetHashMap as HashMap, DetHashSet as HashSet};
 
 use crate::codec::rateless::{Fragment, InnerDecoder, InnerEncoder};
 use crate::crypto::ed25519::{self, SigningKey};
@@ -23,6 +26,24 @@ use super::{AppEvent, ClaimVerify, Directory, Metrics, Outbox, TimerKind, VaultC
 pub struct Member {
     pub info: PeerInfo,
     pub last_seen_ms: u64,
+}
+
+/// Scenario-engine fault hooks (see `sim::scenario`), orthogonal to
+/// `cfg.byzantine` (which models the paper's Fig. 6 adversary at
+/// fragment-admission time). Each flag degrades one protocol duty while
+/// the peer otherwise keeps running, so scenarios can compose targeted
+/// misbehaviour without forking the state machine.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PeerFault {
+    /// Stop broadcasting persistence claims (silent liveness failure —
+    /// the group should eventually suspect and repair around us).
+    pub mute_heartbeats: bool,
+    /// Claim liveness but refuse to serve stored fragments (read
+    /// denial; queries must route around us via fan-out expansion).
+    pub refuse_frags: bool,
+    /// Decline every repair-join request (repair sabotage; initiators
+    /// must fall back to other candidates).
+    pub refuse_repairs: bool,
 }
 
 /// State this peer keeps per stored fragment (= per chunk group it
@@ -79,6 +100,8 @@ pub struct VaultPeer {
     proof_cache: HashMap<(Hash256, u64), Option<VrfProof>>,
     /// Claims already VRF-verified (ClaimVerify::FirstTime).
     verified_claims: HashSet<(NodeId, Hash256, u64)>,
+    /// Scenario fault-injection switches (all off in normal operation).
+    pub fault: PeerFault,
     pub metrics: Metrics,
 }
 
@@ -94,13 +117,14 @@ impl VaultPeer {
             info,
             rng: Rng::new(rng_seed),
             next_op: 1,
-            store: HashMap::new(),
-            store_ops: HashMap::new(),
-            query_ops: HashMap::new(),
-            joins: HashMap::new(),
-            repairs: HashMap::new(),
-            proof_cache: HashMap::new(),
-            verified_claims: HashSet::new(),
+            store: HashMap::default(),
+            store_ops: HashMap::default(),
+            query_ops: HashMap::default(),
+            joins: HashMap::default(),
+            repairs: HashMap::default(),
+            proof_cache: HashMap::default(),
+            verified_claims: HashSet::default(),
+            fault: PeerFault::default(),
             metrics: Metrics::default(),
         }
     }
@@ -285,7 +309,7 @@ impl VaultPeer {
             frag,
             proof,
             expires_ms,
-            members: HashMap::new(),
+            members: HashMap::default(),
             cached_chunk: None,
             cache_expires_ms: 0,
             payload_dropped: false,
@@ -310,9 +334,10 @@ impl VaultPeer {
     }
 
     fn handle_get_frag(&mut self, out: &mut Outbox, from: NodeId, op: u64, chash: Hash256) {
+        let refuse = self.fault.refuse_frags;
         let frag = self.store.get(&chash).and_then(|c| {
-            if c.payload_dropped {
-                None // Byzantine: claims to store but serves nothing
+            if c.payload_dropped || refuse {
+                None // Byzantine / faulted: claims to store but serves nothing
             } else {
                 Some(c.frag.clone())
             }
@@ -432,6 +457,9 @@ impl VaultPeer {
     }
 
     fn heartbeat_chunk(&mut self, out: &mut Outbox, chash: &Hash256) {
+        if self.fault.mute_heartbeats {
+            return; // silent liveness failure: peers must suspect us
+        }
         let now = out.now_ms;
         let Some(cs) = self.store.get_mut(chash) else { return };
         if let Some(me) = cs.members.get_mut(&self.info.id) {
@@ -592,6 +620,10 @@ impl VaultPeer {
         members: Vec<PeerInfo>,
         expires_ms: u64,
     ) {
+        if self.fault.refuse_repairs {
+            out.send(from, Msg::RepairAck { op, chash, index, ok: false });
+            return;
+        }
         if let Some(cs) = self.store.get(&chash) {
             // Already a group member: ok iff we hold exactly this fragment.
             let ok = cs.frag.index == index;
@@ -607,7 +639,7 @@ impl VaultPeer {
             return;
         }
         let my_op = self.fresh_op();
-        let mut member_map = HashMap::new();
+        let mut member_map = HashMap::default();
         for m in &members {
             if m.id != self.id() {
                 member_map.insert(m.id, *m);
@@ -625,8 +657,8 @@ impl VaultPeer {
             expires_ms,
             members: member_map,
             decoder: InnerDecoder::new(chash, self.cfg.k_inner),
-            asked_chunk: HashSet::new(),
-            asked_frag: HashSet::new(),
+            asked_chunk: HashSet::default(),
+            asked_frag: HashSet::default(),
             started_ms: out.now_ms,
             bytes_pulled: 0,
         };
@@ -815,6 +847,23 @@ impl VaultPeer {
         self.store.remove(chash).is_some()
     }
 
+    /// Flip this peer to the Fig. 6 Byzantine behaviour *mid-run*:
+    /// already-stored payloads are silently discarded (metadata and
+    /// heartbeat claims survive), and future admissions drop payloads
+    /// too. Turning it off stops the behaviour for new fragments but
+    /// cannot resurrect discarded payloads.
+    pub fn go_byzantine(&mut self, on: bool) {
+        self.cfg.byzantine = on;
+        if on {
+            for cs in self.store.values_mut() {
+                cs.frag.payload = Vec::new();
+                cs.cached_chunk = None;
+                cs.cache_expires_ms = 0;
+                cs.payload_dropped = true;
+            }
+        }
+    }
+
     /// All chunk hashes this peer stores fragments for.
     pub fn stored_chunk_hashes(&self) -> Vec<Hash256> {
         self.store.keys().copied().collect()
@@ -823,7 +872,7 @@ impl VaultPeer {
     /// Direct fragment installation — used by harnesses to pre-seed
     /// state without running the full STORE saga.
     pub fn force_store(&mut self, now_ms: u64, chash: Hash256, frag: Fragment, proof: VrfProof, members: Vec<PeerInfo>) {
-        let mut member_map = HashMap::new();
+        let mut member_map = HashMap::default();
         for m in members {
             member_map.insert(m.id, Member { info: m, last_seen_ms: now_ms });
         }

@@ -10,14 +10,33 @@
 //! `tests/integration_runtime.rs`). When `artifacts/` is absent the
 //! callers fall back to the native paths, so the library never requires
 //! Python at run time.
+//!
+//! The PJRT path needs the `xla` crate (xla-rs plus the xla_extension
+//! C++ bundle), which the offline build image does not ship. It is
+//! therefore gated behind the `xla-runtime` cargo feature; the default
+//! build uses a stub whose loader reports artifacts as unavailable so
+//! every caller takes the native fallback. Enabling `xla-runtime`
+//! without a vendored `xla` crate is a compile error by design.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
-use anyhow::{anyhow, bail, Context, Result};
+/// Runtime error type (stand-in for `anyhow` in the offline build).
+#[derive(Debug)]
+pub struct RtError(pub String);
 
-use crate::codec::rateless::{self, Fragment};
-use crate::crypto::Hash256;
+impl std::fmt::Display for RtError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for RtError {}
+
+pub type Result<T> = std::result::Result<T, RtError>;
+
+macro_rules! rt_err {
+    ($($a:tt)*) => { RtError(format!($($a)*)) };
+}
 
 /// Artifact descriptor parsed from `manifest.tsv`.
 #[derive(Clone, Debug)]
@@ -52,19 +71,6 @@ pub fn parse_manifest(text: &str) -> Vec<ArtifactMeta> {
         .collect()
 }
 
-struct Exec {
-    exe: xla::PjRtLoadedExecutable,
-    meta: ArtifactMeta,
-}
-
-/// Compiled artifact registry bound to a PJRT CPU client.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    encoders: HashMap<(usize, usize, usize), Exec>, // (k, r, w)
-    decoders: HashMap<(usize, usize), Exec>,        // (k, w)
-    ctmc: Option<Exec>,                             // (s=r, t=w) in meta
-}
-
 /// Locate the artifacts directory: `$VAULT_ARTIFACTS` or `./artifacts`.
 pub fn default_artifact_dir() -> PathBuf {
     std::env::var_os("VAULT_ARTIFACTS")
@@ -72,283 +78,408 @@ pub fn default_artifact_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-impl Runtime {
-    /// Are artifacts present without loading them?
-    pub fn artifacts_available(dir: &Path) -> bool {
-        dir.join("manifest.tsv").exists()
+#[cfg(not(feature = "xla-runtime"))]
+mod imp {
+    use std::path::Path;
+
+    use super::{ArtifactMeta, Result, RtError};
+    use crate::codec::rateless::Fragment;
+    use crate::crypto::Hash256;
+
+    /// Stub runtime: the build has no PJRT client, so artifacts are
+    /// never "available" and the loader explains why. All protocol and
+    /// simulation paths use the native codec implementations instead.
+    pub struct Runtime {
+        _priv: (),
     }
 
-    pub fn load_default() -> Result<Runtime> {
-        Self::load(&default_artifact_dir())
-    }
-
-    pub fn load(dir: &Path) -> Result<Runtime> {
-        let manifest_path = dir.join("manifest.tsv");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
-        let metas = parse_manifest(&text);
-        if metas.is_empty() {
-            bail!("empty manifest at {manifest_path:?}");
-        }
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        let mut rt = Runtime { client, encoders: HashMap::new(), decoders: HashMap::new(), ctmc: None };
-        for meta in metas {
-            let path = dir.join(&meta.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("artifact path utf8")?,
-            )
-            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = rt
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {}: {e:?}", meta.name))?;
-            let exec = Exec { exe, meta: meta.clone() };
-            match meta.kind.as_str() {
-                "encode" => {
-                    rt.encoders.insert((meta.k, meta.r, meta.w), exec);
-                }
-                "decode" => {
-                    rt.decoders.insert((meta.k, meta.w), exec);
-                }
-                "ctmc" => rt.ctmc = Some(exec),
-                other => bail!("unknown artifact kind {other:?}"),
-            }
-        }
-        Ok(rt)
-    }
-
-    pub fn encoder_variants(&self) -> Vec<(usize, usize, usize)> {
-        self.encoders.keys().copied().collect()
-    }
-
-    /// Pick the encode artifact for dimension `k` with the widest panel.
-    fn best_encoder(&self, k: usize) -> Option<&Exec> {
-        self.encoders
-            .iter()
-            .filter(|((ak, _, _), _)| *ak == k)
-            .max_by_key(|((_, _, w), _)| *w)
-            .map(|(_, e)| e)
-    }
-
-    fn best_decoder(&self, k: usize) -> Option<&Exec> {
-        self.decoders
-            .iter()
-            .filter(|((ak, _), _)| *ak == k)
-            .max_by_key(|((_, w), _)| *w)
-            .map(|(_, e)| e)
-    }
-
-    /// Batch-encode fragments of a chunk through the XOR-GEMM artifact.
-    /// Output is bit-identical to [`rateless::InnerEncoder`].
-    pub fn encode_chunk(
-        &self,
-        chash: &Hash256,
-        chunk: &[u8],
-        k: usize,
-        indices: &[u64],
-    ) -> Result<Vec<Fragment>> {
-        let exec = self.best_encoder(k).context("no encode artifact for k")?;
-        let (ak, ar, aw) = (exec.meta.k, exec.meta.r, exec.meta.w);
-        debug_assert_eq!(ak, k);
-
-        // Pack chunk into k source blocks of u32 words (LE), padded to a
-        // whole number of w-panels.
-        let bs_bytes = rateless::block_size(chunk.len(), k);
-        let words_per_block = bs_bytes.div_ceil(4);
-        let panels = words_per_block.div_ceil(aw).max(1);
-        let padded_words = panels * aw;
-        let mut blocks = vec![0u32; k * padded_words];
-        for b in 0..k {
-            let start = b * bs_bytes;
-            let end = ((b + 1) * bs_bytes).min(chunk.len());
-            if start >= chunk.len() {
-                break;
-            }
-            let slice = &chunk[start..end];
-            for (wi, wchunk) in slice.chunks(4).enumerate() {
-                let mut word = [0u8; 4];
-                word[..wchunk.len()].copy_from_slice(wchunk);
-                blocks[b * padded_words + wi] = u32::from_le_bytes(word);
-            }
+    impl Runtime {
+        /// Are artifacts usable by this build? Always `false` without
+        /// the `xla-runtime` feature, even if `manifest.tsv` exists —
+        /// callers then take the native fallback.
+        pub fn artifacts_available(_dir: &Path) -> bool {
+            false
         }
 
-        // Coefficient matrix: artifact is fixed at r rows; process the
-        // requested indices in r-sized batches (zero rows are harmless).
-        let mut out: Vec<Fragment> = Vec::with_capacity(indices.len());
-        for batch in indices.chunks(ar) {
-            let mut coeff = vec![0u32; ar * k];
-            for (row, &idx) in batch.iter().enumerate() {
-                for (c, bit) in rateless::coeff_row(chash, idx, k).into_iter().enumerate() {
-                    coeff[row * k + c] = bit as u32;
+        pub fn load_default() -> Result<Runtime> {
+            Self::load(&super::default_artifact_dir())
+        }
+
+        pub fn load(_dir: &Path) -> Result<Runtime> {
+            Err(rt_err!(
+                "built without the `xla-runtime` feature: PJRT execution is \
+                 unavailable; use the native codec paths (cargo build \
+                 --features xla-runtime with a vendored `xla` crate to enable)"
+            ))
+        }
+
+        pub fn encoder_variants(&self) -> Vec<(usize, usize, usize)> {
+            Vec::new()
+        }
+
+        pub fn encode_chunk(
+            &self,
+            _chash: &Hash256,
+            _chunk: &[u8],
+            _k: usize,
+            _indices: &[u64],
+        ) -> Result<Vec<Fragment>> {
+            Err(rt_err!("xla-runtime feature disabled"))
+        }
+
+        pub fn decode_chunk(
+            &self,
+            _chash: &Hash256,
+            _k: usize,
+            _frags: &[Fragment],
+        ) -> Result<Option<Vec<u8>>> {
+            Err(rt_err!("xla-runtime feature disabled"))
+        }
+
+        pub fn ctmc_series(
+            &self,
+            _theta: &[f64],
+            _init: &[f64],
+            _absorb: usize,
+            _steps: usize,
+        ) -> Result<Vec<f64>> {
+            Err(rt_err!("xla-runtime feature disabled"))
+        }
+
+        #[allow(dead_code)]
+        fn _meta(_m: &ArtifactMeta) {}
+    }
+}
+
+#[cfg(feature = "xla-runtime")]
+mod imp {
+    use std::collections::HashMap;
+    use std::path::Path;
+
+    use super::{ArtifactMeta, Result, RtError};
+    use crate::codec::rateless::{self, Fragment};
+    use crate::crypto::Hash256;
+
+    struct Exec {
+        exe: xla::PjRtLoadedExecutable,
+        meta: ArtifactMeta,
+    }
+
+    /// Compiled artifact registry bound to a PJRT CPU client.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        encoders: HashMap<(usize, usize, usize), Exec>, // (k, r, w)
+        decoders: HashMap<(usize, usize), Exec>,        // (k, w)
+        ctmc: Option<Exec>,                             // (s=r, t=w) in meta
+    }
+
+    impl Runtime {
+        /// Are artifacts present without loading them?
+        pub fn artifacts_available(dir: &Path) -> bool {
+            dir.join("manifest.tsv").exists()
+        }
+
+        pub fn load_default() -> Result<Runtime> {
+            Self::load(&super::default_artifact_dir())
+        }
+
+        pub fn load(dir: &Path) -> Result<Runtime> {
+            let manifest_path = dir.join("manifest.tsv");
+            let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+                rt_err!("reading {manifest_path:?} (run `make artifacts`): {e}")
+            })?;
+            let metas = super::parse_manifest(&text);
+            if metas.is_empty() {
+                return Err(rt_err!("empty manifest at {manifest_path:?}"));
+            }
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| rt_err!("PJRT cpu client: {e:?}"))?;
+            let mut rt = Runtime {
+                client,
+                encoders: HashMap::new(),
+                decoders: HashMap::new(),
+                ctmc: None,
+            };
+            for meta in metas {
+                let path = dir.join(&meta.file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| rt_err!("artifact path utf8"))?,
+                )
+                .map_err(|e| rt_err!("parse {path:?}: {e:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = rt
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| rt_err!("compile {}: {e:?}", meta.name))?;
+                let exec = Exec { exe, meta: meta.clone() };
+                match meta.kind.as_str() {
+                    "encode" => {
+                        rt.encoders.insert((meta.k, meta.r, meta.w), exec);
+                    }
+                    "decode" => {
+                        rt.decoders.insert((meta.k, meta.w), exec);
+                    }
+                    "ctmc" => rt.ctmc = Some(exec),
+                    other => return Err(rt_err!("unknown artifact kind {other:?}")),
                 }
             }
-            let coeff_lit = xla::Literal::vec1(&coeff)
-                .reshape(&[ar as i64, k as i64])
-                .map_err(|e| anyhow!("coeff reshape: {e:?}"))?;
-            // Accumulate per-panel results.
-            let mut payloads = vec![vec![0u32; padded_words]; batch.len()];
+            Ok(rt)
+        }
+
+        pub fn encoder_variants(&self) -> Vec<(usize, usize, usize)> {
+            self.encoders.keys().copied().collect()
+        }
+
+        /// Pick the encode artifact for dimension `k` with the widest panel.
+        fn best_encoder(&self, k: usize) -> Option<&Exec> {
+            self.encoders
+                .iter()
+                .filter(|((ak, _, _), _)| *ak == k)
+                .max_by_key(|((_, _, w), _)| *w)
+                .map(|(_, e)| e)
+        }
+
+        fn best_decoder(&self, k: usize) -> Option<&Exec> {
+            self.decoders
+                .iter()
+                .filter(|((ak, _), _)| *ak == k)
+                .max_by_key(|((_, w), _)| *w)
+                .map(|(_, e)| e)
+        }
+
+        /// Batch-encode fragments of a chunk through the XOR-GEMM artifact.
+        /// Output is bit-identical to [`rateless::InnerEncoder`].
+        pub fn encode_chunk(
+            &self,
+            chash: &Hash256,
+            chunk: &[u8],
+            k: usize,
+            indices: &[u64],
+        ) -> Result<Vec<Fragment>> {
+            let exec = self
+                .best_encoder(k)
+                .ok_or_else(|| rt_err!("no encode artifact for k"))?;
+            let (ak, ar, aw) = (exec.meta.k, exec.meta.r, exec.meta.w);
+            debug_assert_eq!(ak, k);
+
+            // Pack chunk into k source blocks of u32 words (LE), padded to a
+            // whole number of w-panels.
+            let bs_bytes = rateless::block_size(chunk.len(), k);
+            let words_per_block = bs_bytes.div_ceil(4);
+            let panels = words_per_block.div_ceil(aw).max(1);
+            let padded_words = panels * aw;
+            let mut blocks = vec![0u32; k * padded_words];
+            for b in 0..k {
+                let start = b * bs_bytes;
+                let end = ((b + 1) * bs_bytes).min(chunk.len());
+                if start >= chunk.len() {
+                    break;
+                }
+                let slice = &chunk[start..end];
+                for (wi, wchunk) in slice.chunks(4).enumerate() {
+                    let mut word = [0u8; 4];
+                    word[..wchunk.len()].copy_from_slice(wchunk);
+                    blocks[b * padded_words + wi] = u32::from_le_bytes(word);
+                }
+            }
+
+            // Coefficient matrix: artifact is fixed at r rows; process the
+            // requested indices in r-sized batches (zero rows are harmless).
+            let mut out: Vec<Fragment> = Vec::with_capacity(indices.len());
+            for batch in indices.chunks(ar) {
+                let mut coeff = vec![0u32; ar * k];
+                for (row, &idx) in batch.iter().enumerate() {
+                    for (c, bit) in
+                        rateless::coeff_row(chash, idx, k).into_iter().enumerate()
+                    {
+                        coeff[row * k + c] = bit as u32;
+                    }
+                }
+                let coeff_lit = xla::Literal::vec1(&coeff)
+                    .reshape(&[ar as i64, k as i64])
+                    .map_err(|e| rt_err!("coeff reshape: {e:?}"))?;
+                // Accumulate per-panel results.
+                let mut payloads = vec![vec![0u32; padded_words]; batch.len()];
+                for p in 0..panels {
+                    let mut panel = vec![0u32; k * aw];
+                    for b in 0..k {
+                        let src = &blocks
+                            [b * padded_words + p * aw..b * padded_words + (p + 1) * aw];
+                        panel[b * aw..(b + 1) * aw].copy_from_slice(src);
+                    }
+                    let panel_lit = xla::Literal::vec1(&panel)
+                        .reshape(&[k as i64, aw as i64])
+                        .map_err(|e| rt_err!("panel reshape: {e:?}"))?;
+                    let result = exec
+                        .exe
+                        .execute::<xla::Literal>(&[coeff_lit.clone(), panel_lit])
+                        .map_err(|e| rt_err!("execute encode: {e:?}"))?[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| rt_err!("to_literal: {e:?}"))?;
+                    let frag_panel = result
+                        .to_tuple1()
+                        .map_err(|e| rt_err!("tuple1: {e:?}"))?
+                        .to_vec::<u32>()
+                        .map_err(|e| rt_err!("to_vec: {e:?}"))?;
+                    // frag_panel is (ar, aw) row-major.
+                    for (row, payload) in payloads.iter_mut().enumerate() {
+                        payload[p * aw..(p + 1) * aw]
+                            .copy_from_slice(&frag_panel[row * aw..(row + 1) * aw]);
+                    }
+                }
+                for (row, &idx) in batch.iter().enumerate() {
+                    let mut bytes: Vec<u8> = Vec::with_capacity(bs_bytes);
+                    for w in &payloads[row] {
+                        bytes.extend_from_slice(&w.to_le_bytes());
+                    }
+                    bytes.truncate(bs_bytes);
+                    out.push(Fragment {
+                        index: idx,
+                        chunk_len: chunk.len() as u32,
+                        payload: bytes,
+                    });
+                }
+            }
+            Ok(out)
+        }
+
+        /// Decode a chunk from exactly `k` fragments through the Gauss–Jordan
+        /// artifact. Returns `Ok(None)` when the fragment set is singular.
+        pub fn decode_chunk(
+            &self,
+            chash: &Hash256,
+            k: usize,
+            frags: &[Fragment],
+        ) -> Result<Option<Vec<u8>>> {
+            if frags.len() != k {
+                return Err(rt_err!(
+                    "decode_chunk needs exactly k={k} fragments, got {}",
+                    frags.len()
+                ));
+            }
+            let exec = self
+                .best_decoder(k)
+                .ok_or_else(|| rt_err!("no decode artifact for k"))?;
+            let aw = exec.meta.w;
+            let kw = k.div_ceil(32);
+            let chunk_len = frags[0].chunk_len as usize;
+            let bs_bytes = frags[0].payload.len();
+            let words_per_block = bs_bytes.div_ceil(4);
+            let panels = words_per_block.div_ceil(aw).max(1);
+            let padded_words = panels * aw;
+
+            let mut coeff_bits = vec![0u32; k * kw];
+            let mut payload = vec![0u32; k * padded_words];
+            for (row, f) in frags.iter().enumerate() {
+                if f.payload.len() != bs_bytes || f.chunk_len as usize != chunk_len {
+                    return Err(rt_err!("inconsistent fragment metadata"));
+                }
+                let packed = rateless::coeff_row_packed(chash, f.index, k);
+                coeff_bits[row * kw..(row + 1) * kw].copy_from_slice(&packed);
+                for (wi, wchunk) in f.payload.chunks(4).enumerate() {
+                    let mut word = [0u8; 4];
+                    word[..wchunk.len()].copy_from_slice(wchunk);
+                    payload[row * padded_words + wi] = u32::from_le_bytes(word);
+                }
+            }
+            let coeff_lit = xla::Literal::vec1(&coeff_bits)
+                .reshape(&[k as i64, kw as i64])
+                .map_err(|e| rt_err!("coeff reshape: {e:?}"))?;
+
+            let mut blocks = vec![0u32; k * padded_words];
             for p in 0..panels {
                 let mut panel = vec![0u32; k * aw];
-                for b in 0..k {
-                    let src = &blocks[b * padded_words + p * aw..b * padded_words + (p + 1) * aw];
-                    panel[b * aw..(b + 1) * aw].copy_from_slice(src);
+                for row in 0..k {
+                    panel[row * aw..(row + 1) * aw].copy_from_slice(
+                        &payload[row * padded_words + p * aw
+                            ..row * padded_words + (p + 1) * aw],
+                    );
                 }
                 let panel_lit = xla::Literal::vec1(&panel)
                     .reshape(&[k as i64, aw as i64])
-                    .map_err(|e| anyhow!("panel reshape: {e:?}"))?;
+                    .map_err(|e| rt_err!("panel reshape: {e:?}"))?;
                 let result = exec
                     .exe
                     .execute::<xla::Literal>(&[coeff_lit.clone(), panel_lit])
-                    .map_err(|e| anyhow!("execute encode: {e:?}"))?[0][0]
+                    .map_err(|e| rt_err!("execute decode: {e:?}"))?[0][0]
                     .to_literal_sync()
-                    .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-                let frag_panel = result
-                    .to_tuple1()
-                    .map_err(|e| anyhow!("tuple1: {e:?}"))?
+                    .map_err(|e| rt_err!("to_literal: {e:?}"))?;
+                let (blocks_lit, ok_lit) =
+                    result.to_tuple2().map_err(|e| rt_err!("tuple2: {e:?}"))?;
+                let ok = ok_lit.to_vec::<u32>().map_err(|e| rt_err!("ok vec: {e:?}"))?;
+                if ok.first().copied().unwrap_or(0) == 0 {
+                    return Ok(None); // singular system
+                }
+                let vals = blocks_lit
                     .to_vec::<u32>()
-                    .map_err(|e| anyhow!("to_vec: {e:?}"))?;
-                // frag_panel is (ar, aw) row-major.
-                for (row, payload) in payloads.iter_mut().enumerate() {
-                    payload[p * aw..(p + 1) * aw]
-                        .copy_from_slice(&frag_panel[row * aw..(row + 1) * aw]);
+                    .map_err(|e| rt_err!("blocks vec: {e:?}"))?;
+                for row in 0..k {
+                    blocks[row * padded_words + p * aw
+                        ..row * padded_words + (p + 1) * aw]
+                        .copy_from_slice(&vals[row * aw..(row + 1) * aw]);
                 }
             }
-            for (row, &idx) in batch.iter().enumerate() {
-                let mut bytes: Vec<u8> = Vec::with_capacity(bs_bytes);
-                for w in &payloads[row] {
+            // Reassemble chunk bytes: k blocks of bs_bytes each, truncated.
+            let mut out = Vec::with_capacity(k * bs_bytes);
+            for row in 0..k {
+                let mut bytes = Vec::with_capacity(padded_words * 4);
+                for w in &blocks[row * padded_words..(row + 1) * padded_words] {
                     bytes.extend_from_slice(&w.to_le_bytes());
                 }
                 bytes.truncate(bs_bytes);
-                out.push(Fragment { index: idx, chunk_len: chunk.len() as u32, payload: bytes });
+                out.extend_from_slice(&bytes);
             }
+            out.truncate(chunk_len);
+            Ok(Some(out))
         }
-        Ok(out)
-    }
 
-    /// Decode a chunk from exactly `k` fragments through the Gauss–Jordan
-    /// artifact. Returns `Ok(None)` when the fragment set is singular.
-    pub fn decode_chunk(
-        &self,
-        chash: &Hash256,
-        k: usize,
-        frags: &[Fragment],
-    ) -> Result<Option<Vec<u8>>> {
-        if frags.len() != k {
-            bail!("decode_chunk needs exactly k={k} fragments, got {}", frags.len());
-        }
-        let exec = self.best_decoder(k).context("no decode artifact for k")?;
-        let aw = exec.meta.w;
-        let kw = k.div_ceil(32);
-        let chunk_len = frags[0].chunk_len as usize;
-        let bs_bytes = frags[0].payload.len();
-        let words_per_block = bs_bytes.div_ceil(4);
-        let panels = words_per_block.div_ceil(aw).max(1);
-        let padded_words = panels * aw;
-
-        let mut coeff_bits = vec![0u32; k * kw];
-        let mut payload = vec![0u32; k * padded_words];
-        for (row, f) in frags.iter().enumerate() {
-            if f.payload.len() != bs_bytes || f.chunk_len as usize != chunk_len {
-                bail!("inconsistent fragment metadata");
+        /// CTMC absorbing-probability series (Lemma 4.1) for `steps` steps,
+        /// chaining fixed-size artifact windows. `theta` is row-major s×s
+        /// padded to the artifact size; `absorb` is the absorbing index.
+        pub fn ctmc_series(
+            &self,
+            theta: &[f64],
+            init: &[f64],
+            absorb: usize,
+            steps: usize,
+        ) -> Result<Vec<f64>> {
+            let exec = self.ctmc.as_ref().ok_or_else(|| rt_err!("no ctmc artifact"))?;
+            let s = exec.meta.k; // states
+            let t_window = exec.meta.w; // scan steps per execution
+            if theta.len() != s * s || init.len() != s || absorb >= s {
+                return Err(rt_err!("ctmc shapes: need theta {s}x{s}, init {s}"));
             }
-            let packed = rateless::coeff_row_packed(chash, f.index, k);
-            coeff_bits[row * kw..(row + 1) * kw].copy_from_slice(&packed);
-            for (wi, wchunk) in f.payload.chunks(4).enumerate() {
-                let mut word = [0u8; 4];
-                word[..wchunk.len()].copy_from_slice(wchunk);
-                payload[row * padded_words + wi] = u32::from_le_bytes(word);
+            let theta_lit = xla::Literal::vec1(theta)
+                .reshape(&[s as i64, s as i64])
+                .map_err(|e| rt_err!("theta reshape: {e:?}"))?;
+            let mut idx = vec![0f64; s];
+            idx[absorb] = 1.0;
+            let idx_lit = xla::Literal::vec1(&idx);
+            let mut v = init.to_vec();
+            let mut series = Vec::with_capacity(steps);
+            while series.len() < steps {
+                let v_lit = xla::Literal::vec1(&v);
+                let result = exec
+                    .exe
+                    .execute::<xla::Literal>(&[theta_lit.clone(), v_lit, idx_lit.clone()])
+                    .map_err(|e| rt_err!("execute ctmc: {e:?}"))?[0][0]
+                    .to_literal_sync()
+                    .map_err(|e| rt_err!("to_literal: {e:?}"))?;
+                let (series_lit, final_lit) =
+                    result.to_tuple2().map_err(|e| rt_err!("tuple2: {e:?}"))?;
+                let window = series_lit
+                    .to_vec::<f64>()
+                    .map_err(|e| rt_err!("series: {e:?}"))?;
+                v = final_lit.to_vec::<f64>().map_err(|e| rt_err!("final: {e:?}"))?;
+                let take = (steps - series.len()).min(t_window);
+                series.extend_from_slice(&window[..take]);
             }
+            Ok(series)
         }
-        let coeff_lit = xla::Literal::vec1(&coeff_bits)
-            .reshape(&[k as i64, kw as i64])
-            .map_err(|e| anyhow!("coeff reshape: {e:?}"))?;
-
-        let mut blocks = vec![0u32; k * padded_words];
-        for p in 0..panels {
-            let mut panel = vec![0u32; k * aw];
-            for row in 0..k {
-                panel[row * aw..(row + 1) * aw].copy_from_slice(
-                    &payload[row * padded_words + p * aw..row * padded_words + (p + 1) * aw],
-                );
-            }
-            let panel_lit = xla::Literal::vec1(&panel)
-                .reshape(&[k as i64, aw as i64])
-                .map_err(|e| anyhow!("panel reshape: {e:?}"))?;
-            let result = exec
-                .exe
-                .execute::<xla::Literal>(&[coeff_lit.clone(), panel_lit])
-                .map_err(|e| anyhow!("execute decode: {e:?}"))?[0][0]
-                .to_literal_sync()
-                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-            let (blocks_lit, ok_lit) =
-                result.to_tuple2().map_err(|e| anyhow!("tuple2: {e:?}"))?;
-            let ok = ok_lit.to_vec::<u32>().map_err(|e| anyhow!("ok vec: {e:?}"))?;
-            if ok.first().copied().unwrap_or(0) == 0 {
-                return Ok(None); // singular system
-            }
-            let vals = blocks_lit.to_vec::<u32>().map_err(|e| anyhow!("blocks vec: {e:?}"))?;
-            for row in 0..k {
-                blocks[row * padded_words + p * aw..row * padded_words + (p + 1) * aw]
-                    .copy_from_slice(&vals[row * aw..(row + 1) * aw]);
-            }
-        }
-        // Reassemble chunk bytes: k blocks of bs_bytes each, truncated.
-        let mut out = Vec::with_capacity(k * bs_bytes);
-        for row in 0..k {
-            let mut bytes = Vec::with_capacity(padded_words * 4);
-            for w in &blocks[row * padded_words..(row + 1) * padded_words] {
-                bytes.extend_from_slice(&w.to_le_bytes());
-            }
-            bytes.truncate(bs_bytes);
-            out.extend_from_slice(&bytes);
-        }
-        out.truncate(chunk_len);
-        Ok(Some(out))
-    }
-
-    /// CTMC absorbing-probability series (Lemma 4.1) for `steps` steps,
-    /// chaining fixed-size artifact windows. `theta` is row-major s×s
-    /// padded to the artifact size; `absorb` is the absorbing index.
-    pub fn ctmc_series(
-        &self,
-        theta: &[f64],
-        init: &[f64],
-        absorb: usize,
-        steps: usize,
-    ) -> Result<Vec<f64>> {
-        let exec = self.ctmc.as_ref().context("no ctmc artifact")?;
-        let s = exec.meta.k; // states
-        let t_window = exec.meta.w; // scan steps per execution
-        if theta.len() != s * s || init.len() != s || absorb >= s {
-            bail!("ctmc shapes: need theta {s}x{s}, init {s}");
-        }
-        let theta_lit = xla::Literal::vec1(theta)
-            .reshape(&[s as i64, s as i64])
-            .map_err(|e| anyhow!("theta reshape: {e:?}"))?;
-        let mut idx = vec![0f64; s];
-        idx[absorb] = 1.0;
-        let idx_lit = xla::Literal::vec1(&idx);
-        let mut v = init.to_vec();
-        let mut series = Vec::with_capacity(steps);
-        while series.len() < steps {
-            let v_lit = xla::Literal::vec1(&v);
-            let result = exec
-                .exe
-                .execute::<xla::Literal>(&[theta_lit.clone(), v_lit, idx_lit.clone()])
-                .map_err(|e| anyhow!("execute ctmc: {e:?}"))?[0][0]
-                .to_literal_sync()
-                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-            let (series_lit, final_lit) =
-                result.to_tuple2().map_err(|e| anyhow!("tuple2: {e:?}"))?;
-            let window = series_lit.to_vec::<f64>().map_err(|e| anyhow!("series: {e:?}"))?;
-            v = final_lit.to_vec::<f64>().map_err(|e| anyhow!("final: {e:?}"))?;
-            let take = (steps - series.len()).min(t_window);
-            series.extend_from_slice(&window[..take]);
-        }
-        Ok(series)
     }
 }
+
+pub use imp::Runtime;
 
 #[cfg(test)]
 mod tests {
@@ -371,5 +502,13 @@ mod tests {
     fn malformed_lines_skipped() {
         let metas = parse_manifest("bad line\nonly\tthree\tfields\n");
         assert!(metas.is_empty());
+    }
+
+    #[cfg(not(feature = "xla-runtime"))]
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(!Runtime::artifacts_available(std::path::Path::new("artifacts")));
+        let err = Runtime::load(std::path::Path::new("artifacts")).err().unwrap();
+        assert!(err.to_string().contains("xla-runtime"));
     }
 }

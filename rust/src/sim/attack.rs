@@ -15,6 +15,8 @@
 //! its 3-node neighborhood, so the same budget translates into whole
 //! records destroyed and any lost record kills its object.
 
+use crate::coordinator::ClusterRuntime;
+use crate::crypto::Hash256;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -70,6 +72,56 @@ pub fn vault_attack_loss(cfg: &AttackConfig) -> f64 {
         lost_total += per_object.iter().filter(|&&c| c as usize > margin).count();
     }
     lost_total as f64 / (cfg.trials * cfg.n_objects) as f64
+}
+
+/// Replay the Appendix-A.2 adversary against a *live* cluster runtime
+/// instead of the Monte Carlo placement model: the attacker has the
+/// transparent per-group view (it can enumerate every fragment holder)
+/// but — because outer-code chunk selection is private — cannot tell
+/// which chunks belong to which object, so it destroys chunks in a
+/// random order until its node budget runs out. A chunk is "destroyed"
+/// by blackholing holders until fewer than `k_inner` honest ones
+/// remain.
+///
+/// Returns `(nodes_attacked, destroyed_chunk_indices)`.
+pub fn attack_cluster_chunks<N: ClusterRuntime>(
+    net: &mut N,
+    chunks: &[Hash256],
+    budget_nodes: usize,
+    k_inner: usize,
+    rng: &mut Rng,
+) -> (usize, Vec<usize>) {
+    let mut order: Vec<usize> = (0..chunks.len()).collect();
+    rng.shuffle(&mut order);
+    let mut used = 0usize;
+    let mut destroyed = Vec::new();
+    for &ci in &order {
+        if used >= budget_nodes {
+            break;
+        }
+        let chash = &chunks[ci];
+        let holders: Vec<usize> = (0..net.len())
+            .filter(|&i| {
+                net.is_up(i)
+                    && !net.peer(i).cfg.byzantine
+                    && net.peer(i).fragment_index(chash).is_some()
+            })
+            .collect();
+        if holders.len() < k_inner {
+            destroyed.push(ci); // already below the decode threshold
+            continue;
+        }
+        let need = holders.len() - k_inner + 1;
+        if used + need > budget_nodes {
+            continue; // unaffordable; a smaller group may still fit
+        }
+        for &h in holders.iter().take(need) {
+            net.attack(h);
+        }
+        used += need;
+        destroyed.push(ci);
+    }
+    (used, destroyed)
 }
 
 /// Fraction of objects lost in the IPFS-like baseline: the adversary

@@ -12,11 +12,16 @@
 //! * [`durability`] — the VAULT group simulator (Figs. 4, 5, 6-top).
 //! * [`replica`] — the Ceph-like 3-replica baseline (Figs. 4, 6-top).
 //! * [`attack`] — targeted-attack Monte Carlo per Appendix A.2
-//!   (Fig. 6-bottom).
+//!   (Fig. 6-bottom), plus a driver that replays the same adversary
+//!   against a live [`crate::coordinator::Cluster`].
+//! * [`scenario`] — declarative fault-injection schedules (partitions,
+//!   crash bursts, Byzantine clustering, flash crowds, churn waves,
+//!   slow links) executed end-to-end on the sharded cluster runtime.
 
 pub mod attack;
 pub mod durability;
 pub mod replica;
+pub mod scenario;
 
 /// Common simulation clock units: hours.
 pub const HOURS_PER_YEAR: f64 = 24.0 * 365.0;

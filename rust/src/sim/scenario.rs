@@ -1,0 +1,483 @@
+//! Declarative fault-injection scenarios over the real protocol stack.
+//!
+//! Where [`super::attack`] evaluates adversaries against a *model* of
+//! chunk placement, this module drives them through the actual
+//! [`crate::coordinator::Cluster`] — client sagas, heartbeats,
+//! suspicion, decentralized repair — on the sharded runtime
+//! ([`crate::net::shardnet::ShardNet`]). A scenario is a schedule of
+//! timed phases; each phase injects faults (regional partitions,
+//! correlated crash bursts, Byzantine clustering inside a chunk group,
+//! flash-crowd reads, stake-gated churn waves, slow-link degradation),
+//! advances virtual time, and then asserts durability / availability
+//! invariants.
+//!
+//! ## Determinism
+//!
+//! `run_scenario` is a pure function of the [`ScenarioSpec`]: the
+//! cluster trajectory is fixed by `(seed, shards)` (see
+//! `net::shardnet`), every injection draws from a scenario-owned
+//! [`Rng`], and the report carries a `fingerprint` folding all observed
+//! outcomes, so `same seed ⇒ same fingerprint` is a testable contract
+//! (`tests/scenario_matrix.rs` runs every scenario twice).
+
+use crate::codec::ObjectId;
+use crate::coordinator::{Cluster, ClusterConfig, ClusterRuntime};
+use crate::crypto::Hash256;
+use crate::proto::{AppEvent, ClaimVerify};
+use crate::util::rng::{splitmix64, Rng};
+
+/// One fault to inject at the start of a phase.
+#[derive(Clone, Debug)]
+pub enum Fault {
+    /// Blackhole every live peer in a latency region (§6.1 targeted
+    /// attack semantics: traffic dropped, state intact).
+    RegionPartition { region: u8 },
+    /// Restore a previously partitioned region (attacked peers only —
+    /// peers crashed by other faults stay permanently departed).
+    RegionHeal { region: u8 },
+    /// Correlated crash: kill `count` random live peers at once
+    /// (rack/provider failure).
+    CrashBurst { count: usize },
+    /// Blackhole `count` random live peers (adaptive targeted attack).
+    TargetedAttack { count: usize },
+    /// Turn `members` holders of one chunk's group Byzantine in place —
+    /// the adversarial *clustering* case the Monte Carlo model assumes
+    /// away (`object`/`chunk` index into the stored corpus).
+    ByzantineGroup { object: usize, chunk: usize, members: usize },
+    /// Mute heartbeats of `members` holders of one chunk's group:
+    /// liveness fails silently while the nodes keep serving reads.
+    SilentGroup { object: usize, chunk: usize, members: usize },
+    /// `readers` concurrent QUERY sessions against one object (CDN-miss
+    /// stampede). Completion is counted in the phase report.
+    FlashCrowd { object: usize, readers: usize },
+    /// One stake-gated churn wave: `count` leaves + `count` fresh joins.
+    StakeChurn { count: usize },
+    /// Degrade links: silently drop this fraction of messages from now on.
+    SlowLinks { drop_prob: f64 },
+}
+
+/// An invariant evaluated at the end of a phase.
+#[derive(Clone, Debug)]
+pub enum Check {
+    /// Availability: every stored object reads back bit-exact from a
+    /// random live client.
+    AllObjectsReadable,
+    /// Weakened availability for phases that are *meant* to degrade
+    /// service: at least this fraction of objects must read back.
+    ObjectsReadableFrac(f64),
+    /// Durability: every chunk keeps at least `k_inner` honest live
+    /// fragments (the decode threshold) — no object is lost even if a
+    /// read would currently time out.
+    NoChunkBelowDecodeThreshold,
+    /// Repair convergence: every chunk group is back to at least
+    /// `frac · R` members.
+    GroupsRecoveredTo(f64),
+}
+
+/// A timed phase: inject, advance virtual time, assert.
+#[derive(Clone, Debug)]
+pub struct Phase {
+    pub name: &'static str,
+    pub inject: Vec<Fault>,
+    pub advance_ms: u64,
+    pub checks: Vec<Check>,
+}
+
+/// A complete scenario over a sharded cluster.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    pub name: &'static str,
+    pub seed: u64,
+    pub peers: usize,
+    /// Event-queue shards — part of the determinism seed.
+    pub shards: usize,
+    pub objects: usize,
+    pub object_size: usize,
+    /// `Never` is the documented measurement knob for very large
+    /// clusters; correctness-focused scenarios keep `FirstTime`.
+    pub claim_verify: ClaimVerify,
+    pub phases: Vec<Phase>,
+}
+
+impl ScenarioSpec {
+    /// Small-cluster template with fast maintenance timers so suspicion
+    /// and repair converge inside short virtual phases.
+    pub fn small(name: &'static str, seed: u64, peers: usize) -> Self {
+        ScenarioSpec {
+            name,
+            seed,
+            peers,
+            shards: 4,
+            objects: 4,
+            object_size: 12_000,
+            claim_verify: ClaimVerify::FirstTime,
+            phases: Vec::new(),
+        }
+    }
+
+    pub fn phase(
+        mut self,
+        name: &'static str,
+        inject: Vec<Fault>,
+        advance_ms: u64,
+        checks: Vec<Check>,
+    ) -> Self {
+        self.phases.push(Phase { name, inject, advance_ms, checks });
+        self
+    }
+}
+
+/// Observed outcome of one phase.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseOutcome {
+    pub name: &'static str,
+    /// Invariant violations (empty ⇒ phase passed).
+    pub failures: Vec<String>,
+    /// Flash-crowd session tallies (0/0 when no crowd ran).
+    pub crowd_ok: usize,
+    pub crowd_failed: usize,
+}
+
+/// Full scenario result.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    pub name: &'static str,
+    pub phases: Vec<PhaseOutcome>,
+    /// Folds every observed outcome (store ids, fragment counts, read
+    /// results, virtual clock) — two runs with the same spec must agree.
+    pub fingerprint: u64,
+    /// Peers at the end of the run (grows under churn).
+    pub final_peers: usize,
+    pub final_now_ms: u64,
+}
+
+impl ScenarioReport {
+    pub fn ok(&self) -> bool {
+        self.phases.iter().all(|p| p.failures.is_empty())
+    }
+
+    pub fn failures(&self) -> Vec<String> {
+        self.phases
+            .iter()
+            .flat_map(|p| p.failures.iter().map(move |f| format!("[{}] {f}", p.name)))
+            .collect()
+    }
+}
+
+fn fold(acc: u64, v: u64) -> u64 {
+    let mut s = acc ^ v.rotate_left(17);
+    splitmix64(&mut s)
+}
+
+fn fold_hash(acc: u64, h: &Hash256) -> u64 {
+    fold(acc, u64::from_le_bytes(h.0[..8].try_into().unwrap()))
+}
+
+/// Run a scenario end-to-end on the sharded runtime. Pure function of
+/// the spec (see module docs).
+pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
+    let mut cfg = ClusterConfig::small_test(spec.peers);
+    cfg.seed = spec.seed;
+    cfg.vault.claim_verify = spec.claim_verify;
+    cfg.vault.heartbeat_ms = 5_000;
+    cfg.vault.suspicion_ms = 15_000;
+    cfg.vault.tick_ms = 5_000;
+    cfg.vault.op_deadline_ms = 120_000;
+    let r_inner = cfg.vault.r_inner;
+    let k_inner = cfg.vault.k_inner;
+    let mut cluster = Cluster::start_sharded(cfg, spec.shards);
+    let mut rng = Rng::new(spec.seed ^ 0x5CE7_A810);
+    let mut fp = spec.seed;
+
+    // Seed the corpus through real STORE sagas.
+    let mut corpus: Vec<(ObjectId, Vec<u8>)> = Vec::with_capacity(spec.objects);
+    for o in 0..spec.objects {
+        let mut data = vec![0u8; spec.object_size.max(1)];
+        rng.fill_bytes(&mut data);
+        let client = cluster.random_client();
+        let stored = cluster
+            .store_blocking(client, &data, format!("scenario-{o}").as_bytes(), 0)
+            .unwrap_or_else(|e| panic!("{}: seeding store #{o} failed: {e}", spec.name));
+        for ch in &stored.value.chunks {
+            fp = fold_hash(fp, ch);
+        }
+        corpus.push((stored.value, data));
+    }
+
+    let mut phases = Vec::with_capacity(spec.phases.len());
+    for phase in &spec.phases {
+        let mut outcome = PhaseOutcome { name: phase.name, ..Default::default() };
+        for fault in &phase.inject {
+            let (ok, fail) =
+                inject_fault(&mut cluster, &mut rng, &corpus, fault, &mut fp);
+            outcome.crowd_ok += ok;
+            outcome.crowd_failed += fail;
+        }
+        cluster.net.run_for(phase.advance_ms);
+        fp = fold(fp, cluster.net.now_ms());
+
+        for check in &phase.checks {
+            run_check(
+                &mut cluster,
+                &corpus,
+                check,
+                r_inner,
+                k_inner,
+                &mut outcome,
+                &mut fp,
+            );
+        }
+        fp = fold(fp, outcome.crowd_ok as u64);
+        fp = fold(fp, outcome.crowd_failed as u64);
+        fp = fold(fp, outcome.failures.len() as u64);
+        phases.push(outcome);
+    }
+
+    ScenarioReport {
+        name: spec.name,
+        phases,
+        fingerprint: fp,
+        final_peers: cluster.net.len(),
+        final_now_ms: cluster.net.now_ms(),
+    }
+}
+
+/// Holders of a chunk's fragments, by global index, live first.
+fn holders<N: ClusterRuntime>(net: &N, chash: &Hash256) -> Vec<usize> {
+    let mut live: Vec<usize> = Vec::new();
+    let mut dead: Vec<usize> = Vec::new();
+    for i in 0..net.len() {
+        if net.peer(i).fragment_index(chash).is_some() {
+            if net.is_up(i) {
+                live.push(i);
+            } else {
+                dead.push(i);
+            }
+        }
+    }
+    live.extend(dead);
+    live
+}
+
+fn chunk_of(corpus: &[(ObjectId, Vec<u8>)], object: usize, chunk: usize) -> Hash256 {
+    let (id, _) = &corpus[object % corpus.len()];
+    id.chunks[chunk % id.chunks.len()]
+}
+
+fn inject_fault<N: ClusterRuntime>(
+    cluster: &mut Cluster<N>,
+    rng: &mut Rng,
+    corpus: &[(ObjectId, Vec<u8>)],
+    fault: &Fault,
+    fp: &mut u64,
+) -> (usize, usize) {
+    match fault {
+        Fault::RegionPartition { region } => {
+            for i in 0..cluster.net.len() {
+                if cluster.net.is_up(i) && cluster.net.peer(i).info.region == *region {
+                    cluster.net.attack(i);
+                    *fp = fold(*fp, i as u64);
+                }
+            }
+        }
+        Fault::RegionHeal { region } => {
+            // Heal only *partitioned* (attacked) peers: peers killed by
+            // CrashBurst in the same region stay permanently departed.
+            for i in 0..cluster.net.len() {
+                let p = cluster.net.peer(i);
+                if p.info.region == *region && cluster.net.is_attacked(i) {
+                    cluster.net.restore(i);
+                    *fp = fold(*fp, i as u64 ^ 0xFF00);
+                }
+            }
+        }
+        Fault::CrashBurst { count } => {
+            for _ in 0..*count {
+                for _ in 0..cluster.net.len() * 2 {
+                    let i = rng.range(0, cluster.net.len());
+                    if cluster.net.is_up(i) {
+                        cluster.net.kill(i);
+                        *fp = fold(*fp, i as u64 ^ 0xDEAD);
+                        break;
+                    }
+                }
+            }
+        }
+        Fault::TargetedAttack { count } => {
+            let hit = cluster.attack_random(*count);
+            for i in hit {
+                *fp = fold(*fp, i as u64 ^ 0xA77A);
+            }
+        }
+        Fault::ByzantineGroup { object, chunk, members } => {
+            let chash = chunk_of(corpus, *object, *chunk);
+            for i in holders(&cluster.net, &chash).into_iter().take(*members) {
+                cluster.net.peer_mut(i).go_byzantine(true);
+                *fp = fold(*fp, i as u64 ^ 0xB12);
+            }
+        }
+        Fault::SilentGroup { object, chunk, members } => {
+            let chash = chunk_of(corpus, *object, *chunk);
+            for i in holders(&cluster.net, &chash).into_iter().take(*members) {
+                cluster.net.peer_mut(i).fault.mute_heartbeats = true;
+                *fp = fold(*fp, i as u64 ^ 0x5117);
+            }
+        }
+        Fault::FlashCrowd { object, readers } => {
+            return flash_crowd(cluster, corpus, *object, *readers, fp);
+        }
+        Fault::StakeChurn { count } => {
+            for i in cluster.churn(*count) {
+                *fp = fold(*fp, i as u64 ^ 0xC4A2);
+            }
+        }
+        Fault::SlowLinks { drop_prob } => {
+            cluster.net.set_drop_prob(*drop_prob);
+            *fp = fold(*fp, (*drop_prob * 1e6) as u64);
+        }
+    }
+    (0, 0)
+}
+
+/// Launch `readers` concurrent QUERY sessions for one object and pump
+/// virtual time until they all resolve (or the deadline passes).
+fn flash_crowd<N: ClusterRuntime>(
+    cluster: &mut Cluster<N>,
+    corpus: &[(ObjectId, Vec<u8>)],
+    object: usize,
+    readers: usize,
+    fp: &mut u64,
+) -> (usize, usize) {
+    let (id, want) = corpus[object % corpus.len()].clone();
+    let mut sessions = Vec::with_capacity(readers);
+    for _ in 0..readers {
+        let client = cluster.random_client();
+        let node = cluster.net.peer(client).info.id;
+        let op = cluster.net.query(client, &id);
+        sessions.push((node, op));
+    }
+    let deadline = cluster.net.now_ms() + 180_000;
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    let mut pending = sessions.len();
+    while pending > 0 && cluster.net.now_ms() < deadline {
+        for (node, ev) in cluster.net.run_for(1_000) {
+            match ev {
+                AppEvent::QueryDone { op, data, .. } => {
+                    if let Some(pos) =
+                        sessions.iter().position(|&(n, o)| n == node && o == op)
+                    {
+                        sessions.swap_remove(pos);
+                        pending -= 1;
+                        if data == want {
+                            ok += 1;
+                        } else {
+                            failed += 1;
+                        }
+                    }
+                }
+                AppEvent::OpFailed { op, .. } => {
+                    if let Some(pos) =
+                        sessions.iter().position(|&(n, o)| n == node && o == op)
+                    {
+                        sessions.swap_remove(pos);
+                        pending -= 1;
+                        failed += 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    failed += pending; // sessions that never resolved
+    *fp = fold(*fp, ok as u64);
+    *fp = fold(*fp, failed as u64);
+    (ok, failed)
+}
+
+fn run_check<N: ClusterRuntime>(
+    cluster: &mut Cluster<N>,
+    corpus: &[(ObjectId, Vec<u8>)],
+    check: &Check,
+    r_inner: usize,
+    k_inner: usize,
+    outcome: &mut PhaseOutcome,
+    fp: &mut u64,
+) {
+    match check {
+        Check::AllObjectsReadable | Check::ObjectsReadableFrac(_) => {
+            let mut ok = 0usize;
+            for (o, (id, want)) in corpus.iter().enumerate() {
+                let client = cluster.random_client();
+                match cluster.query_blocking(client, id) {
+                    Ok(res) if &res.value == want => ok += 1,
+                    Ok(_) => outcome
+                        .failures
+                        .push(format!("object #{o}: read returned corrupted bytes")),
+                    Err(e) => {
+                        if matches!(check, Check::AllObjectsReadable) {
+                            outcome.failures.push(format!("object #{o}: read failed: {e}"));
+                        }
+                    }
+                }
+            }
+            *fp = fold(*fp, ok as u64);
+            if let Check::ObjectsReadableFrac(frac) = check {
+                let need = (*frac * corpus.len() as f64).ceil() as usize;
+                if ok < need {
+                    outcome.failures.push(format!(
+                        "availability {ok}/{} below required {need}",
+                        corpus.len()
+                    ));
+                }
+            }
+        }
+        Check::NoChunkBelowDecodeThreshold => {
+            for (o, (id, _)) in corpus.iter().enumerate() {
+                for (c, chash) in id.chunks.iter().enumerate() {
+                    let n = cluster.net.surviving_fragments(chash);
+                    *fp = fold(*fp, n as u64);
+                    if n < k_inner {
+                        outcome.failures.push(format!(
+                            "object #{o} chunk #{c}: {n} honest fragments < decode threshold {k_inner}"
+                        ));
+                    }
+                }
+            }
+        }
+        Check::GroupsRecoveredTo(frac) => {
+            let need = ((*frac * r_inner as f64).floor() as usize).max(1);
+            for (o, (id, _)) in corpus.iter().enumerate() {
+                for (c, chash) in id.chunks.iter().enumerate() {
+                    let n = cluster.net.surviving_fragments(chash);
+                    *fp = fold(*fp, n as u64 ^ 0x6E0);
+                    if n < need {
+                        outcome.failures.push(format!(
+                            "object #{o} chunk #{c}: group at {n} < required {need} (R={r_inner})"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trivial_scenario_passes_and_is_deterministic() {
+        let spec = ScenarioSpec::small("noop", 42, 40).phase(
+            "steady-state",
+            vec![],
+            30_000,
+            vec![Check::AllObjectsReadable, Check::NoChunkBelowDecodeThreshold],
+        );
+        let a = run_scenario(&spec);
+        assert!(a.ok(), "failures: {:?}", a.failures());
+        let b = run_scenario(&spec);
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_eq!(a.final_now_ms, b.final_now_ms);
+    }
+}

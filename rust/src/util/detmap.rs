@@ -1,0 +1,75 @@
+//! Deterministic hash containers for the protocol state machines.
+//!
+//! `std::collections::HashMap`'s default `RandomState` draws a fresh
+//! random key per instance, so *iteration order* differs between two
+//! otherwise identical peers — and several protocol paths iterate maps
+//! when building outboxes (heartbeat recipients, per-chunk saga
+//! fan-out, join targets). That randomness would leak into message
+//! order and break the simulator's "same seed ⇒ same event order"
+//! contract (DESIGN.md §Determinism; asserted by
+//! `tests/scenario_matrix.rs`).
+//!
+//! [`DetHashMap`]/[`DetHashSet`] fix the hasher to FNV-1a, making
+//! iteration order a pure function of the insertion/removal history —
+//! which is itself deterministic given the event order, closing the
+//! loop. Construct with `default()` / `with_capacity_and_hasher`;
+//! everything else is the plain std API.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// FNV-1a, 64-bit. Not DoS-resistant — simulation-internal state only,
+/// never exposed to untrusted key choice at scale beyond what the
+/// protocol already bounds (peers per group, ops per peer).
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+}
+
+impl Hasher for Fnv1a {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+}
+
+pub type DetBuildHasher = BuildHasherDefault<Fnv1a>;
+pub type DetHashMap<K, V> = HashMap<K, V, DetBuildHasher>;
+pub type DetHashSet<T> = HashSet<T, DetBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iteration_order_reproducible_across_instances() {
+        let build = |n: u64| -> Vec<u64> {
+            let mut m: DetHashMap<u64, u64> = DetHashMap::default();
+            for i in 0..n {
+                m.insert(i * 7919, i);
+            }
+            m.remove(&(3 * 7919));
+            m.keys().copied().collect()
+        };
+        assert_eq!(build(100), build(100));
+    }
+
+    #[test]
+    fn fnv_known_values() {
+        let mut h = Fnv1a::default();
+        h.write(b"");
+        assert_eq!(h.finish(), 0xcbf2_9ce4_8422_2325);
+        let mut h = Fnv1a::default();
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -3,6 +3,7 @@
 //! helpers (the build environment is fully offline).
 
 pub mod cli;
+pub mod detmap;
 pub mod logger;
 pub mod rng;
 pub mod stats;

@@ -6,7 +6,7 @@
 //!   derivable from protocol material (e.g. the client's private-key
 //!   based outer-chunk selection, fountain-code coefficient rows).
 
-use sha2::{Digest, Sha256};
+use crate::crypto::sha2::{Digest, Sha256};
 
 /// SplitMix64 step — used for seeding and as a cheap standalone mixer.
 pub fn splitmix64(state: &mut u64) -> u64 {

@@ -1,0 +1,174 @@
+//! Property tests for verifiable random peer selection
+//! (`proto::selection`, paper §4.3.2 / Algorithm 2): VRF proofs verify
+//! for their producer and *only* their producer, forgeries and
+//! parameter confusion are rejected, and the documented
+//! `P(d) = min(1, R/d)` threshold yields ≈R expected eligible nodes per
+//! fragment across seeded populations.
+//!
+//! Seeded `util::rng` drives case generation (no proptest offline).
+
+use vault::crypto::ed25519::SigningKey;
+use vault::crypto::Hash256;
+use vault::dht::{rank_distance, ring_distance, NodeId};
+use vault::proto::selection::{
+    prove_selection, selection_probability, verify_selection,
+};
+use vault::util::rng::Rng;
+
+fn keys(n: usize, rng: &mut Rng) -> Vec<SigningKey> {
+    (0..n)
+        .map(|_| {
+            let mut s = [0u8; 32];
+            rng.fill_bytes(&mut s);
+            SigningKey::from_seed(&s)
+        })
+        .collect()
+}
+
+/// Every proof a node can produce verifies under its own key and fails
+/// under anyone else's, for any (r, n) parameterization.
+#[test]
+fn prop_proofs_bind_to_identity_across_populations() {
+    let mut rng = Rng::new(0x5E1_0051);
+    for trial in 0..8 {
+        let r = rng.range(4, 40);
+        let n = rng.range(40, 500);
+        let ks = keys(2, &mut rng);
+        let mut h = [0u8; 32];
+        rng.fill_bytes(&mut h);
+        let chash = Hash256(h);
+        let mut proved = 0;
+        for idx in 0..60u64 {
+            let Some(proof) = prove_selection(&ks[0], &chash, idx, r, n) else { continue };
+            proved += 1;
+            assert!(
+                verify_selection(&ks[0].public, &chash, idx, &proof, r, n),
+                "trial {trial}: own proof must verify"
+            );
+            // Identity transplant fails.
+            assert!(
+                !verify_selection(&ks[1].public, &chash, idx, &proof, r, n),
+                "trial {trial}: transplanted proof must fail"
+            );
+            // Index confusion fails (different VRF input).
+            assert!(!verify_selection(&ks[0].public, &chash, idx + 1, &proof, r, n));
+            // Chunk confusion fails.
+            let other = Hash256::of(&[trial as u8, idx as u8]);
+            assert!(!verify_selection(&ks[0].public, &other, idx, &proof, r, n));
+            if proved >= 3 {
+                break;
+            }
+        }
+        assert!(proved > 0, "trial {trial}: node never eligible in 60 indices");
+    }
+}
+
+/// Bit-flipped proofs (gamma, challenge, scalar) never verify.
+#[test]
+fn prop_forged_proofs_rejected() {
+    let mut rng = Rng::new(0xF0 ^ 0x9E);
+    for _ in 0..6 {
+        let ks = keys(1, &mut rng);
+        let mut h = [0u8; 32];
+        rng.fill_bytes(&mut h);
+        let chash = Hash256(h);
+        let (r, n) = (rng.range(8, 32), rng.range(32, 200));
+        for idx in 0..60u64 {
+            let Some(proof) = prove_selection(&ks[0], &chash, idx, r, n) else { continue };
+            let mut forged = proof;
+            forged.gamma[rng.range(0, 32)] ^= 1 << rng.range(0, 8);
+            assert!(!verify_selection(&ks[0].public, &chash, idx, &forged, r, n));
+            let mut forged = proof;
+            forged.c[rng.range(0, 16)] ^= 1 << rng.range(0, 8);
+            assert!(!verify_selection(&ks[0].public, &chash, idx, &forged, r, n));
+            let mut forged = proof;
+            forged.s[rng.range(0, 32)] ^= 1 << rng.range(0, 8);
+            assert!(!verify_selection(&ks[0].public, &chash, idx, &forged, r, n));
+            break;
+        }
+    }
+}
+
+/// The documented threshold shape: P(1)=…=P(R)=1, then R/d, never
+/// increasing, and the analytic expected eligible count per fragment is
+/// R (certain cohort) plus the harmonic tail R·(H_n − H_R).
+#[test]
+fn prop_threshold_shape_and_expectation() {
+    for r in [5usize, 20, 80] {
+        assert_eq!(selection_probability(1.0, r), 1.0);
+        assert_eq!(selection_probability(r as f64, r), 1.0);
+        let mut prev = 1.0;
+        for d in (1..400).map(|x| x as f64) {
+            let p = selection_probability(d, r);
+            assert!(p <= prev + 1e-12, "P(d) must be non-increasing");
+            assert!(p > 0.0 && p <= 1.0);
+            prev = p;
+        }
+        assert!((selection_probability(2.0 * r as f64, r) - 0.5).abs() < 1e-12);
+    }
+}
+
+/// Empirical eligibility across seeded populations tracks the design
+/// point: per fragment, the nearest R nodes are (almost) all eligible
+/// and the total expected count is ≈ R + R·ln(n/R) — "≈R" with the
+/// harmonic spread documented in proto::selection.
+#[test]
+fn prop_expected_eligible_tracks_r_target() {
+    for (pop_seed, n, r) in [(1u64, 200usize, 10usize), (2, 400, 20)] {
+        let mut rng = Rng::new(pop_seed ^ 0xE11);
+        let ks = keys(n, &mut rng);
+        let chash = Hash256::of(&pop_seed.to_le_bytes());
+
+        // Analytic expectation from each node's actual rank distance.
+        let expected: f64 = ks
+            .iter()
+            .map(|k| {
+                let d = rank_distance(&NodeId::from_pk(&k.public).0, &chash, n);
+                selection_probability(d, r)
+            })
+            .sum();
+        let harmonic_cap = r as f64 * (1.0 + (n as f64 / r as f64).ln());
+        assert!(
+            expected >= 0.7 * r as f64 && expected <= 1.6 * harmonic_cap,
+            "analytic expectation {expected} out of band for (n={n}, r={r})"
+        );
+
+        // Empirical mean across fragment indices.
+        let indices = 4u64;
+        let mut total = 0usize;
+        for idx in 0..indices {
+            for k in &ks {
+                if prove_selection(k, &chash, idx, r, n).is_some() {
+                    total += 1;
+                }
+            }
+        }
+        let mean = total as f64 / indices as f64;
+        assert!(
+            (mean - expected).abs() < expected * 0.35 + 3.0,
+            "(n={n}, r={r}): empirical {mean} vs analytic {expected}"
+        );
+        assert!(
+            mean >= 0.8 * r as f64,
+            "(n={n}, r={r}): mean eligible {mean} below R floor"
+        );
+
+        // The nearest-R cohort is essentially always eligible.
+        let mut ranked: Vec<&SigningKey> = ks.iter().collect();
+        ranked.sort_by_key(|k| ring_distance(&NodeId::from_pk(&k.public).0, &chash));
+        let mut cohort_hits = 0usize;
+        let mut cohort_total = 0usize;
+        for k in ranked.iter().take(r / 2) {
+            for idx in 0..indices {
+                cohort_total += 1;
+                if prove_selection(k, &chash, idx, r, n).is_some() {
+                    cohort_hits += 1;
+                }
+            }
+        }
+        assert!(
+            cohort_hits as f64 >= 0.85 * cohort_total as f64,
+            "(n={n}, r={r}): nearest cohort only {cohort_hits}/{cohort_total} eligible"
+        );
+    }
+}
