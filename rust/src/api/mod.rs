@@ -1,0 +1,422 @@
+//! Asynchronous client-facing operation API.
+//!
+//! The paper's availability claims are about serving traffic *while*
+//! failures churn the network, which requires many client operations in
+//! flight at once. [`VaultApi`] is the submission/completion surface
+//! every backend implements uniformly — [`crate::coordinator::Cluster`]
+//! over either runtime ([`crate::net::simnet::SimNet`] /
+//! [`crate::net::shardnet::ShardNet`]) and the
+//! [`crate::baseline::ipfs_like::IpfsNet`] comparison system — so the
+//! same open-loop workload generator and the same experiments drive all
+//! of them:
+//!
+//! * [`VaultApi::submit_store`] / [`VaultApi::submit_get`] return a
+//!   typed [`OpHandle`] immediately; nothing blocks.
+//! * [`VaultApi::drive`] advances virtual time by an explicit bound —
+//!   per-op deadlines (defaulting to the protocol's
+//!   `op_deadline_ms` plus slack) replace the old run-to-quiescence.
+//! * [`VaultApi::poll_completions`] drains [`OpCompletion`] records
+//!   carrying the outcome, bytes moved, and the submit/finish virtual
+//!   timestamps.
+//!
+//! ## Deterministic completion ordering
+//!
+//! Completions are queued in the order the runtime surfaces them, which
+//! is a pure function of the seed (see `net::shardnet` §Determinism);
+//! deadline expiries are folded in at fixed `drive` slice boundaries in
+//! ascending `(deadline, handle)` order. Two runs with the same seed
+//! therefore observe the same completion sequence — the property the
+//! scenario fingerprints assert.
+//!
+//! The old blocking calls survive as thin wrappers: submit one op,
+//! drive until its completion surfaces, take it (`coordinator::Cluster::
+//! store_blocking` / `query_blocking`).
+
+use crate::util::detmap::DetHashMap;
+
+/// Ticket for a submitted operation, unique per API instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpHandle(pub u64);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Store,
+    Get,
+}
+
+/// How a submitted operation ended.
+#[derive(Clone, Debug)]
+pub enum OpOutcome<R> {
+    /// STORE finished; `R` is the backend's object reference (the
+    /// private `ObjectId` for VAULT, the record-key handle for the
+    /// baseline).
+    Stored(R),
+    /// GET finished. The VAULT backends carry the object bytes; the
+    /// abstract baseline models sizes only and carries an empty payload
+    /// (its `bytes` field still records the modeled transfer).
+    Fetched(Vec<u8>),
+    /// The operation failed or its deadline passed.
+    Failed(String),
+}
+
+/// One drained completion record.
+#[derive(Clone, Debug)]
+pub struct OpCompletion<R> {
+    pub handle: OpHandle,
+    pub kind: OpKind,
+    pub outcome: OpOutcome<R>,
+    /// Virtual time the op was submitted.
+    pub submitted_ms: u64,
+    /// Virtual time the op completed (or was declared dead).
+    pub finished_ms: u64,
+    /// Application bytes moved: object size for stores, payload size
+    /// for gets (0 for failures).
+    pub bytes: u64,
+}
+
+impl<R> OpCompletion<R> {
+    pub fn latency_ms(&self) -> u64 {
+        self.finished_ms.saturating_sub(self.submitted_ms)
+    }
+
+    pub fn is_ok(&self) -> bool {
+        !matches!(self.outcome, OpOutcome::Failed(_))
+    }
+}
+
+/// Virtual-time granularity at which [`VaultApi::drive`] checks per-op
+/// deadlines (and at which the blocking wrappers poll) — the same 200 ms
+/// slice the pre-redesign `run_until_op_from` loop used.
+pub const DRIVE_SLICE_MS: u64 = 200;
+
+/// The uniform submission/completion client API.
+///
+/// `client` indices address peers of the backend (a participating node
+/// for VAULT, §4.3.1); `deadline_ms` arguments are relative to the
+/// submission time, `None` meaning [`VaultApi::default_op_deadline_ms`].
+pub trait VaultApi {
+    /// Backend-specific object reference returned by stores and
+    /// accepted by gets.
+    type ObjectRef: Clone;
+
+    fn submit_store_with(
+        &mut self,
+        client: usize,
+        object: &[u8],
+        secret: &[u8],
+        expires_ms: u64,
+        deadline_ms: Option<u64>,
+    ) -> OpHandle;
+
+    fn submit_get_with(
+        &mut self,
+        client: usize,
+        object: &Self::ObjectRef,
+        deadline_ms: Option<u64>,
+    ) -> OpHandle;
+
+    /// Advance virtual time to `until_ms`, absorbing completions and
+    /// expiring per-op deadlines. Returns with the clock at `until_ms`
+    /// (or later if an event landed past it) even when idle.
+    fn drive(&mut self, until_ms: u64);
+
+    /// Drain every queued completion, in deterministic order.
+    fn poll_completions(&mut self) -> Vec<OpCompletion<Self::ObjectRef>>;
+
+    /// Remove and return one specific completion, leaving the rest
+    /// queued (the blocking wrappers use this so concurrent traffic is
+    /// not dropped on the floor).
+    fn take_completion(&mut self, handle: OpHandle) -> Option<OpCompletion<Self::ObjectRef>>;
+
+    /// Is this handle still in flight (submitted, not yet completed)?
+    fn pending_contains(&self, handle: OpHandle) -> bool;
+
+    /// Abort a pending op: it surfaces as a `Failed` completion at the
+    /// current virtual time. Returns false if the handle is unknown or
+    /// already complete. (The runtime may still finish the underlying
+    /// saga; its late event is dropped by the registry.)
+    fn cancel_op(&mut self, handle: OpHandle) -> bool;
+
+    fn api_now_ms(&self) -> u64;
+
+    /// Ops submitted but not yet surfaced as completions.
+    fn in_flight(&self) -> usize;
+
+    /// Deadline applied when a submit passes `None`.
+    fn default_op_deadline_ms(&self) -> u64;
+
+    /// Number of addressable client slots.
+    fn client_count(&self) -> usize;
+
+    /// Can `client` currently issue operations (alive, honest)?
+    fn client_usable(&self, client: usize) -> bool;
+
+    // ---- provided -----------------------------------------------------
+
+    fn submit_store(
+        &mut self,
+        client: usize,
+        object: &[u8],
+        secret: &[u8],
+        expires_ms: u64,
+    ) -> OpHandle {
+        self.submit_store_with(client, object, secret, expires_ms, None)
+    }
+
+    fn submit_get(&mut self, client: usize, object: &Self::ObjectRef) -> OpHandle {
+        self.submit_get_with(client, object, None)
+    }
+
+    /// Advance virtual time by `d_ms`.
+    fn drive_for(&mut self, d_ms: u64) {
+        self.drive(self.api_now_ms() + d_ms);
+    }
+
+    /// Cancel every handle in `handles` (in sorted order, so the
+    /// resulting completion sequence is deterministic) and drain the
+    /// completions this produces. Returns how many handles were passed
+    /// in — the workload generators count them all as failed.
+    fn cancel_all(&mut self, handles: Vec<OpHandle>) -> usize {
+        let mut handles = handles;
+        handles.sort_unstable();
+        for h in &handles {
+            self.cancel_op(*h);
+        }
+        let _ = self.poll_completions();
+        handles.len()
+    }
+
+    /// Drive in [`DRIVE_SLICE_MS`] slices until `handle` completes. The
+    /// per-op deadline guarantees termination. Panics if the completion
+    /// was already drained by `poll_completions` (a caller bug).
+    fn drive_until_complete(&mut self, handle: OpHandle) -> OpCompletion<Self::ObjectRef> {
+        loop {
+            if let Some(done) = self.take_completion(handle) {
+                return done;
+            }
+            assert!(
+                self.pending_contains(handle),
+                "completion for {handle:?} was already drained by poll_completions"
+            );
+            self.drive(self.api_now_ms() + DRIVE_SLICE_MS);
+        }
+    }
+}
+
+/// Everything the registry remembers about an in-flight op. Returned by
+/// [`ApiState::take_pending`] so backends can build the completion.
+pub struct PendingOp<R, K> {
+    pub handle: OpHandle,
+    pub key: K,
+    pub kind: OpKind,
+    pub submitted_ms: u64,
+    /// Absolute virtual-time deadline.
+    pub deadline_ms: u64,
+    /// Bytes the op moves if it succeeds (object size).
+    pub bytes: u64,
+    /// Object reference known at submission (the baseline knows its
+    /// record keys up front; VAULT learns the `ObjectId` on completion).
+    pub stored_ref: Option<R>,
+}
+
+/// Op registry + completion queue shared by every [`VaultApi`] backend.
+///
+/// `K` is the backend's correlation key for runtime-level completion
+/// events: `(NodeId, op)` for the cluster runtimes (op ids are per-peer
+/// counters), the global op id for the baseline.
+pub struct ApiState<R, K> {
+    next_handle: u64,
+    by_key: DetHashMap<K, OpHandle>,
+    pending: DetHashMap<u64, PendingOp<R, K>>,
+    done: Vec<OpCompletion<R>>,
+}
+
+impl<R, K> Default for ApiState<R, K> {
+    fn default() -> Self {
+        ApiState {
+            next_handle: 0,
+            by_key: DetHashMap::default(),
+            pending: DetHashMap::default(),
+            done: Vec::new(),
+        }
+    }
+}
+
+impl<R, K: std::hash::Hash + Eq + Clone> ApiState<R, K> {
+    pub fn register(
+        &mut self,
+        key: K,
+        kind: OpKind,
+        submitted_ms: u64,
+        deadline_ms: u64,
+        bytes: u64,
+        stored_ref: Option<R>,
+    ) -> OpHandle {
+        self.next_handle += 1;
+        let handle = OpHandle(self.next_handle);
+        self.by_key.insert(key.clone(), handle);
+        self.pending.insert(
+            handle.0,
+            PendingOp { handle, key, kind, submitted_ms, deadline_ms, bytes, stored_ref },
+        );
+        handle
+    }
+
+    /// Remove and return the pending op correlated with `key`, if the
+    /// registry still owns it (deadline-expired ops are gone — a late
+    /// runtime event for them is dropped here).
+    pub fn take_pending(&mut self, key: &K) -> Option<PendingOp<R, K>> {
+        let handle = self.by_key.remove(key)?;
+        self.pending.remove(&handle.0)
+    }
+
+    /// Queue a completion the backend built from a runtime event.
+    pub fn push(&mut self, completion: OpCompletion<R>) {
+        self.done.push(completion);
+    }
+
+    /// Fail every pending op whose deadline has passed, in ascending
+    /// `(deadline, handle)` order so the completion sequence stays
+    /// deterministic. Returns how many expired.
+    pub fn expire(&mut self, now_ms: u64) -> usize {
+        let mut dead: Vec<(u64, u64)> = self
+            .pending
+            .values()
+            .filter(|p| p.deadline_ms <= now_ms)
+            .map(|p| (p.deadline_ms, p.handle.0))
+            .collect();
+        if dead.is_empty() {
+            return 0;
+        }
+        dead.sort_unstable();
+        let n = dead.len();
+        for (_, h) in dead {
+            let p = self.pending.remove(&h).expect("expired op pending");
+            self.by_key.remove(&p.key);
+            self.done.push(OpCompletion {
+                handle: p.handle,
+                kind: p.kind,
+                outcome: OpOutcome::Failed(format!(
+                    "op deadline exceeded at t={}ms (submitted t={}ms)",
+                    p.deadline_ms, p.submitted_ms
+                )),
+                submitted_ms: p.submitted_ms,
+                finished_ms: now_ms,
+                bytes: 0,
+            });
+        }
+        n
+    }
+
+    /// Abort a pending op: remove it from the registry and queue a
+    /// `Failed` completion. Returns false if the handle is not pending.
+    pub fn cancel(&mut self, handle: OpHandle, now_ms: u64) -> bool {
+        let Some(p) = self.pending.remove(&handle.0) else { return false };
+        self.by_key.remove(&p.key);
+        self.done.push(OpCompletion {
+            handle,
+            kind: p.kind,
+            outcome: OpOutcome::Failed("op cancelled".into()),
+            submitted_ms: p.submitted_ms,
+            finished_ms: now_ms,
+            bytes: 0,
+        });
+        true
+    }
+
+    pub fn drain(&mut self) -> Vec<OpCompletion<R>> {
+        std::mem::take(&mut self.done)
+    }
+
+    pub fn take(&mut self, handle: OpHandle) -> Option<OpCompletion<R>> {
+        let i = self.done.iter().position(|c| c.handle == handle)?;
+        Some(self.done.remove(i))
+    }
+
+    pub fn contains(&self, handle: OpHandle) -> bool {
+        self.pending.contains_key(&handle.0)
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg(api: &mut ApiState<u32, u64>, key: u64, deadline: u64) -> OpHandle {
+        api.register(key, OpKind::Get, 0, deadline, 10, None)
+    }
+
+    #[test]
+    fn register_take_complete_roundtrip() {
+        let mut api: ApiState<u32, u64> = ApiState::default();
+        let h = reg(&mut api, 7, 1000);
+        assert_eq!(api.in_flight(), 1);
+        assert!(api.contains(h));
+        let p = api.take_pending(&7).expect("pending");
+        assert_eq!(p.handle, h);
+        assert_eq!(api.in_flight(), 0);
+        api.push(OpCompletion {
+            handle: p.handle,
+            kind: p.kind,
+            outcome: OpOutcome::Fetched(vec![1, 2]),
+            submitted_ms: p.submitted_ms,
+            finished_ms: 40,
+            bytes: 2,
+        });
+        assert!(api.take(OpHandle(999)).is_none());
+        let done = api.take(h).expect("completion queued");
+        assert_eq!(done.latency_ms(), 40);
+        assert!(done.is_ok());
+        assert!(api.take(h).is_none(), "take removes");
+    }
+
+    #[test]
+    fn expiry_is_ordered_and_final() {
+        let mut api: ApiState<u32, u64> = ApiState::default();
+        // Register out of deadline order to exercise the sort.
+        let h_late = reg(&mut api, 1, 500);
+        let h_early = reg(&mut api, 2, 300);
+        let h_alive = reg(&mut api, 3, 10_000);
+        assert_eq!(api.expire(100), 0);
+        assert_eq!(api.expire(600), 2);
+        let done = api.drain();
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].handle, h_early, "earlier deadline first");
+        assert_eq!(done[1].handle, h_late);
+        assert!(!done[0].is_ok());
+        assert_eq!(done[0].finished_ms, 600);
+        // A late runtime event for an expired op finds nothing.
+        assert!(api.take_pending(&2).is_none());
+        assert!(api.contains(h_alive));
+        assert_eq!(api.in_flight(), 1);
+    }
+
+    #[test]
+    fn cancel_removes_pending_and_queues_failure() {
+        let mut api: ApiState<u32, u64> = ApiState::default();
+        let h = reg(&mut api, 5, 1_000);
+        assert!(api.cancel(h, 42));
+        assert!(!api.cancel(h, 43), "double cancel is a no-op");
+        assert!(!api.contains(h));
+        let done = api.drain();
+        assert_eq!(done.len(), 1);
+        assert!(!done[0].is_ok());
+        assert_eq!(done[0].finished_ms, 42);
+        // A late runtime event for the cancelled op finds nothing.
+        assert!(api.take_pending(&5).is_none());
+    }
+
+    #[test]
+    fn ties_break_by_handle() {
+        let mut api: ApiState<u32, u64> = ApiState::default();
+        let hs: Vec<OpHandle> = (0..8).map(|k| reg(&mut api, k, 100)).collect();
+        api.expire(100);
+        let done = api.drain();
+        let got: Vec<OpHandle> = done.iter().map(|c| c.handle).collect();
+        assert_eq!(got, hs, "equal deadlines expire in handle order");
+    }
+}

@@ -9,11 +9,17 @@
 //!
 //! Same virtual-time event loop, region latency matrix, bandwidth model
 //! and jitter as the VAULT simnet — measured latencies differ only by
-//! protocol, not by harness.
+//! protocol, not by harness. The net also implements [`VaultApi`], so
+//! the open-loop concurrent workloads and attack experiments drive it
+//! through the exact same submission/completion surface as the VAULT
+//! clusters (the baseline models record *sizes*, not payloads: a
+//! successful get completes as `Fetched(vec![])` with the modeled
+//! transfer size in `bytes`).
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BinaryHeap, HashMap, HashSet};
 
+use crate::api::{ApiState, OpCompletion, OpHandle, OpKind, OpOutcome, VaultApi, DRIVE_SLICE_MS};
 use crate::crypto::Hash256;
 use crate::net::{DEFAULT_BANDWIDTH_BYTES_PER_MS, REGION_LATENCY_MS};
 use crate::util::rng::Rng;
@@ -62,6 +68,23 @@ enum Ev {
     ReplicaInstalled { key: Hash256, peer: usize },
 }
 
+/// In-flight op state: outstanding acks/replies, start time, and
+/// whether any record fetch failed.
+struct PendingOp {
+    outstanding: usize,
+    start_ms: u64,
+    failed: bool,
+}
+
+/// A resolved op waiting to be claimed (by [`IpfsNet::run_until_op`] or
+/// absorbed into the [`VaultApi`] completion queue).
+struct FinishedOp {
+    op: u64,
+    ok: bool,
+    start_ms: u64,
+    end_ms: u64,
+}
+
 /// The IPFS-like network simulator.
 pub struct IpfsNet {
     cfg: IpfsConfig,
@@ -72,8 +95,15 @@ pub struct IpfsNet {
     payloads: Vec<Option<Ev>>,
     seq: u64,
     rng: Rng,
-    pending: HashMap<u64, (usize, u64)>, // op -> (outstanding, start_ms)
+    pending: HashMap<u64, PendingOp>,
+    finished: Vec<FinishedOp>,
     next_op: u64,
+    api: ApiState<ObjectHandle, u64>,
+    /// Op ids issued through the [`VaultApi`] surface. Their finished
+    /// records are absorbed (or dropped, if the registry cancelled or
+    /// expired them) rather than kept for `run_until_op` callers.
+    api_ops: HashSet<u64>,
+    api_tag: u64,
     pub msgs: u64,
     pub bytes: u64,
 }
@@ -105,7 +135,11 @@ impl IpfsNet {
             seq: 0,
             rng,
             pending: HashMap::new(),
+            finished: Vec::new(),
             next_op: 1,
+            api: ApiState::default(),
+            api_ops: HashSet::new(),
+            api_tag: 0,
             msgs: 0,
             bytes: 0,
         }
@@ -208,7 +242,7 @@ impl IpfsNet {
                 outstanding += 1;
             }
         }
-        self.pending.insert(op, (outstanding, self.now_ms));
+        self.begin_op(op, outstanding);
         (ObjectHandle { keys, record_size: rec_size }, op)
     }
 
@@ -243,7 +277,7 @@ impl IpfsNet {
                 }
             }
         }
-        self.pending.insert(op, (outstanding, self.now_ms));
+        self.begin_op(op, outstanding);
         op
     }
 
@@ -275,47 +309,203 @@ impl IpfsNet {
             self.schedule(self.now_ms + 1, Ev::PutAck { op });
             outstanding = 1;
         }
-        self.pending.insert(op, (outstanding, self.now_ms));
+        self.begin_op(op, outstanding);
         op
     }
 
-    /// Run until `op` completes; returns its latency (virtual ms), or
-    /// `None` if any record fetch failed.
-    pub fn run_until_op(&mut self, op: u64) -> Option<u64> {
-        let mut failed = false;
+    fn begin_op(&mut self, op: u64, outstanding: usize) {
+        if outstanding == 0 {
+            // Nothing to wait for (e.g. a store into an empty ring):
+            // resolves immediately with zero latency.
+            let now = self.now_ms;
+            self.finished.push(FinishedOp { op, ok: true, start_ms: now, end_ms: now });
+            return;
+        }
+        self.pending.insert(op, PendingOp { outstanding, start_ms: self.now_ms, failed: false });
+    }
+
+    /// One ack/reply arrived for `op`; resolve it when the last lands.
+    fn op_progress(&mut self, op: u64, ok: bool) {
+        let Some(p) = self.pending.get_mut(&op) else { return };
+        if !ok {
+            p.failed = true;
+        }
+        p.outstanding = p.outstanding.saturating_sub(1);
+        if p.outstanding == 0 {
+            let p = self.pending.remove(&op).expect("pending op");
+            self.finished.push(FinishedOp {
+                op,
+                ok: !p.failed,
+                start_ms: p.start_ms,
+                end_ms: self.now_ms,
+            });
+        }
+    }
+
+    /// Pop and apply every event scheduled at or before `t_ms`, then
+    /// advance the clock to `t_ms` even if the queue ran dry.
+    fn process_until(&mut self, t_ms: u64) {
         while let Some(&Reverse((t, _, slot))) = self.events.peek() {
-            let (outstanding, _) = *self.pending.get(&op)?;
-            if outstanding == 0 {
+            if t > t_ms {
                 break;
             }
             self.events.pop();
             self.now_ms = t;
             let Some(ev) = self.payloads[slot].take() else { continue };
             match ev {
-                Ev::PutAck { op: o } | Ev::GetReply { op: o, ok: true } => {
-                    if let Some(e) = self.pending.get_mut(&o) {
-                        e.0 = e.0.saturating_sub(1);
-                    }
-                }
-                Ev::GetReply { op: o, ok: false } => {
-                    if o == op {
-                        failed = true;
-                    }
-                    if let Some(e) = self.pending.get_mut(&o) {
-                        e.0 = e.0.saturating_sub(1);
-                    }
-                }
+                Ev::PutAck { op } => self.op_progress(op, true),
+                Ev::GetReply { op, ok } => self.op_progress(op, ok),
                 Ev::ReplicaInstalled { key, peer } => {
-                    let size = 0usize;
-                    self.peers[peer].records.insert(key, size);
+                    self.peers[peer].records.insert(key, 0);
                 }
             }
         }
-        let (outstanding, start) = self.pending.remove(&op)?;
-        if outstanding > 0 || failed {
-            return None;
+        self.now_ms = self.now_ms.max(t_ms);
+    }
+
+    /// Absorb resolved ops the [`VaultApi`] registry owns into its
+    /// completion queue; leave the rest for `run_until_op` callers.
+    fn absorb_finished(&mut self) {
+        let mut keep = Vec::new();
+        for f in std::mem::take(&mut self.finished) {
+            let is_api_op = self.api_ops.remove(&f.op);
+            let Some(p) = self.api.take_pending(&f.op) else {
+                // API-issued ops whose registry entry was cancelled or
+                // expired are dropped; raw ops wait for `run_until_op`.
+                if !is_api_op {
+                    keep.push(f);
+                }
+                continue;
+            };
+            let outcome = if f.ok {
+                match p.kind {
+                    OpKind::Store => {
+                        OpOutcome::Stored(p.stored_ref.expect("store ref known at submit"))
+                    }
+                    OpKind::Get => OpOutcome::Fetched(Vec::new()),
+                }
+            } else {
+                OpOutcome::Failed("record unavailable".into())
+            };
+            let bytes = if f.ok { p.bytes } else { 0 };
+            self.api.push(OpCompletion {
+                handle: p.handle,
+                kind: p.kind,
+                outcome,
+                submitted_ms: f.start_ms,
+                finished_ms: f.end_ms,
+                bytes,
+            });
         }
-        Some(self.now_ms - start)
+        self.finished = keep;
+    }
+
+    /// Run until `op` completes; returns its latency (virtual ms), or
+    /// `None` if any record fetch failed.
+    pub fn run_until_op(&mut self, op: u64) -> Option<u64> {
+        loop {
+            if let Some(i) = self.finished.iter().position(|f| f.op == op) {
+                let f = self.finished.remove(i);
+                return if f.ok { Some(f.end_ms - f.start_ms) } else { None };
+            }
+            if !self.pending.contains_key(&op) {
+                return None; // unknown op
+            }
+            let Some(&Reverse((t, _, _))) = self.events.peek() else {
+                // Out of events with acks still outstanding: stuck.
+                self.pending.remove(&op);
+                return None;
+            };
+            self.process_until(t);
+        }
+    }
+}
+
+impl VaultApi for IpfsNet {
+    type ObjectRef = ObjectHandle;
+
+    fn submit_store_with(
+        &mut self,
+        client: usize,
+        object: &[u8],
+        _secret: &[u8],
+        _expires_ms: u64,
+        deadline_ms: Option<u64>,
+    ) -> OpHandle {
+        let region = self.peers[client % self.peers.len().max(1)].region;
+        self.api_tag += 1;
+        // High-bit tag namespace so api-generated objects never collide
+        // with caller-chosen tags.
+        let tag = 0xA110_0000_0000_0000 | self.api_tag;
+        let (handle, op) = self.store(region, object.len(), tag);
+        self.api_ops.insert(op);
+        let now = self.now_ms;
+        let deadline = now + deadline_ms.unwrap_or_else(|| self.default_op_deadline_ms());
+        self.api.register(op, OpKind::Store, now, deadline, object.len() as u64, Some(handle))
+    }
+
+    fn submit_get_with(
+        &mut self,
+        client: usize,
+        object: &ObjectHandle,
+        deadline_ms: Option<u64>,
+    ) -> OpHandle {
+        let region = self.peers[client % self.peers.len().max(1)].region;
+        let op = self.query(region, object);
+        self.api_ops.insert(op);
+        let now = self.now_ms;
+        let deadline = now + deadline_ms.unwrap_or_else(|| self.default_op_deadline_ms());
+        let bytes = (object.record_size * object.keys.len()) as u64;
+        self.api.register(op, OpKind::Get, now, deadline, bytes, None)
+    }
+
+    fn drive(&mut self, until_ms: u64) {
+        // Same slice cadence as the cluster backends, so deadline
+        // expiry lands at identical boundaries and VAULT-vs-baseline
+        // comparisons share deadline semantics.
+        while self.now_ms < until_ms {
+            let step = (self.now_ms + DRIVE_SLICE_MS).min(until_ms);
+            self.process_until(step);
+            self.absorb_finished();
+            self.api.expire(self.now_ms);
+        }
+    }
+
+    fn poll_completions(&mut self) -> Vec<OpCompletion<ObjectHandle>> {
+        self.api.drain()
+    }
+
+    fn take_completion(&mut self, handle: OpHandle) -> Option<OpCompletion<ObjectHandle>> {
+        self.api.take(handle)
+    }
+
+    fn pending_contains(&self, handle: OpHandle) -> bool {
+        self.api.contains(handle)
+    }
+
+    fn cancel_op(&mut self, handle: OpHandle) -> bool {
+        let now = self.now_ms;
+        self.api.cancel(handle, now)
+    }
+
+    fn api_now_ms(&self) -> u64 {
+        self.now_ms
+    }
+
+    fn in_flight(&self) -> usize {
+        self.api.in_flight()
+    }
+
+    fn default_op_deadline_ms(&self) -> u64 {
+        180_000
+    }
+
+    fn client_count(&self) -> usize {
+        self.peers.len()
+    }
+
+    fn client_usable(&self, client: usize) -> bool {
+        self.peers.get(client).map(|p| p.up).unwrap_or(false)
     }
 }
 
@@ -359,6 +549,37 @@ mod tests {
         let rop = net.repair_record(&key, handle.record_size);
         let lat = net.run_until_op(rop).expect("repair completes");
         assert!(lat > 0);
+    }
+
+    #[test]
+    fn vault_api_surface_matches_blocking_path() {
+        let mut net = IpfsNet::new(IpfsConfig { n_peers: 100, ..Default::default() });
+        // Concurrent submission: two stores and then reads of both, all
+        // in flight together through the uniform VaultApi surface.
+        let h1 = net.submit_store(0, &[7u8; 100_000], b"s", 0);
+        let h2 = net.submit_store(17, &[9u8; 50_000], b"s", 0);
+        assert_eq!(net.in_flight(), 2);
+        let done1 = net.drive_until_complete(h1);
+        let done2 = net.drive_until_complete(h2);
+        let (r1, r2) = match (done1.outcome, done2.outcome) {
+            (OpOutcome::Stored(a), OpOutcome::Stored(b)) => (a, b),
+            other => panic!("stores must complete: {other:?}"),
+        };
+        assert!(done1.bytes == 100_000 && done2.bytes == 50_000);
+        let g1 = net.submit_get(3, &r1);
+        let g2 = net.submit_get(4, &r2);
+        let mut got = 0;
+        let deadline = net.api_now_ms() + 60_000;
+        while net.in_flight() > 0 && net.api_now_ms() < deadline {
+            net.drive_for(500);
+        }
+        for c in net.poll_completions() {
+            assert!(c.handle == g1 || c.handle == g2);
+            assert!(c.is_ok(), "get failed: {:?}", c.outcome);
+            assert!(c.bytes > 0, "modeled transfer size must be recorded");
+            got += 1;
+        }
+        assert_eq!(got, 2);
     }
 
     #[test]

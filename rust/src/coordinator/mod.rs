@@ -10,6 +10,7 @@
 
 pub mod workload;
 
+use crate::api::{ApiState, OpCompletion, OpHandle, OpKind, OpOutcome, VaultApi, DRIVE_SLICE_MS};
 use crate::codec::ObjectId;
 use crate::crypto::Hash256;
 use crate::dht::NodeId;
@@ -24,6 +25,9 @@ use crate::util::rng::Rng;
 /// injection; see [`crate::net::simnet`] / [`crate::net::shardnet`].
 pub trait ClusterRuntime {
     fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
     fn now_ms(&self) -> u64;
     fn is_up(&self, i: usize) -> bool;
     /// Blackholed by a targeted attack (state intact), as opposed to killed.
@@ -39,8 +43,6 @@ pub trait ClusterRuntime {
     fn query(&mut self, client: usize, id: &ObjectId) -> u64;
     fn run_until(&mut self, t_ms: u64) -> Vec<(NodeId, AppEvent)>;
     fn run_for(&mut self, d_ms: u64) -> Vec<(NodeId, AppEvent)>;
-    fn run_until_op_from(&mut self, client: NodeId, op: u64, deadline_ms: u64)
-        -> Option<AppEvent>;
     fn surviving_fragments(&self, chash: &Hash256) -> usize;
     fn total_repair_traffic(&self) -> u64;
 }
@@ -98,14 +100,6 @@ macro_rules! forward_cluster_runtime {
             }
             fn run_for(&mut self, d_ms: u64) -> Vec<(NodeId, AppEvent)> {
                 <$ty>::run_for(self, d_ms)
-            }
-            fn run_until_op_from(
-                &mut self,
-                client: NodeId,
-                op: u64,
-                deadline_ms: u64,
-            ) -> Option<AppEvent> {
-                <$ty>::run_until_op_from(self, client, op, deadline_ms)
             }
             fn surviving_fragments(&self, chash: &Hash256) -> usize {
                 <$ty>::surviving_fragments(self, chash)
@@ -172,6 +166,9 @@ pub struct Cluster<N: ClusterRuntime = SimNet> {
     pub net: N,
     rng: Rng,
     cfg: ClusterConfig,
+    /// Op registry + completion queue for the [`VaultApi`] surface,
+    /// keyed by `(issuing node, per-peer op id)`.
+    api: ApiState<ObjectId, (NodeId, u64)>,
 }
 
 /// A cluster over the sharded runtime.
@@ -213,7 +210,7 @@ impl<N: ClusterRuntime> Cluster<N> {
                 net.peer_mut(i).cfg.byzantine = true;
             }
         }
-        Cluster { net, rng, cfg }
+        Cluster { net, rng, cfg, api: ApiState::default() }
     }
 
     pub fn config(&self) -> &ClusterConfig {
@@ -230,7 +227,8 @@ impl<N: ClusterRuntime> Cluster<N> {
         }
     }
 
-    /// STORE and advance virtual time until completion.
+    /// STORE and advance virtual time until completion — a thin wrapper
+    /// over the [`VaultApi`] surface (submit + drive + take).
     pub fn store_blocking(
         &mut self,
         client: usize,
@@ -238,34 +236,63 @@ impl<N: ClusterRuntime> Cluster<N> {
         secret: &[u8],
         expires_ms: u64,
     ) -> Result<OpResult<ObjectId>, String> {
-        let op = self.net.store(client, object, secret, expires_ms);
-        let node = self.net.peer(client).info.id;
-        let deadline = self.net.now_ms() + self.net.peer(client).cfg.op_deadline_ms + 10_000;
-        match self.net.run_until_op_from(node, op, deadline) {
-            Some(AppEvent::StoreDone { id, latency_ms, .. }) => {
-                Ok(OpResult { value: id, latency_ms })
-            }
-            Some(AppEvent::OpFailed { reason, .. }) => Err(reason),
-            other => Err(format!("store did not complete: {other:?}")),
+        let handle = self.submit_store(client, object, secret, expires_ms);
+        let done = self.drive_until_complete(handle);
+        match done.outcome {
+            OpOutcome::Stored(id) => Ok(OpResult { value: id, latency_ms: done.latency_ms() }),
+            OpOutcome::Failed(reason) => Err(reason),
+            OpOutcome::Fetched(_) => Err("store completed with a fetch outcome".into()),
         }
     }
 
-    /// QUERY and advance virtual time until completion.
+    /// QUERY and advance virtual time until completion — a thin wrapper
+    /// over the [`VaultApi`] surface (submit + drive + take).
     pub fn query_blocking(
         &mut self,
         client: usize,
         id: &ObjectId,
     ) -> Result<OpResult<Vec<u8>>, String> {
-        let op = self.net.query(client, id);
-        let node = self.net.peer(client).info.id;
-        let deadline = self.net.now_ms() + self.net.peer(client).cfg.op_deadline_ms + 10_000;
-        match self.net.run_until_op_from(node, op, deadline) {
-            Some(AppEvent::QueryDone { data, latency_ms, .. }) => {
-                Ok(OpResult { value: data, latency_ms })
-            }
-            Some(AppEvent::OpFailed { reason, .. }) => Err(reason),
-            other => Err(format!("query did not complete: {other:?}")),
+        let handle = self.submit_get(client, id);
+        let done = self.drive_until_complete(handle);
+        match done.outcome {
+            OpOutcome::Fetched(data) => Ok(OpResult { value: data, latency_ms: done.latency_ms() }),
+            OpOutcome::Failed(reason) => Err(reason),
+            OpOutcome::Stored(_) => Err("query completed with a store outcome".into()),
         }
+    }
+
+    /// Correlate a runtime [`AppEvent`] with the op registry and queue
+    /// the completion record. Non-client events (repair notifications)
+    /// and events for expired ops are dropped.
+    fn absorb_event(&mut self, node: NodeId, ev: AppEvent) {
+        let op = match &ev {
+            AppEvent::StoreDone { op, .. }
+            | AppEvent::QueryDone { op, .. }
+            | AppEvent::OpFailed { op, .. } => *op,
+            _ => return,
+        };
+        let Some(p) = self.api.take_pending(&(node, op)) else { return };
+        let (outcome, finished_ms, bytes) = match ev {
+            AppEvent::StoreDone { id, latency_ms, .. } => {
+                (OpOutcome::Stored(id), p.submitted_ms + latency_ms, p.bytes)
+            }
+            AppEvent::QueryDone { data, latency_ms, .. } => {
+                let n = data.len() as u64;
+                (OpOutcome::Fetched(data), p.submitted_ms + latency_ms, n)
+            }
+            AppEvent::OpFailed { reason, .. } => {
+                (OpOutcome::Failed(reason), self.net.now_ms(), 0)
+            }
+            _ => unreachable!(),
+        };
+        self.api.push(OpCompletion {
+            handle: p.handle,
+            kind: p.kind,
+            outcome,
+            submitted_ms: p.submitted_ms,
+            finished_ms,
+            bytes,
+        });
     }
 
     /// Kill `n` random live peers and join `n` fresh ones — one churn
@@ -314,6 +341,89 @@ impl<N: ClusterRuntime> Cluster<N> {
     }
 }
 
+impl<N: ClusterRuntime> VaultApi for Cluster<N> {
+    type ObjectRef = ObjectId;
+
+    fn submit_store_with(
+        &mut self,
+        client: usize,
+        object: &[u8],
+        secret: &[u8],
+        expires_ms: u64,
+        deadline_ms: Option<u64>,
+    ) -> OpHandle {
+        let op = self.net.store(client, object, secret, expires_ms);
+        let node = self.net.peer(client).info.id;
+        let now = self.net.now_ms();
+        let deadline = now + deadline_ms.unwrap_or_else(|| self.default_op_deadline_ms());
+        self.api.register((node, op), OpKind::Store, now, deadline, object.len() as u64, None)
+    }
+
+    fn submit_get_with(
+        &mut self,
+        client: usize,
+        object: &ObjectId,
+        deadline_ms: Option<u64>,
+    ) -> OpHandle {
+        let op = self.net.query(client, object);
+        let node = self.net.peer(client).info.id;
+        let now = self.net.now_ms();
+        let deadline = now + deadline_ms.unwrap_or_else(|| self.default_op_deadline_ms());
+        self.api.register((node, op), OpKind::Get, now, deadline, 0, None)
+    }
+
+    fn drive(&mut self, until_ms: u64) {
+        // Slice so deadline expiry lands at bounded, deterministic
+        // boundaries regardless of how far a single call advances.
+        while self.net.now_ms() < until_ms {
+            let step = (self.net.now_ms() + DRIVE_SLICE_MS).min(until_ms);
+            for (node, ev) in self.net.run_until(step) {
+                self.absorb_event(node, ev);
+            }
+            self.api.expire(self.net.now_ms());
+        }
+    }
+
+    fn poll_completions(&mut self) -> Vec<OpCompletion<ObjectId>> {
+        self.api.drain()
+    }
+
+    fn take_completion(&mut self, handle: OpHandle) -> Option<OpCompletion<ObjectId>> {
+        self.api.take(handle)
+    }
+
+    fn pending_contains(&self, handle: OpHandle) -> bool {
+        self.api.contains(handle)
+    }
+
+    fn cancel_op(&mut self, handle: OpHandle) -> bool {
+        let now = self.net.now_ms();
+        self.api.cancel(handle, now)
+    }
+
+    fn api_now_ms(&self) -> u64 {
+        self.net.now_ms()
+    }
+
+    fn in_flight(&self) -> usize {
+        self.api.in_flight()
+    }
+
+    fn default_op_deadline_ms(&self) -> u64 {
+        // The protocol's own give-up point plus slack, matching the
+        // pre-redesign blocking deadline.
+        self.cfg.vault.op_deadline_ms + 10_000
+    }
+
+    fn client_count(&self) -> usize {
+        self.net.len()
+    }
+
+    fn client_usable(&self, client: usize) -> bool {
+        self.net.is_up(client) && !self.net.peer(client).cfg.byzantine
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -341,6 +451,53 @@ mod tests {
                 "group for {chash:?} has {survivors} members"
             );
         }
+    }
+
+    #[test]
+    fn concurrent_ops_through_vault_api() {
+        let mut cluster = Cluster::start(ClusterConfig::small_test(48));
+        // Seed one object, then keep 8 ops in flight at once: 4 reads of
+        // the seeded object interleaved with 4 independent stores.
+        let obj: Vec<u8> = (0..12_000u32).map(|i| (i * 3) as u8).collect();
+        let seeded = cluster.store_blocking(0, &obj, b"seed", 0).expect("seed store").value;
+        let mut handles = Vec::new();
+        for i in 0..4usize {
+            handles.push(cluster.submit_get(2 * i + 1, &seeded));
+            let data = vec![i as u8; 9_000];
+            handles.push(cluster.submit_store(2 * i + 2, &data, b"s", 0));
+        }
+        assert_eq!(cluster.in_flight(), 8);
+        let deadline = cluster.api_now_ms() + 120_000;
+        while cluster.in_flight() > 0 && cluster.api_now_ms() < deadline {
+            cluster.drive_for(1_000);
+        }
+        let done = cluster.poll_completions();
+        assert_eq!(done.len(), 8, "every submitted op must surface exactly once");
+        for c in &done {
+            assert!(c.is_ok(), "op {:?} failed: {:?}", c.handle, c.outcome);
+            assert!(c.finished_ms > c.submitted_ms);
+            assert!(c.bytes > 0);
+            if let OpOutcome::Fetched(data) = &c.outcome {
+                assert_eq!(data, &obj);
+            }
+        }
+        let mut seen: Vec<OpHandle> = done.iter().map(|c| c.handle).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 8);
+    }
+
+    #[test]
+    fn per_op_deadline_fails_op_without_blocking_others() {
+        let mut cluster = Cluster::start(ClusterConfig::small_test(48));
+        let obj = vec![5u8; 8_000];
+        let ok_handle = cluster.submit_store(1, &obj, b"s", 0);
+        // A 1 ms deadline cannot be met; the op must fail via expiry.
+        let doomed = cluster.submit_store_with(2, &obj, b"s", 0, Some(1));
+        let failed = cluster.drive_until_complete(doomed);
+        assert!(!failed.is_ok(), "1 ms deadline must expire");
+        let done = cluster.drive_until_complete(ok_handle);
+        assert!(done.is_ok(), "unrelated op must still complete: {:?}", done.outcome);
     }
 
     #[test]

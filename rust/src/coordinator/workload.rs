@@ -1,6 +1,19 @@
-//! Workload generation for benches and the end-to-end examples.
+//! Workload generation: deterministic corpora and the open-loop
+//! concurrent traffic generator driven through [`VaultApi`].
+//!
+//! [`run_open_loop`] is the redesigned client load model: arrivals are
+//! drawn from an exponential schedule on the generator's own RNG stream
+//! (so fingerprints stay reproducible), admission keeps up to
+//! `target_in_flight` operations outstanding, and completions are
+//! drained asynchronously — nothing ever blocks on a single op the way
+//! the old serial `store_blocking` loops did. The same generator runs
+//! against every [`VaultApi`] backend: `Cluster<SimNet>`,
+//! `ShardedCluster`, and the `baseline::ipfs_like` comparison system.
 
-use crate::util::rng::Rng;
+use crate::api::{OpHandle, OpOutcome, VaultApi};
+use crate::util::detmap::DetHashSet;
+use crate::util::rng::{fold64, Rng};
+use crate::util::stats::Samples;
 
 /// Deterministic object corpus: reproducible pseudo-random payloads.
 pub struct Corpus {
@@ -46,9 +59,210 @@ impl Corpus {
     }
 }
 
+/// Parameters of one open-loop traffic run.
+#[derive(Clone, Debug)]
+pub struct OpenLoopSpec {
+    /// Seeds the generator's private RNG stream (arrivals, op mix,
+    /// client choice, store payloads).
+    pub seed: u64,
+    /// Operations to submit in total.
+    pub total_ops: usize,
+    /// Admission cap: arrivals beyond this many outstanding ops queue
+    /// until a slot frees, keeping N ops in flight under saturation.
+    pub target_in_flight: usize,
+    /// Fraction of submissions that are stores (the rest are gets
+    /// against previously stored objects); a 70/30 get/store mix is
+    /// `store_frac: 0.3`.
+    pub store_frac: f64,
+    /// Mean of the exponential interarrival distribution (virtual ms).
+    pub mean_interarrival_ms: f64,
+    /// Payload size of generated store objects.
+    pub object_size: usize,
+    /// Per-op deadline forwarded to the API (`None` = backend default).
+    pub deadline_ms: Option<u64>,
+    /// Hard stop: give up on stragglers this far past the start.
+    pub max_virtual_ms: u64,
+}
+
+impl Default for OpenLoopSpec {
+    fn default() -> Self {
+        OpenLoopSpec {
+            seed: 7,
+            total_ops: 100,
+            target_in_flight: 32,
+            store_frac: 0.3,
+            mean_interarrival_ms: 100.0,
+            object_size: 16 * 1024,
+            deadline_ms: None,
+            max_virtual_ms: 600_000,
+        }
+    }
+}
+
+/// Aggregate outcome of an open-loop run.
+#[derive(Clone, Debug, Default)]
+pub struct OpenLoopReport {
+    pub submitted: usize,
+    pub stores_submitted: usize,
+    pub gets_submitted: usize,
+    pub ok: usize,
+    pub failed: usize,
+    pub bytes_stored: u64,
+    pub bytes_fetched: u64,
+    pub store_latency: Samples,
+    pub get_latency: Samples,
+    /// Virtual time the run occupied.
+    pub elapsed_virtual_ms: u64,
+    /// Folds every submission and completion outcome plus the latency
+    /// percentiles; two runs from the same seed must agree.
+    pub fingerprint: u64,
+}
+
+impl OpenLoopReport {
+    /// Completed operations per virtual second.
+    pub fn ops_per_vsec(&self) -> f64 {
+        if self.elapsed_virtual_ms == 0 {
+            return 0.0;
+        }
+        (self.ok + self.failed) as f64 * 1e3 / self.elapsed_virtual_ms as f64
+    }
+
+    /// p50/p99 over all completed-op latencies (stores and gets pooled).
+    pub fn latency_percentiles(&self) -> (f64, f64) {
+        let mut all = self.store_latency.clone();
+        all.extend(&self.get_latency);
+        (all.percentile(50.0), all.percentile(99.0))
+    }
+
+    pub fn summary(&self) -> String {
+        let (p50, p99) = self.latency_percentiles();
+        format!(
+            "submitted={} ok={} failed={} ops/vs={:.2} p50={p50:.0}ms p99={p99:.0}ms",
+            self.submitted,
+            self.ok,
+            self.failed,
+            self.ops_per_vsec(),
+        )
+    }
+}
+
+/// Pick a usable client uniformly; falls back to 0 if the sweep finds
+/// none (a fully dead cluster fails ops anyway).
+fn pick_client<A: VaultApi>(api: &A, rng: &mut Rng) -> usize {
+    let n = api.client_count().max(1);
+    for _ in 0..n * 4 {
+        let i = rng.range(0, n);
+        if api.client_usable(i) {
+            return i;
+        }
+    }
+    0
+}
+
+/// Run an open-loop mixed workload against any [`VaultApi`] backend.
+///
+/// `refs` seeds the get-side targets and grows with every successful
+/// store, so a long run reads back its own writes. The generator owns
+/// all randomness (one `Rng` stream from `spec.seed`) and consumes every
+/// completion the backend surfaces while it runs.
+pub fn run_open_loop<A: VaultApi>(
+    api: &mut A,
+    spec: &OpenLoopSpec,
+    refs: &mut Vec<A::ObjectRef>,
+) -> OpenLoopReport {
+    let mut rng = Rng::new(spec.seed ^ 0x09E7_100D);
+    let mut report = OpenLoopReport::default();
+    let mut fp = spec.seed;
+    let start = api.api_now_ms();
+    let stop = start + spec.max_virtual_ms;
+    let mean = spec.mean_interarrival_ms.max(0.001);
+    let mut next_arrival = start + rng.exp(1.0 / mean) as u64;
+    let mut payload = vec![0u8; spec.object_size.max(1)];
+    let mut ours: DetHashSet<u64> = DetHashSet::default();
+
+    while report.submitted < spec.total_ops || !ours.is_empty() {
+        let now = api.api_now_ms();
+        if now >= stop {
+            break;
+        }
+        // Admit every due arrival while the in-flight cap allows.
+        while report.submitted < spec.total_ops
+            && next_arrival <= now
+            && ours.len() < spec.target_in_flight.max(1)
+        {
+            let client = pick_client(api, &mut rng);
+            let do_store = refs.is_empty() || rng.chance(spec.store_frac);
+            let handle = if do_store {
+                rng.fill_bytes(&mut payload);
+                let secret = format!("open-loop-{}-{}", spec.seed, report.submitted);
+                report.stores_submitted += 1;
+                api.submit_store_with(client, &payload, secret.as_bytes(), 0, spec.deadline_ms)
+            } else {
+                let target = refs[rng.range(0, refs.len())].clone();
+                report.gets_submitted += 1;
+                api.submit_get_with(client, &target, spec.deadline_ms)
+            };
+            ours.insert(handle.0);
+            report.submitted += 1;
+            fp = fold64(fp, handle.0);
+            next_arrival += rng.exp(1.0 / mean) as u64 + 1;
+        }
+        // Advance to the next arrival when waiting on the schedule,
+        // otherwise one bounded slice while completions drain.
+        let target_t = if report.submitted < spec.total_ops
+            && ours.len() < spec.target_in_flight.max(1)
+        {
+            next_arrival.max(now + 1)
+        } else {
+            now + 200
+        };
+        api.drive(target_t.min(stop));
+        for done in api.poll_completions() {
+            if !ours.remove(&done.handle.0) {
+                continue; // foreign traffic; not ours to account
+            }
+            let latency = done.latency_ms() as f64;
+            match done.outcome {
+                OpOutcome::Stored(r) => {
+                    report.ok += 1;
+                    report.bytes_stored += done.bytes;
+                    report.store_latency.push(latency);
+                    fp = fold64(fp, done.finished_ms);
+                    refs.push(r);
+                }
+                OpOutcome::Fetched(_) => {
+                    report.ok += 1;
+                    report.bytes_fetched += done.bytes;
+                    report.get_latency.push(latency);
+                    fp = fold64(fp, done.finished_ms ^ 0xF37C);
+                }
+                OpOutcome::Failed(_) => {
+                    report.failed += 1;
+                    fp = fold64(fp, done.finished_ms ^ 0xFA11);
+                }
+            }
+        }
+    }
+    // Stragglers past the hard stop are cancelled (so the backend's
+    // registry is clean and `in_flight()` drops to our baseline) and
+    // count as failures.
+    let stragglers = api.cancel_all(ours.iter().map(|&h| OpHandle(h)).collect());
+    report.failed += stragglers;
+    fp = fold64(fp, stragglers as u64);
+    report.elapsed_virtual_ms = api.api_now_ms().saturating_sub(start);
+    let (p50, p99) = report.latency_percentiles();
+    fp = fold64(fp, p50 as u64);
+    fp = fold64(fp, p99 as u64);
+    fp = fold64(fp, report.ok as u64);
+    fp = fold64(fp, report.failed as u64);
+    report.fingerprint = fp;
+    report
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::{Cluster, ClusterConfig};
 
     #[test]
     fn corpus_is_deterministic() {
@@ -65,5 +279,36 @@ mod tests {
         for (data, _) in &c.objects {
             assert!((1..=10_000).contains(&data.len()));
         }
+    }
+
+    fn small_run(seed: u64) -> OpenLoopReport {
+        let mut cfg = ClusterConfig::small_test(48);
+        cfg.seed = seed;
+        let mut cluster = Cluster::start(cfg);
+        let mut refs = Vec::new();
+        let spec = OpenLoopSpec {
+            seed,
+            total_ops: 12,
+            target_in_flight: 6,
+            store_frac: 0.5,
+            mean_interarrival_ms: 40.0,
+            object_size: 6_000,
+            ..Default::default()
+        };
+        run_open_loop(&mut cluster, &spec, &mut refs)
+    }
+
+    #[test]
+    fn open_loop_completes_and_is_deterministic() {
+        let a = small_run(11);
+        assert_eq!(a.submitted, 12);
+        assert_eq!(a.ok + a.failed, 12, "every op must resolve");
+        assert_eq!(a.ok, 12, "healthy cluster must complete all ops: {}", a.summary());
+        assert!(a.elapsed_virtual_ms > 0);
+        assert!(a.store_latency.len() + a.get_latency.len() == 12);
+        let b = small_run(11);
+        assert_eq!(a.fingerprint, b.fingerprint, "same seed must fingerprint-match");
+        let c = small_run(12);
+        assert_ne!(a.fingerprint, c.fingerprint, "different seed must diverge");
     }
 }

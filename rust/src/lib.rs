@@ -32,8 +32,15 @@
 //! let data = cluster.query_blocking(1, &id).unwrap().value;
 //! assert_eq!(data, b"hello vault");
 //! ```
+//!
+//! The blocking calls are wrappers over the asynchronous op-handle API
+//! ([`api::VaultApi`]): `submit_store`/`submit_get` return handles
+//! immediately, `drive` advances virtual time, and `poll_completions`
+//! drains outcome records — the surface every concurrent workload and
+//! experiment uses.
 
 pub mod analysis;
+pub mod api;
 pub mod baseline;
 pub mod codec;
 pub mod coordinator;

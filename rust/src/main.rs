@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //! * `cluster`      — run a virtual-time cluster, store + query objects.
+//! * `bench-ops`    — open-loop mixed 70/30 get/store throughput bench
+//!                    over the `VaultApi` surface; emits `BENCH_ops.json`.
 //! * `tcp-demo`     — bring up a real-TCP localhost cluster and do one
 //!                    store/query round trip.
 //! * `sim`          — §6.1 durability simulations (fig4|fig5|fig6).
@@ -10,7 +12,8 @@
 //!                    against the native codec.
 
 use vault::analysis::{bounds, ctmc};
-use vault::coordinator::{workload::Corpus, Cluster, ClusterConfig};
+use vault::coordinator::workload::{run_open_loop, Corpus, OpenLoopReport, OpenLoopSpec};
+use vault::coordinator::{Cluster, ClusterConfig, ClusterRuntime};
 use vault::crypto::Hash256;
 use vault::runtime::Runtime;
 use vault::sim::{attack, durability, replica};
@@ -23,15 +26,18 @@ fn main() {
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "cluster" => cmd_cluster(&args),
+        "bench-ops" => cmd_bench_ops(&args),
         "tcp-demo" => cmd_tcp_demo(&args),
         "sim" => cmd_sim(&args),
         "analyze" => cmd_analyze(&args),
         "artifacts" => cmd_artifacts(&args),
         _ => {
             eprintln!(
-                "usage: vault <cluster|tcp-demo|sim|analyze|artifacts> [--flags]\n\
+                "usage: vault <cluster|bench-ops|tcp-demo|sim|analyze|artifacts> [--flags]\n\
                  \n\
                  cluster   --peers 128 --objects 4 --size 262144 [--byzantine 0.1] [--churn 4]\n\
+                 bench-ops --peers 64 --ops 300 --inflight 32 --size 32768 [--sharded 0]\n\
+                 \x20          [--seed 7] [--out BENCH_ops.json]\n\
                  tcp-demo  --peers 8 --size 65536\n\
                  sim       --fig 4|5|6 [--nodes 100000] [--objects 1000] [--churn 2.0] [--years 1]\n\
                  analyze   [--n 80] [--k 32] [--churn-q 0.01] [--evict 0] [--steps 512]\n\
@@ -39,6 +45,102 @@ fn main() {
             );
         }
     }
+}
+
+/// Seed the corpus through blocking stores, then run the open-loop
+/// workload — shared by the serial and sharded bench paths.
+fn seed_and_run<N: ClusterRuntime>(
+    mut cluster: Cluster<N>,
+    seed_corpus: &Corpus,
+    spec: &OpenLoopSpec,
+) -> (OpenLoopReport, u64) {
+    let mut refs = Vec::new();
+    for (data, secret) in &seed_corpus.objects {
+        let client = cluster.random_client();
+        refs.push(cluster.store_blocking(client, data, secret, 0).expect("seed store").value);
+    }
+    let report = run_open_loop(&mut cluster, spec, &mut refs);
+    let now = cluster.net.now_ms();
+    (report, now)
+}
+
+/// Open-loop mixed 70/30 get/store throughput benchmark through the
+/// `VaultApi` submission/completion surface. Emits a JSON record so the
+/// perf trajectory is machine-diffable across PRs.
+fn cmd_bench_ops(args: &Args) {
+    let peers = args.get("peers", 64usize);
+    let ops = args.get("ops", 300usize);
+    let inflight = args.get("inflight", 32usize);
+    let size = args.get("size", 32 * 1024usize);
+    let seed = args.get("seed", 7u64);
+    let shards = args.get("sharded", 0usize);
+    let out = args.str("out", "BENCH_ops.json");
+
+    let mut cfg = ClusterConfig::small_test(peers);
+    cfg.seed = seed;
+    println!(
+        "bench-ops: {peers} peers{} | {ops} ops, {inflight} in flight, {size} B objects",
+        if shards > 0 { format!(" / {shards} shards") } else { String::new() }
+    );
+    let spec = OpenLoopSpec {
+        seed,
+        total_ops: ops,
+        target_in_flight: inflight,
+        store_frac: 0.3, // 70/30 get/store
+        mean_interarrival_ms: 50.0,
+        object_size: size,
+        deadline_ms: None,
+        max_virtual_ms: 3_600_000,
+    };
+    let wall = Timer::start();
+    // Seed a few objects so the get side has targets from the start.
+    let seed_corpus = Corpus::generate(seed ^ 0xBE9C, 4, size);
+    let (report, virtual_ms) = if shards > 0 {
+        seed_and_run(Cluster::start_sharded(cfg, shards), &seed_corpus, &spec)
+    } else {
+        seed_and_run(Cluster::start(cfg), &seed_corpus, &spec)
+    };
+    let wall_s = wall.elapsed_s();
+    let completed = report.ok + report.failed;
+    let (p50, p99) = report.latency_percentiles();
+    let (store_p50, store_p99) =
+        (report.store_latency.percentile(50.0), report.store_latency.percentile(99.0));
+    let (get_p50, get_p99) =
+        (report.get_latency.percentile(50.0), report.get_latency.percentile(99.0));
+    let json = format!(
+        "{{\n  \"bench\": \"open_loop_mixed_70_30\",\n  \"peers\": {peers},\n  \
+         \"shards\": {shards},\n  \"seed\": {seed},\n  \"object_bytes\": {size},\n  \
+         \"ops_submitted\": {},\n  \"ops_ok\": {},\n  \"ops_failed\": {},\n  \
+         \"target_in_flight\": {inflight},\n  \"elapsed_virtual_ms\": {},\n  \
+         \"ops_per_virtual_sec\": {:.3},\n  \"wall_secs\": {wall_s:.3},\n  \
+         \"ops_per_wall_sec\": {:.3},\n  \"latency_p50_ms\": {p50:.1},\n  \
+         \"latency_p99_ms\": {p99:.1},\n  \"store_p50_ms\": {store_p50:.1},\n  \
+         \"store_p99_ms\": {store_p99:.1},\n  \"get_p50_ms\": {get_p50:.1},\n  \
+         \"get_p99_ms\": {get_p99:.1},\n  \"bytes_stored\": {},\n  \
+         \"bytes_fetched\": {},\n  \"fingerprint\": {}\n}}\n",
+        report.submitted,
+        report.ok,
+        report.failed,
+        report.elapsed_virtual_ms,
+        report.ops_per_vsec(),
+        completed as f64 / wall_s.max(1e-9),
+        report.bytes_stored,
+        report.bytes_fetched,
+        report.fingerprint,
+    );
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("failed to write {out}: {e}"),
+    }
+    println!(
+        "completed {completed}/{} ops in {:.1} virtual s ({:.1} wall s): \
+         {:.1} ops/vs, p50 {p50:.0} ms, p99 {p99:.0} ms",
+        report.submitted,
+        report.elapsed_virtual_ms as f64 / 1e3,
+        wall_s,
+        report.ops_per_vsec(),
+    );
+    println!("virtual clock ended at {} s", virtual_ms / 1000);
 }
 
 fn cmd_cluster(args: &Args) {

@@ -435,34 +435,6 @@ impl SimNet {
         found
     }
 
-    /// Back-compat wrapper matching by op id only (single-client runs).
-    pub fn run_until_op(&mut self, op: u64, deadline_ms: u64) -> Option<AppEvent> {
-        let mut leftover = Vec::new();
-        let mut found = None;
-        while self.now_ms < deadline_ms {
-            let step = (self.now_ms + 200).min(deadline_ms);
-            for (id, ev) in self.run_until(step) {
-                let matches = matches!(
-                    &ev,
-                    AppEvent::StoreDone { op: o, .. } | AppEvent::QueryDone { op: o, .. } | AppEvent::OpFailed { op: o, .. } if *o == op
-                );
-                if matches && found.is_none() {
-                    found = Some(ev);
-                } else {
-                    leftover.push((id, ev));
-                }
-            }
-            if found.is_some() {
-                break;
-            }
-            if self.events.is_empty() {
-                break;
-            }
-        }
-        self.app_events = leftover;
-        found
-    }
-
     fn dispatch(&mut self, event: Event) {
         match event.kind {
             EventKind::Deliver { to, from, msg } => {

@@ -8,11 +8,11 @@
 
 use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::codec::rateless::Fragment;
 use crate::crypto::vrf::VrfProof;
 use crate::crypto::Hash256;
-use crate::util;
 use crate::wire::{Decode, Encode};
 
 /// Everything a node must persist per fragment to resume group duty.
@@ -28,13 +28,16 @@ crate::wire_struct!(StoredFragment { chash, frag, proof, expires_ms });
 
 pub struct DiskStore {
     root: PathBuf,
+    /// Disambiguates concurrent temp files (a wall-clock name collides
+    /// for two writes in the same millisecond).
+    tmp_seq: AtomicU64,
 }
 
 impl DiskStore {
     pub fn open(root: impl Into<PathBuf>) -> std::io::Result<DiskStore> {
         let root = root.into();
         std::fs::create_dir_all(&root)?;
-        Ok(DiskStore { root })
+        Ok(DiskStore { root, tmp_seq: AtomicU64::new(0) })
     }
 
     fn path_for(&self, chash: &Hash256) -> PathBuf {
@@ -42,9 +45,13 @@ impl DiskStore {
     }
 
     /// Atomic write: temp file in the same directory, fsync, rename.
+    /// The temp name is derived from the chunk hash plus a per-store
+    /// counter, so concurrent `put`s never clobber each other's
+    /// half-written files.
     pub fn put(&self, rec: &StoredFragment) -> std::io::Result<()> {
         let final_path = self.path_for(&rec.chash);
-        let tmp_path = self.root.join(format!(".tmp-{}", util::now_ms()));
+        let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
+        let tmp_path = self.root.join(format!(".tmp-{}-{seq}", rec.chash.to_hex()));
         {
             let mut f = std::fs::File::create(&tmp_path)?;
             f.write_all(&rec.to_bytes())?;
@@ -95,6 +102,7 @@ mod tests {
     use super::*;
     use crate::crypto::ed25519::SigningKey;
     use crate::crypto::vrf;
+    use crate::util;
 
     fn rec(tag: u8) -> StoredFragment {
         let sk = SigningKey::from_seed(&[tag; 32]);
@@ -144,6 +152,25 @@ mod tests {
         std::fs::write(dir.join("garbage.frag"), b"not a fragment").unwrap();
         let all = store.load_all().unwrap();
         assert_eq!(all.len(), 1);
+    }
+
+    #[test]
+    fn burst_of_puts_leaves_no_temp_files() {
+        // Same-millisecond writes used to collide on a wall-clock temp
+        // name; the hash+counter name must keep every record intact and
+        // leave nothing behind.
+        let dir = tmpdir("burst");
+        let store = DiskStore::open(&dir).unwrap();
+        for t in 1..=20 {
+            store.put(&rec(t)).unwrap();
+        }
+        assert_eq!(store.load_all().unwrap().len(), 20);
+        let leftovers = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().starts_with(".tmp-"))
+            .count();
+        assert_eq!(leftovers, 0, "temp files must all be renamed away");
     }
 
     #[test]

@@ -7,9 +7,11 @@
 //! ([`crate::net::shardnet::ShardNet`]). A scenario is a schedule of
 //! timed phases; each phase injects faults (regional partitions,
 //! correlated crash bursts, Byzantine clustering inside a chunk group,
-//! flash-crowd reads, stake-gated churn waves, slow-link degradation),
-//! advances virtual time, and then asserts durability / availability
-//! invariants.
+//! flash-crowd reads, open-loop concurrent client traffic, stake-gated
+//! churn waves, slow-link degradation), advances virtual time, and then
+//! asserts durability / availability invariants. Client load runs
+//! through the [`VaultApi`] submission/completion surface, so dozens of
+//! ops stay in flight while the faults land.
 //!
 //! ## Determinism
 //!
@@ -20,11 +22,15 @@
 //! outcomes, so `same seed ⇒ same fingerprint` is a testable contract
 //! (`tests/scenario_matrix.rs` runs every scenario twice).
 
+use crate::api::{OpHandle, OpOutcome, VaultApi};
 use crate::codec::ObjectId;
+use crate::coordinator::workload::{run_open_loop, OpenLoopSpec};
 use crate::coordinator::{Cluster, ClusterConfig, ClusterRuntime};
 use crate::crypto::Hash256;
-use crate::proto::{AppEvent, ClaimVerify};
-use crate::util::rng::{splitmix64, Rng};
+use crate::proto::ClaimVerify;
+use crate::util::detmap::DetHashSet;
+use crate::util::rng::{fold64 as fold, Rng};
+use crate::util::stats::Samples;
 
 /// One fault to inject at the start of a phase.
 #[derive(Clone, Debug)]
@@ -50,6 +56,12 @@ pub enum Fault {
     /// `readers` concurrent QUERY sessions against one object (CDN-miss
     /// stampede). Completion is counted in the phase report.
     FlashCrowd { object: usize, readers: usize },
+    /// Open-loop mixed client traffic through [`VaultApi`]: exponential
+    /// arrivals keep up to `in_flight` concurrent ops outstanding until
+    /// `ops` have been submitted (`store_frac` of them stores, the rest
+    /// reads of the seeded corpus). Per-op latency p50/p99 land in the
+    /// phase outcome and the fingerprint.
+    OpenLoop { ops: usize, in_flight: usize, store_frac: f64 },
     /// One stake-gated churn wave: `count` leaves + `count` fresh joins.
     StakeChurn { count: usize },
     /// Degrade links: silently drop this fraction of messages from now on.
@@ -136,6 +148,15 @@ pub struct PhaseOutcome {
     /// Flash-crowd session tallies (0/0 when no crowd ran).
     pub crowd_ok: usize,
     pub crowd_failed: usize,
+    /// Open-loop traffic tallies (0/0 when no traffic ran).
+    pub ops_ok: usize,
+    pub ops_failed: usize,
+    /// Latency of every completed open-loop op in the phase (pooled
+    /// across `Fault::OpenLoop` injections).
+    pub op_latency: Samples,
+    /// p50/p99 over `op_latency` (virtual ms; 0 when no traffic ran).
+    pub p50_ms: f64,
+    pub p99_ms: f64,
 }
 
 /// Full scenario result.
@@ -162,11 +183,6 @@ impl ScenarioReport {
             .flat_map(|p| p.failures.iter().map(move |f| format!("[{}] {f}", p.name)))
             .collect()
     }
-}
-
-fn fold(acc: u64, v: u64) -> u64 {
-    let mut s = acc ^ v.rotate_left(17);
-    splitmix64(&mut s)
 }
 
 fn fold_hash(acc: u64, h: &Hash256) -> u64 {
@@ -208,12 +224,15 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
     for phase in &spec.phases {
         let mut outcome = PhaseOutcome { name: phase.name, ..Default::default() };
         for fault in &phase.inject {
-            let (ok, fail) =
-                inject_fault(&mut cluster, &mut rng, &corpus, fault, &mut fp);
-            outcome.crowd_ok += ok;
-            outcome.crowd_failed += fail;
+            inject_fault(&mut cluster, &mut rng, &corpus, fault, &mut outcome, &mut fp);
         }
-        cluster.net.run_for(phase.advance_ms);
+        if !outcome.op_latency.is_empty() {
+            outcome.p50_ms = outcome.op_latency.percentile(50.0);
+            outcome.p99_ms = outcome.op_latency.percentile(99.0);
+        }
+        // Advance through the API so late completions of any traffic
+        // the injections left behind are absorbed, not dropped.
+        cluster.drive_for(phase.advance_ms);
         fp = fold(fp, cluster.net.now_ms());
 
         for check in &phase.checks {
@@ -229,6 +248,10 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
         }
         fp = fold(fp, outcome.crowd_ok as u64);
         fp = fold(fp, outcome.crowd_failed as u64);
+        fp = fold(fp, outcome.ops_ok as u64);
+        fp = fold(fp, outcome.ops_failed as u64);
+        fp = fold(fp, outcome.p50_ms.to_bits());
+        fp = fold(fp, outcome.p99_ms.to_bits());
         fp = fold(fp, outcome.failures.len() as u64);
         phases.push(outcome);
     }
@@ -269,8 +292,9 @@ fn inject_fault<N: ClusterRuntime>(
     rng: &mut Rng,
     corpus: &[(ObjectId, Vec<u8>)],
     fault: &Fault,
+    outcome: &mut PhaseOutcome,
     fp: &mut u64,
-) -> (usize, usize) {
+) {
     match fault {
         Fault::RegionPartition { region } => {
             for i in 0..cluster.net.len() {
@@ -324,7 +348,30 @@ fn inject_fault<N: ClusterRuntime>(
             }
         }
         Fault::FlashCrowd { object, readers } => {
-            return flash_crowd(cluster, corpus, *object, *readers, fp);
+            let (ok, failed) = flash_crowd(cluster, corpus, *object, *readers, fp);
+            outcome.crowd_ok += ok;
+            outcome.crowd_failed += failed;
+        }
+        Fault::OpenLoop { ops, in_flight, store_frac } => {
+            // Get targets are the seeded corpus; successful stores grow
+            // the target set for the rest of the run.
+            let mut refs: Vec<ObjectId> = corpus.iter().map(|(id, _)| id.clone()).collect();
+            let spec = OpenLoopSpec {
+                seed: rng.next_u64(),
+                total_ops: *ops,
+                target_in_flight: *in_flight,
+                store_frac: *store_frac,
+                mean_interarrival_ms: 50.0,
+                object_size: corpus.first().map(|(_, d)| d.len()).unwrap_or(8_000),
+                deadline_ms: Some(60_000),
+                max_virtual_ms: 180_000,
+            };
+            let report = run_open_loop(cluster, &spec, &mut refs);
+            outcome.ops_ok += report.ok;
+            outcome.ops_failed += report.failed;
+            outcome.op_latency.extend(&report.store_latency);
+            outcome.op_latency.extend(&report.get_latency);
+            *fp = fold(*fp, report.fingerprint);
         }
         Fault::StakeChurn { count } => {
             for i in cluster.churn(*count) {
@@ -336,11 +383,11 @@ fn inject_fault<N: ClusterRuntime>(
             *fp = fold(*fp, (*drop_prob * 1e6) as u64);
         }
     }
-    (0, 0)
 }
 
-/// Launch `readers` concurrent QUERY sessions for one object and pump
-/// virtual time until they all resolve (or the deadline passes).
+/// Launch `readers` concurrent QUERY sessions for one object through
+/// the [`VaultApi`] surface and drive until they all resolve (or the
+/// deadline passes).
 fn flash_crowd<N: ClusterRuntime>(
     cluster: &mut Cluster<N>,
     corpus: &[(ObjectId, Vec<u8>)],
@@ -349,47 +396,29 @@ fn flash_crowd<N: ClusterRuntime>(
     fp: &mut u64,
 ) -> (usize, usize) {
     let (id, want) = corpus[object % corpus.len()].clone();
-    let mut sessions = Vec::with_capacity(readers);
+    let mut pending: DetHashSet<OpHandle> = DetHashSet::default();
     for _ in 0..readers {
         let client = cluster.random_client();
-        let node = cluster.net.peer(client).info.id;
-        let op = cluster.net.query(client, &id);
-        sessions.push((node, op));
+        pending.insert(cluster.submit_get_with(client, &id, Some(180_000)));
     }
-    let deadline = cluster.net.now_ms() + 180_000;
+    let deadline = cluster.api_now_ms() + 180_000;
     let mut ok = 0usize;
     let mut failed = 0usize;
-    let mut pending = sessions.len();
-    while pending > 0 && cluster.net.now_ms() < deadline {
-        for (node, ev) in cluster.net.run_for(1_000) {
-            match ev {
-                AppEvent::QueryDone { op, data, .. } => {
-                    if let Some(pos) =
-                        sessions.iter().position(|&(n, o)| n == node && o == op)
-                    {
-                        sessions.swap_remove(pos);
-                        pending -= 1;
-                        if data == want {
-                            ok += 1;
-                        } else {
-                            failed += 1;
-                        }
-                    }
-                }
-                AppEvent::OpFailed { op, .. } => {
-                    if let Some(pos) =
-                        sessions.iter().position(|&(n, o)| n == node && o == op)
-                    {
-                        sessions.swap_remove(pos);
-                        pending -= 1;
-                        failed += 1;
-                    }
-                }
-                _ => {}
+    while !pending.is_empty() && cluster.api_now_ms() < deadline {
+        cluster.drive_for(1_000);
+        for done in cluster.poll_completions() {
+            if !pending.remove(&done.handle) {
+                continue;
+            }
+            match done.outcome {
+                OpOutcome::Fetched(data) if data == want => ok += 1,
+                _ => failed += 1,
             }
         }
     }
-    failed += pending; // sessions that never resolved
+    // Sessions that never resolved: cancel them so the registry is
+    // clean, and count them failed.
+    failed += cluster.cancel_all(pending.iter().copied().collect());
     *fp = fold(*fp, ok as u64);
     *fp = fold(*fp, failed as u64);
     (ok, failed)

@@ -17,6 +17,14 @@ pub fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Order-sensitive fingerprint fold: mix `v` into the accumulator.
+/// Shared by the scenario engine and the open-loop workload reports so
+/// their fingerprints compose.
+pub fn fold64(acc: u64, v: u64) -> u64 {
+    let mut s = acc ^ v.rotate_left(17);
+    splitmix64(&mut s)
+}
+
 /// xoshiro256** — the workhorse simulation RNG.
 #[derive(Clone, Debug)]
 pub struct Rng {

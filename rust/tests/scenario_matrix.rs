@@ -139,6 +139,42 @@ fn scenario_slow_link_degradation() {
 }
 
 #[test]
+fn scenario_open_loop_64_inflight_under_crash_burst() {
+    // The api_redesign acceptance case: 64 concurrent in-flight client
+    // ops (70/30 get/store through the VaultApi open-loop generator)
+    // racing a correlated crash burst, run twice with identical outcome
+    // fingerprints — which now also fold the p50/p99 op latencies.
+    let spec = ScenarioSpec::small("open_loop_crash_burst", 909, 72).phase(
+        "burst-under-open-loop-load",
+        vec![
+            Fault::CrashBurst { count: 10 },
+            Fault::OpenLoop { ops: 96, in_flight: 64, store_frac: 0.3 },
+        ],
+        90_000,
+        vec![
+            Check::NoChunkBelowDecodeThreshold,
+            Check::GroupsRecoveredTo(0.8),
+            Check::AllObjectsReadable,
+        ],
+    );
+    let report = run_deterministic(&spec);
+    let phase = &report.phases[0];
+    assert_eq!(
+        phase.ops_ok + phase.ops_failed,
+        96,
+        "every submitted open-loop op must resolve"
+    );
+    assert!(
+        phase.ops_ok > 48,
+        "most traffic must survive the burst (ok={} failed={})",
+        phase.ops_ok,
+        phase.ops_failed
+    );
+    assert!(phase.p99_ms >= phase.p50_ms);
+    assert!(phase.p50_ms > 0.0, "latency percentiles must be measured");
+}
+
+#[test]
 fn scenario_thousand_node_burst() {
     // Scale: 1k peers over 8 shard queues. ClaimVerify::Never is the
     // documented large-cluster measurement knob (proto::ClaimVerify);
