@@ -1,14 +1,23 @@
 //! §Perf instrument: micro-benchmarks of every hot path the protocol
-//! touches. Feeds EXPERIMENTS.md §Perf before/after entries.
+//! touches, with before/after rows for every kernel the ISSUE-3 coding
+//! data-plane overhaul changed ("(ref …)" rows run the kept pre-change
+//! implementations from `codec::reference`, measured in the same run on
+//! the same machine). Feeds EXPERIMENTS.md §Perf entries and the
+//! BENCH_codec.json trajectory.
 //!
-//! Run: `cargo bench --bench perf_hotpath`
+//! Run: `cargo bench --bench perf_hotpath` (append `-- --smoke` for the
+//! CI rot-check at tiny iteration counts).
 
 use vault::codec::rateless::{coeff_row, InnerDecoder, InnerEncoder};
+use vault::codec::reference::{
+    addmul_slice_ref, coeff_row_bools, scale_slice_ref, InnerDecoderRef, OuterDecoderRef,
+};
 use vault::codec::xor::xor_into;
-use vault::codec::{gf256, outer};
+use vault::codec::{gf256, outer, OuterDecoder};
 use vault::crypto::ed25519::SigningKey;
 use vault::crypto::{vrf, Hash256};
 use vault::proto::selection;
+use vault::util::cli::Args;
 use vault::util::rng::Rng;
 use vault::util::Timer;
 
@@ -32,15 +41,27 @@ fn bench<F: FnMut()>(name: &str, iters: usize, bytes_per_iter: usize, mut f: F) 
 }
 
 fn main() {
+    let args = Args::from_env();
+    // --smoke: 1-2 iterations of everything so CI can prove the bench
+    // targets still build and run without paying the full measurement.
+    let smoke = args.bool("smoke");
+    let scale = |iters: usize| if smoke { 1 } else { iters };
     let mut rng = Rng::new(0xBE);
 
-    // L3 byte-level hot loops.
+    // L3 byte-level hot loops — before/after pairs.
     let mut a = vec![0u8; 1 << 20];
     let mut b = vec![0u8; 1 << 20];
     rng.fill_bytes(&mut a);
     rng.fill_bytes(&mut b);
-    bench("xor_into 1MiB", 200, 1 << 20, || xor_into(&mut a, &b));
-    bench("gf256::addmul 1MiB", 50, 1 << 20, || gf256::addmul_slice(&mut a, &b, 0xA7));
+    bench("xor_into 1MiB", scale(200), 1 << 20, || xor_into(&mut a, &b));
+    bench("gf256::addmul 1MiB (ref per-byte)", scale(20), 1 << 20, || {
+        addmul_slice_ref(&mut a, &b, 0xA7)
+    });
+    bench("gf256::addmul 1MiB", scale(50), 1 << 20, || gf256::addmul_slice(&mut a, &b, 0xA7));
+    bench("gf256::scale 1MiB (ref per-byte)", scale(20), 1 << 20, || {
+        scale_slice_ref(&mut a, 0xA7)
+    });
+    bench("gf256::scale 1MiB", scale(50), 1 << 20, || gf256::scale_slice(&mut a, 0xA7));
 
     // Fountain code.
     let chunk = {
@@ -50,14 +71,30 @@ fn main() {
     };
     let chash = Hash256::of(&chunk);
     let enc = InnerEncoder::new(chash, &chunk, 32);
-    bench("inner fragment encode (512KiB/32)", 100, chunk.len() / 32, || {
+    bench("inner fragment encode (512KiB/32)", scale(100), chunk.len() / 32, || {
         let _ = enc.fragment(12345);
     });
-    bench("inner full encode R=80", 5, chunk.len() * 80 / 32, || {
-        let _ = enc.fragments(&(0..80u64).collect::<Vec<_>>());
+    let batch: Vec<u64> = (0..80u64).collect();
+    bench("inner full encode R=80", scale(5), chunk.len() * 80 / 32, || {
+        let _ = enc.fragments(&batch);
+    });
+    let mut arena = Vec::new();
+    enc.fragments_into(&batch, &mut arena); // warm the arena
+    bench("inner full encode R=80 (arena reuse)", scale(5), chunk.len() * 80 / 32, || {
+        enc.fragments_into(&batch, &mut arena);
     });
     let frags: Vec<_> = (0..40u64).map(|i| enc.fragment(i)).collect();
-    bench("inner decode (k=32)", 5, chunk.len(), || {
+    bench("inner decode (k=32) (ref bool rows)", scale(3), chunk.len(), || {
+        let mut dec = InnerDecoderRef::new(chash, 32);
+        for f in &frags {
+            if dec.is_complete() {
+                break;
+            }
+            dec.push(f);
+        }
+        assert!(dec.is_complete());
+    });
+    bench("inner decode (k=32)", scale(5), chunk.len(), || {
         let mut dec = InnerDecoder::new(chash, 32);
         for f in &frags {
             if dec.is_complete() {
@@ -67,7 +104,10 @@ fn main() {
         }
         assert!(dec.is_complete());
     });
-    bench("coeff_row derivation (k=32)", 2000, 0, || {
+    bench("coeff_row derivation (ref bools, k=32)", scale(1000), 0, || {
+        let _ = coeff_row_bools(&chash, rng.next_u64(), 32);
+    });
+    bench("coeff_row derivation (k=32)", scale(2000), 0, || {
         let _ = coeff_row(&chash, rng.next_u64(), 32);
     });
 
@@ -77,8 +117,29 @@ fn main() {
         rng.fill_bytes(&mut o);
         o
     };
-    bench("outer encode 4MiB (10,8)", 5, object.len(), || {
+    bench("outer encode 4MiB (10,8)", scale(5), object.len(), || {
         let _ = outer::encode_object(&object, b"s", 8, 10);
+    });
+    let (_, chunks) = outer::encode_object(&object, b"s", 8, 10);
+    bench("outer decode 4MiB (ref clones)", scale(3), object.len(), || {
+        let mut dec = OuterDecoderRef::new(8);
+        for c in &chunks {
+            if dec.is_complete() {
+                break;
+            }
+            dec.push(&c.bytes);
+        }
+        assert!(dec.is_complete());
+    });
+    bench("outer decode 4MiB", scale(5), object.len(), || {
+        let mut dec = OuterDecoder::new(8);
+        for c in &chunks {
+            if dec.is_complete() {
+                break;
+            }
+            dec.push(&c.bytes);
+        }
+        assert!(dec.is_complete());
     });
 
     // Crypto. "before" = generic double-and-add base multiplication;
@@ -91,42 +152,42 @@ fn main() {
         b[31] &= 0x0f;
         b
     });
-    bench("base mult, double-and-add (before)", 50, 0, || {
+    bench("base mult, double-and-add (before)", scale(50), 0, || {
         let _ = Point::base().mul_scalar(&k_scalar);
     });
-    bench("base mult, fixed-base table (after)", 50, 0, || {
+    bench("base mult, fixed-base table (after)", scale(50), 0, || {
         let _ = Point::mul_base(&k_scalar);
     });
     let sk = SigningKey::from_seed(&[7; 32]);
-    bench("ed25519 sign", 50, 0, || {
+    bench("ed25519 sign", scale(50), 0, || {
         let _ = sk.sign(b"persistence claim");
     });
     let sig = sk.sign(b"persistence claim");
-    bench("ed25519 verify", 50, 0, || {
+    bench("ed25519 verify", scale(50), 0, || {
         assert!(vault::crypto::ed25519::verify(&sk.public, b"persistence claim", &sig));
     });
-    bench("vrf prove", 20, 0, || {
+    bench("vrf prove", scale(20), 0, || {
         let _ = vrf::prove(&sk, b"chunk-selection-alpha");
     });
     let (_, proof) = vrf::prove(&sk, b"chunk-selection-alpha");
-    bench("vrf verify", 20, 0, || {
+    bench("vrf verify", scale(20), 0, || {
         assert!(vrf::verify(&sk.public, b"chunk-selection-alpha", &proof).is_some());
     });
-    bench("selection prove (eligible path)", 20, 0, || {
+    bench("selection prove (eligible path)", scale(20), 0, || {
         let _ = selection::prove_selection(&sk, &chash, 1, 80, 100);
     });
 
     // End-to-end simnet event throughput.
     use vault::coordinator::{Cluster, ClusterConfig};
     let t = Timer::start();
-    let mut cluster = Cluster::start(ClusterConfig::small_test(64));
+    let mut cluster = Cluster::start(ClusterConfig::small_test(if smoke { 16 } else { 64 }));
     let data = vec![9u8; 64 << 10];
     let id = cluster.store_blocking(0, &data, b"p", 0).unwrap().value;
     let _ = cluster.query_blocking(1, &id).unwrap();
     let msgs = cluster.net.stats.msgs;
     println!(
         "{:<38} {:>10.3} s wall ({} msgs, {:.0} msg/s)",
-        "simnet store+query (64 peers)",
+        if smoke { "simnet store+query (16 peers)" } else { "simnet store+query (64 peers)" },
         t.elapsed_s(),
         msgs,
         msgs as f64 / t.elapsed_s()

@@ -61,7 +61,30 @@ pub fn div(a: u8, b: u8) -> u8 {
     mul(a, inv(b))
 }
 
-/// dst += c * src (GF(256) — addition is XOR). The outer-code hot loop.
+/// 256-entry product table for a fixed coefficient `c`: `tbl[s] = c*s`.
+/// Building it costs 255 log/exp lookups, amortized over the slice; the
+/// main loops below then run branch-free (`tbl[0] == 0`, so zero bytes
+/// need no special case).
+#[inline]
+pub fn mul_table(c: u8) -> [u8; 256] {
+    let mut tbl = [0u8; 256];
+    if c == 0 {
+        return tbl;
+    }
+    let t = tables();
+    let lc = t.log[c as usize] as usize;
+    for (s, e) in tbl.iter_mut().enumerate().skip(1) {
+        *e = t.exp[lc + t.log[s] as usize];
+    }
+    tbl
+}
+
+/// Below this length the per-call table build is not amortized and the
+/// log/exp loop wins (coefficient-row updates are k ≤ 16 bytes).
+const TABLE_CUTOVER: usize = 64;
+
+/// dst += c * src (GF(256) — addition is XOR). The outer-code hot loop:
+/// per-call product table + 8-byte unrolled branch-free main loop.
 pub fn addmul_slice(dst: &mut [u8], src: &[u8], c: u8) {
     assert_eq!(dst.len(), src.len());
     if c == 0 {
@@ -71,20 +94,52 @@ pub fn addmul_slice(dst: &mut [u8], src: &[u8], c: u8) {
         super::xor::xor_into(dst, src);
         return;
     }
-    let t = tables();
-    let lc = t.log[c as usize] as usize;
-    // Per-byte table lookups; the outer code touches k_outer=8 blocks
-    // only, so this is never the system bottleneck (see §Perf).
-    for (d, &s) in dst.iter_mut().zip(src) {
-        if s != 0 {
-            *d ^= t.exp[lc + t.log[s as usize] as usize];
+    if dst.len() < TABLE_CUTOVER {
+        let t = tables();
+        let lc = t.log[c as usize] as usize;
+        for (d, &s) in dst.iter_mut().zip(src) {
+            if s != 0 {
+                *d ^= t.exp[lc + t.log[s as usize] as usize];
+            }
         }
+        return;
+    }
+    let tbl = mul_table(c);
+    let head = dst.len() & !7;
+    for (d8, s8) in dst[..head].chunks_exact_mut(8).zip(src[..head].chunks_exact(8)) {
+        d8[0] ^= tbl[s8[0] as usize];
+        d8[1] ^= tbl[s8[1] as usize];
+        d8[2] ^= tbl[s8[2] as usize];
+        d8[3] ^= tbl[s8[3] as usize];
+        d8[4] ^= tbl[s8[4] as usize];
+        d8[5] ^= tbl[s8[5] as usize];
+        d8[6] ^= tbl[s8[6] as usize];
+        d8[7] ^= tbl[s8[7] as usize];
+    }
+    for (d, &s) in dst[head..].iter_mut().zip(&src[head..]) {
+        *d ^= tbl[s as usize];
+    }
+}
+
+/// Disjoint (`pivot`, `other`) row pair from one backing slice — the
+/// split_at_mut dance that lets elimination read the pivot row while
+/// mutating another without cloning either.
+#[inline]
+fn pivot_pair_mut<T>(rows: &mut [T], p: usize, r: usize) -> (&T, &mut T) {
+    debug_assert_ne!(p, r);
+    if p < r {
+        let (lo, hi) = rows.split_at_mut(r);
+        (&lo[p], &mut hi[0])
+    } else {
+        let (lo, hi) = rows.split_at_mut(p);
+        (&hi[0], &mut lo[r])
     }
 }
 
 /// Solve the dense GF(256) system `C x = F` in place, returning the
 /// recovered blocks in source order. `coeff` is row-major k×k, `payload`
-/// rows are the combined blocks. Returns `None` if singular.
+/// rows are the combined blocks. Returns `None` if singular. Both inputs
+/// are consumed (left in reduced/emptied form).
 pub fn solve(coeff: &mut [Vec<u8>], payload: &mut [Vec<u8>]) -> Option<Vec<Vec<u8>>> {
     let k = coeff.len();
     assert_eq!(payload.len(), k);
@@ -99,38 +154,27 @@ pub fn solve(coeff: &mut [Vec<u8>], payload: &mut [Vec<u8>]) -> Option<Vec<Vec<u
         let pc = coeff[p][col];
         if pc != 1 {
             let ipc = inv(pc);
-            for v in coeff[p].iter_mut() {
-                *v = mul(*v, ipc);
-            }
-            let row = std::mem::take(&mut payload[p]);
-            let mut scaled = row;
-            scale_slice(&mut scaled, ipc);
-            payload[p] = scaled;
+            scale_slice(&mut coeff[p], ipc);
+            scale_slice(&mut payload[p], ipc);
         }
-        // Eliminate from all other rows.
+        // Eliminate from all other rows, borrowing the pivot row in
+        // place rather than cloning it per elimination.
         for r in 0..k {
             if r == p || coeff[r][col] == 0 {
                 continue;
             }
             let factor = coeff[r][col];
-            let pivot_coeff = coeff[p].clone();
-            for (v, pv) in coeff[r].iter_mut().zip(&pivot_coeff) {
-                *v ^= mul(factor, *pv);
-            }
-            let (pr, rr) = if p < r {
-                let (lo, hi) = payload.split_at_mut(r);
-                (&lo[p], &mut hi[0])
-            } else {
-                let (lo, hi) = payload.split_at_mut(p);
-                (&hi[0], &mut lo[r])
-            };
-            addmul_slice(rr, pr, factor);
+            let (pc_row, rc_row) = pivot_pair_mut(coeff, p, r);
+            addmul_slice(rc_row, pc_row, factor);
+            let (pp_row, rp_row) = pivot_pair_mut(payload, p, r);
+            addmul_slice(rp_row, pp_row, factor);
         }
     }
-    Some(perm.iter().map(|&p| payload[p].clone()).collect())
+    Some(perm.iter().map(|&p| std::mem::take(&mut payload[p])).collect())
 }
 
-/// In-place slice scaling by `c`.
+/// In-place slice scaling by `c` (same table strategy as
+/// [`addmul_slice`]).
 pub fn scale_slice(data: &mut [u8], c: u8) {
     if c == 1 {
         return;
@@ -139,12 +183,30 @@ pub fn scale_slice(data: &mut [u8], c: u8) {
         data.fill(0);
         return;
     }
-    let t = tables();
-    let lc = t.log[c as usize] as usize;
-    for d in data.iter_mut() {
-        if *d != 0 {
-            *d = t.exp[lc + t.log[*d as usize] as usize];
+    if data.len() < TABLE_CUTOVER {
+        let t = tables();
+        let lc = t.log[c as usize] as usize;
+        for d in data.iter_mut() {
+            if *d != 0 {
+                *d = t.exp[lc + t.log[*d as usize] as usize];
+            }
         }
+        return;
+    }
+    let tbl = mul_table(c);
+    let head = data.len() & !7;
+    for d8 in data[..head].chunks_exact_mut(8) {
+        d8[0] = tbl[d8[0] as usize];
+        d8[1] = tbl[d8[1] as usize];
+        d8[2] = tbl[d8[2] as usize];
+        d8[3] = tbl[d8[3] as usize];
+        d8[4] = tbl[d8[4] as usize];
+        d8[5] = tbl[d8[5] as usize];
+        d8[6] = tbl[d8[6] as usize];
+        d8[7] = tbl[d8[7] as usize];
+    }
+    for d in data[head..].iter_mut() {
+        *d = tbl[*d as usize];
     }
 }
 
@@ -186,14 +248,43 @@ mod tests {
     #[test]
     fn addmul_matches_scalar() {
         let mut rng = Rng::new(71);
-        let mut dst = vec![0u8; 257];
-        let mut src = vec![0u8; 257];
-        rng.fill_bytes(&mut dst);
-        rng.fill_bytes(&mut src);
-        let c = 0xA7;
-        let want: Vec<u8> = dst.iter().zip(&src).map(|(&d, &s)| d ^ mul(c, s)).collect();
-        addmul_slice(&mut dst, &src, c);
-        assert_eq!(dst, want);
+        // Lengths straddle the table cutover and the 8-byte unroll tail.
+        for len in [0usize, 1, 7, 8, 63, 64, 65, 71, 256, 257, 1000] {
+            let mut dst = vec![0u8; len];
+            let mut src = vec![0u8; len];
+            rng.fill_bytes(&mut dst);
+            rng.fill_bytes(&mut src);
+            for c in [0u8, 1, 2, 0xA7, 0xFF] {
+                let want: Vec<u8> =
+                    dst.iter().zip(&src).map(|(&d, &s)| d ^ mul(c, s)).collect();
+                addmul_slice(&mut dst, &src, c);
+                assert_eq!(dst, want, "len={len} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn scale_matches_scalar() {
+        let mut rng = Rng::new(73);
+        for len in [0usize, 1, 7, 8, 63, 64, 65, 71, 257] {
+            for c in [0u8, 1, 3, 0x53, 0xFE] {
+                let mut data = vec![0u8; len];
+                rng.fill_bytes(&mut data);
+                let want: Vec<u8> = data.iter().map(|&d| mul(c, d)).collect();
+                scale_slice(&mut data, c);
+                assert_eq!(data, want, "len={len} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn mul_table_matches_mul() {
+        for c in [0u8, 1, 2, 0x80, 0xA7, 0xFF] {
+            let tbl = mul_table(c);
+            for s in 0..=255u8 {
+                assert_eq!(tbl[s as usize], mul(c, s), "c={c} s={s}");
+            }
+        }
     }
 
     #[test]

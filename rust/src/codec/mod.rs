@@ -13,6 +13,7 @@ pub mod gf2;
 pub mod gf256;
 pub mod outer;
 pub mod rateless;
+pub mod reference;
 pub mod xor;
 
 pub use outer::{encode_object, EncodedChunk, ObjectId, OuterDecoder};

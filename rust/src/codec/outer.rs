@@ -9,6 +9,7 @@
 //! targeted adversary "can do no better than compromising randomly
 //! selected chunks".
 
+use crate::crypto::sha2::{Digest, Sha256};
 use crate::crypto::Hash256;
 use crate::util::rng::HashDrbg;
 use crate::wire::{Decode, Encode, Reader, WireResult, Writer};
@@ -39,40 +40,56 @@ pub struct ObjectId {
 crate::wire_struct!(ObjectId { chunks });
 
 impl ObjectId {
-    /// Content-addressed digest over all chunk hashes.
+    /// Content-addressed digest over all chunk hashes, streamed through
+    /// one incremental SHA-256 (no per-call parts Vec).
     pub fn digest(&self) -> Hash256 {
-        let mut parts: Vec<&[u8]> = Vec::with_capacity(self.chunks.len());
+        let mut h = Sha256::new();
         for c in &self.chunks {
-            parts.push(&c.0);
+            h.update(&c.0);
         }
-        Hash256::of_parts(&parts)
+        Hash256(h.finalize().into())
     }
+}
+
+/// Fixed-layout DRBG seed for outer-row derivation:
+/// `"vault-outer-row-v1" ‖ index ‖ attempt` (18+8+4 bytes). Built once;
+/// the retry loop patches only the attempt-counter bytes in place.
+const OUTER_SEED_LEN: usize = 18 + 8 + 4;
+
+/// Derive the GF(256) coefficient row for outer-stream index `index`
+/// into `out` (resized to `k` bytes; no allocation once `out` has
+/// capacity). Never all-zero.
+pub fn outer_row_into(index: u64, k: usize, out: &mut Vec<u8>) {
+    out.clear();
+    out.resize(k, 0);
+    let mut seed = [0u8; OUTER_SEED_LEN];
+    seed[..18].copy_from_slice(b"vault-outer-row-v1");
+    seed[18..26].copy_from_slice(&index.to_le_bytes());
+    for attempt in 0u32.. {
+        seed[26..30].copy_from_slice(&attempt.to_le_bytes());
+        let mut drbg = HashDrbg::new(&seed);
+        drbg.fill(out);
+        if out.iter().any(|&c| c != 0) {
+            return;
+        }
+    }
+    unreachable!()
 }
 
 /// GF(256) coefficient row for outer-stream index `i`: `k` bytes, never
 /// all-zero, derived from public information only (anyone holding a
 /// chunk can derive its row from the embedded index).
 pub fn outer_row(index: u64, k: usize) -> Vec<u8> {
-    for attempt in 0u32.. {
-        let mut seed = Vec::with_capacity(32);
-        seed.extend_from_slice(b"vault-outer-row-v1");
-        seed.extend_from_slice(&index.to_le_bytes());
-        seed.extend_from_slice(&attempt.to_le_bytes());
-        let mut drbg = HashDrbg::new(&seed);
-        let mut row = vec![0u8; k];
-        drbg.fill(&mut row);
-        if row.iter().any(|&c| c != 0) {
-            return row;
-        }
-    }
-    unreachable!()
+    let mut row = Vec::with_capacity(k);
+    outer_row_into(index, k, &mut row);
+    row
 }
 
 /// Private index selection: `n` distinct indices drawn from the client's
 /// secret and the object hash (§4.2 "uses its private key and the object
 /// hash to deterministically select ... irreversible").
 pub fn select_indices(secret: &[u8], object_hash: &Hash256, n: usize) -> Vec<u64> {
-    let mut seed = Vec::with_capacity(64);
+    let mut seed = Vec::with_capacity(21 + secret.len() + 32);
     seed.extend_from_slice(b"vault-outer-select-v1");
     seed.extend_from_slice(secret);
     seed.extend_from_slice(&object_hash.0);
@@ -106,16 +123,18 @@ pub fn encode_object(object: &[u8], secret: &[u8], k: usize, n: usize) -> (Objec
 
     let mut chunks = Vec::with_capacity(n);
     let mut hashes = Vec::with_capacity(n);
+    let mut row = Vec::with_capacity(k);
     for &idx in &indices {
-        let row = outer_row(idx, k);
-        let mut payload = vec![0u8; bs];
-        for (j, &c) in row.iter().enumerate() {
-            gf256::addmul_slice(&mut payload, &blocks[j * bs..(j + 1) * bs], c);
-        }
+        outer_row_into(idx, k, &mut row);
         let header = ChunkHeader { outer_index: idx, k_outer: k as u16, object_len: object.len() as u64 };
-        let mut w = Writer::with_capacity(payload.len() + 24);
+        // Combine the blocks directly inside the wire buffer — no
+        // staging payload Vec, no copy.
+        let mut w = Writer::with_capacity(bs + 24);
         header.encode(&mut w);
-        w.bytes(&payload);
+        let payload = w.zeros(bs);
+        for (j, &c) in row.iter().enumerate() {
+            gf256::addmul_slice(payload, &blocks[j * bs..(j + 1) * bs], c);
+        }
         let bytes = w.into_bytes();
         let chash = Hash256::of(&bytes);
         hashes.push(chash);
@@ -134,25 +153,50 @@ pub fn parse_chunk(bytes: &[u8]) -> WireResult<(ChunkHeader, &[u8])> {
 }
 
 /// Incremental outer-code decoder over GF(256).
+///
+/// Same zero-alloc steady-state design as the inner
+/// [`InnerDecoder`](super::rateless::InnerDecoder): flat coefficient and
+/// payload arenas plus persistent scratch buffers, eliminated in place
+/// with [`gf256::addmul_slice`] — no per-push row/payload clones. Only
+/// the first accepted chunk (which fixes the block size) allocates.
 pub struct OuterDecoder {
     k: usize,
     object_len: Option<u64>,
     block_size: usize,
-    /// pivot[c] = row index with unit leading coefficient at column c.
+    /// Accepted (pivot) rows so far.
+    nrows: usize,
+    /// pivot[c] = arena row with unit leading coefficient at column c.
     pivot: Vec<Option<usize>>,
-    rows: Vec<(Vec<u8>, Vec<u8>)>,
+    /// Reduced coefficient rows, row-major `k × k`.
+    coeff: Vec<u8>,
+    /// Reduced payload rows, row-major `k × block_size` (sized on first push).
+    payloads: Vec<u8>,
+    /// Scratch for the incoming row / payload being eliminated.
+    scratch_row: Vec<u8>,
+    scratch_pay: Vec<u8>,
 }
 
 impl OuterDecoder {
     pub fn new(k: usize) -> Self {
-        OuterDecoder { k, object_len: None, block_size: 0, pivot: vec![None; k], rows: Vec::new() }
+        assert!(k >= 1);
+        OuterDecoder {
+            k,
+            object_len: None,
+            block_size: 0,
+            nrows: 0,
+            pivot: vec![None; k],
+            coeff: vec![0u8; k * k],
+            payloads: Vec::new(),
+            scratch_row: vec![0u8; k],
+            scratch_pay: Vec::new(),
+        }
     }
 
     pub fn rank(&self) -> usize {
-        self.rows.len()
+        self.nrows
     }
     pub fn is_complete(&self) -> bool {
-        self.rows.len() == self.k
+        self.nrows == self.k
     }
 
     /// Feed one encoded-chunk blob. Returns true if rank increased.
@@ -168,6 +212,8 @@ impl OuterDecoder {
             None => {
                 self.object_len = Some(header.object_len);
                 self.block_size = payload.len();
+                self.payloads.resize(self.k * self.block_size, 0);
+                self.scratch_pay.resize(self.block_size, 0);
             }
             Some(len) => {
                 if len != header.object_len || payload.len() != self.block_size {
@@ -175,47 +221,60 @@ impl OuterDecoder {
                 }
             }
         }
-        let mut row = outer_row(header.outer_index, self.k);
-        let mut pay = payload.to_vec();
-        // Eliminate against existing pivots.
-        for c in 0..self.k {
+        let k = self.k;
+        let bs = self.block_size;
+        // Move the scratch buffers out so elimination can borrow the
+        // arenas immutably alongside them (`take` swaps in empty Vecs —
+        // no allocation).
+        let mut row = std::mem::take(&mut self.scratch_row);
+        let mut pay = std::mem::take(&mut self.scratch_pay);
+        outer_row_into(header.outer_index, k, &mut row);
+        pay.copy_from_slice(payload);
+
+        // Eliminate against existing pivots. Pivot rows are reduced
+        // (unit leading coefficient at their column, zeros before it),
+        // so an ascending column scan only touches coefficients ≥ c.
+        for c in 0..k {
             if row[c] == 0 {
                 continue;
             }
             if let Some(pr) = self.pivot[c] {
                 let factor = row[c];
-                let (prow, ppay) = &self.rows[pr];
-                let prow = prow.clone();
-                let ppay = ppay.clone();
-                for (v, pv) in row.iter_mut().zip(&prow) {
-                    *v ^= gf256::mul(factor, *pv);
-                }
-                gf256::addmul_slice(&mut pay, &ppay, factor);
+                gf256::addmul_slice(&mut row, &self.coeff[pr * k..(pr + 1) * k], factor);
+                gf256::addmul_slice(&mut pay, &self.payloads[pr * bs..(pr + 1) * bs], factor);
             }
         }
-        let Some(lead) = row.iter().position(|&v| v != 0) else { return false };
-        // Normalize to unit pivot.
-        let ilead = gf256::inv(row[lead]);
-        for v in row.iter_mut() {
-            *v = gf256::mul(*v, ilead);
-        }
-        gf256::scale_slice(&mut pay, ilead);
-        // Back-substitute into existing rows.
-        for r in 0..self.rows.len() {
-            let factor = self.rows[r].0[lead];
-            if factor != 0 {
-                let row_c = row.clone();
-                let pay_c = pay.clone();
-                let (erow, epay) = &mut self.rows[r];
-                for (v, nv) in erow.iter_mut().zip(&row_c) {
-                    *v ^= gf256::mul(factor, *nv);
+        let accepted = match row.iter().position(|&v| v != 0) {
+            None => false, // linearly dependent
+            Some(lead) => {
+                // Normalize to unit pivot.
+                let ilead = gf256::inv(row[lead]);
+                gf256::scale_slice(&mut row, ilead);
+                gf256::scale_slice(&mut pay, ilead);
+                // Back-substitute into existing rows.
+                for r in 0..self.nrows {
+                    let factor = self.coeff[r * k + lead];
+                    if factor != 0 {
+                        gf256::addmul_slice(&mut self.coeff[r * k..(r + 1) * k], &row, factor);
+                        gf256::addmul_slice(
+                            &mut self.payloads[r * bs..(r + 1) * bs],
+                            &pay,
+                            factor,
+                        );
+                    }
                 }
-                gf256::addmul_slice(epay, &pay_c, factor);
+                // Install the new pivot row into the arenas.
+                let n = self.nrows;
+                self.coeff[n * k..(n + 1) * k].copy_from_slice(&row);
+                self.payloads[n * bs..(n + 1) * bs].copy_from_slice(&pay);
+                self.pivot[lead] = Some(n);
+                self.nrows += 1;
+                true
             }
-        }
-        self.pivot[lead] = Some(self.rows.len());
-        self.rows.push((row, pay));
-        true
+        };
+        self.scratch_row = row;
+        self.scratch_pay = pay;
+        accepted
     }
 
     /// Recover the original object once complete.
@@ -227,7 +286,8 @@ impl OuterDecoder {
         let mut out = vec![0u8; self.k * self.block_size];
         for c in 0..self.k {
             let r = self.pivot[c]?;
-            out[c * self.block_size..(c + 1) * self.block_size].copy_from_slice(&self.rows[r].1);
+            out[c * self.block_size..(c + 1) * self.block_size]
+                .copy_from_slice(&self.payloads[r * self.block_size..(r + 1) * self.block_size]);
         }
         out.truncate(len);
         Some(out)

@@ -50,36 +50,76 @@ impl Decode for Fragment {
     }
 }
 
-/// Deterministic coefficient row for fragment `index` of chunk `chash`:
-/// `k` bits, never all-zero.
-pub fn coeff_row(chash: &Hash256, index: u64, k: usize) -> Vec<bool> {
-    debug_assert!(k > 0 && k <= 1024);
+/// Upper bound on the inner-code dimension; rows fit in
+/// `MAX_K / 64 = 16` packed words, so per-row scratch lives on the stack.
+pub const MAX_K: usize = 1024;
+
+/// Packed words per coefficient row of dimension `k`.
+#[inline]
+pub fn row_words(k: usize) -> usize {
+    k.div_ceil(64)
+}
+
+/// Bit `i` of a packed coefficient row.
+#[inline]
+pub fn row_bit(words: &[u64], i: usize) -> bool {
+    (words[i / 64] >> (i % 64)) & 1 == 1
+}
+
+/// Fixed-layout DRBG seed for row derivation:
+/// `"vault-inner-row-v1" ‖ chash ‖ index ‖ attempt` (18+32+8+4 bytes).
+/// Built once per derivation; the retry loop patches only the trailing
+/// attempt-counter bytes in place.
+const ROW_SEED_LEN: usize = 18 + 32 + 8 + 4;
+
+/// Derive the coefficient row of fragment `index` into `out`
+/// (`row_words(k)` packed words, little-endian bit order: bit `i` of the
+/// row is bit `i % 64` of word `i / 64`). Never all-zero. Performs no
+/// heap allocation — this is the decoder's steady-state path.
+pub fn coeff_row_into(chash: &Hash256, index: u64, k: usize, out: &mut [u64]) {
+    assert!(k > 0 && k <= MAX_K, "inner-code dimension {k} out of range");
+    debug_assert_eq!(out.len(), row_words(k));
+    let mut seed = [0u8; ROW_SEED_LEN];
+    seed[..18].copy_from_slice(b"vault-inner-row-v1");
+    seed[18..50].copy_from_slice(&chash.0);
+    seed[50..58].copy_from_slice(&index.to_le_bytes());
     for attempt in 0u32.. {
-        let mut seed = Vec::with_capacity(32 + 8 + 4 + 16);
-        seed.extend_from_slice(b"vault-inner-row-v1");
-        seed.extend_from_slice(&chash.0);
-        seed.extend_from_slice(&index.to_le_bytes());
-        seed.extend_from_slice(&attempt.to_le_bytes());
+        seed[58..62].copy_from_slice(&attempt.to_le_bytes());
         let mut drbg = HashDrbg::new(&seed);
-        let mut bytes = vec![0u8; k.div_ceil(8)];
-        drbg.fill(&mut bytes);
-        let bits: Vec<bool> = (0..k).map(|i| (bytes[i / 8] >> (i % 8)) & 1 == 1).collect();
-        if bits.iter().any(|&b| b) {
-            return bits;
+        let mut bytes = [0u8; MAX_K / 8];
+        drbg.fill(&mut bytes[..k.div_ceil(8)]);
+        for (w, b8) in out.iter_mut().zip(bytes.chunks_exact(8)) {
+            *w = u64::from_le_bytes(b8.try_into().unwrap());
+        }
+        // Mask the partial tail word so bits ≥ k are always clear.
+        if k % 64 != 0 {
+            out[k / 64] &= (1u64 << (k % 64)) - 1;
+        }
+        if out.iter().any(|&w| w != 0) {
+            return;
         }
     }
     unreachable!()
 }
 
+/// Deterministic coefficient row for fragment `index` of chunk `chash`:
+/// `k` bits packed into `u64` words, never all-zero. Allocating wrapper
+/// around [`coeff_row_into`]; bit `i` is read with [`row_bit`].
+pub fn coeff_row(chash: &Hash256, index: u64, k: usize) -> Vec<u64> {
+    let mut out = vec![0u64; row_words(k)];
+    coeff_row_into(chash, index, k, &mut out);
+    out
+}
+
 /// Bit-packed u32 words of a coefficient row — the layout the AOT decode
-/// artifact consumes (`rlf_decode` input `coeff_bits`).
+/// artifact consumes (`rlf_decode` input `coeff_bits`). Splits the
+/// native u64 words directly (no bool round-trip).
 pub fn coeff_row_packed(chash: &Hash256, index: u64, k: usize) -> Vec<u32> {
-    let bits = coeff_row(chash, index, k);
+    let words = coeff_row(chash, index, k);
     let mut out = vec![0u32; k.div_ceil(32)];
-    for (i, b) in bits.iter().enumerate() {
-        if *b {
-            out[i / 32] |= 1 << (i % 32);
-        }
+    for (i, o) in out.iter_mut().enumerate() {
+        let w = words[i / 2];
+        *o = if i % 2 == 0 { w as u32 } else { (w >> 32) as u32 };
     }
     out
 }
@@ -102,7 +142,7 @@ pub struct InnerEncoder {
 
 impl InnerEncoder {
     pub fn new(chash: Hash256, chunk: &[u8], k: usize) -> Self {
-        assert!(k >= 1);
+        assert!(k >= 1 && k <= MAX_K);
         let bs = block_size(chunk.len(), k);
         let mut blocks = vec![0u8; k * bs];
         blocks[..chunk.len()].copy_from_slice(chunk);
@@ -122,22 +162,59 @@ impl InnerEncoder {
         self.chunk_len
     }
 
+    /// XOR the source blocks selected by fragment `index`'s row into
+    /// `payload` (must be zeroed, `block_size` long). Allocation-free:
+    /// the row lives in a stack array and set bits are walked word-wise.
+    fn encode_payload_into(&self, index: u64, payload: &mut [u8]) {
+        debug_assert_eq!(payload.len(), self.block_size);
+        let mut row = [0u64; MAX_K / 64];
+        let words = row_words(self.k);
+        coeff_row_into(&self.chash, index, self.k, &mut row[..words]);
+        for (wi, &w) in row[..words].iter().enumerate() {
+            let mut bits = w;
+            while bits != 0 {
+                let i = wi * 64 + bits.trailing_zeros() as usize;
+                xor_into(payload, &self.blocks[i * self.block_size..(i + 1) * self.block_size]);
+                bits &= bits - 1;
+            }
+        }
+    }
+
     /// Materialize fragment `index` (native XOR path; the runtime module
     /// offers an artifact-backed batch path with identical output).
     pub fn fragment(&self, index: u64) -> Fragment {
-        let row = coeff_row(&self.chash, index, self.k);
         let mut payload = vec![0u8; self.block_size];
-        for (i, &sel) in row.iter().enumerate() {
-            if sel {
-                xor_into(&mut payload, &self.blocks[i * self.block_size..(i + 1) * self.block_size]);
-            }
-        }
+        self.encode_payload_into(index, &mut payload);
         Fragment { index, chunk_len: self.chunk_len, payload }
     }
 
     /// Batch fragment generation (used by STORE: indices 0..r or random).
     pub fn fragments(&self, indices: &[u64]) -> Vec<Fragment> {
-        indices.iter().map(|&i| self.fragment(i)).collect()
+        let mut out = Vec::new();
+        self.fragments_into(indices, &mut out);
+        out
+    }
+
+    /// Batch fragment generation into a caller-provided arena. Existing
+    /// `Fragment` slots (and their payload buffers) in `out` are reused,
+    /// so repeated calls with same-shape batches are allocation-free
+    /// after the first — the repair loop's steady state.
+    pub fn fragments_into(&self, indices: &[u64], out: &mut Vec<Fragment>) {
+        out.truncate(indices.len());
+        while out.len() < indices.len() {
+            out.push(Fragment {
+                index: 0,
+                chunk_len: self.chunk_len,
+                payload: Vec::with_capacity(self.block_size),
+            });
+        }
+        for (slot, &index) in out.iter_mut().zip(indices) {
+            slot.index = index;
+            slot.chunk_len = self.chunk_len;
+            slot.payload.clear();
+            slot.payload.resize(self.block_size, 0);
+            self.encode_payload_into(index, &mut slot.payload);
+        }
     }
 }
 
@@ -145,37 +222,58 @@ impl InnerEncoder {
 /// as soon as the received rows span GF(2)^k.
 ///
 /// Maintains a row-reduced basis: each accepted fragment is eliminated
-/// against existing pivots; redundant (dependent) fragments are
-/// discarded. O(k) row ops per fragment, O(k²) total.
+/// against existing pivots word-wise; redundant (dependent) fragments
+/// are discarded. O(k) row ops per fragment, O(k²) total.
+///
+/// Storage is two flat arenas (coefficient words and payload bytes) plus
+/// persistent scratch buffers for the incoming row, so steady-state
+/// [`push`](Self::push) — everything after the first fragment sizes the
+/// payload arena — performs zero heap allocations.
 pub struct InnerDecoder {
     chash: Hash256,
     k: usize,
+    /// Packed words per coefficient row.
+    words: usize,
     block_size: usize,
     chunk_len: Option<u32>,
-    /// pivot[c] = Some(row index in `rows` whose leading column is c).
+    /// Accepted (pivot) rows so far.
+    nrows: usize,
+    /// pivot[c] = Some(arena row whose leading column is c).
     pivot: Vec<Option<usize>>,
-    /// Reduced coefficient rows (bit vectors) and payloads.
-    rows: Vec<(Vec<bool>, Vec<u8>)>,
+    /// Reduced coefficient rows, row-major `k × words`.
+    coeff: Vec<u64>,
+    /// Reduced payload rows, row-major `k × block_size` (sized on first push).
+    payloads: Vec<u8>,
+    /// Scratch for the incoming row / payload being eliminated.
+    scratch_row: Vec<u64>,
+    scratch_pay: Vec<u8>,
 }
 
 impl InnerDecoder {
     pub fn new(chash: Hash256, k: usize) -> Self {
+        assert!(k >= 1 && k <= MAX_K);
+        let words = row_words(k);
         InnerDecoder {
             chash,
             k,
+            words,
             block_size: 0,
             chunk_len: None,
+            nrows: 0,
             pivot: vec![None; k],
-            rows: Vec::with_capacity(k),
+            coeff: vec![0u64; k * words],
+            payloads: Vec::new(),
+            scratch_row: vec![0u64; words],
+            scratch_pay: Vec::new(),
         }
     }
 
     pub fn rank(&self) -> usize {
-        self.rows.len()
+        self.nrows
     }
 
     pub fn is_complete(&self) -> bool {
-        self.rows.len() == self.k
+        self.nrows == self.k
     }
 
     /// Feed one fragment. Returns `true` if it increased the rank.
@@ -185,8 +283,12 @@ impl InnerDecoder {
         }
         match self.chunk_len {
             None => {
+                // First fragment fixes the geometry and sizes the payload
+                // arena — the only allocating push.
                 self.chunk_len = Some(frag.chunk_len);
                 self.block_size = frag.payload.len();
+                self.payloads.resize(self.k * self.block_size, 0);
+                self.scratch_pay.resize(self.block_size, 0);
             }
             Some(len) => {
                 // Inconsistent metadata ⇒ corrupt/Byzantine fragment.
@@ -195,42 +297,65 @@ impl InnerDecoder {
                 }
             }
         }
-        let mut row = coeff_row(&self.chash, frag.index, self.k);
-        let mut payload = frag.payload.clone();
-        // Eliminate against existing pivots.
+        // Move the scratch buffers out so the elimination below can
+        // borrow the arenas immutably alongside them (no clones, no
+        // allocation: `take` swaps in empty Vecs).
+        let mut row = std::mem::take(&mut self.scratch_row);
+        let mut pay = std::mem::take(&mut self.scratch_pay);
+        coeff_row_into(&self.chash, frag.index, self.k, &mut row);
+        pay.copy_from_slice(&frag.payload);
+
+        // Eliminate against existing pivots. Pivot rows are reduced —
+        // row `pivot[c]` has leading column c — so scanning columns in
+        // ascending order only ever toggles bits ≥ c.
         for c in 0..self.k {
-            if !row[c] {
+            if !row_bit(&row, c) {
                 continue;
             }
             if let Some(pr) = self.pivot[c] {
-                let (prow, ppay) = &self.rows[pr];
-                let prow = prow.clone();
-                xor_into(&mut payload, &ppay.clone());
-                for (b, pb) in row.iter_mut().zip(prow.iter()) {
-                    *b ^= pb;
+                let prow = &self.coeff[pr * self.words..(pr + 1) * self.words];
+                for (w, pw) in row.iter_mut().zip(prow) {
+                    *w ^= pw;
                 }
+                let ppay = &self.payloads[pr * self.block_size..(pr + 1) * self.block_size];
+                xor_into(&mut pay, ppay);
             }
         }
-        // Find the new leading column.
-        let lead = match row.iter().position(|&b| b) {
-            Some(c) => c,
-            None => return false, // linearly dependent
+        // Find the new leading column word-wise.
+        let lead = row
+            .iter()
+            .enumerate()
+            .find(|&(_, &w)| w != 0)
+            .map(|(wi, &w)| wi * 64 + w.trailing_zeros() as usize);
+        let accepted = match lead {
+            None => false, // linearly dependent
+            Some(lead) => {
+                // Back-substitute into existing rows that have this column set.
+                for r in 0..self.nrows {
+                    if !row_bit(&self.coeff[r * self.words..(r + 1) * self.words], lead) {
+                        continue;
+                    }
+                    let erow = &mut self.coeff[r * self.words..(r + 1) * self.words];
+                    for (w, nw) in erow.iter_mut().zip(row.iter()) {
+                        *w ^= nw;
+                    }
+                    let epay =
+                        &mut self.payloads[r * self.block_size..(r + 1) * self.block_size];
+                    xor_into(epay, &pay);
+                }
+                // Install the new pivot row into the arenas.
+                let n = self.nrows;
+                self.coeff[n * self.words..(n + 1) * self.words].copy_from_slice(&row);
+                self.payloads[n * self.block_size..(n + 1) * self.block_size]
+                    .copy_from_slice(&pay);
+                self.pivot[lead] = Some(n);
+                self.nrows += 1;
+                true
+            }
         };
-        // Back-substitute into existing rows that have this column set.
-        for r in 0..self.rows.len() {
-            if self.rows[r].0[lead] {
-                let payload_clone = payload.clone();
-                let row_clone = row.clone();
-                let (erow, epay) = &mut self.rows[r];
-                xor_into(epay, &payload_clone);
-                for (b, nb) in erow.iter_mut().zip(row_clone.iter()) {
-                    *b ^= nb;
-                }
-            }
-        }
-        self.pivot[lead] = Some(self.rows.len());
-        self.rows.push((row, payload));
-        true
+        self.scratch_row = row;
+        self.scratch_pay = pay;
+        accepted
     }
 
     /// Recover the chunk once complete.
@@ -242,10 +367,11 @@ impl InnerDecoder {
         let mut out = vec![0u8; self.k * self.block_size];
         for c in 0..self.k {
             let r = self.pivot[c]?;
-            let (row, payload) = &self.rows[r];
+            let row = &self.coeff[r * self.words..(r + 1) * self.words];
             // After full reduction each pivot row must be the unit vector e_c.
-            debug_assert!(row.iter().enumerate().all(|(i, &b)| b == (i == c)));
-            out[c * self.block_size..(c + 1) * self.block_size].copy_from_slice(payload);
+            debug_assert!((0..self.k).all(|i| row_bit(row, i) == (i == c)));
+            out[c * self.block_size..(c + 1) * self.block_size]
+                .copy_from_slice(&self.payloads[r * self.block_size..(r + 1) * self.block_size]);
         }
         out.truncate(len);
         Some(out)
@@ -365,18 +491,48 @@ mod tests {
         assert_ne!(a, c);
         let other = coeff_row(&chash(4), 42, 32);
         assert_ne!(a, other);
-        assert!(a.iter().any(|&x| x), "rows never all-zero");
+        assert!(a.iter().any(|&x| x != 0), "rows never all-zero");
     }
 
     #[test]
     fn packed_row_matches_bits() {
         let h = chash(5);
-        for idx in 0..10u64 {
-            let bits = coeff_row(&h, idx, 40);
-            let packed = coeff_row_packed(&h, idx, 40);
-            for (i, &b) in bits.iter().enumerate() {
-                assert_eq!((packed[i / 32] >> (i % 32)) & 1 == 1, b);
+        for k in [40usize, 64, 65, 100] {
+            for idx in 0..10u64 {
+                let words = coeff_row(&h, idx, k);
+                assert_eq!(words.len(), row_words(k));
+                let packed = coeff_row_packed(&h, idx, k);
+                for i in 0..k {
+                    assert_eq!((packed[i / 32] >> (i % 32)) & 1 == 1, row_bit(&words, i));
+                }
+                // Bits beyond k are always masked off.
+                for i in k..words.len() * 64 {
+                    assert!(!row_bit(&words, i), "k={k} stray bit {i}");
+                }
             }
+        }
+    }
+
+    #[test]
+    fn fragments_into_reuses_slots_and_matches() {
+        let mut rng = Rng::new(91);
+        let mut chunk = vec![0u8; 4096];
+        rng.fill_bytes(&mut chunk);
+        let h = chash(8);
+        let enc = InnerEncoder::new(h, &chunk, 16);
+        let indices: Vec<u64> = (100..140).collect();
+        let mut arena = Vec::new();
+        enc.fragments_into(&indices, &mut arena);
+        assert_eq!(arena.len(), indices.len());
+        for (f, &i) in arena.iter().zip(&indices) {
+            assert_eq!(*f, enc.fragment(i));
+        }
+        // Second batch into the same arena: same results, reused slots.
+        let indices2: Vec<u64> = (7..27).collect();
+        enc.fragments_into(&indices2, &mut arena);
+        assert_eq!(arena.len(), indices2.len());
+        for (f, &i) in arena.iter().zip(&indices2) {
+            assert_eq!(*f, enc.fragment(i));
         }
     }
 

@@ -1,0 +1,277 @@
+//! Reference implementations of the coding kernels — the pre-overhaul
+//! per-byte / per-bool code paths, kept verbatim so that
+//!
+//! 1. property tests (`tests/codec_equivalence.rs`) can assert the
+//!    optimized word-wise/table-driven kernels are **byte-identical**, and
+//! 2. `benches/perf_hotpath.rs` and `vault bench-codec` can measure
+//!    before/after speedups on the same machine in the same run.
+//!
+//! Nothing in the protocol calls this module; it is test/bench substrate
+//! only and intentionally mirrors the old structure (per-byte table
+//! lookups, `Vec<bool>` rows, per-push row/payload clones).
+
+use crate::crypto::Hash256;
+use crate::util::rng::HashDrbg;
+
+use super::xor::xor_into;
+use super::{gf256, outer, rateless};
+
+/// Scalar `dst += c * src` over GF(256): per-byte log/exp lookups with a
+/// zero-byte branch — the pre-change `addmul_slice` hot loop.
+pub fn addmul_slice_ref(dst: &mut [u8], src: &[u8], c: u8) {
+    assert_eq!(dst.len(), src.len());
+    if c == 0 {
+        return;
+    }
+    if c == 1 {
+        xor_into(dst, src);
+        return;
+    }
+    for (d, &s) in dst.iter_mut().zip(src) {
+        if s != 0 {
+            *d ^= gf256::mul(c, s);
+        }
+    }
+}
+
+/// Scalar in-place scaling by `c` — the pre-change `scale_slice`.
+pub fn scale_slice_ref(data: &mut [u8], c: u8) {
+    if c == 1 {
+        return;
+    }
+    if c == 0 {
+        data.fill(0);
+        return;
+    }
+    for d in data.iter_mut() {
+        if *d != 0 {
+            *d = gf256::mul(c, *d);
+        }
+    }
+}
+
+/// Pre-change coefficient-row derivation: per-attempt seed Vec, byte
+/// buffer, and `Vec<bool>` expansion. Bit `i` equals
+/// [`rateless::row_bit`] of the packed row.
+pub fn coeff_row_bools(chash: &Hash256, index: u64, k: usize) -> Vec<bool> {
+    debug_assert!(k > 0 && k <= rateless::MAX_K);
+    for attempt in 0u32.. {
+        let mut seed = Vec::with_capacity(32 + 8 + 4 + 16);
+        seed.extend_from_slice(b"vault-inner-row-v1");
+        seed.extend_from_slice(&chash.0);
+        seed.extend_from_slice(&index.to_le_bytes());
+        seed.extend_from_slice(&attempt.to_le_bytes());
+        let mut drbg = HashDrbg::new(&seed);
+        let mut bytes = vec![0u8; k.div_ceil(8)];
+        drbg.fill(&mut bytes);
+        let bits: Vec<bool> = (0..k).map(|i| (bytes[i / 8] >> (i % 8)) & 1 == 1).collect();
+        if bits.iter().any(|&b| b) {
+            return bits;
+        }
+    }
+    unreachable!()
+}
+
+/// Pre-change inner-code decoder: `Vec<bool>` rows, per-push clones of
+/// every pivot row and payload touched.
+pub struct InnerDecoderRef {
+    chash: Hash256,
+    k: usize,
+    block_size: usize,
+    chunk_len: Option<u32>,
+    pivot: Vec<Option<usize>>,
+    rows: Vec<(Vec<bool>, Vec<u8>)>,
+}
+
+impl InnerDecoderRef {
+    pub fn new(chash: Hash256, k: usize) -> Self {
+        InnerDecoderRef {
+            chash,
+            k,
+            block_size: 0,
+            chunk_len: None,
+            pivot: vec![None; k],
+            rows: Vec::with_capacity(k),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.rows.len() == self.k
+    }
+
+    /// Feed one fragment. Returns `true` if it increased the rank.
+    pub fn push(&mut self, frag: &rateless::Fragment) -> bool {
+        if self.is_complete() {
+            return false;
+        }
+        match self.chunk_len {
+            None => {
+                self.chunk_len = Some(frag.chunk_len);
+                self.block_size = frag.payload.len();
+            }
+            Some(len) => {
+                if len != frag.chunk_len || frag.payload.len() != self.block_size {
+                    return false;
+                }
+            }
+        }
+        let mut row = coeff_row_bools(&self.chash, frag.index, self.k);
+        let mut payload = frag.payload.clone();
+        for c in 0..self.k {
+            if !row[c] {
+                continue;
+            }
+            if let Some(pr) = self.pivot[c] {
+                let (prow, ppay) = &self.rows[pr];
+                let prow = prow.clone();
+                xor_into(&mut payload, &ppay.clone());
+                for (b, pb) in row.iter_mut().zip(prow.iter()) {
+                    *b ^= pb;
+                }
+            }
+        }
+        let lead = match row.iter().position(|&b| b) {
+            Some(c) => c,
+            None => return false,
+        };
+        for r in 0..self.rows.len() {
+            if self.rows[r].0[lead] {
+                let payload_clone = payload.clone();
+                let row_clone = row.clone();
+                let (erow, epay) = &mut self.rows[r];
+                xor_into(epay, &payload_clone);
+                for (b, nb) in erow.iter_mut().zip(row_clone.iter()) {
+                    *b ^= nb;
+                }
+            }
+        }
+        self.pivot[lead] = Some(self.rows.len());
+        self.rows.push((row, payload));
+        true
+    }
+
+    /// Recover the chunk once complete.
+    pub fn recover(&self) -> Option<Vec<u8>> {
+        if !self.is_complete() {
+            return None;
+        }
+        let len = self.chunk_len? as usize;
+        let mut out = vec![0u8; self.k * self.block_size];
+        for c in 0..self.k {
+            let r = self.pivot[c]?;
+            let (_, payload) = &self.rows[r];
+            out[c * self.block_size..(c + 1) * self.block_size].copy_from_slice(payload);
+        }
+        out.truncate(len);
+        Some(out)
+    }
+}
+
+/// Pre-change outer-code decoder: per-push clones of every pivot row and
+/// payload touched, scalar field ops.
+pub struct OuterDecoderRef {
+    k: usize,
+    object_len: Option<u64>,
+    block_size: usize,
+    pivot: Vec<Option<usize>>,
+    rows: Vec<(Vec<u8>, Vec<u8>)>,
+}
+
+impl OuterDecoderRef {
+    pub fn new(k: usize) -> Self {
+        OuterDecoderRef {
+            k,
+            object_len: None,
+            block_size: 0,
+            pivot: vec![None; k],
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.rows.len() == self.k
+    }
+
+    /// Feed one encoded-chunk blob. Returns true if rank increased.
+    pub fn push(&mut self, chunk_bytes: &[u8]) -> bool {
+        if self.is_complete() {
+            return false;
+        }
+        let Ok((header, payload)) = outer::parse_chunk(chunk_bytes) else { return false };
+        if header.k_outer as usize != self.k {
+            return false;
+        }
+        match self.object_len {
+            None => {
+                self.object_len = Some(header.object_len);
+                self.block_size = payload.len();
+            }
+            Some(len) => {
+                if len != header.object_len || payload.len() != self.block_size {
+                    return false;
+                }
+            }
+        }
+        let mut row = outer::outer_row(header.outer_index, self.k);
+        let mut pay = payload.to_vec();
+        for c in 0..self.k {
+            if row[c] == 0 {
+                continue;
+            }
+            if let Some(pr) = self.pivot[c] {
+                let factor = row[c];
+                let (prow, ppay) = &self.rows[pr];
+                let prow = prow.clone();
+                let ppay = ppay.clone();
+                for (v, pv) in row.iter_mut().zip(&prow) {
+                    *v ^= gf256::mul(factor, *pv);
+                }
+                addmul_slice_ref(&mut pay, &ppay, factor);
+            }
+        }
+        let Some(lead) = row.iter().position(|&v| v != 0) else { return false };
+        let ilead = gf256::inv(row[lead]);
+        for v in row.iter_mut() {
+            *v = gf256::mul(*v, ilead);
+        }
+        scale_slice_ref(&mut pay, ilead);
+        for r in 0..self.rows.len() {
+            let factor = self.rows[r].0[lead];
+            if factor != 0 {
+                let row_c = row.clone();
+                let pay_c = pay.clone();
+                let (erow, epay) = &mut self.rows[r];
+                for (v, nv) in erow.iter_mut().zip(&row_c) {
+                    *v ^= gf256::mul(factor, *nv);
+                }
+                addmul_slice_ref(epay, &pay_c, factor);
+            }
+        }
+        self.pivot[lead] = Some(self.rows.len());
+        self.rows.push((row, pay));
+        true
+    }
+
+    /// Recover the original object once complete.
+    pub fn recover(&self) -> Option<Vec<u8>> {
+        if !self.is_complete() {
+            return None;
+        }
+        let len = self.object_len? as usize;
+        let mut out = vec![0u8; self.k * self.block_size];
+        for c in 0..self.k {
+            let r = self.pivot[c]?;
+            out[c * self.block_size..(c + 1) * self.block_size].copy_from_slice(&self.rows[r].1);
+        }
+        out.truncate(len);
+        Some(out)
+    }
+}

@@ -4,6 +4,9 @@
 //! * `cluster`      — run a virtual-time cluster, store + query objects.
 //! * `bench-ops`    — open-loop mixed 70/30 get/store throughput bench
 //!                    over the `VaultApi` surface; emits `BENCH_ops.json`.
+//! * `bench-codec`  — coding/hashing data-plane kernel bench with
+//!                    before/after reference rows and allocation counts;
+//!                    emits `BENCH_codec.json`.
 //! * `tcp-demo`     — bring up a real-TCP localhost cluster and do one
 //!                    store/query round trip.
 //! * `sim`          — §6.1 durability simulations (fig4|fig5|fig6).
@@ -21,27 +24,36 @@ use vault::util::cli::Args;
 use vault::util::rng::Rng;
 use vault::util::Timer;
 
+/// Counting-allocator shim (util::alloc) so `bench-codec` can report the
+/// decoders' steady-state allocation counts. Pass-through to the system
+/// allocator plus one thread-local counter bump per allocation —
+/// negligible for every other subcommand.
+#[global_allocator]
+static ALLOC: vault::util::alloc::CountingAlloc = vault::util::alloc::CountingAlloc;
+
 fn main() {
     let args = Args::from_env();
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "cluster" => cmd_cluster(&args),
         "bench-ops" => cmd_bench_ops(&args),
+        "bench-codec" => cmd_bench_codec(&args),
         "tcp-demo" => cmd_tcp_demo(&args),
         "sim" => cmd_sim(&args),
         "analyze" => cmd_analyze(&args),
         "artifacts" => cmd_artifacts(&args),
         _ => {
             eprintln!(
-                "usage: vault <cluster|bench-ops|tcp-demo|sim|analyze|artifacts> [--flags]\n\
+                "usage: vault <cluster|bench-ops|bench-codec|tcp-demo|sim|analyze|artifacts> [--flags]\n\
                  \n\
-                 cluster   --peers 128 --objects 4 --size 262144 [--byzantine 0.1] [--churn 4]\n\
-                 bench-ops --peers 64 --ops 300 --inflight 32 --size 32768 [--sharded 0]\n\
-                 \x20          [--seed 7] [--out BENCH_ops.json]\n\
-                 tcp-demo  --peers 8 --size 65536\n\
-                 sim       --fig 4|5|6 [--nodes 100000] [--objects 1000] [--churn 2.0] [--years 1]\n\
-                 analyze   [--n 80] [--k 32] [--churn-q 0.01] [--evict 0] [--steps 512]\n\
-                 artifacts [--dir artifacts]"
+                 cluster     --peers 128 --objects 4 --size 262144 [--byzantine 0.1] [--churn 4]\n\
+                 bench-ops   --peers 64 --ops 300 --inflight 32 --size 32768 [--sharded 0]\n\
+                 \x20            [--seed 7] [--out BENCH_ops.json]\n\
+                 bench-codec [--smoke] [--seed 7] [--out BENCH_codec.json]\n\
+                 tcp-demo    --peers 8 --size 65536\n\
+                 sim         --fig 4|5|6 [--nodes 100000] [--objects 1000] [--churn 2.0] [--years 1]\n\
+                 analyze     [--n 80] [--k 32] [--churn-q 0.01] [--evict 0] [--steps 512]\n\
+                 artifacts   [--dir artifacts]"
             );
         }
     }
@@ -141,6 +153,203 @@ fn cmd_bench_ops(args: &Args) {
         report.ops_per_vsec(),
     );
     println!("virtual clock ended at {} s", virtual_ms / 1000);
+}
+
+/// Coding/hashing data-plane kernel benchmark (ISSUE 3): MB/s for the
+/// xor / GF(256) / inner / outer / sha256 kernels, before/after rows via
+/// the kept `codec::reference` implementations measured in the same run,
+/// and steady-state allocation counts from the counting-allocator shim.
+/// Emits `BENCH_codec.json` so the codec perf trajectory is
+/// machine-diffable across PRs.
+fn cmd_bench_codec(args: &Args) {
+    use vault::codec::rateless::{coeff_row, InnerDecoder, InnerEncoder};
+    use vault::codec::reference::{
+        addmul_slice_ref, coeff_row_bools, scale_slice_ref, InnerDecoderRef, OuterDecoderRef,
+    };
+    use vault::codec::xor::xor_into;
+    use vault::codec::{gf256, outer, OuterDecoder};
+    use vault::util::alloc;
+
+    let smoke = args.bool("smoke");
+    let seed = args.get("seed", 7u64);
+    let out = args.str("out", "BENCH_codec.json");
+    // Smoke mode: tiny buffers + single iterations so CI can prove the
+    // bench never rots without paying for a real measurement.
+    let slice_len: usize = if smoke { 64 << 10 } else { 1 << 20 };
+    let chunk_len: usize = if smoke { 64 << 10 } else { 512 << 10 };
+    let object_len: usize = if smoke { 256 << 10 } else { 4 << 20 };
+    let iters = |n: usize| if smoke { 1 } else { n };
+    let (k_inner, k_outer, n_outer) = (32usize, 8usize, 10usize);
+    println!(
+        "bench-codec{}: slice {slice_len} B, chunk {chunk_len} B, object {object_len} B",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    /// Median-free throughput probe: warm once, time `iters` runs.
+    fn mbps<F: FnMut()>(name: &str, iters: usize, bytes: usize, mut f: F) -> f64 {
+        f();
+        let t = Timer::start();
+        for _ in 0..iters {
+            f();
+        }
+        let v = bytes as f64 * iters as f64 / t.elapsed_s() / 1e6;
+        println!("  {name:<34} {v:>9.0} MB/s");
+        v
+    }
+
+    let wall = Timer::start();
+    let mut rng = Rng::new(seed);
+    let mut a = vec![0u8; slice_len];
+    let mut b = vec![0u8; slice_len];
+    rng.fill_bytes(&mut a);
+    rng.fill_bytes(&mut b);
+    let xor_mbps = mbps("xor", iters(200), slice_len, || xor_into(&mut a, &b));
+    let sha256_mbps = mbps("sha256", iters(50), slice_len, || {
+        let _ = Hash256::of(&a);
+    });
+    let addmul_ref_mbps =
+        mbps("addmul (ref per-byte)", iters(20), slice_len, || addmul_slice_ref(&mut a, &b, 0xA7));
+    let addmul_mbps =
+        mbps("addmul (table)", iters(50), slice_len, || gf256::addmul_slice(&mut a, &b, 0xA7));
+    let scale_ref_mbps =
+        mbps("scale (ref per-byte)", iters(20), slice_len, || scale_slice_ref(&mut a, 0xA7));
+    let scale_mbps =
+        mbps("scale (table)", iters(50), slice_len, || gf256::scale_slice(&mut a, 0xA7));
+
+    // Inner code.
+    let mut chunk = vec![0u8; chunk_len];
+    rng.fill_bytes(&mut chunk);
+    let chash = Hash256::of(&chunk);
+    let enc = InnerEncoder::new(chash, &chunk, k_inner);
+    let batch: Vec<u64> = (0..(k_inner as u64 * 5 / 2)).collect(); // R = 2.5k
+    let batch_bytes = chunk_len * batch.len() / k_inner;
+    let inner_encode_mbps = mbps("inner encode R=80", iters(5), batch_bytes, || {
+        let _ = enc.fragments(&batch);
+    });
+    let mut arena = Vec::new();
+    enc.fragments_into(&batch, &mut arena);
+    let inner_encode_arena_mbps = mbps("inner encode R=80 (arena)", iters(5), batch_bytes, || {
+        enc.fragments_into(&batch, &mut arena);
+    });
+    let frags: Vec<_> = (0..(k_inner as u64 + 8)).map(|i| enc.fragment(i)).collect();
+    let inner_decode_ref_mbps = mbps("inner decode k=32 (ref bools)", iters(3), chunk_len, || {
+        let mut dec = InnerDecoderRef::new(chash, k_inner);
+        for f in &frags {
+            if dec.is_complete() {
+                break;
+            }
+            dec.push(f);
+        }
+        assert!(dec.is_complete());
+    });
+    let inner_decode_mbps = mbps("inner decode k=32 (packed)", iters(5), chunk_len, || {
+        let mut dec = InnerDecoder::new(chash, k_inner);
+        for f in &frags {
+            if dec.is_complete() {
+                break;
+            }
+            dec.push(f);
+        }
+        assert!(dec.is_complete());
+    });
+    let coeff_iters = iters(2000);
+    let t = Timer::start();
+    for i in 0..coeff_iters {
+        let _ = coeff_row_bools(&chash, i as u64, k_inner);
+    }
+    let coeff_row_ref_per_s = coeff_iters as f64 / t.elapsed_s();
+    let t = Timer::start();
+    for i in 0..coeff_iters {
+        let _ = coeff_row(&chash, i as u64, k_inner);
+    }
+    let coeff_row_per_s = coeff_iters as f64 / t.elapsed_s();
+
+    // Outer code.
+    let mut object = vec![0u8; object_len];
+    rng.fill_bytes(&mut object);
+    let outer_encode_mbps = mbps("outer encode (10,8)", iters(5), object_len, || {
+        let _ = outer::encode_object(&object, b"bench", k_outer, n_outer);
+    });
+    let (_, chunks) = outer::encode_object(&object, b"bench", k_outer, n_outer);
+    let outer_decode_ref_mbps = mbps("outer decode (ref clones)", iters(3), object_len, || {
+        let mut dec = OuterDecoderRef::new(k_outer);
+        for c in &chunks {
+            if dec.is_complete() {
+                break;
+            }
+            dec.push(&c.bytes);
+        }
+        assert!(dec.is_complete());
+    });
+    let outer_decode_mbps = mbps("outer decode (arena)", iters(5), object_len, || {
+        let mut dec = OuterDecoder::new(k_outer);
+        for c in &chunks {
+            if dec.is_complete() {
+                break;
+            }
+            dec.push(&c.bytes);
+        }
+        assert!(dec.is_complete());
+    });
+
+    // Steady-state allocation counts (first push sizes the arena and is
+    // excluded by design — see DESIGN.md §Perf).
+    let alloc_counter_active = alloc::counts_allocations();
+    let mut dec = InnerDecoder::new(chash, k_inner);
+    dec.push(&frags[0]);
+    let (inner_push_steady_allocs, _, ()) = alloc::count(|| {
+        for f in &frags[1..] {
+            dec.push(f);
+        }
+    });
+    let mut dec = OuterDecoder::new(k_outer);
+    dec.push(&chunks[0].bytes);
+    let (outer_push_steady_allocs, _, ()) = alloc::count(|| {
+        for c in &chunks[1..] {
+            dec.push(&c.bytes);
+        }
+    });
+    println!(
+        "  steady-state allocs: inner push {inner_push_steady_allocs}, \
+         outer push {outer_push_steady_allocs} (counter active: {alloc_counter_active})"
+    );
+
+    let wall_secs = wall.elapsed_s();
+    let addmul_speedup = addmul_mbps / addmul_ref_mbps.max(1e-9);
+    let inner_decode_speedup = inner_decode_mbps / inner_decode_ref_mbps.max(1e-9);
+    let outer_decode_speedup = outer_decode_mbps / outer_decode_ref_mbps.max(1e-9);
+    let json = format!(
+        "{{\n  \"bench\": \"codec_data_plane\",\n  \"smoke\": {smoke},\n  \"seed\": {seed},\n  \
+         \"slice_bytes\": {slice_len},\n  \"chunk_bytes\": {chunk_len},\n  \
+         \"object_bytes\": {object_len},\n  \"k_inner\": {k_inner},\n  \
+         \"k_outer\": {k_outer},\n  \"n_outer\": {n_outer},\n  \
+         \"xor_mbps\": {xor_mbps:.1},\n  \"sha256_mbps\": {sha256_mbps:.1},\n  \
+         \"addmul_ref_mbps\": {addmul_ref_mbps:.1},\n  \"addmul_mbps\": {addmul_mbps:.1},\n  \
+         \"scale_ref_mbps\": {scale_ref_mbps:.1},\n  \"scale_mbps\": {scale_mbps:.1},\n  \
+         \"inner_encode_mbps\": {inner_encode_mbps:.1},\n  \
+         \"inner_encode_arena_mbps\": {inner_encode_arena_mbps:.1},\n  \
+         \"inner_decode_ref_mbps\": {inner_decode_ref_mbps:.1},\n  \
+         \"inner_decode_mbps\": {inner_decode_mbps:.1},\n  \
+         \"coeff_row_ref_per_s\": {coeff_row_ref_per_s:.0},\n  \
+         \"coeff_row_per_s\": {coeff_row_per_s:.0},\n  \
+         \"outer_encode_mbps\": {outer_encode_mbps:.1},\n  \
+         \"outer_decode_ref_mbps\": {outer_decode_ref_mbps:.1},\n  \
+         \"outer_decode_mbps\": {outer_decode_mbps:.1},\n  \
+         \"addmul_speedup\": {addmul_speedup:.2},\n  \
+         \"inner_decode_speedup\": {inner_decode_speedup:.2},\n  \
+         \"outer_decode_speedup\": {outer_decode_speedup:.2},\n  \
+         \"inner_push_steady_allocs\": {inner_push_steady_allocs},\n  \
+         \"outer_push_steady_allocs\": {outer_push_steady_allocs},\n  \
+         \"alloc_counter_active\": {alloc_counter_active},\n  \"wall_secs\": {wall_secs:.3}\n}}\n",
+    );
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("failed to write {out}: {e}"),
+    }
+    println!(
+        "speedups: addmul {addmul_speedup:.2}x, inner decode {inner_decode_speedup:.2}x, \
+         outer decode {outer_decode_speedup:.2}x ({wall_secs:.1}s wall)"
+    );
 }
 
 fn cmd_cluster(args: &Args) {

@@ -289,10 +289,9 @@ mod imp {
             for batch in indices.chunks(ar) {
                 let mut coeff = vec![0u32; ar * k];
                 for (row, &idx) in batch.iter().enumerate() {
-                    for (c, bit) in
-                        rateless::coeff_row(chash, idx, k).into_iter().enumerate()
-                    {
-                        coeff[row * k + c] = bit as u32;
+                    let words = rateless::coeff_row(chash, idx, k);
+                    for c in 0..k {
+                        coeff[row * k + c] = rateless::row_bit(&words, c) as u32;
                     }
                 }
                 let coeff_lit = xla::Literal::vec1(&coeff)

@@ -1,0 +1,89 @@
+//! Counting allocator shim — the measurement side of the codec data
+//! plane's zero-allocation discipline (DESIGN.md §Perf).
+//!
+//! [`CountingAlloc`] wraps the system allocator and counts allocations
+//! per thread. The library never installs it; binaries that want the
+//! numbers opt in with
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: vault::util::alloc::CountingAlloc = vault::util::alloc::CountingAlloc;
+//! ```
+//!
+//! (`vault` itself and `tests/codec_equivalence.rs` do). Counters are
+//! thread-local, so parallel test threads never pollute each other's
+//! counts. When the shim is *not* installed every count reads 0 —
+//! callers that assert on counts must first sanity-check that an
+//! intentional allocation is visible (see [`counts_allocations`]).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// System-allocator wrapper counting allocations on the current thread.
+/// Dealloc is free; `alloc`, `alloc_zeroed`, and growth via `realloc`
+/// each count as one allocation.
+pub struct CountingAlloc;
+
+#[inline]
+fn record(size: usize) {
+    ALLOCS.with(|c| c.set(c.get() + 1));
+    BYTES.with(|c| c.set(c.get() + size as u64));
+}
+
+// SAFETY: defers all allocation to `System`; the bookkeeping touches
+// only const-initialized thread-locals, which never allocate.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        record(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        record(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // Only growth is an allocation; shrinking reallocs stay free.
+        if new_size > layout.size() {
+            record(new_size - layout.size());
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Allocations recorded on this thread since it started.
+pub fn thread_allocations() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+/// Bytes requested on this thread since it started.
+pub fn thread_alloc_bytes() -> u64 {
+    BYTES.with(|c| c.get())
+}
+
+/// Run `f` and return `(allocations, bytes, result)` attributed to it on
+/// this thread. Reads 0 unless [`CountingAlloc`] is the binary's global
+/// allocator.
+pub fn count<R>(f: impl FnOnce() -> R) -> (u64, u64, R) {
+    let (a0, b0) = (thread_allocations(), thread_alloc_bytes());
+    let r = f();
+    (thread_allocations() - a0, thread_alloc_bytes() - b0, r)
+}
+
+/// Is the shim actually installed? Probes with a boxed allocation —
+/// assertions on zero counts should require this first so they can
+/// never pass vacuously.
+pub fn counts_allocations() -> bool {
+    let (allocs, _, _) = count(|| std::hint::black_box(Box::new(0x5EEDu64)));
+    allocs > 0
+}

@@ -2,6 +2,7 @@
 //! statistics, CLI parsing. These stand in for the usual crates.io
 //! helpers (the build environment is fully offline).
 
+pub mod alloc;
 pub mod cli;
 pub mod detmap;
 pub mod logger;

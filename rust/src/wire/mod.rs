@@ -88,6 +88,15 @@ impl Writer {
         self.bytes(&v.to_le_bytes());
     }
 
+    /// Append `n` zero bytes and return a mutable view of them — lets
+    /// encoders build payloads directly inside the wire buffer instead
+    /// of staging them in a separate Vec and copying.
+    pub fn zeros(&mut self, n: usize) -> &mut [u8] {
+        let start = self.buf.len();
+        self.buf.resize(start + n, 0);
+        &mut self.buf[start..]
+    }
+
     /// LEB128 varint — lengths and counts.
     pub fn varint(&mut self, mut v: u64) {
         loop {

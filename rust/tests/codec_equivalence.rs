@@ -1,0 +1,263 @@
+//! Equivalence and allocation-discipline tests for the optimized coding
+//! data plane (ISSUE 3 tentpole).
+//!
+//! * The table-driven GF(256) kernels and the packed-row GF(2) decoder
+//!   must be **byte-identical** to the kept reference implementations in
+//!   [`vault::codec::reference`] across random lengths, including
+//!   non-multiple-of-8 tails.
+//! * Steady-state `InnerDecoder::push` / `OuterDecoder::push` must
+//!   perform **zero heap allocations**, verified through the counting
+//!   allocator installed as this binary's global allocator.
+
+use vault::codec::rateless::{
+    self, coeff_row, coeff_row_packed, row_bit, InnerDecoder, InnerEncoder,
+};
+use vault::codec::reference::{
+    addmul_slice_ref, coeff_row_bools, scale_slice_ref, InnerDecoderRef, OuterDecoderRef,
+};
+use vault::codec::{encode_object, gf256, OuterDecoder};
+use vault::crypto::Hash256;
+use vault::util::alloc::{self, CountingAlloc};
+use vault::util::rng::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn counting_allocator_is_installed() {
+    assert!(
+        alloc::counts_allocations(),
+        "counting allocator not active; zero-alloc assertions would be vacuous"
+    );
+}
+
+/// Random lengths spanning the table cutover and the 8-byte unroll tail.
+const LENS: &[usize] =
+    &[0, 1, 3, 7, 8, 9, 15, 16, 31, 63, 64, 65, 100, 255, 256, 257, 1000, 4096, 4097];
+
+#[test]
+fn addmul_matches_reference_all_tails() {
+    let mut rng = Rng::new(0xA1);
+    for &len in LENS {
+        let mut src = vec![0u8; len];
+        rng.fill_bytes(&mut src);
+        for trial in 0..4 {
+            let c = match trial {
+                0 => 0u8,
+                1 => 1,
+                _ => (rng.next_u32() as u8).max(2),
+            };
+            let mut base = vec![0u8; len];
+            rng.fill_bytes(&mut base);
+            let mut fast = base.clone();
+            let mut slow = base;
+            gf256::addmul_slice(&mut fast, &src, c);
+            addmul_slice_ref(&mut slow, &src, c);
+            assert_eq!(fast, slow, "addmul len={len} c={c}");
+        }
+    }
+}
+
+#[test]
+fn scale_matches_reference_all_tails() {
+    let mut rng = Rng::new(0xA2);
+    for &len in LENS {
+        for trial in 0..4 {
+            let c = match trial {
+                0 => 0u8,
+                1 => 1,
+                _ => (rng.next_u32() as u8).max(2),
+            };
+            let mut fast = vec![0u8; len];
+            rng.fill_bytes(&mut fast);
+            let mut slow = fast.clone();
+            gf256::scale_slice(&mut fast, c);
+            scale_slice_ref(&mut slow, c);
+            assert_eq!(fast, slow, "scale len={len} c={c}");
+        }
+    }
+}
+
+#[test]
+fn packed_rows_match_bool_reference() {
+    let mut rng = Rng::new(0xA3);
+    for _ in 0..60 {
+        let mut h = [0u8; 32];
+        rng.fill_bytes(&mut h);
+        let chash = Hash256(h);
+        // Hit word boundaries (63/64/65) and odd widths up to MAX_K.
+        let k = match rng.range(0, 6) {
+            0 => 63,
+            1 => 64,
+            2 => 65,
+            3 => rateless::MAX_K,
+            _ => rng.range(1, 200),
+        };
+        let idx = rng.next_u64();
+        let words = coeff_row(&chash, idx, k);
+        let bools = coeff_row_bools(&chash, idx, k);
+        assert_eq!(bools.len(), k);
+        for (i, &b) in bools.iter().enumerate() {
+            assert_eq!(row_bit(&words, i), b, "k={k} bit {i}");
+        }
+        for i in k..words.len() * 64 {
+            assert!(!row_bit(&words, i), "k={k} stray bit {i}");
+        }
+        // u32 artifact layout agrees with the native words.
+        let packed = coeff_row_packed(&chash, idx, k);
+        for (i, &b) in bools.iter().enumerate() {
+            assert_eq!((packed[i / 32] >> (i % 32)) & 1 == 1, b);
+        }
+    }
+}
+
+#[test]
+fn inner_decoder_matches_reference_push_for_push() {
+    let mut rng = Rng::new(0xA4);
+    for case in 0..8 {
+        let k = [1usize, 2, 8, 16, 32, 33, 64, 100][case];
+        let len = rng.range(1, 20_000);
+        let mut chunk = vec![0u8; len];
+        rng.fill_bytes(&mut chunk);
+        let chash = Hash256::of(&chunk);
+        let enc = InnerEncoder::new(chash, &chunk, k);
+        let mut fast = InnerDecoder::new(chash, k);
+        let mut slow = InnerDecoderRef::new(chash, k);
+        let mut fed = 0;
+        while !fast.is_complete() {
+            let idx = rng.next_u64() % 10_000;
+            let frag = enc.fragment(idx);
+            // Occasionally inject inconsistent metadata (never on the
+            // first push, which pins the geometry); both decoders must
+            // reject identically.
+            let frag = if fed > 0 && rng.chance(0.1) {
+                let mut bad = frag;
+                bad.chunk_len ^= 0xFFFF_0000;
+                bad
+            } else {
+                frag
+            };
+            let a = fast.push(&frag);
+            let b = slow.push(&frag);
+            assert_eq!(a, b, "case {case}: accept/reject diverged at push {fed}");
+            assert_eq!(fast.rank(), slow.rank(), "case {case}");
+            fed += 1;
+            assert!(fed < 4 * k + 200, "case {case}: decode stuck");
+        }
+        assert!(slow.is_complete());
+        assert_eq!(fast.recover().unwrap(), chunk, "case {case}");
+        assert_eq!(slow.recover().unwrap(), chunk, "case {case}");
+    }
+}
+
+#[test]
+fn outer_decoder_matches_reference_push_for_push() {
+    let mut rng = Rng::new(0xA5);
+    for case in 0..6 {
+        let k = [1usize, 2, 4, 8, 8, 12][case];
+        let n = k + rng.range(1, 5);
+        let len = rng.range(1, 40_000);
+        let mut obj = vec![0u8; len];
+        rng.fill_bytes(&mut obj);
+        let (_, chunks) = encode_object(&obj, b"equiv-secret", k, n);
+        let mut fast = OuterDecoder::new(k);
+        let mut slow = OuterDecoderRef::new(k);
+        // Feed with duplicates interleaved so dependent-row rejection is
+        // exercised identically.
+        let mut order: Vec<usize> = (0..chunks.len()).chain(0..chunks.len()).collect();
+        rng.shuffle(&mut order);
+        for &ci in &order {
+            let a = fast.push(&chunks[ci].bytes);
+            let b = slow.push(&chunks[ci].bytes);
+            assert_eq!(a, b, "case {case}: accept/reject diverged on chunk {ci}");
+            assert_eq!(fast.rank(), slow.rank(), "case {case}");
+        }
+        assert!(fast.is_complete(), "case {case}");
+        assert_eq!(fast.recover().unwrap(), obj, "case {case}");
+        assert_eq!(slow.recover().unwrap(), obj, "case {case}");
+    }
+}
+
+#[test]
+fn inner_push_steady_state_is_zero_alloc() {
+    assert!(alloc::counts_allocations());
+    let mut rng = Rng::new(0xA6);
+    let k = 32;
+    let mut chunk = vec![0u8; 64 * 1024];
+    rng.fill_bytes(&mut chunk);
+    let chash = Hash256::of(&chunk);
+    let enc = InnerEncoder::new(chash, &chunk, k);
+    // Pre-materialize fragments: more than needed, plus a duplicate run
+    // so the dependent-reject path is also measured.
+    let frags: Vec<_> = (0..(k as u64 + 16)).map(|i| enc.fragment(i)).collect();
+    let mut dec = InnerDecoder::new(chash, k);
+    // First push sizes the payload arena — the one allowed allocation site.
+    assert!(dec.push(&frags[0]));
+    let (allocs, bytes, ()) = alloc::count(|| {
+        for f in &frags[1..] {
+            dec.push(f);
+        }
+        // Dependent pushes after completion must also be free.
+        for f in frags.iter().take(4) {
+            dec.push(f);
+        }
+    });
+    assert_eq!(
+        (allocs, bytes),
+        (0, 0),
+        "steady-state InnerDecoder::push allocated ({allocs} allocs, {bytes} B)"
+    );
+    assert!(dec.is_complete());
+    assert_eq!(dec.recover().unwrap(), chunk);
+}
+
+#[test]
+fn outer_push_steady_state_is_zero_alloc() {
+    assert!(alloc::counts_allocations());
+    let mut rng = Rng::new(0xA7);
+    let (k, n) = (8, 10);
+    let mut obj = vec![0u8; 256 * 1024];
+    rng.fill_bytes(&mut obj);
+    let (_, chunks) = encode_object(&obj, b"alloc-secret", k, n);
+    let mut dec = OuterDecoder::new(k);
+    // First push sizes the payload arena — the one allowed allocation site.
+    assert!(dec.push(&chunks[0].bytes));
+    let (allocs, bytes, ()) = alloc::count(|| {
+        for c in &chunks[1..] {
+            dec.push(&c.bytes);
+        }
+        for c in chunks.iter().take(2) {
+            dec.push(&c.bytes); // dependent / post-completion pushes
+        }
+    });
+    assert_eq!(
+        (allocs, bytes),
+        (0, 0),
+        "steady-state OuterDecoder::push allocated ({allocs} allocs, {bytes} B)"
+    );
+    assert!(dec.is_complete());
+    assert_eq!(dec.recover().unwrap(), obj);
+}
+
+#[test]
+fn fragments_into_steady_state_is_zero_alloc() {
+    assert!(alloc::counts_allocations());
+    let mut rng = Rng::new(0xA8);
+    let mut chunk = vec![0u8; 32 * 1024];
+    rng.fill_bytes(&mut chunk);
+    let chash = Hash256::of(&chunk);
+    let enc = InnerEncoder::new(chash, &chunk, 32);
+    let indices: Vec<u64> = (0..40).collect();
+    let mut arena = Vec::new();
+    enc.fragments_into(&indices, &mut arena); // warms the arena
+    let expect = arena.clone();
+    let (allocs, bytes, ()) = alloc::count(|| {
+        enc.fragments_into(&indices, &mut arena);
+    });
+    assert_eq!(
+        (allocs, bytes),
+        (0, 0),
+        "warm fragments_into allocated ({allocs} allocs, {bytes} B)"
+    );
+    assert_eq!(arena, expect);
+}

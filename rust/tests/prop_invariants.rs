@@ -3,7 +3,8 @@
 //! case generation).
 
 use vault::codec::outer::{encode_object, OuterDecoder};
-use vault::codec::rateless::{coeff_row, InnerDecoder, InnerEncoder};
+use vault::codec::rateless::{coeff_row, row_bit, row_words, InnerDecoder, InnerEncoder};
+use vault::codec::reference::coeff_row_bools;
 use vault::crypto::ed25519::SigningKey;
 use vault::crypto::{vrf, Hash256};
 use vault::dht::NodeId;
@@ -49,7 +50,8 @@ fn prop_dual_layer_roundtrip_random_params() {
     }
 }
 
-/// Coefficient rows: deterministic, non-zero, and k-length for random inputs.
+/// Coefficient rows: deterministic, non-zero, properly masked packed
+/// words, and bit-identical to the kept bool reference derivation.
 #[test]
 fn prop_coeff_rows_well_formed() {
     let mut rng = Rng::new(0xCD);
@@ -60,9 +62,16 @@ fn prop_coeff_rows_well_formed() {
         let k = rng.range(1, 130);
         let idx = rng.next_u64();
         let row = coeff_row(&chash, idx, k);
-        assert_eq!(row.len(), k);
-        assert!(row.iter().any(|&b| b), "rows never all-zero");
+        assert_eq!(row.len(), row_words(k));
+        assert!(row.iter().any(|&w| w != 0), "rows never all-zero");
         assert_eq!(row, coeff_row(&chash, idx, k));
+        let bits = coeff_row_bools(&chash, idx, k);
+        for (i, &b) in bits.iter().enumerate() {
+            assert_eq!(row_bit(&row, i), b, "k={k} bit {i}");
+        }
+        for i in k..row.len() * 64 {
+            assert!(!row_bit(&row, i), "k={k} stray bit {i}");
+        }
     }
 }
 
