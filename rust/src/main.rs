@@ -7,6 +7,9 @@
 //! * `bench-codec`  — coding/hashing data-plane kernel bench with
 //!                    before/after reference rows and allocation counts;
 //!                    emits `BENCH_codec.json`.
+//! * `bench-maint`  — maintenance-plane bandwidth + repair-convergence
+//!                    bench, legacy vs batched heartbeats in the same
+//!                    process; emits `BENCH_maint.json`.
 //! * `tcp-demo`     — bring up a real-TCP localhost cluster and do one
 //!                    store/query round trip.
 //! * `sim`          — §6.1 durability simulations (fig4|fig5|fig6).
@@ -38,18 +41,21 @@ fn main() {
         "cluster" => cmd_cluster(&args),
         "bench-ops" => cmd_bench_ops(&args),
         "bench-codec" => cmd_bench_codec(&args),
+        "bench-maint" => cmd_bench_maint(&args),
         "tcp-demo" => cmd_tcp_demo(&args),
         "sim" => cmd_sim(&args),
         "analyze" => cmd_analyze(&args),
         "artifacts" => cmd_artifacts(&args),
         _ => {
             eprintln!(
-                "usage: vault <cluster|bench-ops|bench-codec|tcp-demo|sim|analyze|artifacts> [--flags]\n\
+                "usage: vault <cluster|bench-ops|bench-codec|bench-maint|tcp-demo|sim|analyze|artifacts> [--flags]\n\
                  \n\
                  cluster     --peers 128 --objects 4 --size 262144 [--byzantine 0.1] [--churn 4]\n\
                  bench-ops   --peers 64 --ops 300 --inflight 32 --size 32768 [--sharded 0]\n\
                  \x20            [--seed 7] [--out BENCH_ops.json]\n\
                  bench-codec [--smoke] [--seed 7] [--out BENCH_codec.json]\n\
+                 bench-maint [--smoke] [--peers 256] [--chunks 64] [--r 16] [--minutes 5]\n\
+                 \x20            [--seed 7] [--out BENCH_maint.json]\n\
                  tcp-demo    --peers 8 --size 65536\n\
                  sim         --fig 4|5|6 [--nodes 100000] [--objects 1000] [--churn 2.0] [--years 1]\n\
                  analyze     [--n 80] [--k 32] [--churn-q 0.01] [--evict 0] [--steps 512]\n\
@@ -349,6 +355,197 @@ fn cmd_bench_codec(args: &Args) {
     println!(
         "speedups: addmul {addmul_speedup:.2}x, inner decode {inner_decode_speedup:.2}x, \
          outer decode {outer_decode_speedup:.2}x ({wall_secs:.1}s wall)"
+    );
+}
+
+/// One maintenance-plane trial: a pre-seeded SimNet cluster running
+/// heartbeats for a measurement window (steady-state bandwidth), then a
+/// crash burst driven to repair convergence.
+struct MaintTrial {
+    hb_bytes_per_node_min: f64,
+    hb_msgs_per_node_min: f64,
+    repair_bytes: u64,
+    converge_ms: u64,
+    converged: bool,
+}
+
+fn run_maint_trial(
+    peers: usize,
+    chunks_per_node: usize,
+    r: usize,
+    seed: u64,
+    minutes: u64,
+    batched: bool,
+) -> MaintTrial {
+    use vault::codec::rateless::InnerEncoder;
+    use vault::crypto::vrf;
+    use vault::dht::PeerInfo;
+    use vault::net::simnet::{SimNet, SimOpts};
+    use vault::proto::{ClaimVerify, VaultConfig};
+
+    let k_inner = 4usize.min(r);
+    let cfg = VaultConfig {
+        k_inner,
+        r_inner: r,
+        k_outer: 2,
+        n_outer: 3,
+        n_nodes: peers,
+        candidates: (3 * r).min(peers),
+        // VRF verification is the documented large-cluster measurement
+        // knob (proto::ClaimVerify); this bench measures bandwidth and
+        // convergence, not crypto throughput.
+        claim_verify: ClaimVerify::Never,
+        batched_maint: batched,
+        heartbeat_ms: 10_000,
+        suspicion_ms: 30_000,
+        tick_ms: 10_000,
+        ..Default::default()
+    };
+    let opts = SimOpts { seed, ..Default::default() };
+    let mut net = SimNet::new(cfg, peers, opts);
+
+    // Pre-seed `peers · chunks_per_node / r` chunk groups with real
+    // (hash-verifiable) chunk content so repair joins can reconstruct.
+    let n_groups = (peers * chunks_per_node / r).max(1);
+    let mut rng = Rng::new(seed ^ 0x4A17);
+    let mut chashes = Vec::with_capacity(n_groups);
+    for _ in 0..n_groups {
+        let mut chunk = vec![0u8; 256];
+        rng.fill_bytes(&mut chunk);
+        let chash = Hash256::of(&chunk);
+        chashes.push(chash);
+        let member_idx = rng.sample_indices(peers, r);
+        let infos: Vec<PeerInfo> = member_idx.iter().map(|&i| net.peer(i).info).collect();
+        let enc = InnerEncoder::new(chash, &chunk, k_inner);
+        for (slot, &i) in member_idx.iter().enumerate() {
+            let frag = enc.fragment(slot as u64);
+            let proof = vrf::prove(&net.peer(i).key, b"bench-maint").1;
+            let others: Vec<PeerInfo> =
+                infos.iter().filter(|p| p.id != net.peer(i).info.id).copied().collect();
+            net.peer_mut(i).force_store(0, chash, frag, proof, others);
+        }
+    }
+
+    // Warm up past every node's first (jittered) tick so the batched
+    // plane's one-time full-list announcements sit outside the window.
+    net.run_for(25_000);
+    let before = net.maint_stats();
+    let t0 = net.now_ms();
+    net.run_for(minutes.max(1) * 60_000);
+    let after = net.maint_stats();
+    let span_min = (net.now_ms() - t0) as f64 / 60_000.0;
+    let hb_bytes = after.hb_bytes - before.hb_bytes;
+    let hb_msgs = after.hb_msgs - before.hb_msgs;
+
+    // Crash burst, then drive to repair convergence.
+    let kill_n = (peers / 16).max(1);
+    let mut killed = 0usize;
+    for i in 0..peers {
+        if killed >= kill_n {
+            break;
+        }
+        if net.is_up(i) {
+            net.kill(i);
+            killed += 1;
+        }
+    }
+    let repair_before = net.maint_stats();
+    let repair_payload_before = net.total_repair_traffic();
+    let start = net.now_ms();
+    let deadline = start + 40 * 60_000;
+    let mut converged = false;
+    while net.now_ms() < deadline {
+        net.run_for(10_000);
+        if chashes.iter().all(|c| net.surviving_fragments(c) >= r) {
+            converged = true;
+            break;
+        }
+    }
+    let converge_ms = net.now_ms() - start;
+    let repair_after = net.maint_stats();
+
+    MaintTrial {
+        hb_bytes_per_node_min: hb_bytes as f64 / peers as f64 / span_min.max(1e-9),
+        hb_msgs_per_node_min: hb_msgs as f64 / peers as f64 / span_min.max(1e-9),
+        repair_bytes: (repair_after.repair_bytes - repair_before.repair_bytes)
+            + (net.total_repair_traffic() - repair_payload_before),
+        converge_ms,
+        converged,
+    }
+}
+
+/// Maintenance-plane bandwidth + repair-convergence benchmark (ISSUE
+/// 4): the legacy per-chunk heartbeat plane and the batched per-peer
+/// plane run in the same process on identically seeded clusters, and
+/// the JSON row pair makes the bytes/node/min reduction machine-
+/// diffable across PRs.
+fn cmd_bench_maint(args: &Args) {
+    let smoke = args.bool("smoke");
+    let peers = args.get("peers", if smoke { 32 } else { 256usize });
+    let chunks_per_node = args.get("chunks", if smoke { 8 } else { 64usize });
+    let r = args.get("r", 16usize);
+    let seed = args.get("seed", 7u64);
+    let minutes = args.get("minutes", if smoke { 2 } else { 5u64 });
+    let out = args.str("out", "BENCH_maint.json");
+    let groups = (peers * chunks_per_node / r).max(1);
+    println!(
+        "bench-maint{}: {peers} peers, {chunks_per_node} chunks/node, R={r} \
+         ({groups} groups), {minutes} min window",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let wall = Timer::start();
+    let legacy = run_maint_trial(peers, chunks_per_node, r, seed, minutes, false);
+    println!(
+        "  legacy : {:>12.0} hb B/node/min, {:>8.1} hb msgs/node/min, converge {} ms{}",
+        legacy.hb_bytes_per_node_min,
+        legacy.hb_msgs_per_node_min,
+        legacy.converge_ms,
+        if legacy.converged { "" } else { " (NOT converged)" }
+    );
+    let batched = run_maint_trial(peers, chunks_per_node, r, seed, minutes, true);
+    println!(
+        "  batched: {:>12.0} hb B/node/min, {:>8.1} hb msgs/node/min, converge {} ms{}",
+        batched.hb_bytes_per_node_min,
+        batched.hb_msgs_per_node_min,
+        batched.converge_ms,
+        if batched.converged { "" } else { " (NOT converged)" }
+    );
+    let bytes_reduction = legacy.hb_bytes_per_node_min / batched.hb_bytes_per_node_min.max(1e-9);
+    let msgs_reduction = legacy.hb_msgs_per_node_min / batched.hb_msgs_per_node_min.max(1e-9);
+    let wall_secs = wall.elapsed_s();
+    let json = format!(
+        "{{\n  \"bench\": \"maintenance_plane\",\n  \"smoke\": {smoke},\n  \"seed\": {seed},\n  \
+         \"peers\": {peers},\n  \"chunks_per_node\": {chunks_per_node},\n  \"r_inner\": {r},\n  \
+         \"groups\": {groups},\n  \"measured_minutes\": {minutes},\n  \
+         \"legacy_hb_bytes_per_node_min\": {:.1},\n  \
+         \"legacy_hb_msgs_per_node_min\": {:.2},\n  \
+         \"batched_hb_bytes_per_node_min\": {:.1},\n  \
+         \"batched_hb_msgs_per_node_min\": {:.2},\n  \
+         \"hb_bytes_reduction\": {bytes_reduction:.2},\n  \
+         \"hb_msgs_reduction\": {msgs_reduction:.2},\n  \
+         \"legacy_converge_ms\": {},\n  \"batched_converge_ms\": {},\n  \
+         \"legacy_converged\": {},\n  \"batched_converged\": {},\n  \
+         \"legacy_repair_bytes\": {},\n  \"batched_repair_bytes\": {},\n  \
+         \"wall_secs\": {wall_secs:.3}\n}}\n",
+        legacy.hb_bytes_per_node_min,
+        legacy.hb_msgs_per_node_min,
+        batched.hb_bytes_per_node_min,
+        batched.hb_msgs_per_node_min,
+        legacy.converge_ms,
+        batched.converge_ms,
+        legacy.converged,
+        batched.converged,
+        legacy.repair_bytes,
+        batched.repair_bytes,
+    );
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("failed to write {out}: {e}"),
+    }
+    println!(
+        "maintenance bytes/node/min reduced {bytes_reduction:.1}x, msgs {msgs_reduction:.1}x \
+         ({wall_secs:.1}s wall)"
     );
 }
 

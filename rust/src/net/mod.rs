@@ -17,6 +17,25 @@ pub mod shardnet;
 pub mod simnet;
 pub mod tcp;
 
+use crate::proto::messages::{Msg, Purpose};
+
+/// Bytes to charge against [`crate::proto::MaintStats`] for one send:
+/// exact wire size for the maintenance control planes (heartbeat /
+/// repair — the `bench-maint` reduction claim rests on them), and the
+/// already payload-dominated `approx_size` for join/client traffic
+/// (within header noise of exact for fragment-carrying messages).
+/// The per-tick hot variants (`Heartbeat`, `HeartbeatBatch`) use the
+/// arithmetic `Msg::maint_exact_size` so the drain never serializes;
+/// only the rare resync/repair control messages pay a real encode.
+pub(crate) fn maint_bytes(msg: &Msg, purpose: Purpose, approx: usize) -> u64 {
+    match purpose {
+        Purpose::Heartbeat | Purpose::Repair => msg
+            .maint_exact_size()
+            .unwrap_or_else(|| crate::wire::encoded_len(msg)) as u64,
+        Purpose::Join | Purpose::Client => approx as u64,
+    }
+}
+
 /// The paper's five deployment regions (§6.2).
 pub const REGIONS: [&str; 5] = ["us-west", "ap-southeast", "eu-central", "sa-east", "af-south"];
 

@@ -42,7 +42,7 @@ use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
 use super::simnet::{NetStats, OracleDirectory, SimOpts};
-use super::REGION_LATENCY_MS;
+use super::{maint_bytes, REGION_LATENCY_MS};
 
 /// Where a node lives: shard, slot within the shard, latency region.
 #[derive(Clone, Copy, Debug)]
@@ -134,12 +134,13 @@ impl Shard {
     fn drain(&mut self, now_ms: u64, from_local: usize, out: Outbox, routes: &RouteMap, opts: &SimOpts) {
         let from_info = self.slots[from_local].peer.info;
         let sender_blocked = !self.slots[from_local].up || self.slots[from_local].attacked;
-        for (to, msg) in out.sends {
+        for (to, msg, purpose) in out.sends {
             let size = msg.approx_size();
             {
                 let m = &mut self.slots[from_local].peer.metrics;
                 m.msgs_sent += 1;
                 m.bytes_sent += size as u64;
+                m.maint.record(purpose, maint_bytes(&msg, purpose, size));
             }
             if sender_blocked {
                 self.stats.dropped += 1;
@@ -642,6 +643,16 @@ impl ShardNet {
             .flat_map(|s| s.slots.iter())
             .map(|sl| sl.peer.metrics.repair_traffic_bytes)
             .sum()
+    }
+
+    /// Aggregate per-purpose maintenance bandwidth across all peers
+    /// (sender-side, see [`crate::proto::MaintStats`]).
+    pub fn maint_stats(&self) -> crate::proto::MaintStats {
+        let mut total = crate::proto::MaintStats::default();
+        for sl in self.shards.iter().flatten().flat_map(|s| s.slots.iter()) {
+            total.absorb(&sl.peer.metrics.maint);
+        }
+        total
     }
 
     /// Live peers (by global index) located in `region`.

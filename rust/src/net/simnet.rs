@@ -18,7 +18,7 @@ use crate::proto::peer::VaultPeer;
 use crate::proto::{AppEvent, Directory, Outbox, TimerKind, VaultConfig};
 use crate::util::rng::Rng;
 
-use super::{DEFAULT_BANDWIDTH_BYTES_PER_MS, REGION_LATENCY_MS};
+use super::{maint_bytes, DEFAULT_BANDWIDTH_BYTES_PER_MS, REGION_LATENCY_MS};
 
 #[derive(Clone, Debug)]
 pub struct SimOpts {
@@ -340,10 +340,14 @@ impl SimNet {
     fn drain(&mut self, from_slot: usize, out: Outbox) {
         let from_info = self.slots[from_slot].peer.info;
         let sender_blocked = !self.slots[from_slot].up || self.slots[from_slot].attacked;
-        for (to, msg) in out.sends {
-            self.slots[from_slot].peer.metrics.msgs_sent += 1;
+        for (to, msg, purpose) in out.sends {
             let size = msg.approx_size();
-            self.slots[from_slot].peer.metrics.bytes_sent += size as u64;
+            {
+                let m = &mut self.slots[from_slot].peer.metrics;
+                m.msgs_sent += 1;
+                m.bytes_sent += size as u64;
+                m.maint.record(purpose, maint_bytes(&msg, purpose, size));
+            }
             if sender_blocked {
                 self.stats.dropped += 1;
                 continue;
@@ -482,5 +486,15 @@ impl SimNet {
     /// Aggregate repair traffic across all peers (bytes pulled by joiners).
     pub fn total_repair_traffic(&self) -> u64 {
         self.slots.iter().map(|s| s.peer.metrics.repair_traffic_bytes).sum()
+    }
+
+    /// Aggregate per-purpose maintenance bandwidth across all peers
+    /// (sender-side, see [`crate::proto::MaintStats`]).
+    pub fn maint_stats(&self) -> crate::proto::MaintStats {
+        let mut total = crate::proto::MaintStats::default();
+        for s in &self.slots {
+            total.absorb(&s.peer.metrics.maint);
+        }
+        total
     }
 }

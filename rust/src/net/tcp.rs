@@ -315,9 +315,11 @@ fn flush(
     timer_seq: &mut u64,
 ) {
     let now = out.now_ms;
-    for (to, msg) in out.sends {
+    for (to, msg, purpose) in out.sends {
+        let size = msg.approx_size();
         peer.metrics.msgs_sent += 1;
-        peer.metrics.bytes_sent += msg.approx_size() as u64;
+        peer.metrics.bytes_sent += size as u64;
+        peer.metrics.maint.record(purpose, super::maint_bytes(&msg, purpose, size));
         let Some(&addr) = dir.addrs.get(&to) else { continue };
         let mut pool = conns.lock().unwrap();
         let entry = pool.entry(to);

@@ -22,7 +22,7 @@ use crate::crypto::vrf::VrfProof;
 use crate::crypto::Hash256;
 use crate::dht::{NodeId, PeerInfo};
 
-use super::messages::Msg;
+use super::messages::{Msg, Purpose};
 use super::peer::VaultPeer;
 use super::{AppEvent, Directory, Outbox, TimerKind};
 
@@ -222,9 +222,15 @@ impl VaultPeer {
         if sc.acked.len() >= r_target {
             sc.done = true;
             // Bootstrap the group with the final membership (§4.3.1).
+            // Store-saga traffic, not maintenance: charged to the
+            // client purpose so MaintStats' heartbeat plane stays pure.
             let members: Vec<PeerInfo> = sc.acked.values().copied().collect();
             for m in &members {
-                out.send(m.id, Msg::Members { chash, members: members.clone() });
+                out.send_p(
+                    m.id,
+                    Msg::Members { chash, members: members.clone() },
+                    Purpose::Client,
+                );
             }
             sop.done_chunks += 1;
             if sop.done_chunks == n_chunks {

@@ -6,6 +6,7 @@
 //! [`crate::wire`].
 
 use crate::codec::rateless::Fragment;
+use crate::crypto::sha2::{Digest, Sha256};
 use crate::crypto::vrf::VrfProof;
 use crate::crypto::Hash256;
 use crate::dht::PeerInfo;
@@ -37,6 +38,127 @@ impl Claim {
         v.extend_from_slice(&ts_ms.to_le_bytes());
         v
     }
+}
+
+/// Membership-view delta piggybacked on a batched heartbeat claim.
+///
+/// Deltas are **additions-only**: removal is always a local suspicion
+/// decision on the receiver, so a stale gossiper can never evict a live
+/// member from someone else's view. `count`/`digest` let the receiver
+/// detect that it is *missing* members the sender knows about, which
+/// triggers the full-list resync fallback ([`Msg::GetMembers`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemberDelta {
+    /// Sender's current member count for this group.
+    pub count: u32,
+    /// Fold-digest over the sender's sorted member-id set
+    /// (see `proto::peer::members_digest`).
+    pub digest: u64,
+    /// When set, `added` carries the sender's full member list (first
+    /// batch after (re)install or an explicit resync).
+    pub full: bool,
+    /// Members added to the sender's view since its last batch.
+    pub added: Vec<PeerInfo>,
+}
+
+crate::wire_struct!(MemberDelta { count, digest, full, added });
+
+impl MemberDelta {
+    /// Unchanged-view delta (the steady-state, near-zero-byte case).
+    pub fn unchanged(count: u32, digest: u64) -> Self {
+        MemberDelta { count, digest, full: false, added: Vec::new() }
+    }
+}
+
+/// One per-chunk persistence claim inside a [`HeartbeatBatch`].
+/// Compared to the legacy [`Claim`], the sender key / timestamp /
+/// signature are hoisted to the batch level and the full member list is
+/// replaced by a [`MemberDelta`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchClaim {
+    pub chash: Hash256,
+    pub index: u64,
+    pub proof: VrfProof,
+    pub delta: MemberDelta,
+}
+
+crate::wire_struct!(BatchClaim { chash, index, proof, delta });
+
+/// Batched per-peer maintenance heartbeat: every persistence claim a
+/// node owes one neighbor in a tick travels in a single message, with
+/// **one** Ed25519 signature over the batch digest instead of one per
+/// claim. This turns per-node maintenance traffic from
+/// O(chunks · R · |member list|) into O(neighbors + chunks · R) bytes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HeartbeatBatch {
+    pub pk: [u8; 32],
+    /// Sender's latency region (the legacy path gossiped this inside
+    /// the member list; the batch carries it once).
+    pub region: u8,
+    pub ts_ms: u64,
+    /// Signature over [`Self::signing_bytes`] (batch digest + ts).
+    pub sig: [u8; 64],
+    pub claims: Vec<BatchClaim>,
+}
+
+crate::wire_struct!(HeartbeatBatch { pk, region, ts_ms, sig, claims });
+
+impl HeartbeatBatch {
+    /// Freshness-bound batch digest: a SHA-256 over the claim count
+    /// and every claim's `(chash, index)`, VRF proof, and full
+    /// membership-delta content (count, digest, full flag, added-list
+    /// length, and each added member's complete `PeerInfo` — id, pk,
+    /// region), prefixed
+    /// with a domain tag, the batch timestamp, and the sender's
+    /// region. Signing this binds the whole batch — including the
+    /// gossiped peer identities a receiver will install into its group
+    /// views — with a single Ed25519 operation, so a relay cannot
+    /// splice, reframe, or rewrite any field without invalidating the
+    /// signature.
+    pub fn signing_bytes(ts_ms: u64, region: u8, claims: &[BatchClaim]) -> Vec<u8> {
+        let mut h = Sha256::new();
+        h.update((claims.len() as u64).to_le_bytes());
+        for c in claims {
+            h.update(c.chash.0);
+            h.update(c.index.to_le_bytes());
+            h.update(c.proof.gamma);
+            h.update(c.proof.c);
+            h.update(c.proof.s);
+            h.update(c.delta.count.to_le_bytes());
+            h.update(c.delta.digest.to_le_bytes());
+            h.update([c.delta.full as u8]);
+            h.update((c.delta.added.len() as u64).to_le_bytes());
+            for m in &c.delta.added {
+                h.update(m.id.0 .0);
+                h.update(m.pk);
+                h.update([m.region]);
+            }
+        }
+        let digest = h.finalize();
+        let mut v = Vec::with_capacity(17 + 8 + 1 + 32);
+        v.extend_from_slice(b"vault-hb-batch-v1");
+        v.extend_from_slice(&ts_ms.to_le_bytes());
+        v.push(region);
+        v.extend_from_slice(&digest);
+        v
+    }
+}
+
+/// Why a message is being sent — the sender-side traffic class used by
+/// the [`super::MaintStats`] bandwidth-accounting layer. Replies whose
+/// purpose the responder cannot know (e.g. `FragReply` serving either a
+/// client QUERY or a repair join) are classified by their dominant use;
+/// see DESIGN.md §Maintenance Plane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Purpose {
+    /// Heartbeats, membership gossip, and view resyncs.
+    Heartbeat,
+    /// Repair coordination control traffic.
+    Repair,
+    /// Repair-join reconstruction pulls (fragment/chunk payloads).
+    Join,
+    /// Client STORE/QUERY saga traffic.
+    Client,
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -77,8 +199,18 @@ pub enum Msg {
     GetChunk { op: u64, chash: Hash256, index: u64 },
     ChunkReply { op: u64, chash: Hash256, frag: Option<Fragment> },
 
-    /// Group heartbeat.
+    /// Group heartbeat (legacy per-chunk path, kept behind
+    /// `VaultConfig::batched_maint = false`).
     Heartbeat(Claim),
+
+    /// Batched per-peer maintenance heartbeat (the default plane).
+    HeartbeatBatch(HeartbeatBatch),
+
+    /// Full-list resync fallback: ask a group member for its complete
+    /// membership view of `chash` (sent when a received
+    /// [`MemberDelta`] indicates the local view is missing members).
+    /// Answered with [`Msg::Members`].
+    GetMembers { chash: Hash256 },
 
     /// Ask the receiver to become a new group member storing fragment
     /// `index` (it will pull chunk/fragments from `members`).
@@ -118,6 +250,73 @@ impl Msg {
             Msg::FindNodeReply { .. } => 13,
             Msg::Ping { .. } => 14,
             Msg::Pong { .. } => 15,
+            Msg::HeartbeatBatch(_) => 16,
+            Msg::GetMembers { .. } => 17,
+        }
+    }
+
+    /// Exact wire size, computed arithmetically, for the per-tick
+    /// maintenance hot-path variants — the wire format is fixed, so
+    /// member/claim counts determine it without serializing. `None`
+    /// for every other variant (their accounting either uses
+    /// `approx_size` or falls back to a real encode; they are rare).
+    /// `tests/prop_wire.rs` asserts agreement with a real encode.
+    pub fn maint_exact_size(&self) -> Option<usize> {
+        fn varint_len(mut v: u64) -> usize {
+            let mut n = 1;
+            while v >= 0x80 {
+                v >>= 7;
+                n += 1;
+            }
+            n
+        }
+        const PEER_INFO: usize = 32 + 32 + 1; // id + pk + region
+        const PROOF: usize = 80;
+        match self {
+            // tag + chash + index + pk + proof + ts + sig + members
+            Msg::Heartbeat(c) => Some(
+                1 + 32
+                    + 8
+                    + 32
+                    + PROOF
+                    + 8
+                    + 64
+                    + varint_len(c.members.len() as u64)
+                    + PEER_INFO * c.members.len(),
+            ),
+            // tag + pk + region + ts + sig + claims
+            Msg::HeartbeatBatch(b) => {
+                let mut n = 1 + 32 + 1 + 8 + 64 + varint_len(b.claims.len() as u64);
+                for cl in &b.claims {
+                    // chash + index + proof + delta(count+digest+full+added)
+                    n += 32
+                        + 8
+                        + PROOF
+                        + 4
+                        + 8
+                        + 1
+                        + varint_len(cl.delta.added.len() as u64)
+                        + PEER_INFO * cl.delta.added.len();
+                }
+                Some(n)
+            }
+            _ => None,
+        }
+    }
+
+    /// Default traffic class by message kind. Variants whose purpose is
+    /// context-dependent at the sender (`GetProofs`, `GetFrag`) default
+    /// to their client-saga use and are overridden at the repair/join
+    /// call sites via [`super::Outbox::send_p`].
+    pub fn default_purpose(&self) -> Purpose {
+        match self {
+            Msg::Heartbeat(_)
+            | Msg::HeartbeatBatch(_)
+            | Msg::GetMembers { .. }
+            | Msg::Members { .. } => Purpose::Heartbeat,
+            Msg::RepairReq { .. } | Msg::RepairAck { .. } => Purpose::Repair,
+            Msg::GetChunk { .. } | Msg::ChunkReply { .. } => Purpose::Join,
+            _ => Purpose::Client,
         }
     }
 
@@ -139,6 +338,8 @@ impl Msg {
             Msg::FindNodeReply { .. } => "FindNodeReply",
             Msg::Ping { .. } => "Ping",
             Msg::Pong { .. } => "Pong",
+            Msg::HeartbeatBatch(_) => "HeartbeatBatch",
+            Msg::GetMembers { .. } => "GetMembers",
         }
     }
 
@@ -163,6 +364,13 @@ impl Msg {
                 HDR + frag.as_ref().map(|f| f.payload.len() + 16).unwrap_or(1)
             }
             Msg::Heartbeat(c) => HDR + 80 + 64 + 16 + 65 * c.members.len(),
+            Msg::HeartbeatBatch(b) => {
+                // pk + region + ts + sig + per-claim (chash + index +
+                // proof + delta header) + delta additions.
+                let added: usize = b.claims.iter().map(|c| c.delta.added.len()).sum();
+                HDR + 64 + 64 + b.claims.len() * (32 + 8 + 80 + 15) + 65 * added
+            }
+            Msg::GetMembers { .. } => HDR,
             Msg::RepairReq { members, .. } => HDR + 16 + 65 * members.len(),
             Msg::RepairAck { .. } => HDR + 10,
             Msg::FindNode { .. } => HDR,
@@ -247,6 +455,8 @@ impl Encode for Msg {
                 closer.encode(w);
             }
             Msg::Ping { op } | Msg::Pong { op } => w.u64(*op),
+            Msg::HeartbeatBatch(b) => b.encode(w),
+            Msg::GetMembers { chash } => chash.encode(w),
         }
     }
 }
@@ -314,6 +524,8 @@ impl Decode for Msg {
             },
             14 => Msg::Ping { op: r.u64()? },
             15 => Msg::Pong { op: r.u64()? },
+            16 => Msg::HeartbeatBatch(HeartbeatBatch::decode(r)?),
+            17 => Msg::GetMembers { chash: Hash256::decode(r)? },
             t => return Err(WireError::BadTag(t as u32)),
         })
     }
@@ -346,8 +558,35 @@ mod tests {
             sig: [9; 64],
             members: members.clone(),
         };
+        let batch = HeartbeatBatch {
+            pk: sk.public,
+            region: 2,
+            ts_ms: 456,
+            sig: [3; 64],
+            claims: vec![
+                BatchClaim {
+                    chash,
+                    index: 3,
+                    proof,
+                    delta: MemberDelta {
+                        count: 2,
+                        digest: 0xABCD,
+                        full: true,
+                        added: members.clone(),
+                    },
+                },
+                BatchClaim {
+                    chash: Hash256::of(b"chunk2"),
+                    index: 7,
+                    proof,
+                    delta: MemberDelta::unchanged(2, 0xABCD),
+                },
+            ],
+        };
         vec![
             Msg::GetProofs { op: 1, chash, indices: vec![0, 5, 9] },
+            Msg::HeartbeatBatch(batch),
+            Msg::GetMembers { chash },
             Msg::ProofsReply { op: 1, chash, pk: sk.public, proofs: vec![(5, proof)] },
             Msg::StoreFrag { op: 2, chash, frag: frag.clone(), members: members.clone(), expires_ms: 0 },
             Msg::StoreFragAck { op: 2, chash, index: 3, ok: true },
@@ -387,7 +626,40 @@ mod tests {
         let mut tags: Vec<u8> = msgs.iter().map(|m| m.tag()).collect();
         tags.sort_unstable();
         tags.dedup();
-        assert_eq!(tags.len(), 16);
+        assert_eq!(tags.len(), 18);
+    }
+
+    #[test]
+    fn batch_signing_bytes_bind_claims_ts_region_and_infos() {
+        let msgs = all_messages();
+        let Some(Msg::HeartbeatBatch(b)) =
+            msgs.iter().find(|m| matches!(m, Msg::HeartbeatBatch(_)))
+        else {
+            panic!("batch sample missing")
+        };
+        let base = HeartbeatBatch::signing_bytes(b.ts_ms, b.region, &b.claims);
+        assert_ne!(base, HeartbeatBatch::signing_bytes(b.ts_ms + 1, b.region, &b.claims));
+        assert_ne!(base, HeartbeatBatch::signing_bytes(b.ts_ms, b.region ^ 1, &b.claims));
+        let mut tampered = b.claims.clone();
+        tampered[0].index ^= 1;
+        assert_ne!(base, HeartbeatBatch::signing_bytes(b.ts_ms, b.region, &tampered));
+        // A relay flipping a claim's VRF proof must invalidate the
+        // batch (otherwise it could suppress per-chunk liveness by
+        // making verification fail inside a validly-signed message).
+        let mut tampered = b.claims.clone();
+        tampered[0].proof.gamma[0] ^= 1;
+        assert_ne!(base, HeartbeatBatch::signing_bytes(b.ts_ms, b.region, &tampered));
+        let mut tampered = b.claims.clone();
+        tampered[0].delta.added.pop();
+        assert_ne!(base, HeartbeatBatch::signing_bytes(b.ts_ms, b.region, &tampered));
+        // A gossiped member's pk/region is installed into receiver
+        // views, so it must be signature-bound too.
+        let mut tampered = b.claims.clone();
+        tampered[0].delta.added[0].region ^= 1;
+        assert_ne!(base, HeartbeatBatch::signing_bytes(b.ts_ms, b.region, &tampered));
+        let mut tampered = b.claims.clone();
+        tampered[0].delta.added[0].pk[0] ^= 1;
+        assert_ne!(base, HeartbeatBatch::signing_bytes(b.ts_ms, b.region, &tampered));
     }
 
     #[test]

@@ -18,7 +18,7 @@ pub mod stake;
 use crate::codec::ObjectId;
 use crate::crypto::Hash256;
 use crate::dht::{NodeId, PeerInfo};
-use messages::Msg;
+use messages::{Msg, Purpose};
 
 /// Protocol configuration (paper defaults from §6).
 #[derive(Clone, Debug)]
@@ -54,6 +54,13 @@ pub struct VaultConfig {
     pub repair_probe: usize,
     /// Heartbeat-claim VRF verification policy.
     pub claim_verify: ClaimVerify,
+    /// Batched maintenance plane (ISSUE 4): aggregate all per-chunk
+    /// persistence claims destined for the same neighbor into one
+    /// [`messages::HeartbeatBatch`] per tick, with member-list deltas
+    /// instead of full lists. `false` restores the legacy per-chunk
+    /// `Msg::Heartbeat` schedule (and with it the pre-batching scenario
+    /// fingerprints — see DESIGN.md §Maintenance Plane).
+    pub batched_maint: bool,
     /// Byzantine behaviour (Fig. 6): participate in every protocol but
     /// silently drop stored fragment payloads.
     pub byzantine: bool,
@@ -91,6 +98,7 @@ impl Default for VaultConfig {
             fetch_fanout: crate::params::K_INNER + 8,
             repair_probe: 4,
             claim_verify: ClaimVerify::FirstTime,
+            batched_maint: true,
             byzantine: false,
         }
     }
@@ -118,10 +126,12 @@ pub enum AppEvent {
 }
 
 /// Side-effect collector passed into every state-machine entry point.
+/// Every send carries a [`Purpose`] traffic class so the transports can
+/// account maintenance bandwidth per plane (see [`MaintStats`]).
 #[derive(Debug, Default)]
 pub struct Outbox {
     pub now_ms: u64,
-    pub sends: Vec<(NodeId, Msg)>,
+    pub sends: Vec<(NodeId, Msg, Purpose)>,
     pub timers: Vec<(u64, TimerKind)>,
     pub app: Vec<AppEvent>,
 }
@@ -130,8 +140,16 @@ impl Outbox {
     pub fn at(now_ms: u64) -> Self {
         Outbox { now_ms, ..Default::default() }
     }
+    /// Send with the message kind's default traffic class.
     pub fn send(&mut self, to: NodeId, msg: Msg) {
-        self.sends.push((to, msg));
+        let p = msg.default_purpose();
+        self.sends.push((to, msg, p));
+    }
+    /// Send with an explicit traffic class — used where the kind alone
+    /// is ambiguous (`GetProofs`/`GetFrag` serve both client sagas and
+    /// the repair path).
+    pub fn send_p(&mut self, to: NodeId, msg: Msg, purpose: Purpose) {
+        self.sends.push((to, msg, purpose));
     }
     pub fn timer(&mut self, delay_ms: u64, kind: TimerKind) {
         self.timers.push((delay_ms, kind));
@@ -151,6 +169,57 @@ pub trait Directory {
     fn n_nodes(&self) -> usize;
 }
 
+/// Per-purpose bandwidth accounting (sender side), maintained by the
+/// transports as they drain [`Outbox`]es. Heartbeat/repair control
+/// messages are accounted with exact [`crate::wire::encoded_len`]
+/// bytes (the `bench-maint` reduction claim rests on them); the
+/// payload-dominated join/client classes use `Msg::approx_size`, which
+/// is within header noise of exact for fragment-carrying messages.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MaintStats {
+    pub hb_msgs: u64,
+    pub hb_bytes: u64,
+    pub repair_msgs: u64,
+    pub repair_bytes: u64,
+    pub join_msgs: u64,
+    pub join_bytes: u64,
+    pub client_msgs: u64,
+    pub client_bytes: u64,
+}
+
+impl MaintStats {
+    pub fn record(&mut self, purpose: Purpose, bytes: u64) {
+        let (m, b) = match purpose {
+            Purpose::Heartbeat => (&mut self.hb_msgs, &mut self.hb_bytes),
+            Purpose::Repair => (&mut self.repair_msgs, &mut self.repair_bytes),
+            Purpose::Join => (&mut self.join_msgs, &mut self.join_bytes),
+            Purpose::Client => (&mut self.client_msgs, &mut self.client_bytes),
+        };
+        *m += 1;
+        *b += bytes;
+    }
+
+    /// Fold another node's counters in (cluster-wide aggregation).
+    pub fn absorb(&mut self, other: &MaintStats) {
+        self.hb_msgs += other.hb_msgs;
+        self.hb_bytes += other.hb_bytes;
+        self.repair_msgs += other.repair_msgs;
+        self.repair_bytes += other.repair_bytes;
+        self.join_msgs += other.join_msgs;
+        self.join_bytes += other.join_bytes;
+        self.client_msgs += other.client_msgs;
+        self.client_bytes += other.client_bytes;
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.hb_bytes + self.repair_bytes + self.join_bytes + self.client_bytes
+    }
+
+    pub fn total_msgs(&self) -> u64 {
+        self.hb_msgs + self.repair_msgs + self.join_msgs + self.client_msgs
+    }
+}
+
 /// Protocol counters (per peer).
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -166,7 +235,15 @@ pub struct Metrics {
     pub vrf_verifies: u64,
     pub claims_sent: u64,
     pub claims_received: u64,
+    /// Batched-plane message counts (one batch carries many claims).
+    pub batches_sent: u64,
+    pub batches_received: u64,
+    /// Full-list view resyncs requested / served (divergence fallback).
+    pub resyncs_requested: u64,
+    pub resyncs_served: u64,
     pub fragments_stored: u64,
     pub fragments_served: u64,
     pub chunk_cache_hits: u64,
+    /// Sender-side per-purpose bandwidth (filled by the transports).
+    pub maint: MaintStats,
 }

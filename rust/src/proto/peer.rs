@@ -8,6 +8,7 @@
 // building outboxes, so iteration order must be a pure function of
 // history (see util::detmap).
 use crate::util::detmap::{DetHashMap as HashMap, DetHashSet as HashSet};
+use std::collections::hash_map::Entry;
 
 use crate::codec::rateless::{Fragment, InnerDecoder, InnerEncoder};
 use crate::crypto::ed25519::{self, SigningKey};
@@ -16,10 +17,53 @@ use crate::crypto::Hash256;
 use crate::dht::{NodeId, PeerInfo};
 use crate::util::rng::Rng;
 
+use crate::util::rng::fold64;
+
 use super::client::{QueryOp, StoreOp};
-use super::messages::{Claim, Msg};
+use super::messages::{BatchClaim, Claim, HeartbeatBatch, MemberDelta, Msg, Purpose};
 use super::selection;
 use super::{AppEvent, ClaimVerify, Directory, Metrics, Outbox, TimerKind, VaultConfig};
+
+/// Own-proof cache bound and per-overflow eviction slice. Evicting a
+/// bounded slice (instead of wiping all 2¹⁶ entries) keeps the VRF
+/// recompute cost at the cap boundary O(evicted), not O(cache) — a
+/// full wipe caused a thundering recompute spike mid-scenario.
+const PROOF_CACHE_CAP: usize = 1 << 16;
+const PROOF_CACHE_EVICT: usize = 1 << 12;
+
+/// Verified-claims dedup cache bound, same bounded-eviction scheme.
+const VERIFIED_CLAIMS_CAP: usize = 1 << 18;
+const VERIFIED_CLAIMS_EVICT: usize = 1 << 14;
+
+/// Hostile-input bound on claims processed per heartbeat batch.
+const MAX_BATCH_CLAIMS: usize = 4096;
+
+/// Full member-list delta for a group, resetting its delta baseline —
+/// shared by the periodic batched tick (first batch after install) and
+/// the immediate repair-join announcement.
+fn full_delta_and_rebaseline(cs: &mut ChunkStore) -> MemberDelta {
+    let digest = cached_digest(cs);
+    let added: Vec<PeerInfo> = cs.members.values().map(|m| m.info).collect();
+    let delta = MemberDelta { count: cs.members.len() as u32, digest, full: true, added };
+    cs.announced = cs.members.keys().copied().collect();
+    delta
+}
+
+/// Order-independent digest of a member-id set (ids are sorted before
+/// folding, so the digest is a pure function of the set). Senders stamp
+/// it on every [`MemberDelta`]; receivers compare it against their own
+/// view to detect divergence.
+pub fn members_digest<'a>(ids: impl Iterator<Item = &'a NodeId>) -> u64 {
+    let mut v: Vec<u64> = ids
+        .map(|id| u64::from_le_bytes(id.0 .0[..8].try_into().unwrap()))
+        .collect();
+    v.sort_unstable();
+    let mut acc = 0x6D65_6D62; // "memb"
+    for x in v {
+        acc = fold64(acc, x);
+    }
+    acc
+}
 
 /// Per-member liveness view.
 #[derive(Clone, Copy, Debug)]
@@ -57,6 +101,42 @@ pub struct ChunkStore {
     pub cache_expires_ms: u64,
     /// Byzantine behaviour: metadata kept, payload silently dropped.
     pub payload_dropped: bool,
+    /// Member ids included in the last batched-heartbeat delta baseline
+    /// (empty ⇒ the next batch sends the full list). Unused in the
+    /// legacy per-chunk heartbeat mode.
+    pub announced: HashSet<NodeId>,
+    /// Lazily cached [`members_digest`] of the member-id set (`None` ⇒
+    /// recompute). Invalidated wherever the set changes, so the
+    /// steady-state per-claim divergence check is O(1) instead of an
+    /// alloc+sort per received claim.
+    pub view_digest: Option<u64>,
+}
+
+impl ChunkStore {
+    /// All member-set mutations go through here: invalidates the cached
+    /// view digest when the set's size changes. (Every mutator in this
+    /// module only inserts or only removes per call, so a size check
+    /// captures set change exactly — a new mutation path gets the
+    /// invalidation for free by using this helper.)
+    fn mutate_members<R>(&mut self, f: impl FnOnce(&mut HashMap<NodeId, Member>) -> R) -> R {
+        let before = self.members.len();
+        let r = f(&mut self.members);
+        if self.members.len() != before {
+            self.view_digest = None;
+        }
+        r
+    }
+}
+
+/// Cached member-set digest for a group (see [`members_digest`]):
+/// recomputed only when the member set changed since the last use.
+fn cached_digest(cs: &mut ChunkStore) -> u64 {
+    if let Some(d) = cs.view_digest {
+        return d;
+    }
+    let d = members_digest(cs.members.keys());
+    cs.view_digest = Some(d);
+    d
 }
 
 /// State while this node reconstructs a chunk to join a group (§4.3.4).
@@ -191,8 +271,14 @@ impl VaultPeer {
         );
         self.metrics.vrf_proofs += 1;
         // Bound the cache; entries are tiny but chunks can be many.
-        if self.proof_cache.len() > 1 << 16 {
-            self.proof_cache.clear();
+        // Evict a bounded slice (deterministic DetHashMap iteration
+        // order) instead of wiping everything — see PROOF_CACHE_EVICT.
+        if self.proof_cache.len() >= PROOF_CACHE_CAP {
+            let victims: Vec<(Hash256, u64)> =
+                self.proof_cache.keys().take(PROOF_CACHE_EVICT).copied().collect();
+            for k in &victims {
+                self.proof_cache.remove(k);
+            }
         }
         self.proof_cache.insert((*chash, index), p);
         p
@@ -225,7 +311,9 @@ impl VaultPeer {
             Msg::StoreFragAck { op, chash, index, ok } => {
                 self.handle_store_ack(dir, out, from, op, chash, index, ok)
             }
-            Msg::Members { chash, members } => self.merge_members(out.now_ms, &chash, &members),
+            Msg::Members { chash, members } => {
+                self.handle_members(out.now_ms, from, chash, members)
+            }
             Msg::GetFrag { op, chash } => self.handle_get_frag(out, from, op, chash),
             Msg::FragReply { op, chash, frag } => self.handle_frag_reply(dir, out, from, op, chash, frag),
             Msg::GetChunk { op, chash, index } => {
@@ -233,6 +321,8 @@ impl VaultPeer {
             }
             Msg::ChunkReply { op, chash, frag } => self.handle_chunk_reply(out, from, op, chash, frag),
             Msg::Heartbeat(claim) => self.handle_claim(out, from, claim),
+            Msg::HeartbeatBatch(batch) => self.handle_heartbeat_batch(out, from, batch),
+            Msg::GetMembers { chash } => self.handle_get_members(out, from, chash),
             Msg::RepairReq { op, chash, index, members, expires_ms } => {
                 self.handle_repair_req(out, from, op, chash, index, members, expires_ms)
             }
@@ -313,6 +403,8 @@ impl VaultPeer {
             cached_chunk: None,
             cache_expires_ms: 0,
             payload_dropped: false,
+            announced: HashSet::default(),
+            view_digest: None,
         };
         if self.cfg.byzantine {
             // Fig. 6 adversary: "participate correctly in all VAULT
@@ -373,9 +465,13 @@ impl VaultPeer {
         if claimed_id != from {
             return; // sender must speak for its own key
         }
-        // Freshness: reject stale or far-future timestamps.
+        // Freshness: reject stale or far-future timestamps (saturating:
+        // a forged ts_ms near u64::MAX must be discarded, not panic
+        // debug builds with an add overflow).
         let now = out.now_ms;
-        if claim.ts_ms + self.cfg.suspicion_ms < now || claim.ts_ms > now + self.cfg.suspicion_ms {
+        if claim.ts_ms.saturating_add(self.cfg.suspicion_ms) < now
+            || claim.ts_ms > now.saturating_add(self.cfg.suspicion_ms)
+        {
             return;
         }
         let _ = cs;
@@ -397,35 +493,84 @@ impl VaultPeer {
             ) {
                 return;
             }
-            if self.verified_claims.len() > 1 << 18 {
-                self.verified_claims.clear();
-            }
-            self.verified_claims.insert(key);
+            self.remember_verified(key);
         }
         let region = claim.members.iter().find(|m| m.id == from).map(|m| m.region).unwrap_or(0);
         let cs = self.store.get_mut(&claim.chash).unwrap();
-        cs.members
-            .entry(from)
-            .and_modify(|m| m.last_seen_ms = now)
-            .or_insert(Member {
+        cs.mutate_members(|view| {
+            view.entry(from).and_modify(|m| m.last_seen_ms = now).or_insert(Member {
                 info: PeerInfo { id: from, pk: claim.pk, region },
                 last_seen_ms: now,
             });
+        });
         // Merge piggybacked membership (gossip): learn new members
         // optimistically; suspicion weeds out the dead.
         let members = claim.members;
         self.merge_members(now, &claim.chash, &members);
     }
 
+    /// Ingest a full membership list (`Msg::Members`): the store-saga
+    /// bootstrap broadcast (§4.3.1, sent by the storing client while
+    /// the local view is still below R) or a view-resync reply from a
+    /// fellow group member. Anyone else is rejected — an arbitrary
+    /// non-member must not be able to stuff a healthy group's view
+    /// with phantom "alive" members (which would suppress
+    /// `check_repair`) or rewrite known members' `info`.
+    fn handle_members(&mut self, now_ms: u64, from: NodeId, chash: Hash256, members: Vec<PeerInfo>) {
+        let Some(cs) = self.store.get(&chash) else { return };
+        if !cs.members.contains_key(&from) && cs.members.len() >= self.cfg.r_inner {
+            return;
+        }
+        self.merge_members(now_ms, &chash, &members);
+    }
+
+    /// Merge a gossiped membership list into the group view: insert
+    /// unknown members (optimistically alive as of `now_ms`; suspicion
+    /// weeds out the dead), and refresh the `info` (pk/region) of known
+    /// members **without touching their `last_seen_ms`** — liveness is
+    /// only ever advanced by a claim from the member itself, so a
+    /// stale-view gossiper can never resurrect a suspected member.
+    ///
+    /// Every accepted entry must carry a valid id↔pk binding
+    /// (`NodeId::from_pk(pk) == id`), so gossip can neither insert
+    /// phantom identities nor poison a known member's stored pk/region.
+    /// The hash runs only for new members or changed infos — the
+    /// steady-state (identical info) path stays hash-free.
     pub(super) fn merge_members(&mut self, now_ms: u64, chash: &Hash256, members: &[PeerInfo]) {
         let Some(cs) = self.store.get_mut(chash) else { return };
-        for m in members {
-            if m.id == cs.members.get(&m.id).map(|e| e.info.id).unwrap_or(m.id) {
-                cs.members
-                    .entry(m.id)
-                    .or_insert(Member { info: *m, last_seen_ms: now_ms });
+        cs.mutate_members(|view| {
+            for m in members {
+                match view.entry(m.id) {
+                    Entry::Occupied(mut e) => {
+                        let cur = &mut e.get_mut().info;
+                        if (cur.pk != m.pk || cur.region != m.region)
+                            && NodeId::from_pk(&m.pk) == m.id
+                        {
+                            *cur = *m;
+                        }
+                    }
+                    Entry::Vacant(v) => {
+                        if NodeId::from_pk(&m.pk) == m.id {
+                            v.insert(Member { info: *m, last_seen_ms: now_ms });
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    /// Record a claim as verified, evicting a bounded slice at capacity
+    /// (same rationale as the own-proof cache: no full-wipe re-verify
+    /// storms).
+    fn remember_verified(&mut self, key: (NodeId, Hash256, u64)) {
+        if self.verified_claims.len() >= VERIFIED_CLAIMS_CAP {
+            let victims: Vec<(NodeId, Hash256, u64)> =
+                self.verified_claims.iter().take(VERIFIED_CLAIMS_EVICT).copied().collect();
+            for k in &victims {
+                self.verified_claims.remove(k);
             }
         }
+        self.verified_claims.insert(key);
     }
 
     // ---- maintenance tick ------------------------------------------------
@@ -440,15 +585,28 @@ impl VaultPeer {
                 cs.cached_chunk = None;
             }
             let self_id = self.info.id;
-            cs.members
-                .retain(|id, m| *id == self_id || now.saturating_sub(m.last_seen_ms) < drop_after);
+            cs.mutate_members(|view| {
+                view.retain(|id, m| {
+                    *id == self_id || now.saturating_sub(m.last_seen_ms) < drop_after
+                })
+            });
         }
 
-        // Heartbeats + repair detection per stored chunk.
-        let chashes: Vec<Hash256> = self.store.keys().copied().collect();
-        for chash in chashes {
-            self.heartbeat_chunk(out, &chash);
-            self.check_repair(dir, out, &chash);
+        // Heartbeats + repair detection. Batched mode sends one
+        // aggregated message per neighbor; legacy mode keeps the exact
+        // pre-batching per-chunk message schedule.
+        if self.cfg.batched_maint {
+            self.heartbeat_batched(out);
+            let chashes: Vec<Hash256> = self.store.keys().copied().collect();
+            for chash in chashes {
+                self.check_repair(dir, out, &chash);
+            }
+        } else {
+            let chashes: Vec<Hash256> = self.store.keys().copied().collect();
+            for chash in chashes {
+                self.heartbeat_chunk(out, &chash);
+                self.check_repair(dir, out, &chash);
+            }
         }
 
         // Expire stalled repair coordinations.
@@ -486,6 +644,198 @@ impl VaultPeer {
         }
     }
 
+    // ---- batched maintenance plane (ISSUE 4) ----------------------------
+
+    /// One maintenance pass over every stored chunk: refresh own
+    /// liveness, compute each group's membership delta against the last
+    /// announced baseline, aggregate all claims owed to the same
+    /// neighbor into one [`HeartbeatBatch`], and sign each batch once.
+    fn heartbeat_batched(&mut self, out: &mut Outbox) {
+        if self.fault.mute_heartbeats {
+            return; // silent liveness failure: peers must suspect us
+        }
+        let now = out.now_ms;
+        let my_id = self.info.id;
+        let mut per_peer: HashMap<NodeId, Vec<BatchClaim>> = HashMap::default();
+        for (chash, cs) in self.store.iter_mut() {
+            if let Some(me) = cs.members.get_mut(&my_id) {
+                me.last_seen_ms = now;
+            }
+            let delta = if cs.announced.is_empty() {
+                full_delta_and_rebaseline(cs)
+            } else {
+                let digest = cached_digest(cs);
+                let added: Vec<PeerInfo> = cs
+                    .members
+                    .values()
+                    .filter(|m| !cs.announced.contains(&m.info.id))
+                    .map(|m| m.info)
+                    .collect();
+                let d = MemberDelta {
+                    count: cs.members.len() as u32,
+                    digest,
+                    full: false,
+                    added,
+                };
+                // Rebaseline only when the view actually changed — in
+                // steady state (nothing added, nothing dropped) the
+                // baseline already equals the member set.
+                if !d.added.is_empty() || cs.announced.len() != cs.members.len() {
+                    cs.announced = cs.members.keys().copied().collect();
+                }
+                d
+            };
+            for m in cs.members.values() {
+                if m.info.id == my_id {
+                    continue;
+                }
+                per_peer.entry(m.info.id).or_default().push(BatchClaim {
+                    chash: *chash,
+                    index: cs.frag.index,
+                    proof: cs.proof,
+                    delta: delta.clone(),
+                });
+            }
+        }
+        for (to, mut claims) in per_peer {
+            // Split at the receiver's hostile-input cap so no claim is
+            // ever silently truncated on the other side.
+            while !claims.is_empty() {
+                let rest = if claims.len() > MAX_BATCH_CLAIMS {
+                    claims.split_off(MAX_BATCH_CLAIMS)
+                } else {
+                    Vec::new()
+                };
+                self.send_batch(out, to, now, claims);
+                claims = rest;
+            }
+        }
+    }
+
+    /// Sign and send one heartbeat batch (the single place the batch
+    /// is built, so format/signing/metrics changes cannot diverge
+    /// between the periodic tick and the join announcement).
+    fn send_batch(&mut self, out: &mut Outbox, to: NodeId, now: u64, claims: Vec<BatchClaim>) {
+        self.metrics.claims_sent += claims.len() as u64;
+        self.metrics.batches_sent += 1;
+        let region = self.info.region;
+        let sig = self.key.sign(&HeartbeatBatch::signing_bytes(now, region, &claims));
+        out.send_p(
+            to,
+            Msg::HeartbeatBatch(HeartbeatBatch {
+                pk: self.key.public,
+                region,
+                ts_ms: now,
+                sig,
+                claims,
+            }),
+            Purpose::Heartbeat,
+        );
+    }
+
+    /// Immediate single-chunk announcement (fresh repair join): a
+    /// one-claim batch carrying the full member list, so the group
+    /// learns the new member without waiting for the next tick.
+    fn announce_chunk(&mut self, out: &mut Outbox, chash: &Hash256) {
+        if self.fault.mute_heartbeats {
+            return;
+        }
+        let now = out.now_ms;
+        let my_id = self.info.id;
+        let Some(cs) = self.store.get_mut(chash) else { return };
+        if let Some(me) = cs.members.get_mut(&my_id) {
+            me.last_seen_ms = now;
+        }
+        let delta = full_delta_and_rebaseline(cs);
+        let claim = BatchClaim { chash: *chash, index: cs.frag.index, proof: cs.proof, delta };
+        let targets: Vec<NodeId> =
+            cs.members.keys().filter(|id| **id != my_id).copied().collect();
+        for to in targets {
+            self.send_batch(out, to, now, vec![claim.clone()]);
+        }
+    }
+
+    /// Receive a batched heartbeat: verify the batch signature once,
+    /// then fan the claims back out into per-chunk `last_seen` updates
+    /// and delta merges, requesting a full-list resync from the sender
+    /// when a delta reveals members missing from the local view.
+    fn handle_heartbeat_batch(&mut self, out: &mut Outbox, from: NodeId, batch: HeartbeatBatch) {
+        self.metrics.batches_received += 1;
+        if NodeId::from_pk(&batch.pk) != from {
+            return; // sender must speak for its own key
+        }
+        let now = out.now_ms;
+        if batch.ts_ms.saturating_add(self.cfg.suspicion_ms) < now
+            || batch.ts_ms > now.saturating_add(self.cfg.suspicion_ms)
+        {
+            return; // stale or far-future batch
+        }
+        if self.cfg.claim_verify != ClaimVerify::Never
+            && !ed25519::verify(
+                &batch.pk,
+                &HeartbeatBatch::signing_bytes(batch.ts_ms, batch.region, &batch.claims),
+                &batch.sig,
+            )
+        {
+            return;
+        }
+        for claim in batch.claims.iter().take(MAX_BATCH_CLAIMS) {
+            self.metrics.claims_received += 1;
+            if !self.store.contains_key(&claim.chash) {
+                continue;
+            }
+            // Selection-proof verification per configured policy.
+            let key = (from, claim.chash, claim.index);
+            let need_verify = match self.cfg.claim_verify {
+                ClaimVerify::Always => true,
+                ClaimVerify::FirstTime => !self.verified_claims.contains(&key),
+                ClaimVerify::Never => false,
+            };
+            if need_verify {
+                if !self.verify_peer_proof(&batch.pk, &claim.chash, claim.index, &claim.proof) {
+                    continue;
+                }
+                self.remember_verified(key);
+            }
+            let cs = self.store.get_mut(&claim.chash).unwrap();
+            cs.mutate_members(|view| {
+                view.entry(from).and_modify(|m| m.last_seen_ms = now).or_insert(Member {
+                    info: PeerInfo { id: from, pk: batch.pk, region: batch.region },
+                    last_seen_ms: now,
+                });
+            });
+            if !claim.delta.added.is_empty() {
+                self.merge_members(now, &claim.chash, &claim.delta.added);
+            }
+            // Divergence fallback: the sender claims members we don't
+            // know (or an equal-size but different set) — pull its full
+            // list. Additions-only merging makes this converge: after a
+            // resync each side holds the union. Short-circuit keeps the
+            // digest (cached, O(1) steady state) off the count-mismatch
+            // path entirely.
+            let cs = self.store.get_mut(&claim.chash).unwrap();
+            let known = cs.members.len();
+            let count = claim.delta.count as usize;
+            let diverged =
+                count > known || (count == known && claim.delta.digest != cached_digest(cs));
+            if diverged && !claim.delta.full {
+                self.metrics.resyncs_requested += 1;
+                out.send_p(from, Msg::GetMembers { chash: claim.chash }, Purpose::Heartbeat);
+            }
+        }
+    }
+
+    /// Serve a full-list view resync to a fellow group member.
+    fn handle_get_members(&mut self, out: &mut Outbox, from: NodeId, chash: Hash256) {
+        let Some(cs) = self.store.get(&chash) else { return };
+        if !cs.members.contains_key(&from) {
+            return; // only members may pull the view
+        }
+        self.metrics.resyncs_served += 1;
+        let members: Vec<PeerInfo> = cs.members.values().map(|m| m.info).collect();
+        out.send_p(from, Msg::Members { chash, members }, Purpose::Heartbeat);
+    }
+
     /// §4.3.4: when the alive group size drops below R, locate new
     /// members — deterministically sharded across alive members by rank
     /// so independent repair mostly avoids duplicate work (over-repair
@@ -504,7 +854,13 @@ impl VaultPeer {
         }
         alive.sort();
         let deficit = self.cfg.r_inner - alive.len();
-        let my_rank = alive.iter().position(|id| *id == self.info.id).unwrap_or(0);
+        // A node absent from its own alive view (muted heartbeats, or
+        // freshly suspected by itself) must not mirror rank 0's repair
+        // share — that duplicated rank-0's repair traffic. The alive
+        // members shard the deficit among themselves.
+        let Some(my_rank) = alive.iter().position(|id| *id == self.info.id) else {
+            return;
+        };
         let n_alive = alive.len().max(1);
         let my_share = (0..deficit).filter(|i| i % n_alive == my_rank).count();
         // Don't pile up repairs for the same chunk.
@@ -530,7 +886,11 @@ impl VaultPeer {
         }
         self.metrics.repairs_initiated += 1;
         for p in &probes {
-            out.send(p.id, Msg::GetProofs { op, chash: *chash, indices: vec![index] });
+            out.send_p(
+                p.id,
+                Msg::GetProofs { op, chash: *chash, indices: vec![index] },
+                Purpose::Repair,
+            );
         }
         self.repairs.insert(
             op,
@@ -702,7 +1062,7 @@ impl VaultPeer {
                     .collect();
                 for t in targets {
                     js.asked_frag.insert(t);
-                    out.send(t, Msg::GetFrag { op: my_op, chash });
+                    out.send_p(t, Msg::GetFrag { op: my_op, chash }, Purpose::Join);
                 }
             }
         }
@@ -789,6 +1149,8 @@ impl VaultPeer {
                 cached_chunk,
                 cache_expires_ms,
                 payload_dropped,
+                announced: HashSet::default(),
+                view_digest: None,
             },
         );
         self.metrics.repairs_joined += 1;
@@ -803,7 +1165,11 @@ impl VaultPeer {
             index: js.index,
             latency_ms: now.saturating_sub(js.started_ms),
         });
-        self.heartbeat_chunk(out, &chash);
+        if self.cfg.batched_maint {
+            self.announce_chunk(out, &chash);
+        } else {
+            self.heartbeat_chunk(out, &chash);
+        }
     }
 
     fn join_retry(&mut self, _dir: &dyn Directory, out: &mut Outbox, chash: Hash256) {
@@ -827,7 +1193,7 @@ impl VaultPeer {
         }
         for t in targets {
             js.asked_frag.insert(t);
-            out.send(t, Msg::GetFrag { op: my_op, chash });
+            out.send_p(t, Msg::GetFrag { op: my_op, chash }, Purpose::Join);
         }
         out.timer(self.cfg.op_timeout_ms, TimerKind::JoinRetry { chash });
     }
@@ -869,6 +1235,11 @@ impl VaultPeer {
         self.store.keys().copied().collect()
     }
 
+    /// Sender-side maintenance bandwidth counters (tests/benches).
+    pub fn maint_stats(&self) -> &crate::proto::MaintStats {
+        &self.metrics.maint
+    }
+
     /// Direct fragment installation — used by harnesses to pre-seed
     /// state without running the full STORE saga.
     pub fn force_store(&mut self, now_ms: u64, chash: Hash256, frag: Fragment, proof: VrfProof, members: Vec<PeerInfo>) {
@@ -887,7 +1258,361 @@ impl VaultPeer {
                 cached_chunk: None,
                 cache_expires_ms: 0,
                 payload_dropped: self.cfg.byzantine,
+                announced: HashSet::default(),
+                view_digest: None,
             },
         );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::rateless::Fragment;
+    use crate::crypto::vrf;
+
+    struct StubDir {
+        peers: Vec<PeerInfo>,
+    }
+
+    impl Directory for StubDir {
+        fn closest(&self, _target: &Hash256, count: usize) -> Vec<PeerInfo> {
+            self.peers.iter().copied().take(count).collect()
+        }
+        fn n_nodes(&self) -> usize {
+            self.peers.len().max(1)
+        }
+    }
+
+    fn test_cfg() -> VaultConfig {
+        VaultConfig {
+            k_inner: 2,
+            r_inner: 3,
+            n_nodes: 16,
+            claim_verify: ClaimVerify::Never,
+            ..Default::default()
+        }
+    }
+
+    fn mk_peer(tag: u8, cfg: &VaultConfig) -> VaultPeer {
+        VaultPeer::new(cfg.clone(), &[tag; 32], tag % 5)
+    }
+
+    fn frag(index: u64) -> Fragment {
+        Fragment { index, chunk_len: 64, payload: vec![index as u8; 16] }
+    }
+
+    fn some_proof(peer: &VaultPeer) -> VrfProof {
+        vrf::prove(&peer.key, b"test-proof").1
+    }
+
+    // ---- merge_members (ISSUE 4 satellite 1) -------------------------
+
+    #[test]
+    fn merge_members_refreshes_info_and_inserts_unknown() {
+        let cfg = test_cfg();
+        let mut a = mk_peer(1, &cfg);
+        let b = mk_peer(2, &cfg);
+        let d = mk_peer(4, &cfg);
+        let chash = Hash256::of(b"merge-chunk");
+        let pa = some_proof(&a);
+        a.force_store(0, chash, frag(1), pa, vec![b.info]);
+        let mut b_new = b.info;
+        b_new.region = 9;
+        a.merge_members(5_000, &chash, &[b_new, d.info]);
+        let cs = &a.store[&chash];
+        assert_eq!(cs.members[&b.info.id].info.region, 9, "known member info must refresh");
+        assert_eq!(
+            cs.members[&b.info.id].last_seen_ms, 0,
+            "refreshing info must not touch liveness"
+        );
+        assert_eq!(cs.members[&d.info.id].last_seen_ms, 5_000, "unknown member inserted fresh");
+    }
+
+    #[test]
+    fn merge_members_rejects_spoofed_id_pk_bindings() {
+        let cfg = test_cfg();
+        let mut a = mk_peer(1, &cfg);
+        let b = mk_peer(2, &cfg);
+        let chash = Hash256::of(b"spoof-chunk");
+        let pa = some_proof(&a);
+        a.force_store(0, chash, frag(1), pa, vec![b.info]);
+        // Victim b's id gossiped with an attacker pk/region.
+        let spoofed = PeerInfo { id: b.info.id, pk: [0xEE; 32], region: 4 };
+        a.merge_members(5_000, &chash, &[spoofed]);
+        let got = a.store[&chash].members[&b.info.id].info;
+        assert_eq!(got.pk, b.info.pk, "spoofed pk must not overwrite a stored identity");
+        assert_eq!(got.region, b.info.region);
+        // A phantom id whose pk does not hash to it is not inserted.
+        let phantom = PeerInfo { id: NodeId::from_pk(&[0x11; 32]), pk: [0x22; 32], region: 1 };
+        a.merge_members(5_000, &chash, &[phantom]);
+        assert!(!a.store[&chash].members.contains_key(&phantom.id));
+    }
+
+    #[test]
+    fn stale_view_heartbeat_cannot_resurrect_suspected_member() {
+        let cfg = test_cfg();
+        let mut a = mk_peer(1, &cfg);
+        let b = mk_peer(2, &cfg); // will be suspected by `a`
+        let c = mk_peer(3, &cfg); // stale gossiper still listing `b`
+        let chash = Hash256::of(b"resurrect-chunk");
+        let pa = some_proof(&a);
+        a.force_store(0, chash, frag(1), pa, vec![b.info, c.info]);
+        let now = cfg.suspicion_ms + 1_000; // b (last_seen 0) is suspect
+        let sig = c.key.sign(&Claim::signing_bytes(&chash, 2, now));
+        let claim = Claim {
+            chash,
+            index: 2,
+            pk: c.key.public,
+            proof: some_proof(&c),
+            ts_ms: now,
+            sig,
+            members: vec![b.info, c.info],
+        };
+        let dir = StubDir { peers: vec![] };
+        let mut out = Outbox::at(now);
+        a.on_message(&dir, &mut out, c.info.id, Msg::Heartbeat(claim));
+        let cs = &a.store[&chash];
+        assert_eq!(
+            cs.members[&b.info.id].last_seen_ms, 0,
+            "a stale-view heartbeat must not resurrect a suspected member"
+        );
+        assert_eq!(cs.members[&c.info.id].last_seen_ms, now, "the claimant itself is fresh");
+    }
+
+    // ---- check_repair rank (ISSUE 4 satellite 2) ---------------------
+
+    #[test]
+    fn muted_node_does_not_mirror_rank_zero_repair_share() {
+        let cfg = test_cfg();
+        let dir = StubDir {
+            peers: (10u8..20).map(|t| mk_peer(t, &test_cfg()).info).collect(),
+        };
+        let chash = Hash256::of(b"repair-chunk");
+
+        // Muted node: absent from its own alive view once suspicion
+        // passes; it must not shard (let alone duplicate) repair work.
+        let mut a = mk_peer(1, &cfg);
+        a.fault.mute_heartbeats = true;
+        let pa = some_proof(&a);
+        a.force_store(0, chash, frag(1), pa, vec![]);
+        let mut out = Outbox::at(cfg.suspicion_ms * 2);
+        a.on_timer(&dir, &mut out, TimerKind::Tick);
+        assert_eq!(
+            a.metrics.repairs_initiated, 0,
+            "a node outside its own alive view must skip repair sharding"
+        );
+
+        // Control: the same situation unmuted repairs the deficit.
+        let mut b = mk_peer(2, &cfg);
+        let pb = some_proof(&b);
+        b.force_store(0, chash, frag(2), pb, vec![]);
+        let mut out = Outbox::at(cfg.suspicion_ms * 2);
+        b.on_timer(&dir, &mut out, TimerKind::Tick);
+        assert!(
+            b.metrics.repairs_initiated > 0,
+            "an alive rank-0 node must still take its repair share"
+        );
+    }
+
+    // ---- own_proof cache (ISSUE 4 satellite 4) -----------------------
+
+    #[test]
+    fn proof_cache_evicts_bounded_slice_not_everything() {
+        let cfg = test_cfg();
+        let mut a = mk_peer(1, &cfg);
+        // Fill to capacity directly: computing 2^16 real VRF proofs
+        // would dominate test time, and the eviction path only cares
+        // about occupancy.
+        for i in 0..PROOF_CACHE_CAP as u64 {
+            let mut h = [0u8; 32];
+            h[..8].copy_from_slice(&i.to_le_bytes());
+            a.proof_cache.insert((Hash256(h), i), None);
+        }
+        let before = a.metrics.vrf_proofs;
+        let chash = Hash256::of(b"fresh-chunk");
+        let _ = a.own_proof(&chash, 7);
+        assert_eq!(a.metrics.vrf_proofs, before + 1);
+        assert!(
+            a.proof_cache.len() >= PROOF_CACHE_CAP - PROOF_CACHE_EVICT,
+            "eviction must be a bounded slice, not a full wipe: len={}",
+            a.proof_cache.len()
+        );
+        assert!(a.proof_cache.len() <= PROOF_CACHE_CAP);
+        // The fresh entry and surviving old entries are served from
+        // cache: recomputes stay O(new chunks) across the cap boundary.
+        let _ = a.own_proof(&chash, 7);
+        let surviving = a.proof_cache.keys().find(|k| k.0 != chash).copied().unwrap();
+        let _ = a.own_proof(&surviving.0, surviving.1);
+        assert_eq!(a.metrics.vrf_proofs, before + 1);
+    }
+
+    // ---- batched maintenance plane (ISSUE 4 tentpole) ----------------
+
+    #[test]
+    fn batched_tick_sends_one_batch_per_neighbor() {
+        let cfg = test_cfg();
+        let mut a = mk_peer(1, &cfg);
+        let b = mk_peer(2, &cfg);
+        let c = mk_peer(3, &cfg);
+        let members = vec![b.info, c.info];
+        let c1 = Hash256::of(b"batch-c1");
+        let c2 = Hash256::of(b"batch-c2");
+        let pa = some_proof(&a);
+        a.force_store(0, c1, frag(1), pa, members.clone());
+        a.force_store(0, c2, frag(2), pa, members);
+        let dir = StubDir { peers: vec![] };
+        let mut out = Outbox::at(1_000);
+        a.on_timer(&dir, &mut out, TimerKind::Tick);
+        let batches: Vec<&HeartbeatBatch> = out
+            .sends
+            .iter()
+            .filter_map(|(_, m, _)| match m {
+                Msg::HeartbeatBatch(hb) => Some(hb),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(batches.len(), 2, "exactly one batch per neighbor");
+        for hb in &batches {
+            assert_eq!(hb.claims.len(), 2, "both chunks' claims ride the same batch");
+            assert!(
+                hb.claims.iter().all(|cl| cl.delta.full),
+                "first batch announces the full member list"
+            );
+        }
+        assert!(
+            out.sends.iter().all(|(_, m, _)| !matches!(m, Msg::Heartbeat(_))),
+            "no legacy per-chunk heartbeats in batched mode"
+        );
+        assert_eq!(a.metrics.batches_sent, 2);
+        assert_eq!(a.metrics.claims_sent, 4);
+
+        // Steady state: second tick sends empty deltas.
+        let mut out2 = Outbox::at(11_000);
+        a.on_timer(&dir, &mut out2, TimerKind::Tick);
+        for (_, m, _) in &out2.sends {
+            if let Msg::HeartbeatBatch(hb) = m {
+                for cl in &hb.claims {
+                    assert!(
+                        !cl.delta.full && cl.delta.added.is_empty(),
+                        "steady-state deltas must be empty"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn receiver_fans_batch_out_and_resyncs_on_divergence() {
+        let cfg = test_cfg();
+        let mut a = mk_peer(1, &cfg);
+        let mut b = mk_peer(2, &cfg);
+        let c = mk_peer(3, &cfg);
+        let d = mk_peer(4, &cfg);
+        let chash = Hash256::of(b"fan-chunk");
+        let pa = some_proof(&a);
+        let pb = some_proof(&b);
+        // A knows {a,b,c,d}; B only knows {a,b}.
+        a.force_store(0, chash, frag(1), pa, vec![b.info, c.info, d.info]);
+        b.force_store(0, chash, frag(2), pb, vec![a.info]);
+        let dir = StubDir { peers: vec![] };
+        let mut out = Outbox::at(1_000);
+        a.on_timer(&dir, &mut out, TimerKind::Tick);
+        let (_, msg, _) = out
+            .sends
+            .iter()
+            .find(|(to, m, _)| *to == b.info.id && matches!(m, Msg::HeartbeatBatch(_)))
+            .cloned()
+            .expect("A must heartbeat B");
+        let mut bout = Outbox::at(2_000);
+        b.on_message(&dir, &mut bout, a.info.id, msg);
+        let cs = &b.store[&chash];
+        assert_eq!(cs.members[&a.info.id].last_seen_ms, 2_000, "claim refreshes sender liveness");
+        assert!(
+            cs.members.contains_key(&c.info.id) && cs.members.contains_key(&d.info.id),
+            "full delta must teach B the members it was missing"
+        );
+
+        // A steady-state (empty) delta claiming a larger view than B
+        // holds must trigger the full-list resync fallback.
+        let claims = vec![BatchClaim {
+            chash,
+            index: 1,
+            proof: pa,
+            delta: MemberDelta::unchanged(9, 0xDEAD),
+        }];
+        let sig = a.key.sign(&HeartbeatBatch::signing_bytes(3_000, a.info.region, &claims));
+        let hb = HeartbeatBatch {
+            pk: a.key.public,
+            region: a.info.region,
+            ts_ms: 3_000,
+            sig,
+            claims,
+        };
+        let mut bout2 = Outbox::at(3_000);
+        b.on_message(&dir, &mut bout2, a.info.id, Msg::HeartbeatBatch(hb));
+        assert!(
+            bout2
+                .sends
+                .iter()
+                .any(|(to, m, _)| *to == a.info.id && matches!(m, Msg::GetMembers { .. })),
+            "divergent delta must request a resync"
+        );
+        assert_eq!(b.metrics.resyncs_requested, 1);
+
+        // A serves the resync with its full membership view.
+        let mut aout = Outbox::at(3_500);
+        a.on_message(&dir, &mut aout, b.info.id, Msg::GetMembers { chash });
+        assert!(
+            aout.sends.iter().any(|(to, m, _)| *to == b.info.id
+                && matches!(m, Msg::Members { members, .. } if members.len() == 4)),
+            "resync reply must carry the full member list"
+        );
+        assert_eq!(a.metrics.resyncs_served, 1);
+    }
+
+    #[test]
+    fn non_member_cannot_stuff_a_full_group_view() {
+        let cfg = test_cfg(); // r_inner = 3
+        let mut a = mk_peer(1, &cfg);
+        let b = mk_peer(2, &cfg);
+        let c = mk_peer(3, &cfg);
+        let outsider = mk_peer(9, &cfg);
+        let phantom = mk_peer(7, &cfg);
+        let chash = Hash256::of(b"gate-chunk");
+        let pa = some_proof(&a);
+        a.force_store(0, chash, frag(1), pa, vec![b.info, c.info]); // view {a,b,c} = R
+        let dir = StubDir { peers: vec![] };
+        let mut out = Outbox::at(1_000);
+        a.on_message(
+            &dir,
+            &mut out,
+            outsider.info.id,
+            Msg::Members { chash, members: vec![phantom.info] },
+        );
+        assert!(
+            !a.store[&chash].members.contains_key(&phantom.info.id),
+            "a non-member must not inject members into a full group view"
+        );
+        // A fellow group member may (the view-resync reply path).
+        let mut out = Outbox::at(1_500);
+        a.on_message(
+            &dir,
+            &mut out,
+            b.info.id,
+            Msg::Members { chash, members: vec![phantom.info] },
+        );
+        assert!(a.store[&chash].members.contains_key(&phantom.info.id));
+    }
+
+    #[test]
+    fn members_digest_is_order_independent_and_set_sensitive() {
+        let cfg = test_cfg();
+        let ids: Vec<NodeId> = (1u8..5).map(|t| mk_peer(t, &cfg).info.id).collect();
+        let fwd = members_digest(ids.iter());
+        let rev = members_digest(ids.iter().rev());
+        assert_eq!(fwd, rev, "digest must not depend on iteration order");
+        let fewer = members_digest(ids[..3].iter());
+        assert_ne!(fwd, fewer, "digest must change when the set changes");
     }
 }

@@ -108,6 +108,11 @@ pub struct ScenarioSpec {
     /// `Never` is the documented measurement knob for very large
     /// clusters; correctness-focused scenarios keep `FirstTime`.
     pub claim_verify: ClaimVerify,
+    /// Maintenance plane: batched per-peer heartbeats (the default) or
+    /// the legacy per-chunk schedule. Part of the fingerprint contract:
+    /// the two planes produce different (each internally deterministic)
+    /// trajectories — see DESIGN.md §Maintenance Plane.
+    pub batched_maint: bool,
     pub phases: Vec<Phase>,
 }
 
@@ -123,8 +128,17 @@ impl ScenarioSpec {
             objects: 4,
             object_size: 12_000,
             claim_verify: ClaimVerify::FirstTime,
+            batched_maint: true,
             phases: Vec::new(),
         }
+    }
+
+    /// Switch this scenario onto the legacy per-chunk heartbeat plane
+    /// (the exact pre-batching message schedule; fingerprints remain
+    /// stable run-to-run but differ from the batched plane's).
+    pub fn legacy_maint(mut self) -> Self {
+        self.batched_maint = false;
+        self
     }
 
     pub fn phase(
@@ -195,6 +209,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
     let mut cfg = ClusterConfig::small_test(spec.peers);
     cfg.seed = spec.seed;
     cfg.vault.claim_verify = spec.claim_verify;
+    cfg.vault.batched_maint = spec.batched_maint;
     cfg.vault.heartbeat_ms = 5_000;
     cfg.vault.suspicion_ms = 15_000;
     cfg.vault.tick_ms = 5_000;

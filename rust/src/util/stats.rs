@@ -49,14 +49,23 @@ impl OnlineStats {
 }
 
 /// Latency/size sample set with percentile queries.
+///
+/// Percentiles follow the **nearest-rank** definition: for `p` in
+/// `(0, 100]`, the `⌈p/100 · n⌉`-th smallest sample (1-indexed); `p = 0`
+/// returns the minimum. The sorted view is cached lazily and
+/// invalidated by growth, so `summary()` (four percentile queries)
+/// sorts once instead of four times, and repeated queries are O(1).
 #[derive(Clone, Debug, Default)]
 pub struct Samples {
     xs: Vec<f64>,
+    /// Lazily sorted copy of `xs`; valid iff `sorted.len() == xs.len()`
+    /// (samples are append-only, so equal length ⇒ equal content).
+    sorted: std::cell::RefCell<Vec<f64>>,
 }
 
 impl Samples {
     pub fn new() -> Self {
-        Samples { xs: Vec::new() }
+        Samples::default()
     }
     pub fn push(&mut self, x: f64) {
         self.xs.push(x);
@@ -77,15 +86,25 @@ impl Samples {
         self.xs.iter().sum::<f64>() / self.xs.len() as f64
     }
 
-    /// Nearest-rank percentile, `p` in `[0, 100]`.
+    /// Nearest-rank percentile, `p` in `[0, 100]` (see type docs).
+    ///
+    /// The previous implementation documented nearest-rank but rounded
+    /// half-up over an (n−1)-scaled index — p50 of 10 samples returned
+    /// the 6th smallest instead of the 5th — and re-sorted the full
+    /// sample vec on every call.
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.xs.is_empty() {
+        let n = self.xs.len();
+        if n == 0 {
             return 0.0;
         }
-        let mut sorted = self.xs.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
-        sorted[rank.min(sorted.len() - 1)]
+        let mut sorted = self.sorted.borrow_mut();
+        if sorted.len() != n {
+            sorted.clear();
+            sorted.extend_from_slice(&self.xs);
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+        let rank = ((p / 100.0) * n as f64).ceil() as usize;
+        sorted[rank.clamp(1, n) - 1]
     }
 
     pub fn median(&self) -> f64 {
@@ -134,5 +153,52 @@ mod tests {
         assert_eq!(s.percentile(100.0), 100.0);
         assert!((s.median() - 50.0).abs() <= 1.0);
         assert!((s.percentile(95.0) - 95.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn nearest_rank_definition_on_known_inputs() {
+        // The bench-ops/bench-maint p50/p99 contract: nearest-rank.
+        let mut s = Samples::new();
+        for i in 1..=10 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.percentile(50.0), 5.0, "p50 of 10 samples is the 5th smallest, not the 6th");
+        assert_eq!(s.percentile(10.0), 1.0);
+        assert_eq!(s.percentile(99.0), 10.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 10.0);
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.percentile(50.0), 50.0);
+        assert_eq!(s.percentile(95.0), 95.0);
+        assert_eq!(s.percentile(99.0), 99.0);
+        assert_eq!(s.percentile(99.1), 100.0);
+        let one = {
+            let mut s = Samples::new();
+            s.push(7.0);
+            s
+        };
+        assert_eq!(one.percentile(50.0), 7.0);
+        assert_eq!(one.percentile(99.0), 7.0);
+    }
+
+    #[test]
+    fn sorted_cache_invalidated_by_growth() {
+        let mut s = Samples::new();
+        s.push(5.0);
+        s.push(1.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+        s.push(9.0); // growth must invalidate the cached sort
+        assert_eq!(s.percentile(100.0), 9.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        let mut t = Samples::new();
+        t.push(0.5);
+        s.extend(&t);
+        assert_eq!(s.percentile(0.0), 0.5);
+        // Clones carry a consistent cache.
+        let c = s.clone();
+        assert_eq!(c.percentile(100.0), 9.0);
     }
 }

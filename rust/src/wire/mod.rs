@@ -191,6 +191,24 @@ pub trait Encode {
     }
 }
 
+/// Exact encoded size of a value, without keeping the bytes around.
+///
+/// Reuses one thread-local scratch [`Writer`] so steady-state calls do
+/// not allocate; the maintenance-bandwidth accounting layer
+/// ([`crate::proto::MaintStats`]) calls this per control-plane message.
+pub fn encoded_len<T: Encode>(v: &T) -> usize {
+    use std::cell::RefCell;
+    thread_local! {
+        static SCRATCH: RefCell<Writer> = RefCell::new(Writer::new());
+    }
+    SCRATCH.with(|w| {
+        let mut w = w.borrow_mut();
+        w.buf.clear();
+        v.encode(&mut w);
+        w.len()
+    })
+}
+
 pub trait Decode: Sized {
     fn decode(r: &mut Reader<'_>) -> WireResult<Self>;
 
@@ -448,6 +466,17 @@ mod tests {
             let s: String = (0..rng.range(0, 32)).map(|_| (b'a' + (rng.below(26) as u8)) as char).collect();
             roundtrip(s);
         }
+    }
+
+    #[test]
+    fn encoded_len_matches_to_bytes() {
+        assert_eq!(encoded_len(&7u32), 7u32.to_bytes().len());
+        let v = vec![1u64, 2, 3];
+        assert_eq!(encoded_len(&v), v.to_bytes().len());
+        let s = String::from("héllo");
+        assert_eq!(encoded_len(&s), s.to_bytes().len());
+        // Scratch reuse must not leak state between calls.
+        assert_eq!(encoded_len(&0u8), 1);
     }
 
     struct Demo {

@@ -1,0 +1,166 @@
+//! Batched maintenance plane (ISSUE 4): bandwidth regression and
+//! end-to-end accounting tests.
+//!
+//! The headline contract: at the design point (R = 16, 64 chunks per
+//! node), a node's batched per-tick heartbeat bytes are **at most** the
+//! legacy per-chunk bytes on the very first tick (which still announces
+//! full member lists), and at least 5× smaller in steady state (empty
+//! deltas). The cluster-level test checks the same through the real
+//! runtime and the [`MaintStats`] accounting layer.
+
+use vault::codec::rateless::Fragment;
+use vault::coordinator::{Cluster, ClusterConfig};
+use vault::crypto::vrf;
+use vault::crypto::Hash256;
+use vault::dht::{NodeId, PeerInfo};
+use vault::proto::messages::{Msg, Purpose};
+use vault::proto::peer::VaultPeer;
+use vault::proto::{ClaimVerify, Directory, Outbox, TimerKind, VaultConfig};
+use vault::wire::encoded_len;
+
+struct EmptyDir;
+
+impl Directory for EmptyDir {
+    fn closest(&self, _target: &Hash256, _count: usize) -> Vec<PeerInfo> {
+        Vec::new()
+    }
+    fn n_nodes(&self) -> usize {
+        1
+    }
+}
+
+fn neighbor_infos(n: usize) -> Vec<PeerInfo> {
+    (0..n)
+        .map(|i| {
+            let pk = [i as u8 + 10; 32];
+            PeerInfo { id: NodeId::from_pk(&pk), pk, region: (i % 5) as u8 }
+        })
+        .collect()
+}
+
+/// A peer holding `chunks` fragments whose groups all share the same
+/// `r - 1` neighbors (the max-batching design-point workload).
+fn seeded_peer(batched: bool, chunks: usize, r: usize) -> VaultPeer {
+    let cfg = VaultConfig {
+        k_inner: 4,
+        r_inner: r,
+        n_nodes: 256,
+        claim_verify: ClaimVerify::Never,
+        batched_maint: batched,
+        ..Default::default()
+    };
+    let mut peer = VaultPeer::new(cfg, &[1; 32], 0);
+    let members = neighbor_infos(r - 1);
+    let proof = vrf::prove(&peer.key, b"maint-plane").1;
+    for c in 0..chunks {
+        let chash = Hash256::of(&(c as u64).to_le_bytes());
+        let frag = Fragment { index: 0, chunk_len: 64, payload: vec![c as u8; 16] };
+        peer.force_store(0, chash, frag, proof, members.clone());
+    }
+    peer
+}
+
+fn tick(peer: &mut VaultPeer, now: u64) -> Outbox {
+    let mut out = Outbox::at(now);
+    peer.on_timer(&EmptyDir, &mut out, TimerKind::Tick);
+    out
+}
+
+/// Exact heartbeat-plane bytes in one outbox.
+fn hb_bytes(out: &Outbox) -> usize {
+    out.sends
+        .iter()
+        .filter(|(_, _, p)| *p == Purpose::Heartbeat)
+        .map(|(_, m, _)| encoded_len(m))
+        .sum()
+}
+
+fn hb_msgs(out: &Outbox) -> usize {
+    out.sends.iter().filter(|(_, _, p)| *p == Purpose::Heartbeat).count()
+}
+
+#[test]
+fn batched_bytes_per_tick_leq_legacy_at_r16_64_chunks() {
+    const CHUNKS: usize = 64;
+    const R: usize = 16;
+    let mut legacy = seeded_peer(false, CHUNKS, R);
+    let mut batched = seeded_peer(true, CHUNKS, R);
+
+    // Tick 1: the batched plane still announces full member lists, but
+    // one signature + one header per neighbor must already keep it at
+    // or under the legacy per-chunk bytes.
+    let legacy_t1 = hb_bytes(&tick(&mut legacy, 1_000));
+    let batched_t1 = hb_bytes(&tick(&mut batched, 1_000));
+    assert!(
+        batched_t1 <= legacy_t1,
+        "first batched tick must not exceed legacy: batched={batched_t1} legacy={legacy_t1}"
+    );
+
+    // Tick 2 (steady state): deltas are empty, so the member lists that
+    // dominated the legacy bytes are gone entirely.
+    let legacy_out = tick(&mut legacy, 11_000);
+    let batched_out = tick(&mut batched, 11_000);
+    let (legacy_t2, batched_t2) = (hb_bytes(&legacy_out), hb_bytes(&batched_out));
+    assert!(
+        batched_t2 * 5 <= legacy_t2,
+        "steady-state batched bytes/node/tick must be >=5x under legacy: \
+         batched={batched_t2} legacy={legacy_t2}"
+    );
+    // Message-count collapse: one batch per neighbor vs one claim per
+    // (chunk, neighbor).
+    assert_eq!(hb_msgs(&batched_out), R - 1);
+    assert_eq!(hb_msgs(&legacy_out), CHUNKS * (R - 1));
+    // Every claim still reaches every neighbor each tick.
+    for (_, msg, _) in &batched_out.sends {
+        if let Msg::HeartbeatBatch(hb) = msg {
+            assert_eq!(hb.claims.len(), CHUNKS);
+        }
+    }
+}
+
+#[test]
+fn cluster_maintenance_bandwidth_drops_under_batched_plane() {
+    // Same seeded cluster, same workload, both planes: the MaintStats
+    // accounting threaded through the runtimes must show the batched
+    // heartbeat plane spending a fraction of the legacy bytes, while
+    // repair still converges (groups stay at R after a kill).
+    let run = |batched: bool| {
+        let mut cfg = ClusterConfig::small_test(48);
+        cfg.vault.batched_maint = batched;
+        cfg.vault.tick_ms = 5_000;
+        cfg.vault.heartbeat_ms = 5_000;
+        cfg.vault.suspicion_ms = 15_000;
+        let r = cfg.vault.r_inner;
+        let mut cluster = Cluster::start(cfg);
+        let obj = vec![7u8; 10_000];
+        let stored = cluster.store_blocking(0, &obj, b"maint", 0).expect("store").value;
+        let before = cluster.net.maint_stats();
+        cluster.net.run_for(300_000);
+        let after = cluster.net.maint_stats();
+        // Kill one member of the first chunk's group; repair must
+        // restore the group under either plane.
+        let chash = stored.chunks[0];
+        cluster.evict_one_member(&chash).expect("a live holder exists");
+        let mut recovered = false;
+        for _ in 0..60 {
+            cluster.net.run_for(10_000);
+            if cluster.net.surviving_fragments(&chash) >= r {
+                recovered = true;
+                break;
+            }
+        }
+        assert!(recovered, "repair must converge (batched={batched})");
+        (after.hb_bytes - before.hb_bytes, after.hb_msgs - before.hb_msgs)
+    };
+    let (legacy_bytes, legacy_msgs) = run(false);
+    let (batched_bytes, batched_msgs) = run(true);
+    assert!(legacy_bytes > 0 && batched_bytes > 0, "accounting layer must observe traffic");
+    assert!(
+        batched_bytes * 2 <= legacy_bytes,
+        "cluster heartbeat bytes must drop substantially: batched={batched_bytes} legacy={legacy_bytes}"
+    );
+    assert!(
+        batched_msgs < legacy_msgs,
+        "cluster heartbeat messages must drop: batched={batched_msgs} legacy={legacy_msgs}"
+    );
+}

@@ -9,7 +9,7 @@ use vault::crypto::ed25519::SigningKey;
 use vault::crypto::vrf;
 use vault::crypto::Hash256;
 use vault::dht::{NodeId, PeerInfo};
-use vault::proto::messages::{Claim, Msg};
+use vault::proto::messages::{BatchClaim, Claim, HeartbeatBatch, MemberDelta, Msg};
 use vault::util::rng::Rng;
 use vault::wire::{Decode, Encode, WireError};
 
@@ -35,8 +35,51 @@ fn all_messages() -> Vec<Msg> {
         sig: [7; 64],
         members: members.clone(),
     };
+    // Batched maintenance plane: full-delta, additions-only, and
+    // empty steady-state claims all in one batch, plus an empty batch.
+    let batch = HeartbeatBatch {
+        pk: sk.public,
+        region: 3,
+        ts_ms: 777_001,
+        sig: [0x2C; 64],
+        claims: vec![
+            BatchClaim {
+                chash,
+                index: 4,
+                proof,
+                delta: MemberDelta {
+                    count: 3,
+                    digest: 0x1234_5678_9ABC_DEF0,
+                    full: true,
+                    added: members.clone(),
+                },
+            },
+            BatchClaim {
+                chash: Hash256::of(b"prop-wire-chunk-2"),
+                index: 9,
+                proof,
+                delta: MemberDelta {
+                    count: 4,
+                    digest: 17,
+                    full: false,
+                    added: vec![sample_peer(7)],
+                },
+            },
+            BatchClaim {
+                chash: Hash256::of(b"prop-wire-chunk-3"),
+                index: 1,
+                proof,
+                delta: MemberDelta::unchanged(16, u64::MAX),
+            },
+        ],
+    };
+    let empty_batch =
+        HeartbeatBatch { pk: sk.public, region: 0, ts_ms: 0, sig: [0; 64], claims: vec![] };
     vec![
         Msg::GetProofs { op: 1, chash, indices: vec![0, 5, 9, 77] },
+        Msg::HeartbeatBatch(batch),
+        Msg::HeartbeatBatch(empty_batch),
+        Msg::GetMembers { chash },
         Msg::ProofsReply { op: 1, chash, pk: sk.public, proofs: vec![(5, proof), (9, proof)] },
         Msg::StoreFrag {
             op: 2,
@@ -126,6 +169,30 @@ fn bit_flips_never_panic_and_stay_canonical() {
             }
         }
     }
+}
+
+#[test]
+fn encoded_len_is_exact_for_every_variant() {
+    // The MaintStats accounting layer charges heartbeat/repair sends
+    // with exact wire sizes; both the generic `wire::encoded_len` and
+    // the arithmetic `maint_exact_size` fast path must agree with a
+    // real encode.
+    for msg in all_messages() {
+        let actual = msg.to_bytes().len();
+        assert_eq!(
+            vault::wire::encoded_len(&msg),
+            actual,
+            "{}: encoded_len must be exact",
+            msg.kind_name()
+        );
+        if let Some(n) = msg.maint_exact_size() {
+            assert_eq!(n, actual, "{}: maint_exact_size must be exact", msg.kind_name());
+        }
+    }
+    assert!(
+        all_messages().iter().any(|m| m.maint_exact_size().is_some()),
+        "the fast path must cover the heartbeat variants"
+    );
 }
 
 #[test]

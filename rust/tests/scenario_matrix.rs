@@ -175,6 +175,47 @@ fn scenario_open_loop_64_inflight_under_crash_burst() {
 }
 
 #[test]
+fn scenario_batched_plane_repair_convergence() {
+    // ISSUE 4 acceptance: fingerprint-stable repair convergence under
+    // the batched maintenance plane. A crash burst knocks members out
+    // of many groups at once; suspicion must spread through
+    // HeartbeatBatch claims (with delta-merged views) and repair must
+    // converge the groups back — twice, with identical fingerprints.
+    let spec = ScenarioSpec::small("batched_repair_convergence", 1111, 64).phase(
+        "burst-then-converge",
+        vec![Fault::CrashBurst { count: 10 }],
+        90_000,
+        vec![
+            Check::NoChunkBelowDecodeThreshold,
+            Check::GroupsRecoveredTo(0.8),
+            Check::AllObjectsReadable,
+        ],
+    );
+    assert!(spec.batched_maint, "batched plane is the default");
+    run_deterministic(&spec);
+}
+
+#[test]
+fn scenario_legacy_plane_still_converges() {
+    // The legacy per-chunk heartbeat schedule stays behind
+    // `batched_maint = false` for same-process before/after runs; it
+    // must keep repairing (and stay deterministic) too.
+    let spec = ScenarioSpec::small("legacy_repair_convergence", 1111, 64)
+        .legacy_maint()
+        .phase(
+            "burst-then-converge",
+            vec![Fault::CrashBurst { count: 10 }],
+            90_000,
+            vec![
+                Check::NoChunkBelowDecodeThreshold,
+                Check::GroupsRecoveredTo(0.8),
+                Check::AllObjectsReadable,
+            ],
+        );
+    run_deterministic(&spec);
+}
+
+#[test]
 fn scenario_thousand_node_burst() {
     // Scale: 1k peers over 8 shard queues. ClaimVerify::Never is the
     // documented large-cluster measurement knob (proto::ClaimVerify);
