@@ -1,0 +1,83 @@
+//! Epoch-anchored verifiable placement (ISSUE 5): drive a small cluster
+//! across two chain boundaries and watch the ledger + rotation at work —
+//! per-epoch on-chain bytes (churn-bound, never per-object), the beacon
+//! chain verifying end-to-end, and the migration the rotation causes
+//! (fragments re-homed by the repair path while retiring members serve
+//! through their grace window).
+//!
+//! Run: `cargo run --release --example epoch_rotation`
+
+use vault::api::VaultApi;
+use vault::coordinator::{Cluster, ClusterConfig};
+use vault::util::rng::Rng;
+
+fn migrated_fragments(cluster: &Cluster) -> u64 {
+    (0..cluster.net.len()).map(|i| cluster.net.peer(i).metrics.repairs_joined).sum()
+}
+
+fn main() {
+    // 48 peers on the simulated chain: 30 s epochs, 10 s rotation grace.
+    let mut cfg = ClusterConfig::small_test(48);
+    cfg.epoch_ms = 30_000;
+    cfg.vault.rotation_grace_ms = 10_000;
+    cfg.vault.heartbeat_ms = 5_000;
+    cfg.vault.suspicion_ms = 15_000;
+    cfg.vault.tick_ms = 5_000;
+    let mut cluster = Cluster::start(cfg);
+    println!(
+        "chain up: epoch {}, {} bonded identities",
+        cluster.epoch_view().unwrap().epoch,
+        cluster.epoch_view().unwrap().n_nodes()
+    );
+
+    // Seed three objects through real STORE sagas — placement is
+    // sampled from the epoch beacon, nothing lands on the chain.
+    let mut rng = Rng::new(5);
+    let mut ids = Vec::new();
+    for o in 0..3 {
+        let mut data = vec![0u8; 12_000];
+        rng.fill_bytes(&mut data);
+        let client = cluster.random_client();
+        let stored = cluster
+            .store_blocking(client, &data, format!("epoch-demo-{o}").as_bytes(), 0)
+            .expect("store");
+        ids.push((stored.value, data));
+    }
+    println!("stored {} objects ({} chunk groups)", ids.len(), ids.len() * 5);
+
+    // Cross two epoch boundaries; churn two identities per epoch so the
+    // ledger has bond/unbond traffic to seal.
+    for round in 0..2 {
+        let before_frags = migrated_fragments(&cluster);
+        let epoch_before = cluster.ledger().unwrap().current_epoch();
+        cluster.churn(2);
+        let boundary = ((cluster.net.now_ms() / 30_000) + 1) * 30_000;
+        cluster.drive(boundary + 25_000); // boundary + rotation settle
+        let ledger = cluster.ledger().unwrap();
+        let sealed = epoch_before + 1;
+        println!(
+            "round {round}: sealed epoch {sealed} | on-chain bytes this epoch: {} \
+             ({} txs) | fragments migrated by rotation: {}",
+            ledger.onchain_bytes_of(sealed),
+            ledger.view(sealed).map(|v| v.tx_count).unwrap_or(0),
+            migrated_fragments(&cluster) - before_frags,
+        );
+    }
+
+    // Any node can re-derive the whole beacon chain from public data.
+    let ledger = cluster.ledger().unwrap();
+    assert_eq!(ledger.verify_chain(), None);
+    println!(
+        "beacon chain verifies from genesis through epoch {} ({} total on-chain bytes)",
+        ledger.current_epoch(),
+        ledger.total_onchain_bytes()
+    );
+
+    // Rotation preserved every object.
+    for (id, want) in &ids {
+        let client = cluster.random_client();
+        let got = cluster.query_blocking(client, id).expect("query");
+        assert_eq!(&got.value, want);
+    }
+    println!("all objects read back bit-exact after two rotations");
+}

@@ -11,11 +11,13 @@
 pub mod workload;
 
 use crate::api::{ApiState, OpCompletion, OpHandle, OpKind, OpOutcome, VaultApi, DRIVE_SLICE_MS};
+use crate::chain::{ChainTx, EpochView, Ledger, GENESIS_STAKE};
 use crate::codec::ObjectId;
 use crate::crypto::Hash256;
 use crate::dht::NodeId;
 use crate::net::shardnet::ShardNet;
 use crate::net::simnet::{SimNet, SimOpts};
+use crate::proto::messages::{EpochAnnounce, Msg};
 use crate::proto::peer::VaultPeer;
 use crate::proto::{AppEvent, VaultConfig};
 use crate::util::rng::Rng;
@@ -38,6 +40,12 @@ pub trait ClusterRuntime {
     fn attack(&mut self, i: usize);
     fn restore(&mut self, i: usize);
     fn spawn_peer(&mut self, region: u8) -> usize;
+    /// Join a peer with a caller-chosen identity seed (adaptive-
+    /// adversary and deterministic-harness hook).
+    fn spawn_peer_seeded(&mut self, region: u8, seed: [u8; 32]) -> usize;
+    /// Out-of-band system delivery to one peer (chain-watcher epoch
+    /// announces).
+    fn inject(&mut self, to: usize, msg: Msg);
     fn set_drop_prob(&mut self, p: f64);
     fn store(&mut self, client: usize, object: &[u8], secret: &[u8], expires_ms: u64) -> u64;
     fn query(&mut self, client: usize, id: &ObjectId) -> u64;
@@ -79,6 +87,12 @@ macro_rules! forward_cluster_runtime {
             }
             fn spawn_peer(&mut self, region: u8) -> usize {
                 <$ty>::spawn_peer(self, region)
+            }
+            fn spawn_peer_seeded(&mut self, region: u8, seed: [u8; 32]) -> usize {
+                <$ty>::spawn_peer_seeded(self, region, seed)
+            }
+            fn inject(&mut self, to: usize, msg: Msg) {
+                <$ty>::inject(self, to, msg)
             }
             fn set_drop_prob(&mut self, p: f64) {
                 <$ty>::set_drop_prob(self, p)
@@ -123,6 +137,12 @@ pub struct ClusterConfig {
     pub sim: SimOpts,
     /// Fraction of peers behaving Byzantine (Fig. 6 top).
     pub byzantine_frac: f64,
+    /// Epoch length of the simulated chain (ISSUE 5). `0` disables the
+    /// ledger entirely (legacy fixed placement). When set, `start`
+    /// additionally forces `vault.epoch_placement` on, genesis-bonds
+    /// every initial peer, and the `drive` loop seals + broadcasts an
+    /// epoch at every boundary.
+    pub epoch_ms: u64,
 }
 
 impl Default for ClusterConfig {
@@ -133,6 +153,7 @@ impl Default for ClusterConfig {
             vault: VaultConfig::default(),
             sim: SimOpts::default(),
             byzantine_frac: 0.0,
+            epoch_ms: 0,
         }
     }
 }
@@ -162,6 +183,14 @@ pub struct OpResult<T> {
     pub latency_ms: u64,
 }
 
+/// The simulated chain driver: the ledger plus the boundary schedule
+/// the `drive` loop seals epochs on.
+struct EpochDriver {
+    ledger: Ledger,
+    epoch_ms: u64,
+    next_boundary_ms: u64,
+}
+
 pub struct Cluster<N: ClusterRuntime = SimNet> {
     pub net: N,
     rng: Rng,
@@ -169,6 +198,8 @@ pub struct Cluster<N: ClusterRuntime = SimNet> {
     /// Op registry + completion queue for the [`VaultApi`] surface,
     /// keyed by `(issuing node, per-peer op id)`.
     api: ApiState<ObjectId, (NodeId, u64)>,
+    /// Epoch ledger (ISSUE 5); `None` under legacy fixed placement.
+    chain: Option<EpochDriver>,
 }
 
 /// A cluster over the sharded runtime.
@@ -180,6 +211,7 @@ impl Cluster<SimNet> {
     pub fn start(cfg: ClusterConfig) -> Cluster<SimNet> {
         let mut vault = cfg.vault.clone();
         vault.n_nodes = cfg.peers;
+        vault.epoch_placement |= cfg.epoch_ms > 0;
         let mut sim = cfg.sim.clone();
         sim.seed = cfg.seed;
         let net = SimNet::new(vault, cfg.peers, sim);
@@ -194,6 +226,7 @@ impl Cluster<ShardNet> {
     pub fn start_sharded(cfg: ClusterConfig, shards: usize) -> ShardedCluster {
         let mut vault = cfg.vault.clone();
         vault.n_nodes = cfg.peers;
+        vault.epoch_placement |= cfg.epoch_ms > 0;
         let mut sim = cfg.sim.clone();
         sim.seed = cfg.seed;
         let net = ShardNet::new(vault, cfg.peers, sim, shards);
@@ -210,11 +243,106 @@ impl<N: ClusterRuntime> Cluster<N> {
                 net.peer_mut(i).cfg.byzantine = true;
             }
         }
-        Cluster { net, rng, cfg, api: ApiState::default() }
+        // Epoch ledger: genesis-bond every initial identity, seal the
+        // first epoch, and let every peer adopt it before any saga
+        // starts (the broadcast lands 1 virtual ms out).
+        let chain = (cfg.epoch_ms > 0).then(|| {
+            let mut ledger = Ledger::new();
+            for i in 0..net.len() {
+                ledger.submit(ChainTx::Bond { info: net.peer(i).info, stake: GENESIS_STAKE });
+            }
+            EpochDriver { ledger, epoch_ms: cfg.epoch_ms, next_boundary_ms: cfg.epoch_ms }
+        });
+        let mut cluster = Cluster { net, rng, cfg, api: ApiState::default(), chain };
+        if cluster.chain.is_some() {
+            cluster.seal_and_broadcast_epoch();
+            let t = cluster.net.now_ms() + 2;
+            cluster.net.run_until(t);
+        }
+        cluster
     }
 
     pub fn config(&self) -> &ClusterConfig {
         &self.cfg
+    }
+
+    // ---- simulated chain (ISSUE 5) -------------------------------------
+
+    /// Read access to the epoch ledger, when the chain is enabled.
+    pub fn ledger(&self) -> Option<&Ledger> {
+        self.chain.as_ref().map(|c| &c.ledger)
+    }
+
+    /// The chain's current sealed view, when the chain is enabled.
+    pub fn epoch_view(&self) -> Option<&EpochView> {
+        self.ledger().map(|l| l.current())
+    }
+
+    fn announce_of(view: &EpochView) -> EpochAnnounce {
+        EpochAnnounce {
+            epoch: view.epoch,
+            beacon: view.beacon,
+            tx_digest: view.tx_digest,
+            n_nodes: view.n_nodes() as u64,
+        }
+    }
+
+    /// The ring point `chash` is anchored to right now, as harnesses
+    /// see it: the beacon-salted placement point under the chain, the
+    /// raw hash in legacy mode.
+    pub fn placement_target(&self, chash: &Hash256) -> Hash256 {
+        match self.epoch_view() {
+            Some(v) => crate::proto::selection::placement_point(v.epoch, &v.beacon, chash),
+            None => *chash,
+        }
+    }
+
+    /// Seal the open epoch and broadcast the announce to every live
+    /// peer (down/blackholed peers miss it and catch up later).
+    fn seal_and_broadcast_epoch(&mut self) {
+        let Some(ch) = self.chain.as_mut() else { return };
+        let view = ch.ledger.seal_epoch();
+        let msg = Msg::EpochUpdate(Self::announce_of(view));
+        for i in 0..self.net.len() {
+            self.net.inject(i, msg.clone());
+        }
+    }
+
+    /// Seal every boundary the virtual clock has reached. Called from
+    /// the `drive` loop, which also clamps its slices to boundaries so
+    /// no epoch is skipped no matter how far one call advances.
+    fn seal_due_epochs(&mut self) {
+        while let Some(ch) = self.chain.as_mut() {
+            if self.net.now_ms() < ch.next_boundary_ms {
+                return;
+            }
+            ch.next_boundary_ms += ch.epoch_ms;
+            self.seal_and_broadcast_epoch();
+        }
+    }
+
+    /// Join one peer with a caller-chosen identity seed (the adaptive
+    /// adversary scenario grinds seeds toward a placement point),
+    /// bonding it on the ledger and syncing it to the current epoch.
+    pub fn spawn_seeded(&mut self, region: u8, seed: [u8; 32], byzantine: bool) -> usize {
+        let idx = self.net.spawn_peer_seeded(region, seed);
+        if byzantine {
+            self.net.peer_mut(idx).cfg.byzantine = true;
+        }
+        self.sync_new_peer(idx);
+        idx
+    }
+
+    /// Bond a freshly spawned peer on the ledger (activates next
+    /// boundary) and hand it the current epoch immediately so it can
+    /// participate in this epoch's placement instead of idling at
+    /// genesis until the next announce.
+    fn sync_new_peer(&mut self, idx: usize) {
+        let info = self.net.peer(idx).info;
+        let Some(ch) = self.chain.as_mut() else { return };
+        ch.ledger.submit(ChainTx::Bond { info, stake: GENESIS_STAKE });
+        let ann = Self::announce_of(ch.ledger.current());
+        self.net.inject(idx, Msg::EpochUpdate(ann));
     }
 
     /// A uniformly random live peer index to act as client.
@@ -296,7 +424,11 @@ impl<N: ClusterRuntime> Cluster<N> {
     }
 
     /// Kill `n` random live peers and join `n` fresh ones — one churn
-    /// step. Returns the killed indices.
+    /// step. Under the epoch chain every leave/join is mirrored as a
+    /// ledger transaction (unbond the departed identity's full stake,
+    /// bond the join), activating at the next boundary — churn *is* the
+    /// on-chain traffic whose bytes `bench-epoch` accounts. Returns the
+    /// killed indices.
     pub fn churn(&mut self, n: usize) -> Vec<usize> {
         let mut killed = Vec::with_capacity(n);
         for _ in 0..n {
@@ -305,11 +437,16 @@ impl<N: ClusterRuntime> Cluster<N> {
                 if self.net.is_up(i) {
                     self.net.kill(i);
                     killed.push(i);
+                    let id = self.net.peer(i).info.id;
+                    if let Some(ch) = self.chain.as_mut() {
+                        ch.ledger.submit(ChainTx::Unbond { id, stake: u64::MAX });
+                    }
                     break;
                 }
             }
             let region = (self.rng.range(0, self.cfg.sim.regions.max(1))) as u8;
-            self.net.spawn_peer(region);
+            let idx = self.net.spawn_peer(region);
+            self.sync_new_peer(idx);
         }
         killed
     }
@@ -374,14 +511,20 @@ impl<N: ClusterRuntime> VaultApi for Cluster<N> {
 
     fn drive(&mut self, until_ms: u64) {
         // Slice so deadline expiry lands at bounded, deterministic
-        // boundaries regardless of how far a single call advances.
+        // boundaries regardless of how far a single call advances —
+        // and clamp each slice to the next chain boundary so epochs
+        // seal exactly on schedule.
         while self.net.now_ms() < until_ms {
-            let step = (self.net.now_ms() + DRIVE_SLICE_MS).min(until_ms);
+            self.seal_due_epochs();
+            let boundary =
+                self.chain.as_ref().map(|c| c.next_boundary_ms).unwrap_or(u64::MAX);
+            let step = (self.net.now_ms() + DRIVE_SLICE_MS).min(until_ms).min(boundary);
             for (node, ev) in self.net.run_until(step) {
                 self.absorb_event(node, ev);
             }
             self.api.expire(self.net.now_ms());
         }
+        self.seal_due_epochs();
     }
 
     fn poll_completions(&mut self) -> Vec<OpCompletion<ObjectId>> {

@@ -42,6 +42,7 @@
 pub mod analysis;
 pub mod api;
 pub mod baseline;
+pub mod chain;
 pub mod codec;
 pub mod coordinator;
 pub mod crypto;

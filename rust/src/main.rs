@@ -10,6 +10,11 @@
 //! * `bench-maint`  — maintenance-plane bandwidth + repair-convergence
 //!                    bench, legacy vs batched heartbeats in the same
 //!                    process; emits `BENCH_maint.json`.
+//! * `bench-epoch`  — epoch-chain footprint bench: on-chain bytes/epoch
+//!                    vs object count and vs cluster size (should be
+//!                    churn-bound, object-independent), migration
+//!                    traffic per rotation, availability during
+//!                    reconfiguration; emits `BENCH_epoch.json`.
 //! * `tcp-demo`     — bring up a real-TCP localhost cluster and do one
 //!                    store/query round trip.
 //! * `sim`          — §6.1 durability simulations (fig4|fig5|fig6).
@@ -18,6 +23,7 @@
 //!                    against the native codec.
 
 use vault::analysis::{bounds, ctmc};
+use vault::api::VaultApi;
 use vault::coordinator::workload::{run_open_loop, Corpus, OpenLoopReport, OpenLoopSpec};
 use vault::coordinator::{Cluster, ClusterConfig, ClusterRuntime};
 use vault::crypto::Hash256;
@@ -42,6 +48,7 @@ fn main() {
         "bench-ops" => cmd_bench_ops(&args),
         "bench-codec" => cmd_bench_codec(&args),
         "bench-maint" => cmd_bench_maint(&args),
+        "bench-epoch" => cmd_bench_epoch(&args),
         "tcp-demo" => cmd_tcp_demo(&args),
         "sim" => cmd_sim(&args),
         "analyze" => cmd_analyze(&args),
@@ -56,6 +63,8 @@ fn main() {
                  bench-codec [--smoke] [--seed 7] [--out BENCH_codec.json]\n\
                  bench-maint [--smoke] [--peers 256] [--chunks 64] [--r 16] [--minutes 5]\n\
                  \x20            [--seed 7] [--out BENCH_maint.json]\n\
+                 bench-epoch [--smoke] [--epochs 4] [--epoch-ms 60000] [--churn 4]\n\
+                 \x20            [--seed 7] [--out BENCH_epoch.json]\n\
                  tcp-demo    --peers 8 --size 65536\n\
                  sim         --fig 4|5|6 [--nodes 100000] [--objects 1000] [--churn 2.0] [--years 1]\n\
                  analyze     [--n 80] [--k 32] [--churn-q 0.01] [--evict 0] [--steps 512]\n\
@@ -545,6 +554,207 @@ fn cmd_bench_maint(args: &Args) {
     }
     println!(
         "maintenance bytes/node/min reduced {bytes_reduction:.1}x, msgs {msgs_reduction:.1}x \
+         ({wall_secs:.1}s wall)"
+    );
+}
+
+/// Outcome of one epoch-chain trial (fixed peers/objects, several
+/// sealed epochs with churn).
+struct EpochTrial {
+    peers: usize,
+    objects: usize,
+    /// Exact on-chain bytes appended by each measured epoch.
+    onchain_bytes: Vec<u64>,
+    /// Repair/migration payload pulled during each epoch window.
+    migration_bytes: Vec<u64>,
+    /// Reads issued right after each boundary (mid-reconfiguration).
+    avail_ok: usize,
+    avail_total: usize,
+}
+
+impl EpochTrial {
+    fn mean_onchain(&self) -> f64 {
+        self.onchain_bytes.iter().sum::<u64>() as f64 / self.onchain_bytes.len().max(1) as f64
+    }
+    fn mean_migration(&self) -> f64 {
+        self.migration_bytes.iter().sum::<u64>() as f64
+            / self.migration_bytes.len().max(1) as f64
+    }
+    fn availability(&self) -> f64 {
+        self.avail_ok as f64 / self.avail_total.max(1) as f64
+    }
+    fn json_row(&self) -> String {
+        let arr = |v: &[u64]| {
+            let items: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+            format!("[{}]", items.join(", "))
+        };
+        format!(
+            "{{\"peers\": {}, \"objects\": {}, \"onchain_bytes_per_epoch\": {}, \
+             \"mean_onchain_bytes_per_epoch\": {:.1}, \"migration_bytes_per_epoch\": {}, \
+             \"mean_migration_bytes_per_epoch\": {:.1}, \"availability_during_rotation\": {:.4}}}",
+            self.peers,
+            self.objects,
+            arr(&self.onchain_bytes),
+            self.mean_onchain(),
+            arr(&self.migration_bytes),
+            self.mean_migration(),
+            self.availability(),
+        )
+    }
+}
+
+fn run_epoch_trial(
+    peers: usize,
+    objects: usize,
+    epochs: u64,
+    epoch_ms: u64,
+    churn: usize,
+    object_size: usize,
+    seed: u64,
+) -> EpochTrial {
+    let mut cfg = ClusterConfig::small_test(peers);
+    cfg.seed = seed;
+    cfg.epoch_ms = epoch_ms;
+    cfg.vault.rotation_grace_ms = epoch_ms / 3;
+    // Fast maintenance timers so retirement detection and repair
+    // convergence fit comfortably inside one epoch.
+    cfg.vault.heartbeat_ms = 5_000;
+    cfg.vault.suspicion_ms = 15_000;
+    cfg.vault.tick_ms = 5_000;
+    let mut cluster = Cluster::start(cfg);
+    let mut rng = Rng::new(seed ^ 0xE90C);
+    let mut ids = Vec::with_capacity(objects);
+    for o in 0..objects {
+        let mut data = vec![0u8; object_size];
+        rng.fill_bytes(&mut data);
+        let client = cluster.random_client();
+        let id = cluster
+            .store_blocking(client, &data, format!("epoch-bench-{o}").as_bytes(), 0)
+            .expect("seed store")
+            .value;
+        ids.push((id, data));
+    }
+
+    let mut onchain_bytes = Vec::with_capacity(epochs as usize);
+    let mut migration_bytes = Vec::with_capacity(epochs as usize);
+    let (mut avail_ok, mut avail_total) = (0usize, 0usize);
+    for _ in 0..epochs {
+        let repair_before = cluster.net.total_repair_traffic();
+        let epoch_before = cluster.ledger().expect("chain enabled").current_epoch();
+        // This epoch's on-chain traffic: one churn wave of ledger txs.
+        cluster.churn(churn);
+        // Cross the boundary, then probe availability *during* the
+        // reconfiguration window (groups mid-rotation).
+        let boundary = ((cluster.net.now_ms() / epoch_ms) + 1) * epoch_ms;
+        cluster.drive(boundary + 1_000);
+        for (id, want) in ids.iter().take(4) {
+            let client = cluster.random_client();
+            avail_total += 1;
+            let ok = cluster
+                .query_blocking(client, id)
+                .map(|r| &r.value == want)
+                .unwrap_or(false);
+            if ok {
+                avail_ok += 1;
+            }
+        }
+        // Let the rotation converge before the next boundary.
+        let settle = boundary + epoch_ms - epoch_ms / 12;
+        if settle > cluster.net.now_ms() {
+            cluster.drive(settle);
+        }
+        let ledger = cluster.ledger().expect("chain enabled");
+        onchain_bytes.push(ledger.onchain_bytes_of(epoch_before + 1));
+        migration_bytes.push(cluster.net.total_repair_traffic() - repair_before);
+    }
+    EpochTrial { peers, objects, onchain_bytes, migration_bytes, avail_ok, avail_total }
+}
+
+/// Epoch-chain footprint benchmark (ISSUE 5): on-chain bytes per epoch
+/// swept over stored-object count (the paper-backed claim: footprint is
+/// churn-bound, never per-object) and over cluster size, plus rotation
+/// migration traffic and read availability during reconfiguration.
+fn cmd_bench_epoch(args: &Args) {
+    let smoke = args.bool("smoke");
+    let seed = args.get("seed", 7u64);
+    let epochs = args.get("epochs", if smoke { 2 } else { 4u64 });
+    let epoch_ms = args.get("epoch-ms", 60_000u64);
+    let churn = args.get("churn", if smoke { 2 } else { 4usize });
+    let object_size = args.get("size", 12_000usize);
+    let out = args.str("out", "BENCH_epoch.json");
+    let base_peers = if smoke { 40 } else { 96 };
+    let objects_sweep: &[usize] = if smoke { &[2, 8] } else { &[4, 16, 64] };
+    let nodes_sweep: &[usize] = if smoke { &[32, 48] } else { &[48, 96, 144] };
+    let sweep_objects = if smoke { 4 } else { 8 };
+    println!(
+        "bench-epoch{}: {epochs} epochs x {epoch_ms} ms, churn {churn}/epoch, \
+         objects sweep {objects_sweep:?} @ {base_peers} peers, nodes sweep {nodes_sweep:?}",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let wall = Timer::start();
+    let mut obj_rows = Vec::new();
+    for &objects in objects_sweep {
+        let t = run_epoch_trial(base_peers, objects, epochs, epoch_ms, churn, object_size, seed);
+        println!(
+            "  objects {objects:>3}: {:>8.0} chain B/epoch, {:>10.0} migration B/epoch, \
+             availability {:.3}",
+            t.mean_onchain(),
+            t.mean_migration(),
+            t.availability()
+        );
+        obj_rows.push(t);
+    }
+    let mut node_rows = Vec::new();
+    for &peers in nodes_sweep {
+        let t =
+            run_epoch_trial(peers, sweep_objects, epochs, epoch_ms, churn, object_size, seed);
+        println!(
+            "  peers {peers:>4}: {:>9.0} chain B/epoch, {:>10.0} migration B/epoch, \
+             availability {:.3}",
+            t.mean_onchain(),
+            t.mean_migration(),
+            t.availability()
+        );
+        node_rows.push(t);
+    }
+
+    // The headline claim: on-chain bytes/epoch must not grow with the
+    // number of stored objects (placement is sampled, never recorded).
+    let means: Vec<f64> = obj_rows.iter().map(|t| t.mean_onchain()).collect();
+    let max = means.iter().cloned().fold(f64::MIN, f64::max);
+    let min = means.iter().cloned().fold(f64::MAX, f64::min);
+    let ratio = max / min.max(1e-9);
+    let independent = ratio <= 1.05;
+    let avail_min = obj_rows
+        .iter()
+        .chain(node_rows.iter())
+        .map(|t| t.availability())
+        .fold(f64::MAX, f64::min);
+    let wall_secs = wall.elapsed_s();
+    let rows = |v: &[EpochTrial]| {
+        let items: Vec<String> = v.iter().map(|t| format!("    {}", t.json_row())).collect();
+        format!("[\n{}\n  ]", items.join(",\n"))
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"epoch_plane\",\n  \"smoke\": {smoke},\n  \"seed\": {seed},\n  \
+         \"epochs_per_trial\": {epochs},\n  \"epoch_ms\": {epoch_ms},\n  \
+         \"churn_per_epoch\": {churn},\n  \"object_bytes\": {object_size},\n  \
+         \"objects_sweep\": {},\n  \"nodes_sweep\": {},\n  \
+         \"onchain_bytes_ratio_max_over_min_across_objects\": {ratio:.4},\n  \
+         \"onchain_independent_of_objects\": {independent},\n  \
+         \"min_availability_during_rotation\": {avail_min:.4},\n  \
+         \"wall_secs\": {wall_secs:.3}\n}}\n",
+        rows(&obj_rows),
+        rows(&node_rows),
+    );
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("failed to write {out}: {e}"),
+    }
+    println!(
+        "on-chain bytes/epoch across object counts: max/min = {ratio:.3} \
+         (independent: {independent}); min availability during rotation {avail_min:.3} \
          ({wall_secs:.1}s wall)"
     );
 }

@@ -424,6 +424,13 @@ impl ShardNet {
     pub fn spawn_peer(&mut self, region: u8) -> usize {
         let mut seed = [0u8; 32];
         self.master_rng.fill_bytes(&mut seed);
+        self.spawn_peer_seeded(region, seed)
+    }
+
+    /// Join a peer with a caller-chosen identity seed (see
+    /// `SimNet::spawn_peer_seeded`); `spawn_peer` draws from the master
+    /// RNG and delegates here.
+    pub fn spawn_peer_seeded(&mut self, region: u8, seed: [u8; 32]) -> usize {
         let mut cfg = self.cfg_template.clone();
         cfg.byzantine = false;
         let peer = VaultPeer::new(cfg, &seed, region);
@@ -449,6 +456,22 @@ impl ShardNet {
         shard.drain(now, local, out, &routes, &opts);
         self.exchange();
         idx
+    }
+
+    /// Deliver a system message to one peer out of band (chain-watcher
+    /// epoch announces; see `SimNet::inject`). Enqueued 1 ms ahead in
+    /// the destination shard, inside the conservative lookahead.
+    pub fn inject(&mut self, to: usize, msg: Msg) {
+        let (s, l) = self.index[to];
+        let shard = self.shards[s].as_mut().expect("shard in flight");
+        let slot = &shard.slots[l];
+        if !slot.up || slot.attacked {
+            shard.stats.dropped += 1;
+            return;
+        }
+        let from = slot.peer.info.id;
+        let at = self.now_ms + 1;
+        shard.push_local(at, EventKind::Deliver { to_local: l, from, msg });
     }
 
     /// Scenario hook: change in-flight message loss mid-run.

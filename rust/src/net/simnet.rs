@@ -266,6 +266,15 @@ impl SimNet {
     pub fn spawn_peer(&mut self, region: u8) -> usize {
         let mut seed = [0u8; 32];
         self.rng.fill_bytes(&mut seed);
+        self.spawn_peer_seeded(region, seed)
+    }
+
+    /// Join a peer with a caller-chosen identity seed — the adaptive
+    /// adversary hook (`sim::scenario` grinds seeds so the identity
+    /// lands near a target placement point) and the deterministic
+    /// harness hook. `spawn_peer` draws its seed from the runtime RNG
+    /// and delegates here, so the two paths share all wiring.
+    pub fn spawn_peer_seeded(&mut self, region: u8, seed: [u8; 32]) -> usize {
         let mut cfg = self.slots[0].peer.cfg.clone();
         cfg.byzantine = false;
         let peer = VaultPeer::new(cfg, &seed, region);
@@ -306,6 +315,20 @@ impl SimNet {
     /// and timer chain are intact, unlike a [`Self::kill`]ed peer)?
     pub fn is_attacked(&self, i: usize) -> bool {
         self.slots[i].attacked
+    }
+
+    /// Deliver a system message to one peer out of band (no sender, no
+    /// link modelling beyond a 1 ms lookahead). The chain watcher uses
+    /// this to surface sealed epochs (`Msg::EpochUpdate`); down or
+    /// blackholed peers miss the delivery and catch up at the next
+    /// boundary.
+    pub fn inject(&mut self, to: usize, msg: Msg) {
+        if !self.slots[to].up || self.slots[to].attacked {
+            self.stats.dropped += 1;
+            return;
+        }
+        let from = self.slots[to].peer.info.id;
+        self.push_event(self.now_ms + 1, EventKind::Deliver { to, from, msg });
     }
 
     // ---- client operations -----------------------------------------------

@@ -87,7 +87,10 @@ impl VaultPeer {
         let (id, chunks) = encode_object(object, secret, self.cfg.k_outer, self.cfg.n_outer);
         let mut chunk_states = HashMap::default();
         for c in chunks {
-            let candidates = dir.closest(&c.chash, self.cfg.candidates);
+            // Candidates come from the chunk's *placement anchor*: the
+            // raw hash in legacy mode, the epoch's beacon-salted point
+            // under epoch placement (see `selection::placement_point`).
+            let candidates = dir.closest(&self.chunk_target(&c.chash), self.cfg.candidates);
             let encoder = InnerEncoder::new(c.chash, &c.bytes, self.cfg.k_inner);
             let mut sc = StoreChunk {
                 chash: c.chash,
@@ -147,8 +150,6 @@ impl VaultPeer {
         pk: [u8; 32],
         proofs: Vec<(u64, VrfProof)>,
     ) {
-        let r_inner = self.cfg.r_inner;
-        let n_nodes = self.cfg.n_nodes;
         let Some(sop) = self.store_ops.get_mut(&op) else { return };
         let expires = sop.expires_ms;
         let Some(sc) = sop.chunks.get_mut(&chash) else { return };
@@ -160,12 +161,12 @@ impl VaultPeer {
             return;
         }
         let proof = proofs.iter().find(|(i, _)| *i == index).map(|(_, p)| *p);
-        let valid = proof
-            .map(|p| {
-                self.metrics.vrf_verifies += 1;
-                super::selection::verify_selection(&pk, &chash, index, &p, r_inner, n_nodes)
-            })
-            .unwrap_or(false);
+        // Epoch-aware verification (`verify_peer_proof`): under epoch
+        // placement a candidate proves eligibility in the current
+        // `vault-select-v2` domain; a proof from the just-closed epoch
+        // is still accepted for sagas racing a boundary.
+        let valid =
+            proof.map(|p| self.verify_peer_proof(&pk, &chash, index, &p)).unwrap_or(false);
         let sop = self.store_ops.get_mut(&op).unwrap();
         let sc = sop.chunks.get_mut(&chash).unwrap();
         if !valid {
@@ -286,7 +287,15 @@ impl VaultPeer {
         let op = self.fresh_op();
         let mut chunks = HashMap::default();
         for chash in &id.chunks {
-            let candidates = dir.closest(chash, self.cfg.candidates);
+            // Look where the chunk lives *now*; during a rotation
+            // window also ask the previous epoch's neighborhood, where
+            // retiring members keep serving until their grace expires.
+            let mut candidates = dir.closest(&self.chunk_target(chash), self.cfg.candidates);
+            if let Some(prev_target) = self.prev_chunk_target(chash, out.now_ms) {
+                candidates.extend(dir.closest(&prev_target, self.cfg.candidates));
+                let mut seen: HashSet<NodeId> = HashSet::default();
+                candidates.retain(|p| seen.insert(p.id));
+            }
             let mut qc = QueryChunk {
                 decoder: InnerDecoder::new(*chash, self.cfg.k_inner),
                 candidates,

@@ -144,6 +144,27 @@ impl HeartbeatBatch {
     }
 }
 
+/// Epoch-transition notification (ISSUE 5): the chain watcher on each
+/// node surfaces a freshly sealed ledger epoch to the peer state
+/// machine. Carries everything a follower needs to *verify* the
+/// transition against its own chain head (`beacon ==
+/// chain::next_beacon(prev_beacon, epoch, tx_digest)`) and to update
+/// its selection parameters — constant-size regardless of how many
+/// objects the system stores (the on-chain-footprint claim).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EpochAnnounce {
+    pub epoch: u64,
+    /// The epoch's randomness beacon (hash chain head).
+    pub beacon: [u8; 32],
+    /// Digest of the transactions sealed into this epoch — the chain
+    /// link a verifier folds with its previous beacon.
+    pub tx_digest: [u8; 32],
+    /// Ledger membership size at this epoch (selection distance metric).
+    pub n_nodes: u64,
+}
+
+crate::wire_struct!(EpochAnnounce { epoch, beacon, tx_digest, n_nodes });
+
 /// Why a message is being sent — the sender-side traffic class used by
 /// the [`super::MaintStats`] bandwidth-accounting layer. Replies whose
 /// purpose the responder cannot know (e.g. `FragReply` serving either a
@@ -212,6 +233,11 @@ pub enum Msg {
     /// Answered with [`Msg::Members`].
     GetMembers { chash: Hash256 },
 
+    /// Epoch transition from the chain watcher (ISSUE 5): verify the
+    /// beacon link, adopt the new `(epoch, beacon)` selection domain,
+    /// and rotate chunk groups (see `peer::VaultPeer::rotate_groups`).
+    EpochUpdate(EpochAnnounce),
+
     /// Ask the receiver to become a new group member storing fragment
     /// `index` (it will pull chunk/fragments from `members`).
     RepairReq {
@@ -252,6 +278,7 @@ impl Msg {
             Msg::Pong { .. } => 15,
             Msg::HeartbeatBatch(_) => 16,
             Msg::GetMembers { .. } => 17,
+            Msg::EpochUpdate(_) => 18,
         }
     }
 
@@ -313,6 +340,7 @@ impl Msg {
             Msg::Heartbeat(_)
             | Msg::HeartbeatBatch(_)
             | Msg::GetMembers { .. }
+            | Msg::EpochUpdate(_)
             | Msg::Members { .. } => Purpose::Heartbeat,
             Msg::RepairReq { .. } | Msg::RepairAck { .. } => Purpose::Repair,
             Msg::GetChunk { .. } | Msg::ChunkReply { .. } => Purpose::Join,
@@ -340,6 +368,7 @@ impl Msg {
             Msg::Pong { .. } => "Pong",
             Msg::HeartbeatBatch(_) => "HeartbeatBatch",
             Msg::GetMembers { .. } => "GetMembers",
+            Msg::EpochUpdate(_) => "EpochUpdate",
         }
     }
 
@@ -371,6 +400,7 @@ impl Msg {
                 HDR + 64 + 64 + b.claims.len() * (32 + 8 + 80 + 15) + 65 * added
             }
             Msg::GetMembers { .. } => HDR,
+            Msg::EpochUpdate(_) => HDR + 8 + 32 + 32 + 8,
             Msg::RepairReq { members, .. } => HDR + 16 + 65 * members.len(),
             Msg::RepairAck { .. } => HDR + 10,
             Msg::FindNode { .. } => HDR,
@@ -457,6 +487,7 @@ impl Encode for Msg {
             Msg::Ping { op } | Msg::Pong { op } => w.u64(*op),
             Msg::HeartbeatBatch(b) => b.encode(w),
             Msg::GetMembers { chash } => chash.encode(w),
+            Msg::EpochUpdate(a) => a.encode(w),
         }
     }
 }
@@ -526,6 +557,7 @@ impl Decode for Msg {
             15 => Msg::Pong { op: r.u64()? },
             16 => Msg::HeartbeatBatch(HeartbeatBatch::decode(r)?),
             17 => Msg::GetMembers { chash: Hash256::decode(r)? },
+            18 => Msg::EpochUpdate(EpochAnnounce::decode(r)?),
             t => return Err(WireError::BadTag(t as u32)),
         })
     }
@@ -587,6 +619,12 @@ mod tests {
             Msg::GetProofs { op: 1, chash, indices: vec![0, 5, 9] },
             Msg::HeartbeatBatch(batch),
             Msg::GetMembers { chash },
+            Msg::EpochUpdate(EpochAnnounce {
+                epoch: 12,
+                beacon: [0xBE; 32],
+                tx_digest: [0xD1; 32],
+                n_nodes: 1000,
+            }),
             Msg::ProofsReply { op: 1, chash, pk: sk.public, proofs: vec![(5, proof)] },
             Msg::StoreFrag { op: 2, chash, frag: frag.clone(), members: members.clone(), expires_ms: 0 },
             Msg::StoreFragAck { op: 2, chash, index: 3, ok: true },
@@ -626,7 +664,7 @@ mod tests {
         let mut tags: Vec<u8> = msgs.iter().map(|m| m.tag()).collect();
         tags.sort_unstable();
         tags.dedup();
-        assert_eq!(tags.len(), 18);
+        assert_eq!(tags.len(), 19);
     }
 
     #[test]

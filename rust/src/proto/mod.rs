@@ -61,6 +61,20 @@ pub struct VaultConfig {
     /// `Msg::Heartbeat` schedule (and with it the pre-batching scenario
     /// fingerprints — see DESIGN.md §Maintenance Plane).
     pub batched_maint: bool,
+    /// Epoch-anchored verifiable placement (ISSUE 5): selection runs in
+    /// the `vault-select-v2` domain with the chain epoch + randomness
+    /// beacon folded into the VRF input, so eligibility is verifiably
+    /// re-sampled every epoch and groups rotate live (departing members
+    /// serve through [`Self::rotation_grace_ms`], newly eligible ones
+    /// join via the repair path). `false` keeps the legacy fixed
+    /// placement (`chash ‖ index`, sampled once at store time) and with
+    /// it every pre-epoch scenario fingerprint — see DESIGN.md §Epochs
+    /// & On-chain Footprint.
+    pub epoch_placement: bool,
+    /// How long a member that lost eligibility at an epoch boundary
+    /// keeps serving its fragment before dropping it (rotation grace
+    /// window). Only meaningful with `epoch_placement`.
+    pub rotation_grace_ms: u64,
     /// Byzantine behaviour (Fig. 6): participate in every protocol but
     /// silently drop stored fragment payloads.
     pub byzantine: bool,
@@ -99,8 +113,27 @@ impl Default for VaultConfig {
             repair_probe: 4,
             claim_verify: ClaimVerify::FirstTime,
             batched_maint: true,
+            epoch_placement: false,
+            rotation_grace_ms: 60_000,
             byzantine: false,
         }
+    }
+}
+
+/// A peer's view of the chain head: the `(epoch, beacon)` pair the
+/// `vault-select-v2` selection domain is anchored to. Updated by
+/// [`messages::EpochAnnounce`] after verifying the beacon-chain link.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EpochState {
+    pub epoch: u64,
+    pub beacon: [u8; 32],
+}
+
+impl EpochState {
+    /// Every node starts at the genesis view (epoch 0, public anchor
+    /// beacon), so the first announce is verifiable by construction.
+    pub fn genesis() -> Self {
+        EpochState { epoch: 0, beacon: crate::chain::genesis_beacon() }
     }
 }
 
@@ -244,6 +277,17 @@ pub struct Metrics {
     pub fragments_stored: u64,
     pub fragments_served: u64,
     pub chunk_cache_hits: u64,
+    /// Epoch transitions adopted / beacon links rejected as inconsistent
+    /// / non-consecutive announces accepted on the catch-up path.
+    pub epoch_updates: u64,
+    pub beacon_rejects: u64,
+    pub epoch_gaps: u64,
+    /// Rotation outcomes per epoch transition: chunks whose eligibility
+    /// carried over vs. chunks that entered the retirement grace window,
+    /// and chunks actually dropped at grace expiry.
+    pub rotations_kept: u64,
+    pub rotations_retired: u64,
+    pub grace_drops: u64,
     /// Sender-side per-purpose bandwidth (filled by the transports).
     pub maint: MaintStats,
 }

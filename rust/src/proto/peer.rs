@@ -20,9 +20,11 @@ use crate::util::rng::Rng;
 use crate::util::rng::fold64;
 
 use super::client::{QueryOp, StoreOp};
-use super::messages::{BatchClaim, Claim, HeartbeatBatch, MemberDelta, Msg, Purpose};
+use super::messages::{BatchClaim, Claim, EpochAnnounce, HeartbeatBatch, MemberDelta, Msg, Purpose};
 use super::selection;
-use super::{AppEvent, ClaimVerify, Directory, Metrics, Outbox, TimerKind, VaultConfig};
+use super::{
+    AppEvent, ClaimVerify, Directory, EpochState, Metrics, Outbox, TimerKind, VaultConfig,
+};
 
 /// Own-proof cache bound and per-overflow eviction slice. Evicting a
 /// bounded slice (instead of wiping all 2¹⁶ entries) keeps the VRF
@@ -70,6 +72,32 @@ pub fn members_digest<'a>(ids: impl Iterator<Item = &'a NodeId>) -> u64 {
 pub struct Member {
     pub info: PeerInfo,
     pub last_seen_ms: u64,
+    /// Epoch rotation (ISSUE 5): this member's last claim proved
+    /// eligibility only under the *previous* epoch, so it is serving
+    /// out its grace window. Retiring members count as alive for
+    /// fragment serving but not toward the group target R, which is
+    /// what lets repair recruit their epoch-eligible replacements while
+    /// they still serve. Always `false` in legacy fixed placement.
+    pub retiring: bool,
+}
+
+impl Member {
+    fn fresh(info: PeerInfo, last_seen_ms: u64) -> Self {
+        Member { info, last_seen_ms, retiring: false }
+    }
+}
+
+/// Outcome of classifying a peer's selection proof against the local
+/// chain view (see [`VaultPeer::classify_peer_proof`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(super) enum ProofStatus {
+    /// Valid under the current epoch (or under the v1 domain when epoch
+    /// placement is off) — a member in good standing.
+    Current,
+    /// Valid only under the previous epoch: a retiring member inside
+    /// its rotation grace window.
+    Graced,
+    Invalid,
 }
 
 /// Scenario-engine fault hooks (see `sim::scenario`), orthogonal to
@@ -101,6 +129,12 @@ pub struct ChunkStore {
     pub cache_expires_ms: u64,
     /// Byzantine behaviour: metadata kept, payload silently dropped.
     pub payload_dropped: bool,
+    /// Epoch rotation: virtual time at which this node, having lost
+    /// eligibility at an epoch boundary, stops serving and drops the
+    /// fragment (0 = eligible / legacy mode). While set, the node keeps
+    /// claiming with its last valid (previous-epoch) proof so the group
+    /// can still read from it during the grace window.
+    pub retire_at_ms: u64,
     /// Member ids included in the last batched-heartbeat delta baseline
     /// (empty ⇒ the next batch sends the full list). Unused in the
     /// legacy per-chunk heartbeat mode.
@@ -175,11 +209,29 @@ pub struct VaultPeer {
     pub(super) query_ops: HashMap<u64, QueryOp>,
     joins: HashMap<Hash256, JoinState>,
     repairs: HashMap<u64, RepairCoord>,
+    /// Chain view this peer's selection domain is anchored to (epoch
+    /// placement mode; stays at genesis in legacy mode).
+    pub(super) cur_epoch: EpochState,
+    /// The immediately preceding epoch — retiring members' proofs still
+    /// verify against it during the rotation grace window.
+    pub(super) prev_epoch: Option<EpochState>,
+    /// Membership-size estimate the previous epoch's proofs were minted
+    /// under (selection thresholds depend on it; see
+    /// [`Self::classify_peer_proof`]).
+    prev_n_nodes: usize,
+    /// End of the current rotation window: until then queries also fan
+    /// out to the previous epoch's neighborhood, where retiring members
+    /// keep serving. 0 ⇒ no rotation in progress.
+    rotation_until_ms: u64,
     /// Own VRF evaluations, cached (paper §4.3.3: proofs are stored
     /// alongside the fragment rather than regenerated each heartbeat).
-    proof_cache: HashMap<(Hash256, u64), Option<VrfProof>>,
-    /// Claims already VRF-verified (ClaimVerify::FirstTime).
-    verified_claims: HashSet<(NodeId, Hash256, u64)>,
+    /// Keyed by `(chash, index, epoch)` — epoch 0 in legacy mode, so
+    /// rotation re-proves exactly once per boundary per chunk.
+    proof_cache: HashMap<(Hash256, u64, u64), Option<VrfProof>>,
+    /// Claims already VRF-verified (ClaimVerify::FirstTime). The epoch
+    /// component forces one re-verification per boundary, which is also
+    /// how retiring members are detected.
+    verified_claims: HashSet<(NodeId, Hash256, u64, u64)>,
     /// Scenario fault-injection switches (all off in normal operation).
     pub fault: PeerFault,
     pub metrics: Metrics,
@@ -202,6 +254,10 @@ impl VaultPeer {
             query_ops: HashMap::default(),
             joins: HashMap::default(),
             repairs: HashMap::default(),
+            cur_epoch: EpochState::genesis(),
+            prev_epoch: None,
+            prev_n_nodes: 0,
+            rotation_until_ms: 0,
             proof_cache: HashMap::default(),
             verified_claims: HashSet::default(),
             fault: PeerFault::default(),
@@ -257,31 +313,131 @@ impl VaultPeer {
 
     // ---- selection helpers ---------------------------------------------
 
-    /// Own selection proof for (chash, index), cached.
+    /// The ring point placement of `chash` is anchored to: the chunk
+    /// hash itself in legacy mode, the epoch's beacon-salted
+    /// [`selection::placement_point`] under epoch placement. Everything
+    /// that locates a chunk's neighborhood (store candidates, query
+    /// fan-out, repair probing) goes through here.
+    pub(super) fn chunk_target(&self, chash: &Hash256) -> Hash256 {
+        if self.cfg.epoch_placement {
+            selection::placement_point(self.cur_epoch.epoch, &self.cur_epoch.beacon, chash)
+        } else {
+            *chash
+        }
+    }
+
+    /// Previous epoch's anchor for `chash` — the query fallback while a
+    /// rotation is in progress. `None` outside the grace window: once
+    /// the retirees have dropped their fragments the old neighborhood
+    /// holds nothing, and doubling every lookup forever would be pure
+    /// waste.
+    pub(super) fn prev_chunk_target(&self, chash: &Hash256, now_ms: u64) -> Option<Hash256> {
+        if !self.cfg.epoch_placement || now_ms >= self.rotation_until_ms {
+            return None;
+        }
+        self.prev_epoch
+            .as_ref()
+            .map(|e| selection::placement_point(e.epoch, &e.beacon, chash))
+    }
+
+    /// Own selection proof for (chash, index) under the *current*
+    /// selection domain, cached per epoch.
     pub(super) fn own_proof(&mut self, chash: &Hash256, index: u64) -> Option<VrfProof> {
-        if let Some(p) = self.proof_cache.get(&(*chash, index)) {
+        let epoch = self.claim_epoch_key();
+        if let Some(p) = self.proof_cache.get(&(*chash, index, epoch)) {
             return *p;
         }
-        let p = selection::prove_selection(
-            &self.key,
-            chash,
-            index,
-            self.cfg.r_inner,
-            self.cfg.n_nodes,
-        );
+        let p = if self.cfg.epoch_placement {
+            selection::prove_selection_v2(
+                &self.key,
+                self.cur_epoch.epoch,
+                &self.cur_epoch.beacon,
+                chash,
+                index,
+                self.cfg.r_inner,
+                self.cfg.n_nodes,
+            )
+        } else {
+            selection::prove_selection(
+                &self.key,
+                chash,
+                index,
+                self.cfg.r_inner,
+                self.cfg.n_nodes,
+            )
+        };
         self.metrics.vrf_proofs += 1;
         // Bound the cache; entries are tiny but chunks can be many.
         // Evict a bounded slice (deterministic DetHashMap iteration
         // order) instead of wiping everything — see PROOF_CACHE_EVICT.
         if self.proof_cache.len() >= PROOF_CACHE_CAP {
-            let victims: Vec<(Hash256, u64)> =
+            let victims: Vec<(Hash256, u64, u64)> =
                 self.proof_cache.keys().take(PROOF_CACHE_EVICT).copied().collect();
             for k in &victims {
                 self.proof_cache.remove(k);
             }
         }
-        self.proof_cache.insert((*chash, index), p);
+        self.proof_cache.insert((*chash, index, epoch), p);
         p
+    }
+
+    /// Classify a peer's selection proof against the local chain view:
+    /// current-epoch valid, previous-epoch valid (retiring member in
+    /// its grace window), or invalid. Legacy mode has a single timeless
+    /// domain, so proofs are either `Current` or `Invalid` there.
+    pub(super) fn classify_peer_proof(
+        &mut self,
+        pk: &[u8; 32],
+        chash: &Hash256,
+        index: u64,
+        proof: &VrfProof,
+    ) -> ProofStatus {
+        self.metrics.vrf_verifies += 1;
+        if !self.cfg.epoch_placement {
+            return if selection::verify_selection(
+                pk,
+                chash,
+                index,
+                proof,
+                self.cfg.r_inner,
+                self.cfg.n_nodes,
+            ) {
+                ProofStatus::Current
+            } else {
+                ProofStatus::Invalid
+            };
+        }
+        if selection::verify_selection_v2(
+            pk,
+            self.cur_epoch.epoch,
+            &self.cur_epoch.beacon,
+            chash,
+            index,
+            proof,
+            self.cfg.r_inner,
+            self.cfg.n_nodes,
+        ) {
+            return ProofStatus::Current;
+        }
+        if let Some(prev) = self.prev_epoch {
+            self.metrics.vrf_verifies += 1;
+            // Verify under the membership size the proof was minted
+            // against — n_nodes may have changed at the boundary, and
+            // the threshold moves with it.
+            if selection::verify_selection_v2(
+                pk,
+                prev.epoch,
+                &prev.beacon,
+                chash,
+                index,
+                proof,
+                self.cfg.r_inner,
+                self.prev_n_nodes.max(1),
+            ) {
+                return ProofStatus::Graced;
+            }
+        }
+        ProofStatus::Invalid
     }
 
     pub(super) fn verify_peer_proof(
@@ -291,8 +447,7 @@ impl VaultPeer {
         index: u64,
         proof: &VrfProof,
     ) -> bool {
-        self.metrics.vrf_verifies += 1;
-        selection::verify_selection(pk, chash, index, proof, self.cfg.r_inner, self.cfg.n_nodes)
+        self.classify_peer_proof(pk, chash, index, proof) != ProofStatus::Invalid
     }
 
     // ---- event entry points --------------------------------------------
@@ -323,6 +478,7 @@ impl VaultPeer {
             Msg::Heartbeat(claim) => self.handle_claim(out, from, claim),
             Msg::HeartbeatBatch(batch) => self.handle_heartbeat_batch(out, from, batch),
             Msg::GetMembers { chash } => self.handle_get_members(out, from, chash),
+            Msg::EpochUpdate(ann) => self.handle_epoch_update(out, from, ann),
             Msg::RepairReq { op, chash, index, members, expires_ms } => {
                 self.handle_repair_req(out, from, op, chash, index, members, expires_ms)
             }
@@ -403,6 +559,7 @@ impl VaultPeer {
             cached_chunk: None,
             cache_expires_ms: 0,
             payload_dropped: false,
+            retire_at_ms: 0,
             announced: HashSet::default(),
             view_digest: None,
         };
@@ -416,10 +573,10 @@ impl VaultPeer {
         let now = out.now_ms;
         for m in members {
             if m.id != self.id() {
-                cs.members.insert(m.id, Member { info: m, last_seen_ms: now });
+                cs.members.insert(m.id, Member::fresh(m, now));
             }
         }
-        cs.members.insert(self.id(), Member { info: self.info, last_seen_ms: now });
+        cs.members.insert(self.id(), Member::fresh(self.info, now));
         self.store.insert(chash, cs);
         self.metrics.fragments_stored += 1;
         out.send(from, Msg::StoreFragAck { op, chash, index, ok: true });
@@ -474,16 +631,28 @@ impl VaultPeer {
         {
             return;
         }
-        let _ = cs;
-        // Selection-proof verification per configured policy.
-        let key = (from, claim.chash, claim.index);
-        let need_verify = match self.cfg.claim_verify {
+        // Selection-proof verification per the effective policy. The
+        // epoch component of the dedup key forces one re-verification
+        // per boundary, which is also how rotation is *observed*: a
+        // proof valid only under the previous epoch marks its sender
+        // retiring. A claimant absent from the current view (evicted,
+        // then reconnected within the same epoch) is re-classified
+        // even if the dedup key still matches — re-inserting it as
+        // non-retiring would close the rotation deficit with a member
+        // whose fragment is about to expire.
+        let in_view = cs.members.contains_key(&from);
+        let key = (from, claim.chash, claim.index, self.claim_epoch_key());
+        let need_verify = match self.effective_claim_verify() {
             ClaimVerify::Always => true,
-            ClaimVerify::FirstTime => !self.verified_claims.contains(&key),
+            ClaimVerify::FirstTime => {
+                !self.verified_claims.contains(&key) || (self.cfg.epoch_placement && !in_view)
+            }
             ClaimVerify::Never => false,
         };
+        let mut status = None;
         if need_verify {
-            if !self.verify_peer_proof(&claim.pk, &claim.chash, claim.index, &claim.proof) {
+            let st = self.classify_peer_proof(&claim.pk, &claim.chash, claim.index, &claim.proof);
+            if st == ProofStatus::Invalid {
                 return;
             }
             if !ed25519::verify(
@@ -494,14 +663,17 @@ impl VaultPeer {
                 return;
             }
             self.remember_verified(key);
+            status = Some(st);
         }
         let region = claim.members.iter().find(|m| m.id == from).map(|m| m.region).unwrap_or(0);
         let cs = self.store.get_mut(&claim.chash).unwrap();
         cs.mutate_members(|view| {
-            view.entry(from).and_modify(|m| m.last_seen_ms = now).or_insert(Member {
-                info: PeerInfo { id: from, pk: claim.pk, region },
-                last_seen_ms: now,
-            });
+            let m = view.entry(from).and_modify(|m| m.last_seen_ms = now).or_insert(
+                Member::fresh(PeerInfo { id: from, pk: claim.pk, region }, now),
+            );
+            if let Some(st) = status {
+                m.retiring = st == ProofStatus::Graced;
+            }
         });
         // Merge piggybacked membership (gossip): learn new members
         // optimistically; suspicion weeds out the dead.
@@ -551,7 +723,7 @@ impl VaultPeer {
                     }
                     Entry::Vacant(v) => {
                         if NodeId::from_pk(&m.pk) == m.id {
-                            v.insert(Member { info: *m, last_seen_ms: now_ms });
+                            v.insert(Member::fresh(*m, now_ms));
                         }
                     }
                 }
@@ -559,12 +731,39 @@ impl VaultPeer {
         });
     }
 
+    /// Claim-verification policy actually in force. Under epoch
+    /// placement, classification is load-bearing — it is how retiring
+    /// members are detected — so the `Never` measurement knob is
+    /// upgraded to `FirstTime` (one verify per claimant per boundary).
+    /// Skipping it entirely would leave every rotated group looking
+    /// fully active until all its retirees drop simultaneously at
+    /// grace expiry, with no replacements ever recruited — below
+    /// k_inner survivors that is permanent loss.
+    fn effective_claim_verify(&self) -> ClaimVerify {
+        if self.cfg.epoch_placement && self.cfg.claim_verify == ClaimVerify::Never {
+            ClaimVerify::FirstTime
+        } else {
+            self.cfg.claim_verify
+        }
+    }
+
+    /// Epoch component of the proof-cache and verified-claims keys:
+    /// constant in legacy mode (prove/verify once ever), the current
+    /// epoch under epoch placement (once per boundary).
+    fn claim_epoch_key(&self) -> u64 {
+        if self.cfg.epoch_placement {
+            self.cur_epoch.epoch
+        } else {
+            0
+        }
+    }
+
     /// Record a claim as verified, evicting a bounded slice at capacity
     /// (same rationale as the own-proof cache: no full-wipe re-verify
     /// storms).
-    fn remember_verified(&mut self, key: (NodeId, Hash256, u64)) {
+    fn remember_verified(&mut self, key: (NodeId, Hash256, u64, u64)) {
         if self.verified_claims.len() >= VERIFIED_CLAIMS_CAP {
-            let victims: Vec<(NodeId, Hash256, u64)> =
+            let victims: Vec<(NodeId, Hash256, u64, u64)> =
                 self.verified_claims.iter().take(VERIFIED_CLAIMS_EVICT).copied().collect();
             for k in &victims {
                 self.verified_claims.remove(k);
@@ -577,8 +776,17 @@ impl VaultPeer {
 
     fn tick(&mut self, dir: &dyn Directory, out: &mut Outbox) {
         let now = out.now_ms;
-        // GC expired objects and stale caches.
-        self.store.retain(|_, cs| cs.expires_ms == 0 || cs.expires_ms > now);
+        // GC expired objects, chunks whose rotation grace window has
+        // closed (the departing-member half of an epoch rotation), and
+        // stale caches.
+        let metrics = &mut self.metrics;
+        self.store.retain(|_, cs| {
+            if cs.retire_at_ms != 0 && now >= cs.retire_at_ms {
+                metrics.grace_drops += 1;
+                return false;
+            }
+            cs.expires_ms == 0 || cs.expires_ms > now
+        });
         let drop_after = self.cfg.suspicion_ms.saturating_mul(3);
         for cs in self.store.values_mut() {
             if cs.cache_expires_ms <= now {
@@ -781,28 +989,42 @@ impl VaultPeer {
         }
         for claim in batch.claims.iter().take(MAX_BATCH_CLAIMS) {
             self.metrics.claims_received += 1;
-            if !self.store.contains_key(&claim.chash) {
+            let Some(cs) = self.store.get(&claim.chash) else {
                 continue;
-            }
-            // Selection-proof verification per configured policy.
-            let key = (from, claim.chash, claim.index);
-            let need_verify = match self.cfg.claim_verify {
+            };
+            // Selection-proof verification per the effective policy;
+            // the epoch key forces a per-boundary re-check, a proof
+            // that only verifies under the previous epoch marks the
+            // sender retiring (rotation grace window), and a claimant
+            // missing from the current view is re-classified even
+            // inside the dedup window (see `handle_claim`).
+            let in_view = cs.members.contains_key(&from);
+            let key = (from, claim.chash, claim.index, self.claim_epoch_key());
+            let need_verify = match self.effective_claim_verify() {
                 ClaimVerify::Always => true,
-                ClaimVerify::FirstTime => !self.verified_claims.contains(&key),
+                ClaimVerify::FirstTime => {
+                    !self.verified_claims.contains(&key) || (self.cfg.epoch_placement && !in_view)
+                }
                 ClaimVerify::Never => false,
             };
+            let mut status = None;
             if need_verify {
-                if !self.verify_peer_proof(&batch.pk, &claim.chash, claim.index, &claim.proof) {
+                let st =
+                    self.classify_peer_proof(&batch.pk, &claim.chash, claim.index, &claim.proof);
+                if st == ProofStatus::Invalid {
                     continue;
                 }
                 self.remember_verified(key);
+                status = Some(st);
             }
             let cs = self.store.get_mut(&claim.chash).unwrap();
             cs.mutate_members(|view| {
-                view.entry(from).and_modify(|m| m.last_seen_ms = now).or_insert(Member {
-                    info: PeerInfo { id: from, pk: batch.pk, region: batch.region },
-                    last_seen_ms: now,
-                });
+                let m = view.entry(from).and_modify(|m| m.last_seen_ms = now).or_insert(
+                    Member::fresh(PeerInfo { id: from, pk: batch.pk, region: batch.region }, now),
+                );
+                if let Some(st) = status {
+                    m.retiring = st == ProofStatus::Graced;
+                }
             });
             if !claim.delta.added.is_empty() {
                 self.merge_members(now, &claim.chash, &claim.delta.added);
@@ -836,6 +1058,105 @@ impl VaultPeer {
         out.send_p(from, Msg::Members { chash, members }, Purpose::Heartbeat);
     }
 
+    // ---- epoch transitions & live rotation (ISSUE 5) --------------------
+
+    /// Adopt a freshly sealed ledger epoch. Announces are accepted only
+    /// from this node's **own chain watcher** (the runtime `inject`
+    /// hook addresses them from ourselves): the beacon link check alone
+    /// cannot distinguish lineages — an attacker choosing the tx digest
+    /// can always fabricate a self-consistent link — so a remote peer
+    /// must never be able to push us onto a forged fork. On top of
+    /// that, a consecutive epoch must extend our local beacon chain
+    /// (`next_beacon(cur, epoch, tx_digest)`), catching a corrupted or
+    /// desynchronized watcher feed. Non-consecutive announces (we were
+    /// down or partitioned across a boundary) are accepted on a
+    /// catch-up path — the link cannot be checked without the missing
+    /// epochs' tx digests — and counted in `metrics.epoch_gaps`.
+    fn handle_epoch_update(&mut self, out: &mut Outbox, from: NodeId, ann: EpochAnnounce) {
+        if from != self.info.id {
+            return; // only the local chain watcher feeds epoch state
+        }
+        if !self.cfg.epoch_placement || ann.epoch <= self.cur_epoch.epoch {
+            return; // legacy mode, or a stale/duplicate announce
+        }
+        let consecutive = ann.epoch == self.cur_epoch.epoch + 1;
+        if consecutive {
+            let expect =
+                crate::chain::next_beacon(&self.cur_epoch.beacon, ann.epoch, &ann.tx_digest);
+            if expect != ann.beacon {
+                self.metrics.beacon_rejects += 1;
+                return;
+            }
+        } else {
+            self.metrics.epoch_gaps += 1;
+        }
+        self.metrics.epoch_updates += 1;
+        if consecutive {
+            // Grace state: the epoch we just left stays verifiable for
+            // one boundary (retiring members' proofs classify Graced),
+            // and queries keep falling back to its neighborhood while
+            // its retirees can still serve. `prev_n_nodes` remembers
+            // the membership size those proofs were *minted* under —
+            // the selection threshold moves with n_nodes.
+            self.prev_epoch = Some(self.cur_epoch);
+            self.prev_n_nodes = self.cfg.n_nodes;
+            self.rotation_until_ms = out.now_ms + self.cfg.rotation_grace_ms.max(1);
+        } else {
+            // Across a multi-epoch gap our last-known epoch is ancient
+            // history: granting it Graced status would re-admit proofs
+            // (and adversary residency) from many boundaries ago, so no
+            // grace is extended and no stale-neighborhood fallback runs.
+            self.prev_epoch = None;
+            self.rotation_until_ms = 0;
+        }
+        self.cur_epoch = EpochState { epoch: ann.epoch, beacon: ann.beacon };
+        self.cfg.n_nodes = (ann.n_nodes as usize).max(1);
+        self.rotate_groups(out);
+    }
+
+    /// Re-sample this node's eligibility for every stored chunk under
+    /// the new epoch. Still-eligible chunks get a fresh current-epoch
+    /// proof (heartbeats immediately carry it, so peers see us in good
+    /// standing). Chunks we lost enter the retirement grace window: we
+    /// keep serving and claiming with the previous-epoch proof —
+    /// verifiers classify those claims `Graced` and stop counting us
+    /// toward R, which triggers the repair path that recruits our
+    /// newly-eligible replacements while we still serve reads.
+    fn rotate_groups(&mut self, out: &mut Outbox) {
+        let now = out.now_ms;
+        let grace = self.cfg.rotation_grace_ms.max(1);
+        let my_id = self.info.id;
+        let chashes: Vec<(Hash256, u64)> =
+            self.store.iter().map(|(c, cs)| (*c, cs.frag.index)).collect();
+        for (chash, index) in chashes {
+            let proof = self.own_proof(&chash, index);
+            let Some(cs) = self.store.get_mut(&chash) else { continue };
+            match proof {
+                Some(p) => {
+                    self.metrics.rotations_kept += 1;
+                    cs.proof = p;
+                    cs.retire_at_ms = 0;
+                    cs.mutate_members(|view| {
+                        if let Some(me) = view.get_mut(&my_id) {
+                            me.retiring = false;
+                        }
+                    });
+                }
+                None => {
+                    self.metrics.rotations_retired += 1;
+                    if cs.retire_at_ms == 0 {
+                        cs.retire_at_ms = now + grace;
+                    }
+                    cs.mutate_members(|view| {
+                        if let Some(me) = view.get_mut(&my_id) {
+                            me.retiring = true;
+                        }
+                    });
+                }
+            }
+        }
+    }
+
     /// §4.3.4: when the alive group size drops below R, locate new
     /// members — deterministically sharded across alive members by rank
     /// so independent repair mostly avoids duplicate work (over-repair
@@ -843,25 +1164,40 @@ impl VaultPeer {
     fn check_repair(&mut self, dir: &dyn Directory, out: &mut Outbox, chash: &Hash256) {
         let now = out.now_ms;
         let Some(cs) = self.store.get(chash) else { return };
-        let mut alive: Vec<NodeId> = cs
+        let alive: Vec<&Member> = cs
             .members
             .values()
             .filter(|m| now.saturating_sub(m.last_seen_ms) < self.cfg.suspicion_ms)
-            .map(|m| m.info.id)
             .collect();
-        if alive.len() >= self.cfg.r_inner {
+        // Retiring members (rotation grace window) serve reads but no
+        // longer count toward the group target: the deficit they open
+        // is what recruits their current-epoch replacements while they
+        // still serve. In legacy mode nobody is ever retiring, so
+        // `active == alive` and this is exactly the pre-epoch behavior.
+        let mut active: Vec<NodeId> =
+            alive.iter().filter(|m| !m.retiring).map(|m| m.info.id).collect();
+        if active.len() >= self.cfg.r_inner {
             return;
         }
-        alive.sort();
-        let deficit = self.cfg.r_inner - alive.len();
-        // A node absent from its own alive view (muted heartbeats, or
-        // freshly suspected by itself) must not mirror rank 0's repair
-        // share — that duplicated rank-0's repair traffic. The alive
-        // members shard the deficit among themselves.
-        let Some(my_rank) = alive.iter().position(|id| *id == self.info.id) else {
+        let deficit = self.cfg.r_inner - active.len();
+        // Shard the deficit across the active members; when rotation
+        // retired the whole group at once, the retirees themselves
+        // shard it (someone must initiate, and they still hold the
+        // fragments the joiners will pull).
+        let mut shard_set: Vec<NodeId> = if active.is_empty() {
+            alive.iter().map(|m| m.info.id).collect()
+        } else {
+            std::mem::take(&mut active)
+        };
+        shard_set.sort();
+        // A node absent from the shard set (muted heartbeats, freshly
+        // self-suspected, or retiring while active members remain) must
+        // not mirror rank 0's repair share — that duplicated rank-0's
+        // repair traffic.
+        let Some(my_rank) = shard_set.iter().position(|id| *id == self.info.id) else {
             return;
         };
-        let n_alive = alive.len().max(1);
+        let n_alive = shard_set.len().max(1);
         let my_share = (0..deficit).filter(|i| i % n_alive == my_rank).count();
         // Don't pile up repairs for the same chunk.
         let in_flight = self.repairs.values().filter(|r| r.chash == *chash).count();
@@ -875,8 +1211,12 @@ impl VaultPeer {
         let index = self.rng.next_u64() | (1 << 63); // fresh random stream index
         let op = self.fresh_op();
         let members: HashSet<NodeId> = self.store[chash].members.keys().copied().collect();
+        // Probe the chunk's *current* neighborhood: under epoch
+        // placement that is the beacon-salted point, so rotation
+        // recruits this epoch's eligible nodes, not last epoch's.
+        let target = self.chunk_target(chash);
         let probes: Vec<PeerInfo> = dir
-            .closest(chash, self.cfg.candidates)
+            .closest(&target, self.cfg.candidates)
             .into_iter()
             .filter(|p| !members.contains(&p.id) && p.id != self.info.id)
             .take(self.cfg.repair_probe)
@@ -1125,9 +1465,9 @@ impl VaultPeer {
         let mut members: HashMap<NodeId, Member> = js
             .members
             .values()
-            .map(|info| (info.id, Member { info: *info, last_seen_ms: now }))
+            .map(|info| (info.id, Member::fresh(*info, now)))
             .collect();
-        members.insert(self.id(), Member { info: self.info, last_seen_ms: now });
+        members.insert(self.id(), Member::fresh(self.info, now));
         let mut payload_dropped = false;
         if self.cfg.byzantine {
             frag.payload = Vec::new();
@@ -1149,6 +1489,7 @@ impl VaultPeer {
                 cached_chunk,
                 cache_expires_ms,
                 payload_dropped,
+                retire_at_ms: 0,
                 announced: HashSet::default(),
                 view_digest: None,
             },
@@ -1245,9 +1586,9 @@ impl VaultPeer {
     pub fn force_store(&mut self, now_ms: u64, chash: Hash256, frag: Fragment, proof: VrfProof, members: Vec<PeerInfo>) {
         let mut member_map = HashMap::default();
         for m in members {
-            member_map.insert(m.id, Member { info: m, last_seen_ms: now_ms });
+            member_map.insert(m.id, Member::fresh(m, now_ms));
         }
-        member_map.insert(self.id(), Member { info: self.info, last_seen_ms: now_ms });
+        member_map.insert(self.id(), Member::fresh(self.info, now_ms));
         self.store.insert(
             chash,
             ChunkStore {
@@ -1258,6 +1599,7 @@ impl VaultPeer {
                 cached_chunk: None,
                 cache_expires_ms: 0,
                 payload_dropped: self.cfg.byzantine,
+                retire_at_ms: 0,
                 announced: HashSet::default(),
                 view_digest: None,
             },
@@ -1427,7 +1769,7 @@ mod tests {
         for i in 0..PROOF_CACHE_CAP as u64 {
             let mut h = [0u8; 32];
             h[..8].copy_from_slice(&i.to_le_bytes());
-            a.proof_cache.insert((Hash256(h), i), None);
+            a.proof_cache.insert((Hash256(h), i, 0), None);
         }
         let before = a.metrics.vrf_proofs;
         let chash = Hash256::of(b"fresh-chunk");
@@ -1603,6 +1945,248 @@ mod tests {
             Msg::Members { chash, members: vec![phantom.info] },
         );
         assert!(a.store[&chash].members.contains_key(&phantom.info.id));
+    }
+
+    // ---- epoch-anchored placement & rotation (ISSUE 5) ---------------
+
+    use crate::chain::next_beacon;
+
+    /// A verifiable announce advancing `peer`'s chain view by one epoch.
+    fn announce_next(peer: &VaultPeer, tx_digest: [u8; 32], n_nodes: u64) -> EpochAnnounce {
+        let epoch = peer.cur_epoch.epoch + 1;
+        EpochAnnounce {
+            epoch,
+            beacon: next_beacon(&peer.cur_epoch.beacon, epoch, &tx_digest),
+            tx_digest,
+            n_nodes,
+        }
+    }
+
+    #[test]
+    fn epoch_update_verifies_the_beacon_chain_link() {
+        let mut cfg = test_cfg();
+        cfg.epoch_placement = true;
+        let mut a = mk_peer(1, &cfg);
+        let dir = StubDir { peers: vec![] };
+        let d1 = [7u8; 32];
+        let good = announce_next(&a, d1, 99);
+
+        // A tampered beacon must be rejected — the link does not extend
+        // our chain head.
+        let mut out = Outbox::at(100);
+        let forged = EpochAnnounce { beacon: [0xEE; 32], ..good.clone() };
+        a.on_message(&dir, &mut out, a.info.id, Msg::EpochUpdate(forged));
+        assert_eq!(a.cur_epoch.epoch, 0, "forged announce must not advance the epoch");
+        assert_eq!(a.metrics.beacon_rejects, 1);
+
+        // The honest announce is adopted, with selection parameters.
+        let mut out = Outbox::at(200);
+        a.on_message(&dir, &mut out, a.info.id, Msg::EpochUpdate(good.clone()));
+        assert_eq!(a.cur_epoch.epoch, 1);
+        assert_eq!(a.cur_epoch.beacon, good.beacon);
+        assert_eq!(a.cfg.n_nodes, 99);
+        assert_eq!(a.metrics.epoch_updates, 1);
+
+        // Replays and stale epochs are ignored.
+        let mut out = Outbox::at(300);
+        a.on_message(&dir, &mut out, a.info.id, Msg::EpochUpdate(good));
+        assert_eq!(a.metrics.epoch_updates, 1);
+
+        // A gap (we missed epoch 2) is accepted on the catch-up path.
+        let d3 = [9u8; 32];
+        let b2 = next_beacon(&a.cur_epoch.beacon, 2, &d3);
+        let gap = EpochAnnounce { epoch: 3, beacon: next_beacon(&b2, 3, &d3), tx_digest: d3, n_nodes: 99 };
+        let mut out = Outbox::at(400);
+        a.on_message(&dir, &mut out, a.info.id, Msg::EpochUpdate(gap));
+        assert_eq!(a.cur_epoch.epoch, 3);
+        assert_eq!(a.metrics.epoch_gaps, 1);
+        assert!(
+            a.prev_epoch.is_none(),
+            "a multi-epoch gap must not grant the stale pre-gap epoch Graced status"
+        );
+
+        // And announces from anyone but the local chain watcher are
+        // dropped outright — a remote peer cannot push us onto a fork.
+        let other = mk_peer(8, &cfg).info.id;
+        let d4 = [11u8; 32];
+        let remote = EpochAnnounce {
+            epoch: 4,
+            beacon: next_beacon(&a.cur_epoch.beacon, 4, &d4),
+            tx_digest: d4,
+            n_nodes: 99,
+        };
+        let mut out = Outbox::at(500);
+        a.on_message(&dir, &mut out, other, Msg::EpochUpdate(remote));
+        assert_eq!(a.cur_epoch.epoch, 3, "remote announce must be ignored");
+    }
+
+    /// Find `(chash, index)` pairs with a chosen eligibility pattern for
+    /// `peer` across two consecutive epochs.
+    fn find_chunk(
+        peer: &VaultPeer,
+        e1: &crate::proto::EpochState,
+        e2: &crate::proto::EpochState,
+        want_second: bool,
+    ) -> (Hash256, u64) {
+        let (r, n) = (peer.cfg.r_inner, peer.cfg.n_nodes);
+        for t in 0..4000u32 {
+            let chash = Hash256::of(&t.to_le_bytes());
+            let idx = 1u64;
+            let in1 = crate::proto::selection::prove_selection_v2(
+                &peer.key, e1.epoch, &e1.beacon, &chash, idx, r, n,
+            )
+            .is_some();
+            let in2 = crate::proto::selection::prove_selection_v2(
+                &peer.key, e2.epoch, &e2.beacon, &chash, idx, r, n,
+            )
+            .is_some();
+            if in1 && in2 == want_second {
+                return (chash, idx);
+            }
+        }
+        panic!("no chunk with the requested eligibility pattern found");
+    }
+
+    #[test]
+    fn rotation_retires_lost_chunks_and_keeps_won_ones() {
+        let mut cfg = test_cfg();
+        cfg.epoch_placement = true;
+        cfg.r_inner = 2;
+        cfg.n_nodes = 60;
+        cfg.rotation_grace_ms = 10_000;
+        let mut a = mk_peer(1, &cfg);
+        let dir = StubDir { peers: vec![] };
+
+        // Move to epoch 1, then precompute epoch 2's view.
+        let d = [3u8; 32];
+        let ann1 = announce_next(&a, d, 60);
+        let mut out = Outbox::at(1_000);
+        a.on_message(&dir, &mut out, a.info.id, Msg::EpochUpdate(ann1));
+        let e1 = a.cur_epoch;
+        let e2 = crate::proto::EpochState {
+            epoch: 2,
+            beacon: next_beacon(&e1.beacon, 2, &d),
+        };
+
+        // One chunk we lose at the boundary, one we keep.
+        let (lost, lost_idx) = find_chunk(&a, &e1, &e2, false);
+        let (kept, kept_idx) = find_chunk(&a, &e1, &e2, true);
+        let pl = a.own_proof(&lost, lost_idx).expect("eligible at epoch 1");
+        let pk_ = a.own_proof(&kept, kept_idx).expect("eligible at epoch 1");
+        a.force_store(1_000, lost, frag(lost_idx), pl, vec![]);
+        a.force_store(1_000, kept, frag(kept_idx), pk_, vec![]);
+
+        // Cross the boundary.
+        let ann2 = EpochAnnounce { epoch: 2, beacon: e2.beacon, tx_digest: d, n_nodes: 60 };
+        let mut out = Outbox::at(20_000);
+        a.on_message(&dir, &mut out, a.info.id, Msg::EpochUpdate(ann2));
+        assert_eq!(a.metrics.rotations_retired, 1);
+        assert_eq!(a.metrics.rotations_kept, 1);
+        let cs = &a.store[&lost];
+        assert_eq!(cs.retire_at_ms, 30_000, "grace window opens at the boundary");
+        assert!(cs.members[&a.info.id].retiring);
+        let ck = &a.store[&kept];
+        assert_eq!(ck.retire_at_ms, 0);
+        assert!(!ck.members[&a.info.id].retiring);
+        let kept_proof = ck.proof;
+        assert_eq!(
+            a.own_proof(&kept, kept_idx),
+            Some(kept_proof),
+            "kept chunk must carry a refreshed current-epoch proof"
+        );
+
+        // During the grace window the retiring fragment still serves.
+        let reader = mk_peer(9, &cfg).info.id;
+        let mut out = Outbox::at(25_000);
+        a.on_message(&dir, &mut out, reader, Msg::GetFrag { op: 4, chash: lost });
+        assert!(
+            out.sends.iter().any(
+                |(_, m, _)| matches!(m, Msg::FragReply { frag: Some(_), .. })
+            ),
+            "retiring member must serve reads through the grace window"
+        );
+
+        // After the grace window the fragment is dropped; the kept one
+        // survives.
+        let mut out = Outbox::at(31_000);
+        a.on_timer(&dir, &mut out, TimerKind::Tick);
+        assert!(!a.store.contains_key(&lost), "grace expiry must drop the chunk");
+        assert!(a.store.contains_key(&kept));
+        assert_eq!(a.metrics.grace_drops, 1);
+    }
+
+    #[test]
+    fn previous_epoch_proof_classifies_as_graced_then_invalid() {
+        let mut cfg = test_cfg();
+        cfg.epoch_placement = true;
+        cfg.r_inner = 2;
+        cfg.n_nodes = 60;
+        let mut a = mk_peer(1, &cfg); // verifier
+        let mut b = mk_peer(2, &cfg); // claimant
+        let dir = StubDir { peers: vec![] };
+        let d = [5u8; 32];
+        for peer in [&mut a, &mut b] {
+            let ann = announce_next(peer, d, 60);
+            let id = peer.info.id;
+            let mut out = Outbox::at(1_000);
+            peer.on_message(&dir, &mut out, id, Msg::EpochUpdate(ann));
+        }
+        let e1 = b.cur_epoch;
+        let e2 = crate::proto::EpochState { epoch: 2, beacon: next_beacon(&e1.beacon, 2, &d) };
+        let (chash, idx) = find_chunk(&b, &e1, &e2, false);
+        let proof = b.own_proof(&chash, idx).expect("eligible at epoch 1");
+        assert_eq!(
+            a.classify_peer_proof(&b.key.public, &chash, idx, &proof),
+            ProofStatus::Current
+        );
+        // Verifier crosses to epoch 2: the old proof is Graced.
+        let ann2 = announce_next(&a, d, 60);
+        let mut out = Outbox::at(2_000);
+        a.on_message(&dir, &mut out, a.info.id, Msg::EpochUpdate(ann2));
+        assert_eq!(
+            a.classify_peer_proof(&b.key.public, &chash, idx, &proof),
+            ProofStatus::Graced
+        );
+        // One more epoch and the grace lapses: Invalid.
+        let ann3 = announce_next(&a, d, 60);
+        let mut out = Outbox::at(3_000);
+        a.on_message(&dir, &mut out, a.info.id, Msg::EpochUpdate(ann3));
+        assert_eq!(
+            a.classify_peer_proof(&b.key.public, &chash, idx, &proof),
+            ProofStatus::Invalid
+        );
+    }
+
+    #[test]
+    fn retiring_members_do_not_count_toward_group_target() {
+        let cfg = test_cfg(); // r_inner = 3
+        let dir = StubDir {
+            peers: (10u8..20).map(|t| mk_peer(t, &test_cfg()).info).collect(),
+        };
+        let mut a = mk_peer(1, &cfg);
+        let b = mk_peer(2, &cfg);
+        let c = mk_peer(3, &cfg);
+        let chash = Hash256::of(b"retire-count-chunk");
+        let pa = some_proof(&a);
+        a.force_store(0, chash, frag(1), pa, vec![b.info, c.info]);
+
+        // All three alive and active: group at target, no repair.
+        let mut out = Outbox::at(1_000);
+        a.on_timer(&dir, &mut out, TimerKind::Tick);
+        assert_eq!(a.metrics.repairs_initiated, 0);
+
+        // b and c enter rotation grace: still alive (serving) but no
+        // longer counted — the deficit must trigger repair recruitment.
+        let cs = a.store.get_mut(&chash).unwrap();
+        for id in [b.info.id, c.info.id] {
+            cs.members.get_mut(&id).unwrap().retiring = true;
+        }
+        let mut out = Outbox::at(2_000);
+        a.on_timer(&dir, &mut out, TimerKind::Tick);
+        assert!(
+            a.metrics.repairs_initiated > 0,
+            "retiring members must open a repair deficit while still serving"
+        );
     }
 
     #[test]

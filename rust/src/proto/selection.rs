@@ -21,17 +21,111 @@
 //! randomized spread. See DESIGN.md §Substitutions.
 
 use crate::crypto::ed25519::SigningKey;
+use crate::crypto::sha2::{Digest, Sha256};
 use crate::crypto::vrf::{self, VrfProof};
 use crate::crypto::Hash256;
 use crate::dht::{rank_distance, NodeId};
 
-/// VRF input for a fragment selection.
+/// VRF input for a fragment selection (legacy `v1` domain: placement is
+/// fixed at store time and never re-sampled — an adaptive adversary can
+/// grind identities toward `chash` *after* observing it).
 pub fn selection_alpha(chash: &Hash256, index: u64) -> Vec<u8> {
     let mut v = Vec::with_capacity(58);
     v.extend_from_slice(b"vault-select-v1");
     v.extend_from_slice(&chash.0);
     v.extend_from_slice(&index.to_le_bytes());
     v
+}
+
+// ---- epoch-anchored selection (`vault-select-v2`, ISSUE 5) -----------
+//
+// The v2 domain folds the current epoch number and the chain's
+// randomness beacon (see `crate::chain`) into both the VRF input *and*
+// the ring point the distance threshold is measured against. Placement
+// is therefore re-sampled every epoch from randomness fixed only at the
+// epoch boundary: identities ground toward a chunk's current
+// neighborhood lose their advantage as soon as the beacon turns over,
+// which is exactly the §4 adaptive-adversary defense the ledger makes
+// verifiable. Any verifier holding the public `(epoch, beacon)` pair
+// re-derives the same threshold.
+
+/// The ring point chunk `chash` is placed around in `epoch` — a pure
+/// function of public chain data, moved every epoch by the beacon.
+pub fn placement_point(epoch: u64, beacon: &[u8; 32], chash: &Hash256) -> Hash256 {
+    let mut h = Sha256::new();
+    h.update(b"vault-place-v2");
+    h.update(beacon);
+    h.update(epoch.to_le_bytes());
+    h.update(chash.0);
+    Hash256(h.finalize())
+}
+
+/// VRF input for an epoch-anchored fragment selection.
+pub fn selection_alpha_v2(epoch: u64, beacon: &[u8; 32], chash: &Hash256, index: u64) -> Vec<u8> {
+    let mut v = Vec::with_capacity(15 + 8 + 32 + 32 + 8);
+    v.extend_from_slice(b"vault-select-v2");
+    v.extend_from_slice(&epoch.to_le_bytes());
+    v.extend_from_slice(beacon);
+    v.extend_from_slice(&chash.0);
+    v.extend_from_slice(&index.to_le_bytes());
+    v
+}
+
+/// Threshold check against an arbitrary ring point (the v2 path hands
+/// in the epoch's [`placement_point`]; v1 hands in `chash` itself).
+pub fn beta_selects_at(
+    beta: &[u8; 32],
+    node: &NodeId,
+    point: &Hash256,
+    r_target: usize,
+    n_nodes: usize,
+) -> bool {
+    let d = rank_distance(&node.0, point, n_nodes);
+    let p = selection_probability(d, r_target);
+    let frac = u128::from_be_bytes(beta[..16].try_into().unwrap()) as f64
+        / (u128::MAX as f64 + 1.0);
+    frac < p
+}
+
+/// Candidate side, v2: evaluate the VRF on the epoch-anchored input and
+/// return a proof iff eligible *this epoch*.
+pub fn prove_selection_v2(
+    sk: &SigningKey,
+    epoch: u64,
+    beacon: &[u8; 32],
+    chash: &Hash256,
+    index: u64,
+    r_target: usize,
+    n_nodes: usize,
+) -> Option<VrfProof> {
+    let alpha = selection_alpha_v2(epoch, beacon, chash, index);
+    let (beta, proof) = vrf::prove(sk, &alpha);
+    let id = NodeId::from_pk(&sk.public);
+    let point = placement_point(epoch, beacon, chash);
+    beta_selects_at(&beta, &id, &point, r_target, n_nodes).then_some(proof)
+}
+
+/// Verifier side, v2: check the proof and re-derive the epoch's
+/// threshold from public chain data. A proof for any other epoch (or
+/// beacon) fails — eligibility cannot be carried across boundaries.
+#[allow(clippy::too_many_arguments)]
+pub fn verify_selection_v2(
+    pk: &[u8; 32],
+    epoch: u64,
+    beacon: &[u8; 32],
+    chash: &Hash256,
+    index: u64,
+    proof: &VrfProof,
+    r_target: usize,
+    n_nodes: usize,
+) -> bool {
+    let alpha = selection_alpha_v2(epoch, beacon, chash, index);
+    let Some(beta) = vrf::verify(pk, &alpha, proof) else {
+        return false;
+    };
+    let id = NodeId::from_pk(pk);
+    let point = placement_point(epoch, beacon, chash);
+    beta_selects_at(&beta, &id, &point, r_target, n_nodes)
 }
 
 /// Selection probability for rank distance `d` (1-based) and group
@@ -41,6 +135,7 @@ pub fn selection_probability(d: f64, r_target: usize) -> f64 {
 }
 
 /// Does a VRF output `beta` clear the threshold for this node/chunk?
+/// (v1: the distance anchor is the chunk hash itself.)
 pub fn beta_selects(
     beta: &[u8; 32],
     node: &NodeId,
@@ -48,12 +143,7 @@ pub fn beta_selects(
     r_target: usize,
     n_nodes: usize,
 ) -> bool {
-    let d = rank_distance(&node.0, chash, n_nodes);
-    let p = selection_probability(d, r_target);
-    // beta fraction in [0,1) from its top 128 bits.
-    let frac = u128::from_be_bytes(beta[..16].try_into().unwrap()) as f64
-        / (u128::MAX as f64 + 1.0);
-    frac < p
+    beta_selects_at(beta, node, chash, r_target, n_nodes)
 }
 
 /// Candidate side (`SelectionProof` in Algorithm 2): evaluate the VRF
@@ -189,6 +279,76 @@ mod tests {
         }
         assert!(near_hits >= 28, "nearest node hits {near_hits}");
         assert!(far_hits <= 10, "farthest node hits {far_hits}");
+    }
+
+    // ---- epoch-anchored v2 domain (ISSUE 5) --------------------------
+
+    #[test]
+    fn v2_prove_verify_roundtrip_and_epoch_binding() {
+        let ks = keys(60, 7);
+        let chash = Hash256::of(b"epoch-chunk");
+        let beacon = crate::chain::genesis_beacon();
+        let (r, n) = (10, 60);
+        let mut selected = 0;
+        for sk in &ks {
+            if let Some(proof) = prove_selection_v2(sk, 3, &beacon, &chash, 0, r, n) {
+                selected += 1;
+                assert!(verify_selection_v2(&sk.public, 3, &beacon, &chash, 0, &proof, r, n));
+                // Same proof presented under the next epoch fails: a
+                // member cannot carry eligibility across a boundary.
+                assert!(!verify_selection_v2(&sk.public, 4, &beacon, &chash, 0, &proof, r, n));
+                // A different beacon (forked history) fails too.
+                let other = crate::chain::next_beacon(&beacon, 3, &[9; 32]);
+                assert!(!verify_selection_v2(&sk.public, 3, &other, &chash, 0, &proof, r, n));
+                // And v2 proofs never validate in the v1 domain.
+                assert!(!verify_selection(&sk.public, &chash, 0, &proof, r, n));
+            }
+        }
+        assert!(selected > 0, "someone must be eligible under v2");
+    }
+
+    #[test]
+    fn placement_point_moves_every_epoch() {
+        let chash = Hash256::of(b"moving-target");
+        let beacon = crate::chain::genesis_beacon();
+        let p1 = placement_point(1, &beacon, &chash);
+        assert_eq!(p1, placement_point(1, &beacon, &chash), "pure function");
+        let p2 = placement_point(2, &beacon, &chash);
+        assert_ne!(p1, p2, "epoch turnover must move the anchor");
+        let beacon2 = crate::chain::next_beacon(&beacon, 2, &[1; 32]);
+        assert_ne!(p2, placement_point(2, &beacon2, &chash), "beacon must bind");
+        assert_ne!(p1, chash, "v2 anchor is never the raw chunk hash");
+    }
+
+    #[test]
+    fn v2_eligible_set_resamples_across_epochs() {
+        // The set of eligible nodes at epoch e and e+1 must differ for
+        // the rotation to move groups — with overwhelming probability
+        // the nearest-R window around the placement point is disjoint
+        // enough that some epoch-e members drop out.
+        let n = 300;
+        let ks = keys(n, 9);
+        let r = 12;
+        let chash = Hash256::of(b"resample");
+        let beacon = crate::chain::genesis_beacon();
+        let eligible = |epoch: u64| -> Vec<usize> {
+            ks.iter()
+                .enumerate()
+                .filter(|(_, sk)| {
+                    prove_selection_v2(sk, epoch, &beacon, &chash, 0, r, n).is_some()
+                })
+                .map(|(i, _)| i)
+                .collect()
+        };
+        let e1 = eligible(1);
+        let e2 = eligible(2);
+        assert!(!e1.is_empty() && !e2.is_empty());
+        let carried = e1.iter().filter(|i| e2.contains(i)).count();
+        assert!(
+            carried < e1.len(),
+            "rotation must retire at least one epoch-1 member ({carried}/{} carried)",
+            e1.len()
+        );
     }
 
     #[test]

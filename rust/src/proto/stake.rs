@@ -8,7 +8,11 @@
 //! stake-weighted variant of the selection threshold so an adversary
 //! minting many low-stake identities gains no aggregate eligibility.
 
-use std::collections::HashMap;
+// Deterministic hasher (PR-1 `util::detmap` discipline): registries are
+// snapshotted per epoch and iterated while deriving views/digests, so
+// iteration order must be a pure function of the bond/unbond history,
+// not of std's per-instance RandomState.
+use crate::util::detmap::{DetHashMap, DetHashSet};
 
 use crate::crypto::vrf::VrfProof;
 use crate::crypto::Hash256;
@@ -19,13 +23,30 @@ pub const MIN_BOND: u64 = 1;
 
 #[derive(Clone, Debug, Default)]
 pub struct StakeRegistry {
-    stakes: HashMap<NodeId, u64>,
+    stakes: DetHashMap<NodeId, u64>,
     total: u64,
 }
 
 impl StakeRegistry {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Derive a registry from ledger-view entries (`chain::EpochView` —
+    /// since ISSUE 5 the ledger is the source of truth and this type is
+    /// a per-epoch *view* of it). Sub-bond entries are skipped; the
+    /// chain applies the same gate at seal time.
+    pub fn from_entries(entries: impl Iterator<Item = (NodeId, u64)>) -> Self {
+        let mut reg = Self::new();
+        for (id, stake) in entries {
+            reg.bond(id, stake);
+        }
+        reg
+    }
+
+    /// Member ids in deterministic (insertion-history) iteration order.
+    pub fn ids(&self) -> impl Iterator<Item = &NodeId> {
+        self.stakes.keys()
     }
 
     /// Admit (or top up) an identity. Rejects sub-bond registrations —
@@ -72,12 +93,16 @@ impl StakeRegistry {
     }
 
     /// Aggregate stake fraction held by a set of identities — the
-    /// quantity the 1/3 assumption constrains.
+    /// quantity the 1/3 assumption constrains. The input is treated as
+    /// a *set*: duplicate ids are counted once (an attack scenario
+    /// listing the same Sybil twice must not inflate the measured
+    /// adversary share).
     pub fn fraction_of(&self, ids: impl Iterator<Item = NodeId>) -> f64 {
         if self.total == 0 {
             return 0.0;
         }
-        let held: u64 = ids.map(|id| self.stake_of(&id)).sum();
+        let unique: DetHashSet<NodeId> = ids.collect();
+        let held: u64 = unique.iter().map(|id| self.stake_of(id)).sum();
         held as f64 / self.total as f64
     }
 
@@ -166,6 +191,46 @@ mod tests {
         assert_eq!(reg.unbond(&id(1), 1000), 60, "over-withdraw clamps");
         assert!(!reg.is_member(&id(1)));
         assert_eq!(reg.total(), 50);
+    }
+
+    #[test]
+    fn iteration_order_is_a_pure_function_of_history() {
+        // ISSUE 5 satellite: two registries built through the same
+        // bond/unbond history must iterate identically — std's
+        // RandomState made the order differ per instance, which leaked
+        // into anything deriving digests or views from iteration.
+        let build = || {
+            let mut reg = StakeRegistry::new();
+            for t in 1..=32u8 {
+                reg.bond(id(t), 10 + t as u64);
+            }
+            for t in [3u8, 9, 27] {
+                reg.unbond(&id(t), u64::MAX);
+            }
+            reg
+        };
+        let a: Vec<NodeId> = build().ids().copied().collect();
+        let b: Vec<NodeId> = build().ids().copied().collect();
+        assert_eq!(a, b, "identical histories must iterate identically");
+        assert_eq!(a.len(), 29);
+        // And the derived-from-entries path reproduces it too.
+        let reg = build();
+        let derived = StakeRegistry::from_entries(reg.ids().map(|i| (*i, reg.stake_of(i))));
+        let c: Vec<NodeId> = derived.ids().copied().collect();
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn fraction_of_dedupes_duplicate_ids() {
+        // ISSUE 5 satellite bugfix: listing the same adversary id N
+        // times must not multiply its measured stake share.
+        let mut reg = StakeRegistry::new();
+        for t in 1..=10u8 {
+            reg.bond(id(t), 100);
+        }
+        let dup = [id(1), id(1), id(1), id(2)];
+        let f = reg.fraction_of(dup.into_iter());
+        assert!((f - 0.2).abs() < 1e-12, "duplicates must count once, got {f}");
     }
 
     #[test]

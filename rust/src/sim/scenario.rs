@@ -26,7 +26,9 @@ use crate::api::{OpHandle, OpOutcome, VaultApi};
 use crate::codec::ObjectId;
 use crate::coordinator::workload::{run_open_loop, OpenLoopSpec};
 use crate::coordinator::{Cluster, ClusterConfig, ClusterRuntime};
+use crate::crypto::ed25519::SigningKey;
 use crate::crypto::Hash256;
+use crate::dht::{rank_distance, NodeId};
 use crate::proto::ClaimVerify;
 use crate::util::detmap::DetHashSet;
 use crate::util::rng::{fold64 as fold, Rng};
@@ -62,8 +64,22 @@ pub enum Fault {
     /// reads of the seeded corpus). Per-op latency p50/p99 land in the
     /// phase outcome and the fingerprint.
     OpenLoop { ops: usize, in_flight: usize, store_frac: f64 },
-    /// One stake-gated churn wave: `count` leaves + `count` fresh joins.
+    /// One stake-gated churn wave: `count` leaves + `count` fresh
+    /// joins. Under the epoch chain (`ScenarioSpec::epoch_rotation`)
+    /// every leave/join is an on-chain unbond/bond transaction
+    /// activating at the next boundary — the scenario-level rewrite of
+    /// churn as ledger traffic (ISSUE 5).
     StakeChurn { count: usize },
+    /// The adaptive key-grinding adversary (§4's post-hoc clustering
+    /// attack, ISSUE 5): mint `sybils` Byzantine identities whose ids
+    /// are ground into the certain-eligibility zone (`rank distance ≤
+    /// R`) around one chunk's *current* placement anchor, then evict
+    /// `evict` honest holders so the repair path recruits the nearby
+    /// sybils. Under legacy fixed placement the anchor is the chunk
+    /// hash and the captured seats are permanent; under epoch rotation
+    /// the anchor moves at the next boundary and the sybils' residency
+    /// is bounded by one epoch + grace.
+    AdaptiveGrind { object: usize, chunk: usize, sybils: usize, evict: usize },
     /// Degrade links: silently drop this fraction of messages from now on.
     SlowLinks { drop_prob: f64 },
 }
@@ -84,6 +100,12 @@ pub enum Check {
     /// Repair convergence: every chunk group is back to at least
     /// `frac · R` members.
     GroupsRecoveredTo(f64),
+    /// Byzantine residency in one chunk's holder set stays at or below
+    /// `frac` (ISSUE 5 grinding scenarios). The observed counts land in
+    /// [`PhaseOutcome::byz_holders`] / [`PhaseOutcome::group_holders`]
+    /// either way, so a fixed-placement twin can record its (worse)
+    /// residency with `frac = 1.0` for comparison.
+    ByzResidencyAtMost { object: usize, chunk: usize, frac: f64 },
 }
 
 /// A timed phase: inject, advance virtual time, assert.
@@ -113,6 +135,14 @@ pub struct ScenarioSpec {
     /// the two planes produce different (each internally deterministic)
     /// trajectories — see DESIGN.md §Maintenance Plane.
     pub batched_maint: bool,
+    /// Epoch length of the simulated chain (0 = legacy fixed
+    /// placement). When set, the cluster runs with `epoch_placement`,
+    /// ledger-backed churn, and live group rotation — see DESIGN.md
+    /// §Epochs & On-chain Footprint.
+    pub epoch_ms: u64,
+    /// Rotation grace window handed to `VaultConfig` when `epoch_ms`
+    /// is set.
+    pub rotation_grace_ms: u64,
     pub phases: Vec<Phase>,
 }
 
@@ -129,8 +159,19 @@ impl ScenarioSpec {
             object_size: 12_000,
             claim_verify: ClaimVerify::FirstTime,
             batched_maint: true,
+            epoch_ms: 0,
+            rotation_grace_ms: 20_000,
             phases: Vec::new(),
         }
+    }
+
+    /// Enable the epoch chain: placement anchored to `(epoch, beacon)`,
+    /// resealed every `epoch_ms`, with departing members serving
+    /// through `grace_ms` after losing eligibility.
+    pub fn epoch_rotation(mut self, epoch_ms: u64, grace_ms: u64) -> Self {
+        self.epoch_ms = epoch_ms;
+        self.rotation_grace_ms = grace_ms;
+        self
     }
 
     /// Switch this scenario onto the legacy per-chunk heartbeat plane
@@ -171,6 +212,10 @@ pub struct PhaseOutcome {
     /// p50/p99 over `op_latency` (virtual ms; 0 when no traffic ran).
     pub p50_ms: f64,
     pub p99_ms: f64,
+    /// Byzantine / total live holders of the chunk probed by the last
+    /// [`Check::ByzResidencyAtMost`] in this phase (0/0 otherwise).
+    pub byz_holders: usize,
+    pub group_holders: usize,
 }
 
 /// Full scenario result.
@@ -210,6 +255,8 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
     cfg.seed = spec.seed;
     cfg.vault.claim_verify = spec.claim_verify;
     cfg.vault.batched_maint = spec.batched_maint;
+    cfg.epoch_ms = spec.epoch_ms;
+    cfg.vault.rotation_grace_ms = spec.rotation_grace_ms;
     cfg.vault.heartbeat_ms = 5_000;
     cfg.vault.suspicion_ms = 15_000;
     cfg.vault.tick_ms = 5_000;
@@ -393,6 +440,46 @@ fn inject_fault<N: ClusterRuntime>(
                 *fp = fold(*fp, i as u64 ^ 0xC4A2);
             }
         }
+        Fault::AdaptiveGrind { object, chunk, sybils, evict } => {
+            let chash = chunk_of(corpus, *object, *chunk);
+            // The adversary observes the chunk's *current* anchor (the
+            // raw hash under fixed placement, the epoch's beacon-salted
+            // point under rotation) and grinds identity seeds until the
+            // derived NodeId lands deep inside the certain-eligibility
+            // zone (rank distance ≤ R/2 ⇒ selection probability 1 *and*
+            // the sybil outranks most honest candidates in repair
+            // probing, which walks the ring outward from the anchor).
+            let point = cluster.placement_target(&chash);
+            let r = cluster.config().vault.r_inner;
+            let n = cluster.net.len();
+            let mut spawned = 0usize;
+            let mut tries = 0usize;
+            while spawned < *sybils && tries < 500_000 {
+                tries += 1;
+                let mut seed = [0u8; 32];
+                rng.fill_bytes(&mut seed);
+                let sk = SigningKey::from_seed(&seed);
+                let id = NodeId::from_pk(&sk.public);
+                if rank_distance(&id.0, &point, n) <= r as f64 / 2.0 {
+                    let idx = cluster.spawn_seeded((spawned % 5) as u8, seed, true);
+                    *fp = fold(*fp, idx as u64 ^ 0x617D);
+                    spawned += 1;
+                }
+            }
+            // Evict honest holders so the repair path has seats to fill
+            // — which the ground sybils, being nearest, will win.
+            let mut evicted = 0usize;
+            for i in holders(&cluster.net, &chash) {
+                if evicted >= *evict {
+                    break;
+                }
+                if cluster.net.is_up(i) && !cluster.net.peer(i).cfg.byzantine {
+                    cluster.net.kill(i);
+                    *fp = fold(*fp, i as u64 ^ 0xE71C);
+                    evicted += 1;
+                }
+            }
+        }
         Fault::SlowLinks { drop_prob } => {
             cluster.net.set_drop_prob(*drop_prob);
             *fp = fold(*fp, (*drop_prob * 1e6) as u64);
@@ -487,6 +574,31 @@ fn run_check<N: ClusterRuntime>(
                         ));
                     }
                 }
+            }
+        }
+        Check::ByzResidencyAtMost { object, chunk, frac } => {
+            let chash = chunk_of(corpus, *object, *chunk);
+            let mut byz = 0usize;
+            let mut total = 0usize;
+            for i in 0..cluster.net.len() {
+                if !cluster.net.is_up(i) {
+                    continue;
+                }
+                if cluster.net.peer(i).fragment_index(&chash).is_some() {
+                    total += 1;
+                    if cluster.net.peer(i).cfg.byzantine {
+                        byz += 1;
+                    }
+                }
+            }
+            outcome.byz_holders = byz;
+            outcome.group_holders = total;
+            *fp = fold(*fp, ((byz as u64) << 32) | total as u64);
+            let residency = if total == 0 { 0.0 } else { byz as f64 / total as f64 };
+            if residency > *frac {
+                outcome.failures.push(format!(
+                    "byzantine residency {byz}/{total} = {residency:.2} exceeds {frac}"
+                ));
             }
         }
         Check::GroupsRecoveredTo(frac) => {

@@ -1,0 +1,100 @@
+//! Epoch-chain integration (ISSUE 5): the simulated ledger driving a
+//! live SimNet cluster end-to-end — genesis bonding, boundary sealing
+//! and broadcast, verified adoption by every peer, churn as on-chain
+//! transactions activating at boundaries, live group rotation with
+//! availability across it, and whole-chain beacon verification.
+
+use vault::api::VaultApi;
+use vault::coordinator::{Cluster, ClusterConfig};
+
+fn epoch_cfg(peers: usize) -> ClusterConfig {
+    let mut cfg = ClusterConfig::small_test(peers);
+    cfg.epoch_ms = 30_000;
+    cfg.vault.rotation_grace_ms = 10_000;
+    cfg.vault.heartbeat_ms = 5_000;
+    cfg.vault.suspicion_ms = 15_000;
+    cfg.vault.tick_ms = 5_000;
+    cfg
+}
+
+#[test]
+fn genesis_bonds_every_peer_and_peers_adopt_epoch_one() {
+    let cluster = Cluster::start(epoch_cfg(48));
+    let view = cluster.epoch_view().expect("chain enabled");
+    assert_eq!(view.epoch, 1, "genesis epoch seals at start");
+    assert_eq!(view.n_nodes(), 48, "every initial identity is bonded");
+    assert_eq!(view.registry().len(), 48);
+    for i in 0..cluster.net.len() {
+        assert!(
+            cluster.net.peer(i).metrics.epoch_updates >= 1,
+            "peer {i} must have adopted the genesis announce"
+        );
+        assert_eq!(cluster.net.peer(i).metrics.beacon_rejects, 0);
+    }
+}
+
+#[test]
+fn objects_survive_rotation_across_boundaries_and_chain_verifies() {
+    let mut cluster = Cluster::start(epoch_cfg(48));
+    let r = cluster.config().vault.r_inner;
+    let obj: Vec<u8> = (0..14_000u32).map(|i| (i * 11) as u8).collect();
+    let client = cluster.random_client();
+    let stored = cluster.store_blocking(client, &obj, b"epoch-secret", 0).expect("store");
+
+    // Cross two boundaries with settle time: every group's anchor
+    // moves, retiring members serve through grace, repair re-homes the
+    // fragments near the new points.
+    for _ in 0..2 {
+        let boundary = ((cluster.net.now_ms() / 30_000) + 1) * 30_000;
+        cluster.drive(boundary + 25_000);
+    }
+    assert!(cluster.ledger().unwrap().current_epoch() >= 3);
+    for chash in &stored.value.chunks {
+        let survivors = cluster.net.surviving_fragments(chash);
+        assert!(
+            survivors >= r * 4 / 5,
+            "group for {chash:?} at {survivors} after rotation (R={r})"
+        );
+    }
+    let client = cluster.random_client();
+    let got = cluster.query_blocking(client, &stored.value).expect("query after rotation");
+    assert_eq!(got.value, obj);
+
+    // Rotation happened at all (some members lost eligibility) and the
+    // migrated fragments arrived via the repair path.
+    let retired: u64 =
+        (0..cluster.net.len()).map(|i| cluster.net.peer(i).metrics.rotations_retired).sum();
+    let joined: u64 =
+        (0..cluster.net.len()).map(|i| cluster.net.peer(i).metrics.repairs_joined).sum();
+    assert!(retired > 0, "boundaries must retire some placements");
+    assert!(joined > 0, "rotation must recruit members through repair");
+
+    // The whole beacon chain re-derives from public data.
+    assert_eq!(cluster.ledger().unwrap().verify_chain(), None);
+}
+
+#[test]
+fn churn_is_ledger_traffic_activating_at_the_boundary() {
+    let mut cluster = Cluster::start(epoch_cfg(40));
+    let before = cluster.epoch_view().unwrap().n_nodes();
+    cluster.churn(3);
+    // Mid-epoch: the ledger view is immutable, txs only queue.
+    assert_eq!(cluster.epoch_view().unwrap().n_nodes(), before);
+    assert_eq!(cluster.ledger().unwrap().pending_txs(), 6, "3 unbonds + 3 bonds");
+    let boundary = ((cluster.net.now_ms() / 30_000) + 1) * 30_000;
+    cluster.drive(boundary + 2_000);
+    let view = cluster.epoch_view().unwrap();
+    assert_eq!(view.n_nodes(), before, "1:1 churn keeps membership size");
+    assert_eq!(view.tx_count, 6);
+    assert!(
+        view.onchain_bytes > vault::chain::EPOCH_HEADER_BYTES,
+        "churn epoch must append tx bytes"
+    );
+    // An idle epoch costs exactly the header — the object-independent
+    // footprint floor.
+    let boundary = ((cluster.net.now_ms() / 30_000) + 1) * 30_000;
+    cluster.drive(boundary + 2_000);
+    let ledger = cluster.ledger().unwrap();
+    let e = ledger.current_epoch();
+    assert_eq!(ledger.onchain_bytes_of(e), vault::chain::EPOCH_HEADER_BYTES);
+}

@@ -9,7 +9,7 @@ use vault::crypto::ed25519::SigningKey;
 use vault::crypto::vrf;
 use vault::crypto::Hash256;
 use vault::dht::{NodeId, PeerInfo};
-use vault::proto::messages::{BatchClaim, Claim, HeartbeatBatch, MemberDelta, Msg};
+use vault::proto::messages::{BatchClaim, Claim, EpochAnnounce, HeartbeatBatch, MemberDelta, Msg};
 use vault::util::rng::Rng;
 use vault::wire::{Decode, Encode, WireError};
 
@@ -80,6 +80,19 @@ fn all_messages() -> Vec<Msg> {
         Msg::HeartbeatBatch(batch),
         Msg::HeartbeatBatch(empty_batch),
         Msg::GetMembers { chash },
+        // Epoch plane (ISSUE 5): chain-watcher transition announce.
+        Msg::EpochUpdate(EpochAnnounce {
+            epoch: 42,
+            beacon: vault::chain::next_beacon(&vault::chain::genesis_beacon(), 42, &[5; 32]),
+            tx_digest: [5; 32],
+            n_nodes: 1_000,
+        }),
+        Msg::EpochUpdate(EpochAnnounce {
+            epoch: u64::MAX,
+            beacon: [0; 32],
+            tx_digest: [0xFF; 32],
+            n_nodes: 0,
+        }),
         Msg::ProofsReply { op: 1, chash, pk: sk.public, proofs: vec![(5, proof), (9, proof)] },
         Msg::StoreFrag {
             op: 2,

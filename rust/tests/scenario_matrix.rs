@@ -216,6 +216,92 @@ fn scenario_legacy_plane_still_converges() {
 }
 
 #[test]
+fn scenario_epoch_rotation_live() {
+    // ISSUE 5 acceptance: two chain boundaries over a live cluster.
+    // Every group's placement anchor moves at each boundary, retiring
+    // members serve through the grace window while the repair path
+    // recruits the new epoch's eligible nodes, and after each rotation
+    // all objects still read back bit-exact and every group is back at
+    // (most of) R — twice, with identical fingerprints.
+    let spec = ScenarioSpec::small("epoch_rotation", 1313, 60)
+        .epoch_rotation(60_000, 20_000)
+        .phase(
+            "first-boundary-rotation",
+            vec![],
+            75_000,
+            vec![Check::AllObjectsReadable, Check::GroupsRecoveredTo(0.8)],
+        )
+        .phase(
+            "second-boundary-rotation",
+            vec![],
+            75_000,
+            vec![
+                Check::AllObjectsReadable,
+                Check::GroupsRecoveredTo(0.8),
+                Check::NoChunkBelowDecodeThreshold,
+            ],
+        );
+    run_deterministic(&spec);
+}
+
+#[test]
+fn scenario_adaptive_grinding_bounded_by_rotation() {
+    // ISSUE 5 acceptance: the adaptive key-grinding adversary from §4.
+    // Sybils ground into a target chunk's current neighborhood capture
+    // repair seats in both placement modes; under epoch rotation the
+    // beacon moves the neighborhood at the next boundary and bounds
+    // their residency, while under the legacy fixed-placement flag the
+    // captured seats are permanent.
+    // 200 peers, R = 20: the certain-eligibility zone is a 10% slice of
+    // the ring, so surviving a boundary by chance is unlikely — and the
+    // final check sits *two* boundaries after the capture, which makes
+    // the bound structural rather than a coin flip.
+    let grind = Fault::AdaptiveGrind { object: 0, chunk: 0, sybils: 6, evict: 6 };
+    let residency_probe = |frac: f64| Check::ByzResidencyAtMost { object: 0, chunk: 0, frac };
+
+    let rotating = ScenarioSpec::small("grind_rotating", 1414, 200)
+        .epoch_rotation(60_000, 20_000)
+        .phase("grind-and-capture", vec![grind.clone()], 40_000, vec![residency_probe(1.0)])
+        .phase(
+            "two-boundaries-rotate-them-out",
+            vec![],
+            140_000,
+            vec![residency_probe(0.25), Check::AllObjectsReadable],
+        );
+    let rot_report = run_deterministic(&rotating);
+    let captured = rot_report.phases[0].byz_holders;
+    let remaining = rot_report.phases[1].byz_holders;
+    assert!(
+        captured >= 2,
+        "ground sybils must capture repair seats before the boundary (got {captured})"
+    );
+
+    let fixed = ScenarioSpec::small("grind_fixed", 1414, 200)
+        .phase("grind-and-capture", vec![grind], 40_000, vec![residency_probe(1.0)])
+        .phase(
+            "no-rotation-no-eviction",
+            vec![],
+            140_000,
+            vec![residency_probe(1.0), Check::AllObjectsReadable],
+        );
+    let fixed_report = run_scenario(&fixed);
+    assert!(
+        fixed_report.ok(),
+        "fixed-placement twin violated invariants:\n  {}",
+        fixed_report.failures().join("\n  ")
+    );
+    let fixed_final = fixed_report.phases[1].byz_holders;
+    assert!(
+        fixed_final >= 2,
+        "under fixed placement the captured seats must persist (got {fixed_final})"
+    );
+    assert!(
+        remaining < fixed_final,
+        "rotation must measurably bound residency: rotating={remaining} fixed={fixed_final}"
+    );
+}
+
+#[test]
 fn scenario_thousand_node_burst() {
     // Scale: 1k peers over 8 shard queues. ClaimVerify::Never is the
     // documented large-cluster measurement knob (proto::ClaimVerify);
