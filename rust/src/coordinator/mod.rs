@@ -17,6 +17,7 @@ use crate::crypto::Hash256;
 use crate::dht::NodeId;
 use crate::net::shardnet::ShardNet;
 use crate::net::simnet::{SimNet, SimOpts};
+use crate::node::wal::WalReplayReport;
 use crate::proto::messages::{EpochAnnounce, Msg};
 use crate::proto::peer::VaultPeer;
 use crate::proto::{AppEvent, VaultConfig};
@@ -39,6 +40,11 @@ pub trait ClusterRuntime {
     fn kill(&mut self, i: usize);
     fn attack(&mut self, i: usize);
     fn restore(&mut self, i: usize);
+    /// Crash-restart a peer in place: volatile state and pending timers
+    /// are lost, then a fresh incarnation with the same identity recovers
+    /// from its WAL (optionally torn at `torn_at` bytes). See
+    /// `VaultPeer::recover_from_wal` (ISSUE 6).
+    fn restart(&mut self, i: usize, torn_at: Option<u64>) -> WalReplayReport;
     fn spawn_peer(&mut self, region: u8) -> usize;
     /// Join a peer with a caller-chosen identity seed (adaptive-
     /// adversary and deterministic-harness hook).
@@ -84,6 +90,9 @@ macro_rules! forward_cluster_runtime {
             }
             fn restore(&mut self, i: usize) {
                 <$ty>::restore(self, i)
+            }
+            fn restart(&mut self, i: usize, torn_at: Option<u64>) -> WalReplayReport {
+                <$ty>::restart(self, i, torn_at)
             }
             fn spawn_peer(&mut self, region: u8) -> usize {
                 <$ty>::spawn_peer(self, region)
@@ -465,6 +474,23 @@ impl<N: ClusterRuntime> Cluster<N> {
             }
         }
         hit
+    }
+
+    /// Crash-restart peer `i` (optionally tearing the WAL tail at
+    /// `torn_at` bytes) and, when the chain is enabled, hand the rebuilt
+    /// incarnation the *current* epoch announce. The WAL cursor holds
+    /// whatever epoch the peer last saw; if boundaries sealed while it
+    /// was down, this re-injection drives `handle_epoch_update`'s
+    /// non-consecutive gap path, which drops stale grace state and
+    /// re-anchors placement — exactly the catch-up a real node gets from
+    /// its chain watcher on reboot.
+    pub fn restart_peer(&mut self, i: usize, torn_at: Option<u64>) -> WalReplayReport {
+        let report = self.net.restart(i, torn_at);
+        if let Some(ch) = self.chain.as_ref() {
+            let ann = Self::announce_of(ch.ledger.current());
+            self.net.inject(i, Msg::EpochUpdate(ann));
+        }
+        report
     }
 
     /// Kill the first live holder of a fragment of `chash` — the §6.2

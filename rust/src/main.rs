@@ -15,6 +15,11 @@
 //!                    churn-bound, object-independent), migration
 //!                    traffic per rotation, availability during
 //!                    reconfiguration; emits `BENCH_epoch.json`.
+//! * `bench-restart`— crash-restart recovery bench (ISSUE 6): WAL
+//!                    replay cost vs stored chunks, clean and torn-tail
+//!                    restart waves with durability-loss and
+//!                    re-convergence accounting; emits
+//!                    `BENCH_restart.json`.
 //! * `tcp-demo`     — bring up a real-TCP localhost cluster and do one
 //!                    store/query round trip.
 //! * `sim`          — §6.1 durability simulations (fig4|fig5|fig6).
@@ -49,13 +54,14 @@ fn main() {
         "bench-codec" => cmd_bench_codec(&args),
         "bench-maint" => cmd_bench_maint(&args),
         "bench-epoch" => cmd_bench_epoch(&args),
+        "bench-restart" => cmd_bench_restart(&args),
         "tcp-demo" => cmd_tcp_demo(&args),
         "sim" => cmd_sim(&args),
         "analyze" => cmd_analyze(&args),
         "artifacts" => cmd_artifacts(&args),
         _ => {
             eprintln!(
-                "usage: vault <cluster|bench-ops|bench-codec|bench-maint|tcp-demo|sim|analyze|artifacts> [--flags]\n\
+                "usage: vault <cluster|bench-ops|bench-codec|bench-maint|bench-epoch|bench-restart|tcp-demo|sim|analyze|artifacts> [--flags]\n\
                  \n\
                  cluster     --peers 128 --objects 4 --size 262144 [--byzantine 0.1] [--churn 4]\n\
                  bench-ops   --peers 64 --ops 300 --inflight 32 --size 32768 [--sharded 0]\n\
@@ -65,6 +71,8 @@ fn main() {
                  \x20            [--seed 7] [--out BENCH_maint.json]\n\
                  bench-epoch [--smoke] [--epochs 4] [--epoch-ms 60000] [--churn 4]\n\
                  \x20            [--seed 7] [--out BENCH_epoch.json]\n\
+                 bench-restart [--smoke] [--peers 64] [--r 16] [--seed 7]\n\
+                 \x20            [--out BENCH_restart.json]\n\
                  tcp-demo    --peers 8 --size 65536\n\
                  sim         --fig 4|5|6 [--nodes 100000] [--objects 1000] [--churn 2.0] [--years 1]\n\
                  analyze     [--n 80] [--k 32] [--churn-q 0.01] [--evict 0] [--steps 512]\n\
@@ -756,6 +764,227 @@ fn cmd_bench_epoch(args: &Args) {
         "on-chain bytes/epoch across object counts: max/min = {ratio:.3} \
          (independent: {independent}); min availability during rotation {avail_min:.3} \
          ({wall_secs:.1}s wall)"
+    );
+}
+
+/// Build a SimNet whose peers each hold ~`chunks_per_node` fragments of
+/// real (hash-verifiable) seeded chunk groups — the bench-maint seeding
+/// recipe — and warm it past the first maintenance tick so every WAL
+/// holds its inventory plus at least one membership flush.
+fn seeded_restart_net(
+    peers: usize,
+    chunks_per_node: usize,
+    r: usize,
+    seed: u64,
+) -> (vault::net::simnet::SimNet, Vec<Hash256>) {
+    use vault::codec::rateless::InnerEncoder;
+    use vault::crypto::vrf;
+    use vault::dht::PeerInfo;
+    use vault::net::simnet::{SimNet, SimOpts};
+    use vault::proto::{ClaimVerify, VaultConfig};
+
+    let k_inner = 4usize.min(r);
+    let cfg = VaultConfig {
+        k_inner,
+        r_inner: r,
+        k_outer: 2,
+        n_outer: 3,
+        n_nodes: peers,
+        candidates: (3 * r).min(peers),
+        claim_verify: ClaimVerify::Never,
+        heartbeat_ms: 10_000,
+        suspicion_ms: 30_000,
+        tick_ms: 10_000,
+        ..Default::default()
+    };
+    let opts = SimOpts { seed, ..Default::default() };
+    let mut net = SimNet::new(cfg, peers, opts);
+    let n_groups = (peers * chunks_per_node / r).max(1);
+    let mut rng = Rng::new(seed ^ 0x2EB0);
+    let mut chashes = Vec::with_capacity(n_groups);
+    for _ in 0..n_groups {
+        let mut chunk = vec![0u8; 256];
+        rng.fill_bytes(&mut chunk);
+        let chash = Hash256::of(&chunk);
+        chashes.push(chash);
+        let member_idx = rng.sample_indices(peers, r);
+        let infos: Vec<PeerInfo> = member_idx.iter().map(|&i| net.peer(i).info).collect();
+        let enc = InnerEncoder::new(chash, &chunk, k_inner);
+        for (slot, &i) in member_idx.iter().enumerate() {
+            let frag = enc.fragment(slot as u64);
+            let proof = vrf::prove(&net.peer(i).key, b"bench-restart").1;
+            let others: Vec<PeerInfo> =
+                infos.iter().filter(|p| p.id != net.peer(i).info.id).copied().collect();
+            net.peer_mut(i).force_store(0, chash, frag, proof, others);
+        }
+    }
+    net.run_for(25_000);
+    (net, chashes)
+}
+
+/// One restart wave over a freshly seeded net: restart `count` peers
+/// (torn tails or clean), count chunks below the decode threshold right
+/// after the wave (durability loss), then drive to full re-convergence.
+struct RestartWave {
+    restarted: usize,
+    replayed_records: u64,
+    torn_records_lost: u64,
+    torn_bytes: u64,
+    durability_loss_chunks: usize,
+    reconverge_virtual_ms: u64,
+    converged: bool,
+}
+
+fn run_restart_wave(
+    peers: usize,
+    chunks_per_node: usize,
+    r: usize,
+    seed: u64,
+    count: usize,
+    torn: bool,
+) -> RestartWave {
+    let (mut net, chashes) = seeded_restart_net(peers, chunks_per_node, r, seed);
+    let k_inner = 4usize.min(r);
+    let mut wave = RestartWave {
+        restarted: 0,
+        replayed_records: 0,
+        torn_records_lost: 0,
+        torn_bytes: 0,
+        durability_loss_chunks: 0,
+        reconverge_virtual_ms: 0,
+        converged: false,
+    };
+    let mut rng = Rng::new(seed ^ 0x7042);
+    for _ in 0..count {
+        let i = rng.range(0, peers);
+        let records_before = net.peer(i).wal.next_sequence();
+        let cut = if torn {
+            let (start, end) = net.peer(i).wal.tail_span();
+            (end > start + 1).then(|| start + 1 + rng.next_u64() % (end - start - 1))
+        } else {
+            None
+        };
+        let report = net.restart(i, cut);
+        wave.restarted += 1;
+        wave.replayed_records += report.replayed;
+        wave.torn_records_lost += records_before - report.replayed;
+        wave.torn_bytes += report.torn_tail_bytes;
+    }
+    wave.durability_loss_chunks =
+        chashes.iter().filter(|c| net.surviving_fragments(c) < k_inner).count();
+    let start = net.now_ms();
+    let deadline = start + 40 * 60_000;
+    while net.now_ms() < deadline {
+        if chashes.iter().all(|c| net.surviving_fragments(c) >= r) {
+            wave.converged = true;
+            break;
+        }
+        net.run_for(10_000);
+    }
+    wave.reconverge_virtual_ms = net.now_ms() - start;
+    wave
+}
+
+/// Crash-restart recovery benchmark (ISSUE 6). Three measurements:
+/// recovery cost vs stored chunks (wall-ms per restart + replayed
+/// records/s, swept over chunks-per-node), a clean restart wave, and a
+/// torn-tail restart wave — both waves asserting zero durability loss
+/// and reporting bounded re-convergence in virtual time.
+fn cmd_bench_restart(args: &Args) {
+    let smoke = args.bool("smoke");
+    let peers = args.get("peers", if smoke { 32 } else { 64usize });
+    let r = args.get("r", 16usize);
+    let seed = args.get("seed", 7u64);
+    let out = args.str("out", "BENCH_restart.json");
+    let chunks_sweep: &[usize] = if smoke { &[4, 8] } else { &[8, 32, 64] };
+    let wave_count = (peers / 4).max(1);
+    println!(
+        "bench-restart{}: {peers} peers, R={r}, chunks/node sweep {chunks_sweep:?}, \
+         waves of {wave_count}",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let wall = Timer::start();
+    // Recovery-cost sweep: one peer restarted per seeded net, wall time
+    // bracketing exactly the WAL replay + rebuild + re-announce work.
+    let mut sweep_rows = Vec::new();
+    for &cpn in chunks_sweep {
+        let (mut net, _) = seeded_restart_net(peers, cpn, r, seed);
+        let victim = 0usize;
+        let records = net.peer(victim).wal.next_sequence();
+        let t = Timer::start();
+        let report = net.restart(victim, None);
+        let recovery_wall_ms = t.elapsed_s() * 1e3;
+        let replayed_per_sec = report.replayed as f64 / (recovery_wall_ms / 1e3).max(1e-9);
+        let recovered = net.peer(victim).metrics.recovered_fragments;
+        println!(
+            "  chunks/node {cpn:>3}: {records:>5} wal records, {recovery_wall_ms:>8.3} ms \
+             recovery, {replayed_per_sec:>12.0} records/s, {recovered} fragments back"
+        );
+        sweep_rows.push(format!(
+            "{{\"chunks_per_node\": {cpn}, \"wal_records\": {records}, \
+             \"recovery_wall_ms\": {recovery_wall_ms:.4}, \
+             \"replayed_per_sec\": {replayed_per_sec:.0}, \
+             \"recovered_fragments\": {recovered}}}"
+        ));
+    }
+    let cpn = chunks_sweep[chunks_sweep.len() / 2];
+
+    let clean = run_restart_wave(peers, cpn, r, seed, wave_count, false);
+    println!(
+        "  clean wave: {} restarts, {} records replayed, {} chunks lost, \
+         reconverge {} virtual ms{}",
+        clean.restarted,
+        clean.replayed_records,
+        clean.durability_loss_chunks,
+        clean.reconverge_virtual_ms,
+        if clean.converged { "" } else { " (NOT converged)" }
+    );
+    let torn = run_restart_wave(peers, cpn, r, seed ^ 1, wave_count, true);
+    println!(
+        "  torn wave : {} restarts, {} records replayed, {} tail records lost \
+         ({} B), {} chunks lost, reconverge {} virtual ms{}",
+        torn.restarted,
+        torn.replayed_records,
+        torn.torn_records_lost,
+        torn.torn_bytes,
+        torn.durability_loss_chunks,
+        torn.reconverge_virtual_ms,
+        if torn.converged { "" } else { " (NOT converged)" }
+    );
+
+    let wave_json = |w: &RestartWave| {
+        format!(
+            "{{\"restarted\": {}, \"replayed_records\": {}, \"torn_records_lost\": {}, \
+             \"torn_bytes\": {}, \"durability_loss_chunks\": {}, \
+             \"reconverge_virtual_ms\": {}, \"converged\": {}}}",
+            w.restarted,
+            w.replayed_records,
+            w.torn_records_lost,
+            w.torn_bytes,
+            w.durability_loss_chunks,
+            w.reconverge_virtual_ms,
+            w.converged,
+        )
+    };
+    let wall_secs = wall.elapsed_s();
+    let sweep = format!("[\n    {}\n  ]", sweep_rows.join(",\n    "));
+    let json = format!(
+        "{{\n  \"bench\": \"restart_recovery\",\n  \"smoke\": {smoke},\n  \"seed\": {seed},\n  \
+         \"peers\": {peers},\n  \"r_inner\": {r},\n  \"wave_restarts\": {wave_count},\n  \
+         \"recovery_sweep\": {sweep},\n  \
+         \"clean_wave\": {},\n  \"torn_wave\": {},\n  \"wall_secs\": {wall_secs:.3}\n}}\n",
+        wave_json(&clean),
+        wave_json(&torn),
+    );
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("failed to write {out}: {e}"),
+    }
+    println!(
+        "durability loss: clean {} chunks, torn {} chunks (both must be 0); \
+         ({wall_secs:.1}s wall)",
+        clean.durability_loss_chunks, torn.durability_loss_chunks
     );
 }
 

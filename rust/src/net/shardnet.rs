@@ -34,6 +34,7 @@ use std::sync::Arc;
 
 use crate::codec::ObjectId;
 use crate::crypto::Hash256;
+use crate::node::wal::WalReplayReport;
 use crate::dht::{NodeId, PeerInfo};
 use crate::proto::messages::Msg;
 use crate::proto::peer::VaultPeer;
@@ -62,7 +63,10 @@ struct Event {
 
 enum EventKind {
     Deliver { to_local: usize, from: NodeId, msg: Msg },
-    Timer { peer_local: usize, kind: TimerKind },
+    /// Timers carry the slot generation they were scheduled under so a
+    /// restart (generation bump) invalidates the dead incarnation's
+    /// pending timers — see `simnet::EventKind::Timer`.
+    Timer { peer_local: usize, gen: u32, kind: TimerKind },
 }
 
 impl PartialEq for Event {
@@ -86,6 +90,10 @@ struct Slot {
     peer: VaultPeer,
     up: bool,
     attacked: bool,
+    /// Identity seed (restart rebuilds the same identity from it).
+    seed: [u8; 32],
+    /// Incarnation counter; see [`EventKind::Timer`].
+    gen: u32,
 }
 
 /// A cross-shard message buffered during a window, delivered at the
@@ -171,8 +179,12 @@ impl Shard {
                 });
             }
         }
+        let gen = self.slots[from_local].gen;
         for (delay, kind) in out.timers {
-            self.push_local(now_ms + delay.max(1), EventKind::Timer { peer_local: from_local, kind });
+            self.push_local(
+                now_ms + delay.max(1),
+                EventKind::Timer { peer_local: from_local, gen, kind },
+            );
         }
         for ev in out.app {
             self.app_events.push((from_info.id, ev));
@@ -195,9 +207,12 @@ impl Shard {
                     self.slots[to_local].peer.on_message(dir, &mut out, from, msg);
                     self.drain(t, to_local, out, routes, opts);
                 }
-                EventKind::Timer { peer_local, kind } => {
+                EventKind::Timer { peer_local, gen, kind } => {
                     if !self.slots[peer_local].up {
                         continue; // dead peers lose their timers
+                    }
+                    if self.slots[peer_local].gen != gen {
+                        continue; // a previous incarnation's timer
                     }
                     let mut out = Outbox::at(t);
                     self.slots[peer_local].peer.on_timer(dir, &mut out, kind);
@@ -265,7 +280,7 @@ impl ShardNet {
                 peer.info.id,
                 Route { shard: shard as u32, local: local as u32, region },
             );
-            shards[shard].slots.push(Slot { peer, up: true, attacked: false });
+            shards[shard].slots.push(Slot { peer, up: true, attacked: false, seed, gen: 0 });
             index.push((shard, local));
         }
         let directory = Arc::new(OracleDirectory::from_peers(
@@ -420,6 +435,37 @@ impl ShardNet {
         self.slot(i).attacked
     }
 
+    /// Crash-restart a peer: the process dies (all volatile state and its
+    /// timer chain are lost), then a fresh incarnation with the same
+    /// identity seed recovers from the surviving WAL bytes. `torn_at`
+    /// truncates the WAL at that byte first, modelling a torn write to
+    /// the tail during the crash. Mirrors `SimNet::restart`.
+    pub fn restart(&mut self, i: usize, torn_at: Option<u64>) -> WalReplayReport {
+        let now = self.now_ms;
+        let (s, l) = self.index[i];
+        let routes = Arc::clone(&self.routes);
+        let opts = self.opts.clone();
+        let shard = self.shards[s].as_mut().expect("shard in flight");
+        let slot = &mut shard.slots[l];
+        let cfg = slot.peer.cfg.clone();
+        let region = slot.peer.info.region;
+        let seed = slot.seed;
+        let mut wal_bytes = slot.peer.wal.take_bytes();
+        if let Some(cut) = torn_at {
+            wal_bytes.truncate(cut as usize);
+        }
+        slot.peer = VaultPeer::new(cfg, &seed, region);
+        slot.up = true;
+        slot.attacked = false;
+        slot.gen = slot.gen.wrapping_add(1);
+        self.dir_dirty = true;
+        let mut out = Outbox::at(now);
+        let report = shard.slots[l].peer.recover_from_wal(&mut out, wal_bytes);
+        shard.drain(now, l, out, &routes, &opts);
+        self.exchange();
+        report
+    }
+
     /// Join a brand-new peer (churn arrivals). Returns its global index.
     pub fn spawn_peer(&mut self, region: u8) -> usize {
         let mut seed = [0u8; 32];
@@ -439,7 +485,7 @@ impl ShardNet {
         let shard_idx = idx % self.shards.len();
         let shard = self.shards[shard_idx].as_mut().unwrap();
         let local = shard.slots.len();
-        shard.slots.push(Slot { peer, up: true, attacked: false });
+        shard.slots.push(Slot { peer, up: true, attacked: false, seed, gen: 0 });
         self.index.push((shard_idx, local));
         self.by_id.insert(id, idx);
         Arc::make_mut(&mut self.routes).insert(

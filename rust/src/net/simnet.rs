@@ -13,6 +13,7 @@ use std::collections::{BinaryHeap, HashMap};
 use crate::codec::ObjectId;
 use crate::crypto::Hash256;
 use crate::dht::{ring_distance, NodeId, PeerInfo};
+use crate::node::wal::WalReplayReport;
 use crate::proto::messages::Msg;
 use crate::proto::peer::VaultPeer;
 use crate::proto::{AppEvent, Directory, Outbox, TimerKind, VaultConfig};
@@ -53,7 +54,11 @@ struct Event {
 
 enum EventKind {
     Deliver { to: usize, from: NodeId, msg: Msg },
-    Timer { peer: usize, kind: TimerKind },
+    /// Timers carry the slot generation they were scheduled under: a
+    /// restart bumps the generation, so the dead incarnation's pending
+    /// timers (notably its self-perpetuating Tick) are dropped instead
+    /// of doubling the rebuilt peer's tick chain.
+    Timer { peer: usize, gen: u32, kind: TimerKind },
 }
 
 impl PartialEq for Event {
@@ -79,6 +84,11 @@ struct Slot {
     /// Targeted attack (§6.1): all traffic to/from the node is dropped
     /// while the node itself may still believe it is alive.
     attacked: bool,
+    /// Identity seed the peer was built from — a restart rebuilds the
+    /// same identity (key, id, rng stream) from scratch.
+    seed: [u8; 32],
+    /// Incarnation counter; see [`EventKind::Timer`].
+    gen: u32,
 }
 
 /// Constant-time peer discovery oracle, sorted by ring position.
@@ -183,7 +193,7 @@ impl SimNet {
             rng.fill_bytes(&mut seed);
             let region = (i % opts.regions.max(1)) as u8;
             let peer = VaultPeer::new(cfg.clone(), &seed, region);
-            slots.push(Slot { peer, up: true, attacked: false });
+            slots.push(Slot { peer, up: true, attacked: false, seed, gen: 0 });
         }
         let by_id = slots.iter().enumerate().map(|(i, s)| (s.peer.info.id, i)).collect();
         let directory = OracleDirectory::rebuild(&slots);
@@ -280,7 +290,7 @@ impl SimNet {
         let peer = VaultPeer::new(cfg, &seed, region);
         let id = peer.info.id;
         let idx = self.slots.len();
-        self.slots.push(Slot { peer, up: true, attacked: false });
+        self.slots.push(Slot { peer, up: true, attacked: false, seed, gen: 0 });
         self.by_id.insert(id, idx);
         self.dir_dirty = true;
         let mut out = Outbox::at(self.now_ms);
@@ -315,6 +325,34 @@ impl SimNet {
     /// and timer chain are intact, unlike a [`Self::kill`]ed peer)?
     pub fn is_attacked(&self, i: usize) -> bool {
         self.slots[i].attacked
+    }
+
+    /// Reboot a peer in place (ISSUE 6): all volatile state — views,
+    /// in-flight ops, caches, timers — is lost; the WAL is the only
+    /// thing that survives the power cycle. `torn_at` truncates the
+    /// surviving log at that byte offset first, modeling a write torn
+    /// by the crash. Works on live and killed peers alike (a restart of
+    /// a live peer is a power cycle). Returns the replay report.
+    pub fn restart(&mut self, i: usize, torn_at: Option<u64>) -> WalReplayReport {
+        let now = self.now_ms;
+        let slot = &mut self.slots[i];
+        let cfg = slot.peer.cfg.clone();
+        let region = slot.peer.info.region;
+        let seed = slot.seed;
+        let mut wal_bytes = slot.peer.wal.take_bytes();
+        if let Some(cut) = torn_at {
+            wal_bytes.truncate(cut as usize);
+        }
+        slot.peer = VaultPeer::new(cfg, &seed, region);
+        slot.up = true;
+        slot.attacked = false;
+        // Invalidate the dead incarnation's pending timers.
+        slot.gen = slot.gen.wrapping_add(1);
+        self.dir_dirty = true;
+        let mut out = Outbox::at(now);
+        let report = self.slots[i].peer.recover_from_wal(&mut out, wal_bytes);
+        self.drain(i, out);
+        report
     }
 
     /// Deliver a system message to one peer out of band (no sender, no
@@ -393,8 +431,12 @@ impl SimNet {
             self.stats.bytes += size as u64;
             self.push_event(self.now_ms + lat, EventKind::Deliver { to: ti, from: from_info.id, msg });
         }
+        let gen = self.slots[from_slot].gen;
         for (delay, kind) in out.timers {
-            self.push_event(self.now_ms + delay.max(1), EventKind::Timer { peer: from_slot, kind });
+            self.push_event(
+                self.now_ms + delay.max(1),
+                EventKind::Timer { peer: from_slot, gen, kind },
+            );
         }
         for ev in out.app {
             self.app_events.push((from_info.id, ev));
@@ -480,9 +522,12 @@ impl SimNet {
                 self.directory = dir;
                 self.drain(to, out);
             }
-            EventKind::Timer { peer, kind } => {
+            EventKind::Timer { peer, gen, kind } => {
                 if !self.slots[peer].up {
                     return; // dead peers lose their timers
+                }
+                if self.slots[peer].gen != gen {
+                    return; // a previous incarnation's timer (pre-restart)
                 }
                 self.refresh_directory();
                 let mut out = Outbox::at(self.now_ms);

@@ -3,7 +3,10 @@
 //! The protocol state machine ([`crate::proto::peer`]) keeps fragments
 //! in memory; a real deployment must survive process restarts without
 //! losing its chunk-group memberships. [`storage::DiskStore`] provides
-//! the crash-safe on-disk fragment store the `vault node` daemon
-//! snapshots into and recovers from.
+//! the crash-safe on-disk fragment store, and [`wal`] the event-sourced
+//! write-ahead log the peer appends every durable mutation to — the
+//! restart/recovery path (ISSUE 6) replays the WAL and re-joins the
+//! node's groups.
 
 pub mod storage;
+pub mod wal;

@@ -2,9 +2,15 @@
 //!
 //! Layout: `<root>/<chash-hex>.frag`, one file per stored fragment,
 //! containing the wire-encoded [`StoredFragment`] (fragment + own
-//! selection proof + expiry). Writes go through a temp file + rename so
-//! a crash never leaves a torn record; unparseable files are skipped at
-//! recovery (treated as lost fragments — the group repairs them).
+//! selection proof + expiry) followed by an 8-byte FNV-64 checksum
+//! trailer. Writes go through a temp file + fsync + rename + directory
+//! fsync so a crash never leaves a torn record *and* never silently
+//! drops a completed one (rename alone is not durable until the parent
+//! directory's metadata hits the platter). Stale `.tmp-*` files from a
+//! crash between create and rename are swept at `open`. Damaged records
+//! are reported as [`LoadOutcome::Corrupt`] — distinguishable from
+//! absence — and counted, so the recovery path can assert on exactly
+//! how much was lost.
 
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -14,6 +20,8 @@ use crate::codec::rateless::Fragment;
 use crate::crypto::vrf::VrfProof;
 use crate::crypto::Hash256;
 use crate::wire::{Decode, Encode};
+
+use super::wal::{fnv64, fsync_dir};
 
 /// Everything a node must persist per fragment to resume group duty.
 #[derive(Clone, Debug, PartialEq)]
@@ -26,70 +34,175 @@ pub struct StoredFragment {
 
 crate::wire_struct!(StoredFragment { chash, frag, proof, expires_ms });
 
+/// The tri-state a read can land in. `Corrupt` is NOT `Absent`: a
+/// corrupt record means this node *did* accept custody and lost the
+/// bytes — the caller must count it against durability and let the
+/// group repair it, not pretend it never held the fragment.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LoadOutcome {
+    Loaded(StoredFragment),
+    Absent,
+    Corrupt,
+}
+
+/// What `load_all` recovered, plus the damage tally the restart
+/// scenarios assert on.
+#[derive(Debug, Default)]
+pub struct Recovered {
+    pub fragments: Vec<StoredFragment>,
+    /// `.frag` files that failed checksum or decode (skipped).
+    pub corrupt_records: u64,
+    /// Stale `.tmp-*` files swept by `open` since construction.
+    pub tmp_swept: u64,
+}
+
 pub struct DiskStore {
     root: PathBuf,
     /// Disambiguates concurrent temp files (a wall-clock name collides
     /// for two writes in the same millisecond).
     tmp_seq: AtomicU64,
+    /// Stale temp files removed during `open` — recovery metric.
+    tmp_swept: AtomicU64,
+    /// Parent-directory fsyncs issued (after rename and after remove) —
+    /// lets tests assert the durability path is actually exercised.
+    dir_syncs: AtomicU64,
 }
 
 impl DiskStore {
+    /// Open the store, creating the root if needed and sweeping any
+    /// `.tmp-*` leftovers from a crash between temp-create and rename.
+    /// Valid `.frag` records are never touched by the sweep.
     pub fn open(root: impl Into<PathBuf>) -> std::io::Result<DiskStore> {
         let root = root.into();
         std::fs::create_dir_all(&root)?;
-        Ok(DiskStore { root, tmp_seq: AtomicU64::new(0) })
+        let mut swept = 0u64;
+        for entry in std::fs::read_dir(&root)? {
+            let entry = entry?;
+            if entry.file_name().to_string_lossy().starts_with(".tmp-") {
+                std::fs::remove_file(entry.path())?;
+                swept += 1;
+            }
+        }
+        let store = DiskStore {
+            root,
+            tmp_seq: AtomicU64::new(0),
+            tmp_swept: AtomicU64::new(swept),
+            dir_syncs: AtomicU64::new(0),
+        };
+        if swept > 0 {
+            store.sync_root()?;
+        }
+        Ok(store)
     }
 
     fn path_for(&self, chash: &Hash256) -> PathBuf {
         self.root.join(format!("{}.frag", chash.to_hex()))
     }
 
-    /// Atomic write: temp file in the same directory, fsync, rename.
-    /// The temp name is derived from the chunk hash plus a per-store
-    /// counter, so concurrent `put`s never clobber each other's
-    /// half-written files.
+    fn sync_root(&self) -> std::io::Result<()> {
+        fsync_dir(&self.root)?;
+        self.dir_syncs.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Record frame: wire bytes + FNV-64 trailer. The wire codec alone
+    /// accepts a bit-flipped payload byte (lengths still parse); the
+    /// checksum makes any single-byte damage detectable.
+    fn frame(rec: &StoredFragment) -> Vec<u8> {
+        let mut bytes = rec.to_bytes();
+        let sum = fnv64(&bytes);
+        bytes.extend_from_slice(&sum.to_le_bytes());
+        bytes
+    }
+
+    fn unframe(bytes: &[u8]) -> Option<StoredFragment> {
+        if bytes.len() < 8 {
+            return None;
+        }
+        let (payload, trailer) = bytes.split_at(bytes.len() - 8);
+        if fnv64(payload) != u64::from_le_bytes(trailer.try_into().unwrap()) {
+            return None;
+        }
+        StoredFragment::from_bytes(payload).ok()
+    }
+
+    /// Atomic durable write: temp file in the same directory, fsync,
+    /// rename, then fsync the directory so the rename itself survives
+    /// power loss. The temp name is derived from the chunk hash plus a
+    /// per-store counter, so concurrent `put`s never clobber each
+    /// other's half-written files.
     pub fn put(&self, rec: &StoredFragment) -> std::io::Result<()> {
         let final_path = self.path_for(&rec.chash);
         let seq = self.tmp_seq.fetch_add(1, Ordering::Relaxed);
         let tmp_path = self.root.join(format!(".tmp-{}-{seq}", rec.chash.to_hex()));
         {
             let mut f = std::fs::File::create(&tmp_path)?;
-            f.write_all(&rec.to_bytes())?;
+            f.write_all(&Self::frame(rec))?;
             f.sync_all()?;
         }
         std::fs::rename(&tmp_path, &final_path)?;
+        self.sync_root()?;
         Ok(())
     }
 
-    pub fn get(&self, chash: &Hash256) -> Option<StoredFragment> {
-        let bytes = std::fs::read(self.path_for(chash)).ok()?;
-        StoredFragment::from_bytes(&bytes).ok()
+    /// Tri-state read: corruption is not absence (see [`LoadOutcome`]).
+    pub fn get(&self, chash: &Hash256) -> std::io::Result<LoadOutcome> {
+        let bytes = match std::fs::read(self.path_for(chash)) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(LoadOutcome::Absent)
+            }
+            Err(e) => return Err(e),
+        };
+        Ok(match Self::unframe(&bytes) {
+            Some(rec) => LoadOutcome::Loaded(rec),
+            None => LoadOutcome::Corrupt,
+        })
     }
 
+    /// Remove a record and make the removal durable (directory fsync —
+    /// without it a crash can resurrect the file and the node would
+    /// claim custody of a fragment the protocol already released).
     pub fn remove(&self, chash: &Hash256) -> std::io::Result<bool> {
         match std::fs::remove_file(self.path_for(chash)) {
-            Ok(()) => Ok(true),
+            Ok(()) => {
+                self.sync_root()?;
+                Ok(true)
+            }
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
             Err(e) => Err(e),
         }
     }
 
-    /// Recover every parseable fragment (crash recovery path).
-    pub fn load_all(&self) -> std::io::Result<Vec<StoredFragment>> {
-        let mut out = Vec::new();
+    /// Recover every valid fragment (crash recovery path), counting —
+    /// not hiding — the ones that failed checksum or decode.
+    pub fn load_all(&self) -> std::io::Result<Recovered> {
+        let mut out = Recovered {
+            tmp_swept: self.tmp_swept.load(Ordering::Relaxed),
+            ..Recovered::default()
+        };
         for entry in std::fs::read_dir(&self.root)? {
             let entry = entry?;
             let path = entry.path();
             if path.extension().map(|e| e != "frag").unwrap_or(true) {
                 continue;
             }
-            if let Ok(bytes) = std::fs::read(&path) {
-                if let Ok(rec) = StoredFragment::from_bytes(&bytes) {
-                    out.push(rec);
-                }
+            match std::fs::read(&path).ok().as_deref().and_then(Self::unframe) {
+                Some(rec) => out.fragments.push(rec),
+                None => out.corrupt_records += 1,
             }
         }
         Ok(out)
+    }
+
+    /// Parent-directory fsyncs issued so far (test observability).
+    pub fn dir_syncs(&self) -> u64 {
+        self.dir_syncs.load(Ordering::Relaxed)
+    }
+
+    /// Stale `.tmp-*` files swept at `open`.
+    pub fn tmp_swept(&self) -> u64 {
+        self.tmp_swept.load(Ordering::Relaxed)
     }
 
     pub fn root(&self) -> &Path {
@@ -126,10 +239,47 @@ mod tests {
         let store = DiskStore::open(tmpdir("rt")).unwrap();
         let r = rec(1);
         store.put(&r).unwrap();
-        assert_eq!(store.get(&r.chash), Some(r.clone()));
+        assert_eq!(store.get(&r.chash).unwrap(), LoadOutcome::Loaded(r.clone()));
         assert!(store.remove(&r.chash).unwrap());
-        assert_eq!(store.get(&r.chash), None);
+        assert_eq!(store.get(&r.chash).unwrap(), LoadOutcome::Absent);
         assert!(!store.remove(&r.chash).unwrap());
+    }
+
+    #[test]
+    fn put_and_remove_fsync_the_parent_directory() {
+        // ISSUE 6 satellite 1: rename/unlink without a directory fsync
+        // is not durable. Assert the fsync path actually runs — once
+        // per put, once per effective remove, none for a no-op remove.
+        let store = DiskStore::open(tmpdir("fsync")).unwrap();
+        assert_eq!(store.dir_syncs(), 0);
+        let r = rec(1);
+        store.put(&r).unwrap();
+        assert_eq!(store.dir_syncs(), 1, "put must fsync the directory after rename");
+        store.put(&rec(2)).unwrap();
+        assert_eq!(store.dir_syncs(), 2);
+        assert!(store.remove(&r.chash).unwrap());
+        assert_eq!(store.dir_syncs(), 3, "remove must fsync the directory after unlink");
+        assert!(!store.remove(&r.chash).unwrap());
+        assert_eq!(store.dir_syncs(), 3, "a no-op remove has nothing to make durable");
+    }
+
+    #[test]
+    fn stale_tmp_files_are_swept_at_open() {
+        // ISSUE 6 satellite 2: a crash between temp-create and rename
+        // leaves `.tmp-*` behind; open must sweep it without touching
+        // valid records.
+        let dir = tmpdir("sweep");
+        {
+            let store = DiskStore::open(&dir).unwrap();
+            store.put(&rec(1)).unwrap();
+        }
+        std::fs::write(dir.join(".tmp-deadbeef-0"), b"half-written").unwrap();
+        let store = DiskStore::open(&dir).unwrap();
+        assert_eq!(store.tmp_swept(), 1, "the planted temp file must be swept");
+        assert!(!dir.join(".tmp-deadbeef-0").exists());
+        let recovered = store.load_all().unwrap();
+        assert_eq!(recovered.fragments, vec![rec(1)], "valid records must survive the sweep");
+        assert_eq!(recovered.tmp_swept, 1);
     }
 
     #[test]
@@ -138,20 +288,37 @@ mod tests {
         for t in 1..=5 {
             store.put(&rec(t)).unwrap();
         }
-        let mut all = store.load_all().unwrap();
-        all.sort_by_key(|r| r.frag.index);
-        assert_eq!(all.len(), 5);
-        assert_eq!(all[0], rec(1));
+        let mut recovered = store.load_all().unwrap();
+        recovered.fragments.sort_by_key(|r| r.frag.index);
+        assert_eq!(recovered.fragments.len(), 5);
+        assert_eq!(recovered.fragments[0], rec(1));
+        assert_eq!(recovered.corrupt_records, 0);
     }
 
     #[test]
-    fn corrupt_files_are_skipped() {
+    fn corrupt_records_are_counted_not_hidden() {
+        // ISSUE 6 satellite 3: corruption and absence are different
+        // outcomes, and recovery counts what it skipped.
         let dir = tmpdir("corrupt");
         let store = DiskStore::open(&dir).unwrap();
         store.put(&rec(2)).unwrap();
         std::fs::write(dir.join("garbage.frag"), b"not a fragment").unwrap();
-        let all = store.load_all().unwrap();
-        assert_eq!(all.len(), 1);
+        let recovered = store.load_all().unwrap();
+        assert_eq!(recovered.fragments.len(), 1);
+        assert_eq!(recovered.corrupt_records, 1, "the garbage record must be counted");
+
+        // A bit-flipped payload byte still wire-decodes; the checksum
+        // trailer is what catches it.
+        let r = rec(3);
+        store.put(&r).unwrap();
+        let path = dir.join(format!("{}.frag", r.chash.to_hex()));
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        assert_eq!(store.get(&r.chash).unwrap(), LoadOutcome::Corrupt);
+        assert_eq!(store.get(&Hash256::of(b"never-stored")).unwrap(), LoadOutcome::Absent);
+        assert_eq!(store.load_all().unwrap().corrupt_records, 2);
     }
 
     #[test]
@@ -164,7 +331,7 @@ mod tests {
         for t in 1..=20 {
             store.put(&rec(t)).unwrap();
         }
-        assert_eq!(store.load_all().unwrap().len(), 20);
+        assert_eq!(store.load_all().unwrap().fragments.len(), 20);
         let leftovers = std::fs::read_dir(&dir)
             .unwrap()
             .filter_map(|e| e.ok())
@@ -180,7 +347,10 @@ mod tests {
         store.put(&r).unwrap();
         r.expires_ms = 999;
         store.put(&r).unwrap();
-        assert_eq!(store.get(&r.chash).unwrap().expires_ms, 999);
-        assert_eq!(store.load_all().unwrap().len(), 1);
+        match store.get(&r.chash).unwrap() {
+            LoadOutcome::Loaded(got) => assert_eq!(got.expires_ms, 999),
+            other => panic!("expected the replacement record, got {other:?}"),
+        }
+        assert_eq!(store.load_all().unwrap().fragments.len(), 1);
     }
 }

@@ -1,0 +1,552 @@
+//! Event-sourced write-ahead log for node-local durable state (ISSUE 6).
+//!
+//! Every mutation a node must survive a reboot with — fragment admission
+//! and retirement, group-membership snapshots, the chain watcher's epoch
+//! cursor — is appended as a sequenced, checksummed operation record.
+//! Recovery replays the log front-to-back and *materializes* the final
+//! state (last-write-wins per chunk), the otters pattern: the log is the
+//! source of truth, the in-memory maps are a cache.
+//!
+//! ## Frame format
+//!
+//! ```text
+//! | len: u32 LE | payload: len bytes | fnv64(payload): u64 LE |
+//! ```
+//!
+//! where `payload` is the wire-encoded [`WalRecord`] (sequence number,
+//! timestamp, operation). Replay stops at the first frame that is torn
+//! (truncated mid-frame), fails its checksum, fails strict wire decode,
+//! or breaks the sequence chain — everything before that point is the
+//! *valid prefix* and is fully trusted; everything after is counted and
+//! discarded. A torn final write therefore loses exactly the records it
+//! overlapped, never earlier ones, and never panics.
+//!
+//! The simulated runtimes keep the log as an in-memory byte buffer (the
+//! sim's "disk": it survives a peer kill inside the slot and is handed
+//! to the rebuilt peer at restart, optionally truncated to model a torn
+//! tail). [`DiskWal`] backs the same frame format with a real
+//! append-only file for the on-disk deployment path.
+
+use std::path::{Path, PathBuf};
+
+use crate::crypto::Hash256;
+use crate::dht::PeerInfo;
+use crate::wire::{Decode, Encode, Reader, WireError, WireResult, Writer};
+
+use super::storage::StoredFragment;
+
+/// Upper bound on a single frame payload. A `FragPut` carries one
+/// fragment (chunk-sized at most); anything claiming to be larger is a
+/// corrupt length field, not a real record.
+pub const WAL_MAX_FRAME: usize = 1 << 22;
+
+/// FNV-1a 64-bit — the per-record integrity checksum. Not
+/// collision-resistant against an adversary (the WAL is node-local and
+/// never crosses the network); it only needs to catch torn writes and
+/// bit rot, and it is cheap enough to run on every append.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One logged operation — the event vocabulary of the durable state.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WalOp {
+    /// Fragment admitted (store, repair join, or rotation re-proof).
+    FragPut(StoredFragment),
+    /// Fragment dropped (expiry, grace retirement, explicit remove).
+    FragRemove(Hash256),
+    /// Full membership snapshot for one chunk group. Snapshots rather
+    /// than per-member deltas: a group is ~R entries, and last-write-
+    /// wins snapshots make replay order-insensitive within a group.
+    Members { chash: Hash256, members: Vec<PeerInfo> },
+    /// The chain watcher's cursor: last adopted epoch head. Recovery
+    /// adopts the newest cursor, then catches up any missed epochs
+    /// through the non-consecutive gap path.
+    EpochCursor { epoch: u64, beacon: [u8; 32], n_nodes: u64 },
+}
+
+impl Encode for WalOp {
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            WalOp::FragPut(rec) => {
+                w.u8(1);
+                rec.encode(w);
+            }
+            WalOp::FragRemove(chash) => {
+                w.u8(2);
+                chash.encode(w);
+            }
+            WalOp::Members { chash, members } => {
+                w.u8(3);
+                chash.encode(w);
+                members.encode(w);
+            }
+            WalOp::EpochCursor { epoch, beacon, n_nodes } => {
+                w.u8(4);
+                w.u64(*epoch);
+                beacon.encode(w);
+                w.u64(*n_nodes);
+            }
+        }
+    }
+}
+
+impl Decode for WalOp {
+    fn decode(r: &mut Reader<'_>) -> WireResult<Self> {
+        Ok(match r.u8()? {
+            1 => WalOp::FragPut(StoredFragment::decode(r)?),
+            2 => WalOp::FragRemove(Hash256::decode(r)?),
+            3 => WalOp::Members {
+                chash: Hash256::decode(r)?,
+                members: Vec::<PeerInfo>::decode(r)?,
+            },
+            4 => WalOp::EpochCursor {
+                epoch: r.u64()?,
+                beacon: <[u8; 32]>::decode(r)?,
+                n_nodes: r.u64()?,
+            },
+            t => return Err(WireError::BadTag(t as u32)),
+        })
+    }
+}
+
+/// One WAL entry: a sequence number (dense, starting at 0), the
+/// simulated wall clock at append time, and the operation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WalRecord {
+    pub sequence: u64,
+    pub at_ms: u64,
+    pub op: WalOp,
+}
+
+crate::wire_struct!(WalRecord { sequence, at_ms, op });
+
+/// What replay observed — restart scenarios and the recovery metrics
+/// assert on these counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WalReplayReport {
+    /// Records in the valid prefix (fully replayed).
+    pub replayed: u64,
+    /// Frames rejected for checksum / decode / sequence-chain failure
+    /// (0 or 1: replay stops at the first bad frame).
+    pub corrupt_records: u64,
+    /// Bytes beyond the valid prefix (torn tail + anything after it).
+    pub torn_tail_bytes: u64,
+    /// Length of the valid prefix — recovery resumes appending here.
+    pub valid_bytes: u64,
+    /// Byte offset where the final replayed frame begins (equals
+    /// `valid_bytes` when the log is empty). Lets a torn-write injector
+    /// aim its cut at the tail record specifically.
+    pub tail_record_offset: u64,
+}
+
+/// In-memory append-only WAL buffer — the simulated runtimes' "disk".
+#[derive(Clone, Debug, Default)]
+pub struct Wal {
+    buf: Vec<u8>,
+    next_seq: u64,
+    last_frame_start: usize,
+}
+
+impl Wal {
+    pub fn new() -> Wal {
+        Wal::default()
+    }
+
+    /// Append one operation; returns its sequence number.
+    pub fn append(&mut self, at_ms: u64, op: WalOp) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let payload = WalRecord { sequence: seq, at_ms, op }.to_bytes();
+        self.last_frame_start = self.buf.len();
+        self.buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        self.buf.extend_from_slice(&payload);
+        self.buf.extend_from_slice(&fnv64(&payload).to_le_bytes());
+        seq
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn len_bytes(&self) -> u64 {
+        self.buf.len() as u64
+    }
+
+    pub fn next_sequence(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// `[start, end)` byte span of the final frame — the torn-write
+    /// injector cuts at a byte inside this span so the tear lands on
+    /// the tail record (a cut before it would also drop intact frames,
+    /// which models a lost disk, not a torn write).
+    pub fn tail_span(&self) -> (u64, u64) {
+        (self.last_frame_start as u64, self.buf.len() as u64)
+    }
+
+    /// Harvest the raw log, leaving this instance empty (the old peer
+    /// object is about to be discarded by the restart hook).
+    pub fn take_bytes(&mut self) -> Vec<u8> {
+        self.last_frame_start = 0;
+        self.next_seq = 0;
+        std::mem::take(&mut self.buf)
+    }
+
+    /// Rebuild a writer from a crashed node's log: replay, truncate to
+    /// the valid prefix, and resume the sequence chain after the last
+    /// good record. Returns the records to materialize plus the replay
+    /// report.
+    pub fn resume(mut buf: Vec<u8>) -> (Wal, Vec<WalRecord>, WalReplayReport) {
+        let (records, report) = replay(&buf);
+        buf.truncate(report.valid_bytes as usize);
+        let wal = Wal {
+            buf,
+            next_seq: records.last().map(|r| r.sequence + 1).unwrap_or(0),
+            last_frame_start: report.tail_record_offset as usize,
+        };
+        (wal, records, report)
+    }
+}
+
+/// Decode every valid frame from the front; stop at the first torn,
+/// corrupt, or out-of-sequence frame. Never panics on arbitrary bytes.
+pub fn replay(bytes: &[u8]) -> (Vec<WalRecord>, WalReplayReport) {
+    let mut records = Vec::new();
+    let mut report = WalReplayReport::default();
+    let mut pos = 0usize;
+    let mut expect_seq = 0u64;
+    loop {
+        let rest = bytes.len() - pos;
+        if rest == 0 {
+            break;
+        }
+        if rest < 4 {
+            report.torn_tail_bytes = rest as u64;
+            break;
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        if len > WAL_MAX_FRAME || rest < 4 + len + 8 {
+            // Absurd length = corrupt length field; short frame = torn
+            // tail. Either way nothing past here is trustworthy.
+            if len > WAL_MAX_FRAME {
+                report.corrupt_records += 1;
+            }
+            report.torn_tail_bytes = rest as u64;
+            break;
+        }
+        let payload = &bytes[pos + 4..pos + 4 + len];
+        let sum =
+            u64::from_le_bytes(bytes[pos + 4 + len..pos + 4 + len + 8].try_into().unwrap());
+        if fnv64(payload) != sum {
+            report.corrupt_records += 1;
+            report.torn_tail_bytes = rest as u64;
+            break;
+        }
+        let rec = match WalRecord::from_bytes(payload) {
+            Ok(rec) if rec.sequence == expect_seq => rec,
+            _ => {
+                report.corrupt_records += 1;
+                report.torn_tail_bytes = rest as u64;
+                break;
+            }
+        };
+        expect_seq = rec.sequence + 1;
+        report.tail_record_offset = pos as u64;
+        pos += 4 + len + 8;
+        report.valid_bytes = pos as u64;
+        report.replayed += 1;
+        records.push(rec);
+    }
+    (records, report)
+}
+
+/// Materialized view of a replayed log: the state a node reboots into.
+#[derive(Clone, Debug, Default)]
+pub struct WalState {
+    /// Surviving fragments with their last snapshotted group view, in
+    /// chunk-hash order (a deterministic recovery install order).
+    pub fragments: Vec<(StoredFragment, Vec<PeerInfo>)>,
+    /// Newest `(epoch, beacon, n_nodes)` cursor, if any was logged.
+    pub epoch: Option<(u64, [u8; 32], u64)>,
+}
+
+/// Fold records front-to-back, last-write-wins per chunk.
+pub fn materialize(records: &[WalRecord]) -> WalState {
+    use std::collections::BTreeMap;
+    let mut frags: BTreeMap<Hash256, (StoredFragment, Vec<PeerInfo>)> = BTreeMap::new();
+    let mut epoch = None;
+    for rec in records {
+        match &rec.op {
+            WalOp::FragPut(sf) => {
+                frags.insert(sf.chash, (sf.clone(), Vec::new()));
+            }
+            WalOp::FragRemove(chash) => {
+                frags.remove(chash);
+            }
+            WalOp::Members { chash, members } => {
+                // A snapshot for a chunk we no longer hold is a stale
+                // straggler (remove won the race) — ignore it.
+                if let Some(entry) = frags.get_mut(chash) {
+                    entry.1 = members.clone();
+                }
+            }
+            WalOp::EpochCursor { epoch: e, beacon, n_nodes } => {
+                epoch = Some((*e, *beacon, *n_nodes));
+            }
+        }
+    }
+    WalState { fragments: frags.into_values().collect(), epoch }
+}
+
+/// File-backed WAL for the on-disk deployment path: the same frame
+/// format appended to `<path>`, fsynced per record, with the parent
+/// directory fsynced on creation so the log file itself survives a
+/// crash right after `open`.
+pub struct DiskWal {
+    file: std::fs::File,
+    path: PathBuf,
+    next_seq: u64,
+}
+
+impl DiskWal {
+    /// Open (creating if absent), replay what is on disk, and truncate
+    /// the file to the valid prefix so a torn tail is physically
+    /// discarded before new appends land after it.
+    pub fn open(
+        path: impl Into<PathBuf>,
+    ) -> std::io::Result<(DiskWal, Vec<WalRecord>, WalReplayReport)> {
+        let path = path.into();
+        let existed = path.exists();
+        let bytes = if existed { std::fs::read(&path)? } else { Vec::new() };
+        let (records, report) = replay(&bytes);
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .open(&path)?;
+        file.set_len(report.valid_bytes)?;
+        file.sync_all()?;
+        if !existed {
+            if let Some(dir) = path.parent() {
+                fsync_dir(dir)?;
+            }
+        }
+        let next_seq = records.last().map(|r| r.sequence + 1).unwrap_or(0);
+        Ok((DiskWal { file, path, next_seq }, records, report))
+    }
+
+    /// Append one record and fsync it to the platter.
+    pub fn append(&mut self, at_ms: u64, op: WalOp) -> std::io::Result<u64> {
+        use std::io::{Seek, SeekFrom, Write};
+        let seq = self.next_seq;
+        let payload = WalRecord { sequence: seq, at_ms, op }.to_bytes();
+        let mut frame = Vec::with_capacity(payload.len() + 12);
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        frame.extend_from_slice(&fnv64(&payload).to_le_bytes());
+        self.file.seek(SeekFrom::End(0))?;
+        self.file.write_all(&frame)?;
+        self.file.sync_data()?;
+        self.next_seq = seq + 1;
+        Ok(seq)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Fsync a directory handle — makes a rename/create in that directory
+/// durable. On non-unix hosts directories cannot be opened as files;
+/// there the call is a no-op (the sim never exercises it anyway).
+pub fn fsync_dir(dir: &Path) -> std::io::Result<()> {
+    #[cfg(unix)]
+    {
+        std::fs::File::open(dir)?.sync_all()
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = dir;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::rateless::Fragment;
+    use crate::crypto::ed25519::SigningKey;
+    use crate::crypto::vrf;
+
+    fn frag_rec(tag: u8) -> StoredFragment {
+        let sk = SigningKey::from_seed(&[tag; 32]);
+        let (_, proof) = vrf::prove(&sk, &[tag]);
+        StoredFragment {
+            chash: Hash256::of(&[tag]),
+            frag: Fragment { index: tag as u64, chunk_len: 80, payload: vec![tag; 48] },
+            proof,
+            expires_ms: 0,
+        }
+    }
+
+    fn peer_info(tag: u8) -> PeerInfo {
+        let sk = SigningKey::from_seed(&[tag ^ 0x5A; 32]);
+        PeerInfo {
+            id: crate::dht::NodeId::from_pk(&sk.public),
+            pk: sk.public,
+            region: tag % 5,
+        }
+    }
+
+    fn sample_wal() -> Wal {
+        let mut wal = Wal::new();
+        wal.append(10, WalOp::FragPut(frag_rec(1)));
+        wal.append(10, WalOp::Members {
+            chash: frag_rec(1).chash,
+            members: vec![peer_info(1), peer_info(2)],
+        });
+        wal.append(20, WalOp::FragPut(frag_rec(2)));
+        wal.append(30, WalOp::EpochCursor { epoch: 7, beacon: [9; 32], n_nodes: 64 });
+        wal.append(40, WalOp::FragRemove(frag_rec(2).chash));
+        wal
+    }
+
+    #[test]
+    fn replay_roundtrips_and_materializes() {
+        let wal = sample_wal();
+        let (records, report) = replay(wal.bytes());
+        assert_eq!(report.replayed, 5);
+        assert_eq!(report.corrupt_records, 0);
+        assert_eq!(report.torn_tail_bytes, 0);
+        assert_eq!(report.valid_bytes, wal.len_bytes());
+        assert_eq!(records.len(), 5);
+
+        let state = materialize(&records);
+        assert_eq!(state.fragments.len(), 1, "put+remove must cancel for chunk 2");
+        assert_eq!(state.fragments[0].0, frag_rec(1));
+        assert_eq!(state.fragments[0].1, vec![peer_info(1), peer_info(2)]);
+        assert_eq!(state.epoch, Some((7, [9; 32], 64)));
+    }
+
+    #[test]
+    fn torn_tail_at_every_byte_loses_only_the_tail() {
+        // Truncate the log at EVERY byte prefix: replay must never
+        // panic, must keep every frame wholly before the cut, and must
+        // report the tear.
+        let wal = sample_wal();
+        let bytes = wal.bytes();
+        let (full, _) = replay(bytes);
+        for cut in 0..bytes.len() {
+            let (records, report) = replay(&bytes[..cut]);
+            assert!(records.len() <= full.len());
+            assert_eq!(records, full[..records.len()], "prefix must replay identically");
+            assert_eq!(
+                report.valid_bytes as usize + report.torn_tail_bytes as usize,
+                cut,
+                "every byte is either valid prefix or torn tail (cut={cut})"
+            );
+            if (cut as u64) < wal.len_bytes() {
+                assert!(records.len() < full.len(), "a cut mid-log must lose the tail record");
+            }
+        }
+    }
+
+    #[test]
+    fn bit_flip_at_every_byte_is_detected_and_bounded() {
+        // Flip one bit at every byte position: replay must reject the
+        // damaged frame (checksum or decode) and keep everything before
+        // it — corruption never silently yields a different record.
+        let wal = sample_wal();
+        let clean = wal.bytes().to_vec();
+        let (full, _) = replay(&clean);
+        for pos in 0..clean.len() {
+            let mut dirty = clean.clone();
+            dirty[pos] ^= 0x01;
+            let (records, report) = replay(&dirty);
+            assert!(records.len() < full.len(), "flip at {pos} must lose at least the hit frame");
+            assert_eq!(records, full[..records.len()], "frames before the flip must survive");
+            assert!(
+                report.corrupt_records > 0 || report.torn_tail_bytes > 0,
+                "flip at {pos} must be reported"
+            );
+        }
+    }
+
+    #[test]
+    fn sequence_break_stops_replay() {
+        // Two independent logs concatenated restart the sequence chain
+        // at 0 — replay must refuse the second log's records.
+        let wal = sample_wal();
+        let mut spliced = wal.bytes().to_vec();
+        spliced.extend_from_slice(sample_wal().bytes());
+        let (records, report) = replay(&spliced);
+        assert_eq!(records.len(), 5);
+        assert_eq!(report.corrupt_records, 1);
+    }
+
+    #[test]
+    fn resume_continues_the_sequence_chain() {
+        let wal = sample_wal();
+        let (mut resumed, records, report) = Wal::resume(wal.bytes().to_vec());
+        assert_eq!(records.len(), 5);
+        assert_eq!(report.replayed, 5);
+        assert_eq!(resumed.next_sequence(), 5);
+        let seq = resumed.append(50, WalOp::FragRemove(frag_rec(1).chash));
+        assert_eq!(seq, 5);
+        let (records2, report2) = replay(resumed.bytes());
+        assert_eq!(report2.corrupt_records, 0);
+        assert_eq!(records2.len(), 6);
+        assert!(materialize(&records2).fragments.is_empty());
+    }
+
+    #[test]
+    fn tail_span_brackets_the_last_frame() {
+        let wal = sample_wal();
+        let (start, end) = wal.tail_span();
+        assert!(start < end);
+        assert_eq!(end, wal.len_bytes());
+        // A cut inside the span loses exactly the tail record.
+        let (records, _) = replay(&wal.bytes()[..start as usize + 1]);
+        assert_eq!(records.len(), 4);
+    }
+
+    #[test]
+    fn disk_wal_survives_reopen_and_truncates_torn_tail() {
+        let dir = std::env::temp_dir()
+            .join(format!("vault-wal-test-{}", crate::util::now_ms()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("wal.log");
+
+        let (mut dw, records, _) = DiskWal::open(&path).unwrap();
+        assert!(records.is_empty());
+        dw.append(10, WalOp::FragPut(frag_rec(3))).unwrap();
+        dw.append(20, WalOp::EpochCursor { epoch: 2, beacon: [1; 32], n_nodes: 10 }).unwrap();
+        drop(dw);
+
+        // Clean reopen replays both records.
+        let (dw, records, report) = DiskWal::open(&path).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(report.torn_tail_bytes, 0);
+        drop(dw);
+
+        // Tear the tail record mid-frame; reopen must drop exactly it,
+        // truncate the file back to the valid prefix, and resume the
+        // sequence chain at the lost record's number.
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        let (mut dw, records, report) = DiskWal::open(&path).unwrap();
+        assert_eq!(records.len(), 1);
+        assert!(report.torn_tail_bytes > 0);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), report.valid_bytes);
+        let seq = dw.append(30, WalOp::FragRemove(frag_rec(3).chash)).unwrap();
+        assert_eq!(seq, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

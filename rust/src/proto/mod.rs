@@ -288,6 +288,19 @@ pub struct Metrics {
     pub rotations_kept: u64,
     pub rotations_retired: u64,
     pub grace_drops: u64,
+    /// Durability plane (ISSUE 6): WAL appends by the live peer, and
+    /// what the reboot path observed — records replayed from the valid
+    /// prefix, frames rejected as corrupt, bytes lost to a torn tail,
+    /// fragments reinstalled, and `GetMembers` resyncs issued during
+    /// recovery. The crashed peer's counters die with it; these are
+    /// the rebuilt peer's view from `recover_from_wal` onward.
+    pub restarts: u64,
+    pub wal_appends: u64,
+    pub wal_replayed: u64,
+    pub wal_corrupt: u64,
+    pub wal_torn_bytes: u64,
+    pub recovered_fragments: u64,
+    pub recovery_resyncs: u64,
     /// Sender-side per-purpose bandwidth (filled by the transports).
     pub maint: MaintStats,
 }

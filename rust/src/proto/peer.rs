@@ -15,6 +15,8 @@ use crate::crypto::ed25519::{self, SigningKey};
 use crate::crypto::vrf::VrfProof;
 use crate::crypto::Hash256;
 use crate::dht::{NodeId, PeerInfo};
+use crate::node::storage::StoredFragment;
+use crate::node::wal::{self, Wal, WalOp, WalReplayReport};
 use crate::util::rng::Rng;
 
 use crate::util::rng::fold64;
@@ -144,6 +146,12 @@ pub struct ChunkStore {
     /// steady-state per-claim divergence check is O(1) instead of an
     /// alloc+sort per received claim.
     pub view_digest: Option<u64>,
+    /// Member set changed since the last WAL membership snapshot — the
+    /// maintenance tick flushes dirty groups as `WalOp::Members`
+    /// records (one snapshot per group per tick bounds WAL write
+    /// amplification; pure `last_seen` refreshes are volatile and
+    /// never logged).
+    pub members_dirty: bool,
 }
 
 impl ChunkStore {
@@ -157,6 +165,7 @@ impl ChunkStore {
         let r = f(&mut self.members);
         if self.members.len() != before {
             self.view_digest = None;
+            self.members_dirty = true;
         }
         r
     }
@@ -234,6 +243,12 @@ pub struct VaultPeer {
     verified_claims: HashSet<(NodeId, Hash256, u64, u64)>,
     /// Scenario fault-injection switches (all off in normal operation).
     pub fault: PeerFault,
+    /// Event-sourced durability log (ISSUE 6): every mutation the node
+    /// must survive a reboot with is appended here. In the simulated
+    /// runtimes this buffer *is* the disk — it outlives the peer object
+    /// inside the runtime slot and is replayed into the rebuilt peer by
+    /// [`Self::recover_from_wal`].
+    pub wal: Wal,
     pub metrics: Metrics,
 }
 
@@ -261,6 +276,7 @@ impl VaultPeer {
             proof_cache: HashMap::default(),
             verified_claims: HashSet::default(),
             fault: PeerFault::default(),
+            wal: Wal::new(),
             metrics: Metrics::default(),
         }
     }
@@ -290,6 +306,12 @@ impl VaultPeer {
 
     pub fn fragment_index(&self, chash: &Hash256) -> Option<u64> {
         self.store.get(chash).map(|c| c.frag.index)
+    }
+
+    /// The epoch this peer currently anchors placement to (0 = genesis /
+    /// legacy fixed placement).
+    pub fn current_epoch(&self) -> u64 {
+        self.cur_epoch.epoch
     }
 
     pub fn group_view(&self, chash: &Hash256) -> Vec<NodeId> {
@@ -562,6 +584,7 @@ impl VaultPeer {
             retire_at_ms: 0,
             announced: HashSet::default(),
             view_digest: None,
+            members_dirty: false,
         };
         if self.cfg.byzantine {
             // Fig. 6 adversary: "participate correctly in all VAULT
@@ -579,7 +602,30 @@ impl VaultPeer {
         cs.members.insert(self.id(), Member::fresh(self.info, now));
         self.store.insert(chash, cs);
         self.metrics.fragments_stored += 1;
+        self.wal_put(now, &chash);
         out.send(from, Msg::StoreFragAck { op, chash, index, ok: true });
+    }
+
+    /// Log a fragment admission: the durable record plus an initial
+    /// membership snapshot, so a crash right after the admission still
+    /// recovers enough of the group view to re-announce and resync.
+    fn wal_put(&mut self, now_ms: u64, chash: &Hash256) {
+        let Some(cs) = self.store.get_mut(chash) else { return };
+        let rec = StoredFragment {
+            chash: *chash,
+            frag: cs.frag.clone(),
+            proof: cs.proof,
+            expires_ms: cs.expires_ms,
+        };
+        let members: Vec<PeerInfo> = cs.members.values().map(|m| m.info).collect();
+        cs.members_dirty = false;
+        self.wal_log(now_ms, WalOp::FragPut(rec));
+        self.wal_log(now_ms, WalOp::Members { chash: *chash, members });
+    }
+
+    fn wal_log(&mut self, at_ms: u64, op: WalOp) {
+        self.wal.append(at_ms, op);
+        self.metrics.wal_appends += 1;
     }
 
     fn handle_get_frag(&mut self, out: &mut Outbox, from: NodeId, op: u64, chash: Hash256) {
@@ -780,13 +826,22 @@ impl VaultPeer {
         // closed (the departing-member half of an epoch rotation), and
         // stale caches.
         let metrics = &mut self.metrics;
-        self.store.retain(|_, cs| {
+        let mut gc_dropped: Vec<Hash256> = Vec::new();
+        self.store.retain(|chash, cs| {
             if cs.retire_at_ms != 0 && now >= cs.retire_at_ms {
                 metrics.grace_drops += 1;
+                gc_dropped.push(*chash);
                 return false;
             }
-            cs.expires_ms == 0 || cs.expires_ms > now
+            let keep = cs.expires_ms == 0 || cs.expires_ms > now;
+            if !keep {
+                gc_dropped.push(*chash);
+            }
+            keep
         });
+        for chash in gc_dropped {
+            self.wal_log(now, WalOp::FragRemove(chash));
+        }
         let drop_after = self.cfg.suspicion_ms.saturating_mul(3);
         for cs in self.store.values_mut() {
             if cs.cache_expires_ms <= now {
@@ -798,6 +853,23 @@ impl VaultPeer {
                     *id == self_id || now.saturating_sub(m.last_seen_ms) < drop_after
                 })
             });
+        }
+
+        // Flush changed group views to the WAL: one full snapshot per
+        // dirty group per tick (see `ChunkStore::members_dirty`).
+        let dirty: Vec<Hash256> = self
+            .store
+            .iter()
+            .filter(|(_, cs)| cs.members_dirty)
+            .map(|(chash, _)| *chash)
+            .collect();
+        for chash in dirty {
+            let members: Vec<PeerInfo> = {
+                let cs = self.store.get_mut(&chash).unwrap();
+                cs.members_dirty = false;
+                cs.members.values().map(|m| m.info).collect()
+            };
+            self.wal_log(now, WalOp::Members { chash, members });
         }
 
         // Heartbeats + repair detection. Batched mode sends one
@@ -1111,6 +1183,14 @@ impl VaultPeer {
         }
         self.cur_epoch = EpochState { epoch: ann.epoch, beacon: ann.beacon };
         self.cfg.n_nodes = (ann.n_nodes as usize).max(1);
+        // Cursor record: a rebooted node resumes from the last adopted
+        // epoch instead of genesis, then catches up any epochs missed
+        // while down through this same handler's gap path.
+        self.wal_log(out.now_ms, WalOp::EpochCursor {
+            epoch: ann.epoch,
+            beacon: ann.beacon,
+            n_nodes: self.cfg.n_nodes as u64,
+        });
         self.rotate_groups(out);
     }
 
@@ -1492,11 +1572,13 @@ impl VaultPeer {
                 retire_at_ms: 0,
                 announced: HashSet::default(),
                 view_digest: None,
+                members_dirty: false,
             },
         );
         self.metrics.repairs_joined += 1;
         self.metrics.repair_traffic_bytes += js.bytes_pulled;
         self.metrics.fragments_stored += 1;
+        self.wal_put(now, &chash);
         out.send(
             js.requester,
             Msg::RepairAck { op: js.requester_op, chash, index: js.index, ok: true },
@@ -1547,11 +1629,143 @@ impl VaultPeer {
         }
     }
 
+    // ---- crash-restart recovery (ISSUE 6) --------------------------------
+
+    /// Reboot path: rebuild durable state on a **fresh** peer (same
+    /// key/seed, empty maps) from the crashed instance's WAL bytes,
+    /// then rejoin the protocol. Replay is local and cheap; everything
+    /// the log cannot know — who died while we were down, epochs sealed
+    /// past our cursor — is *resynced* through the existing protocol
+    /// paths instead of invented: re-announce via the one-claim
+    /// full-delta batch, pull fresh views with `GetMembers`, and let
+    /// the chain watcher's next announce run the epoch gap path.
+    ///
+    /// Returns the replay report (what survived, what the torn tail
+    /// cost) for the runtimes and scenarios to assert on.
+    pub fn recover_from_wal(&mut self, out: &mut Outbox, wal_bytes: Vec<u8>) -> WalReplayReport {
+        let (recovered_wal, records, report) = Wal::resume(wal_bytes);
+        self.wal = recovered_wal;
+        let state = wal::materialize(&records);
+        self.metrics.restarts += 1;
+        self.metrics.wal_replayed += report.replayed;
+        self.metrics.wal_corrupt += report.corrupt_records;
+        self.metrics.wal_torn_bytes += report.torn_tail_bytes;
+
+        // 1. Epoch cursor first: the selection domain every re-proof
+        // below anchors to. No grace survives a reboot — the pre-crash
+        // prev-epoch state is volatile by design, and re-admitting
+        // old-epoch proofs after an unknown downtime is the same hazard
+        // the gap path refuses (see `handle_epoch_update`).
+        if self.cfg.epoch_placement {
+            if let Some((epoch, beacon, n_nodes)) = state.epoch {
+                self.cur_epoch = EpochState { epoch, beacon };
+                self.cfg.n_nodes = (n_nodes as usize).max(1);
+                self.prev_epoch = None;
+                self.prev_n_nodes = 0;
+                self.rotation_until_ms = 0;
+            }
+        }
+
+        // 2. Reinstall fragments in chunk-hash order (deterministic).
+        // Own proofs are pure functions of the key, so they need no WAL
+        // records; under epoch placement we re-prove against the
+        // recovered cursor — a chunk whose eligibility rotated away
+        // while we were down serves out a grace window on its recorded
+        // proof (exactly the live `rotate_groups` treatment, which
+        // handles the power-cycle-mid-rotation storm). Legacy placement
+        // has one timeless domain: the recorded proof stays valid.
+        let now = out.now_ms;
+        let grace = self.cfg.rotation_grace_ms.max(1);
+        let my_id = self.info.id;
+        for (rec, members) in state.fragments {
+            if rec.expires_ms != 0 && rec.expires_ms <= now {
+                continue; // expired while we were down
+            }
+            let index = rec.frag.index;
+            let (proof, retire_at_ms, retiring) = if self.cfg.epoch_placement {
+                match self.own_proof(&rec.chash, index) {
+                    Some(p) => (p, 0, false),
+                    None => (rec.proof, now + grace, true),
+                }
+            } else {
+                (rec.proof, 0, false)
+            };
+            let mut frag = rec.frag;
+            let mut payload_dropped = false;
+            if self.cfg.byzantine {
+                frag.payload = Vec::new();
+                payload_dropped = true;
+            }
+            let mut member_map: HashMap<NodeId, Member> = HashMap::default();
+            for m in &members {
+                if m.id != my_id {
+                    member_map.insert(m.id, Member::fresh(*m, now));
+                }
+            }
+            let mut me = Member::fresh(self.info, now);
+            me.retiring = retiring;
+            member_map.insert(my_id, me);
+            self.store.insert(
+                rec.chash,
+                ChunkStore {
+                    frag,
+                    proof,
+                    expires_ms: rec.expires_ms,
+                    members: member_map,
+                    cached_chunk: None,
+                    cache_expires_ms: 0,
+                    payload_dropped,
+                    retire_at_ms,
+                    announced: HashSet::default(),
+                    view_digest: None,
+                    members_dirty: false,
+                },
+            );
+            self.metrics.recovered_fragments += 1;
+        }
+
+        // 3. Restart the maintenance tick chain.
+        self.init(out);
+
+        // 4. Rejoin every recovered group: immediate re-announce (the
+        // group learns we are back before suspicion evicts us for
+        // good), plus a view resync from a couple of members — the WAL
+        // snapshot is as stale as our downtime, and membership may have
+        // churned past it.
+        let mut chashes: Vec<Hash256> = self.store.keys().copied().collect();
+        chashes.sort();
+        for chash in chashes {
+            if self.cfg.batched_maint {
+                self.announce_chunk(out, &chash);
+            } else {
+                self.heartbeat_chunk(out, &chash);
+            }
+            let mut others: Vec<NodeId> = self.store[&chash]
+                .members
+                .keys()
+                .filter(|id| **id != my_id)
+                .copied()
+                .collect();
+            others.sort();
+            for id in others.into_iter().take(2) {
+                self.metrics.recovery_resyncs += 1;
+                out.send_p(id, Msg::GetMembers { chash }, Purpose::Heartbeat);
+            }
+        }
+        report
+    }
+
     // ---- failure injection (tests & harnesses) ---------------------------
 
-    /// Simulate local storage-device loss of one fragment.
+    /// Simulate local storage-device loss of one fragment. The loss is
+    /// an event like any other: logged, so a later reboot does not
+    /// resurrect the dropped fragment from older WAL records.
     pub fn drop_fragment(&mut self, chash: &Hash256) -> bool {
-        self.store.remove(chash).is_some()
+        let dropped = self.store.remove(chash).is_some();
+        if dropped {
+            self.wal_log(0, WalOp::FragRemove(*chash));
+        }
+        dropped
     }
 
     /// Flip this peer to the Fig. 6 Byzantine behaviour *mid-run*:
@@ -1602,8 +1816,10 @@ impl VaultPeer {
                 retire_at_ms: 0,
                 announced: HashSet::default(),
                 view_digest: None,
+                members_dirty: false,
             },
         );
+        self.wal_put(now_ms, &chash);
     }
 }
 
@@ -2198,5 +2414,84 @@ mod tests {
         assert_eq!(fwd, rev, "digest must not depend on iteration order");
         let fewer = members_digest(ids[..3].iter());
         assert_ne!(fwd, fewer, "digest must change when the set changes");
+    }
+
+    // ---- WAL recovery (ISSUE 6 tentpole) ------------------------------
+
+    #[test]
+    fn recovery_replays_inventory_and_rejoins_groups() {
+        let cfg = test_cfg();
+        let mut a = mk_peer(1, &cfg);
+        let b = mk_peer(2, &cfg);
+        let c = mk_peer(3, &cfg);
+        let chash = Hash256::of(b"reboot-chunk");
+        let gone = Hash256::of(b"dropped-chunk");
+        let pa = some_proof(&a);
+        a.force_store(100, chash, frag(1), pa, vec![b.info, c.info]);
+        a.force_store(100, gone, frag(2), pa, vec![b.info]);
+        assert!(a.drop_fragment(&gone), "put+remove must both hit the WAL");
+        let wal_bytes = a.wal.take_bytes();
+
+        // Rebuild from the same seed (same key/id) and recover.
+        let mut a2 = mk_peer(1, &cfg);
+        let mut out = Outbox::at(5_000);
+        let report = a2.recover_from_wal(&mut out, wal_bytes);
+        assert_eq!(report.corrupt_records, 0);
+        assert_eq!(report.torn_tail_bytes, 0);
+        assert_eq!(a2.metrics.recovered_fragments, 1, "removed chunk must stay removed");
+        assert_eq!(a2.fragment_index(&chash), Some(1));
+        assert_eq!(a2.store[&chash].proof, pa, "legacy mode keeps the recorded proof");
+        let view = a2.group_view(&chash);
+        assert!(view.contains(&b.info.id) && view.contains(&c.info.id));
+
+        // Rejoin traffic: one full-delta batch per other member plus
+        // two GetMembers resyncs, and a fresh Tick timer.
+        let batches = out
+            .sends
+            .iter()
+            .filter(|(_, m, _)| matches!(m, Msg::HeartbeatBatch(_)))
+            .count();
+        let resyncs = out
+            .sends
+            .iter()
+            .filter(|(_, m, _)| matches!(m, Msg::GetMembers { .. }))
+            .count();
+        assert_eq!(batches, 2, "re-announce must reach every other member");
+        assert_eq!(resyncs, 2);
+        assert_eq!(a2.metrics.recovery_resyncs, 2);
+        assert!(!out.timers.is_empty(), "recovery must restart the tick chain");
+    }
+
+    #[test]
+    fn recovery_with_torn_tail_loses_only_the_tail_record() {
+        let cfg = test_cfg();
+        let mut a = mk_peer(1, &cfg);
+        let b = mk_peer(2, &cfg);
+        let first = Hash256::of(b"torn-first");
+        let second = Hash256::of(b"torn-second");
+        let pa = some_proof(&a);
+        a.force_store(100, first, frag(1), pa, vec![b.info]);
+        a.force_store(200, second, frag(2), pa, vec![b.info]);
+        let (tail_start, tail_end) = a.wal.tail_span();
+        assert!(tail_start > 0 && tail_end > tail_start);
+        let mut wal_bytes = a.wal.take_bytes();
+        // Tear mid-way through the final frame (second chunk's Members
+        // snapshot): its FragPut record survives, the snapshot is lost.
+        wal_bytes.truncate((tail_start + (tail_end - tail_start) / 2) as usize);
+
+        let mut a2 = mk_peer(1, &cfg);
+        let mut out = Outbox::at(5_000);
+        let report = a2.recover_from_wal(&mut out, wal_bytes);
+        assert!(report.torn_tail_bytes > 0, "the tear must be observed");
+        assert_eq!(a2.metrics.recovered_fragments, 2, "both fragments survive the tear");
+        assert_eq!(a2.fragment_index(&first), Some(1));
+        assert_eq!(a2.fragment_index(&second), Some(2));
+        assert!(
+            a2.group_view(&first).contains(&b.info.id),
+            "the intact group snapshot must replay"
+        );
+        // The torn snapshot is gone: only self remains in the view, and
+        // the GetMembers resync is how the group view comes back.
+        assert_eq!(a2.group_view(&second), vec![a2.id()]);
     }
 }

@@ -82,6 +82,18 @@ pub enum Fault {
     AdaptiveGrind { object: usize, chunk: usize, sybils: usize, evict: usize },
     /// Degrade links: silently drop this fraction of messages from now on.
     SlowLinks { drop_prob: f64 },
+    /// Crash-restart `count` random live peers in place (ISSUE 6): each
+    /// loses its volatile state and pending timers, then a fresh
+    /// incarnation of the same identity recovers from its WAL and
+    /// rejoins its groups. With `torn`, the WAL is also truncated at a
+    /// random byte *inside* its final frame — a torn write during the
+    /// crash — so recovery must shed exactly that tail record and
+    /// nothing before it.
+    Restart { count: usize, torn: bool },
+    /// Rolling reboot of every live peer in a latency region (kernel
+    /// upgrade wave): each peer in turn crash-restarts and recovers
+    /// from its WAL before the next goes down.
+    RegionRestart { region: u8, torn: bool },
 }
 
 /// An invariant evaluated at the end of a phase.
@@ -216,6 +228,12 @@ pub struct PhaseOutcome {
     /// [`Check::ByzResidencyAtMost`] in this phase (0/0 otherwise).
     pub byz_holders: usize,
     pub group_holders: usize,
+    /// Crash-restart tallies (ISSUE 6; all zero when no restarts ran):
+    /// peers restarted, WAL records replayed across them, and torn
+    /// bytes shed from WAL tails.
+    pub restarts: usize,
+    pub wal_replayed: u64,
+    pub wal_torn_bytes: u64,
 }
 
 /// Full scenario result.
@@ -314,6 +332,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
         fp = fold(fp, outcome.ops_failed as u64);
         fp = fold(fp, outcome.p50_ms.to_bits());
         fp = fold(fp, outcome.p99_ms.to_bits());
+        fp = fold(fp, outcome.restarts as u64);
         fp = fold(fp, outcome.failures.len() as u64);
         phases.push(outcome);
     }
@@ -484,7 +503,54 @@ fn inject_fault<N: ClusterRuntime>(
             cluster.net.set_drop_prob(*drop_prob);
             *fp = fold(*fp, (*drop_prob * 1e6) as u64);
         }
+        Fault::Restart { count, torn } => {
+            for _ in 0..*count {
+                for _ in 0..cluster.net.len() * 2 {
+                    let i = rng.range(0, cluster.net.len());
+                    if cluster.net.is_up(i) {
+                        restart_one(cluster, rng, i, *torn, outcome, fp);
+                        break;
+                    }
+                }
+            }
+        }
+        Fault::RegionRestart { region, torn } => {
+            for i in 0..cluster.net.len() {
+                if cluster.net.is_up(i) && cluster.net.peer(i).info.region == *region {
+                    restart_one(cluster, rng, i, *torn, outcome, fp);
+                }
+            }
+        }
     }
+}
+
+/// Crash-restart one peer, optionally tearing its WAL inside the final
+/// frame (the cut is drawn strictly between the tail frame's first and
+/// last byte, so the torn record is *partially* present — the hardest
+/// case for the replay scanner). Folds the recovery report into the
+/// fingerprint: replay counts and torn-byte tallies must be identical
+/// run-to-run.
+fn restart_one<N: ClusterRuntime>(
+    cluster: &mut Cluster<N>,
+    rng: &mut Rng,
+    i: usize,
+    torn: bool,
+    outcome: &mut PhaseOutcome,
+    fp: &mut u64,
+) {
+    let cut = if torn {
+        let (start, end) = cluster.net.peer(i).wal.tail_span();
+        (end > start + 1).then(|| start + 1 + rng.next_u64() % (end - start - 1))
+    } else {
+        None
+    };
+    let report = cluster.restart_peer(i, cut);
+    outcome.restarts += 1;
+    outcome.wal_replayed += report.replayed;
+    outcome.wal_torn_bytes += report.torn_tail_bytes;
+    *fp = fold(*fp, i as u64 ^ 0x2EB0);
+    *fp = fold(*fp, report.replayed);
+    *fp = fold(*fp, report.torn_tail_bytes);
 }
 
 /// Launch `readers` concurrent QUERY sessions for one object through

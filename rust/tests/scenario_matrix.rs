@@ -302,6 +302,122 @@ fn scenario_adaptive_grinding_bounded_by_rotation() {
 }
 
 #[test]
+fn scenario_clean_restart_zero_loss() {
+    // ISSUE 6 acceptance (clean variant): a burst of peers crash and
+    // come straight back, recovering inventory and group membership
+    // from their WALs. Nothing was lost on disk, so durability must be
+    // untouched immediately and the groups re-converge within one
+    // suspicion cycle — twice, with identical fingerprints (recovery
+    // replay counts are folded in).
+    let spec = ScenarioSpec::small("clean_restart", 1717, 64).phase(
+        "restart-ten-and-reconverge",
+        vec![Fault::Restart { count: 10, torn: false }],
+        60_000,
+        vec![
+            Check::NoChunkBelowDecodeThreshold,
+            Check::GroupsRecoveredTo(0.8),
+            Check::AllObjectsReadable,
+        ],
+    );
+    let report = run_deterministic(&spec);
+    let phase = &report.phases[0];
+    assert_eq!(phase.restarts, 10);
+    assert!(
+        phase.wal_replayed > 0,
+        "recovered peers must have replayed WAL records"
+    );
+    assert_eq!(phase.wal_torn_bytes, 0, "clean restarts shed no bytes");
+}
+
+#[test]
+fn scenario_torn_write_restart_loses_only_the_tail() {
+    // ISSUE 6 acceptance (torn variant): the same crash wave, but every
+    // WAL is truncated mid-way through its final frame — the torn-write
+    // case. Recovery sheds exactly the torn tail record per peer; the
+    // redundancy margin (R=20 vs K=8) absorbs any fragment that record
+    // covered, so durability still never dips.
+    let spec = ScenarioSpec::small("torn_restart", 1818, 64).phase(
+        "torn-restart-ten-and-reconverge",
+        vec![Fault::Restart { count: 10, torn: true }],
+        90_000,
+        vec![
+            Check::NoChunkBelowDecodeThreshold,
+            Check::GroupsRecoveredTo(0.8),
+            Check::AllObjectsReadable,
+        ],
+    );
+    let report = run_deterministic(&spec);
+    let phase = &report.phases[0];
+    assert_eq!(phase.restarts, 10);
+    assert!(
+        phase.wal_torn_bytes > 0,
+        "torn restarts must actually shed tail bytes"
+    );
+}
+
+#[test]
+fn scenario_rolling_region_restart() {
+    // ISSUE 6 acceptance: planned reboot waves roll through two whole
+    // latency regions back-to-back (a kernel-upgrade campaign). Each
+    // wave restarts every live peer in the region; recovery re-announces
+    // and the next wave starts after a settle window. No object may
+    // become unreadable at any checkpoint.
+    let spec = ScenarioSpec::small("rolling_region_restart", 1919, 60)
+        .phase(
+            "reboot-region-1",
+            vec![Fault::RegionRestart { region: 1, torn: false }],
+            45_000,
+            vec![Check::NoChunkBelowDecodeThreshold, Check::AllObjectsReadable],
+        )
+        .phase(
+            "reboot-region-2",
+            vec![Fault::RegionRestart { region: 2, torn: false }],
+            45_000,
+            vec![
+                Check::NoChunkBelowDecodeThreshold,
+                Check::GroupsRecoveredTo(0.8),
+                Check::AllObjectsReadable,
+            ],
+        );
+    let report = run_deterministic(&spec);
+    assert!(report.phases[0].restarts > 0, "region 1 must contain peers");
+    assert!(report.phases[1].restarts > 0, "region 2 must contain peers");
+}
+
+#[test]
+fn scenario_power_cycle_storm_mid_rotation() {
+    // ISSUE 6 acceptance: the hardest composition — a power-cycle storm
+    // (a third of the cluster, some with torn WALs) landing *inside* an
+    // epoch rotation's grace window. Recovered peers re-prove
+    // eligibility under the current epoch; fragments whose recorded
+    // proof no longer holds re-enter retiring state and hand off
+    // through repair instead of vanishing. The first phase advances
+    // past the boundary (60 s epochs) so the storm in phase two hits
+    // mid-grace.
+    let spec = ScenarioSpec::small("power_cycle_storm", 2020, 72)
+        .epoch_rotation(60_000, 20_000)
+        .phase("reach-first-rotation", vec![], 70_000, vec![Check::AllObjectsReadable])
+        .phase(
+            "storm-mid-grace",
+            vec![
+                Fault::Restart { count: 12, torn: false },
+                Fault::Restart { count: 12, torn: true },
+            ],
+            90_000,
+            vec![
+                Check::NoChunkBelowDecodeThreshold,
+                Check::GroupsRecoveredTo(0.8),
+                Check::AllObjectsReadable,
+            ],
+        );
+    let report = run_deterministic(&spec);
+    let storm = &report.phases[1];
+    assert_eq!(storm.restarts, 24);
+    assert!(storm.wal_replayed > 0);
+    assert!(storm.wal_torn_bytes > 0);
+}
+
+#[test]
 fn scenario_thousand_node_burst() {
     // Scale: 1k peers over 8 shard queues. ClaimVerify::Never is the
     // documented large-cluster measurement knob (proto::ClaimVerify);
