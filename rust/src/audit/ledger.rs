@@ -1,0 +1,217 @@
+//! Per-peer audit verdict ledger — decayed counters, quorum rule,
+//! suspect marking.
+//!
+//! Verdicts stream in from the local auditor and from gossiped
+//! [`crate::proto::messages::AuditVerdict`]s (already authenticated by
+//! the peer: group membership, signature, VRF designation proof). The
+//! ledger folds them per auditee with two defenses:
+//!
+//! * **Quorum of distinct auditors.** An epoch only counts as *failed*
+//!   for an auditee when at least `audit_quorum` distinct auditors
+//!   reported failure — one Byzantine auditor, however eager, can
+//!   never move the counter alone.
+//! * **Sustained failure.** Only `audit_fail_epochs` consecutive
+//!   failed epochs mark a peer *suspect*; a quorum of passes resets
+//!   the streak and clears suspicion (recovery after transient
+//!   faults). Suspects are treated as dead by
+//!   `proto::peer::check_repair`, which recruits replacements through
+//!   the ordinary repair path.
+//!
+//! Long-run pass/fail counters decay by half each epoch — history
+//! fades, so an early run of verdicts can't dominate a peer's record
+//! forever.
+
+use crate::dht::NodeId;
+use crate::util::detmap::{DetHashMap, DetHashSet};
+
+/// One auditee's record.
+#[derive(Clone, Debug, Default)]
+pub struct PeerAudit {
+    /// Exponentially decayed totals of quorum-distinct verdicts.
+    pub passes: f64,
+    pub fails: f64,
+    /// Consecutive epochs with a failing quorum.
+    pub fail_epochs: u64,
+    pub suspect: bool,
+    /// Distinct auditors reporting fail / pass this epoch.
+    epoch_failers: DetHashSet<NodeId>,
+    epoch_passers: DetHashSet<NodeId>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct AuditLedger {
+    peers: DetHashMap<NodeId, PeerAudit>,
+}
+
+impl AuditLedger {
+    /// Fold in one authenticated verdict. Idempotent per
+    /// `(auditor, auditee)` within an epoch.
+    pub fn record(&mut self, auditee: NodeId, auditor: NodeId, pass: bool) {
+        let e = self.peers.entry(auditee).or_default();
+        if pass {
+            e.epoch_passers.insert(auditor);
+        } else {
+            e.epoch_failers.insert(auditor);
+        }
+    }
+
+    /// Close the finished epoch's books: apply the quorum rule, advance
+    /// fail streaks, mark/clear suspects, decay counters. Returns
+    /// `(newly_suspect, cleared)`.
+    pub fn epoch_advance(&mut self, quorum: usize, fail_epochs_needed: u64) -> (usize, usize) {
+        let quorum = quorum.max(1);
+        let mut marked = 0;
+        let mut cleared = 0;
+        for e in self.peers.values_mut() {
+            let nf = e.epoch_failers.len();
+            let np = e.epoch_passers.len();
+            if nf >= quorum {
+                e.fail_epochs += 1;
+            } else if np >= quorum {
+                e.fail_epochs = 0;
+                if e.suspect {
+                    e.suspect = false;
+                    cleared += 1;
+                }
+            }
+            if !e.suspect && e.fail_epochs >= fail_epochs_needed.max(1) {
+                e.suspect = true;
+                marked += 1;
+            }
+            e.passes = e.passes * 0.5 + np as f64;
+            e.fails = e.fails * 0.5 + nf as f64;
+            e.epoch_failers.clear();
+            e.epoch_passers.clear();
+        }
+        // GC fully-faded clean records.
+        self.peers
+            .retain(|_, e| e.suspect || e.fail_epochs > 0 || e.passes + e.fails >= 0.01);
+        (marked, cleared)
+    }
+
+    pub fn is_suspect(&self, id: &NodeId) -> bool {
+        self.peers.get(id).is_some_and(|e| e.suspect)
+    }
+
+    pub fn suspects(&self) -> Vec<NodeId> {
+        let mut v: Vec<NodeId> =
+            self.peers.iter().filter(|(_, e)| e.suspect).map(|(id, _)| *id).collect();
+        v.sort();
+        v
+    }
+
+    pub fn get(&self, id: &NodeId) -> Option<&PeerAudit> {
+        self.peers.get(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.peers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.peers.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::Hash256;
+
+    fn nid(tag: u8) -> NodeId {
+        NodeId(Hash256::of(&[tag]))
+    }
+
+    #[test]
+    fn single_auditor_cannot_frame() {
+        let mut l = AuditLedger::default();
+        let victim = nid(1);
+        let framer = nid(9);
+        for _ in 0..10 {
+            l.record(victim, framer, false);
+            let (m, _) = l.epoch_advance(2, 2);
+            assert_eq!(m, 0);
+        }
+        assert!(!l.is_suspect(&victim));
+        // fail streak never starts below quorum
+        assert_eq!(l.get(&victim).map(|e| e.fail_epochs), Some(0));
+    }
+
+    #[test]
+    fn quorum_fails_over_consecutive_epochs_mark_suspect() {
+        let mut l = AuditLedger::default();
+        let w = nid(2);
+        l.record(w, nid(10), false);
+        l.record(w, nid(11), false);
+        let (m, _) = l.epoch_advance(2, 2);
+        assert_eq!(m, 0, "one failing epoch is not sustained failure");
+        assert!(!l.is_suspect(&w));
+        l.record(w, nid(10), false);
+        l.record(w, nid(12), false);
+        let (m, _) = l.epoch_advance(2, 2);
+        assert_eq!(m, 1);
+        assert!(l.is_suspect(&w));
+        assert_eq!(l.suspects(), vec![w]);
+    }
+
+    #[test]
+    fn duplicate_auditor_counts_once() {
+        let mut l = AuditLedger::default();
+        let w = nid(3);
+        for _ in 0..5 {
+            l.record(w, nid(10), false); // same auditor, many chunks
+        }
+        l.epoch_advance(2, 1);
+        assert!(!l.is_suspect(&w));
+    }
+
+    #[test]
+    fn pass_quorum_clears_suspicion() {
+        let mut l = AuditLedger::default();
+        let w = nid(4);
+        for _ in 0..2 {
+            l.record(w, nid(10), false);
+            l.record(w, nid(11), false);
+            l.epoch_advance(2, 2);
+        }
+        assert!(l.is_suspect(&w));
+        l.record(w, nid(10), true);
+        l.record(w, nid(12), true);
+        let (_, c) = l.epoch_advance(2, 2);
+        assert_eq!(c, 1);
+        assert!(!l.is_suspect(&w));
+        assert_eq!(l.get(&w).map(|e| e.fail_epochs), Some(0));
+    }
+
+    #[test]
+    fn counters_decay_and_clean_records_gc() {
+        let mut l = AuditLedger::default();
+        let h = nid(5);
+        l.record(h, nid(10), true);
+        l.record(h, nid(11), true);
+        l.epoch_advance(2, 2);
+        assert!(l.get(&h).is_some());
+        let p0 = l.get(&h).unwrap().passes;
+        assert!(p0 >= 2.0);
+        for _ in 0..12 {
+            l.epoch_advance(2, 2);
+        }
+        assert!(l.get(&h).is_none(), "faded clean record GC'd");
+    }
+
+    #[test]
+    fn mixed_epoch_fail_quorum_wins() {
+        // Same epoch: quorum of fails AND of passes — fail dominates
+        // (withholders answering some auditors can't launder).
+        let mut l = AuditLedger::default();
+        let w = nid(6);
+        for _ in 0..2 {
+            l.record(w, nid(10), false);
+            l.record(w, nid(11), false);
+            l.record(w, nid(12), true);
+            l.record(w, nid(13), true);
+            l.epoch_advance(2, 2);
+        }
+        assert!(l.is_suspect(&w));
+    }
+}

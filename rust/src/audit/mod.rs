@@ -1,0 +1,49 @@
+//! Retrievability audit plane (ISSUE 7).
+//!
+//! Heartbeat claims prove *eligibility* (a VRF threshold over public
+//! chain data) but only self-report possession: a node with
+//! `PeerFault::refuse_frags` passes every heartbeat while serving
+//! nothing. This module closes that gap with sampled storage
+//! challenges — the direction named by BFT-DSN and FileDES in
+//! PAPERS.md:
+//!
+//! * [`schedule`] — who audits whom. Each epoch, every group member
+//!   evaluates a VRF over `epoch ‖ beacon ‖ "vault-audit-v1" ‖ chash ‖
+//!   auditee` per fellow member; outputs below `audit_rate` designate
+//!   it as that member's auditor. Challenges are unpredictable before
+//!   the beacon turns over, yet any verifier can re-derive who owed
+//!   what from public chain data (the eligibility proof travels with
+//!   every verdict). The challenged byte window inside the fragment is
+//!   likewise beacon-salted, so responders cannot precompute a digest
+//!   and discard the payload.
+//! * [`verify`] — how a response is checked without the auditor
+//!   holding the auditee's fragment. Fragment payloads are XORs of
+//!   chunk source blocks under public [`crate::codec::rateless`]
+//!   coefficient rows, so equal byte windows across a group form a
+//!   GF(2) linear system the auditor can solve: its own stored slice
+//!   anchors the system, and any responder whose row lies in the span
+//!   of the others' rows is fully determined — its slice either
+//!   matches or it lied. Leave-one-out analysis pins a single
+//!   inconsistent responder; ambiguous systems yield *no* verdict
+//!   rather than a guess (zero false accusations by construction).
+//! * [`ledger`] — what verdicts mean. Decayed pass/fail counters per
+//!   peer with a quorum-of-distinct-auditors rule per epoch: one
+//!   Byzantine auditor can never frame an honest node. Sustained
+//!   quorum failure marks a peer *suspect*, which
+//!   `proto::peer::check_repair` treats as dead — the existing repair
+//!   path then recruits a replacement. A quorum of passes clears
+//!   suspicion (recovery path for transient faults).
+//!
+//! The whole plane is default-off (`VaultConfig::audits`); with it off
+//! no message, timer, op-id or RNG perturbation occurs, so legacy
+//! scenario fingerprints are byte-identical.
+
+pub mod ledger;
+pub mod schedule;
+pub mod verify;
+
+/// Hostile-input cap on an `AuditResponse` slice. Enforced both at
+/// wire decode ([`crate::proto::messages::Msg`] rejects longer slices
+/// with `WireError::TooLarge`) and again in the peer handler (in-process
+/// transports can deliver structs without an encode round-trip).
+pub const MAX_AUDIT_SLICE: usize = 4096;

@@ -1,0 +1,167 @@
+//! Deterministic audit schedule — beacon-derived, VRF-gated.
+//!
+//! Mirrors the `vault-select-v2` placement derivation
+//! ([`crate::proto::selection`]): the VRF input folds the epoch number
+//! and beacon so schedules are unpredictable until the boundary seals,
+//! and the proof lets any holder of public chain data verify that a
+//! claimed auditor really was designated for `(chash, auditee)` this
+//! epoch. Unlike placement there is no ring-distance term: any group
+//! member may be drawn to audit any fellow member, each independently
+//! with probability `audit_rate`.
+
+use crate::crypto::ed25519::SigningKey;
+use crate::crypto::sha2::{Digest, Sha256};
+use crate::crypto::vrf::{self, VrfProof};
+use crate::crypto::Hash256;
+use crate::dht::NodeId;
+
+/// VRF input for one `(epoch, chunk, auditee)` audit designation:
+/// `epoch ‖ beacon ‖ "vault-audit-v1" ‖ chash ‖ auditee`.
+pub fn audit_alpha(epoch: u64, beacon: &[u8; 32], chash: &Hash256, auditee: &NodeId) -> Vec<u8> {
+    let mut v = Vec::with_capacity(8 + 32 + 14 + 32 + 32);
+    v.extend_from_slice(&epoch.to_le_bytes());
+    v.extend_from_slice(beacon);
+    v.extend_from_slice(b"vault-audit-v1");
+    v.extend_from_slice(&chash.0);
+    v.extend_from_slice(&auditee.0 .0);
+    v
+}
+
+/// Uniform fraction in `[0, 1)` from a VRF output (same construction
+/// as `selection::beta_selects_at`).
+fn beta_frac(beta: &[u8; 32]) -> f64 {
+    u128::from_be_bytes(beta[..16].try_into().unwrap()) as f64 / (u128::MAX as f64 + 1.0)
+}
+
+/// Auditor side: evaluate the VRF and return the designation proof iff
+/// this key is drawn to audit `auditee` for `chash` this epoch.
+pub fn prove_audit(
+    sk: &SigningKey,
+    epoch: u64,
+    beacon: &[u8; 32],
+    chash: &Hash256,
+    auditee: &NodeId,
+    rate: f64,
+) -> Option<VrfProof> {
+    let alpha = audit_alpha(epoch, beacon, chash, auditee);
+    let (beta, proof) = vrf::prove(sk, &alpha);
+    (beta_frac(&beta) < rate).then_some(proof)
+}
+
+/// Verifier side: was `pk` genuinely designated to audit `auditee` for
+/// `chash` in `epoch`? A proof ground against any other epoch, beacon,
+/// chunk or auditee fails — a framer cannot choose its targets.
+pub fn verify_audit(
+    pk: &[u8; 32],
+    epoch: u64,
+    beacon: &[u8; 32],
+    chash: &Hash256,
+    auditee: &NodeId,
+    proof: &VrfProof,
+    rate: f64,
+) -> bool {
+    let alpha = audit_alpha(epoch, beacon, chash, auditee);
+    let Some(beta) = vrf::verify(pk, &alpha, proof) else {
+        return false;
+    };
+    beta_frac(&beta) < rate
+}
+
+/// The beacon-salted byte window challenged inside every fragment of
+/// `chash` this epoch: `(offset, len)` into the fragment payload
+/// (all fragments of a chunk share one payload length). Pure function
+/// of public data, so auditor and responder agree without negotiation,
+/// and a responder cannot keep a precomputed digest in place of the
+/// payload — next epoch the window moves.
+pub fn audit_window(
+    epoch: u64,
+    beacon: &[u8; 32],
+    chash: &Hash256,
+    payload_len: usize,
+    want: usize,
+) -> (usize, usize) {
+    if payload_len == 0 || want == 0 {
+        return (0, 0);
+    }
+    let mut h = Sha256::new();
+    h.update(b"vault-audit-window-v1");
+    h.update(epoch.to_le_bytes());
+    h.update(beacon);
+    h.update(chash.0);
+    let d: [u8; 32] = h.finalize();
+    let off = (u64::from_le_bytes(d[..8].try_into().unwrap()) as usize) % payload_len;
+    let len = want.min(super::MAX_AUDIT_SLICE).min(payload_len - off).max(1);
+    (off, len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(tag: u8) -> SigningKey {
+        SigningKey::from_seed(&[tag; 32])
+    }
+
+    #[test]
+    fn designation_roundtrips_and_binds_inputs() {
+        let sk = key(1);
+        let chash = Hash256::of(b"chunk");
+        let auditee = NodeId(Hash256::of(b"auditee"));
+        let beacon = [7u8; 32];
+        // rate 1.0 always designates; the proof must verify.
+        let proof = prove_audit(&sk, 3, &beacon, &chash, &auditee, 1.0).expect("rate 1.0");
+        assert!(verify_audit(&sk.public, 3, &beacon, &chash, &auditee, &proof, 1.0));
+        // Any perturbed input rejects the same proof.
+        assert!(!verify_audit(&sk.public, 4, &beacon, &chash, &auditee, &proof, 1.0));
+        assert!(!verify_audit(&sk.public, 3, &[8u8; 32], &chash, &auditee, &proof, 1.0));
+        assert!(!verify_audit(&sk.public, 3, &beacon, &Hash256::of(b"x"), &auditee, &proof, 1.0));
+        let other = NodeId(Hash256::of(b"other"));
+        assert!(!verify_audit(&sk.public, 3, &beacon, &chash, &other, &proof, 1.0));
+        let sk2 = key(2);
+        assert!(!verify_audit(&sk2.public, 3, &beacon, &chash, &auditee, &proof, 1.0));
+    }
+
+    #[test]
+    fn rate_zero_never_designates() {
+        let sk = key(3);
+        let chash = Hash256::of(b"c");
+        for i in 0..32u8 {
+            let auditee = NodeId(Hash256::of(&[i]));
+            assert!(prove_audit(&sk, 1, &[0u8; 32], &chash, &auditee, 0.0).is_none());
+        }
+    }
+
+    #[test]
+    fn rate_is_roughly_honored() {
+        let sk = key(4);
+        let chash = Hash256::of(b"c2");
+        let mut hits = 0;
+        let n = 400;
+        for i in 0..n {
+            let auditee = NodeId(Hash256::of(&(i as u32).to_le_bytes()));
+            if prove_audit(&sk, 9, &[5u8; 32], &chash, &auditee, 0.25).is_some() {
+                hits += 1;
+            }
+        }
+        // 0.25 ± generous slack over 400 independent draws.
+        assert!((50..=150).contains(&hits), "hits={hits}");
+    }
+
+    #[test]
+    fn window_moves_with_epoch_and_stays_in_bounds() {
+        let chash = Hash256::of(b"w");
+        let beacon = [9u8; 32];
+        let mut offsets = std::collections::BTreeSet::new();
+        for e in 0..16u64 {
+            let (off, len) = audit_window(e, &beacon, &chash, 1000, 64);
+            assert!(off < 1000);
+            assert!(len >= 1 && off + len <= 1000);
+            offsets.insert(off);
+        }
+        assert!(offsets.len() > 1, "window never moved");
+        // Degenerate payloads.
+        assert_eq!(audit_window(0, &beacon, &chash, 0, 64), (0, 0));
+        let (off, len) = audit_window(0, &beacon, &chash, 3, 64);
+        assert!(off < 3 && len >= 1 && off + len <= 3);
+    }
+}

@@ -1,0 +1,352 @@
+//! Verifying audit responses against the chunk commitment — without
+//! holding the auditee's fragment.
+//!
+//! A fragment payload is the XOR of the chunk's source blocks selected
+//! by the public coefficient row `coeff_row(chash, index)`
+//! ([`crate::codec::rateless`]), applied bytewise. Restricted to one
+//! byte window `[off, off+len)` the group's payloads therefore satisfy
+//! a GF(2) linear system over the unknown block windows
+//! `x_j ∈ {0,1}^(8·len)`:
+//!
+//! ```text
+//!   for each member i:   XOR_{j ∈ row(index_i)} x_j  =  slice_i
+//! ```
+//!
+//! The auditor's own stored slice is a trusted equation (anchor). A
+//! responder whose row lies in the span of the *other* equations' rows
+//! is fully determined by them: its slice is either forced — a pass —
+//! or contradicts the rest. Gaussian elimination detects contradiction
+//! as a zero row with a non-zero reduced slice; leave-one-out then
+//! asks which single responder's removal restores consistency. If
+//! exactly one does, that responder provably lied; if none or several
+//! do, the round is *undetermined* and no verdict is issued — an
+//! adversary poisoning the system can at worst void a round, never
+//! frame an honest member.
+
+use crate::codec::rateless::{coeff_row, row_words};
+use crate::crypto::Hash256;
+use crate::dht::NodeId;
+use crate::util::detmap::DetHashMap;
+
+/// One equation of the window system. `who == None` marks the
+/// auditor's own slice (trusted, never a leave-one-out candidate).
+#[derive(Clone, Debug)]
+pub struct SliceEq {
+    pub who: Option<NodeId>,
+    pub index: u64,
+    pub slice: Vec<u8>,
+}
+
+fn first_bit(row: &[u64]) -> Option<usize> {
+    for (w, word) in row.iter().enumerate() {
+        if *word != 0 {
+            return Some(w * 64 + word.trailing_zeros() as usize);
+        }
+    }
+    None
+}
+
+fn has_bit(row: &[u64], bit: usize) -> bool {
+    row[bit / 64] >> (bit % 64) & 1 == 1
+}
+
+fn xor_into(dst: &mut [u64], src: &[u64]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d ^= s;
+    }
+}
+
+fn xor_bytes(dst: &mut [u8], src: &[u8]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d ^= s;
+    }
+}
+
+/// Pivot rows in reduced form: each tracked pivot bit is set in
+/// exactly one row, so a single reduction pass is complete.
+type Pivots = Vec<(usize, Vec<u64>, Vec<u8>)>;
+
+/// Eliminate `eqs`; `Some(pivots)` if consistent, `None` if some
+/// equation reduced to `0 = nonzero`.
+fn eliminate(k: usize, chash: &Hash256, eqs: &[&SliceEq]) -> Option<Pivots> {
+    let words = row_words(k);
+    let mut pivots: Pivots = Vec::with_capacity(eqs.len().min(k));
+    for eq in eqs {
+        let mut row = coeff_row(chash, eq.index, k);
+        row.resize(words, 0);
+        let mut rhs = eq.slice.clone();
+        for (p, prow, prhs) in &pivots {
+            if has_bit(&row, *p) {
+                xor_into(&mut row, prow);
+                xor_bytes(&mut rhs, prhs);
+            }
+        }
+        match first_bit(&row) {
+            None => {
+                if rhs.iter().any(|b| *b != 0) {
+                    return None; // contradiction
+                }
+            }
+            Some(p) => {
+                // Back-substitute so bit `p` stays unique to this row.
+                for (_, prow, prhs) in pivots.iter_mut() {
+                    if has_bit(prow, p) {
+                        xor_into(prow, &row);
+                        xor_bytes(prhs, &rhs);
+                    }
+                }
+                pivots.push((p, row, rhs));
+            }
+        }
+    }
+    Some(pivots)
+}
+
+/// Is `index`'s row in the span of the already-eliminated `pivots`?
+fn in_span(k: usize, chash: &Hash256, pivots: &Pivots, index: u64) -> bool {
+    let words = row_words(k);
+    let mut row = coeff_row(chash, index, k);
+    row.resize(words, 0);
+    for (p, prow, _) in pivots {
+        if has_bit(&row, *p) {
+            xor_into(&mut row, prow);
+        }
+    }
+    first_bit(&row).is_none()
+}
+
+/// Judge a round: `true` = slice provably correct, `false` = slice
+/// provably wrong. Responders the system cannot pin down are absent
+/// from the map (no verdict). Slices must all share one length —
+/// callers normalize before building equations.
+pub fn judge(chash: &Hash256, k: usize, eqs: &[SliceEq]) -> DetHashMap<NodeId, bool> {
+    let mut out = DetHashMap::default();
+    let all: Vec<&SliceEq> = eqs.iter().collect();
+    let responders: Vec<&SliceEq> = eqs.iter().filter(|e| e.who.is_some()).collect();
+    if responders.is_empty() {
+        return out;
+    }
+    if let Some(_pivots) = eliminate(k, chash, &all) {
+        // Consistent: every responder spanned by the OTHERS is forced
+        // by them and agreed — pass.
+        for r in &responders {
+            let others: Vec<&SliceEq> =
+                all.iter().filter(|e| e.who != r.who).copied().collect();
+            let Some(op) = eliminate(k, chash, &others) else { continue };
+            if in_span(k, chash, &op, r.index) {
+                out.insert(r.who.unwrap(), true);
+            }
+        }
+        return out;
+    }
+    // Inconsistent: find which single responder's removal heals it.
+    let mut healers: Vec<&SliceEq> = Vec::new();
+    for r in &responders {
+        let rest: Vec<&SliceEq> = all.iter().filter(|e| e.who != r.who).copied().collect();
+        if eliminate(k, chash, &rest).is_some() {
+            healers.push(r);
+        }
+    }
+    if healers.len() != 1 {
+        return out; // ambiguous — refuse to guess
+    }
+    let liar = healers[0];
+    out.insert(liar.who.unwrap(), false);
+    // With the liar removed the rest are consistent; pass those still
+    // pinned down by their peers.
+    let healed: Vec<&SliceEq> = all.iter().filter(|e| e.who != liar.who).copied().collect();
+    for r in &responders {
+        if r.who == liar.who {
+            continue;
+        }
+        let others: Vec<&SliceEq> =
+            healed.iter().filter(|e| e.who != r.who).copied().collect();
+        let Some(op) = eliminate(k, chash, &others) else { continue };
+        if in_span(k, chash, &op, r.index) {
+            out.insert(r.who.unwrap(), true);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::rateless::{block_size, InnerEncoder};
+
+    fn nid(tag: u8) -> NodeId {
+        NodeId(Hash256::of(&[tag]))
+    }
+
+    /// Build genuine window slices for fragment indices of a real chunk.
+    fn slices(chash: &Hash256, chunk: &[u8], k: usize, idxs: &[u64], off: usize, len: usize) -> Vec<Vec<u8>> {
+        let enc = InnerEncoder::new(chash, chunk, k);
+        idxs.iter()
+            .map(|i| {
+                let f = enc.fragment(*i);
+                f.payload[off..off + len].to_vec()
+            })
+            .collect()
+    }
+
+    fn spanning_indices(chash: &Hash256, k: usize, need: usize) -> Vec<u64> {
+        // Greedily collect indices whose rows are independent (rank
+        // grows when added), then a few extra dependent ones for span
+        // coverage.
+        let rank = |idxs: &[u64]| {
+            let eqs: Vec<SliceEq> = idxs
+                .iter()
+                .map(|i| SliceEq { who: None, index: *i, slice: vec![0] })
+                .collect();
+            let refs: Vec<&SliceEq> = eqs.iter().collect();
+            eliminate(k, chash, &refs).unwrap().len()
+        };
+        let mut idxs: Vec<u64> = vec![];
+        let mut i = 0u64;
+        while rank(&idxs) < k && i < 10_000 {
+            idxs.push(i);
+            if rank(&idxs) == idxs.len() {
+                i += 1;
+            } else {
+                idxs.pop();
+                i += 1;
+            }
+        }
+        assert_eq!(rank(&idxs), k);
+        while idxs.len() < need {
+            idxs.push(i);
+            i += 1;
+        }
+        idxs
+    }
+
+    #[test]
+    fn honest_group_all_pass() {
+        let chunk: Vec<u8> = (0..257u32).map(|i| (i * 31 % 251) as u8).collect();
+        let chash = Hash256::of(&chunk);
+        let k = 4;
+        let bs = block_size(chunk.len(), k);
+        let (off, len) = (bs / 3, 8.min(bs));
+        let idxs = spanning_indices(&chash, k, k + 2);
+        let sl = slices(&chash, &chunk, k, &idxs, off, len);
+        // First equation is the trusted anchor, rest are responders.
+        let eqs: Vec<SliceEq> = idxs
+            .iter()
+            .zip(&sl)
+            .enumerate()
+            .map(|(n, (i, s))| SliceEq {
+                who: (n > 0).then(|| nid(n as u8)),
+                index: *i,
+                slice: s.clone(),
+            })
+            .collect();
+        let v = judge(&chash, k, &eqs);
+        // k independent rows + extras: every responder is spanned by
+        // the other k+ equations, so all pass.
+        for n in 1..idxs.len() {
+            assert_eq!(v.get(&nid(n as u8)), Some(&true), "responder {n}");
+        }
+    }
+
+    #[test]
+    fn single_liar_identified_others_pass() {
+        let chunk: Vec<u8> = (0..300u32).map(|i| (i * 7 % 240) as u8).collect();
+        let chash = Hash256::of(&chunk);
+        let k = 4;
+        let bs = block_size(chunk.len(), k);
+        let (off, len) = (0, 8.min(bs));
+        let idxs = spanning_indices(&chash, k, k + 2);
+        let mut sl = slices(&chash, &chunk, k, &idxs, off, len);
+        sl[2][0] ^= 0xff; // responder 2 lies
+        let eqs: Vec<SliceEq> = idxs
+            .iter()
+            .zip(&sl)
+            .enumerate()
+            .map(|(n, (i, s))| SliceEq {
+                who: (n > 0).then(|| nid(n as u8)),
+                index: *i,
+                slice: s.clone(),
+            })
+            .collect();
+        let v = judge(&chash, k, &eqs);
+        assert_eq!(v.get(&nid(2)), Some(&false), "liar caught");
+        for n in (1..idxs.len()).filter(|n| *n != 2) {
+            // Honest responders are never failed; spanned ones pass.
+            assert_ne!(v.get(&nid(n as u8)), Some(&false), "responder {n} framed");
+        }
+    }
+
+    #[test]
+    fn unspanned_responder_gets_no_verdict() {
+        let chunk: Vec<u8> = (0..200u32).map(|i| i as u8).collect();
+        let chash = Hash256::of(&chunk);
+        let k = 4;
+        let bs = block_size(chunk.len(), k);
+        let idxs = spanning_indices(&chash, k, k);
+        // Anchor + ONE responder with an independent row: nothing pins
+        // the responder down, so no verdict either way.
+        let sl = slices(&chash, &chunk, k, &idxs[..2], 0, 6.min(bs));
+        let eqs = vec![
+            SliceEq { who: None, index: idxs[0], slice: sl[0].clone() },
+            SliceEq { who: Some(nid(1)), index: idxs[1], slice: sl[1].clone() },
+        ];
+        let v = judge(&chash, k, &eqs);
+        assert!(v.get(&nid(1)).is_none());
+        // Even a garbage slice from it stays unjudged (no framing).
+        let eqs2 = vec![
+            SliceEq { who: None, index: idxs[0], slice: sl[0].clone() },
+            SliceEq { who: Some(nid(1)), index: idxs[1], slice: vec![0xab; sl[1].len()] },
+        ];
+        let v2 = judge(&chash, k, &eqs2);
+        assert!(v2.get(&nid(1)).is_none());
+    }
+
+    #[test]
+    fn two_liars_void_the_round_nobody_framed() {
+        let chunk: Vec<u8> = (0..280u32).map(|i| (i % 253) as u8).collect();
+        let chash = Hash256::of(&chunk);
+        let k = 4;
+        let bs = block_size(chunk.len(), k);
+        let idxs = spanning_indices(&chash, k, k + 3);
+        let mut sl = slices(&chash, &chunk, k, &idxs, 1.min(bs - 1), 4.min(bs - 1));
+        sl[1][0] ^= 0x55;
+        sl[3][0] ^= 0x99;
+        let eqs: Vec<SliceEq> = idxs
+            .iter()
+            .zip(&sl)
+            .enumerate()
+            .map(|(n, (i, s))| SliceEq {
+                who: (n > 0).then(|| nid(n as u8)),
+                index: *i,
+                slice: s.clone(),
+            })
+            .collect();
+        let v = judge(&chash, k, &eqs);
+        // Whatever the solver concludes, no honest responder fails.
+        for n in (1..idxs.len()).filter(|n| *n != 1 && *n != 3) {
+            assert_ne!(v.get(&nid(n as u8)), Some(&false), "responder {n} framed");
+        }
+    }
+
+    #[test]
+    fn duplicate_index_disagreement_is_ambiguous() {
+        let chunk: Vec<u8> = (0..160u32).map(|i| (i * 3) as u8).collect();
+        let chash = Hash256::of(&chunk);
+        let k = 2;
+        let bs = block_size(chunk.len(), k);
+        let idxs = spanning_indices(&chash, k, k);
+        let sl = slices(&chash, &chunk, k, &idxs, 0, 4.min(bs));
+        // Two responders claim the same index with different slices:
+        // exactly one lies but the system cannot tell which.
+        let mut bad = sl[1].clone();
+        bad[0] ^= 1;
+        let eqs = vec![
+            SliceEq { who: None, index: idxs[0], slice: sl[0].clone() },
+            SliceEq { who: Some(nid(1)), index: idxs[1], slice: sl[1].clone() },
+            SliceEq { who: Some(nid(2)), index: idxs[1], slice: bad },
+        ];
+        let v = judge(&chash, k, &eqs);
+        assert_ne!(v.get(&nid(1)), Some(&false));
+        assert_ne!(v.get(&nid(2)), Some(&false));
+    }
+}

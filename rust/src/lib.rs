@@ -41,6 +41,7 @@
 
 pub mod analysis;
 pub mod api;
+pub mod audit;
 pub mod baseline;
 pub mod chain;
 pub mod codec;

@@ -20,6 +20,10 @@
 //!                    restart waves with durability-loss and
 //!                    re-convergence accounting; emits
 //!                    `BENCH_restart.json`.
+//! * `bench-audit`  — retrievability audit plane bench (ISSUE 7):
+//!                    withholder detection latency vs sampling rate,
+//!                    audit bytes/node/epoch, and the zero-false-
+//!                    positive count; emits `BENCH_audit.json`.
 //! * `tcp-demo`     — bring up a real-TCP localhost cluster and do one
 //!                    store/query round trip.
 //! * `sim`          — §6.1 durability simulations (fig4|fig5|fig6).
@@ -55,13 +59,14 @@ fn main() {
         "bench-maint" => cmd_bench_maint(&args),
         "bench-epoch" => cmd_bench_epoch(&args),
         "bench-restart" => cmd_bench_restart(&args),
+        "bench-audit" => cmd_bench_audit(&args),
         "tcp-demo" => cmd_tcp_demo(&args),
         "sim" => cmd_sim(&args),
         "analyze" => cmd_analyze(&args),
         "artifacts" => cmd_artifacts(&args),
         _ => {
             eprintln!(
-                "usage: vault <cluster|bench-ops|bench-codec|bench-maint|bench-epoch|bench-restart|tcp-demo|sim|analyze|artifacts> [--flags]\n\
+                "usage: vault <cluster|bench-ops|bench-codec|bench-maint|bench-epoch|bench-restart|bench-audit|tcp-demo|sim|analyze|artifacts> [--flags]\n\
                  \n\
                  cluster     --peers 128 --objects 4 --size 262144 [--byzantine 0.1] [--churn 4]\n\
                  bench-ops   --peers 64 --ops 300 --inflight 32 --size 32768 [--sharded 0]\n\
@@ -73,6 +78,8 @@ fn main() {
                  \x20            [--seed 7] [--out BENCH_epoch.json]\n\
                  bench-restart [--smoke] [--peers 64] [--r 16] [--seed 7]\n\
                  \x20            [--out BENCH_restart.json]\n\
+                 bench-audit [--smoke] [--peers 48] [--withhold 4] [--epochs 8]\n\
+                 \x20            [--seed 7] [--out BENCH_audit.json]\n\
                  tcp-demo    --peers 8 --size 65536\n\
                  sim         --fig 4|5|6 [--nodes 100000] [--objects 1000] [--churn 2.0] [--years 1]\n\
                  analyze     [--n 80] [--k 32] [--churn-q 0.01] [--evict 0] [--steps 512]\n\
@@ -985,6 +992,196 @@ fn cmd_bench_restart(args: &Args) {
         "durability loss: clean {} chunks, torn {} chunks (both must be 0); \
          ({wall_secs:.1}s wall)",
         clean.durability_loss_chunks, torn.durability_loss_chunks
+    );
+}
+
+/// One audit-plane trial: a seeded epoch-chain cluster with a cluster
+/// of fragment withholders, driven boundary-to-boundary until every
+/// withholder is suspected by at least `need_suspecters` honest peers
+/// (or the epoch budget runs out).
+struct AuditTrial {
+    rate: f64,
+    epochs_run: u64,
+    /// Boundaries crossed from withhold injection until every
+    /// withholder was broadly suspected (`None` = not within budget).
+    detection_epochs: Option<u64>,
+    audit_bytes_per_node_epoch: f64,
+    audit_msgs_per_node_epoch: f64,
+    /// Suspect entries pointing at peers that are *not* withholders —
+    /// the zero-false-positive contract, counted across every ledger.
+    false_positives: usize,
+}
+
+fn run_audit_trial(
+    peers: usize,
+    objects: usize,
+    withhold: usize,
+    rate: f64,
+    max_epochs: u64,
+    seed: u64,
+) -> AuditTrial {
+    use vault::dht::NodeId;
+    const NEED_SUSPECTERS: usize = 3;
+    let epoch_ms = 60_000u64;
+    let mut cfg = ClusterConfig::small_test(peers);
+    cfg.seed = seed;
+    cfg.epoch_ms = epoch_ms;
+    cfg.vault.rotation_grace_ms = 20_000;
+    cfg.vault.heartbeat_ms = 5_000;
+    cfg.vault.suspicion_ms = 15_000;
+    cfg.vault.tick_ms = 5_000;
+    cfg.vault.audits = true;
+    cfg.vault.audit_rate = rate;
+    let mut cluster = Cluster::start(cfg);
+    let mut rng = Rng::new(seed ^ 0xA0D17);
+    let mut first_chunk = None;
+    for o in 0..objects {
+        let mut data = vec![0u8; 12_000];
+        rng.fill_bytes(&mut data);
+        let client = cluster.random_client();
+        let id = cluster
+            .store_blocking(client, &data, format!("audit-bench-{o}").as_bytes(), 0)
+            .expect("seed store")
+            .value;
+        if o == 0 {
+            first_chunk = Some(id.chunks[0]);
+        }
+    }
+    let chash = first_chunk.expect("at least one object");
+
+    // Cluster the withholders inside one chunk's group (the hard case:
+    // correlated retrievability loss), though `refuse_frags` withholds
+    // *everything* they store.
+    let mut withheld: Vec<NodeId> = Vec::new();
+    for i in 0..cluster.net.len() {
+        if withheld.len() >= withhold {
+            break;
+        }
+        if cluster.net.is_up(i) && cluster.net.peer(i).fragment_index(&chash).is_some() {
+            cluster.net.peer_mut(i).fault.refuse_frags = true;
+            withheld.push(cluster.net.peer(i).id());
+        }
+    }
+
+    let all_suspected = |cluster: &Cluster<vault::net::simnet::SimNet>| {
+        withheld.iter().all(|wid| {
+            let suspecters = (0..cluster.net.len())
+                .filter(|&i| cluster.net.is_up(i))
+                .filter(|&i| !cluster.net.peer(i).fault.refuse_frags)
+                .filter(|&i| cluster.net.peer(i).id() != *wid)
+                .filter(|&i| cluster.net.peer(i).is_audit_suspect(wid))
+                .count();
+            suspecters >= NEED_SUSPECTERS
+        })
+    };
+
+    let before = cluster.net.maint_stats();
+    let mut detection_epochs = None;
+    let mut epochs_run = 0u64;
+    for e in 1..=max_epochs {
+        // Cross the next boundary, then give the verdict gossip and the
+        // boundary's ledger advance a settle window.
+        let boundary = ((cluster.net.now_ms() / epoch_ms) + 1) * epoch_ms;
+        cluster.drive(boundary + 5_000);
+        epochs_run = e;
+        if all_suspected(&cluster) {
+            detection_epochs = Some(e);
+            break;
+        }
+    }
+    let after = cluster.net.maint_stats();
+    let audit_bytes = after.audit_bytes - before.audit_bytes;
+    let audit_msgs = after.audit_msgs - before.audit_msgs;
+    let denom = (peers as f64) * (epochs_run.max(1) as f64);
+
+    let mut false_positives = 0usize;
+    for i in 0..cluster.net.len() {
+        if !cluster.net.is_up(i) {
+            continue;
+        }
+        for s in cluster.net.peer(i).audit_suspects() {
+            if !withheld.contains(&s) {
+                false_positives += 1;
+            }
+        }
+    }
+
+    AuditTrial {
+        rate,
+        epochs_run,
+        detection_epochs,
+        audit_bytes_per_node_epoch: audit_bytes as f64 / denom,
+        audit_msgs_per_node_epoch: audit_msgs as f64 / denom,
+        false_positives,
+    }
+}
+
+/// Retrievability audit plane benchmark (ISSUE 7): detection latency of
+/// a withholding cluster vs audit sampling rate, audit traffic per node
+/// per epoch, and the zero-false-positive contract — all three land in
+/// `BENCH_audit.json` for CI schema validation.
+fn cmd_bench_audit(args: &Args) {
+    let smoke = args.bool("smoke");
+    let peers = args.get("peers", if smoke { 32 } else { 48usize });
+    let objects = if smoke { 2 } else { 4usize };
+    let withhold = args.get("withhold", if smoke { 2 } else { 4usize });
+    let max_epochs = args.get("epochs", if smoke { 6 } else { 8u64 });
+    let seed = args.get("seed", 7u64);
+    let out = args.str("out", "BENCH_audit.json");
+    let rates: &[f64] = if smoke { &[0.25, 0.5] } else { &[0.1, 0.25, 0.5] };
+    println!(
+        "bench-audit{}: {peers} peers, {objects} objects, {withhold} withholders, \
+         rate sweep {rates:?}, budget {max_epochs} epochs",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let wall = Timer::start();
+    let mut rows = Vec::new();
+    let mut fp_total = 0usize;
+    for &rate in rates {
+        let t = run_audit_trial(peers, objects, withhold, rate, max_epochs, seed);
+        let detect = t
+            .detection_epochs
+            .map(|e| e.to_string())
+            .unwrap_or_else(|| "null".into());
+        println!(
+            "  rate {rate:>4}: detection {} epochs, {:>8.0} audit B/node/epoch, \
+             {:>6.1} audit msgs/node/epoch, {} false positives",
+            t.detection_epochs.map(|e| e as i64).unwrap_or(-1),
+            t.audit_bytes_per_node_epoch,
+            t.audit_msgs_per_node_epoch,
+            t.false_positives
+        );
+        fp_total += t.false_positives;
+        rows.push(format!(
+            "{{\"rate\": {rate}, \"epochs_run\": {}, \"detected\": {}, \
+             \"detection_epochs\": {detect}, \
+             \"audit_bytes_per_node_per_epoch\": {:.1}, \
+             \"audit_msgs_per_node_per_epoch\": {:.2}, \
+             \"false_positives\": {}}}",
+            t.epochs_run,
+            t.detection_epochs.is_some(),
+            t.audit_bytes_per_node_epoch,
+            t.audit_msgs_per_node_epoch,
+            t.false_positives,
+        ));
+    }
+    let wall_secs = wall.elapsed_s();
+    let trials = format!("[\n    {}\n  ]", rows.join(",\n    "));
+    let json = format!(
+        "{{\n  \"bench\": \"audit_plane\",\n  \"smoke\": {smoke},\n  \"seed\": {seed},\n  \
+         \"peers\": {peers},\n  \"objects\": {objects},\n  \"withholders\": {withhold},\n  \
+         \"epoch_ms\": 60000,\n  \"epoch_budget\": {max_epochs},\n  \
+         \"need_suspecters\": 3,\n  \"trials\": {trials},\n  \
+         \"false_positives_total\": {fp_total},\n  \"wall_secs\": {wall_secs:.3}\n}}\n",
+    );
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("failed to write {out}: {e}"),
+    }
+    println!(
+        "audit plane: {} trials, {fp_total} false positives (must be 0) ({wall_secs:.1}s wall)",
+        rates.len()
     );
 }
 

@@ -32,7 +32,10 @@ pub(crate) fn maint_bytes(msg: &Msg, purpose: Purpose, approx: usize) -> u64 {
         Purpose::Heartbeat | Purpose::Repair => msg
             .maint_exact_size()
             .unwrap_or_else(|| crate::wire::encoded_len(msg)) as u64,
-        Purpose::Join | Purpose::Client => approx as u64,
+        // Audit traffic is slice-dominated and rare relative to the
+        // heartbeat plane; the payload-tracking approximation is
+        // within header noise of exact (asserted by the wire tests).
+        Purpose::Join | Purpose::Client | Purpose::Audit => approx as u64,
     }
 }
 

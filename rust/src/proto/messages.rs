@@ -165,6 +165,43 @@ pub struct EpochAnnounce {
 
 crate::wire_struct!(EpochAnnounce { epoch, beacon, tx_digest, n_nodes });
 
+/// Signed, publicly-verifiable audit outcome (ISSUE 7), gossiped to
+/// the chunk's group after an audit round closes. `proof` is the
+/// sender's VRF designation proof over
+/// `audit::schedule::audit_alpha(epoch, beacon, chash, auditee)` —
+/// receivers re-derive from public chain data that the sender really
+/// was drawn to audit this auditee this epoch, so a Byzantine auditor
+/// cannot pick its framing targets. The Ed25519 signature over
+/// [`Self::signing_bytes`] binds the verdict to the sender key.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AuditVerdict {
+    pub epoch: u64,
+    pub chash: Hash256,
+    pub auditee: crate::dht::NodeId,
+    pub pass: bool,
+    /// Sender (auditor) public key; must hash to the transport-level
+    /// sender id.
+    pub pk: [u8; 32],
+    /// VRF designation proof (eligibility to audit `auditee`).
+    pub proof: VrfProof,
+    /// Ed25519 signature over [`Self::signing_bytes`].
+    pub sig: [u8; 64],
+}
+
+crate::wire_struct!(AuditVerdict { epoch, chash, auditee, pass, pk, proof, sig });
+
+impl AuditVerdict {
+    pub fn signing_bytes(&self) -> Vec<u8> {
+        let mut v = Vec::with_capacity(22 + 8 + 32 + 32 + 1);
+        v.extend_from_slice(b"vault-audit-verdict-v1");
+        v.extend_from_slice(&self.epoch.to_le_bytes());
+        v.extend_from_slice(&self.chash.0);
+        v.extend_from_slice(&self.auditee.0 .0);
+        v.push(self.pass as u8);
+        v
+    }
+}
+
 /// Why a message is being sent — the sender-side traffic class used by
 /// the [`super::MaintStats`] bandwidth-accounting layer. Replies whose
 /// purpose the responder cannot know (e.g. `FragReply` serving either a
@@ -180,6 +217,8 @@ pub enum Purpose {
     Join,
     /// Client STORE/QUERY saga traffic.
     Client,
+    /// Retrievability audit plane (challenges, slices, verdicts).
+    Audit,
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -255,6 +294,23 @@ pub enum Msg {
 
     Ping { op: u64 },
     Pong { op: u64 },
+
+    /// Retrievability audit challenge (ISSUE 7): prove possession of
+    /// your fragment of `chash` by returning its payload bytes at the
+    /// epoch's beacon-salted window `[offset, offset+len)`. Sent to
+    /// every live group member so the auditor can assemble the GF(2)
+    /// window system that verifies each slice (see
+    /// `audit::verify`).
+    AuditChallenge { op: u64, epoch: u64, chash: Hash256, offset: u32, len: u32 },
+    /// Audit reply: the responder's fragment index and the challenged
+    /// slice, or `None` when it has nothing to serve (the refusal /
+    /// dropped-payload case — a fail verdict for a designated auditee).
+    /// Slices longer than `audit::MAX_AUDIT_SLICE` are rejected at
+    /// decode.
+    AuditResponse { op: u64, chash: Hash256, index: u64, slice: Option<Vec<u8>> },
+    /// Signed audit outcome, gossiped to the group (see
+    /// [`AuditVerdict`]).
+    AuditVerdict(AuditVerdict),
 }
 
 impl Msg {
@@ -279,6 +335,9 @@ impl Msg {
             Msg::HeartbeatBatch(_) => 16,
             Msg::GetMembers { .. } => 17,
             Msg::EpochUpdate(_) => 18,
+            Msg::AuditChallenge { .. } => 19,
+            Msg::AuditResponse { .. } => 20,
+            Msg::AuditVerdict(_) => 21,
         }
     }
 
@@ -344,6 +403,9 @@ impl Msg {
             | Msg::Members { .. } => Purpose::Heartbeat,
             Msg::RepairReq { .. } | Msg::RepairAck { .. } => Purpose::Repair,
             Msg::GetChunk { .. } | Msg::ChunkReply { .. } => Purpose::Join,
+            Msg::AuditChallenge { .. } | Msg::AuditResponse { .. } | Msg::AuditVerdict(_) => {
+                Purpose::Audit
+            }
             _ => Purpose::Client,
         }
     }
@@ -369,6 +431,9 @@ impl Msg {
             Msg::HeartbeatBatch(_) => "HeartbeatBatch",
             Msg::GetMembers { .. } => "GetMembers",
             Msg::EpochUpdate(_) => "EpochUpdate",
+            Msg::AuditChallenge { .. } => "AuditChallenge",
+            Msg::AuditResponse { .. } => "AuditResponse",
+            Msg::AuditVerdict(_) => "AuditVerdict",
         }
     }
 
@@ -406,6 +471,12 @@ impl Msg {
             Msg::FindNode { .. } => HDR,
             Msg::FindNodeReply { closer, .. } => HDR + 65 * closer.len(),
             Msg::Ping { .. } | Msg::Pong { .. } => HDR,
+            Msg::AuditChallenge { .. } => HDR + 24,
+            Msg::AuditResponse { slice, .. } => {
+                HDR + 8 + slice.as_ref().map(|s| s.len() + 2).unwrap_or(1)
+            }
+            // epoch + chash + auditee + pass + pk + proof + sig
+            Msg::AuditVerdict(_) => HDR + 8 + 32 + 32 + 1 + 32 + 80 + 64,
         }
     }
 }
@@ -488,6 +559,20 @@ impl Encode for Msg {
             Msg::HeartbeatBatch(b) => b.encode(w),
             Msg::GetMembers { chash } => chash.encode(w),
             Msg::EpochUpdate(a) => a.encode(w),
+            Msg::AuditChallenge { op, epoch, chash, offset, len } => {
+                w.u64(*op);
+                w.u64(*epoch);
+                chash.encode(w);
+                w.u32(*offset);
+                w.u32(*len);
+            }
+            Msg::AuditResponse { op, chash, index, slice } => {
+                w.u64(*op);
+                chash.encode(w);
+                w.u64(*index);
+                slice.encode(w);
+            }
+            Msg::AuditVerdict(v) => v.encode(w),
         }
     }
 }
@@ -558,6 +643,30 @@ impl Decode for Msg {
             16 => Msg::HeartbeatBatch(HeartbeatBatch::decode(r)?),
             17 => Msg::GetMembers { chash: Hash256::decode(r)? },
             18 => Msg::EpochUpdate(EpochAnnounce::decode(r)?),
+            19 => Msg::AuditChallenge {
+                op: r.u64()?,
+                epoch: r.u64()?,
+                chash: Hash256::decode(r)?,
+                offset: r.u32()?,
+                len: r.u32()?,
+            },
+            20 => {
+                let op = r.u64()?;
+                let chash = Hash256::decode(r)?;
+                let index = r.u64()?;
+                let slice: Option<Vec<u8>> = Option::decode(r)?;
+                // Hostile-input cap: an honest responder's slice is at
+                // most the challenged window, itself clamped to
+                // MAX_AUDIT_SLICE — anything longer is an attack on
+                // auditor memory, rejected before it allocates state.
+                if let Some(s) = &slice {
+                    if s.len() > crate::audit::MAX_AUDIT_SLICE {
+                        return Err(WireError::TooLarge(s.len()));
+                    }
+                }
+                Msg::AuditResponse { op, chash, index, slice }
+            }
+            21 => Msg::AuditVerdict(AuditVerdict::decode(r)?),
             t => return Err(WireError::BadTag(t as u32)),
         })
     }
@@ -646,6 +755,18 @@ mod tests {
             Msg::FindNodeReply { op: 6, target: chash, closer: vec![sample_peer(3)] },
             Msg::Ping { op: 7 },
             Msg::Pong { op: 7 },
+            Msg::AuditChallenge { op: 8, epoch: 12, chash, offset: 17, len: 64 },
+            Msg::AuditResponse { op: 8, chash, index: 3, slice: Some(vec![0xAA; 64]) },
+            Msg::AuditResponse { op: 8, chash, index: 3, slice: None },
+            Msg::AuditVerdict(AuditVerdict {
+                epoch: 12,
+                chash,
+                auditee: NodeId::from_pk(&[2; 32]),
+                pass: false,
+                pk: sk.public,
+                proof,
+                sig: [7; 64],
+            }),
         ]
     }
 
@@ -664,7 +785,47 @@ mod tests {
         let mut tags: Vec<u8> = msgs.iter().map(|m| m.tag()).collect();
         tags.sort_unstable();
         tags.dedup();
-        assert_eq!(tags.len(), 19);
+        assert_eq!(tags.len(), 22);
+    }
+
+    #[test]
+    fn audit_response_slice_capped_at_decode() {
+        let chash = Hash256::of(b"chunk");
+        let at_cap = Msg::AuditResponse {
+            op: 1,
+            chash,
+            index: 0,
+            slice: Some(vec![0; crate::audit::MAX_AUDIT_SLICE]),
+        };
+        assert_eq!(Msg::from_bytes(&at_cap.to_bytes()).unwrap(), at_cap);
+        let over = Msg::AuditResponse {
+            op: 1,
+            chash,
+            index: 0,
+            slice: Some(vec![0; crate::audit::MAX_AUDIT_SLICE + 1]),
+        };
+        assert!(matches!(
+            Msg::from_bytes(&over.to_bytes()),
+            Err(WireError::TooLarge(n)) if n == crate::audit::MAX_AUDIT_SLICE + 1
+        ));
+    }
+
+    #[test]
+    fn audit_verdict_signing_bytes_bind_fields() {
+        let msgs = all_messages();
+        let Some(Msg::AuditVerdict(v)) = msgs.iter().find(|m| matches!(m, Msg::AuditVerdict(_)))
+        else {
+            panic!("verdict sample missing")
+        };
+        let base = v.signing_bytes();
+        for tweak in [
+            AuditVerdict { epoch: v.epoch + 1, ..v.clone() },
+            AuditVerdict { chash: Hash256::of(b"other"), ..v.clone() },
+            AuditVerdict { auditee: NodeId::from_pk(&[9; 32]), ..v.clone() },
+            AuditVerdict { pass: !v.pass, ..v.clone() },
+        ] {
+            assert_ne!(base, tweak.signing_bytes());
+        }
     }
 
     #[test]

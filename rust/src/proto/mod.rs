@@ -78,6 +78,29 @@ pub struct VaultConfig {
     /// Byzantine behaviour (Fig. 6): participate in every protocol but
     /// silently drop stored fragment payloads.
     pub byzantine: bool,
+    /// Retrievability audit plane (ISSUE 7): each epoch every group
+    /// member derives a beacon-salted, VRF-gated audit schedule over
+    /// its fellow members, challenges them for raw fragment bytes at
+    /// an unpredictable window, verifies the slices against the chunk
+    /// commitment (`audit::verify`), and gossips signed verdicts into
+    /// a quorum ledger; sustained quorum failure excludes the auditee
+    /// from the alive set in `check_repair` so the repair path
+    /// recruits a replacement. Requires `epoch_placement` (the beacon
+    /// drives the schedule). `false` (default) leaves every legacy
+    /// message flow, timer, and fingerprint untouched.
+    pub audits: bool,
+    /// Per-(chunk, auditee, epoch) probability that a given fellow
+    /// member is designated to audit it.
+    pub audit_rate: f64,
+    /// Challenged window length in bytes (clamped to the fragment
+    /// payload and `audit::MAX_AUDIT_SLICE`).
+    pub audit_len: usize,
+    /// Distinct failing auditors required before an epoch counts as
+    /// failed for an auditee (framing resistance: one Byzantine
+    /// auditor can never reach quorum alone).
+    pub audit_quorum: usize,
+    /// Consecutive failed epochs before an auditee is marked suspect.
+    pub audit_fail_epochs: u64,
 }
 
 /// When to cryptographically verify heartbeat claims.
@@ -116,6 +139,11 @@ impl Default for VaultConfig {
             epoch_placement: false,
             rotation_grace_ms: 60_000,
             byzantine: false,
+            audits: false,
+            audit_rate: 0.25,
+            audit_len: 64,
+            audit_quorum: 2,
+            audit_fail_epochs: 2,
         }
     }
 }
@@ -218,6 +246,8 @@ pub struct MaintStats {
     pub join_bytes: u64,
     pub client_msgs: u64,
     pub client_bytes: u64,
+    pub audit_msgs: u64,
+    pub audit_bytes: u64,
 }
 
 impl MaintStats {
@@ -227,6 +257,7 @@ impl MaintStats {
             Purpose::Repair => (&mut self.repair_msgs, &mut self.repair_bytes),
             Purpose::Join => (&mut self.join_msgs, &mut self.join_bytes),
             Purpose::Client => (&mut self.client_msgs, &mut self.client_bytes),
+            Purpose::Audit => (&mut self.audit_msgs, &mut self.audit_bytes),
         };
         *m += 1;
         *b += bytes;
@@ -242,14 +273,16 @@ impl MaintStats {
         self.join_bytes += other.join_bytes;
         self.client_msgs += other.client_msgs;
         self.client_bytes += other.client_bytes;
+        self.audit_msgs += other.audit_msgs;
+        self.audit_bytes += other.audit_bytes;
     }
 
     pub fn total_bytes(&self) -> u64 {
-        self.hb_bytes + self.repair_bytes + self.join_bytes + self.client_bytes
+        self.hb_bytes + self.repair_bytes + self.join_bytes + self.client_bytes + self.audit_bytes
     }
 
     pub fn total_msgs(&self) -> u64 {
-        self.hb_msgs + self.repair_msgs + self.join_msgs + self.client_msgs
+        self.hb_msgs + self.repair_msgs + self.join_msgs + self.client_msgs + self.audit_msgs
     }
 }
 
@@ -301,6 +334,24 @@ pub struct Metrics {
     pub wal_torn_bytes: u64,
     pub recovered_fragments: u64,
     pub recovery_resyncs: u64,
+    /// Audit plane (ISSUE 7): rounds opened as auditor, challenges
+    /// sent / slices served, verdicts by outcome (pass / fail /
+    /// undetermined — no verdict issued), verdict gossip accepted vs.
+    /// rejected (bad sig, non-member, failed designation proof, stale
+    /// epoch), suspects marked / cleared by the local ledger, and
+    /// oversized response slices dropped by the handler cap.
+    pub audit_rounds: u64,
+    pub audit_challenges_sent: u64,
+    pub audit_slices_served: u64,
+    pub audit_passes: u64,
+    pub audit_fails: u64,
+    pub audit_undetermined: u64,
+    pub audit_verdicts_sent: u64,
+    pub audit_verdicts_accepted: u64,
+    pub audit_verdicts_rejected: u64,
+    pub audit_suspects_marked: u64,
+    pub audit_suspects_cleared: u64,
+    pub audit_oversize_dropped: u64,
     /// Sender-side per-purpose bandwidth (filled by the transports).
     pub maint: MaintStats,
 }

@@ -10,6 +10,9 @@
 use crate::util::detmap::{DetHashMap as HashMap, DetHashSet as HashSet};
 use std::collections::hash_map::Entry;
 
+use crate::audit::ledger::AuditLedger;
+use crate::audit::schedule as audit_schedule;
+use crate::audit::verify::SliceEq;
 use crate::codec::rateless::{Fragment, InnerDecoder, InnerEncoder};
 use crate::crypto::ed25519::{self, SigningKey};
 use crate::crypto::vrf::VrfProof;
@@ -22,7 +25,9 @@ use crate::util::rng::Rng;
 use crate::util::rng::fold64;
 
 use super::client::{QueryOp, StoreOp};
-use super::messages::{BatchClaim, Claim, EpochAnnounce, HeartbeatBatch, MemberDelta, Msg, Purpose};
+use super::messages::{
+    AuditVerdict, BatchClaim, Claim, EpochAnnounce, HeartbeatBatch, MemberDelta, Msg, Purpose,
+};
 use super::selection;
 use super::{
     AppEvent, ClaimVerify, Directory, EpochState, Metrics, Outbox, TimerKind, VaultConfig,
@@ -118,6 +123,10 @@ pub struct PeerFault {
     /// Decline every repair-join request (repair sabotage; initiators
     /// must fall back to other candidates).
     pub refuse_repairs: bool,
+    /// Byzantine auditor (ISSUE 7): instead of auditing honestly, emit
+    /// a *fail* verdict for every alive fellow member each epoch — the
+    /// framing attempt the verdict ledger's quorum rule must defeat.
+    pub frame_audits: bool,
 }
 
 /// State this peer keeps per stored fragment (= per chunk group it
@@ -207,6 +216,25 @@ struct RepairCoord {
     started_ms: u64,
 }
 
+/// One in-flight audit challenge wave this node issued as auditor
+/// (ISSUE 7): per (chunk, epoch), every alive fellow is challenged on
+/// the same beacon-derived byte window, so the responses form the
+/// GF(2) equation system [`crate::audit::verify::judge`] needs.
+struct AuditRound {
+    chash: Hash256,
+    epoch: u64,
+    offset: u32,
+    len: u32,
+    /// Fellows this node holds a VRF designation proof for — verdicts
+    /// are only ever issued for these.
+    auditees: HashMap<NodeId, VrfProof>,
+    /// Members challenged but not yet answered; still here when the
+    /// round closes ⇒ non-response ⇒ fail (if designated).
+    awaiting: HashSet<NodeId>,
+    responses: Vec<(NodeId, u64, Option<Vec<u8>>)>,
+    started_ms: u64,
+}
+
 pub struct VaultPeer {
     pub cfg: VaultConfig,
     pub key: SigningKey,
@@ -243,6 +271,14 @@ pub struct VaultPeer {
     verified_claims: HashSet<(NodeId, Hash256, u64, u64)>,
     /// Scenario fault-injection switches (all off in normal operation).
     pub fault: PeerFault,
+    /// Audit challenge waves this node issued and is awaiting answers
+    /// for, keyed by op id (ISSUE 7; empty unless `cfg.audits`).
+    audit_rounds: HashMap<u64, AuditRound>,
+    /// Per-peer verdict ledger: decayed pass/fail counters under the
+    /// quorum rule; drives the suspect set `check_repair` routes
+    /// around. Volatile by design — a reboot starts with a clean slate
+    /// and re-derives suspicion from fresh epochs.
+    pub audit_ledger: AuditLedger,
     /// Event-sourced durability log (ISSUE 6): every mutation the node
     /// must survive a reboot with is appended here. In the simulated
     /// runtimes this buffer *is* the disk — it outlives the peer object
@@ -276,6 +312,8 @@ impl VaultPeer {
             proof_cache: HashMap::default(),
             verified_claims: HashSet::default(),
             fault: PeerFault::default(),
+            audit_rounds: HashMap::default(),
+            audit_ledger: AuditLedger::default(),
             wal: Wal::new(),
             metrics: Metrics::default(),
         }
@@ -512,6 +550,13 @@ impl VaultPeer {
                 out.send(from, Msg::FindNodeReply { op, target, closer });
             }
             Msg::FindNodeReply { .. } => { /* consumed by the node layer */ }
+            Msg::AuditChallenge { op, epoch, chash, offset, len } => {
+                self.handle_audit_challenge(out, from, op, epoch, chash, offset, len)
+            }
+            Msg::AuditResponse { op, chash, index, slice } => {
+                self.handle_audit_response(out, from, op, chash, index, slice)
+            }
+            Msg::AuditVerdict(v) => self.handle_audit_verdict(from, v),
             Msg::Ping { op } => out.send(from, Msg::Pong { op }),
             Msg::Pong { .. } => {}
         }
@@ -892,6 +937,21 @@ impl VaultPeer {
         // Expire stalled repair coordinations.
         let deadline = self.cfg.op_timeout_ms * 4;
         self.repairs.retain(|_, r| now.saturating_sub(r.started_ms) < deadline);
+
+        // Close audit rounds that straggled past two ticks: judge
+        // whoever answered, the silent rest fail by non-response.
+        if self.cfg.audits {
+            let cutoff = self.cfg.tick_ms.saturating_mul(2);
+            let stale: Vec<u64> = self
+                .audit_rounds
+                .iter()
+                .filter(|(_, r)| now.saturating_sub(r.started_ms) >= cutoff)
+                .map(|(op, _)| *op)
+                .collect();
+            for op in stale {
+                self.finalize_audit_round(out, op);
+            }
+        }
     }
 
     fn heartbeat_chunk(&mut self, out: &mut Outbox, chash: &Hash256) {
@@ -1192,6 +1252,7 @@ impl VaultPeer {
             n_nodes: self.cfg.n_nodes as u64,
         });
         self.rotate_groups(out);
+        self.advance_audit_epoch(out);
     }
 
     /// Re-sample this node's eligibility for every stored chunk under
@@ -1237,6 +1298,424 @@ impl VaultPeer {
         }
     }
 
+    // ---- retrievability audit plane (ISSUE 7) ---------------------------
+
+    /// Epoch-boundary audit hook (runs right after
+    /// [`Self::rotate_groups`]): close out rounds the finished epoch
+    /// left unanswered (non-response is failure), advance the verdict
+    /// ledger's books under the quorum rule, then derive this epoch's
+    /// challenge schedule from the fresh beacon. Everything here is
+    /// gated on `cfg.audits` — with audits off no message, timer, op id
+    /// or RNG draw is ever produced, so pre-audit scenario fingerprints
+    /// are byte-identical.
+    fn advance_audit_epoch(&mut self, out: &mut Outbox) {
+        if !self.cfg.audits {
+            return;
+        }
+        let stale: Vec<u64> = self.audit_rounds.keys().copied().collect();
+        for op in stale {
+            self.finalize_audit_round(out, op);
+        }
+        let (marked, cleared) = self
+            .audit_ledger
+            .epoch_advance(self.cfg.audit_quorum, self.cfg.audit_fail_epochs);
+        self.metrics.audit_suspects_marked += marked as u64;
+        self.metrics.audit_suspects_cleared += cleared as u64;
+        if self.fault.frame_audits {
+            self.frame_audits(out);
+        } else {
+            self.schedule_audits(out);
+        }
+    }
+
+    /// Derive and launch this epoch's audit rounds. For every stored,
+    /// non-retiring chunk, the VRF over
+    /// [`audit_schedule::audit_alpha`] (`epoch ‖ beacon ‖ domain ‖
+    /// chash ‖ auditee`) independently designates this node as auditor
+    /// of each alive fellow with probability `audit_rate` —
+    /// unpredictable before the boundary seals, yet verifiable by
+    /// anyone holding the proof afterwards. One challenge wave per
+    /// (chunk, epoch) goes to *all* alive fellows, designated or not:
+    /// the verifier pins a responder's slice down with the *other*
+    /// members' equations, so the spanning answers are needed
+    /// regardless of who is on trial this epoch. Suspects are still
+    /// scheduled — a quorum of passes is their recovery path.
+    fn schedule_audits(&mut self, out: &mut Outbox) {
+        let epoch = self.cur_epoch.epoch;
+        let beacon = self.cur_epoch.beacon;
+        let now = out.now_ms;
+        let my_id = self.info.id;
+        let chashes: Vec<Hash256> = self.store.keys().copied().collect();
+        for chash in chashes {
+            let (fellows, chunk_len) = {
+                let cs = &self.store[&chash];
+                if cs.retire_at_ms != 0 {
+                    continue; // retiring: this epoch's members audit now
+                }
+                let fellows: Vec<NodeId> = cs
+                    .members
+                    .values()
+                    .filter(|m| {
+                        m.info.id != my_id
+                            && !m.retiring
+                            && now.saturating_sub(m.last_seen_ms) < self.cfg.suspicion_ms
+                    })
+                    .map(|m| m.info.id)
+                    .collect();
+                (fellows, cs.frag.chunk_len as usize)
+            };
+            let mut auditees: HashMap<NodeId, VrfProof> = HashMap::default();
+            for id in &fellows {
+                if let Some(p) = audit_schedule::prove_audit(
+                    &self.key,
+                    epoch,
+                    &beacon,
+                    &chash,
+                    id,
+                    self.cfg.audit_rate,
+                ) {
+                    auditees.insert(*id, p);
+                }
+            }
+            if auditees.is_empty() {
+                continue;
+            }
+            // Window into the *canonical* fragment payload length:
+            // every payload is one code block long, and `block_size`
+            // is a pure function of public chunk metadata — a
+            // responder that dropped its payload cannot shift the
+            // window by lying about its length.
+            let payload_len =
+                crate::codec::rateless::block_size(chunk_len, self.cfg.k_inner);
+            let (off, len) = audit_schedule::audit_window(
+                epoch,
+                &beacon,
+                &chash,
+                payload_len,
+                self.cfg.audit_len,
+            );
+            if len == 0 {
+                continue;
+            }
+            let op = self.fresh_op();
+            self.metrics.audit_rounds += 1;
+            for t in &fellows {
+                self.metrics.audit_challenges_sent += 1;
+                out.send_p(
+                    *t,
+                    Msg::AuditChallenge {
+                        op,
+                        epoch,
+                        chash,
+                        offset: off as u32,
+                        len: len as u32,
+                    },
+                    Purpose::Audit,
+                );
+            }
+            self.audit_rounds.insert(
+                op,
+                AuditRound {
+                    chash,
+                    epoch,
+                    offset: off as u32,
+                    len: len as u32,
+                    auditees,
+                    awaiting: fellows.iter().copied().collect(),
+                    responses: Vec::new(),
+                    started_ms: now,
+                },
+            );
+        }
+    }
+
+    /// Byzantine-auditor fault: skip honest auditing entirely and
+    /// blanket-accuse every alive fellow instead. Where the VRF really
+    /// designated us, the accusation carries a genuine proof —
+    /// receivers accept it, and the ledger's quorum rule is what keeps
+    /// the lone framer harmless. Everywhere else the best a framer can
+    /// do is ship a proof ground against the wrong input, which
+    /// receivers reject outright.
+    fn frame_audits(&mut self, out: &mut Outbox) {
+        let epoch = self.cur_epoch.epoch;
+        let beacon = self.cur_epoch.beacon;
+        let now = out.now_ms;
+        let my_id = self.info.id;
+        let chashes: Vec<Hash256> = self.store.keys().copied().collect();
+        for chash in chashes {
+            let fellows: Vec<NodeId> = self.store[&chash]
+                .members
+                .values()
+                .filter(|m| {
+                    m.info.id != my_id
+                        && now.saturating_sub(m.last_seen_ms) < self.cfg.suspicion_ms
+                })
+                .map(|m| m.info.id)
+                .collect();
+            for auditee in fellows {
+                let proof = audit_schedule::prove_audit(
+                    &self.key,
+                    epoch,
+                    &beacon,
+                    &chash,
+                    &auditee,
+                    self.cfg.audit_rate,
+                )
+                .unwrap_or_else(|| {
+                    let alpha = audit_schedule::audit_alpha(epoch, &beacon, &chash, &my_id);
+                    crate::crypto::vrf::prove(&self.key, &alpha).1
+                });
+                self.emit_verdict(out, &chash, epoch, auditee, false, proof);
+            }
+        }
+    }
+
+    /// Respond to an audit challenge: serve the named byte window of
+    /// our stored payload. Deliberately mirrors
+    /// [`Self::handle_get_frag`]'s fault gates — an audit response *is*
+    /// a miniature fragment serve, which is exactly why `refuse_frags`
+    /// withholders fail audits while their heartbeats stay green.
+    fn handle_audit_challenge(
+        &mut self,
+        out: &mut Outbox,
+        from: NodeId,
+        op: u64,
+        _epoch: u64,
+        chash: Hash256,
+        offset: u32,
+        len: u32,
+    ) {
+        if !self.cfg.audits {
+            return;
+        }
+        let refuse = self.fault.refuse_frags;
+        let mut index = 0;
+        let slice = self.store.get(&chash).and_then(|c| {
+            index = c.frag.index;
+            if c.payload_dropped || refuse {
+                return None; // claims to store but serves nothing
+            }
+            let off = offset as usize;
+            let want = (len as usize).min(crate::audit::MAX_AUDIT_SLICE);
+            let p = &c.frag.payload;
+            if off >= p.len() || want == 0 {
+                return None;
+            }
+            Some(p[off..(off + want).min(p.len())].to_vec())
+        });
+        if slice.is_some() {
+            self.metrics.audit_slices_served += 1;
+        }
+        out.send_p(from, Msg::AuditResponse { op, chash, index, slice }, Purpose::Audit);
+    }
+
+    fn handle_audit_response(
+        &mut self,
+        out: &mut Outbox,
+        from: NodeId,
+        op: u64,
+        chash: Hash256,
+        index: u64,
+        slice: Option<Vec<u8>>,
+    ) {
+        let Some(r) = self.audit_rounds.get_mut(&op) else { return };
+        if r.chash != chash || !r.awaiting.remove(&from) {
+            return;
+        }
+        // Wire decode already caps the slice length; in-process
+        // transports can deliver structs unencoded, so the cap is
+        // enforced here too. An over-long or wrong-length slice is no
+        // answer at all — only the exact challenged window counts.
+        let slice = match slice {
+            Some(s) if s.len() > crate::audit::MAX_AUDIT_SLICE => {
+                self.metrics.audit_oversize_dropped += 1;
+                None
+            }
+            Some(s) if s.len() != r.len as usize => None,
+            s => s,
+        };
+        r.responses.push((from, index, slice));
+        if r.awaiting.is_empty() {
+            self.finalize_audit_round(out, op);
+        }
+    }
+
+    /// Close one challenge wave and judge it. Designated auditees that
+    /// refused (or never answered — a heartbeat-green peer ignoring
+    /// data requests is the adversary this plane exists for) fail
+    /// outright; those that answered are judged by the GF(2) window
+    /// solver ([`crate::audit::verify`]) against the group's combined
+    /// equations, with our own stored slice as the trusted anchor.
+    /// Responders the system cannot pin down get *no* verdict — never
+    /// a false fail. Verdicts are signed, folded into the local
+    /// ledger, and gossiped to the group.
+    fn finalize_audit_round(&mut self, out: &mut Outbox, op: u64) {
+        let Some(r) = self.audit_rounds.remove(&op) else { return };
+        let mut eqs: Vec<SliceEq> = Vec::new();
+        if let Some(cs) = self.store.get(&r.chash) {
+            if !cs.payload_dropped {
+                let off = r.offset as usize;
+                let end = (off + r.len as usize).min(cs.frag.payload.len());
+                if off < end {
+                    eqs.push(SliceEq {
+                        who: None,
+                        index: cs.frag.index,
+                        slice: cs.frag.payload[off..end].to_vec(),
+                    });
+                }
+            }
+        }
+        for (who, index, slice) in &r.responses {
+            if let Some(s) = slice {
+                eqs.push(SliceEq { who: Some(*who), index: *index, slice: s.clone() });
+            }
+        }
+        let solved = crate::audit::verify::judge(&r.chash, self.cfg.k_inner, &eqs);
+        let mut verdicts: Vec<(NodeId, bool, VrfProof)> = Vec::new();
+        for (auditee, proof) in &r.auditees {
+            let answered = r
+                .responses
+                .iter()
+                .find(|(w, _, _)| w == auditee)
+                .map(|(_, _, s)| s.is_some());
+            let verdict = match answered {
+                // Refused, answered with a malformed slice, or never
+                // answered at all.
+                None | Some(false) => Some(false),
+                Some(true) => solved.get(auditee).copied(),
+            };
+            match verdict {
+                Some(pass) => {
+                    if pass {
+                        self.metrics.audit_passes += 1;
+                    } else {
+                        self.metrics.audit_fails += 1;
+                    }
+                    verdicts.push((*auditee, pass, *proof));
+                }
+                None => self.metrics.audit_undetermined += 1,
+            }
+        }
+        for (auditee, pass, proof) in verdicts {
+            self.emit_verdict(out, &r.chash, r.epoch, auditee, pass, proof);
+        }
+    }
+
+    /// Sign one verdict, fold it into the local ledger, and gossip it
+    /// to the chunk's alive group. Each receiver independently
+    /// re-checks membership, the signature and the VRF designation
+    /// proof before counting it ([`Self::audit_verdict_valid`]).
+    fn emit_verdict(
+        &mut self,
+        out: &mut Outbox,
+        chash: &Hash256,
+        epoch: u64,
+        auditee: NodeId,
+        pass: bool,
+        proof: VrfProof,
+    ) {
+        let mut v = AuditVerdict {
+            epoch,
+            chash: *chash,
+            auditee,
+            pass,
+            pk: self.key.public,
+            proof,
+            sig: [0u8; 64],
+        };
+        v.sig = self.key.sign(&v.signing_bytes());
+        self.audit_ledger.record(auditee, self.info.id, pass);
+        self.metrics.audit_verdicts_sent += 1;
+        let now = out.now_ms;
+        let my_id = self.info.id;
+        let targets: Vec<NodeId> = self
+            .store
+            .get(chash)
+            .map(|cs| {
+                cs.members
+                    .values()
+                    .filter(|m| {
+                        m.info.id != my_id
+                            && now.saturating_sub(m.last_seen_ms) < self.cfg.suspicion_ms
+                    })
+                    .map(|m| m.info.id)
+                    .collect()
+            })
+            .unwrap_or_default();
+        for t in targets {
+            out.send_p(t, Msg::AuditVerdict(v.clone()), Purpose::Audit);
+        }
+    }
+
+    /// Gossiped verdict admission: nothing moves the ledger until the
+    /// sender proves it speaks for its own key, sits in the chunk's
+    /// group, signed these exact verdict fields, and holds a valid VRF
+    /// designation for `(epoch, chash, auditee)` under the current or
+    /// immediately preceding beacon.
+    fn handle_audit_verdict(&mut self, from: NodeId, v: AuditVerdict) {
+        if !self.cfg.audits {
+            return;
+        }
+        if self.audit_verdict_valid(from, &v) {
+            self.metrics.audit_verdicts_accepted += 1;
+            self.audit_ledger.record(v.auditee, from, v.pass);
+        } else {
+            self.metrics.audit_verdicts_rejected += 1;
+        }
+    }
+
+    fn audit_verdict_valid(&self, from: NodeId, v: &AuditVerdict) -> bool {
+        let beacon = if v.epoch == self.cur_epoch.epoch {
+            self.cur_epoch.beacon
+        } else if let Some(prev) = self.prev_epoch.filter(|p| p.epoch == v.epoch) {
+            // Rounds finalized at a boundary gossip verdicts for the
+            // epoch that just sealed; one epoch of slack admits them.
+            prev.beacon
+        } else {
+            return false; // designation unverifiable: stale or future
+        };
+        // An auditee never testifies in its own case, and the sender
+        // must speak for the verdict's key.
+        if v.auditee == from || NodeId::from_pk(&v.pk) != from {
+            return false;
+        }
+        let Some(cs) = self.store.get(&v.chash) else { return false };
+        if !cs.members.contains_key(&from) {
+            return false; // only group members may judge the group
+        }
+        if !ed25519::verify(&v.pk, &v.signing_bytes(), &v.sig) {
+            return false;
+        }
+        audit_schedule::verify_audit(
+            &v.pk,
+            v.epoch,
+            &beacon,
+            &v.chash,
+            &v.auditee,
+            &v.proof,
+            self.cfg.audit_rate,
+        )
+    }
+
+    /// Peers this node's audit ledger currently marks suspect (sorted).
+    pub fn audit_suspects(&self) -> Vec<NodeId> {
+        self.audit_ledger.suspects()
+    }
+
+    pub fn is_audit_suspect(&self, id: &NodeId) -> bool {
+        self.audit_ledger.is_suspect(id)
+    }
+
+    /// Would a `GetFrag` for `chash` actually return payload bytes?
+    /// Scenario ground truth: holders that merely *claim* don't count.
+    pub fn serves_fragment(&self, chash: &Hash256) -> bool {
+        !self.fault.refuse_frags
+            && self
+                .store
+                .get(chash)
+                .is_some_and(|c| !c.payload_dropped && !c.frag.payload.is_empty())
+    }
+
     /// §4.3.4: when the alive group size drops below R, locate new
     /// members — deterministically sharded across alive members by rank
     /// so independent repair mostly avoids duplicate work (over-repair
@@ -1244,10 +1723,21 @@ impl VaultPeer {
     fn check_repair(&mut self, dir: &dyn Directory, out: &mut Outbox, chash: &Hash256) {
         let now = out.now_ms;
         let Some(cs) = self.store.get(chash) else { return };
+        // Audit-driven eviction (ISSUE 7): a peer the verdict ledger
+        // marks suspect heartbeats convincingly but provably withholds
+        // data, so it is treated as dead here — the deficit it opens
+        // is what recruits its replacement through the ordinary repair
+        // path. Never applied to self: a framed node must keep doing
+        // its own share of maintenance while its peers decide.
         let alive: Vec<&Member> = cs
             .members
             .values()
             .filter(|m| now.saturating_sub(m.last_seen_ms) < self.cfg.suspicion_ms)
+            .filter(|m| {
+                !self.cfg.audits
+                    || m.info.id == self.info.id
+                    || !self.audit_ledger.is_suspect(&m.info.id)
+            })
             .collect();
         // Retiring members (rotation grace window) serve reads but no
         // longer count toward the group target: the deficit they open
@@ -1299,6 +1789,7 @@ impl VaultPeer {
             .closest(&target, self.cfg.candidates)
             .into_iter()
             .filter(|p| !members.contains(&p.id) && p.id != self.info.id)
+            .filter(|p| !self.cfg.audits || !self.audit_ledger.is_suspect(&p.id))
             .take(self.cfg.repair_probe)
             .collect();
         if probes.is_empty() {
@@ -2493,5 +2984,334 @@ mod tests {
         // The torn snapshot is gone: only self remains in the view, and
         // the GetMembers resync is how the group view comes back.
         assert_eq!(a2.group_view(&second), vec![a2.id()]);
+    }
+
+    // ---- retrievability audit plane (ISSUE 7) ------------------------
+
+    use crate::codec::rateless::coeff_row;
+
+    fn audit_cfg() -> VaultConfig {
+        VaultConfig {
+            k_inner: 2,
+            r_inner: 4,
+            // r == n ⇒ selection probability 1: nobody ever rotates
+            // out, so epoch boundaries exercise only the audit plane.
+            n_nodes: 4,
+            claim_verify: ClaimVerify::Never,
+            epoch_placement: true,
+            audits: true,
+            audit_rate: 1.0,
+            audit_quorum: 2,
+            audit_fail_epochs: 2,
+            ..Default::default()
+        }
+    }
+
+    /// Fragment indices for `need` members, cycling the k=2 coefficient
+    /// row classes (0b01 / 0b10 / 0b11) so any member's row is spanned
+    /// by the others' and any two honest members can decode.
+    fn audit_indices(chash: &Hash256, need: usize) -> Vec<u64> {
+        let mut found: [Option<u64>; 3] = [None; 3];
+        let mut i = 0u64;
+        while found.iter().any(|f| f.is_none()) {
+            let w = coeff_row(chash, i, 2)[0];
+            let slot = (w - 1) as usize;
+            if found[slot].is_none() {
+                found[slot] = Some(i);
+            }
+            i += 1;
+        }
+        (0..need).map(|n| found[n % 3].unwrap()).collect()
+    }
+
+    /// `n` peers all holding genuine fragments of one real chunk, each
+    /// with the full group in its member view (installed at t=0).
+    fn audit_cluster(n: usize, cfg: &VaultConfig) -> (Vec<VaultPeer>, Hash256, Vec<u64>) {
+        let chunk: Vec<u8> = (0..400u32).map(|i| (i * 13 % 251) as u8).collect();
+        let chash = Hash256::of(&chunk);
+        let enc = InnerEncoder::new(chash, &chunk, cfg.k_inner);
+        let idxs = audit_indices(&chash, n);
+        let mut peers: Vec<VaultPeer> = (0..n).map(|t| mk_peer(t as u8 + 1, cfg)).collect();
+        let infos: Vec<PeerInfo> = peers.iter().map(|p| p.info).collect();
+        for (i, p) in peers.iter_mut().enumerate() {
+            let members: Vec<PeerInfo> = infos
+                .iter()
+                .enumerate()
+                .filter(|(j, _)| *j != i)
+                .map(|(_, m)| *m)
+                .collect();
+            let proof = some_proof(p);
+            p.force_store(0, chash, enc.fragment(idxs[i]), proof, members);
+        }
+        (peers, chash, idxs)
+    }
+
+    /// Feed every peer the same sealed epoch (each from its own chain
+    /// watcher, i.e. from itself) and collect the resulting sends as
+    /// `(from, to, msg)` triples.
+    fn announce_epoch(
+        peers: &mut [VaultPeer],
+        dir: &StubDir,
+        epoch: u64,
+        now: u64,
+    ) -> Vec<(NodeId, NodeId, Msg)> {
+        let mut q = Vec::new();
+        let tx = [epoch as u8; 32];
+        for p in peers.iter_mut() {
+            let beacon = crate::chain::next_beacon(&p.cur_epoch.beacon, epoch, &tx);
+            let id = p.id();
+            let mut out = Outbox::at(now);
+            let ann = EpochAnnounce { epoch, beacon, tx_digest: tx, n_nodes: 4 };
+            p.on_message(dir, &mut out, id, Msg::EpochUpdate(ann));
+            q.extend(out.sends.into_iter().map(|(to, m, _)| (id, to, m)));
+        }
+        q
+    }
+
+    /// Deliver queued messages between the peers until quiescent.
+    fn pump(peers: &mut [VaultPeer], dir: &StubDir, mut q: Vec<(NodeId, NodeId, Msg)>, now: u64) {
+        for _ in 0..64 {
+            if q.is_empty() {
+                break;
+            }
+            let mut next = Vec::new();
+            for (from, to, msg) in q {
+                let Some(p) = peers.iter_mut().find(|p| p.id() == to) else { continue };
+                let mut out = Outbox::at(now);
+                p.on_message(dir, &mut out, from, msg);
+                next.extend(out.sends.into_iter().map(|(t, m, _)| (to, t, m)));
+            }
+            q = next;
+        }
+    }
+
+    #[test]
+    fn withholder_fails_audits_and_is_suspected_by_group() {
+        let cfg = audit_cfg();
+        let dir = StubDir { peers: vec![] };
+        let (mut peers, _chash, _) = audit_cluster(4, &cfg);
+        peers[1].fault.refuse_frags = true;
+        let withholder = peers[1].id();
+        // Books for epoch N close at the N+1 boundary: epochs 1 and 2
+        // fail, the epoch-3 announce marks the suspect.
+        for e in 1..=3u64 {
+            let now = e * 1_000;
+            let q = announce_epoch(&mut peers, &dir, e, now);
+            pump(&mut peers, &dir, q, now);
+        }
+        for (i, p) in peers.iter().enumerate() {
+            if i == 1 {
+                continue;
+            }
+            assert!(p.is_audit_suspect(&withholder), "peer {i} must suspect the withholder");
+            assert_eq!(
+                p.audit_suspects(),
+                vec![withholder],
+                "peer {i} must suspect nobody else"
+            );
+            assert_eq!(p.metrics.audit_suspects_marked, 1);
+        }
+    }
+
+    #[test]
+    fn honest_cluster_audits_clean_no_suspects() {
+        let cfg = audit_cfg();
+        let dir = StubDir { peers: vec![] };
+        let (mut peers, _, _) = audit_cluster(4, &cfg);
+        for e in 1..=4u64 {
+            let now = e * 1_000;
+            let q = announce_epoch(&mut peers, &dir, e, now);
+            pump(&mut peers, &dir, q, now);
+        }
+        for (i, p) in peers.iter().enumerate() {
+            assert!(p.audit_suspects().is_empty(), "peer {i} suspects someone");
+            assert_eq!(p.metrics.audit_fails, 0, "peer {i} issued a fail verdict");
+            assert!(p.metrics.audit_rounds > 0, "peer {i} never audited");
+            assert!(p.metrics.audit_passes > 0, "peer {i} never passed anyone");
+        }
+    }
+
+    #[test]
+    fn framing_auditor_defeated_by_quorum() {
+        let mut cfg = audit_cfg();
+        cfg.audit_rate = 0.3; // the framer is not designated for every pair
+        let dir = StubDir { peers: vec![] };
+        let (mut peers, _, _) = audit_cluster(4, &cfg);
+        peers[3].fault.frame_audits = true;
+        for e in 1..=4u64 {
+            let now = e * 1_000;
+            let q = announce_epoch(&mut peers, &dir, e, now);
+            pump(&mut peers, &dir, q, now);
+        }
+        // The framer accuses all three fellows every epoch; whether a
+        // given accusation carried a genuine designation proof
+        // (accepted, but one distinct failer < quorum) or a misground
+        // one (rejected), no honest peer is ever marked.
+        for (i, p) in peers.iter().enumerate().take(3) {
+            assert!(p.audit_suspects().is_empty(), "peer {i}: an honest node was framed");
+            assert_eq!(p.metrics.audit_suspects_marked, 0);
+        }
+        let processed: u64 = peers
+            .iter()
+            .take(3)
+            .map(|p| p.metrics.audit_verdicts_accepted + p.metrics.audit_verdicts_rejected)
+            .sum();
+        assert!(processed > 0, "framing verdicts must have reached the group");
+    }
+
+    #[test]
+    fn bogus_audit_verdicts_rejected() {
+        let cfg = audit_cfg();
+        let dir = StubDir { peers: vec![] };
+        let (mut peers, chash, _) = audit_cluster(4, &cfg);
+        // Adopt epoch 1 everywhere, dropping the honest audit traffic:
+        // only hand-crafted verdicts reach peer 0 below.
+        let _ = announce_epoch(&mut peers, &dir, 1, 500);
+        let beacon = peers[0].cur_epoch.beacon;
+        let auditee = peers[2].id();
+        let proof =
+            audit_schedule::prove_audit(&peers[1].key, 1, &beacon, &chash, &auditee, 1.0)
+                .expect("rate 1.0 always designates");
+        let mut v = AuditVerdict {
+            epoch: 1,
+            chash,
+            auditee,
+            pass: false,
+            pk: peers[1].key.public,
+            proof,
+            sig: [0u8; 64],
+        };
+        v.sig = peers[1].key.sign(&v.signing_bytes());
+        let sender = peers[1].id();
+        let mut out = Outbox::at(600);
+
+        // Genuine verdict: accepted.
+        let (a, rest) = peers.split_at_mut(1);
+        let a = &mut a[0];
+        a.on_message(&dir, &mut out, sender, Msg::AuditVerdict(v.clone()));
+        assert_eq!(a.metrics.audit_verdicts_accepted, 1);
+
+        // Wrong epoch: designation unverifiable.
+        let mut bad = v.clone();
+        bad.epoch = 7;
+        a.on_message(&dir, &mut out, sender, Msg::AuditVerdict(bad));
+        // Tampered verdict bit: signature breaks.
+        let mut bad = v.clone();
+        bad.pass = true;
+        a.on_message(&dir, &mut out, sender, Msg::AuditVerdict(bad));
+        // Replayed by a different sender: pk↔id binding fails.
+        let other = rest[2].id();
+        a.on_message(&dir, &mut out, other, Msg::AuditVerdict(v.clone()));
+        // Self-verdict: the auditee may not testify in its own case.
+        let mut selfv = AuditVerdict {
+            epoch: 1,
+            chash,
+            auditee,
+            pass: true,
+            pk: rest[1].key.public,
+            proof: audit_schedule::prove_audit(&rest[1].key, 1, &beacon, &chash, &auditee, 1.0)
+                .unwrap(),
+            sig: [0u8; 64],
+        };
+        selfv.sig = rest[1].key.sign(&selfv.signing_bytes());
+        a.on_message(&dir, &mut out, auditee, Msg::AuditVerdict(selfv));
+
+        assert_eq!(a.metrics.audit_verdicts_rejected, 4);
+        assert_eq!(a.metrics.audit_verdicts_accepted, 1, "only the genuine verdict counted");
+        assert!(!a.is_audit_suspect(&auditee), "one failing auditor is below quorum");
+    }
+
+    #[test]
+    fn oversize_audit_response_is_no_answer() {
+        let cfg = audit_cfg();
+        let dir = StubDir { peers: vec![] };
+        let (mut peers, chash, _) = audit_cluster(4, &cfg);
+        let q = announce_epoch(&mut peers, &dir, 1, 1_000);
+        let a_id = peers[0].id();
+        let op = q
+            .iter()
+            .find_map(|(from, _, m)| match m {
+                Msg::AuditChallenge { op, .. } if *from == a_id => Some(*op),
+                _ => None,
+            })
+            .expect("peer 0 must issue challenges at rate 1.0");
+        let (b_id, c_id, d_id) = (peers[1].id(), peers[2].id(), peers[3].id());
+        let mut out = Outbox::at(1_100);
+        let huge = Some(vec![0u8; crate::audit::MAX_AUDIT_SLICE + 1]);
+        peers[0].on_message(
+            &dir,
+            &mut out,
+            b_id,
+            Msg::AuditResponse { op, chash, index: 5, slice: huge },
+        );
+        assert_eq!(peers[0].metrics.audit_oversize_dropped, 1);
+        for id in [c_id, d_id] {
+            peers[0].on_message(
+                &dir,
+                &mut out,
+                id,
+                Msg::AuditResponse { op, chash, index: 0, slice: None },
+            );
+        }
+        // Round closed: all three designated auditees answered with
+        // nothing usable — all fail, none pass.
+        assert_eq!(peers[0].metrics.audit_fails, 3);
+        assert_eq!(peers[0].metrics.audit_passes, 0);
+    }
+
+    #[test]
+    fn audits_off_produces_no_audit_traffic() {
+        let mut cfg = audit_cfg();
+        cfg.audits = false;
+        let dir = StubDir { peers: vec![] };
+        let (mut peers, _, _) = audit_cluster(4, &cfg);
+        let before: Vec<u64> = peers.iter().map(|p| p.next_op).collect();
+        let q = announce_epoch(&mut peers, &dir, 1, 1_000);
+        assert!(
+            q.iter()
+                .all(|(_, _, m)| !matches!(m, Msg::AuditChallenge { .. } | Msg::AuditVerdict(_))),
+            "audits off must emit no audit messages"
+        );
+        for (p, b) in peers.iter().zip(before) {
+            assert_eq!(p.next_op, b, "audits off must not consume op ids");
+            assert_eq!(p.metrics.audit_rounds, 0);
+        }
+    }
+
+    #[test]
+    fn audit_suspect_opens_repair_deficit_and_replacement_joins() {
+        let cfg = audit_cfg();
+        let (mut peers, chash, _) = audit_cluster(4, &cfg);
+        peers[1].fault.refuse_frags = true;
+        let withholder = peers[1].id();
+        // A fresh candidate outside the group, offered by the directory
+        // and participating in the epoch announces.
+        let joiner = mk_peer(9, &cfg);
+        let joiner_id = joiner.id();
+        let dir = StubDir { peers: vec![joiner.info] };
+        peers.push(joiner);
+        for e in 1..=3u64 {
+            let now = e * 1_000;
+            let q = announce_epoch(&mut peers, &dir, e, now);
+            pump(&mut peers, &dir, q, now);
+        }
+        assert!(peers[0].is_audit_suspect(&withholder));
+        // Maintenance tick: the suspect no longer counts toward R, the
+        // deficit shards to exactly one initiator, and the candidate
+        // reconstructs from the remaining honest fragments.
+        let mut q = Vec::new();
+        for p in peers.iter_mut() {
+            let id = p.id();
+            let mut out = Outbox::at(4_000);
+            p.on_timer(&dir, &mut out, TimerKind::Tick);
+            q.extend(out.sends.into_iter().map(|(to, m, _)| (id, to, m)));
+        }
+        pump(&mut peers, &dir, q, 4_000);
+        let initiated: u64 = peers.iter().map(|p| p.metrics.repairs_initiated).sum();
+        assert!(initiated >= 1, "suspect exclusion must open a repair deficit");
+        let joined = peers.iter().find(|p| p.id() == joiner_id).unwrap();
+        assert_eq!(joined.stored_chunks(), 1, "replacement must reconstruct and join");
+        assert_eq!(joined.metrics.repairs_joined, 1);
+        assert!(joined.serves_fragment(&chash));
     }
 }

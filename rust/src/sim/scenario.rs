@@ -94,6 +94,22 @@ pub enum Fault {
     /// upgrade wave): each peer in turn crash-restarts and recovers
     /// from its WAL before the next goes down.
     RegionRestart { region: u8, torn: bool },
+    /// Turn `members` holders of one chunk's group into *withholders*
+    /// (ISSUE 7): they heartbeat honestly and answer every control
+    /// message but refuse to serve fragment reads — the
+    /// liveness-passing retrievability failure the audit plane exists
+    /// to catch. Unlike [`Fault::SilentGroup`] (dead-looking but
+    /// serving), these look alive while being useless.
+    WithholdGroup { object: usize, chunk: usize, members: usize },
+    /// Make `members` holders of one chunk's group Byzantine
+    /// *auditors* (ISSUE 7): each epoch they broadcast fail verdicts
+    /// against every fellow, trying to frame honest nodes into
+    /// eviction. The quorum rule must hold the line.
+    FrameAudits { object: usize, chunk: usize, members: usize },
+    /// Crash `count` live holders of one chunk's group that are *not*
+    /// withholding or framing — thins the honest remainder so audit
+    /// load and repair interact under churn.
+    CrashHonestHolders { object: usize, chunk: usize, count: usize },
 }
 
 /// An invariant evaluated at the end of a phase.
@@ -118,6 +134,26 @@ pub enum Check {
     /// either way, so a fixed-placement twin can record its (worse)
     /// residency with `frac = 1.0` for comparison.
     ByzResidencyAtMost { object: usize, chunk: usize, frac: f64 },
+    /// Audit-driven detection (ISSUE 7): every live withholding peer
+    /// (`refuse_frags`) must be audit-suspected by at least
+    /// `min_suspecters` live honest peers. The observed
+    /// (withholder, suspecter-count) tallies land in
+    /// [`PhaseOutcome::suspect_pairs`] and the fingerprint.
+    WithholdersSuspected { min_suspecters: usize },
+    /// Framing resistance (ISSUE 7): no live honest
+    /// (non-withholding) peer may appear in *any* live peer's audit
+    /// suspect list — the zero-false-positive contract.
+    NoHonestSuspected,
+    /// Retrievability ground truth: the number of live holders that
+    /// would actually serve this chunk's fragment on request must be
+    /// within `[min, max]`. Distinct from the durability probe
+    /// ([`Check::NoChunkBelowDecodeThreshold`]), which counts stored
+    /// fragments and cannot see withholding.
+    ServingHoldersWithin { object: usize, chunk: usize, min: usize, max: usize },
+    /// Audit-plane load guard: total repairs initiated cluster-wide
+    /// since the start of the run stays at or below this budget —
+    /// audits must not thrash the repair path.
+    RepairsInitiatedAtMost(u64),
 }
 
 /// A timed phase: inject, advance virtual time, assert.
@@ -155,6 +191,13 @@ pub struct ScenarioSpec {
     /// Rotation grace window handed to `VaultConfig` when `epoch_ms`
     /// is set.
     pub rotation_grace_ms: u64,
+    /// Retrievability audit plane (ISSUE 7; requires `epoch_ms` — the
+    /// schedule is derived from the epoch beacon). Off by default so
+    /// every pre-audit scenario fingerprint is byte-identical.
+    pub audits: bool,
+    /// Per-(chunk, fellow) auditor designation probability when
+    /// `audits` is on.
+    pub audit_rate: f64,
     pub phases: Vec<Phase>,
 }
 
@@ -173,8 +216,20 @@ impl ScenarioSpec {
             batched_maint: true,
             epoch_ms: 0,
             rotation_grace_ms: 20_000,
+            audits: false,
+            audit_rate: 0.25,
             phases: Vec::new(),
         }
+    }
+
+    /// Enable the retrievability audit plane (ISSUE 7) at the given
+    /// auditor designation rate. Meaningful only together with
+    /// [`ScenarioSpec::epoch_rotation`]: challenges are scheduled at
+    /// epoch boundaries from the sealed beacon.
+    pub fn audits(mut self, rate: f64) -> Self {
+        self.audits = true;
+        self.audit_rate = rate;
+        self
     }
 
     /// Enable the epoch chain: placement anchored to `(epoch, beacon)`,
@@ -234,6 +289,12 @@ pub struct PhaseOutcome {
     pub restarts: usize,
     pub wal_replayed: u64,
     pub wal_torn_bytes: u64,
+    /// Audit-plane tallies (ISSUE 7; zero when no audit checks ran):
+    /// total (withholder, suspecter) pairs counted by the phase's
+    /// [`Check::WithholdersSuspected`], and cluster-wide repairs
+    /// initiated as sampled by [`Check::RepairsInitiatedAtMost`].
+    pub suspect_pairs: usize,
+    pub repairs_initiated: u64,
 }
 
 /// Full scenario result.
@@ -275,6 +336,8 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
     cfg.vault.batched_maint = spec.batched_maint;
     cfg.epoch_ms = spec.epoch_ms;
     cfg.vault.rotation_grace_ms = spec.rotation_grace_ms;
+    cfg.vault.audits = spec.audits;
+    cfg.vault.audit_rate = spec.audit_rate;
     cfg.vault.heartbeat_ms = 5_000;
     cfg.vault.suspicion_ms = 15_000;
     cfg.vault.tick_ms = 5_000;
@@ -521,6 +584,35 @@ fn inject_fault<N: ClusterRuntime>(
                 }
             }
         }
+        Fault::WithholdGroup { object, chunk, members } => {
+            let chash = chunk_of(corpus, *object, *chunk);
+            for i in holders(&cluster.net, &chash).into_iter().take(*members) {
+                cluster.net.peer_mut(i).fault.refuse_frags = true;
+                *fp = fold(*fp, i as u64 ^ 0x3417);
+            }
+        }
+        Fault::FrameAudits { object, chunk, members } => {
+            let chash = chunk_of(corpus, *object, *chunk);
+            for i in holders(&cluster.net, &chash).into_iter().take(*members) {
+                cluster.net.peer_mut(i).fault.frame_audits = true;
+                *fp = fold(*fp, i as u64 ^ 0xF4A3);
+            }
+        }
+        Fault::CrashHonestHolders { object, chunk, count } => {
+            let chash = chunk_of(corpus, *object, *chunk);
+            let mut killed = 0usize;
+            for i in holders(&cluster.net, &chash) {
+                if killed >= *count {
+                    break;
+                }
+                let p = cluster.net.peer(i);
+                if cluster.net.is_up(i) && !p.fault.refuse_frags && !p.fault.frame_audits {
+                    cluster.net.kill(i);
+                    *fp = fold(*fp, i as u64 ^ 0xCA11);
+                    killed += 1;
+                }
+            }
+        }
     }
 }
 
@@ -665,6 +757,73 @@ fn run_check<N: ClusterRuntime>(
                 outcome.failures.push(format!(
                     "byzantine residency {byz}/{total} = {residency:.2} exceeds {frac}"
                 ));
+            }
+        }
+        Check::WithholdersSuspected { min_suspecters } => {
+            let n = cluster.net.len();
+            let withholders: Vec<(usize, NodeId)> = (0..n)
+                .filter(|&i| cluster.net.is_up(i) && cluster.net.peer(i).fault.refuse_frags)
+                .map(|i| (i, cluster.net.peer(i).id()))
+                .collect();
+            for (wi, wid) in &withholders {
+                let suspecters = (0..n)
+                    .filter(|&i| i != *wi && cluster.net.is_up(i))
+                    .filter(|&i| !cluster.net.peer(i).fault.refuse_frags)
+                    .filter(|&i| cluster.net.peer(i).is_audit_suspect(wid))
+                    .count();
+                outcome.suspect_pairs += suspecters;
+                *fp = fold(*fp, suspecters as u64 ^ 0x5059);
+                if suspecters < *min_suspecters {
+                    outcome.failures.push(format!(
+                        "withholder #{wi}: suspected by {suspecters} peers, need {min_suspecters}"
+                    ));
+                }
+            }
+        }
+        Check::NoHonestSuspected => {
+            let n = cluster.net.len();
+            for i in 0..n {
+                if !cluster.net.is_up(i) {
+                    continue;
+                }
+                for s in cluster.net.peer(i).audit_suspects() {
+                    *fp = fold_hash(*fp, &s.0);
+                    let framed_honest = (0..n).any(|j| {
+                        cluster.net.is_up(j)
+                            && cluster.net.peer(j).id() == s
+                            && !cluster.net.peer(j).fault.refuse_frags
+                    });
+                    if framed_honest {
+                        outcome
+                            .failures
+                            .push(format!("peer #{i} audit-suspects an honest node ({s:?})"));
+                    }
+                }
+            }
+        }
+        Check::ServingHoldersWithin { object, chunk, min, max } => {
+            let chash = chunk_of(corpus, *object, *chunk);
+            let serving = (0..cluster.net.len())
+                .filter(|&i| cluster.net.is_up(i))
+                .filter(|&i| cluster.net.peer(i).serves_fragment(&chash))
+                .count();
+            *fp = fold(*fp, serving as u64 ^ 0x5E4F);
+            if serving < *min || serving > *max {
+                outcome
+                    .failures
+                    .push(format!("serving holders {serving} outside [{min}, {max}]"));
+            }
+        }
+        Check::RepairsInitiatedAtMost(limit) => {
+            let total: u64 = (0..cluster.net.len())
+                .map(|i| cluster.net.peer(i).metrics.repairs_initiated)
+                .sum();
+            outcome.repairs_initiated = total;
+            *fp = fold(*fp, total);
+            if total > *limit {
+                outcome
+                    .failures
+                    .push(format!("repairs initiated {total} exceeds budget {limit}"));
             }
         }
         Check::GroupsRecoveredTo(frac) => {

@@ -9,7 +9,9 @@ use vault::crypto::ed25519::SigningKey;
 use vault::crypto::vrf;
 use vault::crypto::Hash256;
 use vault::dht::{NodeId, PeerInfo};
-use vault::proto::messages::{BatchClaim, Claim, EpochAnnounce, HeartbeatBatch, MemberDelta, Msg};
+use vault::proto::messages::{
+    AuditVerdict, BatchClaim, Claim, EpochAnnounce, HeartbeatBatch, MemberDelta, Msg,
+};
 use vault::util::rng::Rng;
 use vault::wire::{Decode, Encode, WireError};
 
@@ -116,7 +118,39 @@ fn all_messages() -> Vec<Msg> {
         Msg::FindNodeReply { op: 6, target: chash, closer: vec![sample_peer(9)] },
         Msg::Ping { op: 7 },
         Msg::Pong { op: 7 },
+        // Retrievability audit plane (ISSUE 7): challenge, both
+        // response arms, and a signed verdict — these inherit the full
+        // truncation / bit-flip / garbage suite like every variant.
+        Msg::AuditChallenge { op: 8, epoch: 41, chash, offset: 512, len: 64 },
+        Msg::AuditResponse { op: 8, chash, index: 11, slice: Some(vec![0xEE; 64]) },
+        Msg::AuditResponse { op: 8, chash, index: 0, slice: None },
+        Msg::AuditVerdict(AuditVerdict {
+            epoch: 41,
+            chash,
+            auditee: sample_peer(2).id,
+            pass: false,
+            pk: sk.public,
+            proof,
+            sig: [0x31; 64],
+        }),
     ]
+}
+
+#[test]
+fn hostile_audit_slice_capped_at_decode() {
+    // A Byzantine responder controls the slice length field; the codec
+    // must accept exactly up to MAX_AUDIT_SLICE and refuse one byte
+    // more, so no handler ever sees an unbounded allocation.
+    let chash = Hash256::of(b"prop-wire-audit-cap");
+    let max = vault::audit::MAX_AUDIT_SLICE;
+    let at_cap = Msg::AuditResponse { op: 1, chash, index: 0, slice: Some(vec![0x11; max]) };
+    let got = Msg::from_bytes(&at_cap.to_bytes()).expect("slice at the cap must decode");
+    assert_eq!(got, at_cap);
+    let over = Msg::AuditResponse { op: 1, chash, index: 0, slice: Some(vec![0x11; max + 1]) };
+    match Msg::from_bytes(&over.to_bytes()) {
+        Err(WireError::TooLarge(n)) => assert_eq!(n, max + 1),
+        other => panic!("oversize audit slice decoded to {other:?}"),
+    }
 }
 
 #[test]

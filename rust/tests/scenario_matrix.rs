@@ -418,6 +418,156 @@ fn scenario_power_cycle_storm_mid_rotation() {
 }
 
 #[test]
+fn scenario_withhold_cluster_uncaught_without_audits() {
+    // ISSUE 7 regression (the gap the audit plane closes): six holders
+    // of one chunk's group withhold fragments while heartbeating
+    // honestly. The liveness plane sees nothing — zero repairs are ever
+    // initiated — and the durability probe (stored fragments) stays
+    // green the whole time, because the withholders *do* store their
+    // fragments. Then a correlated crash of eight honest holders drops
+    // the chunk's serving set below the decode threshold (k=8): the
+    // object is unrecoverable through reads, yet the durability metric
+    // still reports ≥ k "surviving" fragments. Retrievability rot is
+    // invisible to every pre-audit signal.
+    let spec = ScenarioSpec::small("withhold_uncaught", 2323, 48)
+        .phase(
+            "cluster-withholds-silently",
+            vec![Fault::WithholdGroup { object: 0, chunk: 0, members: 6 }],
+            90_000,
+            vec![
+                Check::NoChunkBelowDecodeThreshold,
+                Check::ServingHoldersWithin { object: 0, chunk: 0, min: 8, max: 15 },
+                Check::RepairsInitiatedAtMost(0),
+                Check::AllObjectsReadable,
+            ],
+        )
+        .phase(
+            "honest-remainder-crashes",
+            vec![Fault::CrashHonestHolders { object: 0, chunk: 0, count: 8 }],
+            90_000,
+            vec![
+                // The irony assertion: stored-fragment durability still
+                // passes while the serving set is below decode reach.
+                Check::NoChunkBelowDecodeThreshold,
+                Check::ServingHoldersWithin { object: 0, chunk: 0, min: 0, max: 9 },
+            ],
+        );
+    run_deterministic(&spec);
+}
+
+#[test]
+fn scenario_withhold_cluster_caught_with_audits() {
+    // ISSUE 7 acceptance: the same withholding cluster under the audit
+    // plane. The phase advance is the detection bound — 260 s crosses
+    // at most four 60 s epoch boundaries, within which every withholder
+    // must be audit-suspected by at least 3 live honest peers (books
+    // for epoch N close at the N+1 boundary; two failed epochs reach
+    // the streak threshold at the third). Eviction from the alive set
+    // opens the deficit, repair recruits replacements that reconstruct
+    // from the 14 honest servers, and the serving set recovers — so
+    // the phase-two crash of eight honest holders, fatal in the
+    // uncaught twin, is absorbed here. Zero honest nodes suspected at
+    // every checkpoint.
+    let spec = ScenarioSpec::small("withhold_caught", 2323, 48)
+        .epoch_rotation(60_000, 20_000)
+        .audits(0.5)
+        .phase(
+            "audits-detect-and-evict",
+            vec![Fault::WithholdGroup { object: 0, chunk: 0, members: 6 }],
+            260_000,
+            vec![
+                Check::WithholdersSuspected { min_suspecters: 3 },
+                Check::NoHonestSuspected,
+                Check::ServingHoldersWithin { object: 0, chunk: 0, min: 16, max: 48 },
+                Check::AllObjectsReadable,
+            ],
+        )
+        .phase(
+            "honest-crash-now-survivable",
+            vec![Fault::CrashHonestHolders { object: 0, chunk: 0, count: 8 }],
+            120_000,
+            vec![
+                Check::NoChunkBelowDecodeThreshold,
+                Check::NoHonestSuspected,
+                Check::GroupsRecoveredTo(0.7),
+                Check::AllObjectsReadable,
+            ],
+        );
+    let report = run_deterministic(&spec);
+    assert!(
+        report.phases[0].suspect_pairs >= 6 * 3,
+        "all six withholders must be broadly suspected (pairs={})",
+        report.phases[0].suspect_pairs
+    );
+}
+
+#[test]
+fn scenario_audit_framing_attempt() {
+    // ISSUE 7 acceptance: a Byzantine auditor broadcasts fail verdicts
+    // against every fellow on every chunk it holds, every epoch —
+    // genuine designation proofs when the VRF drew it, misground proofs
+    // otherwise. Receivers reject the misground ones outright and the
+    // quorum-of-distinct-auditors rule (2 > one framer) holds the line
+    // on the rest: across four boundaries no honest node is ever
+    // suspected, so the framer never redirects repair.
+    let spec = ScenarioSpec::small("audit_framing", 2424, 48)
+        .epoch_rotation(60_000, 20_000)
+        .audits(0.5)
+        .phase(
+            "framer-accuses-everyone",
+            vec![Fault::FrameAudits { object: 0, chunk: 0, members: 1 }],
+            260_000,
+            vec![
+                Check::NoHonestSuspected,
+                Check::AllObjectsReadable,
+                Check::GroupsRecoveredTo(0.8),
+            ],
+        );
+    let report = run_deterministic(&spec);
+    assert_eq!(
+        report.phases[0].suspect_pairs, 0,
+        "no withholders exist, so no suspect pairs may be counted"
+    );
+}
+
+#[test]
+fn scenario_audit_load_under_churn_and_rotation() {
+    // ISSUE 7 acceptance: the audit plane riding two stake-churn waves
+    // across rotation boundaries. Departing peers may eat one epoch of
+    // non-response fail verdicts before suspicion drops them from the
+    // schedule — that must never reach the two-epoch streak on a *live*
+    // honest peer, fresh joiners must come up clean, and groups must
+    // still converge under the combined audit + churn + rotation load.
+    let spec = ScenarioSpec::small("audit_churn_rotation", 2525, 48)
+        .epoch_rotation(60_000, 20_000)
+        .audits(0.25)
+        .phase(
+            "wave-1",
+            vec![Fault::StakeChurn { count: 4 }],
+            70_000,
+            vec![Check::NoHonestSuspected],
+        )
+        .phase(
+            "wave-2",
+            vec![Fault::StakeChurn { count: 4 }],
+            70_000,
+            vec![Check::NoHonestSuspected],
+        )
+        .phase(
+            "settle",
+            vec![],
+            70_000,
+            vec![
+                Check::AllObjectsReadable,
+                Check::GroupsRecoveredTo(0.8),
+                Check::NoHonestSuspected,
+            ],
+        );
+    let report = run_deterministic(&spec);
+    assert_eq!(report.final_peers, 48 + 8);
+}
+
+#[test]
 fn scenario_thousand_node_burst() {
     // Scale: 1k peers over 8 shard queues. ClaimVerify::Never is the
     // documented large-cluster measurement knob (proto::ClaimVerify);
