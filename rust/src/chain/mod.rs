@@ -21,7 +21,10 @@ pub mod ledger;
 
 pub use ledger::{ChainTx, EpochView, Ledger, EPOCH_HEADER_BYTES, GENESIS_STAKE};
 
+use crate::crypto::ed25519::{self, SigningKey};
 use crate::crypto::sha2::{Digest, Sha256};
+use crate::dht::NodeId;
+use crate::proto::messages::EpochAnnounce;
 
 /// Beacon of the genesis view (epoch 0): a fixed public constant, so
 /// every node starts the hash chain from the same anchor.
@@ -46,6 +49,83 @@ pub fn next_beacon(prev: &[u8; 32], epoch: u64, tx_digest: &[u8; 32]) -> [u8; 32
     h.finalize()
 }
 
+/// An [`EpochAnnounce`] bound to its announcer (ISSUE 8): the Ed25519
+/// signature over [`Self::signing_bytes`] commits the key to exactly
+/// one `(beacon, tx_digest, n_nodes)` view of each epoch. Announces
+/// gossiped between peers travel in this form so that *conflicting*
+/// announces become transferable evidence (see
+/// [`EquivocationEvidence`]) rather than a he-said-she-said.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SignedAnnounce {
+    pub ann: EpochAnnounce,
+    /// Announcer public key; the culprit id is `NodeId::from_pk(pk)`.
+    pub pk: [u8; 32],
+    /// Ed25519 signature over [`Self::signing_bytes`].
+    pub sig: [u8; 64],
+}
+
+crate::wire_struct!(SignedAnnounce { ann, pk, sig });
+
+impl SignedAnnounce {
+    /// Domain-tagged preimage binding every announce field.
+    pub fn signing_bytes(ann: &EpochAnnounce) -> Vec<u8> {
+        let mut v = Vec::with_capacity(23 + 8 + 32 + 32 + 8);
+        v.extend_from_slice(b"vault-epoch-announce-v1");
+        v.extend_from_slice(&ann.epoch.to_le_bytes());
+        v.extend_from_slice(&ann.beacon);
+        v.extend_from_slice(&ann.tx_digest);
+        v.extend_from_slice(&ann.n_nodes.to_le_bytes());
+        v
+    }
+
+    pub fn sign(key: &SigningKey, ann: EpochAnnounce) -> Self {
+        let sig = key.sign(&Self::signing_bytes(&ann));
+        SignedAnnounce { ann, pk: key.public, sig }
+    }
+
+    pub fn verify(&self) -> bool {
+        ed25519::verify(&self.pk, &Self::signing_bytes(&self.ann), &self.sig)
+    }
+
+    pub fn announcer(&self) -> NodeId {
+        NodeId::from_pk(&self.pk)
+    }
+}
+
+/// Self-contained, gossipable proof of beacon equivocation: two
+/// announces for the **same epoch**, signed by the **same key**, with
+/// **conflicting content**. Any third party verifies it from the
+/// evidence alone — no trust in the reporter, no extra context — which
+/// is what lets a single honest observer quarantine the equivocator
+/// network-wide instead of merely distrusting it locally.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EquivocationEvidence {
+    pub a: SignedAnnounce,
+    pub b: SignedAnnounce,
+}
+
+crate::wire_struct!(EquivocationEvidence { a, b });
+
+impl EquivocationEvidence {
+    /// `Some(culprit)` iff the two halves are a valid equivocation:
+    /// same epoch, same signer, differing announce content, and both
+    /// signatures genuine. Forged signatures, mixed signers, mismatched
+    /// epochs, and identical (non-conflicting) announces all return
+    /// `None`.
+    pub fn verify(&self) -> Option<NodeId> {
+        if self.a.pk != self.b.pk || self.a.ann.epoch != self.b.ann.epoch {
+            return None;
+        }
+        if self.a.ann == self.b.ann {
+            return None; // same statement twice — no conflict
+        }
+        if !self.a.verify() || !self.b.verify() {
+            return None;
+        }
+        Some(self.a.announcer())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -64,5 +144,52 @@ mod tests {
         let mut g2 = g;
         g2[31] ^= 1;
         assert_ne!(b1, next_beacon(&g2, 1, &d), "prior beacon must bind");
+    }
+
+    fn ann(epoch: u64, beacon: u8) -> EpochAnnounce {
+        EpochAnnounce { epoch, beacon: [beacon; 32], tx_digest: [0xD1; 32], n_nodes: 64 }
+    }
+
+    #[test]
+    fn signed_announce_verifies_and_binds_fields() {
+        let key = SigningKey::from_seed(&[5; 32]);
+        let sa = SignedAnnounce::sign(&key, ann(3, 0xAA));
+        assert!(sa.verify());
+        assert_eq!(sa.announcer(), NodeId::from_pk(&key.public));
+        let mut tampered = sa.clone();
+        tampered.ann.epoch += 1;
+        assert!(!tampered.verify(), "epoch must be signature-bound");
+        let mut tampered = sa.clone();
+        tampered.ann.n_nodes ^= 1;
+        assert!(!tampered.verify(), "n_nodes must be signature-bound");
+        let mut tampered = sa;
+        tampered.sig[0] ^= 1;
+        assert!(!tampered.verify());
+    }
+
+    #[test]
+    fn equivocation_evidence_accepts_conflicts_and_rejects_forgeries() {
+        let key = SigningKey::from_seed(&[5; 32]);
+        let other = SigningKey::from_seed(&[6; 32]);
+        let a = SignedAnnounce::sign(&key, ann(3, 0xAA));
+        let b = SignedAnnounce::sign(&key, ann(3, 0xBB));
+        let ev = EquivocationEvidence { a: a.clone(), b: b.clone() };
+        assert_eq!(ev.verify(), Some(NodeId::from_pk(&key.public)));
+
+        // Same statement twice is not a conflict.
+        let dup = EquivocationEvidence { a: a.clone(), b: a.clone() };
+        assert_eq!(dup.verify(), None);
+        // Different epochs don't conflict.
+        let cross_epoch =
+            EquivocationEvidence { a: a.clone(), b: SignedAnnounce::sign(&key, ann(4, 0xBB)) };
+        assert_eq!(cross_epoch.verify(), None);
+        // Two different signers disagreeing is not equivocation.
+        let mixed =
+            EquivocationEvidence { a: a.clone(), b: SignedAnnounce::sign(&other, ann(3, 0xBB)) };
+        assert_eq!(mixed.verify(), None);
+        // A forged half invalidates the whole proof.
+        let mut forged_b = b;
+        forged_b.sig[10] ^= 1;
+        assert_eq!(EquivocationEvidence { a, b: forged_b }.verify(), None);
     }
 }

@@ -12,6 +12,133 @@ use std::collections::HashSet;
 
 pub const ALPHA: usize = 3; // lookup parallelism
 
+/// Outcome of a deterministic eclipse trial ([`eclipse_trial`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EclipseReport {
+    /// Lookups attempted by the victim.
+    pub lookups: u64,
+    /// Lookups whose converged result set contained at least one
+    /// honest peer (the availability proxy: an honest holder is
+    /// reachable through routing).
+    pub honest_reach: u64,
+    /// Sybil / honest contacts resident in the victim's table after
+    /// the poisoning flood.
+    pub sybils_resident: u64,
+    pub honest_resident: u64,
+}
+
+impl EclipseReport {
+    pub fn reach_frac(&self) -> f64 {
+        if self.lookups == 0 {
+            return 0.0;
+        }
+        self.honest_reach as f64 / self.lookups as f64
+    }
+}
+
+/// Deterministic routing-table-poisoning model (ISSUE 8), shared by
+/// the `Fault::Eclipse` scenario arm, `examples/eclipse_defense.rs`,
+/// and `vault bench-adversary`.
+///
+/// A victim first learns `n_honest` peers through authenticated
+/// exchanges (`touch_verified`), then an attacker gossips `n_sybil`
+/// sybil contacts — all minted in one region (a single hosting
+/// cluster) — `flood_rounds` times over. Sybil FIND_NODE replies
+/// return only fellow sybils; honest replies return honest routing
+/// knowledge. The report measures how often the victim's lookups can
+/// still reach *any* honest peer. With `guard` off the LRU table is
+/// progressively captured; with the bucket-diversity guard on, the
+/// region cap plus verified-contact retention keeps honest routes
+/// resident — eclipse would now require verified presence in every
+/// region, diversity the attacker must actually buy.
+pub fn eclipse_trial(
+    n_honest: usize,
+    n_sybil: usize,
+    flood_rounds: usize,
+    lookups: usize,
+    seed: u64,
+    guard: bool,
+) -> EclipseReport {
+    use crate::dht::routing::RoutingTable;
+    use crate::util::rng::Rng;
+
+    let mut rng = Rng::new(seed ^ 0xEC11_95E0);
+    let mk_peer = |rng: &mut Rng, region: u8| {
+        let mut pk = [0u8; 32];
+        rng.fill_bytes(&mut pk);
+        PeerInfo { id: NodeId::from_pk(&pk), pk, region }
+    };
+    let victim = mk_peer(&mut rng, 0);
+    let honest: Vec<PeerInfo> =
+        (0..n_honest).map(|i| mk_peer(&mut rng, (i % 5) as u8)).collect();
+    // Monoculture sybils: one region, zero diversity cost.
+    let sybils: Vec<PeerInfo> = (0..n_sybil).map(|_| mk_peer(&mut rng, 0)).collect();
+    let honest_ids: HashSet<NodeId> = honest.iter().map(|p| p.id).collect();
+
+    let mut table =
+        if guard { RoutingTable::with_guard(victim.id) } else { RoutingTable::new(victim.id) };
+    for h in &honest {
+        table.touch_verified(*h);
+    }
+    // The poisoning flood: gossiped (unauthenticated) sybil contacts,
+    // repeated so LRU tables are fully churned through.
+    for _ in 0..flood_rounds {
+        for s in &sybils {
+            table.touch(*s);
+        }
+    }
+
+    let mut report = EclipseReport::default();
+    for p in table.all() {
+        if honest_ids.contains(&p.id) {
+            report.honest_resident += 1;
+        } else {
+            report.sybils_resident += 1;
+        }
+    }
+
+    for _ in 0..lookups {
+        let mut target = [0u8; 32];
+        rng.fill_bytes(&mut target);
+        let target = Hash256(target);
+        let seeds = table.closest(&target, ALPHA);
+        if seeds.is_empty() {
+            report.lookups += 1;
+            continue;
+        }
+        let mut lookup = Lookup::new(target, seeds, 8);
+        let found = loop {
+            match lookup.next_action() {
+                LookupAction::Query(qs) => {
+                    for q in qs {
+                        if honest_ids.contains(&q.id) {
+                            // Honest node: answers from honest routing
+                            // knowledge (its own table is unpoisoned).
+                            let mut closer = honest.clone();
+                            closer.sort_by_key(|p| xor_distance(&p.id, &target));
+                            closer.truncate(20);
+                            lookup.on_reply(q.id, closer);
+                        } else {
+                            // Sybil: answers only with fellow sybils.
+                            let mut closer = sybils.clone();
+                            closer.sort_by_key(|p| xor_distance(&p.id, &target));
+                            closer.truncate(20);
+                            lookup.on_reply(q.id, closer);
+                        }
+                    }
+                }
+                LookupAction::Wait => unreachable!("synchronous driver"),
+                LookupAction::Done(found) => break found,
+            }
+        };
+        report.lookups += 1;
+        if found.iter().any(|p| honest_ids.contains(&p.id)) {
+            report.honest_reach += 1;
+        }
+    }
+    report
+}
+
 /// One in-flight iterative FIND_NODE lookup.
 #[derive(Debug)]
 pub struct Lookup {
@@ -226,5 +353,37 @@ mod tests {
             }
         }
         assert!(!done.unwrap().is_empty());
+    }
+
+    #[test]
+    fn eclipse_trial_guard_preserves_honest_reach() {
+        for seed in [1u64, 2] {
+            let off = eclipse_trial(100, 300, 3, 40, seed, false);
+            let on = eclipse_trial(100, 300, 3, 40, seed, true);
+            assert_eq!(off.lookups, 40);
+            assert_eq!(on.lookups, 40);
+            assert!(
+                on.honest_resident > off.honest_resident,
+                "guard must keep more honest contacts resident (on={} off={})",
+                on.honest_resident,
+                off.honest_resident
+            );
+            assert!(
+                on.reach_frac() > off.reach_frac(),
+                "guard must measurably improve honest reach (on={} off={})",
+                on.reach_frac(),
+                off.reach_frac()
+            );
+            assert!(on.reach_frac() >= 0.9, "guarded reach floor: {}", on.reach_frac());
+        }
+    }
+
+    #[test]
+    fn eclipse_trial_is_deterministic() {
+        let a = eclipse_trial(60, 120, 2, 10, 9, true);
+        let b = eclipse_trial(60, 120, 2, 10, 9, true);
+        assert_eq!(a.honest_reach, b.honest_reach);
+        assert_eq!(a.sybils_resident, b.sybils_resident);
+        assert_eq!(a.honest_resident, b.honest_resident);
     }
 }

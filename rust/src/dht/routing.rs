@@ -7,19 +7,47 @@
 
 use super::{xor_distance, NodeId, PeerInfo};
 use crate::crypto::Hash256;
+use crate::util::detmap::DetHashSet;
 
 pub const BUCKET_SIZE: usize = 20; // Kademlia k
+
+/// With the diversity guard on, at most this many contacts of one
+/// latency region may occupy a single bucket. An eclipse attacker
+/// spinning sybils from one hosting cluster caps out at a quarter of
+/// each bucket; filling a victim's table requires presence the
+/// attacker must actually buy in every region.
+pub const MAX_PER_REGION: usize = BUCKET_SIZE / 4;
 
 #[derive(Clone, Debug)]
 pub struct RoutingTable {
     local: NodeId,
     /// buckets[i] holds contacts whose XOR distance has i leading zeros.
     buckets: Vec<Vec<PeerInfo>>,
+    /// Bucket-diversity guard (ISSUE 8): per-region occupancy cap plus
+    /// verified-contact retention. Off by default — `new` preserves
+    /// the classic LRU table bit-for-bit.
+    guard: bool,
+    /// Contacts that completed an authenticated exchange (signed
+    /// heartbeat, verified claim). A merely-gossiped contact can never
+    /// evict one of these.
+    verified: DetHashSet<NodeId>,
 }
 
 impl RoutingTable {
     pub fn new(local: NodeId) -> Self {
-        RoutingTable { local, buckets: vec![Vec::new(); 257] }
+        RoutingTable {
+            local,
+            buckets: vec![Vec::new(); 257],
+            guard: false,
+            verified: DetHashSet::default(),
+        }
+    }
+
+    /// A table with the eclipse-resistance guard enabled.
+    pub fn with_guard(local: NodeId) -> Self {
+        let mut rt = Self::new(local);
+        rt.guard = true;
+        rt
     }
 
     pub fn local(&self) -> NodeId {
@@ -32,6 +60,20 @@ impl RoutingTable {
 
     /// Record contact with a peer (moves it to most-recently-seen).
     pub fn touch(&mut self, peer: PeerInfo) {
+        self.touch_inner(peer);
+    }
+
+    /// Record an *authenticated* contact: the peer proved key
+    /// possession to us, so (under the guard) it gains eviction
+    /// preference over gossiped-only contacts.
+    pub fn touch_verified(&mut self, peer: PeerInfo) {
+        if self.guard && peer.id != self.local {
+            self.verified.insert(peer.id);
+        }
+        self.touch_inner(peer);
+    }
+
+    fn touch_inner(&mut self, peer: PeerInfo) {
         if peer.id == self.local {
             return;
         }
@@ -42,8 +84,24 @@ impl RoutingTable {
             bucket.push(peer);
             return;
         }
+        if self.guard {
+            // Region cap: refuse the insert outright when this
+            // bucket already holds its quota from the peer's region.
+            let same_region = bucket.iter().filter(|p| p.region == peer.region).count();
+            if same_region >= MAX_PER_REGION {
+                return;
+            }
+        }
         if bucket.len() < BUCKET_SIZE {
             bucket.push(peer);
+        } else if self.guard {
+            // Evict the least-recently-seen *unverified* contact;
+            // if every resident proved its key, the newcomer waits
+            // (classic Kademlia long-lived bias, hardened).
+            if let Some(pos) = bucket.iter().position(|p| !self.verified.contains(&p.id)) {
+                bucket.remove(pos);
+                bucket.push(peer);
+            }
         } else {
             // Evict least-recently-seen (front). Production Kademlia
             // pings it first; our transports report failures directly
@@ -56,6 +114,7 @@ impl RoutingTable {
     pub fn remove(&mut self, id: &NodeId) {
         let idx = self.bucket_index(id);
         self.buckets[idx].retain(|p| p.id != *id);
+        self.verified.remove(id);
     }
 
     pub fn contains(&self, id: &NodeId) -> bool {
@@ -156,6 +215,94 @@ mod tests {
             rt.touch(peer(&mut rng));
             rt.touch(p); // keep refreshing
         }
+        assert!(rt.contains(&p.id));
+    }
+
+    fn peer_in_region(rng: &mut Rng, region: u8) -> PeerInfo {
+        let mut p = peer(rng);
+        p.region = region;
+        p
+    }
+
+    #[test]
+    fn guard_caps_contacts_per_region_per_bucket() {
+        let mut rng = Rng::new(104);
+        let local = peer(&mut rng);
+        let mut rt = RoutingTable::with_guard(local.id);
+        // A single-region sybil flood: every bucket must cap out at
+        // MAX_PER_REGION residents from that region.
+        for _ in 0..5000 {
+            rt.touch(peer_in_region(&mut rng, 3));
+        }
+        for idx in 0..257 {
+            let in_bucket: Vec<PeerInfo> =
+                rt.all().into_iter().filter(|p| rt.bucket_index(&p.id) == idx).collect();
+            let same: usize = in_bucket.iter().filter(|p| p.region == 3).count();
+            assert!(same <= MAX_PER_REGION, "bucket {idx} holds {same} region-3 contacts");
+        }
+        // An unguarded table takes the whole flood.
+        let mut legacy = RoutingTable::new(local.id);
+        let mut rng2 = Rng::new(104);
+        let _ = peer(&mut rng2); // consume the local draw
+        for _ in 0..5000 {
+            legacy.touch(peer_in_region(&mut rng2, 3));
+        }
+        assert!(legacy.len() > rt.len(), "guard must shrink a monoculture flood");
+    }
+
+    #[test]
+    fn guard_never_evicts_verified_for_gossiped() {
+        let mut rng = Rng::new(105);
+        let local = peer(&mut rng);
+        let mut rt = RoutingTable::with_guard(local.id);
+        // Seed verified honest contacts across all regions.
+        let honest: Vec<PeerInfo> =
+            (0..100).map(|i| peer_in_region(&mut rng, (i % 5) as u8)).collect();
+        for h in &honest {
+            rt.touch_verified(*h);
+        }
+        let resident_before: Vec<NodeId> =
+            honest.iter().map(|h| h.id).filter(|id| rt.contains(id)).collect();
+        assert!(!resident_before.is_empty());
+        // Gossiped sybil flood, spread over every region so the region
+        // cap alone doesn't stop it.
+        for i in 0..5000u32 {
+            rt.touch(peer_in_region(&mut rng, (i % 5) as u8));
+        }
+        for id in &resident_before {
+            assert!(rt.contains(id), "verified contact evicted by gossiped flood");
+        }
+        // The legacy table loses most verified residents to the same flood.
+        let mut legacy = RoutingTable::new(local.id);
+        for h in &honest {
+            legacy.touch(*h);
+        }
+        let mut rng3 = Rng::new(106);
+        for i in 0..5000u32 {
+            legacy.touch(peer_in_region(&mut rng3, (i % 5) as u8));
+        }
+        let survivors =
+            resident_before.iter().filter(|id| legacy.contains(id)).count();
+        assert!(
+            survivors < resident_before.len(),
+            "flood should displace unguarded contacts ({survivors} survived)"
+        );
+    }
+
+    #[test]
+    fn guard_still_refreshes_and_removes() {
+        let mut rng = Rng::new(107);
+        let local = peer(&mut rng);
+        let mut rt = RoutingTable::with_guard(local.id);
+        let p = peer(&mut rng);
+        rt.touch_verified(p);
+        rt.touch(p); // refresh of a resident is always allowed
+        assert!(rt.contains(&p.id));
+        rt.remove(&p.id);
+        assert!(!rt.contains(&p.id));
+        // After removal the verified mark is gone too: a full bucket
+        // of new arrivals can evict it if it ever returns unverified.
+        rt.touch(p);
         assert!(rt.contains(&p.id));
     }
 }

@@ -24,6 +24,14 @@
 //!                    withholder detection latency vs sampling rate,
 //!                    audit bytes/node/epoch, and the zero-false-
 //!                    positive count; emits `BENCH_audit.json`.
+//! * `bench-adversary` — adversarial resilience bench (ISSUE 8): the
+//!                    five fault families (eclipse, beacon
+//!                    equivocation, censorship, slow-loris, adaptive
+//!                    withholding) each run as a defenses-off /
+//!                    defenses-on twin, reporting the detection signal,
+//!                    the availability floor, the detection window, and
+//!                    the zero-false-greylist count; emits
+//!                    `BENCH_adversary.json`.
 //! * `tcp-demo`     — bring up a real-TCP localhost cluster and do one
 //!                    store/query round trip.
 //! * `sim`          — §6.1 durability simulations (fig4|fig5|fig6).
@@ -60,13 +68,14 @@ fn main() {
         "bench-epoch" => cmd_bench_epoch(&args),
         "bench-restart" => cmd_bench_restart(&args),
         "bench-audit" => cmd_bench_audit(&args),
+        "bench-adversary" => cmd_bench_adversary(&args),
         "tcp-demo" => cmd_tcp_demo(&args),
         "sim" => cmd_sim(&args),
         "analyze" => cmd_analyze(&args),
         "artifacts" => cmd_artifacts(&args),
         _ => {
             eprintln!(
-                "usage: vault <cluster|bench-ops|bench-codec|bench-maint|bench-epoch|bench-restart|bench-audit|tcp-demo|sim|analyze|artifacts> [--flags]\n\
+                "usage: vault <cluster|bench-ops|bench-codec|bench-maint|bench-epoch|bench-restart|bench-audit|bench-adversary|tcp-demo|sim|analyze|artifacts> [--flags]\n\
                  \n\
                  cluster     --peers 128 --objects 4 --size 262144 [--byzantine 0.1] [--churn 4]\n\
                  bench-ops   --peers 64 --ops 300 --inflight 32 --size 32768 [--sharded 0]\n\
@@ -80,6 +89,7 @@ fn main() {
                  \x20            [--out BENCH_restart.json]\n\
                  bench-audit [--smoke] [--peers 48] [--withhold 4] [--epochs 8]\n\
                  \x20            [--seed 7] [--out BENCH_audit.json]\n\
+                 bench-adversary [--smoke] [--seed 7] [--out BENCH_adversary.json]\n\
                  tcp-demo    --peers 8 --size 65536\n\
                  sim         --fig 4|5|6 [--nodes 100000] [--objects 1000] [--churn 2.0] [--years 1]\n\
                  analyze     [--n 80] [--k 32] [--churn-q 0.01] [--evict 0] [--steps 512]\n\
@@ -1182,6 +1192,278 @@ fn cmd_bench_audit(args: &Args) {
     println!(
         "audit plane: {} trials, {fp_total} false positives (must be 0) ({wall_secs:.1}s wall)",
         rates.len()
+    );
+}
+
+/// One adversarial fault family measured as a defenses-off /
+/// defenses-on twin (ISSUE 8).
+struct AdversaryRow {
+    family: &'static str,
+    /// What the detection signal counts for this family.
+    signal: &'static str,
+    signal_off: u64,
+    signal_on: u64,
+    avail_off_ppm: u64,
+    avail_on_ppm: u64,
+    /// Upper bound on detection latency: the phase window the signal
+    /// formed within.
+    window_ms: u64,
+    /// Honest peers greylisted or quarantined anywhere, summed over
+    /// both twins — the zero-false-greylist contract.
+    false_greylists: u64,
+}
+
+/// Availability floor for a phase: flash-crowd success fraction when a
+/// crowd ran, else full marks iff the `AllObjectsReadable` check held
+/// (a failed check fails the whole bench run loudly before this).
+fn adversary_avail_ppm(p: &vault::sim::scenario::PhaseOutcome) -> u64 {
+    let total = p.crowd_ok + p.crowd_failed;
+    if total > 0 {
+        p.crowd_ok as u64 * 1_000_000 / total as u64
+    } else {
+        1_000_000
+    }
+}
+
+fn run_adversary_twin(
+    family: &'static str,
+    signal: &'static str,
+    mk: &dyn Fn(bool) -> vault::sim::scenario::ScenarioSpec,
+    pick: &dyn Fn(&vault::sim::scenario::PhaseOutcome) -> u64,
+) -> AdversaryRow {
+    use vault::sim::scenario::run_scenario;
+    let (off_spec, on_spec) = (mk(false), mk(true));
+    let window_ms = off_spec.phases.iter().map(|p| p.advance_ms).sum();
+    let off = run_scenario(&off_spec);
+    let on = run_scenario(&on_spec);
+    for r in [&off, &on] {
+        assert!(
+            r.ok(),
+            "adversary bench `{}` violated invariants:\n  {}",
+            r.name,
+            r.failures().join("\n  ")
+        );
+    }
+    let last_off = off.phases.last().expect("twin has a phase");
+    let last_on = on.phases.last().expect("twin has a phase");
+    AdversaryRow {
+        family,
+        signal,
+        signal_off: pick(last_off),
+        signal_on: pick(last_on),
+        avail_off_ppm: adversary_avail_ppm(last_off),
+        avail_on_ppm: adversary_avail_ppm(last_on),
+        window_ms,
+        false_greylists: (last_off.honest_greylisted + last_on.honest_greylisted) as u64,
+    }
+}
+
+/// Adversarial resilience plane benchmark (ISSUE 8): every fault family
+/// runs as an off/on twin over the same seed and fault schedule; the
+/// defense must strictly improve the family's detection signal while
+/// never greylisting an honest peer. The five rows, the availability
+/// floors, and the zero-false-greylist total land in
+/// `BENCH_adversary.json` for CI schema validation.
+fn cmd_bench_adversary(args: &Args) {
+    use vault::sim::scenario::{Check, Fault, ScenarioSpec};
+    let smoke = args.bool("smoke");
+    let seed = args.get("seed", 7u64);
+    let out = args.str("out", "BENCH_adversary.json");
+    // Smoke trims the measurement load (fewer lookups / readers), never
+    // the fault intensity — the defenses face the same adversary.
+    let lookups = if smoke { 24 } else { 40usize };
+    let readers = if smoke { 8 } else { 16usize };
+    println!(
+        "bench-adversary{}: 5 fault families, off/on twins, seed {seed}",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let wall = Timer::start();
+    let mut rows: Vec<AdversaryRow> = Vec::new();
+
+    rows.push(run_adversary_twin(
+        "eclipse",
+        "honest_reach_ppm",
+        &|ph| {
+            let mut s = ScenarioSpec::small("bench_eclipse", seed ^ 0xEC5E, 100);
+            if ph {
+                s = s.peer_health();
+            }
+            s.phase(
+                "poison-and-measure",
+                vec![Fault::Eclipse { sybils: 300, lookups }],
+                20_000,
+                vec![Check::AllObjectsReadable, Check::NoHonestGreylisted],
+            )
+        },
+        &|p| p.eclipse_reach_ppm,
+    ));
+
+    rows.push(run_adversary_twin(
+        "beacon_equivocate",
+        "quarantining_observers",
+        &|ph| {
+            let mut s = ScenarioSpec::small("bench_equivocate", seed ^ 0xE0C1, 40)
+                .epoch_rotation(60_000, 20_000);
+            if ph {
+                s = s.peer_health();
+            }
+            s.phase(
+                "fork-the-beacon",
+                vec![Fault::BeaconEquivocate],
+                30_000,
+                vec![
+                    Check::EquivocatorQuarantined { min_frac: if ph { 0.5 } else { 0.0 } },
+                    Check::NoHonestGreylisted,
+                    Check::AllObjectsReadable,
+                ],
+            )
+        },
+        &|p| p.quarantiners as u64,
+    ));
+
+    rows.push(run_adversary_twin(
+        "censor_object",
+        "audit_suspect_pairs",
+        &|ph| {
+            let mut s =
+                ScenarioSpec::small("bench_censor", seed ^ 0xCE45, 48).epoch_rotation(60_000, 20_000);
+            let mut checks = vec![Check::AllObjectsReadable];
+            if ph {
+                // The audit plane is the defense against polite refusal;
+                // the health plane rides along to prove the refusal
+                // produces zero offenses and zero greylists.
+                s = s.audits(0.5).peer_health();
+                checks.extend([
+                    Check::FaultedAuditSuspectersWithin { min: 3, max: 48 },
+                    Check::NoHonestSuspected,
+                    Check::NoHonestGreylisted,
+                    Check::HealthOffensesWithin { min: 0, max: 0 },
+                    Check::GreylistsWithin { min: 0, max: 0 },
+                ]);
+            } else {
+                checks.push(Check::FaultedAuditSuspectersWithin { min: 0, max: 0 });
+            }
+            s.phase(
+                "censor-one-chunk",
+                vec![Fault::CensorObject { object: 0, chunk: 0, members: 6 }],
+                260_000,
+                checks,
+            )
+        },
+        &|p| p.suspect_pairs as u64,
+    ));
+
+    rows.push(run_adversary_twin(
+        "slow_loris",
+        "health_offenses",
+        &|ph| {
+            let mut s = ScenarioSpec::small("bench_slow_loris", seed ^ 0x510B, 40);
+            if ph {
+                s = s.peer_health();
+            }
+            s.phase(
+                "trickle-under-crowd",
+                vec![
+                    Fault::SlowLoris { object: 0, chunk: 0, members: 13 },
+                    Fault::FlashCrowd { object: 0, readers },
+                ],
+                30_000,
+                vec![
+                    Check::AllObjectsReadable,
+                    Check::HealthOffensesWithin {
+                        min: if ph { 1 } else { 0 },
+                        max: if ph { u64::MAX } else { 0 },
+                    },
+                    Check::NoHonestGreylisted,
+                ],
+            )
+        },
+        &|p| p.health_offenses,
+    ));
+
+    rows.push(run_adversary_twin(
+        "adaptive_withhold",
+        "health_offenses",
+        &|ph| {
+            let mut s = ScenarioSpec::small("bench_adaptive", seed ^ 0xAD47, 48)
+                .epoch_rotation(60_000, 20_000)
+                .audits(0.5);
+            if ph {
+                s = s.peer_health();
+            }
+            s.phase(
+                "duty-cycle-withholding",
+                vec![
+                    Fault::AdaptiveWithhold { object: 0, chunk: 0, members: 10 },
+                    Fault::FlashCrowd { object: 0, readers },
+                ],
+                260_000,
+                vec![
+                    // Audits stay green in BOTH twins — the family
+                    // exists because only deadline accounting sees it.
+                    Check::FaultedAuditSuspectersWithin { min: 0, max: 0 },
+                    Check::NoHonestSuspected,
+                    Check::HealthOffensesWithin {
+                        min: if ph { 1 } else { 0 },
+                        max: if ph { u64::MAX } else { 0 },
+                    },
+                    Check::NoHonestGreylisted,
+                    Check::AllObjectsReadable,
+                ],
+            )
+        },
+        &|p| p.health_offenses,
+    ));
+
+    let mut json_rows = Vec::new();
+    let mut false_greylists_total = 0u64;
+    for r in &rows {
+        println!(
+            "  {:<18} {}: off {:>8} -> on {:>8} | avail {:>7}/{:<7} ppm | window {:>6} ms | {} false greylists",
+            r.family,
+            r.signal,
+            r.signal_off,
+            r.signal_on,
+            r.avail_off_ppm,
+            r.avail_on_ppm,
+            r.window_ms,
+            r.false_greylists
+        );
+        false_greylists_total += r.false_greylists;
+        json_rows.push(format!(
+            "{{\"family\": \"{}\", \"signal\": \"{}\", \"signal_off\": {}, \
+             \"signal_on\": {}, \"availability_off_ppm\": {}, \
+             \"availability_on_ppm\": {}, \"detection_window_ms\": {}, \
+             \"false_greylists\": {}}}",
+            r.family,
+            r.signal,
+            r.signal_off,
+            r.signal_on,
+            r.avail_off_ppm,
+            r.avail_on_ppm,
+            r.window_ms,
+            r.false_greylists
+        ));
+    }
+    assert_eq!(false_greylists_total, 0, "an honest peer was greylisted or quarantined");
+
+    let wall_secs = wall.elapsed_s();
+    let families = format!("[\n    {}\n  ]", json_rows.join(",\n    "));
+    let json = format!(
+        "{{\n  \"bench\": \"adversary_plane\",\n  \"smoke\": {smoke},\n  \"seed\": {seed},\n  \
+         \"families\": {families},\n  \
+         \"false_greylists_total\": {false_greylists_total},\n  \
+         \"wall_secs\": {wall_secs:.3}\n}}\n",
+    );
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("failed to write {out}: {e}"),
+    }
+    println!(
+        "adversary plane: {} families, {false_greylists_total} false greylists (must be 0) \
+         ({wall_secs:.1}s wall)",
+        rows.len()
     );
 }
 

@@ -142,7 +142,14 @@ impl Shard {
     fn drain(&mut self, now_ms: u64, from_local: usize, out: Outbox, routes: &RouteMap, opts: &SimOpts) {
         let from_info = self.slots[from_local].peer.info;
         let sender_blocked = !self.slots[from_local].up || self.slots[from_local].attacked;
-        for (to, msg, purpose) in out.sends {
+        // Deferred sends (slow-loris trickle) ride the same path with
+        // the sender's hold time added on top of link latency.
+        let sends = out
+            .sends
+            .into_iter()
+            .map(|(to, msg, p)| (0u64, to, msg, p))
+            .chain(out.delayed);
+        for (hold_ms, to, msg, purpose) in sends {
             let size = msg.approx_size();
             {
                 let m = &mut self.slots[from_local].peer.metrics;
@@ -165,7 +172,7 @@ impl Shard {
             let lat = link_latency(opts, &mut self.rng, from_info.region, route.region, size);
             self.stats.msgs += 1;
             self.stats.bytes += size as u64;
-            let at = now_ms + lat;
+            let at = now_ms + hold_ms + lat;
             let to_local = route.local as usize;
             if route.shard as usize == self.id {
                 self.push_local(at, EventKind::Deliver { to_local, from: from_info.id, msg });

@@ -401,7 +401,15 @@ impl SimNet {
     fn drain(&mut self, from_slot: usize, out: Outbox) {
         let from_info = self.slots[from_slot].peer.info;
         let sender_blocked = !self.slots[from_slot].up || self.slots[from_slot].attacked;
-        for (to, msg, purpose) in out.sends {
+        // Deferred sends (slow-loris trickle): same path as immediate
+        // sends, with the sender's hold time added on top of the link
+        // latency.
+        let sends = out
+            .sends
+            .into_iter()
+            .map(|(to, msg, p)| (0u64, to, msg, p))
+            .chain(out.delayed);
+        for (hold_ms, to, msg, purpose) in sends {
             let size = msg.approx_size();
             {
                 let m = &mut self.slots[from_slot].peer.metrics;
@@ -429,7 +437,10 @@ impl SimNet {
             let lat = self.latency_for(from_info.region, to_region, size);
             self.stats.msgs += 1;
             self.stats.bytes += size as u64;
-            self.push_event(self.now_ms + lat, EventKind::Deliver { to: ti, from: from_info.id, msg });
+            self.push_event(
+                self.now_ms + hold_ms + lat,
+                EventKind::Deliver { to: ti, from: from_info.id, msg },
+            );
         }
         let gen = self.slots[from_slot].gen;
         for (delay, kind) in out.timers {

@@ -35,20 +35,48 @@ fn write_frame(stream: &mut TcpStream, from: &NodeId, msg: &Msg) -> std::io::Res
     stream.write_all(&buf)
 }
 
-fn read_frame(stream: &mut TcpStream) -> std::io::Result<(NodeId, Msg)> {
+/// Frames longer than this are structurally readable but unreasonable
+/// for any legitimate message — treated as a resource attack and
+/// blamed on the sender (the id arrives inside the frame).
+const MAX_SANE_FRAME: usize = 8 << 20;
+
+/// A frame that could not be dispatched. `Garbage`/`Oversize` carry
+/// the sender id parsed from the frame header so the peer-health layer
+/// can blame the actual author instead of dropping silently.
+enum FrameError {
+    Io(std::io::Error),
+    Garbage(NodeId),
+    Oversize(NodeId),
+}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> Self {
+        FrameError::Io(e)
+    }
+}
+
+fn read_frame(stream: &mut TcpStream) -> Result<(NodeId, Msg), FrameError> {
     let mut len_buf = [0u8; 4];
     stream.read_exact(&mut len_buf)?;
     let len = u32::from_le_bytes(len_buf) as usize;
     if !(32..=64 << 20).contains(&len) {
-        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad frame len"));
+        // No trustworthy sender id at this point; all we can do is
+        // drop the connection.
+        return Err(FrameError::Io(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "bad frame len",
+        )));
     }
     let mut buf = vec![0u8; len];
     stream.read_exact(&mut buf)?;
     let mut id = [0u8; 32];
     id.copy_from_slice(&buf[..32]);
-    let msg = Msg::from_bytes(&buf[32..])
-        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
-    Ok((NodeId(Hash256(id)), msg))
+    let from = NodeId(Hash256(id));
+    if len > MAX_SANE_FRAME {
+        return Err(FrameError::Oversize(from));
+    }
+    let msg = Msg::from_bytes(&buf[32..]).map_err(|_| FrameError::Garbage(from))?;
+    Ok((from, msg))
 }
 
 /// Static full-membership directory for localhost clusters (the same
@@ -80,6 +108,10 @@ impl Directory for StaticDirectory {
 
 enum NodeEvent {
     Inbound(NodeId, Msg),
+    /// A frame from `from` was dropped before dispatch: undecodable
+    /// bytes or an oversize payload (ISSUE 8 satellite — previously
+    /// these vanished without a trace).
+    DecodeReject { from: NodeId, oversize: bool },
     #[allow(dead_code)]
     Timer(TimerKind),
     Store { object: Vec<u8>, secret: Vec<u8>, expires_ms: u64, reply: Sender<u64> },
@@ -142,7 +174,27 @@ impl TcpNode {
                                                 break;
                                             }
                                         }
-                                        Err(_) => break,
+                                        Err(FrameError::Garbage(from)) => {
+                                            // Surface the reject, keep reading:
+                                            // the framing is intact.
+                                            if tx
+                                                .send(NodeEvent::DecodeReject {
+                                                    from,
+                                                    oversize: false,
+                                                })
+                                                .is_err()
+                                            {
+                                                break;
+                                            }
+                                        }
+                                        Err(FrameError::Oversize(from)) => {
+                                            let _ = tx.send(NodeEvent::DecodeReject {
+                                                from,
+                                                oversize: true,
+                                            });
+                                            break; // drop the hostile connection
+                                        }
+                                        Err(FrameError::Io(_)) => break,
                                     }
                                 }
                             });
@@ -277,6 +329,9 @@ fn run_dispatcher(
                 peer.on_message(&dir, &mut out, from, msg);
                 flush(&mut peer, out, &dir, &conns, &my_id, &app_tx, &mut timers, &mut timer_kinds, &mut timer_seq);
             }
+            Ok(NodeEvent::DecodeReject { from, oversize }) => {
+                peer.note_decode_reject(from, oversize);
+            }
             Ok(NodeEvent::Timer(kind)) => {
                 let mut out = Outbox::at(now());
                 peer.on_timer(&dir, &mut out, kind);
@@ -315,7 +370,10 @@ fn flush(
     timer_seq: &mut u64,
 ) {
     let now = out.now_ms;
-    for (to, msg, purpose) in out.sends {
+    // Delayed sends only exist under sim-injected faults (slow-loris);
+    // a real node has no reason to hold a frame, so flush them inline.
+    let sends = out.sends.into_iter().chain(out.delayed.into_iter().map(|(_, to, m, p)| (to, m, p)));
+    for (to, msg, purpose) in sends {
         let size = msg.approx_size();
         peer.metrics.msgs_sent += 1;
         peer.metrics.bytes_sent += size as u64;

@@ -1,0 +1,370 @@
+//! Peer-health defense layer (ISSUE 8).
+//!
+//! Per-peer request tracking with deadlines, a decayed misbehavior
+//! score fed by timeouts / undecodable garbage / oversize payloads /
+//! slow-trickle responses, greylisting, and network-wide quarantine on
+//! verified equivocation evidence.
+//!
+//! Semantics that keep this a *defense* and not a new partition vector:
+//!
+//! * **Greylist = deprioritize, never refuse.** A greylisted peer is
+//!   sorted to the back of query fan-out candidate lists and repair
+//!   probe sets and is excluded from DHT bucket refills, but it is
+//!   still *served* (reads, joins, audits) and still counted as a
+//!   group member — graceful degradation under suspicion, full service
+//!   on recovery. Scores decay every tick, so a peer that stops
+//!   misbehaving (or was briefly unlucky) clears automatically.
+//! * **Quarantine is evidence-gated.** Only a self-contained
+//!   cryptographic proof (`chain::EquivocationEvidence`) quarantines a
+//!   peer, and the proof travels with the verdict — one honest
+//!   observer convinces everyone, and nobody can be quarantined by
+//!   rumor. Quarantined peers are excluded from repair recruitment and
+//!   group alive-sets (mirroring audit-suspect eviction) but, again,
+//!   never refused service.
+//! * **Own RNG stream.** Backoff jitter draws from a dedicated forked
+//!   stream, so enabling the health plane perturbs no other consumer's
+//!   draw sequence (the flag-off fingerprint guarantee).
+//!
+//! The scoring model mirrors `audit::ledger`: accumulate weighted
+//! offenses, decay multiplicatively each tick, mark at a threshold,
+//! clear when decay brings the score back under half the threshold,
+//! GC state that reaches zero.
+
+use crate::dht::NodeId;
+use crate::util::detmap::{DetHashMap, DetHashSet};
+use crate::util::rng::Rng;
+
+/// Score floor below which an entry is considered fully recovered and
+/// its state garbage-collected.
+const SCORE_FLOOR: f64 = 1e-3;
+
+/// Misbehavior classes feeding the decayed score, in increasing order
+/// of "this cannot happen by accident".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Offense {
+    /// A tracked request passed its deadline with no reply.
+    Timeout,
+    /// Reply arrived, but only just under the timeout (slow-loris).
+    SlowTrickle,
+    /// Undecodable wire bytes from this peer.
+    Garbage,
+    /// Structurally valid but oversize payload (resource attack).
+    Oversize,
+}
+
+impl Offense {
+    pub fn weight(self) -> f64 {
+        match self {
+            Offense::Timeout => 1.0,
+            Offense::SlowTrickle => 0.75,
+            Offense::Garbage => 1.5,
+            Offense::Oversize => 1.5,
+        }
+    }
+}
+
+/// Per-peer decayed misbehavior state.
+#[derive(Clone, Debug, Default)]
+pub struct PeerHealth {
+    pub score: f64,
+    pub greylisted: bool,
+}
+
+/// What an offense did to the peer's standing (for metrics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Standing {
+    Ok,
+    NewlyGreylisted,
+    AlreadyGreylisted,
+}
+
+/// The tracker one `VaultPeer` owns (when `VaultConfig::peer_health`
+/// is on; with the flag off the peer never constructs one).
+#[derive(Clone, Debug)]
+pub struct HealthTracker {
+    /// Score at which a peer is greylisted.
+    threshold: f64,
+    /// Per-tick multiplicative decay.
+    decay: f64,
+    /// Dedicated jitter stream (forked from the peer's RNG at start).
+    rng: Rng,
+    peers: DetHashMap<NodeId, PeerHealth>,
+    quarantined: DetHashSet<NodeId>,
+    /// In-flight tracked requests: `(op, responder) -> sent_ms`.
+    pending: DetHashMap<(u64, NodeId), u64>,
+}
+
+impl HealthTracker {
+    pub fn new(threshold: f64, decay: f64, rng: Rng) -> Self {
+        HealthTracker {
+            threshold,
+            decay,
+            rng,
+            peers: DetHashMap::default(),
+            quarantined: DetHashSet::default(),
+            pending: DetHashMap::default(),
+        }
+    }
+
+    /// Register an outbound request we expect `peer` to answer.
+    pub fn track(&mut self, op: u64, peer: NodeId, now_ms: u64) {
+        self.pending.insert((op, peer), now_ms);
+    }
+
+    /// A reply for `(op, peer)` arrived. Returns the offense recorded,
+    /// if the response took `slow_after_ms` or longer (slow-trickle).
+    /// Untracked replies (duplicates, unsolicited) are ignored.
+    pub fn resolve(
+        &mut self,
+        op: u64,
+        peer: NodeId,
+        now_ms: u64,
+        slow_after_ms: u64,
+    ) -> Option<Standing> {
+        let sent = self.pending.remove(&(op, peer))?;
+        if now_ms.saturating_sub(sent) >= slow_after_ms {
+            Some(self.offense(peer, Offense::SlowTrickle))
+        } else {
+            None
+        }
+    }
+
+    /// The op's retry timer fired: every responder pending for at
+    /// least `min_age_ms` ate its deadline. Returns them (sorted for
+    /// determinism) so the caller can record one `Timeout` offense
+    /// each. Younger entries — fanned out mid-period, their clock
+    /// still running — stay pending, which is what keeps a slow timer
+    /// alignment from ever blaming an honest peer prematurely.
+    pub fn expire_op(&mut self, op: u64, now_ms: u64, min_age_ms: u64) -> Vec<NodeId> {
+        let mut late: Vec<NodeId> = self
+            .pending
+            .iter()
+            .filter(|(&(o, _), &sent)| o == op && now_ms.saturating_sub(sent) >= min_age_ms)
+            .map(|(&(_, p), _)| p)
+            .collect();
+        late.sort();
+        for p in &late {
+            self.pending.remove(&(op, *p));
+        }
+        late
+    }
+
+    /// Drop tracking for an op without blaming anyone (saga completed;
+    /// stragglers may still answer and should not be offenses).
+    pub fn forget_op(&mut self, op: u64) {
+        self.pending.retain(|(o, _), _| *o != op);
+    }
+
+    /// Record a weighted offense; returns the standing transition.
+    pub fn offense(&mut self, peer: NodeId, kind: Offense) -> Standing {
+        let h = self.peers.entry(peer).or_default();
+        h.score += kind.weight();
+        if h.greylisted {
+            Standing::AlreadyGreylisted
+        } else if h.score >= self.threshold {
+            h.greylisted = true;
+            Standing::NewlyGreylisted
+        } else {
+            Standing::Ok
+        }
+    }
+
+    /// Per-tick decay: scores shrink multiplicatively, greylists clear
+    /// once the score falls under half the threshold, and fully
+    /// recovered entries are GC'd. Returns how many greylists cleared.
+    pub fn decay_tick(&mut self) -> u64 {
+        let mut cleared = 0;
+        let threshold = self.threshold;
+        let decay = self.decay;
+        self.peers.retain(|_, h| {
+            h.score *= decay;
+            if h.greylisted && h.score < threshold * 0.5 {
+                h.greylisted = false;
+                cleared += 1;
+            }
+            h.score >= SCORE_FLOOR
+        });
+        cleared
+    }
+
+    pub fn is_greylisted(&self, id: &NodeId) -> bool {
+        self.peers.get(id).map(|h| h.greylisted).unwrap_or(false)
+    }
+
+    pub fn greylisted_count(&self) -> u64 {
+        self.peers.values().filter(|h| h.greylisted).count() as u64
+    }
+
+    /// Quarantine on verified equivocation evidence. Returns `true` if
+    /// this is new information (gossip should propagate once).
+    pub fn quarantine(&mut self, id: NodeId) -> bool {
+        self.quarantined.insert(id)
+    }
+
+    pub fn is_quarantined(&self, id: &NodeId) -> bool {
+        self.quarantined.contains(id)
+    }
+
+    pub fn quarantined_count(&self) -> u64 {
+        self.quarantined.len() as u64
+    }
+
+    /// Capped exponential backoff with deterministic jitter from the
+    /// tracker's own stream: `min(base·2^retries, base·2^cap_exp)`
+    /// plus up to `base/4` of jitter.
+    pub fn backoff_ms(&mut self, base_ms: u64, retries: u32, cap_exp: u32) -> u64 {
+        let exp = retries.min(cap_exp);
+        let backoff = base_ms.saturating_mul(1u64 << exp);
+        let jitter = if base_ms >= 4 { self.rng.below(base_ms / 4) } else { 0 };
+        backoff + jitter
+    }
+
+    /// Stable-partition `items` so greylisted peers come last, without
+    /// disturbing relative order inside either class (the fan-out
+    /// still reaches them — after everyone in better standing).
+    pub fn deprioritize<T, F: Fn(&T) -> NodeId>(&self, items: &mut Vec<T>, id_of: F) {
+        if self.peers.values().all(|h| !h.greylisted) {
+            return;
+        }
+        let mut good = Vec::with_capacity(items.len());
+        let mut grey = Vec::new();
+        for it in items.drain(..) {
+            if self.is_greylisted(&id_of(&it)) {
+                grey.push(it);
+            } else {
+                good.push(it);
+            }
+        }
+        good.extend(grey);
+        *items = good;
+    }
+}
+
+/// Plain capped exponential backoff (no jitter, no RNG) — the
+/// flag-independent schedule `JoinRetry` uses when the health plane is
+/// off, so the retry-storm bugfix never perturbs legacy RNG streams.
+pub fn capped_backoff_ms(base_ms: u64, retries: u32, cap_exp: u32) -> u64 {
+    base_ms.saturating_mul(1u64 << retries.min(cap_exp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn id(tag: u8) -> NodeId {
+        NodeId(crate::crypto::Hash256::of(&[tag]))
+    }
+
+    fn tracker() -> HealthTracker {
+        HealthTracker::new(3.0, 0.5, Rng::new(7))
+    }
+
+    #[test]
+    fn offenses_accumulate_to_greylist_and_decay_clears() {
+        let mut t = tracker();
+        let p = id(1);
+        assert_eq!(t.offense(p, Offense::Timeout), Standing::Ok);
+        assert_eq!(t.offense(p, Offense::Timeout), Standing::Ok);
+        assert_eq!(t.offense(p, Offense::Garbage), Standing::NewlyGreylisted);
+        assert!(t.is_greylisted(&p));
+        assert_eq!(t.offense(p, Offense::Timeout), Standing::AlreadyGreylisted);
+        assert_eq!(t.greylisted_count(), 1);
+        // score 4.5 → 2.25 → 1.125 (< 1.5 = threshold/2 ⇒ cleared)
+        assert_eq!(t.decay_tick(), 0);
+        assert_eq!(t.decay_tick(), 1);
+        assert!(!t.is_greylisted(&p));
+        // Long quiet: state fully GC'd.
+        for _ in 0..40 {
+            t.decay_tick();
+        }
+        assert_eq!(t.greylisted_count(), 0);
+        assert!(!t.peers.contains_key(&p));
+    }
+
+    #[test]
+    fn pending_tracking_blames_only_the_silent() {
+        let mut t = tracker();
+        let (a, b) = (id(1), id(2));
+        t.track(9, a, 1000);
+        t.track(9, b, 1000);
+        // a answers promptly: no offense.
+        assert_eq!(t.resolve(9, a, 1500, 1500), None);
+        // duplicate / unsolicited replies are ignored.
+        assert_eq!(t.resolve(9, a, 1600, 1500), None);
+        // b never answers: expire blames exactly b.
+        assert_eq!(t.expire_op(9, 2500, 1500), vec![b]);
+        assert!(t.expire_op(9, 2500, 1500).is_empty(), "expiry is idempotent");
+    }
+
+    #[test]
+    fn expire_spares_requests_younger_than_min_age() {
+        let mut t = tracker();
+        let (a, b) = (id(1), id(2));
+        t.track(3, a, 0); // a full period old at expiry
+        t.track(3, b, 900); // fanned out mid-period
+        assert_eq!(t.expire_op(3, 1000, 1000), vec![a]);
+        // b stays tracked and is blamed only once its own period runs out.
+        assert_eq!(t.expire_op(3, 2000, 1000), vec![b]);
+    }
+
+    #[test]
+    fn slow_trickle_is_an_offense() {
+        let mut t = tracker();
+        let p = id(3);
+        t.track(4, p, 0);
+        // Arrived, but at 2900 ms of a 1500 ms slow threshold.
+        assert_eq!(t.resolve(4, p, 2900, 1500), Some(Standing::Ok));
+        assert!(t.peers[&p].score > 0.0);
+    }
+
+    #[test]
+    fn forget_op_clears_without_blame() {
+        let mut t = tracker();
+        let p = id(4);
+        t.track(11, p, 0);
+        t.forget_op(11);
+        assert!(t.expire_op(11, 5000, 0).is_empty());
+        assert!(t.peers.get(&p).is_none());
+    }
+
+    #[test]
+    fn quarantine_is_sticky_and_reports_novelty() {
+        let mut t = tracker();
+        let p = id(5);
+        assert!(!t.is_quarantined(&p));
+        assert!(t.quarantine(p), "first evidence is news");
+        assert!(!t.quarantine(p), "repeat evidence is not");
+        assert!(t.is_quarantined(&p));
+        for _ in 0..10 {
+            t.decay_tick();
+        }
+        assert!(t.is_quarantined(&p), "decay never lifts quarantine");
+    }
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let mut t = tracker();
+        let base = 1000;
+        let b0 = t.backoff_ms(base, 0, 3);
+        let b3 = t.backoff_ms(base, 3, 3);
+        let b9 = t.backoff_ms(base, 9, 3);
+        assert!((base..base + 250).contains(&b0));
+        assert!((8 * base..8 * base + 250).contains(&b3));
+        assert!((8 * base..8 * base + 250).contains(&b9), "capped at 2^3");
+        assert_eq!(capped_backoff_ms(base, 0, 3), base);
+        assert_eq!(capped_backoff_ms(base, 2, 3), 4 * base);
+        assert_eq!(capped_backoff_ms(base, 9, 3), 8 * base);
+    }
+
+    #[test]
+    fn deprioritize_is_a_stable_partition() {
+        let mut t = tracker();
+        for _ in 0..4 {
+            t.offense(id(2), Offense::Garbage);
+        }
+        assert!(t.is_greylisted(&id(2)));
+        let mut v = vec![id(1), id(2), id(3), id(4)];
+        t.deprioritize(&mut v, |x| *x);
+        assert_eq!(v, vec![id(1), id(3), id(4), id(2)]);
+    }
+}

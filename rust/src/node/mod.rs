@@ -8,5 +8,6 @@
 //! restart/recovery path (ISSUE 6) replays the WAL and re-joins the
 //! node's groups.
 
+pub mod health;
 pub mod storage;
 pub mod wal;

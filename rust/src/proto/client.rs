@@ -296,6 +296,12 @@ impl VaultPeer {
                 let mut seen: HashSet<NodeId> = HashSet::default();
                 candidates.retain(|p| seen.insert(p.id));
             }
+            // Health plane: greylisted candidates go to the back of the
+            // fan-out order — still askable, just after everyone in
+            // better standing.
+            if let Some(h) = self.health.as_ref() {
+                h.deprioritize(&mut candidates, |p| p.id);
+            }
             let mut qc = QueryChunk {
                 decoder: InnerDecoder::new(*chash, self.cfg.k_inner),
                 candidates,
@@ -304,7 +310,12 @@ impl VaultPeer {
                 complete: false,
             };
             let fanout = self.cfg.fetch_fanout;
-            Self::query_fan_out(&mut qc, out, op, *chash, fanout);
+            let sent = Self::query_fan_out(&mut qc, out, op, *chash, fanout);
+            if let Some(h) = self.health.as_mut() {
+                for t in sent {
+                    h.track(op, t, out.now_ms);
+                }
+            }
             chunks.insert(*chash, qc);
         }
         self.query_ops.insert(
@@ -321,27 +332,40 @@ impl VaultPeer {
         op
     }
 
-    fn query_fan_out(qc: &mut QueryChunk, out: &mut Outbox, op: u64, chash: Hash256, n: usize) {
-        let mut sent = 0;
-        while sent < n && qc.next_candidate < qc.candidates.len() {
+    /// Returns the peers actually asked this round so the caller can
+    /// register them with the health tracker (deadline accounting).
+    fn query_fan_out(
+        qc: &mut QueryChunk,
+        out: &mut Outbox,
+        op: u64,
+        chash: Hash256,
+        n: usize,
+    ) -> Vec<NodeId> {
+        let mut sent = Vec::new();
+        while sent.len() < n && qc.next_candidate < qc.candidates.len() {
             let cand = qc.candidates[qc.next_candidate];
             qc.next_candidate += 1;
             if qc.asked.insert(cand.id) {
                 out.send(cand.id, Msg::GetFrag { op, chash });
-                sent += 1;
+                sent.push(cand.id);
             }
         }
+        sent
     }
 
     pub(super) fn query_frag_reply(
         &mut self,
         _dir: &dyn Directory,
         out: &mut Outbox,
-        _from: NodeId,
+        from: NodeId,
         op: u64,
         chash: Hash256,
         frag: Option<Fragment>,
     ) {
+        // The peer answered (hit or miss): clear its deadline; a reply
+        // that barely beat the timeout still counts as a slow-trickle
+        // offense.
+        self.health_resolve(op, from, out.now_ms);
         let k_outer = self.cfg.k_outer;
         let Some(qop) = self.query_ops.get_mut(&op) else { return };
         if qop.done {
@@ -357,7 +381,12 @@ impl VaultPeer {
             }
             None => {
                 // Miss: try one more candidate.
-                Self::query_fan_out(qc, out, op, chash, 1);
+                let sent = Self::query_fan_out(qc, out, op, chash, 1);
+                if let Some(h) = self.health.as_mut() {
+                    for t in sent {
+                        h.track(op, t, out.now_ms);
+                    }
+                }
                 return;
             }
         }
@@ -372,7 +401,12 @@ impl VaultPeer {
             // this chunk from scratch with a wider ask.
             qc.complete = false;
             qc.decoder = InnerDecoder::new(chash, self.cfg.k_inner);
-            Self::query_fan_out(qc, out, op, chash, 4);
+            let sent = Self::query_fan_out(qc, out, op, chash, 4);
+            if let Some(h) = self.health.as_mut() {
+                for t in sent {
+                    h.track(op, t, out.now_ms);
+                }
+            }
             return;
         }
         let advanced = qop.outer.push(&bytes);
@@ -385,12 +419,20 @@ impl VaultPeer {
                 let latency = out.now_ms.saturating_sub(qop.started_ms);
                 qop.done = true;
                 self.query_ops.remove(&op);
+                // Saga complete: stragglers may still answer; drop their
+                // deadlines without blame.
+                if let Some(h) = self.health.as_mut() {
+                    h.forget_op(op);
+                }
                 out.emit(AppEvent::QueryDone { op, data: object, latency_ms: latency });
             }
         }
     }
 
     pub(super) fn query_op_timeout(&mut self, _dir: &dyn Directory, out: &mut Outbox, op: u64) {
+        // Everyone still pending past a full timeout period ate the
+        // deadline — one timeout offense each before we widen the ask.
+        self.health_expire_op(op, out.now_ms);
         let timeout = self.cfg.op_timeout_ms;
         let deadline = self.cfg.op_deadline_ms;
         let fanout = self.cfg.fetch_fanout;
@@ -407,7 +449,12 @@ impl VaultPeer {
         }
         for (chash, qc) in qop.chunks.iter_mut() {
             if !qc.complete {
-                Self::query_fan_out(qc, out, op, *chash, fanout);
+                let sent = Self::query_fan_out(qc, out, op, *chash, fanout);
+                if let Some(h) = self.health.as_mut() {
+                    for t in sent {
+                        h.track(op, t, out.now_ms);
+                    }
+                }
             }
         }
         out.timer(timeout, TimerKind::OpTimeout { op });

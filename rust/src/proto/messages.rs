@@ -311,6 +311,18 @@ pub enum Msg {
     /// Signed audit outcome, gossiped to the group (see
     /// [`AuditVerdict`]).
     AuditVerdict(AuditVerdict),
+
+    /// Signed epoch announce gossiped peer-to-peer (ISSUE 8): the form
+    /// in which a chain watcher's view becomes attributable. Receivers
+    /// never adopt epoch state from it — the self-addressed
+    /// [`Msg::EpochUpdate`] path stays the only epoch input — they
+    /// only remember it, so a conflicting one can be turned into
+    /// [`Msg::Equivocation`] evidence.
+    AnnounceGossip(crate::chain::SignedAnnounce),
+    /// Self-contained beacon-equivocation proof (two conflicting
+    /// signed announces for one epoch); verifiable by anyone, so one
+    /// honest observer quarantines the equivocator network-wide.
+    Equivocation(crate::chain::EquivocationEvidence),
 }
 
 impl Msg {
@@ -338,6 +350,8 @@ impl Msg {
             Msg::AuditChallenge { .. } => 19,
             Msg::AuditResponse { .. } => 20,
             Msg::AuditVerdict(_) => 21,
+            Msg::AnnounceGossip(_) => 22,
+            Msg::Equivocation(_) => 23,
         }
     }
 
@@ -400,6 +414,8 @@ impl Msg {
             | Msg::HeartbeatBatch(_)
             | Msg::GetMembers { .. }
             | Msg::EpochUpdate(_)
+            | Msg::AnnounceGossip(_)
+            | Msg::Equivocation(_)
             | Msg::Members { .. } => Purpose::Heartbeat,
             Msg::RepairReq { .. } | Msg::RepairAck { .. } => Purpose::Repair,
             Msg::GetChunk { .. } | Msg::ChunkReply { .. } => Purpose::Join,
@@ -434,6 +450,8 @@ impl Msg {
             Msg::AuditChallenge { .. } => "AuditChallenge",
             Msg::AuditResponse { .. } => "AuditResponse",
             Msg::AuditVerdict(_) => "AuditVerdict",
+            Msg::AnnounceGossip(_) => "AnnounceGossip",
+            Msg::Equivocation(_) => "Equivocation",
         }
     }
 
@@ -477,6 +495,9 @@ impl Msg {
             }
             // epoch + chash + auditee + pass + pk + proof + sig
             Msg::AuditVerdict(_) => HDR + 8 + 32 + 32 + 1 + 32 + 80 + 64,
+            // announce (epoch + beacon + tx_digest + n_nodes) + pk + sig
+            Msg::AnnounceGossip(_) => HDR + 8 + 32 + 32 + 8 + 32 + 64,
+            Msg::Equivocation(_) => HDR + 2 * (8 + 32 + 32 + 8 + 32 + 64),
         }
     }
 }
@@ -573,6 +594,8 @@ impl Encode for Msg {
                 slice.encode(w);
             }
             Msg::AuditVerdict(v) => v.encode(w),
+            Msg::AnnounceGossip(a) => a.encode(w),
+            Msg::Equivocation(e) => e.encode(w),
         }
     }
 }
@@ -667,6 +690,8 @@ impl Decode for Msg {
                 Msg::AuditResponse { op, chash, index, slice }
             }
             21 => Msg::AuditVerdict(AuditVerdict::decode(r)?),
+            22 => Msg::AnnounceGossip(crate::chain::SignedAnnounce::decode(r)?),
+            23 => Msg::Equivocation(crate::chain::EquivocationEvidence::decode(r)?),
             t => return Err(WireError::BadTag(t as u32)),
         })
     }
@@ -767,6 +792,35 @@ mod tests {
                 proof,
                 sig: [7; 64],
             }),
+            Msg::AnnounceGossip(crate::chain::SignedAnnounce::sign(
+                &sk,
+                EpochAnnounce {
+                    epoch: 12,
+                    beacon: [0xBE; 32],
+                    tx_digest: [0xD1; 32],
+                    n_nodes: 1000,
+                },
+            )),
+            Msg::Equivocation(crate::chain::EquivocationEvidence {
+                a: crate::chain::SignedAnnounce::sign(
+                    &sk,
+                    EpochAnnounce {
+                        epoch: 12,
+                        beacon: [0xBE; 32],
+                        tx_digest: [0xD1; 32],
+                        n_nodes: 1000,
+                    },
+                ),
+                b: crate::chain::SignedAnnounce::sign(
+                    &sk,
+                    EpochAnnounce {
+                        epoch: 12,
+                        beacon: [0xEB; 32],
+                        tx_digest: [0xD1; 32],
+                        n_nodes: 1000,
+                    },
+                ),
+            }),
         ]
     }
 
@@ -785,7 +839,7 @@ mod tests {
         let mut tags: Vec<u8> = msgs.iter().map(|m| m.tag()).collect();
         tags.sort_unstable();
         tags.dedup();
-        assert_eq!(tags.len(), 22);
+        assert_eq!(tags.len(), 24);
     }
 
     #[test]

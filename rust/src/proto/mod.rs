@@ -101,6 +101,29 @@ pub struct VaultConfig {
     pub audit_quorum: usize,
     /// Consecutive failed epochs before an auditee is marked suspect.
     pub audit_fail_epochs: u64,
+    /// Peer-health defense layer (ISSUE 8): per-peer request deadlines
+    /// with bounded retries under exponential backoff + deterministic
+    /// jitter, a decayed misbehavior score fed by timeouts / garbage /
+    /// oversize / slow-trickle responses, greylisting (greylisted peers
+    /// are deprioritized for queries and repair probes and excluded
+    /// from DHT bucket refills — never from serving), and signed
+    /// equivocation evidence that quarantines a beacon equivocator
+    /// network-wide. `false` (default) leaves every legacy message
+    /// flow, timer, RNG draw, and fingerprint untouched.
+    pub peer_health: bool,
+    /// Accumulated misbehavior score at which a peer is greylisted.
+    pub health_greylist_threshold: f64,
+    /// Per-tick multiplicative decay applied to every health score
+    /// (scores below a floor reset to zero and clear the greylist).
+    pub health_decay: f64,
+    /// A response slower than this fraction of `op_timeout_ms`
+    /// (numerator/denominator = `health_slow_num`/8) counts as a
+    /// slow-trickle offense.
+    pub health_slow_num: u64,
+    /// Maximum `JoinRetry` re-arms before a reconstructing node gives
+    /// up, releases the requester's repair slot with a failed ack, and
+    /// drops the join (satellite: the retry storm bugfix).
+    pub join_retry_max: u32,
 }
 
 /// When to cryptographically verify heartbeat claims.
@@ -144,6 +167,11 @@ impl Default for VaultConfig {
             audit_len: 64,
             audit_quorum: 2,
             audit_fail_epochs: 2,
+            peer_health: false,
+            health_greylist_threshold: 3.0,
+            health_decay: 0.5,
+            health_slow_num: 4,
+            join_retry_max: 5,
         }
     }
 }
@@ -193,6 +221,10 @@ pub enum AppEvent {
 pub struct Outbox {
     pub now_ms: u64,
     pub sends: Vec<(NodeId, Msg, Purpose)>,
+    /// Sends the peer asks the transport to hold for `delay_ms` before
+    /// putting them on the wire (slow-loris fault injection; sim-only —
+    /// the TCP transport sends them immediately).
+    pub delayed: Vec<(u64, NodeId, Msg, Purpose)>,
     pub timers: Vec<(u64, TimerKind)>,
     pub app: Vec<AppEvent>,
 }
@@ -211,6 +243,10 @@ impl Outbox {
     /// the repair path).
     pub fn send_p(&mut self, to: NodeId, msg: Msg, purpose: Purpose) {
         self.sends.push((to, msg, purpose));
+    }
+    /// Ask the transport to hold this send for `delay_ms` first.
+    pub fn send_delayed(&mut self, delay_ms: u64, to: NodeId, msg: Msg, purpose: Purpose) {
+        self.delayed.push((delay_ms, to, msg, purpose));
     }
     pub fn timer(&mut self, delay_ms: u64, kind: TimerKind) {
         self.timers.push((delay_ms, kind));
@@ -248,6 +284,10 @@ pub struct MaintStats {
     pub client_bytes: u64,
     pub audit_msgs: u64,
     pub audit_bytes: u64,
+    /// Inbound frames dropped before dispatch: undecodable wire bytes
+    /// and oversize payloads (ISSUE 8 satellite — hostile garbage is
+    /// visible in every bench instead of vanishing silently).
+    pub decode_rejects: u64,
 }
 
 impl MaintStats {
@@ -275,6 +315,7 @@ impl MaintStats {
         self.client_bytes += other.client_bytes;
         self.audit_msgs += other.audit_msgs;
         self.audit_bytes += other.audit_bytes;
+        self.decode_rejects += other.decode_rejects;
     }
 
     pub fn total_bytes(&self) -> u64 {
@@ -352,6 +393,22 @@ pub struct Metrics {
     pub audit_suspects_marked: u64,
     pub audit_suspects_cleared: u64,
     pub audit_oversize_dropped: u64,
+    /// Peer-health plane (ISSUE 8): offenses recorded by class
+    /// (request deadline expiry, undecodable garbage, oversize
+    /// payloads, slow-trickle responses), greylist transitions,
+    /// equivocation-evidence flow (detected locally from conflicting
+    /// announces / accepted from gossip / rejected as invalid), and
+    /// repair joins abandoned after the capped retry budget.
+    pub health_timeouts: u64,
+    pub health_garbage: u64,
+    pub health_oversize: u64,
+    pub health_slow: u64,
+    pub greylists_marked: u64,
+    pub greylists_cleared: u64,
+    pub equivocations_detected: u64,
+    pub evidence_accepted: u64,
+    pub evidence_rejected: u64,
+    pub join_give_ups: u64,
     /// Sender-side per-purpose bandwidth (filled by the transports).
     pub maint: MaintStats,
 }

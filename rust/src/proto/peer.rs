@@ -13,11 +13,13 @@ use std::collections::hash_map::Entry;
 use crate::audit::ledger::AuditLedger;
 use crate::audit::schedule as audit_schedule;
 use crate::audit::verify::SliceEq;
+use crate::chain::{EquivocationEvidence, SignedAnnounce};
 use crate::codec::rateless::{Fragment, InnerDecoder, InnerEncoder};
 use crate::crypto::ed25519::{self, SigningKey};
 use crate::crypto::vrf::VrfProof;
 use crate::crypto::Hash256;
 use crate::dht::{NodeId, PeerInfo};
+use crate::node::health::{capped_backoff_ms, HealthTracker, Offense, Standing};
 use crate::node::storage::StoredFragment;
 use crate::node::wal::{self, Wal, WalOp, WalReplayReport};
 use crate::util::rng::Rng;
@@ -46,6 +48,14 @@ const VERIFIED_CLAIMS_EVICT: usize = 1 << 14;
 
 /// Hostile-input bound on claims processed per heartbeat batch.
 const MAX_BATCH_CLAIMS: usize = 4096;
+
+/// How many epochs' worth of gossiped signed announces are remembered
+/// for equivocation cross-checking (bounded hostile-input cache).
+const SEEN_ANNOUNCE_CAP: usize = 8;
+
+/// Capped-backoff exponent for `JoinRetry`: retries wait at most
+/// `op_timeout_ms * 2^3` between attempts.
+const JOIN_BACKOFF_CAP_EXP: u32 = 3;
 
 /// Full member-list delta for a group, resetting its delta baseline —
 /// shared by the periodic batched tick (first batch after install) and
@@ -127,6 +137,23 @@ pub struct PeerFault {
     /// a *fail* verdict for every alive fellow member each epoch — the
     /// framing attempt the verdict ledger's quorum rule must defeat.
     pub frame_audits: bool,
+    /// Targeted censorship (ISSUE 8): refuse to serve exactly this
+    /// chunk (fragments, chunk-cache encodes, audit slices) while
+    /// serving everything else normally — the object-level denial the
+    /// audit plane must catch even though the peer looks healthy on
+    /// every other request.
+    pub censor_chunk: Option<Hash256>,
+    /// Slow-loris (ISSUE 8): answer fragment requests only at the last
+    /// moment before the requester's op timeout (held back via the
+    /// transport's delayed sends) — technically responsive, practically
+    /// useless, invisible to timeout-only accounting.
+    pub slow_loris: bool,
+    /// Adaptive withholding (ISSUE 8): silently ignore every second
+    /// data request (GetFrag/GetChunk) while answering heartbeats and
+    /// audit challenges honestly. Storage is intact, so the audit
+    /// plane stays green — only per-request deadline accounting (the
+    /// health plane's timeout offenses) can see the damage.
+    pub adaptive_withhold: bool,
 }
 
 /// State this peer keeps per stored fragment (= per chunk group it
@@ -205,6 +232,9 @@ struct JoinState {
     started_ms: u64,
     /// Fragment pulls counted for repair-amplification metrics.
     bytes_pulled: u64,
+    /// `JoinRetry` firings so far — the capped-backoff / give-up
+    /// counter (ISSUE 8 satellite: the retry-storm bugfix).
+    retries: u32,
 }
 
 /// State while this node *initiates* a repair (locating a new member).
@@ -285,6 +315,20 @@ pub struct VaultPeer {
     /// inside the runtime slot and is replayed into the rebuilt peer by
     /// [`Self::recover_from_wal`].
     pub wal: Wal,
+    /// Peer-health defense layer (ISSUE 8): deadlines, decayed
+    /// misbehavior scores, greylisting and equivocation quarantine.
+    /// `None` unless `cfg.peer_health` — with the flag off not even the
+    /// tracker's jitter stream is forked, so no RNG draw moves.
+    pub health: Option<HealthTracker>,
+    /// First gossiped [`SignedAnnounce`] seen per `(epoch, announcer)`
+    /// (bounded cache): a second, conflicting one from the same key is
+    /// self-contained equivocation evidence. Never feeds epoch
+    /// adoption — `Msg::EpochUpdate` from the local watcher stays the
+    /// only epoch input.
+    seen_announces: HashMap<(u64, NodeId), SignedAnnounce>,
+    /// Adaptive-withhold fault bookkeeping: data requests seen, so the
+    /// fault can duty-cycle (ignore every second one).
+    adaptive_ctr: u64,
     pub metrics: Metrics,
 }
 
@@ -294,11 +338,25 @@ impl VaultPeer {
         let id = NodeId::from_pk(&key.public);
         let info = PeerInfo { id, pk: key.public, region };
         let rng_seed = u64::from_le_bytes(id.0 .0[..8].try_into().unwrap());
+        let mut rng = Rng::new(rng_seed);
+        // The health tracker's jitter stream forks *before* any other
+        // consumer draws, so its existence is the only stream change;
+        // with the flag off the fork never happens and every legacy
+        // draw sequence is bit-identical.
+        let health = if cfg.peer_health {
+            Some(HealthTracker::new(
+                cfg.health_greylist_threshold,
+                cfg.health_decay,
+                rng.fork(0x4845_414C), // "HEAL"
+            ))
+        } else {
+            None
+        };
         VaultPeer {
             cfg,
             key,
             info,
-            rng: Rng::new(rng_seed),
+            rng,
             next_op: 1,
             store: HashMap::default(),
             store_ops: HashMap::default(),
@@ -315,6 +373,9 @@ impl VaultPeer {
             audit_rounds: HashMap::default(),
             audit_ledger: AuditLedger::default(),
             wal: Wal::new(),
+            health,
+            seen_announces: HashMap::default(),
+            adaptive_ctr: 0,
             metrics: Metrics::default(),
         }
     }
@@ -557,6 +618,8 @@ impl VaultPeer {
                 self.handle_audit_response(out, from, op, chash, index, slice)
             }
             Msg::AuditVerdict(v) => self.handle_audit_verdict(from, v),
+            Msg::AnnounceGossip(sa) => self.handle_announce_gossip(out, sa),
+            Msg::Equivocation(ev) => self.handle_equivocation(out, ev),
             Msg::Ping { op } => out.send(from, Msg::Pong { op }),
             Msg::Pong { .. } => {}
         }
@@ -673,8 +736,29 @@ impl VaultPeer {
         self.metrics.wal_appends += 1;
     }
 
+    /// Adaptive-withhold duty cycle: returns `true` when this data
+    /// request should be silently dropped (no reply at all, so the
+    /// requester's deadline expires).
+    fn adaptive_drop(&mut self) -> bool {
+        if !self.fault.adaptive_withhold {
+            return false;
+        }
+        self.adaptive_ctr += 1;
+        self.adaptive_ctr % 2 == 1
+    }
+
+    /// Slow-loris trickle delay: seven eighths of the op timeout —
+    /// past the default slow-offense threshold, under the deadline, so
+    /// the bytes do arrive but the connection is practically useless.
+    fn slow_loris_delay_ms(&self) -> u64 {
+        self.cfg.op_timeout_ms.saturating_sub(self.cfg.op_timeout_ms / 8)
+    }
+
     fn handle_get_frag(&mut self, out: &mut Outbox, from: NodeId, op: u64, chash: Hash256) {
-        let refuse = self.fault.refuse_frags;
+        if self.adaptive_drop() {
+            return; // fault: silently ignore every second data request
+        }
+        let refuse = self.fault.refuse_frags || self.fault.censor_chunk == Some(chash);
         let frag = self.store.get(&chash).and_then(|c| {
             if c.payload_dropped || refuse {
                 None // Byzantine / faulted: claims to store but serves nothing
@@ -685,14 +769,24 @@ impl VaultPeer {
         if frag.is_some() {
             self.metrics.fragments_served += 1;
         }
-        out.send(from, Msg::FragReply { op, chash, frag });
+        let reply = Msg::FragReply { op, chash, frag };
+        if self.fault.slow_loris {
+            let p = reply.default_purpose();
+            out.send_delayed(self.slow_loris_delay_ms(), from, reply, p);
+        } else {
+            out.send(from, reply);
+        }
     }
 
     fn handle_get_chunk(&mut self, out: &mut Outbox, from: NodeId, op: u64, chash: Hash256, index: u64) {
+        if self.adaptive_drop() {
+            return; // fault: silently ignore every second data request
+        }
         // Cache fast path: encode the requested fragment locally from
         // the cached chunk so only one fragment crosses the network.
+        let censored = self.fault.censor_chunk == Some(chash);
         let frag = self.store.get(&chash).and_then(|c| {
-            if c.cache_expires_ms > out.now_ms {
+            if !censored && c.cache_expires_ms > out.now_ms {
                 c.cached_chunk
                     .as_ref()
                     .map(|chunk| InnerEncoder::new(chash, chunk, self.cfg.k_inner).fragment(index))
@@ -937,6 +1031,12 @@ impl VaultPeer {
         // Expire stalled repair coordinations.
         let deadline = self.cfg.op_timeout_ms * 4;
         self.repairs.retain(|_, r| now.saturating_sub(r.started_ms) < deadline);
+
+        // Decay misbehavior scores; peers that fell back under half the
+        // greylist threshold regain full standing.
+        if let Some(h) = self.health.as_mut() {
+            self.metrics.greylists_cleared += h.decay_tick();
+        }
 
         // Close audit rounds that straggled past two ticks: judge
         // whoever answered, the silent rest fail by non-response.
@@ -1488,7 +1588,11 @@ impl VaultPeer {
         if !self.cfg.audits {
             return;
         }
-        let refuse = self.fault.refuse_frags;
+        // `censor_chunk` refuses audits for the censored chunk too —
+        // the slice *is* the fragment bytes, and serving them would
+        // hand any auditor a decodable copy of what we censor. That
+        // refusal is exactly how the audit plane catches the censor.
+        let refuse = self.fault.refuse_frags || self.fault.censor_chunk == Some(chash);
         let mut index = 0;
         let slice = self.store.get(&chash).and_then(|c| {
             index = c.frag.index;
@@ -1526,16 +1630,25 @@ impl VaultPeer {
         // transports can deliver structs unencoded, so the cap is
         // enforced here too. An over-long or wrong-length slice is no
         // answer at all — only the exact challenged window counts.
+        let mut oversize = false;
         let slice = match slice {
             Some(s) if s.len() > crate::audit::MAX_AUDIT_SLICE => {
                 self.metrics.audit_oversize_dropped += 1;
+                oversize = true;
                 None
             }
             Some(s) if s.len() != r.len as usize => None,
             s => s,
         };
         r.responses.push((from, index, slice));
-        if r.awaiting.is_empty() {
+        let closed = r.awaiting.is_empty();
+        if oversize {
+            // In-process transports deliver structs unencoded, so the
+            // wire layer's decode-reject accounting never sees this —
+            // feed the health score here.
+            self.health_offense(from, Offense::Oversize);
+        }
+        if closed {
             self.finalize_audit_round(out, op);
         }
     }
@@ -1697,6 +1810,165 @@ impl VaultPeer {
         )
     }
 
+    // ---- peer-health defense layer (ISSUE 8) ----------------------------
+
+    /// Record a weighted health offense for `from` — a no-op with the
+    /// plane off. Greylist transitions surface in the metrics.
+    fn health_offense(&mut self, from: NodeId, kind: Offense) {
+        let Some(h) = self.health.as_mut() else { return };
+        match kind {
+            Offense::Timeout => self.metrics.health_timeouts += 1,
+            Offense::SlowTrickle => self.metrics.health_slow += 1,
+            Offense::Garbage => self.metrics.health_garbage += 1,
+            Offense::Oversize => self.metrics.health_oversize += 1,
+        }
+        if h.offense(from, kind) == Standing::NewlyGreylisted {
+            self.metrics.greylists_marked += 1;
+        }
+    }
+
+    /// Transport hook (ISSUE 8 satellite): a frame from `from` was
+    /// dropped before dispatch — undecodable wire bytes or an oversize
+    /// payload. Always counted in [`MaintStats::decode_rejects`]
+    /// (hostile garbage must be visible in every bench); with the
+    /// health plane on it also feeds the sender's misbehavior score.
+    ///
+    /// [`MaintStats::decode_rejects`]: crate::proto::MaintStats
+    pub fn note_decode_reject(&mut self, from: NodeId, oversize: bool) {
+        self.metrics.maint.decode_rejects += 1;
+        let kind = if oversize { Offense::Oversize } else { Offense::Garbage };
+        self.health_offense(from, kind);
+    }
+
+    /// The response-arrival half of request tracking: if `(op, from)`
+    /// was tracked, resolve it, recording a slow-trickle offense when
+    /// the answer took `health_slow_num`/8 of the op timeout or longer.
+    fn health_resolve(&mut self, op: u64, from: NodeId, now_ms: u64) {
+        if self.health.is_none() {
+            return;
+        }
+        let slow_after = (self.cfg.op_timeout_ms * self.cfg.health_slow_num / 8).max(1);
+        let h = self.health.as_mut().unwrap();
+        if let Some(standing) = h.resolve(op, from, now_ms, slow_after) {
+            self.metrics.health_slow += 1;
+            if standing == Standing::NewlyGreylisted {
+                self.metrics.greylists_marked += 1;
+            }
+        }
+    }
+
+    /// Every responder pending on `op` for at least a full timeout
+    /// period ate its deadline: one timeout offense each. The age gate
+    /// means a request fanned out moments before the retry timer fires
+    /// keeps its full period before blame — honest peers are never
+    /// penalized by timer alignment.
+    fn health_expire_op(&mut self, op: u64, now_ms: u64) {
+        if self.health.is_none() {
+            return;
+        }
+        let min_age = self.cfg.op_timeout_ms;
+        let late = self.health.as_mut().unwrap().expire_op(op, now_ms, min_age);
+        for p in late {
+            self.health_offense(p, Offense::Timeout);
+        }
+    }
+
+    /// Gossiped signed epoch announce. Receivers never adopt epoch
+    /// state from this path — the self-addressed [`Msg::EpochUpdate`]
+    /// stays the only epoch input — it exists solely to catch
+    /// equivocators: two verifiably signed, conflicting announces for
+    /// one epoch from one key form self-contained proof, and the proof
+    /// (not the rumor) is what travels.
+    fn handle_announce_gossip(&mut self, out: &mut Outbox, sa: SignedAnnounce) {
+        let Some(h) = self.health.as_ref() else { return };
+        if !sa.verify() {
+            self.metrics.evidence_rejected += 1;
+            return;
+        }
+        let announcer = sa.announcer();
+        if h.is_quarantined(&announcer) {
+            return; // already convicted; nothing new to learn or spread
+        }
+        let key = (sa.ann.epoch, announcer);
+        match self.seen_announces.get(&key).cloned() {
+            None => {
+                if self.seen_announces.len() >= SEEN_ANNOUNCE_CAP {
+                    // Bounded cache: evict the oldest epoch's entry.
+                    if let Some(oldest) = self.seen_announces.keys().min().copied() {
+                        self.seen_announces.remove(&oldest);
+                    }
+                }
+                self.seen_announces.insert(key, sa);
+            }
+            Some(first) if first.ann != sa.ann => {
+                let ev = EquivocationEvidence { a: first, b: sa };
+                if let Some(culprit) = ev.verify() {
+                    self.metrics.equivocations_detected += 1;
+                    self.quarantine_and_gossip(out, culprit, ev);
+                }
+            }
+            Some(_) => {} // duplicate of the remembered announce
+        }
+    }
+
+    /// Gossiped equivocation evidence: self-authenticating, so the
+    /// transport-level sender is irrelevant — verify the two signatures
+    /// and the conflict, then quarantine and spread the proof once.
+    fn handle_equivocation(&mut self, out: &mut Outbox, ev: EquivocationEvidence) {
+        if self.health.is_none() {
+            return;
+        }
+        match ev.verify() {
+            Some(culprit) => {
+                self.metrics.evidence_accepted += 1;
+                self.quarantine_and_gossip(out, culprit, ev);
+            }
+            None => self.metrics.evidence_rejected += 1,
+        }
+    }
+
+    /// Quarantine `culprit` and — if this evidence is news — gossip the
+    /// self-contained proof once to every distinct peer across our
+    /// group views, so one honest observer convinces the network.
+    fn quarantine_and_gossip(&mut self, out: &mut Outbox, culprit: NodeId, ev: EquivocationEvidence) {
+        let Some(h) = self.health.as_mut() else { return };
+        if !h.quarantine(culprit) {
+            return; // already known; re-flooding adds nothing
+        }
+        let my_id = self.info.id;
+        let mut targets: Vec<NodeId> = self
+            .store
+            .values()
+            .flat_map(|cs| cs.members.keys().copied())
+            .filter(|id| *id != my_id && *id != culprit)
+            .collect();
+        targets.sort();
+        targets.dedup();
+        for t in targets {
+            out.send_p(t, Msg::Equivocation(ev.clone()), Purpose::Heartbeat);
+        }
+    }
+
+    /// Is `id` quarantined by verified equivocation evidence?
+    pub fn is_quarantined(&self, id: &NodeId) -> bool {
+        self.health.as_ref().is_some_and(|h| h.is_quarantined(id))
+    }
+
+    /// Is `id` currently greylisted by the health plane?
+    pub fn is_greylisted(&self, id: &NodeId) -> bool {
+        self.health.as_ref().is_some_and(|h| h.is_greylisted(id))
+    }
+
+    /// Current greylist size (0 with the plane off).
+    pub fn greylisted_count(&self) -> u64 {
+        self.health.as_ref().map(|h| h.greylisted_count()).unwrap_or(0)
+    }
+
+    /// Current quarantine size (0 with the plane off).
+    pub fn quarantined_count(&self) -> u64 {
+        self.health.as_ref().map(|h| h.quarantined_count()).unwrap_or(0)
+    }
+
     /// Peers this node's audit ledger currently marks suspect (sorted).
     pub fn audit_suspects(&self) -> Vec<NodeId> {
         self.audit_ledger.suspects()
@@ -1737,6 +2009,18 @@ impl VaultPeer {
                 !self.cfg.audits
                     || m.info.id == self.info.id
                     || !self.audit_ledger.is_suspect(&m.info.id)
+            })
+            // Equivocation quarantine (ISSUE 8) mirrors audit-suspect
+            // eviction: a proven equivocator no longer counts toward R,
+            // and the deficit recruits its replacement. Never applied
+            // to self (same rationale as the suspect filter above).
+            .filter(|m| {
+                m.info.id == self.info.id
+                    || self
+                        .health
+                        .as_ref()
+                        .map(|h| !h.is_quarantined(&m.info.id))
+                        .unwrap_or(true)
             })
             .collect();
         // Retiring members (rotation grace window) serve reads but no
@@ -1785,13 +2069,22 @@ impl VaultPeer {
         // placement that is the beacon-salted point, so rotation
         // recruits this epoch's eligible nodes, not last epoch's.
         let target = self.chunk_target(chash);
-        let probes: Vec<PeerInfo> = dir
+        let mut probes: Vec<PeerInfo> = dir
             .closest(&target, self.cfg.candidates)
             .into_iter()
             .filter(|p| !members.contains(&p.id) && p.id != self.info.id)
             .filter(|p| !self.cfg.audits || !self.audit_ledger.is_suspect(&p.id))
-            .take(self.cfg.repair_probe)
+            .filter(|p| {
+                self.health.as_ref().map(|h| !h.is_quarantined(&p.id)).unwrap_or(true)
+            })
             .collect();
+        if let Some(h) = self.health.as_ref() {
+            // Greylisted candidates sort behind everyone in better
+            // standing — still probed, but only when the healthy pool
+            // runs short (deprioritize, never refuse).
+            h.deprioritize(&mut probes, |p| p.id);
+        }
+        probes.truncate(self.cfg.repair_probe);
         if probes.is_empty() {
             return;
         }
@@ -1932,6 +2225,7 @@ impl VaultPeer {
             asked_frag: HashSet::default(),
             started_ms: out.now_ms,
             bytes_pulled: 0,
+            retries: 0,
         };
         // Fast path: probe members for a chunk-cache copy that can encode
         // our fragment locally (one-fragment transfer instead of
@@ -1941,6 +2235,11 @@ impl VaultPeer {
             js.asked_chunk.insert(*t);
             out.send(*t, Msg::GetChunk { op: my_op, chash, index });
         }
+        if let Some(h) = self.health.as_mut() {
+            for t in &targets {
+                h.track(my_op, *t, out.now_ms);
+            }
+        }
         self.joins.insert(chash, js);
         out.timer(self.cfg.op_timeout_ms, TimerKind::JoinRetry { chash });
     }
@@ -1948,11 +2247,12 @@ impl VaultPeer {
     fn handle_chunk_reply(
         &mut self,
         out: &mut Outbox,
-        _from: NodeId,
+        from: NodeId,
         op: u64,
         chash: Hash256,
         frag: Option<Fragment>,
     ) {
+        self.health_resolve(op, from, out.now_ms);
         let Some(js) = self.joins.get_mut(&chash) else { return };
         if js.op != op {
             return;
@@ -1971,9 +2271,14 @@ impl VaultPeer {
                     .filter(|id| !js.asked_frag.contains(*id))
                     .copied()
                     .collect();
-                for t in targets {
-                    js.asked_frag.insert(t);
-                    out.send_p(t, Msg::GetFrag { op: my_op, chash }, Purpose::Join);
+                for t in &targets {
+                    js.asked_frag.insert(*t);
+                    out.send_p(*t, Msg::GetFrag { op: my_op, chash }, Purpose::Join);
+                }
+                if let Some(h) = self.health.as_mut() {
+                    for t in targets {
+                        h.track(my_op, t, out.now_ms);
+                    }
                 }
             }
         }
@@ -1993,6 +2298,7 @@ impl VaultPeer {
             self.query_frag_reply(dir, out, from, op, chash, frag);
             return;
         }
+        self.health_resolve(op, from, out.now_ms);
         let Some(js) = self.joins.get_mut(&chash) else { return };
         if js.op != op {
             return;
@@ -2031,6 +2337,11 @@ impl VaultPeer {
         chunk_bytes: Option<Vec<u8>>,
     ) {
         let Some(js) = self.joins.remove(&chash) else { return };
+        // Join complete: release every outstanding pull deadline
+        // without blame (stragglers are not offenders).
+        if let Some(h) = self.health.as_mut() {
+            h.forget_op(js.op);
+        }
         let Some(proof) = self.own_proof(&chash, js.index) else { return };
         let now = out.now_ms;
         let mut members: HashMap<NodeId, Member> = js
@@ -2087,15 +2398,37 @@ impl VaultPeer {
     }
 
     fn join_retry(&mut self, _dir: &dyn Directory, out: &mut Outbox, chash: Hash256) {
+        // Blame whoever sat on last round's pulls for a full period.
+        if let Some(js) = self.joins.get(&chash) {
+            let op = js.op;
+            self.health_expire_op(op, out.now_ms);
+        }
         let deadline = self.cfg.op_deadline_ms;
         let Some(js) = self.joins.get_mut(&chash) else { return };
-        if out.now_ms.saturating_sub(js.started_ms) > deadline {
-            self.joins.remove(&chash);
+        // Give-up path (ISSUE 8 satellite 1): the old code re-armed at a
+        // fixed `op_timeout_ms` forever, so a permanently-partitioned
+        // group pinned the requester's RepairCoord slot until its own
+        // 4×timeout expiry and spammed GetFrag each period. Bounded
+        // retries + a negative ack release the slot explicitly.
+        if js.retries >= self.cfg.join_retry_max
+            || out.now_ms.saturating_sub(js.started_ms) > deadline
+        {
+            let js = self.joins.remove(&chash).unwrap();
+            self.metrics.join_give_ups += 1;
+            if let Some(h) = self.health.as_mut() {
+                h.forget_op(js.op);
+            }
+            out.send(
+                js.requester,
+                Msg::RepairAck { op: js.requester_op, chash, index: js.index, ok: false },
+            );
             return;
         }
+        js.retries += 1;
         // Re-pull fragments from everyone not asked yet (or re-ask all if
         // exhausted — replies are idempotent pushes into the decoder).
         let my_op = js.op;
+        let retries = js.retries;
         let mut targets: Vec<NodeId> = js
             .members
             .keys()
@@ -2105,11 +2438,23 @@ impl VaultPeer {
         if targets.is_empty() {
             targets = js.members.keys().copied().collect();
         }
-        for t in targets {
-            js.asked_frag.insert(t);
-            out.send_p(t, Msg::GetFrag { op: my_op, chash }, Purpose::Join);
+        for t in &targets {
+            js.asked_frag.insert(*t);
+            out.send_p(*t, Msg::GetFrag { op: my_op, chash }, Purpose::Join);
         }
-        out.timer(self.cfg.op_timeout_ms, TimerKind::JoinRetry { chash });
+        if let Some(h) = self.health.as_mut() {
+            for t in targets {
+                h.track(my_op, t, out.now_ms);
+            }
+        }
+        // Capped exponential backoff between retries: 2T, 4T, 8T, 8T…
+        // (jittered when the health plane is on, so a whole group lost
+        // to one outage doesn't re-pull in lockstep).
+        let delay = match self.health.as_mut() {
+            Some(h) => h.backoff_ms(self.cfg.op_timeout_ms, retries, JOIN_BACKOFF_CAP_EXP),
+            None => capped_backoff_ms(self.cfg.op_timeout_ms, retries, JOIN_BACKOFF_CAP_EXP),
+        };
+        out.timer(delay, TimerKind::JoinRetry { chash });
     }
 
     fn on_op_timeout(&mut self, dir: &dyn Directory, out: &mut Outbox, op: u64) {
@@ -3313,5 +3658,237 @@ mod tests {
         assert_eq!(joined.stored_chunks(), 1, "replacement must reconstruct and join");
         assert_eq!(joined.metrics.repairs_joined, 1);
         assert!(joined.serves_fragment(&chash));
+    }
+
+    // ---- peer-health defense layer (ISSUE 8) -------------------------
+
+    /// r == n ⇒ eligibility probability 1, so a repair-join invitation
+    /// always passes the own-proof gate.
+    fn join_cfg() -> VaultConfig {
+        VaultConfig {
+            k_inner: 2,
+            r_inner: 4,
+            n_nodes: 4,
+            claim_verify: ClaimVerify::Never,
+            // Long op deadline so the bounded-retry give-up path (and
+            // not the deadline) is what ends the join.
+            op_deadline_ms: 1_000_000,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn join_retry_backs_off_and_gives_up_releasing_the_slot() {
+        // ISSUE 8 satellite 1 regression: the old code re-armed the
+        // JoinRetry timer at a fixed op_timeout_ms forever. Against a
+        // permanently-partitioned group the retries must now back off
+        // 2T, 4T, 8T (capped), stop after `join_retry_max` rounds, and
+        // release the requester's RepairCoord slot with a negative ack.
+        let cfg = join_cfg();
+        let dir = StubDir { peers: vec![] };
+        let mut a = mk_peer(1, &cfg);
+        let requester = mk_peer(2, &cfg);
+        let m1 = mk_peer(3, &cfg);
+        let m2 = mk_peer(4, &cfg);
+        let chash = Hash256::of(b"join-retry-chunk");
+        let mut out = Outbox::at(1_000);
+        a.on_message(
+            &dir,
+            &mut out,
+            requester.id(),
+            Msg::RepairReq {
+                op: 77,
+                chash,
+                index: 1,
+                members: vec![m1.info, m2.info],
+                expires_ms: u64::MAX,
+            },
+        );
+        assert!(a.joins.contains_key(&chash), "join slot must open");
+        assert_eq!(out.timers.len(), 1);
+        let (first_delay, _) = out.timers[0];
+        assert_eq!(first_delay, cfg.op_timeout_ms, "first arm keeps the base period");
+
+        let t = cfg.op_timeout_ms;
+        let mut now = 1_000 + first_delay;
+        let mut delays = Vec::new();
+        let mut pulls = 0usize;
+        loop {
+            let mut out = Outbox::at(now);
+            a.on_timer(&dir, &mut out, TimerKind::JoinRetry { chash });
+            pulls += out
+                .sends
+                .iter()
+                .filter(|(_, m, _)| matches!(m, Msg::GetFrag { .. }))
+                .count();
+            if a.joins.is_empty() {
+                assert!(
+                    out.sends.iter().any(|(to, m, _)| *to == requester.id()
+                        && matches!(m, Msg::RepairAck { op: 77, ok: false, .. })),
+                    "give-up must release the requester's reconstruction slot"
+                );
+                assert!(out.timers.is_empty(), "no timer re-armed after giving up");
+                break;
+            }
+            let (d, _) = out.timers[0];
+            delays.push(d);
+            now += d;
+        }
+        // join_retry_max = 5 bounded rounds, two members re-pulled each.
+        assert_eq!(delays, vec![2 * t, 4 * t, 8 * t, 8 * t, 8 * t]);
+        assert_eq!(pulls, 10, "retry rounds must be bounded");
+        assert_eq!(a.metrics.join_give_ups, 1);
+    }
+
+    #[test]
+    fn conflicting_announces_convict_and_gossip_evidence() {
+        let cfg = VaultConfig { peer_health: true, ..test_cfg() };
+        let dir = StubDir { peers: vec![] };
+        let mut a = mk_peer(1, &cfg);
+        let fellow = mk_peer(2, &cfg);
+        // `a` holds one group so a conviction has somewhere to gossip.
+        let chash = Hash256::of(b"evidence-chunk");
+        let proof = some_proof(&a);
+        a.force_store(0, chash, frag(1), proof, vec![fellow.info]);
+
+        let liar = SigningKey::from_seed(&[0xEE; 32]);
+        let culprit = NodeId::from_pk(&liar.public);
+        let ann_a = EpochAnnounce { epoch: 5, beacon: [1; 32], tx_digest: [2; 32], n_nodes: 9 };
+        let ann_b = EpochAnnounce { beacon: [3; 32], ..ann_a.clone() };
+        let sa = SignedAnnounce::sign(&liar, ann_a);
+        let sb = SignedAnnounce::sign(&liar, ann_b);
+
+        // First announce for the epoch: remembered, nothing to convict.
+        let mut out = Outbox::at(100);
+        a.on_message(&dir, &mut out, fellow.id(), Msg::AnnounceGossip(sa.clone()));
+        assert_eq!(a.metrics.equivocations_detected, 0);
+        assert!(!a.is_quarantined(&culprit));
+
+        // A conflicting signature for the same epoch is the conviction.
+        let mut out = Outbox::at(200);
+        a.on_message(&dir, &mut out, fellow.id(), Msg::AnnounceGossip(sb));
+        assert_eq!(a.metrics.equivocations_detected, 1);
+        assert!(a.is_quarantined(&culprit));
+        let ev = out
+            .sends
+            .iter()
+            .find_map(|(to, m, _)| match m {
+                Msg::Equivocation(ev) if *to == fellow.id() => Some(ev.clone()),
+                _ => None,
+            })
+            .expect("evidence must gossip to group fellows");
+        assert_eq!(ev.verify(), Some(culprit));
+
+        // Re-delivering the rumor adds nothing: already convicted.
+        let mut out = Outbox::at(300);
+        a.on_message(&dir, &mut out, fellow.id(), Msg::AnnounceGossip(sa));
+        assert_eq!(a.metrics.equivocations_detected, 1);
+        assert!(out.sends.is_empty());
+
+        // A third party convicts from the self-contained proof alone —
+        // no trust in the reporter needed.
+        let mut b = mk_peer(3, &cfg);
+        let mut out = Outbox::at(400);
+        b.on_message(&dir, &mut out, a.id(), Msg::Equivocation(ev.clone()));
+        assert!(b.is_quarantined(&culprit));
+        assert_eq!(b.metrics.evidence_accepted, 1);
+
+        // A forged mix (second half re-signed by a different key) is junk.
+        let other = SigningKey::from_seed(&[0xDD; 32]);
+        let forged = EquivocationEvidence {
+            a: ev.a.clone(),
+            b: SignedAnnounce::sign(&other, ev.b.ann.clone()),
+        };
+        let mut out = Outbox::at(500);
+        b.on_message(&dir, &mut out, a.id(), Msg::Equivocation(forged));
+        assert_eq!(b.metrics.evidence_rejected, 1);
+
+        // With the plane off, the entire evidence path is inert.
+        let mut c = mk_peer(4, &test_cfg());
+        let mut out = Outbox::at(600);
+        c.on_message(&dir, &mut out, a.id(), Msg::Equivocation(ev));
+        assert!(!c.is_quarantined(&culprit));
+        assert_eq!(c.metrics.evidence_accepted, 0);
+        assert!(out.sends.is_empty());
+    }
+
+    #[test]
+    fn issue8_fault_hooks_censor_slow_loris_and_duty_cycle() {
+        let cfg = test_cfg();
+        let mut p = mk_peer(1, &cfg);
+        let asker = mk_peer(2, &cfg);
+        let censored = Hash256::of(b"censored-chunk");
+        let served = Hash256::of(b"served-chunk");
+        let pr1 = some_proof(&p);
+        let pr2 = some_proof(&p);
+        p.force_store(0, censored, frag(1), pr1, vec![asker.info]);
+        p.force_store(0, served, frag(2), pr2, vec![asker.info]);
+
+        // Targeted censorship: the censored chunk gets a polite miss,
+        // everything else serves normally.
+        p.fault.censor_chunk = Some(censored);
+        let mut out = Outbox::at(100);
+        p.handle_get_frag(&mut out, asker.id(), 1, censored);
+        p.handle_get_frag(&mut out, asker.id(), 2, served);
+        let replies: Vec<bool> = out
+            .sends
+            .iter()
+            .filter_map(|(_, m, _)| match m {
+                Msg::FragReply { frag, .. } => Some(frag.is_some()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(replies, vec![false, true]);
+
+        // Slow loris: intact bytes, but held to 7/8 of the op timeout
+        // in the transport's delayed queue.
+        p.fault.censor_chunk = None;
+        p.fault.slow_loris = true;
+        let mut out = Outbox::at(200);
+        p.handle_get_frag(&mut out, asker.id(), 3, served);
+        assert!(out.sends.is_empty());
+        assert_eq!(out.delayed.len(), 1);
+        let (hold, _, m, _) = &out.delayed[0];
+        assert_eq!(*hold, cfg.op_timeout_ms - cfg.op_timeout_ms / 8);
+        assert!(matches!(m, Msg::FragReply { frag: Some(_), .. }));
+
+        // Adaptive withholding: every second data request silently
+        // dropped, the rest served honestly.
+        p.fault.slow_loris = false;
+        p.fault.adaptive_withhold = true;
+        let mut dropped = 0usize;
+        for i in 0..4u64 {
+            let mut out = Outbox::at(300 + i);
+            p.handle_get_frag(&mut out, asker.id(), 10 + i, served);
+            if out.sends.is_empty() && out.delayed.is_empty() {
+                dropped += 1;
+            }
+        }
+        assert_eq!(dropped, 2);
+    }
+
+    #[test]
+    fn decode_rejects_are_counted_and_feed_the_health_score() {
+        let cfg = VaultConfig { peer_health: true, ..test_cfg() };
+        let mut p = mk_peer(1, &cfg);
+        let bad = mk_peer(2, &cfg);
+        assert!(!p.is_greylisted(&bad.id()));
+        p.note_decode_reject(bad.id(), false); // garbage: weight 1.5
+        assert_eq!(p.metrics.maint.decode_rejects, 1);
+        assert!(!p.is_greylisted(&bad.id()));
+        p.note_decode_reject(bad.id(), true); // oversize: 3.0 total ⇒ greylist
+        assert_eq!(p.metrics.maint.decode_rejects, 2);
+        assert!(p.is_greylisted(&bad.id()));
+        assert_eq!(p.metrics.greylists_marked, 1);
+        assert_eq!(p.metrics.health_garbage, 1);
+        assert_eq!(p.metrics.health_oversize, 1);
+        assert_eq!(p.greylisted_count(), 1);
+
+        // With the plane off the stat still counts — hostile garbage
+        // stays visible in every bench — but no score forms.
+        let mut q = mk_peer(3, &test_cfg());
+        q.note_decode_reject(bad.id(), false);
+        assert_eq!(q.metrics.maint.decode_rejects, 1);
+        assert!(!q.is_greylisted(&bad.id()));
     }
 }

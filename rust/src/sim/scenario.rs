@@ -23,12 +23,15 @@
 //! (`tests/scenario_matrix.rs` runs every scenario twice).
 
 use crate::api::{OpHandle, OpOutcome, VaultApi};
+use crate::chain::SignedAnnounce;
 use crate::codec::ObjectId;
 use crate::coordinator::workload::{run_open_loop, OpenLoopSpec};
 use crate::coordinator::{Cluster, ClusterConfig, ClusterRuntime};
 use crate::crypto::ed25519::SigningKey;
 use crate::crypto::Hash256;
+use crate::dht::kademlia::eclipse_trial;
 use crate::dht::{rank_distance, NodeId};
+use crate::proto::messages::{EpochAnnounce, Msg};
 use crate::proto::ClaimVerify;
 use crate::util::detmap::DetHashSet;
 use crate::util::rng::{fold64 as fold, Rng};
@@ -110,6 +113,39 @@ pub enum Fault {
     /// withholding or framing — thins the honest remainder so audit
     /// load and repair interact under churn.
     CrashHonestHolders { object: usize, chunk: usize, count: usize },
+    /// Eclipse / DHT-poisoning (ISSUE 8): run the deterministic
+    /// routing-table poisoning model ([`eclipse_trial`]) — `sybils`
+    /// flooding a victim's table, then `lookups` measured lookups —
+    /// with the bucket-diversity guard tied to this scenario's
+    /// `peer_health` flag. The honest-reach fraction lands in
+    /// [`PhaseOutcome::eclipse_reach_ppm`] and the fingerprint, so the
+    /// off/on twin quantifies exactly what the guard buys.
+    Eclipse { sybils: usize, lookups: usize },
+    /// Beacon equivocation (ISSUE 8): mint a bonded Byzantine member
+    /// whose signing key the scenario controls, then gossip the
+    /// genuine epoch announce to every live peer and a conflicting
+    /// (forked-beacon) announce for the *same* epoch to a quarter of
+    /// them. Any overlap peer holds two conflicting signatures — a
+    /// self-contained [`crate::chain::EquivocationEvidence`] — and the
+    /// health plane must quarantine the equivocator network-wide.
+    /// Requires [`ScenarioSpec::epoch_rotation`].
+    BeaconEquivocate,
+    /// Targeted censorship (ISSUE 8): `members` holders refuse to
+    /// serve exactly one chunk (reads *and* audit slices) while
+    /// serving everything else — the object-level denial the audit
+    /// plane must catch even though every other request looks healthy.
+    CensorObject { object: usize, chunk: usize, members: usize },
+    /// Slow-loris responders (ISSUE 8): `members` holders answer
+    /// fragment requests only at the last moment before the
+    /// requester's op timeout — technically responsive, practically
+    /// useless, invisible to timeout-only accounting. Only the health
+    /// plane's slow-trickle offenses can see them.
+    SlowLoris { object: usize, chunk: usize, members: usize },
+    /// Adaptive withholding (ISSUE 8, the PR 7 escalation): `members`
+    /// holders silently drop every second data request while answering
+    /// heartbeats and audit challenges honestly — storage intact,
+    /// audits green. Only per-request deadline accounting catches it.
+    AdaptiveWithhold { object: usize, chunk: usize, members: usize },
 }
 
 /// An invariant evaluated at the end of a phase.
@@ -154,6 +190,36 @@ pub enum Check {
     /// since the start of the run stays at or below this budget —
     /// audits must not thrash the repair path.
     RepairsInitiatedAtMost(u64),
+    /// False-greylist guard (ISSUE 8): no live peer may greylist or
+    /// quarantine any live *honest* peer (not Byzantine, no injected
+    /// fault) — the health plane's zero-false-positive contract,
+    /// asserted in every adversarial-resilience scenario.
+    NoHonestGreylisted,
+    /// Health-plane detection signal (ISSUE 8): the cluster-wide sum
+    /// of recorded offenses (timeouts + slow-trickle + garbage +
+    /// oversize) must land in `[min, max]`. Off-twins assert `[0, 0]`
+    /// (no tracker ⇒ no detection); on-twins assert `min ≥ 1` and the
+    /// measured value lands in [`PhaseOutcome::health_offenses`] for
+    /// the cross-twin comparison.
+    HealthOffensesWithin { min: u64, max: u64 },
+    /// Cluster-wide count of (observer, greylisted-peer) relationships
+    /// must land in `[min, max]`; the tally lands in
+    /// [`PhaseOutcome::greylists`]. Censorship twins assert `[0, 0]`:
+    /// polite refusals must *not* feed the health score.
+    GreylistsWithin { min: u64, max: u64 },
+    /// Equivocation detection (ISSUE 8): some Byzantine live peer must
+    /// be quarantined by at least `min_frac` of live honest peers. The
+    /// best observed quarantiner count lands in
+    /// [`PhaseOutcome::quarantiners`]; off-twins pass `0.0` to record
+    /// their (zero) coverage for comparison.
+    EquivocatorQuarantined { min_frac: f64 },
+    /// Audit-plane view of ISSUE 8 fault families: every live censor /
+    /// adaptive withholder must be audit-suspected by a number of live
+    /// clean peers within `[min, max]`. Censor twins assert `min ≥ 2`
+    /// (the audit plane catches refusal of audit slices); adaptive
+    /// twins assert `[0, 0]` — audits stay green, which is exactly why
+    /// the health plane has to exist.
+    FaultedAuditSuspectersWithin { min: usize, max: usize },
 }
 
 /// A timed phase: inject, advance virtual time, assert.
@@ -198,6 +264,11 @@ pub struct ScenarioSpec {
     /// Per-(chunk, fellow) auditor designation probability when
     /// `audits` is on.
     pub audit_rate: f64,
+    /// Peer-health defense plane (ISSUE 8): per-request deadline
+    /// tracking, misbehavior scoring, greylisting, equivocation
+    /// evidence, and the DHT bucket-diversity guard. Off by default so
+    /// every pre-existing scenario fingerprint is byte-identical.
+    pub peer_health: bool,
     pub phases: Vec<Phase>,
 }
 
@@ -218,8 +289,17 @@ impl ScenarioSpec {
             rotation_grace_ms: 20_000,
             audits: false,
             audit_rate: 0.25,
+            peer_health: false,
             phases: Vec::new(),
         }
+    }
+
+    /// Enable the peer-health defense plane (ISSUE 8): request
+    /// deadlines, decayed misbehavior scores, greylisting, equivocation
+    /// evidence, and the eclipse bucket-diversity guard.
+    pub fn peer_health(mut self) -> Self {
+        self.peer_health = true;
+        self
     }
 
     /// Enable the retrievability audit plane (ISSUE 7) at the given
@@ -295,6 +375,16 @@ pub struct PhaseOutcome {
     /// initiated as sampled by [`Check::RepairsInitiatedAtMost`].
     pub suspect_pairs: usize,
     pub repairs_initiated: u64,
+    /// Peer-health tallies (ISSUE 8; zero when no health checks ran):
+    /// honest reach of the eclipse trial in parts-per-million, total
+    /// recorded offenses, greylist relationships, best quarantiner
+    /// count for any Byzantine peer, and honest peers found greylisted
+    /// or quarantined (the false-positive count — must stay 0).
+    pub eclipse_reach_ppm: u64,
+    pub health_offenses: u64,
+    pub greylists: u64,
+    pub quarantiners: usize,
+    pub honest_greylisted: usize,
 }
 
 /// Full scenario result.
@@ -338,6 +428,7 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
     cfg.vault.rotation_grace_ms = spec.rotation_grace_ms;
     cfg.vault.audits = spec.audits;
     cfg.vault.audit_rate = spec.audit_rate;
+    cfg.vault.peer_health = spec.peer_health;
     cfg.vault.heartbeat_ms = 5_000;
     cfg.vault.suspicion_ms = 15_000;
     cfg.vault.tick_ms = 5_000;
@@ -429,6 +520,21 @@ fn holders<N: ClusterRuntime>(net: &N, chash: &Hash256) -> Vec<usize> {
 fn chunk_of(corpus: &[(ObjectId, Vec<u8>)], object: usize, chunk: usize) -> Hash256 {
     let (id, _) = &corpus[object % corpus.len()];
     id.chunks[chunk % id.chunks.len()]
+}
+
+/// True when peer `i` is clean for the purposes of the health plane's
+/// zero-false-positive contract: not Byzantine and carrying no
+/// injected fault at all.
+fn is_clean<N: ClusterRuntime>(net: &N, i: usize) -> bool {
+    let p = net.peer(i);
+    !p.cfg.byzantine
+        && !p.fault.mute_heartbeats
+        && !p.fault.refuse_frags
+        && !p.fault.refuse_repairs
+        && !p.fault.frame_audits
+        && p.fault.censor_chunk.is_none()
+        && !p.fault.slow_loris
+        && !p.fault.adaptive_withhold
 }
 
 fn inject_fault<N: ClusterRuntime>(
@@ -611,6 +717,75 @@ fn inject_fault<N: ClusterRuntime>(
                     *fp = fold(*fp, i as u64 ^ 0xCA11);
                     killed += 1;
                 }
+            }
+        }
+        Fault::Eclipse { sybils, lookups } => {
+            // The trial is a pure function of its inputs — the cluster
+            // only supplies the population size, the scenario rng the
+            // seed, and the defense flag whether the bucket-diversity
+            // guard is armed.
+            let guard = cluster.config().vault.peer_health;
+            let report =
+                eclipse_trial(cluster.net.len(), *sybils, 3, *lookups, rng.next_u64(), guard);
+            outcome.eclipse_reach_ppm = (report.reach_frac() * 1e6) as u64;
+            *fp = fold(*fp, outcome.eclipse_reach_ppm ^ 0xEC5E);
+            *fp = fold(*fp, report.sybils_resident);
+            *fp = fold(*fp, report.honest_resident);
+        }
+        Fault::BeaconEquivocate => {
+            // The equivocator is a bonded member whose signing key the
+            // scenario controls (spawn_seeded derives identity from the
+            // seed exactly like a real node). It shows the genuine
+            // sealed view to everyone and a forked beacon for the same
+            // epoch to a quarter of the peers: a perfect split would
+            // need control of the gossip graph itself, and any overlap
+            // peer holds a self-contained conviction.
+            let mut seed = [0u8; 32];
+            rng.fill_bytes(&mut seed);
+            let key = SigningKey::from_seed(&seed);
+            let idx = cluster.spawn_seeded(0, seed, true);
+            let view = cluster
+                .epoch_view()
+                .expect("Fault::BeaconEquivocate requires epoch_rotation");
+            let genuine = EpochAnnounce {
+                epoch: view.epoch,
+                beacon: view.beacon,
+                tx_digest: view.tx_digest,
+                n_nodes: view.n_nodes() as u64,
+            };
+            let mut forked = genuine.clone();
+            rng.fill_bytes(&mut forked.beacon);
+            let sa = SignedAnnounce::sign(&key, genuine);
+            let sb = SignedAnnounce::sign(&key, forked);
+            let live: Vec<usize> =
+                (0..cluster.net.len()).filter(|&i| cluster.net.is_up(i)).collect();
+            for &i in &live {
+                cluster.net.inject(i, Msg::AnnounceGossip(sa.clone()));
+            }
+            for &i in live.iter().take((live.len() / 4).max(1)) {
+                cluster.net.inject(i, Msg::AnnounceGossip(sb.clone()));
+            }
+            *fp = fold(*fp, idx as u64 ^ 0xE0C1);
+        }
+        Fault::CensorObject { object, chunk, members } => {
+            let chash = chunk_of(corpus, *object, *chunk);
+            for i in holders(&cluster.net, &chash).into_iter().take(*members) {
+                cluster.net.peer_mut(i).fault.censor_chunk = Some(chash);
+                *fp = fold(*fp, i as u64 ^ 0xCE45);
+            }
+        }
+        Fault::SlowLoris { object, chunk, members } => {
+            let chash = chunk_of(corpus, *object, *chunk);
+            for i in holders(&cluster.net, &chash).into_iter().take(*members) {
+                cluster.net.peer_mut(i).fault.slow_loris = true;
+                *fp = fold(*fp, i as u64 ^ 0x510B);
+            }
+        }
+        Fault::AdaptiveWithhold { object, chunk, members } => {
+            let chash = chunk_of(corpus, *object, *chunk);
+            for i in holders(&cluster.net, &chash).into_iter().take(*members) {
+                cluster.net.peer_mut(i).fault.adaptive_withhold = true;
+                *fp = fold(*fp, i as u64 ^ 0xAD47);
             }
         }
     }
@@ -824,6 +999,109 @@ fn run_check<N: ClusterRuntime>(
                 outcome
                     .failures
                     .push(format!("repairs initiated {total} exceeds budget {limit}"));
+            }
+        }
+        Check::NoHonestGreylisted => {
+            let n = cluster.net.len();
+            let clean: Vec<(usize, NodeId)> = (0..n)
+                .filter(|&i| cluster.net.is_up(i) && is_clean(&cluster.net, i))
+                .map(|i| (i, cluster.net.peer(i).id()))
+                .collect();
+            let mut bad = 0usize;
+            for observer in (0..n).filter(|&i| cluster.net.is_up(i)) {
+                for (ci, cid) in &clean {
+                    if observer == *ci {
+                        continue;
+                    }
+                    let p = cluster.net.peer(observer);
+                    if p.is_greylisted(cid) || p.is_quarantined(cid) {
+                        bad += 1;
+                        outcome.failures.push(format!(
+                            "peer #{observer} greylists/quarantines honest peer #{ci}"
+                        ));
+                    }
+                }
+            }
+            outcome.honest_greylisted += bad;
+            *fp = fold(*fp, bad as u64 ^ 0x6EE1);
+        }
+        Check::HealthOffensesWithin { min, max } => {
+            let total: u64 = (0..cluster.net.len())
+                .map(|i| {
+                    let m = &cluster.net.peer(i).metrics;
+                    m.health_timeouts + m.health_slow + m.health_garbage + m.health_oversize
+                })
+                .sum();
+            outcome.health_offenses = total;
+            *fp = fold(*fp, total ^ 0x0FF5);
+            if total < *min || total > *max {
+                outcome
+                    .failures
+                    .push(format!("health offenses {total} outside [{min}, {max}]"));
+            }
+        }
+        Check::GreylistsWithin { min, max } => {
+            let total: u64 = (0..cluster.net.len())
+                .filter(|&i| cluster.net.is_up(i))
+                .map(|i| cluster.net.peer(i).greylisted_count())
+                .sum();
+            outcome.greylists = total;
+            *fp = fold(*fp, total ^ 0x69EE);
+            if total < *min || total > *max {
+                outcome
+                    .failures
+                    .push(format!("greylist relationships {total} outside [{min}, {max}]"));
+            }
+        }
+        Check::EquivocatorQuarantined { min_frac } => {
+            let n = cluster.net.len();
+            let culprits: Vec<NodeId> = (0..n)
+                .filter(|&i| cluster.net.peer(i).cfg.byzantine)
+                .map(|i| cluster.net.peer(i).id())
+                .collect();
+            let observers: Vec<usize> = (0..n)
+                .filter(|&i| cluster.net.is_up(i) && !cluster.net.peer(i).cfg.byzantine)
+                .collect();
+            let mut best = 0usize;
+            for c in &culprits {
+                let q = observers
+                    .iter()
+                    .filter(|&&i| cluster.net.peer(i).is_quarantined(c))
+                    .count();
+                best = best.max(q);
+            }
+            outcome.quarantiners = best;
+            *fp = fold(*fp, best as u64 ^ 0xE0C2);
+            let frac = best as f64 / observers.len().max(1) as f64;
+            if frac < *min_frac {
+                outcome.failures.push(format!(
+                    "equivocator quarantined by {best}/{} = {frac:.2} < {min_frac}",
+                    observers.len()
+                ));
+            }
+        }
+        Check::FaultedAuditSuspectersWithin { min, max } => {
+            let n = cluster.net.len();
+            let faulted: Vec<(usize, NodeId)> = (0..n)
+                .filter(|&i| {
+                    let p = cluster.net.peer(i);
+                    cluster.net.is_up(i)
+                        && (p.fault.censor_chunk.is_some() || p.fault.adaptive_withhold)
+                })
+                .map(|i| (i, cluster.net.peer(i).id()))
+                .collect();
+            for (wi, wid) in &faulted {
+                let suspecters = (0..n)
+                    .filter(|&i| i != *wi && cluster.net.is_up(i) && is_clean(&cluster.net, i))
+                    .filter(|&i| cluster.net.peer(i).is_audit_suspect(wid))
+                    .count();
+                outcome.suspect_pairs += suspecters;
+                *fp = fold(*fp, suspecters as u64 ^ 0xFA5C);
+                if suspecters < *min || suspecters > *max {
+                    outcome.failures.push(format!(
+                        "faulted peer #{wi}: audit-suspected by {suspecters} peers, want [{min}, {max}]"
+                    ));
+                }
             }
         }
         Check::GroupsRecoveredTo(frac) => {

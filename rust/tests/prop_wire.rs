@@ -4,6 +4,7 @@
 //! panic the decoder. Byzantine peers control these bytes (§3.2), so
 //! decode must be total: `Ok` or a [`WireError`], nothing else.
 
+use vault::chain::{EquivocationEvidence, SignedAnnounce};
 use vault::codec::rateless::Fragment;
 use vault::crypto::ed25519::SigningKey;
 use vault::crypto::vrf;
@@ -133,7 +134,84 @@ fn all_messages() -> Vec<Msg> {
             proof,
             sig: [0x31; 64],
         }),
+        // Adversarial resilience plane (ISSUE 8): signed announce
+        // gossip and self-contained equivocation evidence inherit the
+        // full truncation / bit-flip / garbage suite like every variant.
+        Msg::AnnounceGossip(SignedAnnounce::sign(
+            &sk,
+            EpochAnnounce { epoch: 41, beacon: [0x41; 32], tx_digest: [0x42; 32], n_nodes: 64 },
+        )),
+        Msg::Equivocation(EquivocationEvidence {
+            a: SignedAnnounce::sign(
+                &sk,
+                EpochAnnounce { epoch: 41, beacon: [1; 32], tx_digest: [2; 32], n_nodes: 64 },
+            ),
+            b: SignedAnnounce::sign(
+                &sk,
+                EpochAnnounce { epoch: 41, beacon: [9; 32], tx_digest: [2; 32], n_nodes: 64 },
+            ),
+        }),
     ]
+}
+
+#[test]
+fn any_two_distinct_announces_for_one_epoch_are_evidence() {
+    // The conviction property the quarantine plane rests on: ANY two
+    // distinct validly-signed `EpochAnnounce`s by one key for one epoch
+    // form self-contained evidence, regardless of which field differs.
+    // Mixed signers, cross-epoch pairs, re-signed (forged) halves, and
+    // identical announces must all verify as nothing.
+    let liar = SigningKey::from_seed(&[0xE1; 32]);
+    let culprit = NodeId::from_pk(&liar.public);
+    let base = EpochAnnounce { epoch: 77, beacon: [3; 32], tx_digest: [4; 32], n_nodes: 128 };
+    let variants: Vec<EpochAnnounce> = vec![
+        EpochAnnounce { beacon: [0xAA; 32], ..base.clone() },
+        EpochAnnounce { tx_digest: [0xBB; 32], ..base.clone() },
+        EpochAnnounce { n_nodes: 129, ..base.clone() },
+        EpochAnnounce { beacon: [0; 32], tx_digest: [0; 32], n_nodes: 0, ..base.clone() },
+    ];
+    for (i, va) in variants.iter().enumerate() {
+        for (j, vb) in variants.iter().enumerate() {
+            let ev = EquivocationEvidence {
+                a: SignedAnnounce::sign(&liar, va.clone()),
+                b: SignedAnnounce::sign(&liar, vb.clone()),
+            };
+            if i == j {
+                assert_eq!(ev.verify(), None, "identical announces are not evidence");
+            } else {
+                assert_eq!(ev.verify(), Some(culprit), "distinct pair ({i},{j}) must convict");
+            }
+            // Evidence survives the wire intact: conviction is a
+            // property of the bytes, not of who relayed them.
+            let msg = Msg::Equivocation(ev.clone());
+            match Msg::from_bytes(&msg.to_bytes()).expect("evidence must round-trip") {
+                Msg::Equivocation(got) => assert_eq!(got.verify(), ev.verify()),
+                other => panic!("evidence decoded as {}", other.kind_name()),
+            }
+        }
+    }
+
+    // Cross-epoch pairs are consistent behavior, not equivocation.
+    let other_epoch = EpochAnnounce { epoch: 78, ..base.clone() };
+    let ev = EquivocationEvidence {
+        a: SignedAnnounce::sign(&liar, base.clone()),
+        b: SignedAnnounce::sign(&liar, other_epoch),
+    };
+    assert_eq!(ev.verify(), None);
+
+    // Mixed signers: two nodes legitimately disagreeing convicts no one.
+    let honest = SigningKey::from_seed(&[0xE2; 32]);
+    let ev = EquivocationEvidence {
+        a: SignedAnnounce::sign(&liar, base.clone()),
+        b: SignedAnnounce::sign(&honest, variants[0].clone()),
+    };
+    assert_eq!(ev.verify(), None);
+
+    // Forged halves: valid first signature, fabricated second.
+    let mut forged = SignedAnnounce::sign(&liar, variants[0].clone());
+    forged.sig[0] ^= 0x01;
+    let ev = EquivocationEvidence { a: SignedAnnounce::sign(&liar, base), b: forged };
+    assert_eq!(ev.verify(), None);
 }
 
 #[test]

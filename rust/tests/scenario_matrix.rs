@@ -567,6 +567,235 @@ fn scenario_audit_load_under_churn_and_rotation() {
     assert_eq!(report.final_peers, 48 + 8);
 }
 
+// ---- ISSUE 8: adversarial resilience off/on twins ----------------------
+//
+// Each fault family runs twice as a twin pair: defenses off, then
+// defenses on, identical otherwise. Both runs are themselves executed
+// twice with equal fingerprints (determinism), the measured bound must
+// be strictly better with the defense armed, and no honest peer may be
+// greylisted or quarantined anywhere.
+
+#[test]
+fn scenario_eclipse_twins_guard_preserves_reach() {
+    // Routing-table poisoning: 300 sybils flood a victim's table for
+    // three rounds, then 40 lookups measure whether honest holders are
+    // still reachable. The bucket-diversity guard (region cap +
+    // verified-contact preference) is tied to `peer_health`.
+    let mk = |name: &'static str, ph: bool| {
+        let mut s = ScenarioSpec::small(name, 2626, 100);
+        if ph {
+            s = s.peer_health();
+        }
+        s.phase(
+            "poison-and-measure",
+            vec![Fault::Eclipse { sybils: 300, lookups: 40 }],
+            20_000,
+            vec![Check::AllObjectsReadable, Check::NoHonestGreylisted],
+        )
+    };
+    let off = run_deterministic(&mk("eclipse_unguarded", false));
+    let on = run_deterministic(&mk("eclipse_guarded", true));
+    let (off_reach, on_reach) =
+        (off.phases[0].eclipse_reach_ppm, on.phases[0].eclipse_reach_ppm);
+    assert!(
+        on_reach > off_reach,
+        "guard must strictly improve honest reach (on={on_reach}ppm off={off_reach}ppm)"
+    );
+    assert!(
+        on_reach >= 900_000,
+        "guarded availability floor: honest reach {on_reach}ppm < 90%"
+    );
+    assert_eq!(on.phases[0].honest_greylisted, 0);
+}
+
+#[test]
+fn scenario_beacon_equivocation_twins_evidence_quarantines() {
+    // A bonded member signs two conflicting announces for the same
+    // epoch: the genuine view to everyone, a forked beacon to a
+    // quarter of the peers. Overlap peers hold a self-contained
+    // conviction; with the health plane on, evidence gossip must
+    // quarantine the equivocator across at least half the cluster.
+    // With it off, the conflicting announces are inert.
+    let mk = |name: &'static str, ph: bool| {
+        let mut s = ScenarioSpec::small(name, 2727, 40).epoch_rotation(60_000, 20_000);
+        if ph {
+            s = s.peer_health();
+        }
+        s.phase(
+            "fork-the-beacon",
+            vec![Fault::BeaconEquivocate],
+            30_000,
+            vec![
+                Check::EquivocatorQuarantined { min_frac: if ph { 0.5 } else { 0.0 } },
+                Check::NoHonestGreylisted,
+                Check::AllObjectsReadable,
+            ],
+        )
+    };
+    let off = run_deterministic(&mk("equivocate_undefended", false));
+    let on = run_deterministic(&mk("equivocate_defended", true));
+    assert_eq!(
+        off.phases[0].quarantiners, 0,
+        "without the health plane nobody can act on the evidence"
+    );
+    assert!(
+        on.phases[0].quarantiners > off.phases[0].quarantiners,
+        "evidence gossip must quarantine the equivocator (on={} off={})",
+        on.phases[0].quarantiners,
+        off.phases[0].quarantiners
+    );
+    assert_eq!(on.phases[0].honest_greylisted, 0);
+}
+
+#[test]
+fn scenario_censor_twins_audits_catch_polite_refusal() {
+    // Six holders refuse exactly one chunk (reads and audit slices)
+    // while serving everything else. Without audits the denial is
+    // invisible: no repair, no suspicion, detection signal zero. With
+    // audits on (and the health plane armed), the refused audit slices
+    // accumulate fail verdicts and the censors are broadly suspected —
+    // while the health plane records *zero* offenses and *zero*
+    // greylists, because a polite miss reply is not a deadline
+    // violation. Detection latency bound: books for epoch N close at
+    // N+1, two failed epochs reach the streak, so 260 s (four 60 s
+    // boundaries) is the window.
+    let censor = Fault::CensorObject { object: 0, chunk: 0, members: 6 };
+    let off = ScenarioSpec::small("censor_uncaught", 2828, 48)
+        .epoch_rotation(60_000, 20_000)
+        .phase(
+            "censorship-invisible-without-audits",
+            vec![censor.clone()],
+            260_000,
+            vec![
+                Check::FaultedAuditSuspectersWithin { min: 0, max: 0 },
+                Check::AllObjectsReadable,
+            ],
+        );
+    let on = ScenarioSpec::small("censor_caught", 2828, 48)
+        .epoch_rotation(60_000, 20_000)
+        .audits(0.5)
+        .peer_health()
+        .phase(
+            "audits-detect-the-censor",
+            vec![censor],
+            260_000,
+            vec![
+                Check::FaultedAuditSuspectersWithin { min: 3, max: 48 },
+                Check::NoHonestSuspected,
+                Check::NoHonestGreylisted,
+                Check::HealthOffensesWithin { min: 0, max: 0 },
+                Check::GreylistsWithin { min: 0, max: 0 },
+                Check::AllObjectsReadable,
+            ],
+        );
+    let off_report = run_deterministic(&off);
+    let on_report = run_deterministic(&on);
+    assert_eq!(off_report.phases[0].suspect_pairs, 0);
+    assert!(
+        on_report.phases[0].suspect_pairs > off_report.phases[0].suspect_pairs,
+        "audit plane must detect the censor (pairs={})",
+        on_report.phases[0].suspect_pairs
+    );
+    assert_eq!(on_report.phases[0].honest_greylisted, 0);
+}
+
+#[test]
+fn scenario_slow_loris_twins_trickle_is_scored() {
+    // Thirteen of a group's twenty holders answer fragment requests at
+    // 7/8 of the op timeout — past the slow-trickle threshold, inside
+    // the deadline. Reads still complete (availability floor: every
+    // flash-crowd session succeeds in both twins), but only the health
+    // plane *sees* the degradation: with it off the detection signal
+    // is exactly zero.
+    let mk = |name: &'static str, ph: bool| {
+        let mut s = ScenarioSpec::small(name, 2929, 40);
+        if ph {
+            s = s.peer_health();
+        }
+        s.phase(
+            "trickle-under-crowd",
+            vec![
+                Fault::SlowLoris { object: 0, chunk: 0, members: 13 },
+                Fault::FlashCrowd { object: 0, readers: 16 },
+            ],
+            30_000,
+            vec![
+                Check::AllObjectsReadable,
+                Check::HealthOffensesWithin {
+                    min: if ph { 1 } else { 0 },
+                    max: if ph { u64::MAX } else { 0 },
+                },
+                Check::NoHonestGreylisted,
+                Check::GreylistsWithin { min: 0, max: u64::MAX },
+            ],
+        )
+    };
+    let off = run_deterministic(&mk("slow_loris_unscored", false));
+    let on = run_deterministic(&mk("slow_loris_scored", true));
+    assert_eq!(off.phases[0].crowd_ok, 16, "availability floor holds without defenses");
+    assert_eq!(on.phases[0].crowd_ok, 16, "availability floor holds with defenses");
+    assert_eq!(off.phases[0].health_offenses, 0);
+    assert!(
+        on.phases[0].health_offenses > off.phases[0].health_offenses,
+        "slow-trickle must be scored (on={} off={})",
+        on.phases[0].health_offenses,
+        off.phases[0].health_offenses
+    );
+    assert_eq!(on.phases[0].honest_greylisted, 0);
+}
+
+#[test]
+fn scenario_adaptive_withhold_twins_audits_stay_green() {
+    // The PR 7 escalation: ten holders silently drop every second data
+    // request while answering heartbeats *and audit challenges*
+    // honestly. The audit plane stays green in both twins — zero
+    // suspecters, asserted — which is exactly the gap: only
+    // per-request deadline accounting (health timeouts) sees the
+    // damage, and only when the health plane is armed.
+    let mk = |name: &'static str, ph: bool| {
+        let mut s = ScenarioSpec::small(name, 3030, 48)
+            .epoch_rotation(60_000, 20_000)
+            .audits(0.5);
+        if ph {
+            s = s.peer_health();
+        }
+        s.phase(
+            "duty-cycle-withholding",
+            vec![
+                Fault::AdaptiveWithhold { object: 0, chunk: 0, members: 10 },
+                Fault::FlashCrowd { object: 0, readers: 16 },
+            ],
+            260_000,
+            vec![
+                Check::FaultedAuditSuspectersWithin { min: 0, max: 0 },
+                Check::NoHonestSuspected,
+                Check::HealthOffensesWithin {
+                    min: if ph { 1 } else { 0 },
+                    max: if ph { u64::MAX } else { 0 },
+                },
+                Check::NoHonestGreylisted,
+                Check::GreylistsWithin { min: 0, max: u64::MAX },
+                Check::AllObjectsReadable,
+            ],
+        )
+    };
+    let off = run_deterministic(&mk("adaptive_withhold_unseen", false));
+    let on = run_deterministic(&mk("adaptive_withhold_seen", true));
+    assert_eq!(
+        off.phases[0].suspect_pairs, 0,
+        "audits must stay green against the adaptive withholder"
+    );
+    assert_eq!(off.phases[0].health_offenses, 0);
+    assert!(
+        on.phases[0].health_offenses > off.phases[0].health_offenses,
+        "deadline accounting must see the dropped requests (on={} off={})",
+        on.phases[0].health_offenses,
+        off.phases[0].health_offenses
+    );
+    assert_eq!(on.phases[0].crowd_ok + on.phases[0].crowd_failed, 16);
+    assert_eq!(on.phases[0].honest_greylisted, 0);
+}
+
 #[test]
 fn scenario_thousand_node_burst() {
     // Scale: 1k peers over 8 shard queues. ClaimVerify::Never is the
