@@ -231,7 +231,10 @@ impl Cluster<SimNet> {
 impl Cluster<ShardNet> {
     /// Start on the sharded runtime with `shards` event queues. The
     /// trajectory is a pure function of `(cfg, shards)` — worker count
-    /// never changes it.
+    /// never changes it. `cfg.sim.workers` pins the pool size (0 = one
+    /// per core); `tests/scale_runtime.rs` sweeps it and asserts
+    /// identical fingerprints, including with `cfg.vault.lazy_groups`
+    /// cold-group aggregation active.
     pub fn start_sharded(cfg: ClusterConfig, shards: usize) -> ShardedCluster {
         let mut vault = cfg.vault.clone();
         vault.n_nodes = cfg.peers;

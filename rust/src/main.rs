@@ -32,6 +32,12 @@
 //!                    the availability floor, the detection window, and
 //!                    the zero-false-greylist count; emits
 //!                    `BENCH_adversary.json`.
+//! * `bench-scale`  — scale-runtime bench (ISSUE 9): idle-heavy
+//!                    clusters up to 100k peers on the timer-wheel
+//!                    runtime with interned peer state and cold-group
+//!                    aggregation; reports wall-s per virtual-s,
+//!                    resident bytes/peer, and events/s; emits
+//!                    `BENCH_scale.json`.
 //! * `tcp-demo`     — bring up a real-TCP localhost cluster and do one
 //!                    store/query round trip.
 //! * `sim`          — §6.1 durability simulations (fig4|fig5|fig6).
@@ -69,13 +75,14 @@ fn main() {
         "bench-restart" => cmd_bench_restart(&args),
         "bench-audit" => cmd_bench_audit(&args),
         "bench-adversary" => cmd_bench_adversary(&args),
+        "bench-scale" => cmd_bench_scale(&args),
         "tcp-demo" => cmd_tcp_demo(&args),
         "sim" => cmd_sim(&args),
         "analyze" => cmd_analyze(&args),
         "artifacts" => cmd_artifacts(&args),
         _ => {
             eprintln!(
-                "usage: vault <cluster|bench-ops|bench-codec|bench-maint|bench-epoch|bench-restart|bench-audit|bench-adversary|tcp-demo|sim|analyze|artifacts> [--flags]\n\
+                "usage: vault <cluster|bench-ops|bench-codec|bench-maint|bench-epoch|bench-restart|bench-audit|bench-adversary|bench-scale|tcp-demo|sim|analyze|artifacts> [--flags]\n\
                  \n\
                  cluster     --peers 128 --objects 4 --size 262144 [--byzantine 0.1] [--churn 4]\n\
                  bench-ops   --peers 64 --ops 300 --inflight 32 --size 32768 [--sharded 0]\n\
@@ -90,6 +97,7 @@ fn main() {
                  bench-audit [--smoke] [--peers 48] [--withhold 4] [--epochs 8]\n\
                  \x20            [--seed 7] [--out BENCH_audit.json]\n\
                  bench-adversary [--smoke] [--seed 7] [--out BENCH_adversary.json]\n\
+                 bench-scale [--smoke] [--virtual-s 60] [--seed 7] [--out BENCH_scale.json]\n\
                  tcp-demo    --peers 8 --size 65536\n\
                  sim         --fig 4|5|6 [--nodes 100000] [--objects 1000] [--churn 2.0] [--years 1]\n\
                  analyze     [--n 80] [--k 32] [--churn-q 0.01] [--evict 0] [--steps 512]\n\
@@ -782,6 +790,177 @@ fn cmd_bench_epoch(args: &Args) {
          (independent: {independent}); min availability during rotation {avail_min:.3} \
          ({wall_secs:.1}s wall)"
     );
+}
+
+/// One rung of the scale ladder: an idle-heavy sharded cluster driven
+/// for a fixed virtual span (ISSUE 9).
+struct ScaleRow {
+    peers: usize,
+    shards: usize,
+    virtual_s: u64,
+    wall_s: f64,
+    resident_bytes_per_peer: u64,
+    events: u64,
+    events_per_s: f64,
+    elided_ticks: u64,
+    parked_ticks: u64,
+}
+
+impl ScaleRow {
+    fn wall_per_virtual(&self) -> f64 {
+        self.wall_s / self.virtual_s.max(1) as f64
+    }
+    fn json_row(&self) -> String {
+        format!(
+            "{{\"peers\": {}, \"shards\": {}, \"virtual_s\": {}, \"wall_s\": {:.3}, \
+             \"wall_s_per_virtual_s\": {:.4}, \"resident_bytes_per_peer\": {}, \
+             \"events\": {}, \"events_per_s\": {:.0}, \"elided_ticks\": {}, \
+             \"parked_ticks\": {}}}",
+            self.peers,
+            self.shards,
+            self.virtual_s,
+            self.wall_s,
+            self.wall_per_virtual(),
+            self.resident_bytes_per_peer,
+            self.events,
+            self.events_per_s,
+            self.elided_ticks,
+            self.parked_ticks,
+        )
+    }
+}
+
+fn run_scale_trial(peers: usize, shards: usize, virtual_s: u64, seed: u64) -> ScaleRow {
+    use vault::codec::rateless::InnerEncoder;
+    use vault::crypto::vrf;
+    use vault::dht::PeerInfo;
+    use vault::net::shardnet::ShardNet;
+    use vault::net::simnet::SimOpts;
+    use vault::proto::{ClaimVerify, VaultConfig};
+    use vault::util::alloc::thread_live_bytes;
+
+    let r = 16usize.min(peers);
+    let k_inner = 4usize.min(r);
+    let cfg = VaultConfig {
+        k_inner,
+        r_inner: r,
+        k_outer: 2,
+        n_outer: 3,
+        n_nodes: peers,
+        candidates: (3 * r).min(peers),
+        claim_verify: ClaimVerify::Never,
+        heartbeat_ms: 10_000,
+        suspicion_ms: 30_000,
+        tick_ms: 10_000,
+        lazy_groups: true,
+        ..Default::default()
+    };
+    // workers = 1 keeps every allocation on this thread so the live-byte
+    // gauge sees the whole runtime; the trajectory is identical at any
+    // worker count (tests/scale_runtime.rs).
+    let opts = SimOpts { seed, workers: 1, ..Default::default() };
+    let live0 = thread_live_bytes();
+    let mut net = ShardNet::new(cfg, peers, opts, shards);
+
+    // Idle-heavy population: ~1% of peers hold fragments of seeded
+    // groups; the other 99% only run maintenance ticks — the case the
+    // lazy runtime exists for.
+    let n_groups = (peers / (100 * r)).max(1);
+    let mut rng = Rng::new(seed ^ 0x5CA1E);
+    for _ in 0..n_groups {
+        let mut chunk = vec![0u8; 256];
+        rng.fill_bytes(&mut chunk);
+        let chash = Hash256::of(&chunk);
+        let member_idx = rng.sample_indices(peers, r);
+        let infos: Vec<PeerInfo> = member_idx.iter().map(|&i| net.peer(i).info).collect();
+        let enc = InnerEncoder::new(chash, &chunk, k_inner);
+        for (slot, &i) in member_idx.iter().enumerate() {
+            let frag = enc.fragment(slot as u64);
+            let proof = vrf::prove(&net.peer(i).key, b"bench-scale").1;
+            let others: Vec<PeerInfo> =
+                infos.iter().filter(|p| p.id != net.peer(i).info.id).copied().collect();
+            net.peer_mut(i).force_store(0, chash, frag, proof, others);
+        }
+    }
+
+    // Warm past every node's first jittered tick (and the cold-group
+    // freeze scans) so residency and throughput are steady-state.
+    net.run_for(25_000);
+    let resident = thread_live_bytes().saturating_sub(live0);
+    let ev0 = net.stats().events;
+    let wall = Timer::start();
+    net.run_for(virtual_s.max(1) * 1_000);
+    let wall_s = wall.elapsed_s();
+    let stats = net.stats();
+    let events = stats.events - ev0;
+    ScaleRow {
+        peers,
+        shards,
+        virtual_s,
+        wall_s,
+        resident_bytes_per_peer: resident / peers.max(1) as u64,
+        events,
+        events_per_s: events as f64 / wall_s.max(1e-9),
+        elided_ticks: stats.elided_ticks,
+        parked_ticks: stats.parked_ticks,
+    }
+}
+
+/// Scale-runtime benchmark (ISSUE 9): peers vs wall-s per virtual-s,
+/// resident bytes/peer, and events/s on the timer-wheel runtime with
+/// interned peer state and cold-group aggregation. The full ladder ends
+/// at a 100k-peer idle-heavy cluster on one box; `--smoke` runs one
+/// 2k-peer rung for CI.
+fn cmd_bench_scale(args: &Args) {
+    let smoke = args.bool("smoke");
+    let seed = args.get("seed", 7u64);
+    let virtual_s = args.get("virtual-s", if smoke { 10 } else { 60u64 });
+    let out = args.str("out", "BENCH_scale.json");
+    let ladder: Vec<(usize, usize)> =
+        if smoke { vec![(2_000, 4)] } else { vec![(10_000, 16), (50_000, 32), (100_000, 64)] };
+    println!(
+        "bench-scale{}: lazy ticks + interned peers + cold groups, {} virtual s per rung",
+        if smoke { " (smoke)" } else { "" },
+        virtual_s
+    );
+    let wall = Timer::start();
+    let mut rows = Vec::with_capacity(ladder.len());
+    for &(peers, shards) in &ladder {
+        let row = run_scale_trial(peers, shards, virtual_s, seed);
+        println!(
+            "  {:>7} peers / {:>2} shards: {:.3} wall-s/virtual-s, {:>6} B/peer resident, \
+             {:>9.0} events/s, {} elided / {} parked ticks",
+            row.peers,
+            row.shards,
+            row.wall_per_virtual(),
+            row.resident_bytes_per_peer,
+            row.events_per_s,
+            row.elided_ticks,
+            row.parked_ticks,
+        );
+        rows.push(row);
+    }
+    let wall_secs = wall.elapsed_s();
+    let row_json: Vec<String> = rows.iter().map(|r| format!("    {}", r.json_row())).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"scale_runtime\",\n  \"schema\": \"vault-bench-scale-v1\",\n  \
+         \"smoke\": {smoke},\n  \"estimated\": false,\n  \"seed\": {seed},\n  \
+         \"lazy_groups\": true,\n  \"workers\": 1,\n  \"rows\": [\n{}\n  ],\n  \
+         \"wall_secs\": {wall_secs:.3}\n}}\n",
+        row_json.join(",\n"),
+    );
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("failed to write {out}: {e}"),
+    }
+    if let Some(top) = rows.last() {
+        println!(
+            "{} peers: {:.3} wall-s/virtual-s, {} B/peer ({wall_secs:.1}s wall total)",
+            top.peers,
+            top.wall_per_virtual(),
+            top.resident_bytes_per_peer
+        );
+    }
 }
 
 /// Build a SimNet whose peers each hold ~`chunks_per_node` fragments of

@@ -27,8 +27,7 @@
 //! `shard_layout_is_part_of_the_seed` below asserts exactly this, and
 //! DESIGN.md §Scenario engine documents the contract.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -36,11 +35,13 @@ use crate::codec::ObjectId;
 use crate::crypto::Hash256;
 use crate::node::wal::WalReplayReport;
 use crate::dht::{NodeId, PeerInfo};
+use crate::proto::intern::PeerTable;
 use crate::proto::messages::Msg;
 use crate::proto::peer::VaultPeer;
 use crate::proto::{AppEvent, Outbox, TimerKind, VaultConfig};
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
+use crate::util::timerwheel::TimerWheel;
 
 use super::simnet::{NetStats, OracleDirectory, SimOpts};
 use super::{maint_bytes, REGION_LATENCY_MS};
@@ -55,35 +56,12 @@ struct Route {
 
 type RouteMap = HashMap<NodeId, Route>;
 
-struct Event {
-    at_ms: u64,
-    seq: u64,
-    kind: EventKind,
-}
-
 enum EventKind {
     Deliver { to_local: usize, from: NodeId, msg: Msg },
     /// Timers carry the slot generation they were scheduled under so a
     /// restart (generation bump) invalidates the dead incarnation's
     /// pending timers — see `simnet::EventKind::Timer`.
     Timer { peer_local: usize, gen: u32, kind: TimerKind },
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.at_ms == other.at_ms && self.seq == other.seq
-    }
-}
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.at_ms, self.seq).cmp(&(other.at_ms, other.seq))
-    }
 }
 
 struct Slot {
@@ -94,6 +72,10 @@ struct Slot {
     seed: [u8; 32],
     /// Incarnation counter; see [`EventKind::Timer`].
     gen: u32,
+    /// The peer's Tick fired while blackholed and was not re-armed
+    /// (ISSUE 9 satellite); the heal path resumes the chain on its
+    /// original jittered grid ([`VaultPeer::next_tick_at`]).
+    tick_parked: bool,
 }
 
 /// A cross-shard message buffered during a window, delivered at the
@@ -109,7 +91,10 @@ struct OutMsg {
 struct Shard {
     id: usize,
     slots: Vec<Slot>,
-    events: BinaryHeap<Reverse<Event>>,
+    /// Two-tier calendar wheel keyed by `(at_ms, seq)` — a drop-in for
+    /// the old `BinaryHeap<Reverse<Event>>` with O(1) near-term pushes
+    /// and pops (see `util::timerwheel` for the invariants).
+    events: TimerWheel<EventKind>,
     seq: u64,
     /// Private stream: latency jitter + drop decisions for messages
     /// *sent* by this shard's peers.
@@ -117,6 +102,13 @@ struct Shard {
     stats: NetStats,
     app_events: Vec<(NodeId, AppEvent)>,
     outbound: Vec<OutMsg>,
+    /// Shard-local intern table: every resident peer's member maps hold
+    /// `PeerRef` handles into this table instead of 80-byte `PeerInfo`
+    /// copies.
+    table: PeerTable,
+    /// Pooled outbox reused across events (extends the PR 3 zero-alloc
+    /// discipline to the sharded runtime).
+    scratch: Outbox,
 }
 
 fn link_latency(opts: &SimOpts, rng: &mut Rng, from_region: u8, to_region: u8, bytes: usize) -> u64 {
@@ -129,26 +121,28 @@ fn link_latency(opts: &SimOpts, rng: &mut Rng, from_region: u8, to_region: u8, b
 
 impl Shard {
     fn peek_time(&self) -> Option<u64> {
-        self.events.peek().map(|Reverse(e)| e.at_ms)
+        self.events.peek_time()
     }
 
     fn push_local(&mut self, at_ms: u64, kind: EventKind) {
         self.seq += 1;
-        self.events.push(Reverse(Event { at_ms, seq: self.seq, kind }));
+        self.events.push(at_ms, self.seq, kind);
     }
 
     /// Route a peer's outbox: timers and same-shard sends enqueue
     /// locally; cross-shard sends are buffered for the barrier exchange.
-    fn drain(&mut self, now_ms: u64, from_local: usize, out: Outbox, routes: &RouteMap, opts: &SimOpts) {
+    /// Takes `&mut Outbox` and drains it in place so the caller can
+    /// return the (now empty, capacity retained) buffer to the pool.
+    fn drain(&mut self, now_ms: u64, from_local: usize, out: &mut Outbox, routes: &RouteMap, opts: &SimOpts) {
         let from_info = self.slots[from_local].peer.info;
         let sender_blocked = !self.slots[from_local].up || self.slots[from_local].attacked;
         // Deferred sends (slow-loris trickle) ride the same path with
         // the sender's hold time added on top of link latency.
         let sends = out
             .sends
-            .into_iter()
+            .drain(..)
             .map(|(to, msg, p)| (0u64, to, msg, p))
-            .chain(out.delayed);
+            .chain(out.delayed.drain(..));
         for (hold_ms, to, msg, purpose) in sends {
             let size = msg.approx_size();
             {
@@ -187,13 +181,13 @@ impl Shard {
             }
         }
         let gen = self.slots[from_local].gen;
-        for (delay, kind) in out.timers {
+        for (delay, kind) in out.timers.drain(..) {
             self.push_local(
                 now_ms + delay.max(1),
                 EventKind::Timer { peer_local: from_local, gen, kind },
             );
         }
-        for ev in out.app {
+        for ev in out.app.drain(..) {
             self.app_events.push((from_info.id, ev));
         }
     }
@@ -203,16 +197,19 @@ impl Shard {
     /// window.
     fn process_window(&mut self, t: u64, dir: &OracleDirectory, routes: &RouteMap, opts: &SimOpts) {
         while self.peek_time() == Some(t) {
-            let Reverse(event) = self.events.pop().unwrap();
-            match event.kind {
+            let (_, _, kind) = self.events.pop_next().unwrap();
+            self.stats.events += 1;
+            match kind {
                 EventKind::Deliver { to_local, from, msg } => {
                     if !self.slots[to_local].up || self.slots[to_local].attacked {
                         self.stats.dropped += 1;
                         continue;
                     }
-                    let mut out = Outbox::at(t);
+                    let mut out = std::mem::take(&mut self.scratch);
+                    out.reset(t);
                     self.slots[to_local].peer.on_message(dir, &mut out, from, msg);
-                    self.drain(t, to_local, out, routes, opts);
+                    self.drain(t, to_local, &mut out, routes, opts);
+                    self.scratch = out;
                 }
                 EventKind::Timer { peer_local, gen, kind } => {
                     if !self.slots[peer_local].up {
@@ -221,9 +218,33 @@ impl Shard {
                     if self.slots[peer_local].gen != gen {
                         continue; // a previous incarnation's timer
                     }
-                    let mut out = Outbox::at(t);
+                    // Park instead of re-arming: a blackholed peer's tick
+                    // output is all dropped anyway, so re-running the chain
+                    // only burns events. The heal path resumes it on the
+                    // peer's original jittered grid.
+                    if self.slots[peer_local].attacked && matches!(kind, TimerKind::Tick) {
+                        self.slots[peer_local].tick_parked = true;
+                        self.stats.parked_ticks += 1;
+                        continue;
+                    }
+                    // Dormancy fast-path: a tick that would do no work
+                    // (no groups to heartbeat, no repairs, no audits, no
+                    // health decay) is charged and re-armed arithmetically.
+                    // The re-arm matches `on_timer`'s `tick_ms` exactly
+                    // (one event, same seq budget), so trajectories are
+                    // unchanged.
+                    if matches!(kind, TimerKind::Tick) && self.slots[peer_local].peer.maint_dormant() {
+                        self.slots[peer_local].peer.metrics.ticks += 1;
+                        self.stats.elided_ticks += 1;
+                        let at = t + self.slots[peer_local].peer.cfg.tick_ms.max(1);
+                        self.push_local(at, EventKind::Timer { peer_local, gen, kind: TimerKind::Tick });
+                        continue;
+                    }
+                    let mut out = std::mem::take(&mut self.scratch);
+                    out.reset(t);
                     self.slots[peer_local].peer.on_timer(dir, &mut out, kind);
-                    self.drain(t, peer_local, out, routes, opts);
+                    self.drain(t, peer_local, &mut out, routes, opts);
+                    self.scratch = out;
                 }
             }
         }
@@ -264,12 +285,14 @@ impl ShardNet {
             .map(|id| Shard {
                 id,
                 slots: Vec::new(),
-                events: BinaryHeap::new(),
+                events: TimerWheel::new(),
                 seq: 0,
                 rng: Rng::new(opts.seed ^ (0x5AD0_u64.wrapping_add(id as u64).wrapping_mul(0x9E3779B97F4A7C15))),
                 stats: NetStats::default(),
                 app_events: Vec::new(),
                 outbound: Vec::new(),
+                table: PeerTable::new(),
+                scratch: Outbox::at(0),
             })
             .collect();
         let mut index = Vec::with_capacity(n);
@@ -279,24 +302,30 @@ impl ShardNet {
             let mut seed = [0u8; 32];
             master_rng.fill_bytes(&mut seed);
             let region = (i % opts.regions.max(1)) as u8;
-            let peer = VaultPeer::new(cfg.clone(), &seed, region);
             let shard = i % n_shards;
+            let peer = VaultPeer::with_table(cfg.clone(), &seed, region, shards[shard].table.clone());
             let local = shards[shard].slots.len();
             by_id.insert(peer.info.id, i);
             routes.insert(
                 peer.info.id,
                 Route { shard: shard as u32, local: local as u32, region },
             );
-            shards[shard].slots.push(Slot { peer, up: true, attacked: false, seed, gen: 0 });
+            shards[shard]
+                .slots
+                .push(Slot { peer, up: true, attacked: false, seed, gen: 0, tick_parked: false });
             index.push((shard, local));
         }
         let directory = Arc::new(OracleDirectory::from_peers(
             shards.iter().flat_map(|s| s.slots.iter().map(|sl| sl.peer.info)),
         ));
-        let workers = std::thread::available_parallelism()
-            .map(|p| p.get())
-            .unwrap_or(4)
-            .min(n_shards);
+        // Worker count never influences the outcome — `opts.workers` only
+        // pins the pool size for benchmarks and determinism tests.
+        let workers = if opts.workers > 0 {
+            opts.workers
+        } else {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+        }
+        .min(n_shards);
         let pool = (workers > 1 && n_shards > 1).then(|| ThreadPool::new(workers));
         let routes = Arc::new(routes);
         let mut net = ShardNet {
@@ -323,7 +352,7 @@ impl ShardNet {
             shard.slots[l].peer.init(&mut out);
             let routes = Arc::clone(&net.routes);
             let opts = net.opts.clone();
-            shard.drain(0, l, out, &routes, &opts);
+            shard.drain(0, l, &mut out, &routes, &opts);
         }
         net.exchange();
         net
@@ -381,6 +410,9 @@ impl ShardNet {
             total.msgs += s.stats.msgs;
             total.bytes += s.stats.bytes;
             total.dropped += s.stats.dropped;
+            total.events += s.stats.events;
+            total.elided_ticks += s.stats.elided_ticks;
+            total.parked_ticks += s.stats.parked_ticks;
         }
         total
     }
@@ -401,12 +433,31 @@ impl ShardNet {
 
     // ---- fault injection ---------------------------------------------------
 
+    /// Fault-in every frozen placement group the victim belongs to, on
+    /// every peer, *before* the fault lands. Cold-group bookkeeping must
+    /// never let a faulted member's staleness hide inside an aggregate
+    /// (DESIGN.md §Scale Runtime).
+    fn warm_victim_groups(&mut self, i: usize) {
+        if !self.cfg_template.lazy_groups {
+            return;
+        }
+        let victim = self.slot(i).peer.info.id;
+        let now = self.now_ms;
+        for shard in self.shards.iter_mut().flatten() {
+            for slot in &mut shard.slots {
+                slot.peer.warm_groups_of(&victim, now);
+            }
+        }
+    }
+
     pub fn kill(&mut self, i: usize) {
+        self.warm_victim_groups(i);
         self.slot_mut(i).up = false;
         self.dir_dirty = true;
     }
 
     pub fn attack(&mut self, i: usize) {
+        self.warm_victim_groups(i);
         self.slot_mut(i).attacked = true;
         self.dir_dirty = true;
     }
@@ -421,18 +472,29 @@ impl ShardNet {
         };
         self.dir_dirty = true;
         // Killed peers lost their timer chain; attacked peers kept it
-        // running (the Timer arm only gates on `up`), so re-initing
-        // them would double the Tick chain.
+        // running until the parking fast-path shelved their Tick, so
+        // re-initing them would double the chain — instead the parked
+        // Tick resumes on the peer's original jittered grid.
         if was_down {
             let now = self.now_ms;
             let (s, l) = self.index[i];
             let routes = Arc::clone(&self.routes);
             let opts = self.opts.clone();
             let shard = self.shards[s].as_mut().unwrap();
+            shard.slots[l].tick_parked = false;
             let mut out = Outbox::at(now);
             shard.slots[l].peer.init(&mut out);
-            shard.drain(now, l, out, &routes, &opts);
+            shard.drain(now, l, &mut out, &routes, &opts);
             self.exchange();
+        } else {
+            let now = self.now_ms;
+            let (s, l) = self.index[i];
+            let shard = self.shards[s].as_mut().unwrap();
+            if std::mem::take(&mut shard.slots[l].tick_parked) {
+                let at = shard.slots[l].peer.next_tick_at(now);
+                let gen = shard.slots[l].gen;
+                shard.push_local(at, EventKind::Timer { peer_local: l, gen, kind: TimerKind::Tick });
+            }
         }
     }
 
@@ -448,11 +510,13 @@ impl ShardNet {
     /// truncates the WAL at that byte first, modelling a torn write to
     /// the tail during the crash. Mirrors `SimNet::restart`.
     pub fn restart(&mut self, i: usize, torn_at: Option<u64>) -> WalReplayReport {
+        self.warm_victim_groups(i);
         let now = self.now_ms;
         let (s, l) = self.index[i];
         let routes = Arc::clone(&self.routes);
         let opts = self.opts.clone();
         let shard = self.shards[s].as_mut().expect("shard in flight");
+        let table = shard.table.clone();
         let slot = &mut shard.slots[l];
         let cfg = slot.peer.cfg.clone();
         let region = slot.peer.info.region;
@@ -461,14 +525,15 @@ impl ShardNet {
         if let Some(cut) = torn_at {
             wal_bytes.truncate(cut as usize);
         }
-        slot.peer = VaultPeer::new(cfg, &seed, region);
+        slot.peer = VaultPeer::with_table(cfg, &seed, region, table);
         slot.up = true;
         slot.attacked = false;
         slot.gen = slot.gen.wrapping_add(1);
+        slot.tick_parked = false;
         self.dir_dirty = true;
         let mut out = Outbox::at(now);
         let report = shard.slots[l].peer.recover_from_wal(&mut out, wal_bytes);
-        shard.drain(now, l, out, &routes, &opts);
+        shard.drain(now, l, &mut out, &routes, &opts);
         self.exchange();
         report
     }
@@ -486,13 +551,15 @@ impl ShardNet {
     pub fn spawn_peer_seeded(&mut self, region: u8, seed: [u8; 32]) -> usize {
         let mut cfg = self.cfg_template.clone();
         cfg.byzantine = false;
-        let peer = VaultPeer::new(cfg, &seed, region);
-        let id = peer.info.id;
         let idx = self.index.len();
         let shard_idx = idx % self.shards.len();
         let shard = self.shards[shard_idx].as_mut().unwrap();
+        let peer = VaultPeer::with_table(cfg, &seed, region, shard.table.clone());
+        let id = peer.info.id;
         let local = shard.slots.len();
-        shard.slots.push(Slot { peer, up: true, attacked: false, seed, gen: 0 });
+        shard
+            .slots
+            .push(Slot { peer, up: true, attacked: false, seed, gen: 0, tick_parked: false });
         self.index.push((shard_idx, local));
         self.by_id.insert(id, idx);
         Arc::make_mut(&mut self.routes).insert(
@@ -506,7 +573,7 @@ impl ShardNet {
         let shard = self.shards[shard_idx].as_mut().unwrap();
         let mut out = Outbox::at(now);
         shard.slots[local].peer.init(&mut out);
-        shard.drain(now, local, out, &routes, &opts);
+        shard.drain(now, local, &mut out, &routes, &opts);
         self.exchange();
         idx
     }
@@ -549,7 +616,7 @@ impl ShardNet {
         let shard = self.shards[s].as_mut().unwrap();
         let mut out = Outbox::at(now);
         let op = shard.slots[l].peer.client_store(&*dir, &mut out, object, secret, expires_ms);
-        shard.drain(now, l, out, &routes, &opts);
+        shard.drain(now, l, &mut out, &routes, &opts);
         self.exchange();
         op
     }
@@ -564,7 +631,7 @@ impl ShardNet {
         let shard = self.shards[s].as_mut().unwrap();
         let mut out = Outbox::at(now);
         let op = shard.slots[l].peer.client_query(&*dir, &mut out, id);
-        shard.drain(now, l, out, &routes, &opts);
+        shard.drain(now, l, &mut out, &routes, &opts);
         self.exchange();
         op
     }
@@ -851,5 +918,35 @@ mod tests {
         }
         assert!(repaired, "sharded runtime must repair back to R={r}");
         assert!(net.total_repair_traffic() > 0);
+    }
+
+    #[test]
+    fn attacked_peer_parks_tick_chain_until_healed() {
+        // ISSUE 9 satellite: a blackholed peer must not keep burning
+        // timer events — its Tick parks on first fire and resumes from
+        // the heal path on the original jittered grid.
+        let peers = 24;
+        let mut cfg = small_cfg(peers);
+        cfg.tick_ms = 1_000;
+        let opts = SimOpts { seed: 5, ..Default::default() };
+        let mut net = ShardNet::new(cfg, peers, opts, 4);
+        net.run_for(10_000);
+        assert!(net.stats().elided_ticks > 0, "idle peers must take the dormancy fast-path");
+        let victim = 3;
+        let before = net.peer(victim).metrics.ticks;
+        assert!(before > 0, "tick chain must be running before the attack");
+        net.attack(victim);
+        net.run_for(30_000);
+        assert_eq!(
+            net.peer(victim).metrics.ticks,
+            before,
+            "a blackholed peer's tick chain must stay parked (zero timer events)"
+        );
+        let parked = net.stats().parked_ticks;
+        assert_eq!(parked, 1, "exactly one park per attack window, then silence");
+        net.restore(victim);
+        net.run_for(30_000);
+        assert!(net.peer(victim).metrics.ticks > before, "healing must resume the tick chain");
+        assert_eq!(net.stats().parked_ticks, parked, "no further parks after heal");
     }
 }

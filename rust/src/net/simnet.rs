@@ -7,17 +7,18 @@
 //! suspicion, repair convergence) measurable in milliseconds of wall
 //! time, and makes every run exactly reproducible from its seed.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::HashMap;
 
 use crate::codec::ObjectId;
 use crate::crypto::Hash256;
 use crate::dht::{ring_distance, NodeId, PeerInfo};
 use crate::node::wal::WalReplayReport;
+use crate::proto::intern::PeerTable;
 use crate::proto::messages::Msg;
 use crate::proto::peer::VaultPeer;
 use crate::proto::{AppEvent, Directory, Outbox, TimerKind, VaultConfig};
 use crate::util::rng::Rng;
+use crate::util::timerwheel::TimerWheel;
 
 use super::{maint_bytes, DEFAULT_BANDWIDTH_BYTES_PER_MS, REGION_LATENCY_MS};
 
@@ -32,6 +33,11 @@ pub struct SimOpts {
     /// transient unreachability — §3.2's "high degree of asynchrony").
     pub drop_prob: f64,
     pub seed: u64,
+    /// Worker threads for the sharded runtime (`ShardNet`); 0 = one per
+    /// available core. Never part of the outcome — determinism is a
+    /// function of `(cfg, n, seed, shards)` alone, and
+    /// `tests/scale_runtime.rs` pins that contract across worker counts.
+    pub workers: usize,
 }
 
 impl Default for SimOpts {
@@ -42,14 +48,9 @@ impl Default for SimOpts {
             jitter: 0.1,
             drop_prob: 0.0,
             seed: 7,
+            workers: 0,
         }
     }
-}
-
-struct Event {
-    at_ms: u64,
-    seq: u64,
-    kind: EventKind,
 }
 
 enum EventKind {
@@ -59,23 +60,6 @@ enum EventKind {
     /// timers (notably its self-perpetuating Tick) are dropped instead
     /// of doubling the rebuilt peer's tick chain.
     Timer { peer: usize, gen: u32, kind: TimerKind },
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.at_ms == other.at_ms && self.seq == other.seq
-    }
-}
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.at_ms, self.seq).cmp(&(other.at_ms, other.seq))
-    }
 }
 
 struct Slot {
@@ -89,6 +73,10 @@ struct Slot {
     seed: [u8; 32],
     /// Incarnation counter; see [`EventKind::Timer`].
     gen: u32,
+    /// The peer's Tick timer fired while it was blackholed and was not
+    /// re-armed (ISSUE 9 satellite). The heal path resumes the chain on
+    /// its original jittered grid ([`VaultPeer::next_tick_at`]).
+    tick_parked: bool,
 }
 
 /// Constant-time peer discovery oracle, sorted by ring position.
@@ -165,6 +153,15 @@ pub struct NetStats {
     pub msgs: u64,
     pub bytes: u64,
     pub dropped: u64,
+    /// Events actually dispatched (delivers + timer firings).
+    pub events: u64,
+    /// Maintenance ticks elided by the dormancy fast-path (the peer was
+    /// provably idle, so the runtime re-armed its tick without running it).
+    pub elided_ticks: u64,
+    /// Tick timers parked because the peer was blackholed (ISSUE 9
+    /// satellite: attacked peers no longer re-arm their tick chain; the
+    /// heal path resumes it on the original grid).
+    pub parked_ticks: u64,
 }
 
 pub struct SimNet {
@@ -172,13 +169,21 @@ pub struct SimNet {
     by_id: HashMap<NodeId, usize>,
     directory: OracleDirectory,
     dir_dirty: bool,
-    events: BinaryHeap<Reverse<Event>>,
+    /// Two-tier calendar timer wheel; pops in `(at_ms, seq)` order,
+    /// bit-identical to the `BinaryHeap` it replaced (ISSUE 9).
+    events: TimerWheel<EventKind>,
     seq: u64,
     now_ms: u64,
     opts: SimOpts,
     rng: Rng,
     pub stats: NetStats,
     app_events: Vec<(NodeId, AppEvent)>,
+    /// Shared identity-interning table (one per runtime — the whole net
+    /// is one "shard" here; see `proto::intern`).
+    table: PeerTable,
+    /// Pooled outbox reused across event dispatches (zero-alloc
+    /// discipline: the vectors keep their high-water capacity).
+    scratch: Outbox,
 }
 
 impl SimNet {
@@ -187,13 +192,14 @@ impl SimNet {
     pub fn new(mut cfg: VaultConfig, n: usize, opts: SimOpts) -> Self {
         cfg.n_nodes = n;
         let mut rng = Rng::new(opts.seed);
+        let table = PeerTable::new();
         let mut slots = Vec::with_capacity(n);
         for i in 0..n {
             let mut seed = [0u8; 32];
             rng.fill_bytes(&mut seed);
             let region = (i % opts.regions.max(1)) as u8;
-            let peer = VaultPeer::new(cfg.clone(), &seed, region);
-            slots.push(Slot { peer, up: true, attacked: false, seed, gen: 0 });
+            let peer = VaultPeer::with_table(cfg.clone(), &seed, region, table.clone());
+            slots.push(Slot { peer, up: true, attacked: false, seed, gen: 0, tick_parked: false });
         }
         let by_id = slots.iter().enumerate().map(|(i, s)| (s.peer.info.id, i)).collect();
         let directory = OracleDirectory::rebuild(&slots);
@@ -202,19 +208,21 @@ impl SimNet {
             by_id,
             directory,
             dir_dirty: false,
-            events: BinaryHeap::new(),
+            events: TimerWheel::new(),
             seq: 0,
             now_ms: 0,
             opts,
             rng,
             stats: NetStats::default(),
             app_events: Vec::new(),
+            table,
+            scratch: Outbox::at(0),
         };
         // Start maintenance timers on every peer.
         for i in 0..n {
             let mut out = Outbox::at(0);
             net.slots[i].peer.init(&mut out);
-            net.drain(i, out);
+            net.drain(i, &mut out);
         }
         net
     }
@@ -266,8 +274,24 @@ impl SimNet {
         self.opts.bandwidth = bytes_per_ms.max(1);
     }
 
+    /// Cold-group aggregation hook: before a fault lands on `victim`,
+    /// every frozen group it belongs to — on any peer — faults back to
+    /// full fidelity, so the survivors resume real heartbeats and can
+    /// suspect it. No-op unless `lazy_groups` is on.
+    fn warm_victim_groups(&mut self, i: usize) {
+        if !self.slots[i].peer.cfg.lazy_groups {
+            return;
+        }
+        let victim = self.slots[i].peer.info.id;
+        let now = self.now_ms;
+        for slot in &mut self.slots {
+            slot.peer.warm_groups_of(&victim, now);
+        }
+    }
+
     /// Permanent departure / crash: node stops processing entirely.
     pub fn kill(&mut self, i: usize) {
+        self.warm_victim_groups(i);
         self.slots[i].up = false;
         self.dir_dirty = true;
     }
@@ -287,20 +311,21 @@ impl SimNet {
     pub fn spawn_peer_seeded(&mut self, region: u8, seed: [u8; 32]) -> usize {
         let mut cfg = self.slots[0].peer.cfg.clone();
         cfg.byzantine = false;
-        let peer = VaultPeer::new(cfg, &seed, region);
+        let peer = VaultPeer::with_table(cfg, &seed, region, self.table.clone());
         let id = peer.info.id;
         let idx = self.slots.len();
-        self.slots.push(Slot { peer, up: true, attacked: false, seed, gen: 0 });
+        self.slots.push(Slot { peer, up: true, attacked: false, seed, gen: 0, tick_parked: false });
         self.by_id.insert(id, idx);
         self.dir_dirty = true;
         let mut out = Outbox::at(self.now_ms);
         self.slots[idx].peer.init(&mut out);
-        self.drain(idx, out);
+        self.drain(idx, &mut out);
         idx
     }
 
     /// Targeted attack (§6.1): traffic blackholed, node state intact.
     pub fn attack(&mut self, i: usize) {
+        self.warm_victim_groups(i);
         self.slots[i].attacked = true;
         self.dir_dirty = true;
     }
@@ -312,12 +337,17 @@ impl SimNet {
         self.dir_dirty = true;
         // Restart the tick chain only if the peer was actually down:
         // killed peers lose their timers, but attacked (blackholed)
-        // peers kept processing them, and a second init() would leave a
-        // doubled self-perpetuating Tick chain behind.
+        // peers kept theirs running — except a parked Tick (see
+        // `Slot::tick_parked`), which resumes here on its original grid.
         if was_down {
+            self.slots[i].tick_parked = false; // init() re-arms the chain
             let mut out = Outbox::at(self.now_ms);
             self.slots[i].peer.init(&mut out);
-            self.drain(i, out);
+            self.drain(i, &mut out);
+        } else if std::mem::take(&mut self.slots[i].tick_parked) {
+            let at = self.slots[i].peer.next_tick_at(self.now_ms);
+            let gen = self.slots[i].gen;
+            self.push_event(at, EventKind::Timer { peer: i, gen, kind: TimerKind::Tick });
         }
     }
 
@@ -334,7 +364,9 @@ impl SimNet {
     /// by the crash. Works on live and killed peers alike (a restart of
     /// a live peer is a power cycle). Returns the replay report.
     pub fn restart(&mut self, i: usize, torn_at: Option<u64>) -> WalReplayReport {
+        self.warm_victim_groups(i);
         let now = self.now_ms;
+        let table = self.table.clone();
         let slot = &mut self.slots[i];
         let cfg = slot.peer.cfg.clone();
         let region = slot.peer.info.region;
@@ -343,15 +375,16 @@ impl SimNet {
         if let Some(cut) = torn_at {
             wal_bytes.truncate(cut as usize);
         }
-        slot.peer = VaultPeer::new(cfg, &seed, region);
+        slot.peer = VaultPeer::with_table(cfg, &seed, region, table);
         slot.up = true;
         slot.attacked = false;
+        slot.tick_parked = false; // recovery re-inits the tick chain
         // Invalidate the dead incarnation's pending timers.
         slot.gen = slot.gen.wrapping_add(1);
         self.dir_dirty = true;
         let mut out = Outbox::at(now);
         let report = self.slots[i].peer.recover_from_wal(&mut out, wal_bytes);
-        self.drain(i, out);
+        self.drain(i, &mut out);
         report
     }
 
@@ -376,7 +409,7 @@ impl SimNet {
         let mut out = Outbox::at(self.now_ms);
         let op =
             self.slots[client].peer.client_store(&self.directory, &mut out, object, secret, expires_ms);
-        self.drain(client, out);
+        self.drain(client, &mut out);
         op
     }
 
@@ -384,7 +417,7 @@ impl SimNet {
         self.refresh_directory();
         let mut out = Outbox::at(self.now_ms);
         let op = self.slots[client].peer.client_query(&self.directory, &mut out, id);
-        self.drain(client, out);
+        self.drain(client, &mut out);
         op
     }
 
@@ -398,7 +431,9 @@ impl SimNet {
         (raw * jit).max(0.1) as u64 + 1
     }
 
-    fn drain(&mut self, from_slot: usize, out: Outbox) {
+    /// Route a peer's outbox. Takes `&mut` and drains the vectors so a
+    /// pooled outbox keeps its capacity for the next dispatch.
+    fn drain(&mut self, from_slot: usize, out: &mut Outbox) {
         let from_info = self.slots[from_slot].peer.info;
         let sender_blocked = !self.slots[from_slot].up || self.slots[from_slot].attacked;
         // Deferred sends (slow-loris trickle): same path as immediate
@@ -406,9 +441,9 @@ impl SimNet {
         // latency.
         let sends = out
             .sends
-            .into_iter()
+            .drain(..)
             .map(|(to, msg, p)| (0u64, to, msg, p))
-            .chain(out.delayed);
+            .chain(out.delayed.drain(..));
         for (hold_ms, to, msg, purpose) in sends {
             let size = msg.approx_size();
             {
@@ -443,32 +478,32 @@ impl SimNet {
             );
         }
         let gen = self.slots[from_slot].gen;
-        for (delay, kind) in out.timers {
+        for (delay, kind) in out.timers.drain(..) {
             self.push_event(
                 self.now_ms + delay.max(1),
                 EventKind::Timer { peer: from_slot, gen, kind },
             );
         }
-        for ev in out.app {
+        for ev in out.app.drain(..) {
             self.app_events.push((from_info.id, ev));
         }
     }
 
     fn push_event(&mut self, at_ms: u64, kind: EventKind) {
         self.seq += 1;
-        self.events.push(Reverse(Event { at_ms, seq: self.seq, kind }));
+        self.events.push(at_ms, self.seq, kind);
     }
 
     /// Advance virtual time until `t_ms`, returning app events emitted.
     pub fn run_until(&mut self, t_ms: u64) -> Vec<(NodeId, AppEvent)> {
         loop {
-            let Some(at) = self.events.peek().map(|Reverse(e)| e.at_ms) else { break };
+            let Some(at) = self.events.peek_time() else { break };
             if at > t_ms {
                 break;
             }
-            let Reverse(event) = self.events.pop().unwrap();
-            self.now_ms = event.at_ms;
-            self.dispatch(event);
+            let (at_ms, _, kind) = self.events.pop_next().unwrap();
+            self.now_ms = at_ms;
+            self.dispatch(kind);
         }
         self.now_ms = self.now_ms.max(t_ms);
         std::mem::take(&mut self.app_events)
@@ -515,15 +550,17 @@ impl SimNet {
         found
     }
 
-    fn dispatch(&mut self, event: Event) {
-        match event.kind {
+    fn dispatch(&mut self, kind: EventKind) {
+        self.stats.events += 1;
+        match kind {
             EventKind::Deliver { to, from, msg } => {
                 if !self.slots[to].up || self.slots[to].attacked {
                     self.stats.dropped += 1;
                     return;
                 }
                 self.refresh_directory();
-                let mut out = Outbox::at(self.now_ms);
+                let mut out = std::mem::take(&mut self.scratch);
+                out.reset(self.now_ms);
                 // Take the directory out to satisfy the borrow checker.
                 let dir = std::mem::replace(
                     &mut self.directory,
@@ -531,7 +568,8 @@ impl SimNet {
                 );
                 self.slots[to].peer.on_message(&dir, &mut out, from, msg);
                 self.directory = dir;
-                self.drain(to, out);
+                self.drain(to, &mut out);
+                self.scratch = out;
             }
             EventKind::Timer { peer, gen, kind } => {
                 if !self.slots[peer].up {
@@ -540,15 +578,39 @@ impl SimNet {
                 if self.slots[peer].gen != gen {
                     return; // a previous incarnation's timer (pre-restart)
                 }
+                if self.slots[peer].attacked && matches!(kind, TimerKind::Tick) {
+                    // Park instead of re-arming: a blackholed peer's tick
+                    // output is all dropped anyway, so running the chain
+                    // is pure timer churn (ISSUE 9 satellite). The heal
+                    // path re-arms from the original grid.
+                    self.slots[peer].tick_parked = true;
+                    self.stats.parked_ticks += 1;
+                    return;
+                }
+                if matches!(kind, TimerKind::Tick) && self.slots[peer].peer.maint_dormant() {
+                    // Dormancy fast-path: the tick body is provably a
+                    // no-op (no groups to heartbeat, nothing to GC or
+                    // decay), so charge the tick and re-arm without
+                    // running it. The re-arm matches `on_timer`'s
+                    // `tick_ms` exactly (one event, same seq budget), so
+                    // trajectories are unchanged.
+                    self.slots[peer].peer.metrics.ticks += 1;
+                    self.stats.elided_ticks += 1;
+                    let at = self.now_ms + self.slots[peer].peer.cfg.tick_ms.max(1);
+                    self.push_event(at, EventKind::Timer { peer, gen, kind: TimerKind::Tick });
+                    return;
+                }
                 self.refresh_directory();
-                let mut out = Outbox::at(self.now_ms);
+                let mut out = std::mem::take(&mut self.scratch);
+                out.reset(self.now_ms);
                 let dir = std::mem::replace(
                     &mut self.directory,
                     OracleDirectory::empty(),
                 );
                 self.slots[peer].peer.on_timer(&dir, &mut out, kind);
                 self.directory = dir;
-                self.drain(peer, out);
+                self.drain(peer, &mut out);
+                self.scratch = out;
             }
         }
     }

@@ -187,6 +187,14 @@ impl HealthTracker {
         cleared
     }
 
+    /// True when a `decay_tick` would be a no-op: no scores to decay and
+    /// no tracked requests. Quarantine entries don't matter here — decay
+    /// never touches them. The scale runtime's dormancy fast-path
+    /// (DESIGN.md §Scale Runtime) uses this to elide maintenance ticks.
+    pub fn is_quiescent(&self) -> bool {
+        self.peers.is_empty() && self.pending.is_empty()
+    }
+
     pub fn is_greylisted(&self, id: &NodeId) -> bool {
         self.peers.get(id).map(|h| h.greylisted).unwrap_or(false)
     }

@@ -1,0 +1,147 @@
+//! Shard-level `PeerInfo` interning (DESIGN.md §Scale Runtime).
+//!
+//! At 100k+ peers the dominant per-peer cost is no longer the fragments —
+//! it is the *member maps*: every chunk-group copy used to carry a full
+//! 65-byte `PeerInfo` (pk + region) per member, duplicated across every
+//! group view on every holder. The table stores each distinct identity
+//! once per shard; member maps hold a 4-byte [`PeerRef`] index instead.
+//!
+//! The table is append-only over identities: a `PeerRef`, once handed
+//! out, is stable for the lifetime of the table and always resolves. The
+//! *contents* behind a ref can be refreshed — gossip may correct the
+//! pk/region of a known id — but only through the same binding gate the
+//! member-merge path always enforced: an update for id `x` is accepted
+//! only if `NodeId::from_pk(pk) == x`, so a spoofed pk can never displace
+//! a stored identity (it would have to *be* the identity).
+//!
+//! Sharing is by handle: `PeerTable` is a cheap `Arc` clone, and every
+//! peer hosted by a shard shares its shard's table. The inner mutex is
+//! uncontended in practice — a shard's peers are processed serially — it
+//! exists because the thread pool may run a shard on different worker
+//! threads across windows.
+
+use std::sync::{Arc, Mutex};
+
+use crate::dht::{NodeId, PeerInfo};
+use crate::util::detmap::DetHashMap;
+
+/// Index into a [`PeerTable`]; the compact stand-in for a `PeerInfo`
+/// inside member maps. Never serialized — wire messages still carry full
+/// `PeerInfo` values, and each runtime re-interns on receipt.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct PeerRef(u32);
+
+struct TableInner {
+    infos: Vec<PeerInfo>,
+    by_id: DetHashMap<NodeId, u32>,
+}
+
+/// Shared, append-only identity table. Clone = handle.
+#[derive(Clone)]
+pub struct PeerTable {
+    inner: Arc<Mutex<TableInner>>,
+}
+
+impl Default for PeerTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PeerTable {
+    pub fn new() -> Self {
+        PeerTable {
+            inner: Arc::new(Mutex::new(TableInner {
+                infos: Vec::new(),
+                by_id: DetHashMap::default(),
+            })),
+        }
+    }
+
+    /// Intern `info`, returning its ref. Unknown ids are inserted as
+    /// given (callers gate insertion trust, exactly as they gated
+    /// `Member::fresh` before interning). For a known id, pk/region are
+    /// refreshed only when the pk actually binds to the id.
+    pub fn intern(&self, info: PeerInfo) -> PeerRef {
+        let mut t = self.inner.lock().unwrap();
+        if let Some(&ix) = t.by_id.get(&info.id) {
+            let cur = t.infos[ix as usize];
+            if (cur.pk != info.pk || cur.region != info.region)
+                && NodeId::from_pk(&info.pk) == info.id
+            {
+                t.infos[ix as usize] = info;
+            }
+            return PeerRef(ix);
+        }
+        let ix = t.infos.len() as u32;
+        t.infos.push(info);
+        t.by_id.insert(info.id, ix);
+        PeerRef(ix)
+    }
+
+    /// Resolve a ref to the current `PeerInfo` behind it.
+    pub fn get(&self, r: PeerRef) -> PeerInfo {
+        self.inner.lock().unwrap().infos[r.0 as usize]
+    }
+
+    /// Distinct identities interned so far.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().infos.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::ed25519::SigningKey;
+
+    fn ident(tag: u8) -> PeerInfo {
+        let key = SigningKey::from_seed(&[tag; 32]);
+        let pk = key.public;
+        PeerInfo { id: NodeId::from_pk(&pk), pk, region: tag % 5 }
+    }
+
+    #[test]
+    fn intern_is_idempotent_and_stable() {
+        let t = PeerTable::new();
+        let a = ident(1);
+        let r1 = t.intern(a);
+        let r2 = t.intern(a);
+        assert_eq!(r1, r2);
+        assert_eq!(t.get(r1), a);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn bound_update_refreshes_region() {
+        let t = PeerTable::new();
+        let mut a = ident(2);
+        let r = t.intern(a);
+        a.region = 9; // same (id, pk) binding, new region
+        assert_eq!(t.intern(a), r);
+        assert_eq!(t.get(r).region, 9);
+    }
+
+    #[test]
+    fn spoofed_pk_cannot_displace_identity() {
+        let t = PeerTable::new();
+        let a = ident(3);
+        let r = t.intern(a);
+        let spoof = PeerInfo { id: a.id, pk: [0xEE; 32], region: 4 };
+        assert_eq!(t.intern(spoof), r, "ref stays stable");
+        assert_eq!(t.get(r), a, "unbound pk must not overwrite");
+    }
+
+    #[test]
+    fn handles_share_state() {
+        let t = PeerTable::new();
+        let t2 = t.clone();
+        let r = t.intern(ident(4));
+        assert_eq!(t2.get(r), ident(4));
+        assert_eq!(t2.len(), 1);
+    }
+}

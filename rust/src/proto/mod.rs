@@ -10,6 +10,7 @@
 //! virtual-time evaluation harness and real TCP sockets.
 
 pub mod client;
+pub mod intern;
 pub mod messages;
 pub mod peer;
 pub mod selection;
@@ -124,6 +125,27 @@ pub struct VaultConfig {
     /// up, releases the requester's repair slot with a failed ack, and
     /// drops the join (satellite: the retry storm bugfix).
     pub join_retry_max: u32,
+    /// Cold-group aggregation (ISSUE 9): a placement group that has
+    /// been stable for a few ticks freezes — its holders stop paying
+    /// per-tick heartbeat/maintenance fidelity and the steady-state
+    /// claim traffic is charged arithmetically when the group is
+    /// faulted back in (by a chunk-touching message, a runtime fault
+    /// on a member, or an epoch rotation). Freeze/warm decisions are
+    /// pure functions of deterministic peer state, so fingerprints
+    /// remain a pure function of `(seed, shards)` — but they differ
+    /// from full-fidelity fingerprints, hence default-off (see
+    /// DESIGN.md §Scale Runtime).
+    pub lazy_groups: bool,
+    /// Per-concern maintenance horizons (ISSUE 9 tick split): the
+    /// monolithic per-tick walk is split into independent deadlines —
+    /// GC/aging, WAL flush, heartbeats, repair checks — that each
+    /// re-arm at their own horizon. 0 (default) = run on every tick,
+    /// which reproduces the legacy schedule bit-for-bit; a nonzero
+    /// horizon lets a concern run at a coarser cadence than `tick_ms`.
+    pub maint_gc_ms: u64,
+    pub maint_wal_ms: u64,
+    pub maint_hb_ms: u64,
+    pub maint_repair_ms: u64,
 }
 
 /// When to cryptographically verify heartbeat claims.
@@ -172,6 +194,11 @@ impl Default for VaultConfig {
             health_decay: 0.5,
             health_slow_num: 4,
             join_retry_max: 5,
+            lazy_groups: false,
+            maint_gc_ms: 0,
+            maint_wal_ms: 0,
+            maint_hb_ms: 0,
+            maint_repair_ms: 0,
         }
     }
 }
@@ -232,6 +259,17 @@ pub struct Outbox {
 impl Outbox {
     pub fn at(now_ms: u64) -> Self {
         Outbox { now_ms, ..Default::default() }
+    }
+    /// Clear collected effects and rebase to `now_ms`, keeping every
+    /// buffer's capacity. The sharded runtime drains into one pooled
+    /// outbox per shard instead of allocating a fresh one per event
+    /// (PR 3 zero-alloc discipline extended to delivery).
+    pub fn reset(&mut self, now_ms: u64) {
+        self.now_ms = now_ms;
+        self.sends.clear();
+        self.delayed.clear();
+        self.timers.clear();
+        self.app.clear();
     }
     /// Send with the message kind's default traffic class.
     pub fn send(&mut self, to: NodeId, msg: Msg) {
@@ -409,6 +447,17 @@ pub struct Metrics {
     pub evidence_accepted: u64,
     pub evidence_rejected: u64,
     pub join_give_ups: u64,
+    /// Scale runtime (ISSUE 9): maintenance ticks processed (bumped by
+    /// `tick()` and by the runtime's dormant-tick fast path, which is
+    /// state-equivalent to a full tick on a dormant peer), plus the
+    /// cold-group ledger — groups frozen / faulted back in, and the
+    /// steady-state claim traffic charged arithmetically for the
+    /// frozen interval at warm time.
+    pub ticks: u64,
+    pub lazy_freezes: u64,
+    pub lazy_warms: u64,
+    pub lazy_charged_claims: u64,
+    pub lazy_charged_bytes: u64,
     /// Sender-side per-purpose bandwidth (filled by the transports).
     pub maint: MaintStats,
 }

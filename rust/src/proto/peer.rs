@@ -27,6 +27,7 @@ use crate::util::rng::Rng;
 use crate::util::rng::fold64;
 
 use super::client::{QueryOp, StoreOp};
+use super::intern::{PeerRef, PeerTable};
 use super::messages::{
     AuditVerdict, BatchClaim, Claim, EpochAnnounce, HeartbeatBatch, MemberDelta, Msg, Purpose,
 };
@@ -57,12 +58,26 @@ const SEEN_ANNOUNCE_CAP: usize = 8;
 /// `op_timeout_ms * 2^3` between attempts.
 const JOIN_BACKOFF_CAP_EXP: u32 = 3;
 
+/// Cold-group aggregation (ISSUE 9): consecutive stable maintenance
+/// ticks before a group freezes. Must stay comfortably below
+/// `suspicion_ms / tick_ms` so holders all freeze (and stop expecting
+/// each other's heartbeats) well before any of them could start
+/// suspecting an already-frozen fellow.
+const LAZY_FREEZE_TICKS: u32 = 2;
+
+/// Analytic per-claim wire cost charged for frozen intervals: the
+/// steady-state `BatchClaim` footprint (chash 32 + index 8 + VRF proof
+/// ~80 + empty delta header 13) used by [`VaultPeer::warm_group`] to
+/// charge heartbeat bytes arithmetically for the ticks a group spent
+/// cold.
+const LAZY_CLAIM_BYTES: u64 = 133;
+
 /// Full member-list delta for a group, resetting its delta baseline —
 /// shared by the periodic batched tick (first batch after install) and
 /// the immediate repair-join announcement.
-fn full_delta_and_rebaseline(cs: &mut ChunkStore) -> MemberDelta {
+fn full_delta_and_rebaseline(table: &PeerTable, cs: &mut ChunkStore) -> MemberDelta {
     let digest = cached_digest(cs);
-    let added: Vec<PeerInfo> = cs.members.values().map(|m| m.info).collect();
+    let added: Vec<PeerInfo> = cs.members.values().map(|m| table.get(m.pref)).collect();
     let delta = MemberDelta { count: cs.members.len() as u32, digest, full: true, added };
     cs.announced = cs.members.keys().copied().collect();
     delta
@@ -84,10 +99,14 @@ pub fn members_digest<'a>(ids: impl Iterator<Item = &'a NodeId>) -> u64 {
     acc
 }
 
-/// Per-member liveness view.
+/// Per-member liveness view. Identity (pk/region) lives behind a
+/// [`PeerRef`] in the peer's shard-level [`PeerTable`] (ISSUE 9:
+/// interning shrinks a member entry from ~88 to ~16 bytes, which is
+/// what lets 100k-peer member maps fit in memory); the member's
+/// `NodeId` is the map key.
 #[derive(Clone, Copy, Debug)]
 pub struct Member {
-    pub info: PeerInfo,
+    pub pref: PeerRef,
     pub last_seen_ms: u64,
     /// Epoch rotation (ISSUE 5): this member's last claim proved
     /// eligibility only under the *previous* epoch, so it is serving
@@ -99,8 +118,8 @@ pub struct Member {
 }
 
 impl Member {
-    fn fresh(info: PeerInfo, last_seen_ms: u64) -> Self {
-        Member { info, last_seen_ms, retiring: false }
+    fn fresh(pref: PeerRef, last_seen_ms: u64) -> Self {
+        Member { pref, last_seen_ms, retiring: false }
     }
 }
 
@@ -188,6 +207,16 @@ pub struct ChunkStore {
     /// amplification; pure `last_seen` refreshes are volatile and
     /// never logged).
     pub members_dirty: bool,
+    /// Cold-group aggregation (ISSUE 9, `cfg.lazy_groups` only):
+    /// consecutive maintenance ticks this group has looked stable
+    /// (full, alive, clean). At [`LAZY_FREEZE_TICKS`] the group
+    /// freezes.
+    pub quiet_ticks: u32,
+    /// Virtual time this group froze (0 = warm). Frozen groups are
+    /// skipped by heartbeat, repair-check, aging, and WAL-flush; their
+    /// steady-state claim traffic is charged arithmetically at warm
+    /// time (see [`VaultPeer::warm_group`]).
+    pub frozen_at_ms: u64,
 }
 
 impl ChunkStore {
@@ -204,6 +233,11 @@ impl ChunkStore {
             self.members_dirty = true;
         }
         r
+    }
+
+    /// Is this group in the cold (frozen) fidelity tier?
+    pub fn frozen(&self) -> bool {
+        self.frozen_at_ms != 0
     }
 }
 
@@ -329,11 +363,45 @@ pub struct VaultPeer {
     /// Adaptive-withhold fault bookkeeping: data requests seen, so the
     /// fault can duty-cycle (ignore every second one).
     adaptive_ctr: u64,
+    /// Shard-level identity intern table (ISSUE 9): member maps hold
+    /// [`PeerRef`] indexes into it instead of inline `PeerInfo`s. Every
+    /// peer hosted by a runtime shard shares its shard's table
+    /// ([`Self::with_table`]); standalone construction gets a private
+    /// one.
+    pub table: PeerTable,
+    /// Virtual time the first maintenance tick fires (set by `init`).
+    /// The tick chain then lives on the fixed grid `anchor + k·tick_ms`,
+    /// which lets a runtime re-arm a parked chain at the exact grid
+    /// point ([`Self::next_tick_at`]) without a divergent RNG draw.
+    tick_anchor_ms: u64,
+    /// Per-concern maintenance deadlines (ISSUE 9 tick split): each
+    /// concern runs when its deadline is due and re-arms at its own
+    /// horizon (`cfg.maint_*_ms`; 0 = every tick).
+    due: MaintDue,
     pub metrics: Metrics,
+}
+
+/// Independent re-arming deadlines for the split maintenance concerns.
+/// All start at 0 (= due immediately), so the first tick runs
+/// everything, exactly like the monolithic walk did.
+#[derive(Clone, Copy, Debug, Default)]
+struct MaintDue {
+    gc_at: u64,
+    wal_at: u64,
+    hb_at: u64,
+    repair_at: u64,
 }
 
 impl VaultPeer {
     pub fn new(cfg: VaultConfig, seed: &[u8; 32], region: u8) -> Self {
+        Self::with_table(cfg, seed, region, PeerTable::new())
+    }
+
+    /// Construct sharing an existing identity table — the runtime path:
+    /// all peers hosted by a shard intern into the shard's table, so
+    /// each distinct identity is stored once per shard rather than once
+    /// per member map.
+    pub fn with_table(cfg: VaultConfig, seed: &[u8; 32], region: u8, table: PeerTable) -> Self {
         let key = SigningKey::from_seed(seed);
         let id = NodeId::from_pk(&key.public);
         let info = PeerInfo { id, pk: key.public, region };
@@ -376,6 +444,9 @@ impl VaultPeer {
             health,
             seen_announces: HashMap::default(),
             adaptive_ctr: 0,
+            table,
+            tick_anchor_ms: 0,
+            due: MaintDue::default(),
             metrics: Metrics::default(),
         }
     }
@@ -394,7 +465,25 @@ impl VaultPeer {
     /// alignment across the cluster).
     pub fn init(&mut self, out: &mut Outbox) {
         let jitter = self.rng.below(self.cfg.tick_ms.max(1));
+        // Transports clamp timer delays to >= 1ms; mirror that so the
+        // anchor matches the actual first firing.
+        self.tick_anchor_ms = out.now_ms + (self.cfg.tick_ms + jitter).max(1);
         out.timer(self.cfg.tick_ms + jitter, TimerKind::Tick);
+    }
+
+    /// First point of the tick grid strictly after `now_ms`. The chain
+    /// re-arms with a fixed `tick_ms` period from the jittered anchor,
+    /// so a runtime that parked a peer's tick chain (attacked peers,
+    /// ISSUE 9 satellite) can resume it on the exact schedule the chain
+    /// would have been on — no RNG draw, no phase shift.
+    pub fn next_tick_at(&self, now_ms: u64) -> u64 {
+        let period = self.cfg.tick_ms.max(1);
+        let a = self.tick_anchor_ms;
+        if now_ms < a {
+            a
+        } else {
+            a + ((now_ms - a) / period + 1) * period
+        }
     }
 
     // ---- introspection (tests/benches) --------------------------------
@@ -418,6 +507,14 @@ impl VaultPeer {
             .get(chash)
             .map(|c| c.members.keys().copied().collect())
             .unwrap_or_default()
+    }
+
+    /// Resolve a group member's interned identity (tests/benches).
+    pub fn member_info(&self, chash: &Hash256, id: &NodeId) -> Option<PeerInfo> {
+        self.store
+            .get(chash)
+            .and_then(|c| c.members.get(id))
+            .map(|m| self.table.get(m.pref))
     }
 
     pub fn alive_group_size(&self, chash: &Hash256, now_ms: u64) -> usize {
@@ -693,6 +790,8 @@ impl VaultPeer {
             announced: HashSet::default(),
             view_digest: None,
             members_dirty: false,
+            quiet_ticks: 0,
+            frozen_at_ms: 0,
         };
         if self.cfg.byzantine {
             // Fig. 6 adversary: "participate correctly in all VAULT
@@ -704,10 +803,10 @@ impl VaultPeer {
         let now = out.now_ms;
         for m in members {
             if m.id != self.id() {
-                cs.members.insert(m.id, Member::fresh(m, now));
+                cs.members.insert(m.id, Member::fresh(self.table.intern(m), now));
             }
         }
-        cs.members.insert(self.id(), Member::fresh(self.info, now));
+        cs.members.insert(self.id(), Member::fresh(self.table.intern(self.info), now));
         self.store.insert(chash, cs);
         self.metrics.fragments_stored += 1;
         self.wal_put(now, &chash);
@@ -725,7 +824,7 @@ impl VaultPeer {
             proof: cs.proof,
             expires_ms: cs.expires_ms,
         };
-        let members: Vec<PeerInfo> = cs.members.values().map(|m| m.info).collect();
+        let members: Vec<PeerInfo> = cs.members.values().map(|m| self.table.get(m.pref)).collect();
         cs.members_dirty = false;
         self.wal_log(now_ms, WalOp::FragPut(rec));
         self.wal_log(now_ms, WalOp::Members { chash: *chash, members });
@@ -758,6 +857,8 @@ impl VaultPeer {
         if self.adaptive_drop() {
             return; // fault: silently ignore every second data request
         }
+        self.warm_group(&chash, out.now_ms); // client op touches the group
+
         let refuse = self.fault.refuse_frags || self.fault.censor_chunk == Some(chash);
         let frag = self.store.get(&chash).and_then(|c| {
             if c.payload_dropped || refuse {
@@ -782,6 +883,8 @@ impl VaultPeer {
         if self.adaptive_drop() {
             return; // fault: silently ignore every second data request
         }
+        self.warm_group(&chash, out.now_ms); // client op touches the group
+
         // Cache fast path: encode the requested fragment locally from
         // the cached chunk so only one fragment crosses the network.
         let censored = self.fault.censor_chunk == Some(chash);
@@ -851,15 +954,20 @@ impl VaultPeer {
             status = Some(st);
         }
         let region = claim.members.iter().find(|m| m.id == from).map(|m| m.region).unwrap_or(0);
+        let pref = self.table.intern(PeerInfo { id: from, pk: claim.pk, region });
         let cs = self.store.get_mut(&claim.chash).unwrap();
         cs.mutate_members(|view| {
-            let m = view.entry(from).and_modify(|m| m.last_seen_ms = now).or_insert(
-                Member::fresh(PeerInfo { id: from, pk: claim.pk, region }, now),
-            );
+            let m = view
+                .entry(from)
+                .and_modify(|m| m.last_seen_ms = now)
+                .or_insert(Member::fresh(pref, now));
             if let Some(st) = status {
                 m.retiring = st == ProofStatus::Graced;
             }
         });
+        // A membership change on a frozen group is a fault-in trigger
+        // (steady-state claims are the one message class that is *not*).
+        self.warm_if_mutated(&claim.chash, now);
         // Merge piggybacked membership (gossip): learn new members
         // optimistically; suspicion weeds out the dead.
         let members = claim.members;
@@ -894,26 +1002,27 @@ impl VaultPeer {
     /// The hash runs only for new members or changed infos — the
     /// steady-state (identical info) path stays hash-free.
     pub(super) fn merge_members(&mut self, now_ms: u64, chash: &Hash256, members: &[PeerInfo]) {
+        let table = &self.table;
         let Some(cs) = self.store.get_mut(chash) else { return };
         cs.mutate_members(|view| {
             for m in members {
                 match view.entry(m.id) {
-                    Entry::Occupied(mut e) => {
-                        let cur = &mut e.get_mut().info;
-                        if (cur.pk != m.pk || cur.region != m.region)
-                            && NodeId::from_pk(&m.pk) == m.id
-                        {
-                            *cur = *m;
-                        }
+                    Entry::Occupied(_) => {
+                        // The binding-gated pk/region refresh lives in
+                        // the intern table now: `intern` updates the
+                        // stored identity iff `NodeId::from_pk(pk) ==
+                        // id` (a spoofed pk can never displace one).
+                        table.intern(*m);
                     }
                     Entry::Vacant(v) => {
                         if NodeId::from_pk(&m.pk) == m.id {
-                            v.insert(Member::fresh(*m, now_ms));
+                            v.insert(Member::fresh(table.intern(*m), now_ms));
                         }
                     }
                 }
             }
         });
+        self.warm_if_mutated(chash, now_ms);
     }
 
     /// Claim-verification policy actually in force. Under epoch
@@ -959,73 +1068,58 @@ impl VaultPeer {
 
     // ---- maintenance tick ------------------------------------------------
 
+    /// One maintenance tick: runs each due concern (ISSUE 9 tick
+    /// split) and re-arms it at its own horizon. With the default
+    /// horizons (0 = every tick) every concern runs on every tick, in
+    /// exactly the order the monolithic walk used, so the legacy
+    /// schedule — and with it every fingerprint — is reproduced
+    /// bit-for-bit.
     fn tick(&mut self, dir: &dyn Directory, out: &mut Outbox) {
         let now = out.now_ms;
-        // GC expired objects, chunks whose rotation grace window has
-        // closed (the departing-member half of an epoch rotation), and
-        // stale caches.
-        let metrics = &mut self.metrics;
-        let mut gc_dropped: Vec<Hash256> = Vec::new();
-        self.store.retain(|chash, cs| {
-            if cs.retire_at_ms != 0 && now >= cs.retire_at_ms {
-                metrics.grace_drops += 1;
-                gc_dropped.push(*chash);
-                return false;
-            }
-            let keep = cs.expires_ms == 0 || cs.expires_ms > now;
-            if !keep {
-                gc_dropped.push(*chash);
-            }
-            keep
-        });
-        for chash in gc_dropped {
-            self.wal_log(now, WalOp::FragRemove(chash));
+        self.metrics.ticks += 1;
+        if now >= self.due.gc_at {
+            self.maint_gc(now);
+            self.due.gc_at = now + self.cfg.maint_gc_ms;
         }
-        let drop_after = self.cfg.suspicion_ms.saturating_mul(3);
-        for cs in self.store.values_mut() {
-            if cs.cache_expires_ms <= now {
-                cs.cached_chunk = None;
-            }
-            let self_id = self.info.id;
-            cs.mutate_members(|view| {
-                view.retain(|id, m| {
-                    *id == self_id || now.saturating_sub(m.last_seen_ms) < drop_after
-                })
-            });
-        }
-
-        // Flush changed group views to the WAL: one full snapshot per
-        // dirty group per tick (see `ChunkStore::members_dirty`).
-        let dirty: Vec<Hash256> = self
-            .store
-            .iter()
-            .filter(|(_, cs)| cs.members_dirty)
-            .map(|(chash, _)| *chash)
-            .collect();
-        for chash in dirty {
-            let members: Vec<PeerInfo> = {
-                let cs = self.store.get_mut(&chash).unwrap();
-                cs.members_dirty = false;
-                cs.members.values().map(|m| m.info).collect()
-            };
-            self.wal_log(now, WalOp::Members { chash, members });
+        if now >= self.due.wal_at {
+            self.maint_wal_flush(now);
+            self.due.wal_at = now + self.cfg.maint_wal_ms;
         }
 
         // Heartbeats + repair detection. Batched mode sends one
         // aggregated message per neighbor; legacy mode keeps the exact
-        // pre-batching per-chunk message schedule.
+        // pre-batching per-chunk message schedule (interleaved per
+        // chunk when both concerns are due together).
+        let hb_due = now >= self.due.hb_at;
+        let repair_due = now >= self.due.repair_at;
         if self.cfg.batched_maint {
-            self.heartbeat_batched(out);
+            if hb_due {
+                self.heartbeat_batched(out);
+            }
+            if repair_due {
+                self.maint_repair_check(dir, out);
+            }
+        } else if hb_due || repair_due {
             let chashes: Vec<Hash256> = self.store.keys().copied().collect();
             for chash in chashes {
-                self.check_repair(dir, out, &chash);
+                if hb_due {
+                    self.heartbeat_chunk(out, &chash);
+                }
+                if repair_due {
+                    self.check_repair(dir, out, &chash);
+                }
             }
-        } else {
-            let chashes: Vec<Hash256> = self.store.keys().copied().collect();
-            for chash in chashes {
-                self.heartbeat_chunk(out, &chash);
-                self.check_repair(dir, out, &chash);
+        }
+        if hb_due {
+            self.due.hb_at = now + self.cfg.maint_hb_ms;
+            // Freeze bookkeeping rides the heartbeat concern: a group
+            // is a freeze candidate only on ticks its claims went out.
+            if self.cfg.lazy_groups {
+                self.lazy_freeze_scan(now);
             }
+        }
+        if repair_due {
+            self.due.repair_at = now + self.cfg.maint_repair_ms;
         }
 
         // Expire stalled repair coordinations.
@@ -1054,19 +1148,235 @@ impl VaultPeer {
         }
     }
 
+    /// GC concern: drop expired chunks and closed rotation-grace
+    /// windows, expire stale chunk caches, and age out members unseen
+    /// for `3 × suspicion_ms`. Frozen groups are exempt from cache
+    /// expiry and aging — while cold the closed-form model says every
+    /// member kept heartbeating, so nothing may age out.
+    fn maint_gc(&mut self, now: u64) {
+        let metrics = &mut self.metrics;
+        let mut gc_dropped: Vec<Hash256> = Vec::new();
+        self.store.retain(|chash, cs| {
+            if cs.retire_at_ms != 0 && now >= cs.retire_at_ms {
+                metrics.grace_drops += 1;
+                gc_dropped.push(*chash);
+                return false;
+            }
+            let keep = cs.expires_ms == 0 || cs.expires_ms > now;
+            if !keep {
+                gc_dropped.push(*chash);
+            }
+            keep
+        });
+        for chash in gc_dropped {
+            self.wal_log(now, WalOp::FragRemove(chash));
+        }
+        let drop_after = self.cfg.suspicion_ms.saturating_mul(3);
+        for cs in self.store.values_mut() {
+            if cs.frozen() {
+                continue;
+            }
+            if cs.cache_expires_ms <= now {
+                cs.cached_chunk = None;
+            }
+            let self_id = self.info.id;
+            cs.mutate_members(|view| {
+                view.retain(|id, m| {
+                    *id == self_id || now.saturating_sub(m.last_seen_ms) < drop_after
+                })
+            });
+        }
+    }
+
+    /// WAL-flush concern: one full membership snapshot per dirty group
+    /// (see `ChunkStore::members_dirty`). Frozen groups are never
+    /// dirty — a membership mutation faults them warm first.
+    fn maint_wal_flush(&mut self, now: u64) {
+        let dirty: Vec<Hash256> = self
+            .store
+            .iter()
+            .filter(|(_, cs)| cs.members_dirty)
+            .map(|(chash, _)| *chash)
+            .collect();
+        for chash in dirty {
+            let members: Vec<PeerInfo> = {
+                let cs = self.store.get_mut(&chash).unwrap();
+                cs.members_dirty = false;
+                cs.members.values().map(|m| self.table.get(m.pref)).collect()
+            };
+            self.wal_log(now, WalOp::Members { chash, members });
+        }
+    }
+
+    /// Repair-check concern (batched mode): one pass over every stored
+    /// chunk.
+    fn maint_repair_check(&mut self, dir: &dyn Directory, out: &mut Outbox) {
+        let chashes: Vec<Hash256> = self.store.keys().copied().collect();
+        for chash in chashes {
+            self.check_repair(dir, out, &chash);
+        }
+    }
+
+    /// Would this tick be a no-op? Runtimes use this for the dormant
+    /// fast path: re-arm the tick chain directly (bumping
+    /// `metrics.ticks`) without building an outbox or walking the
+    /// concerns. True only when every observable effect of `tick()` is
+    /// provably absent: no stored groups (or, under `lazy_groups`, all
+    /// of them frozen), no in-flight repair coordinations, no open
+    /// audit rounds, and a quiescent health tracker (decay with no
+    /// scores is a no-op). The per-concern `due` deadlines are
+    /// schedule-internal and carry no observable state.
+    pub fn maint_dormant(&self) -> bool {
+        let groups_idle = if self.cfg.lazy_groups {
+            self.store.values().all(|cs| cs.frozen())
+        } else {
+            self.store.is_empty()
+        };
+        groups_idle
+            && self.repairs.is_empty()
+            && self.audit_rounds.is_empty()
+            && self.health.as_ref().map_or(true, |h| h.is_quiescent())
+    }
+
+    // ---- cold-group aggregation (ISSUE 9) -------------------------------
+
+    /// Advance freeze bookkeeping for warm groups: a group that has
+    /// looked stable (full, alive, clean, steady-state deltas) for
+    /// [`LAZY_FREEZE_TICKS`] consecutive heartbeat passes freezes.
+    /// All holders see the same converged group state, so they freeze
+    /// within a couple of ticks of each other — well inside the
+    /// suspicion window, which is what keeps a not-yet-frozen holder
+    /// from suspecting an already-frozen fellow.
+    fn lazy_freeze_scan(&mut self, now: u64) {
+        if self.fault.mute_heartbeats {
+            return; // a muted peer must stay warm so fellows can suspect it
+        }
+        let r_inner = self.cfg.r_inner;
+        let suspicion = self.cfg.suspicion_ms;
+        let mut frozen = 0u64;
+        for cs in self.store.values_mut() {
+            if cs.frozen() {
+                continue;
+            }
+            let stable = cs.retire_at_ms == 0
+                && cs.expires_ms == 0
+                && cs.cached_chunk.is_none()
+                && !cs.members_dirty
+                && cs.announced.len() == cs.members.len()
+                && cs.members.len() >= r_inner
+                && cs.members.values().all(|m| {
+                    !m.retiring && now.saturating_sub(m.last_seen_ms) < suspicion
+                });
+            if stable {
+                cs.quiet_ticks += 1;
+                if cs.quiet_ticks >= LAZY_FREEZE_TICKS {
+                    cs.frozen_at_ms = now;
+                    frozen += 1;
+                }
+            } else {
+                cs.quiet_ticks = 0;
+            }
+        }
+        self.metrics.lazy_freezes += frozen;
+    }
+
+    /// Fault a frozen group back to full fidelity. The closed-form
+    /// catch-up: while cold, every member kept heartbeating on
+    /// schedule — so the whole view's `last_seen` advances to `now`
+    /// and the steady-state claim traffic for the frozen interval is
+    /// charged arithmetically instead of having been simulated.
+    pub(super) fn warm_group(&mut self, chash: &Hash256, now: u64) {
+        if !self.cfg.lazy_groups {
+            return;
+        }
+        let tick = self.cfg.tick_ms.max(1);
+        let Some(cs) = self.store.get_mut(chash) else { return };
+        if !cs.frozen() {
+            return;
+        }
+        let ticks_missed = now.saturating_sub(cs.frozen_at_ms) / tick;
+        let fellows = cs.members.len().saturating_sub(1) as u64;
+        cs.frozen_at_ms = 0;
+        cs.quiet_ticks = 0;
+        cs.mutate_members(|view| {
+            for m in view.values_mut() {
+                m.last_seen_ms = now;
+            }
+        });
+        self.metrics.lazy_warms += 1;
+        self.metrics.lazy_charged_claims += fellows * ticks_missed;
+        self.metrics.lazy_charged_bytes += fellows * ticks_missed * LAZY_CLAIM_BYTES;
+    }
+
+    /// Warm a group iff a membership mutation landed on it while
+    /// frozen (the mutation marked it dirty; frozen groups are
+    /// otherwise never dirty).
+    fn warm_if_mutated(&mut self, chash: &Hash256, now: u64) {
+        if !self.cfg.lazy_groups {
+            return;
+        }
+        let mutated = self
+            .store
+            .get(chash)
+            .map_or(false, |cs| cs.frozen() && cs.members_dirty);
+        if mutated {
+            self.warm_group(chash, now);
+        }
+    }
+
+    /// Runtime fault hook: before a kill/attack/restart lands on
+    /// `victim`, every frozen group it belongs to faults back to full
+    /// fidelity — the surviving holders must resume real heartbeats
+    /// and aging so they can suspect the victim and repair around it.
+    pub fn warm_groups_of(&mut self, victim: &NodeId, now: u64) {
+        if !self.cfg.lazy_groups {
+            return;
+        }
+        let chashes: Vec<Hash256> = self
+            .store
+            .iter()
+            .filter(|(_, cs)| cs.frozen() && cs.members.contains_key(victim))
+            .map(|(chash, _)| *chash)
+            .collect();
+        for chash in chashes {
+            self.warm_group(&chash, now);
+        }
+    }
+
+    /// Epoch boundary / rotation: everything faults warm (placement is
+    /// being re-sampled, so no group's membership is stable).
+    pub(super) fn warm_all(&mut self, now: u64) {
+        if !self.cfg.lazy_groups {
+            return;
+        }
+        let chashes: Vec<Hash256> = self
+            .store
+            .iter()
+            .filter(|(_, cs)| cs.frozen())
+            .map(|(chash, _)| *chash)
+            .collect();
+        for chash in chashes {
+            self.warm_group(&chash, now);
+        }
+    }
+
     fn heartbeat_chunk(&mut self, out: &mut Outbox, chash: &Hash256) {
         if self.fault.mute_heartbeats {
             return; // silent liveness failure: peers must suspect us
         }
         let now = out.now_ms;
+        let table = &self.table;
         let Some(cs) = self.store.get_mut(chash) else { return };
+        if cs.frozen() {
+            return; // cold tier: claim traffic is charged at warm time
+        }
         if let Some(me) = cs.members.get_mut(&self.info.id) {
             me.last_seen_ms = now;
         }
         let sig = self
             .key
             .sign(&Claim::signing_bytes(chash, cs.frag.index, now));
-        let member_infos: Vec<PeerInfo> = cs.members.values().map(|m| m.info).collect();
+        let member_infos: Vec<PeerInfo> = cs.members.values().map(|m| table.get(m.pref)).collect();
         let claim = Claim {
             chash: *chash,
             index: cs.frag.index,
@@ -1097,19 +1407,23 @@ impl VaultPeer {
         let now = out.now_ms;
         let my_id = self.info.id;
         let mut per_peer: HashMap<NodeId, Vec<BatchClaim>> = HashMap::default();
+        let table = &self.table;
         for (chash, cs) in self.store.iter_mut() {
+            if cs.frozen() {
+                continue; // cold tier: claim traffic is charged at warm time
+            }
             if let Some(me) = cs.members.get_mut(&my_id) {
                 me.last_seen_ms = now;
             }
             let delta = if cs.announced.is_empty() {
-                full_delta_and_rebaseline(cs)
+                full_delta_and_rebaseline(table, cs)
             } else {
                 let digest = cached_digest(cs);
                 let added: Vec<PeerInfo> = cs
                     .members
-                    .values()
-                    .filter(|m| !cs.announced.contains(&m.info.id))
-                    .map(|m| m.info)
+                    .iter()
+                    .filter(|(id, _)| !cs.announced.contains(*id))
+                    .map(|(_, m)| table.get(m.pref))
                     .collect();
                 let d = MemberDelta {
                     count: cs.members.len() as u32,
@@ -1125,11 +1439,11 @@ impl VaultPeer {
                 }
                 d
             };
-            for m in cs.members.values() {
-                if m.info.id == my_id {
+            for mid in cs.members.keys() {
+                if *mid == my_id {
                     continue;
                 }
-                per_peer.entry(m.info.id).or_default().push(BatchClaim {
+                per_peer.entry(*mid).or_default().push(BatchClaim {
                     chash: *chash,
                     index: cs.frag.index,
                     proof: cs.proof,
@@ -1182,11 +1496,12 @@ impl VaultPeer {
         }
         let now = out.now_ms;
         let my_id = self.info.id;
+        let table = &self.table;
         let Some(cs) = self.store.get_mut(chash) else { return };
         if let Some(me) = cs.members.get_mut(&my_id) {
             me.last_seen_ms = now;
         }
-        let delta = full_delta_and_rebaseline(cs);
+        let delta = full_delta_and_rebaseline(table, cs);
         let claim = BatchClaim { chash: *chash, index: cs.frag.index, proof: cs.proof, delta };
         let targets: Vec<NodeId> =
             cs.members.keys().filter(|id| **id != my_id).copied().collect();
@@ -1249,15 +1564,21 @@ impl VaultPeer {
                 self.remember_verified(key);
                 status = Some(st);
             }
+            let pref =
+                self.table.intern(PeerInfo { id: from, pk: batch.pk, region: batch.region });
             let cs = self.store.get_mut(&claim.chash).unwrap();
             cs.mutate_members(|view| {
-                let m = view.entry(from).and_modify(|m| m.last_seen_ms = now).or_insert(
-                    Member::fresh(PeerInfo { id: from, pk: batch.pk, region: batch.region }, now),
-                );
+                let m = view
+                    .entry(from)
+                    .and_modify(|m| m.last_seen_ms = now)
+                    .or_insert(Member::fresh(pref, now));
                 if let Some(st) = status {
                     m.retiring = st == ProofStatus::Graced;
                 }
             });
+            // Membership change on a frozen group ⇒ fault-in; bare
+            // steady-state claims leave the cold tier cold.
+            self.warm_if_mutated(&claim.chash, now);
             if !claim.delta.added.is_empty() {
                 self.merge_members(now, &claim.chash, &claim.delta.added);
             }
@@ -1281,12 +1602,17 @@ impl VaultPeer {
 
     /// Serve a full-list view resync to a fellow group member.
     fn handle_get_members(&mut self, out: &mut Outbox, from: NodeId, chash: Hash256) {
-        let Some(cs) = self.store.get(&chash) else { return };
-        if !cs.members.contains_key(&from) {
+        let is_member =
+            self.store.get(&chash).map_or(false, |cs| cs.members.contains_key(&from));
+        if !is_member {
             return; // only members may pull the view
         }
+        // A member pulling the view means it saw divergence — the group
+        // is not in steady state, so fault it warm.
+        self.warm_group(&chash, out.now_ms);
         self.metrics.resyncs_served += 1;
-        let members: Vec<PeerInfo> = cs.members.values().map(|m| m.info).collect();
+        let cs = self.store.get(&chash).unwrap();
+        let members: Vec<PeerInfo> = cs.members.values().map(|m| self.table.get(m.pref)).collect();
         out.send_p(from, Msg::Members { chash, members }, Purpose::Heartbeat);
     }
 
@@ -1365,6 +1691,9 @@ impl VaultPeer {
     /// newly-eligible replacements while we still serve reads.
     fn rotate_groups(&mut self, out: &mut Outbox) {
         let now = out.now_ms;
+        // Epoch boundary: placement is being re-sampled, so every cold
+        // group faults back to full fidelity first.
+        self.warm_all(now);
         let grace = self.cfg.rotation_grace_ms.max(1);
         let my_id = self.info.id;
         let chashes: Vec<(Hash256, u64)> =
@@ -1452,15 +1781,20 @@ impl VaultPeer {
                 if cs.retire_at_ms != 0 {
                     continue; // retiring: this epoch's members audit now
                 }
+                if cs.frozen() {
+                    // Cold tier: a frozen group already proved itself
+                    // stable; audits resume when it faults back in.
+                    continue;
+                }
                 let fellows: Vec<NodeId> = cs
                     .members
-                    .values()
-                    .filter(|m| {
-                        m.info.id != my_id
+                    .iter()
+                    .filter(|(id, m)| {
+                        **id != my_id
                             && !m.retiring
                             && now.saturating_sub(m.last_seen_ms) < self.cfg.suspicion_ms
                     })
-                    .map(|m| m.info.id)
+                    .map(|(id, _)| *id)
                     .collect();
                 (fellows, cs.frag.chunk_len as usize)
             };
@@ -1545,12 +1879,12 @@ impl VaultPeer {
         for chash in chashes {
             let fellows: Vec<NodeId> = self.store[&chash]
                 .members
-                .values()
-                .filter(|m| {
-                    m.info.id != my_id
+                .iter()
+                .filter(|(id, m)| {
+                    **id != my_id
                         && now.saturating_sub(m.last_seen_ms) < self.cfg.suspicion_ms
                 })
-                .map(|m| m.info.id)
+                .map(|(id, _)| *id)
                 .collect();
             for auditee in fellows {
                 let proof = audit_schedule::prove_audit(
@@ -1588,6 +1922,9 @@ impl VaultPeer {
         if !self.cfg.audits {
             return;
         }
+        // Being challenged is a data-plane touch: fault back to full
+        // fidelity before serving (verdicts may evict a member next).
+        self.warm_group(&chash, out.now_ms);
         // `censor_chunk` refuses audits for the censored chunk too —
         // the slice *is* the fragment bytes, and serving them would
         // hand any auditor a decodable copy of what we censor. That
@@ -1746,12 +2083,12 @@ impl VaultPeer {
             .get(chash)
             .map(|cs| {
                 cs.members
-                    .values()
-                    .filter(|m| {
-                        m.info.id != my_id
+                    .iter()
+                    .filter(|(id, m)| {
+                        **id != my_id
                             && now.saturating_sub(m.last_seen_ms) < self.cfg.suspicion_ms
                     })
-                    .map(|m| m.info.id)
+                    .map(|(id, _)| *id)
                     .collect()
             })
             .unwrap_or_default();
@@ -1995,33 +2332,36 @@ impl VaultPeer {
     fn check_repair(&mut self, dir: &dyn Directory, out: &mut Outbox, chash: &Hash256) {
         let now = out.now_ms;
         let Some(cs) = self.store.get(chash) else { return };
+        // A frozen group proved itself stable (full, fresh, nobody
+        // retiring) for LAZY_FREEZE_TICKS passes before freezing, so by
+        // construction it carries no deficit; any mutation that could
+        // open one warms the group first.
+        if cs.frozen() {
+            return;
+        }
+        let my_id = self.info.id;
         // Audit-driven eviction (ISSUE 7): a peer the verdict ledger
         // marks suspect heartbeats convincingly but provably withholds
         // data, so it is treated as dead here — the deficit it opens
         // is what recruits its replacement through the ordinary repair
         // path. Never applied to self: a framed node must keep doing
         // its own share of maintenance while its peers decide.
-        let alive: Vec<&Member> = cs
+        let alive: Vec<(NodeId, bool)> = cs
             .members
-            .values()
-            .filter(|m| now.saturating_sub(m.last_seen_ms) < self.cfg.suspicion_ms)
-            .filter(|m| {
-                !self.cfg.audits
-                    || m.info.id == self.info.id
-                    || !self.audit_ledger.is_suspect(&m.info.id)
+            .iter()
+            .filter(|(_, m)| now.saturating_sub(m.last_seen_ms) < self.cfg.suspicion_ms)
+            .filter(|(id, _)| {
+                !self.cfg.audits || **id == my_id || !self.audit_ledger.is_suspect(*id)
             })
             // Equivocation quarantine (ISSUE 8) mirrors audit-suspect
             // eviction: a proven equivocator no longer counts toward R,
             // and the deficit recruits its replacement. Never applied
             // to self (same rationale as the suspect filter above).
-            .filter(|m| {
-                m.info.id == self.info.id
-                    || self
-                        .health
-                        .as_ref()
-                        .map(|h| !h.is_quarantined(&m.info.id))
-                        .unwrap_or(true)
+            .filter(|(id, _)| {
+                **id == my_id
+                    || self.health.as_ref().map(|h| !h.is_quarantined(*id)).unwrap_or(true)
             })
+            .map(|(id, m)| (*id, m.retiring))
             .collect();
         // Retiring members (rotation grace window) serve reads but no
         // longer count toward the group target: the deficit they open
@@ -2029,7 +2369,7 @@ impl VaultPeer {
         // still serve. In legacy mode nobody is ever retiring, so
         // `active == alive` and this is exactly the pre-epoch behavior.
         let mut active: Vec<NodeId> =
-            alive.iter().filter(|m| !m.retiring).map(|m| m.info.id).collect();
+            alive.iter().filter(|(_, retiring)| !retiring).map(|(id, _)| *id).collect();
         if active.len() >= self.cfg.r_inner {
             return;
         }
@@ -2039,7 +2379,7 @@ impl VaultPeer {
         // shard it (someone must initiate, and they still hold the
         // fragments the joiners will pull).
         let mut shard_set: Vec<NodeId> = if active.is_empty() {
-            alive.iter().map(|m| m.info.id).collect()
+            alive.iter().map(|(id, _)| *id).collect()
         } else {
             std::mem::take(&mut active)
         };
@@ -2142,11 +2482,12 @@ impl VaultPeer {
             return;
         };
         let now = out.now_ms;
+        let table = &self.table;
         let members: Vec<PeerInfo> = cs
             .members
             .values()
             .filter(|m| now.saturating_sub(m.last_seen_ms) < self.cfg.suspicion_ms)
-            .map(|m| m.info)
+            .map(|m| table.get(m.pref))
             .collect();
         let expires = cs.expires_ms;
         out.send(from, Msg::RepairReq { op, chash, index, members, expires_ms: expires });
@@ -2188,6 +2529,9 @@ impl VaultPeer {
             out.send(from, Msg::RepairAck { op, chash, index, ok: false });
             return;
         }
+        // A repair aimed at this group means somebody sees a deficit:
+        // if we hold it frozen, fault back to full fidelity.
+        self.warm_group(&chash, out.now_ms);
         if let Some(cs) = self.store.get(&chash) {
             // Already a group member: ok iff we hold exactly this fragment.
             let ok = cs.frag.index == index;
@@ -2344,12 +2688,13 @@ impl VaultPeer {
         }
         let Some(proof) = self.own_proof(&chash, js.index) else { return };
         let now = out.now_ms;
+        let table = &self.table;
         let mut members: HashMap<NodeId, Member> = js
             .members
             .values()
-            .map(|info| (info.id, Member::fresh(*info, now)))
+            .map(|info| (info.id, Member::fresh(table.intern(*info), now)))
             .collect();
-        members.insert(self.id(), Member::fresh(self.info, now));
+        members.insert(self.id(), Member::fresh(self.table.intern(self.info), now));
         let mut payload_dropped = false;
         if self.cfg.byzantine {
             frag.payload = Vec::new();
@@ -2375,6 +2720,8 @@ impl VaultPeer {
                 announced: HashSet::default(),
                 view_digest: None,
                 members_dirty: false,
+                quiet_ticks: 0,
+                frozen_at_ms: 0,
             },
         );
         self.metrics.repairs_joined += 1;
@@ -2535,10 +2882,10 @@ impl VaultPeer {
             let mut member_map: HashMap<NodeId, Member> = HashMap::default();
             for m in &members {
                 if m.id != my_id {
-                    member_map.insert(m.id, Member::fresh(*m, now));
+                    member_map.insert(m.id, Member::fresh(self.table.intern(*m), now));
                 }
             }
-            let mut me = Member::fresh(self.info, now);
+            let mut me = Member::fresh(self.table.intern(self.info), now);
             me.retiring = retiring;
             member_map.insert(my_id, me);
             self.store.insert(
@@ -2555,6 +2902,8 @@ impl VaultPeer {
                     announced: HashSet::default(),
                     view_digest: None,
                     members_dirty: false,
+                    quiet_ticks: 0,
+                    frozen_at_ms: 0,
                 },
             );
             self.metrics.recovered_fragments += 1;
@@ -2636,9 +2985,9 @@ impl VaultPeer {
     pub fn force_store(&mut self, now_ms: u64, chash: Hash256, frag: Fragment, proof: VrfProof, members: Vec<PeerInfo>) {
         let mut member_map = HashMap::default();
         for m in members {
-            member_map.insert(m.id, Member::fresh(m, now_ms));
+            member_map.insert(m.id, Member::fresh(self.table.intern(m), now_ms));
         }
-        member_map.insert(self.id(), Member::fresh(self.info, now_ms));
+        member_map.insert(self.id(), Member::fresh(self.table.intern(self.info), now_ms));
         self.store.insert(
             chash,
             ChunkStore {
@@ -2653,6 +3002,8 @@ impl VaultPeer {
                 announced: HashSet::default(),
                 view_digest: None,
                 members_dirty: false,
+                quiet_ticks: 0,
+                frozen_at_ms: 0,
             },
         );
         self.wal_put(now_ms, &chash);
@@ -2714,8 +3065,9 @@ mod tests {
         let mut b_new = b.info;
         b_new.region = 9;
         a.merge_members(5_000, &chash, &[b_new, d.info]);
+        let got = a.member_info(&chash, &b.info.id).unwrap();
+        assert_eq!(got.region, 9, "known member info must refresh");
         let cs = &a.store[&chash];
-        assert_eq!(cs.members[&b.info.id].info.region, 9, "known member info must refresh");
         assert_eq!(
             cs.members[&b.info.id].last_seen_ms, 0,
             "refreshing info must not touch liveness"
@@ -2734,7 +3086,7 @@ mod tests {
         // Victim b's id gossiped with an attacker pk/region.
         let spoofed = PeerInfo { id: b.info.id, pk: [0xEE; 32], region: 4 };
         a.merge_members(5_000, &chash, &[spoofed]);
-        let got = a.store[&chash].members[&b.info.id].info;
+        let got = a.member_info(&chash, &b.info.id).unwrap();
         assert_eq!(got.pk, b.info.pk, "spoofed pk must not overwrite a stored identity");
         assert_eq!(got.region, b.info.region);
         // A phantom id whose pk does not hash to it is not inserted.

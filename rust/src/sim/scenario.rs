@@ -269,6 +269,16 @@ pub struct ScenarioSpec {
     /// evidence, and the DHT bucket-diversity guard. Off by default so
     /// every pre-existing scenario fingerprint is byte-identical.
     pub peer_health: bool,
+    /// Cold-group aggregation (ISSUE 9): untouched placement groups
+    /// freeze into a closed-form aggregate and fault back in on touch.
+    /// Off by default so every pre-existing scenario fingerprint is
+    /// byte-identical; when on, the fingerprint is still a pure
+    /// function of `(seed, shards)` — see DESIGN.md §Scale Runtime.
+    pub lazy_groups: bool,
+    /// Worker threads for the sharded runtime (0 = one per core). Never
+    /// part of the outcome — `tests/scale_runtime.rs` pins it to
+    /// several values and asserts identical fingerprints.
+    pub workers: usize,
     pub phases: Vec<Phase>,
 }
 
@@ -290,8 +300,23 @@ impl ScenarioSpec {
             audits: false,
             audit_rate: 0.25,
             peer_health: false,
+            lazy_groups: false,
+            workers: 0,
             phases: Vec::new(),
         }
+    }
+
+    /// Enable cold-group aggregation (ISSUE 9): stable, untouched
+    /// placement groups advance arithmetically instead of per-tick.
+    pub fn lazy_groups(mut self) -> Self {
+        self.lazy_groups = true;
+        self
+    }
+
+    /// Pin the sharded runtime's worker-pool size (0 = one per core).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
     }
 
     /// Enable the peer-health defense plane (ISSUE 8): request
@@ -429,6 +454,8 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
     cfg.vault.audits = spec.audits;
     cfg.vault.audit_rate = spec.audit_rate;
     cfg.vault.peer_health = spec.peer_health;
+    cfg.vault.lazy_groups = spec.lazy_groups;
+    cfg.sim.workers = spec.workers;
     cfg.vault.heartbeat_ms = 5_000;
     cfg.vault.suspicion_ms = 15_000;
     cfg.vault.tick_ms = 5_000;

@@ -22,17 +22,27 @@ use std::cell::Cell;
 thread_local! {
     static ALLOCS: Cell<u64> = const { Cell::new(0) };
     static BYTES: Cell<u64> = const { Cell::new(0) };
+    static LIVE: Cell<u64> = const { Cell::new(0) };
 }
 
 /// System-allocator wrapper counting allocations on the current thread.
-/// Dealloc is free; `alloc`, `alloc_zeroed`, and growth via `realloc`
-/// each count as one allocation.
+/// `alloc`, `alloc_zeroed`, and growth via `realloc` each count as one
+/// allocation; `dealloc` only adjusts the live-bytes gauge.
 pub struct CountingAlloc;
 
 #[inline]
 fn record(size: usize) {
     ALLOCS.with(|c| c.set(c.get() + 1));
     BYTES.with(|c| c.set(c.get() + size as u64));
+    LIVE.with(|c| c.set(c.get() + size as u64));
+}
+
+#[inline]
+fn release(size: usize) {
+    // Saturating: a buffer allocated on one thread and freed on another
+    // (thread-pool handoff) must not wrap the gauge. Residency benches run
+    // single-threaded so build/run attribution stays exact there.
+    LIVE.with(|c| c.set(c.get().saturating_sub(size as u64)));
 }
 
 // SAFETY: defers all allocation to `System`; the bookkeeping touches
@@ -49,6 +59,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        release(layout.size());
         System.dealloc(ptr, layout)
     }
 
@@ -56,6 +67,8 @@ unsafe impl GlobalAlloc for CountingAlloc {
         // Only growth is an allocation; shrinking reallocs stay free.
         if new_size > layout.size() {
             record(new_size - layout.size());
+        } else {
+            release(layout.size() - new_size);
         }
         System.realloc(ptr, layout, new_size)
     }
@@ -69,6 +82,15 @@ pub fn thread_allocations() -> u64 {
 /// Bytes requested on this thread since it started.
 pub fn thread_alloc_bytes() -> u64 {
     BYTES.with(|c| c.get())
+}
+
+/// Bytes currently resident (allocated minus freed) on this thread.
+/// Reads 0 unless [`CountingAlloc`] is installed. `vault bench-scale`
+/// samples this around `ShardNet` construction (with `workers = 1`, so
+/// all allocation lands on the calling thread) to report resident
+/// bytes per simulated peer.
+pub fn thread_live_bytes() -> u64 {
+    LIVE.with(|c| c.get())
 }
 
 /// Run `f` and return `(allocations, bytes, result)` attributed to it on

@@ -9,6 +9,7 @@ pub mod logger;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;
+pub mod timerwheel;
 
 /// Lowercase hex encoding.
 pub fn hex(bytes: &[u8]) -> String {

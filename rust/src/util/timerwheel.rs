@@ -1,0 +1,326 @@
+//! Two-tier calendar timer wheel for the sharded simulation runtime.
+//!
+//! The per-shard event queue used to be a `BinaryHeap` ordered by
+//! `(at_ms, seq)`. At 100k+ peers the heap holds one pending tick timer per
+//! peer, so every push/pop pays `O(log n)` plus the comparison churn of
+//! sifting through tens of thousands of far-future timers that are not due
+//! for seconds of virtual time. The wheel replaces that with:
+//!
+//! * a **near tier**: `NEAR_SLOTS` one-millisecond buckets covering the
+//!   window `[cursor, cursor + NEAR_SLOTS)`. Push and pop are `O(1)`;
+//!   an occupancy bitmap lets `peek_time` skip empty regions 64 slots at a
+//!   time with a word scan.
+//! * a **far tier**: a small `BinaryHeap` for events beyond the near
+//!   horizon (~65 virtual seconds). Far events migrate into the near tier
+//!   when the cursor advances to within a horizon of them.
+//!
+//! # Ordering contract
+//!
+//! `pop_next` yields events in exactly the same global `(at_ms, seq)` order
+//! the old heap produced, which is what keeps fingerprints byte-identical:
+//!
+//! * Each near bucket holds events for a **single timestamp** (invariant:
+//!   buckets only ever contain events with `at ∈ [cursor, cursor + N)`, and
+//!   two timestamps in that window never alias the same `at % N` slot).
+//! * Within a bucket, FIFO order equals `seq` order: sequence numbers are
+//!   allocated monotonically at push time, direct pushes append in `seq`
+//!   order, and far→near migration happens **only when the cursor
+//!   advances** (inside `pop_next`), before any direct push at the new
+//!   cursor position can occur. Between cursor advances the far tier only
+//!   holds events with `at >= cursor + N` — which the push rule routes to
+//!   the far tier as well — so a bucket is never appended out of `seq`
+//!   order.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Near-tier horizon in milliseconds (must be a power of two for the
+/// slot-index mask). 1<<16 ≈ 65 virtual seconds comfortably covers every
+/// in-queue delay the runtime produces (tick cadence, op timeouts, join
+/// backoff, link latency); anything longer parks in the far heap.
+pub const NEAR_SLOTS: usize = 1 << 16;
+
+const WORDS: usize = NEAR_SLOTS / 64;
+
+/// Far-tier entry ordered by `(at_ms, seq)`. Seq numbers are unique per
+/// queue, so comparing the key alone is a total order and the payload
+/// type needs no `Eq` bound.
+struct Far<T> {
+    at_ms: u64,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for Far<T> {
+    fn eq(&self, other: &Self) -> bool {
+        (self.at_ms, self.seq) == (other.at_ms, other.seq)
+    }
+}
+impl<T> Eq for Far<T> {}
+
+impl<T> Ord for Far<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at_ms, self.seq).cmp(&(other.at_ms, other.seq))
+    }
+}
+
+impl<T> PartialOrd for Far<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Calendar queue over `(at_ms, seq, item)` triples. Drop-in replacement
+/// for `BinaryHeap<Reverse<Event>>` keyed by `(at_ms, seq)`.
+pub struct TimerWheel<T> {
+    /// `NEAR_SLOTS` FIFO buckets; slot = `at_ms % NEAR_SLOTS`. Buckets keep
+    /// their capacity across laps, acting as a self-renewing arena.
+    near: Vec<VecDeque<(u64, u64, T)>>,
+    /// One bit per near slot; lets `peek_time` scan 64 slots per word.
+    occ: Vec<u64>,
+    far: BinaryHeap<Reverse<Far<T>>>,
+    /// Lowest timestamp not yet fully drained. Only advances in `pop_next`.
+    cursor: u64,
+    len: usize,
+}
+
+impl<T> Default for TimerWheel<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> TimerWheel<T> {
+    pub fn new() -> Self {
+        TimerWheel {
+            near: (0..NEAR_SLOTS).map(|_| VecDeque::new()).collect(),
+            occ: vec![0u64; WORDS],
+            far: BinaryHeap::new(),
+            cursor: 0,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Schedule `item` at `(at_ms, seq)`. `seq` values must be unique and
+    /// monotonically increasing across pushes (the shard allocates them).
+    pub fn push(&mut self, at_ms: u64, seq: u64, item: T) {
+        // Events are always scheduled strictly in the future relative to the
+        // processing cursor; clamp defensively so a stray past-dated event is
+        // delivered "now" instead of corrupting a bucket a lap behind.
+        let at = at_ms.max(self.cursor);
+        self.len += 1;
+        if at >= self.cursor + NEAR_SLOTS as u64 {
+            self.far.push(Reverse(Far { at_ms: at, seq, item }));
+            return;
+        }
+        let slot = (at as usize) & (NEAR_SLOTS - 1);
+        self.near[slot].push_back((at, seq, item));
+        self.occ[slot / 64] |= 1u64 << (slot % 64);
+    }
+
+    /// Timestamp of the next due event without popping it.
+    pub fn peek_time(&self) -> Option<u64> {
+        if self.len == 0 {
+            return None;
+        }
+        let near = self.scan_near();
+        let far = self.far.peek().map(|Reverse(f)| f.at_ms);
+        match (near, far) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// Pop the globally least `(at_ms, seq)` event. Advances the cursor to
+    /// its timestamp and migrates far-tier events that entered the near
+    /// horizon (before draining, preserving `seq` order within buckets).
+    pub fn pop_next(&mut self) -> Option<(u64, u64, T)> {
+        let t = self.peek_time()?;
+        if t > self.cursor {
+            self.cursor = t;
+        }
+        // Pull every far event now within [cursor, cursor + N). Their target
+        // buckets cannot hold older timestamps (t is the global minimum), and
+        // heap order delivers same-timestamp entries in seq order.
+        while let Some(Reverse(f)) = self.far.peek() {
+            if f.at_ms >= self.cursor + NEAR_SLOTS as u64 {
+                break;
+            }
+            let Reverse(f) = self.far.pop().unwrap();
+            let slot = (f.at_ms as usize) & (NEAR_SLOTS - 1);
+            self.near[slot].push_back((f.at_ms, f.seq, f.item));
+            self.occ[slot / 64] |= 1u64 << (slot % 64);
+        }
+        let slot = (t as usize) & (NEAR_SLOTS - 1);
+        let ev = self.near[slot].pop_front()?;
+        if self.near[slot].is_empty() {
+            self.occ[slot / 64] &= !(1u64 << (slot % 64));
+        }
+        self.len -= 1;
+        debug_assert_eq!(ev.0, t, "bucket held a mixed timestamp");
+        Some(ev)
+    }
+
+    /// Scan the occupancy bitmap from the cursor's slot, wrapping once.
+    /// Returns the timestamp of the first occupied near slot. By the bucket
+    /// invariant, a slot at circular distance `d` from the cursor slot holds
+    /// exactly the timestamp `cursor + d`.
+    fn scan_near(&self) -> Option<u64> {
+        let start = (self.cursor as usize) & (NEAR_SLOTS - 1);
+        let (w0, b0) = (start / 64, start % 64);
+        // First word: mask off bits below the cursor slot.
+        let masked = self.occ[w0] & (!0u64 << b0);
+        if masked != 0 {
+            let slot = w0 * 64 + masked.trailing_zeros() as usize;
+            return Some(self.cursor + (slot - start) as u64);
+        }
+        // Remaining words, wrapping around the calendar once.
+        for i in 1..=WORDS {
+            let w = (w0 + i) % WORDS;
+            let mut word = self.occ[w];
+            if w == w0 {
+                // Wrapped back to the first word: only bits below the cursor
+                // slot remain unchecked.
+                word &= !(!0u64 << b0);
+            }
+            if word != 0 {
+                let slot = w * 64 + word.trailing_zeros() as usize;
+                let dist = (slot + NEAR_SLOTS - start) % NEAR_SLOTS;
+                return Some(self.cursor + dist as u64);
+            }
+            if w == w0 {
+                break;
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Reference model: the old BinaryHeap ordering.
+    fn heap_order(mut events: Vec<(u64, u64, u32)>) -> Vec<(u64, u64, u32)> {
+        events.sort_by_key(|&(at, seq, _)| (at, seq));
+        events
+    }
+
+    #[test]
+    fn pops_in_at_seq_order() {
+        let mut w = TimerWheel::new();
+        w.push(5, 2, 20u32);
+        w.push(5, 1, 10);
+        w.push(3, 3, 30);
+        w.push(9, 4, 40);
+        assert_eq!(w.peek_time(), Some(3));
+        assert_eq!(w.pop_next(), Some((3, 3, 30)));
+        assert_eq!(w.pop_next(), Some((5, 1, 10)));
+        assert_eq!(w.pop_next(), Some((5, 2, 20)));
+        assert_eq!(w.pop_next(), Some((9, 4, 40)));
+        assert_eq!(w.pop_next(), None);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn far_events_migrate_in_order() {
+        let mut w = TimerWheel::new();
+        let horizon = NEAR_SLOTS as u64;
+        // Far push first (lower seq), near push at the same timestamp later
+        // (higher seq) — the far event must still drain first.
+        w.push(horizon + 100, 1, 1u32);
+        w.push(10, 2, 2);
+        assert_eq!(w.pop_next(), Some((10, 2, 2)));
+        // Cursor is now 10; horizon+100 is still beyond it + N? 10 + N =
+        // N+10 < N+100, so the event is still far. Advance via a filler.
+        w.push(200, 3, 3);
+        assert_eq!(w.pop_next(), Some((200, 3, 3)));
+        // Now a direct push at the same timestamp as the far event.
+        w.push(horizon + 100, 4, 4);
+        assert_eq!(w.pop_next(), Some((horizon + 100, 1, 1)));
+        assert_eq!(w.pop_next(), Some((horizon + 100, 4, 4)));
+    }
+
+    #[test]
+    fn wraps_across_many_laps() {
+        let mut w = TimerWheel::new();
+        let mut seq = 0u64;
+        let mut expect = Vec::new();
+        // Spread events across several calendar laps.
+        for lap in 0..5u64 {
+            for k in 0..7u64 {
+                let at = lap * NEAR_SLOTS as u64 + k * 9001 + 1;
+                seq += 1;
+                expect.push((at, seq, (seq % 251) as u32));
+                w.push(at, seq, (seq % 251) as u32);
+            }
+        }
+        let expect = heap_order(expect);
+        let mut got = Vec::new();
+        while let Some(ev) = w.pop_next() {
+            got.push(ev);
+        }
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn randomized_interleaved_push_pop_matches_heap() {
+        let mut rng = Rng::new(0xCA1E_17DA);
+        let mut w = TimerWheel::new();
+        let mut model: Vec<(u64, u64, u32)> = Vec::new();
+        let mut seq = 0u64;
+        let mut now = 0u64;
+        let mut popped = Vec::new();
+        for _ in 0..5_000 {
+            if !model.is_empty() && rng.below(3) == 0 {
+                let m = heap_order(std::mem::take(&mut model));
+                let (at, s, v) = m[0];
+                model = m[1..].to_vec();
+                let got = w.pop_next().expect("wheel empty but model is not");
+                assert_eq!(got, (at, s, v));
+                popped.push(got);
+                now = at;
+            } else {
+                // Mix of near, mid, and far horizons relative to `now`.
+                let delta = match rng.below(4) {
+                    0 => 1 + rng.below(50),
+                    1 => 1 + rng.below(5_000),
+                    2 => 1 + rng.below(NEAR_SLOTS as u64 - 2),
+                    _ => NEAR_SLOTS as u64 + rng.below(200_000),
+                };
+                seq += 1;
+                let at = now + delta;
+                model.push((at, seq, (seq % 97) as u32));
+                w.push(at, seq, (seq % 97) as u32);
+            }
+        }
+        for (at, s, v) in heap_order(model) {
+            assert_eq!(w.pop_next(), Some((at, s, v)));
+        }
+        assert_eq!(w.pop_next(), None);
+        // Sanity: pops were globally monotone in (at, seq).
+        for pair in popped.windows(2) {
+            assert!((pair[0].0, pair[0].1) < (pair[1].0, pair[1].1));
+        }
+    }
+
+    #[test]
+    fn buckets_keep_capacity_across_laps() {
+        let mut w = TimerWheel::new();
+        for i in 0..32u64 {
+            w.push(64, i, 0u32);
+        }
+        while w.pop_next().is_some() {}
+        let cap = w.near[64].capacity();
+        assert!(cap >= 32, "drained bucket should retain capacity, got {cap}");
+    }
+}

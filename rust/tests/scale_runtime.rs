@@ -1,0 +1,65 @@
+//! Scale-runtime determinism regressions (ISSUE 9).
+//!
+//! The sharded runtime's contract is that a trajectory is a pure
+//! function of `(VaultConfig, n, SimOpts.seed, shards)` — the worker
+//! pool size changes wall-clock time only, never the outcome. The
+//! timer-wheel event queues, the dormancy fast-path, and cold-group
+//! aggregation all have to preserve that: these tests pin the pool to
+//! 1, 2 and 8 workers on a 10k-peer crash-burst scenario and assert
+//! byte-identical fingerprints, in full fidelity and again with the
+//! cold-group tier armed.
+
+use vault::proto::ClaimVerify;
+use vault::sim::scenario::{run_scenario, Check, Fault, ScenarioReport, ScenarioSpec};
+
+fn ten_k_spec(name: &'static str, lazy: bool, workers: usize) -> ScenarioSpec {
+    let mut spec = ScenarioSpec::small(name, 4040, 10_000).workers(workers);
+    if lazy {
+        spec = spec.lazy_groups();
+    }
+    spec.shards = 16;
+    spec.objects = 2;
+    spec.object_size = 8_000;
+    // The documented large-cluster measurement knob (proto::ClaimVerify)
+    // — determinism, storage, suspicion and repair are still end-to-end.
+    spec.claim_verify = ClaimVerify::Never;
+    spec.phase(
+        "burst-and-settle",
+        vec![Fault::CrashBurst { count: 50 }],
+        45_000,
+        vec![Check::NoChunkBelowDecodeThreshold, Check::AllObjectsReadable],
+    )
+}
+
+fn assert_worker_invariance(name: &'static str, lazy: bool) -> ScenarioReport {
+    let base = run_scenario(&ten_k_spec(name, lazy, 1));
+    assert!(
+        base.ok(),
+        "scenario `{name}` violated invariants:\n  {}",
+        base.failures().join("\n  ")
+    );
+    for workers in [2usize, 8] {
+        let run = run_scenario(&ten_k_spec(name, lazy, workers));
+        assert_eq!(
+            base.fingerprint, run.fingerprint,
+            "`{name}`: {workers}-worker fingerprint diverged from the 1-worker run"
+        );
+        assert_eq!(base.final_now_ms, run.final_now_ms);
+        assert_eq!(base.final_peers, run.final_peers);
+    }
+    base
+}
+
+#[test]
+fn worker_count_never_changes_the_trajectory() {
+    assert_worker_invariance("workers_full_fidelity", false);
+}
+
+#[test]
+fn worker_count_invariance_holds_with_cold_groups() {
+    // The hard case: with `lazy_groups` on, which groups freeze and
+    // when they fault back in is itself part of the trajectory — the
+    // aggregate advance must consume exactly the event/seq budget of
+    // the full-fidelity path on every schedule the pool can produce.
+    assert_worker_invariance("workers_cold_groups", true);
+}

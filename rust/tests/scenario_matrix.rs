@@ -821,3 +821,30 @@ fn scenario_thousand_node_burst() {
     );
     assert_eq!(report.final_peers, 1000);
 }
+
+#[test]
+fn scenario_ten_thousand_node_burst_through_rotation() {
+    // ISSUE 9 scale promotion: 10k peers over 16 shard queues on the
+    // timer-wheel runtime, with cold-group aggregation armed, a 100-peer
+    // correlated crash burst, and the phase advance crossing an epoch
+    // boundary so every group rotates mid-recovery. Run twice via
+    // `run_deterministic`: the fingerprint must be a pure function of
+    // `(seed, shards)` no matter which groups froze, faulted in, or
+    // rotated — the cold-tier determinism contract (DESIGN.md §Scale
+    // Runtime).
+    let mut spec = ScenarioSpec::small("ten_k_burst_rotation", 909, 10_000)
+        .epoch_rotation(60_000, 20_000)
+        .lazy_groups();
+    spec.shards = 16;
+    spec.objects = 2;
+    spec.object_size = 8_000;
+    spec.claim_verify = ClaimVerify::Never;
+    let spec = spec.phase(
+        "burst-through-a-boundary",
+        vec![Fault::CrashBurst { count: 100 }],
+        75_000,
+        vec![Check::NoChunkBelowDecodeThreshold, Check::AllObjectsReadable],
+    );
+    let report = run_deterministic(&spec);
+    assert_eq!(report.final_peers, 10_000);
+}
