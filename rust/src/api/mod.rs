@@ -308,6 +308,13 @@ impl<R, K: std::hash::Hash + Eq + Clone> ApiState<R, K> {
         n
     }
 
+    /// The runtime correlation key of a still-pending handle — the
+    /// cancel-propagation path reads it before `cancel` removes the
+    /// entry, to find the peer saga to tear down (ISSUE 10).
+    pub fn pending_key(&self, handle: OpHandle) -> Option<K> {
+        self.pending.get(&handle.0).map(|p| p.key.clone())
+    }
+
     /// Abort a pending op: remove it from the registry and queue a
     /// `Failed` completion. Returns false if the handle is not pending.
     pub fn cancel(&mut self, handle: OpHandle, now_ms: u64) -> bool {

@@ -55,6 +55,9 @@ pub trait ClusterRuntime {
     fn set_drop_prob(&mut self, p: f64);
     fn store(&mut self, client: usize, object: &[u8], secret: &[u8], expires_ms: u64) -> u64;
     fn query(&mut self, client: usize, id: &ObjectId) -> u64;
+    /// Tear down a client query saga an API `cancel_op` abandoned
+    /// (ISSUE 10; only called with `VaultConfig::read_cancel` on).
+    fn cancel_client_op(&mut self, client: usize, op: u64) -> bool;
     fn run_until(&mut self, t_ms: u64) -> Vec<(NodeId, AppEvent)>;
     fn run_for(&mut self, d_ms: u64) -> Vec<(NodeId, AppEvent)>;
     fn surviving_fragments(&self, chash: &Hash256) -> usize;
@@ -117,6 +120,9 @@ macro_rules! forward_cluster_runtime {
             }
             fn query(&mut self, client: usize, id: &ObjectId) -> u64 {
                 <$ty>::query(self, client, id)
+            }
+            fn cancel_client_op(&mut self, client: usize, op: u64) -> bool {
+                <$ty>::cancel_client_op(self, client, op)
             }
             fn run_until(&mut self, t_ms: u64) -> Vec<(NodeId, AppEvent)> {
                 <$ty>::run_until(self, t_ms)
@@ -570,7 +576,23 @@ impl<N: ClusterRuntime> VaultApi for Cluster<N> {
 
     fn cancel_op(&mut self, handle: OpHandle) -> bool {
         let now = self.net.now_ms();
-        self.api.cancel(handle, now)
+        let key = self.api.pending_key(handle);
+        let cancelled = self.api.cancel(handle, now);
+        // Cancel propagation (ISSUE 10): with `read_cancel` on, tear
+        // the peer's saga down too — otherwise it keeps re-fanning
+        // `GetFrag` until its deadline, charging bandwidth to an op the
+        // registry already declared dead. Gated so flag-off runs (and
+        // every pre-existing `cancel_all` call site) stay byte-identical.
+        if cancelled && self.cfg.vault.read_cancel {
+            if let Some((node, op)) = key {
+                if let Some(idx) =
+                    (0..self.net.len()).find(|&i| self.net.peer(i).info.id == node)
+                {
+                    self.net.cancel_client_op(idx, op);
+                }
+            }
+        }
+        cancelled
     }
 
     fn api_now_ms(&self) -> u64 {

@@ -259,6 +259,195 @@ pub fn run_open_loop<A: VaultApi>(
     report
 }
 
+/// Parameters of one zipf-skewed, gets-only read storm (ISSUE 10).
+///
+/// Unlike [`OpenLoopSpec`] this never stores: the caller seeds a corpus
+/// first and the storm hammers it with a heavy-tailed object
+/// popularity (`weight(rank r) ∝ 1/(r+1)^zipf_s`), which is what makes
+/// the hot-object cache and request coalescing observable.
+#[derive(Clone, Debug)]
+pub struct ReadStormSpec {
+    /// Seeds the storm's private RNG stream (arrivals, object choice,
+    /// client choice).
+    pub seed: u64,
+    /// Gets to submit in total.
+    pub total_gets: usize,
+    /// Admission cap on outstanding gets.
+    pub target_in_flight: usize,
+    /// Mean of the exponential interarrival distribution (virtual ms).
+    pub mean_interarrival_ms: f64,
+    /// Zipf skew exponent; 0.0 = uniform, ~1.0 = classic heavy tail.
+    pub zipf_s: f64,
+    /// Per-op deadline forwarded to the API (`None` = backend default).
+    /// Failed and straggling gets contribute this value as a censored
+    /// latency sample, so tail percentiles reflect unavailability
+    /// instead of silently dropping it.
+    pub deadline_ms: Option<u64>,
+    /// Hard stop: give up on stragglers this far past the start.
+    pub max_virtual_ms: u64,
+    /// Pin every get to client 0. Cache hits and coalescing are
+    /// per-client; a pinned storm makes their rates structural rather
+    /// than a function of how many clients the popularity spreads over.
+    pub single_client: bool,
+}
+
+impl Default for ReadStormSpec {
+    fn default() -> Self {
+        ReadStormSpec {
+            seed: 7,
+            total_gets: 200,
+            target_in_flight: 16,
+            mean_interarrival_ms: 30.0,
+            zipf_s: 1.1,
+            deadline_ms: None,
+            max_virtual_ms: 600_000,
+            single_client: false,
+        }
+    }
+}
+
+/// Aggregate outcome of a read storm.
+#[derive(Clone, Debug, Default)]
+pub struct ReadStormReport {
+    pub submitted: usize,
+    pub ok: usize,
+    pub failed: usize,
+    pub bytes_fetched: u64,
+    /// One sample per submitted get: completion latency for successes,
+    /// the deadline (censored) for failures and cancelled stragglers.
+    pub latency: Samples,
+    pub elapsed_virtual_ms: u64,
+    pub fingerprint: u64,
+}
+
+impl ReadStormReport {
+    /// Fraction of submitted gets that completed with the object.
+    pub fn availability(&self) -> f64 {
+        if self.submitted == 0 {
+            return 1.0;
+        }
+        self.ok as f64 / self.submitted as f64
+    }
+
+    pub fn p(&self, q: f64) -> f64 {
+        self.latency.percentile(q)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "gets={} ok={} failed={} avail={:.4} p50={:.0}ms p99={:.0}ms p999={:.0}ms",
+            self.submitted,
+            self.ok,
+            self.failed,
+            self.availability(),
+            self.p(50.0),
+            self.p(99.0),
+            self.p(99.9),
+        )
+    }
+}
+
+/// Prefix-sum CDF over zipf rank weights; sampled by one uniform draw.
+fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let mut acc = 0.0;
+    (0..n)
+        .map(|r| {
+            acc += 1.0 / ((r + 1) as f64).powf(s);
+            acc
+        })
+        .collect()
+}
+
+fn zipf_sample(cdf: &[f64], rng: &mut Rng) -> usize {
+    let total = *cdf.last().expect("non-empty corpus");
+    let u = rng.f64() * total;
+    cdf.partition_point(|&c| c < u).min(cdf.len() - 1)
+}
+
+/// Run a zipf-skewed, gets-only open-loop storm against a pre-seeded
+/// corpus. Deterministic for a fixed `(spec, refs)` pair: arrivals,
+/// object picks, and client picks all come from one private RNG
+/// stream, and the fingerprint folds every submission and completion.
+pub fn run_read_storm<A: VaultApi>(
+    api: &mut A,
+    spec: &ReadStormSpec,
+    refs: &[A::ObjectRef],
+) -> ReadStormReport {
+    assert!(!refs.is_empty(), "read storm needs a seeded corpus");
+    let mut rng = Rng::new(spec.seed ^ 0x5EAD_570A);
+    let mut report = ReadStormReport::default();
+    let mut fp = fold64(spec.seed, refs.len() as u64);
+    let cdf = zipf_cdf(refs.len(), spec.zipf_s);
+    let start = api.api_now_ms();
+    let stop = start + spec.max_virtual_ms;
+    let mean = spec.mean_interarrival_ms.max(0.001);
+    let mut next_arrival = start + rng.exp(1.0 / mean) as u64;
+    let mut ours: DetHashSet<u64> = DetHashSet::default();
+    // Censored latency charged to gets that never delivered.
+    let censor_ms = spec.deadline_ms.unwrap_or(spec.max_virtual_ms) as f64;
+
+    while report.submitted < spec.total_gets || !ours.is_empty() {
+        let now = api.api_now_ms();
+        if now >= stop {
+            break;
+        }
+        while report.submitted < spec.total_gets
+            && next_arrival <= now
+            && ours.len() < spec.target_in_flight.max(1)
+        {
+            let client =
+                if spec.single_client { 0 } else { pick_client(api, &mut rng) };
+            let target = refs[zipf_sample(&cdf, &mut rng)].clone();
+            let handle = api.submit_get_with(client, &target, spec.deadline_ms);
+            ours.insert(handle.0);
+            report.submitted += 1;
+            fp = fold64(fp, handle.0);
+            next_arrival += rng.exp(1.0 / mean) as u64 + 1;
+        }
+        let target_t = if report.submitted < spec.total_gets
+            && ours.len() < spec.target_in_flight.max(1)
+        {
+            next_arrival.max(now + 1)
+        } else {
+            now + 200
+        };
+        api.drive(target_t.min(stop));
+        for done in api.poll_completions() {
+            if !ours.remove(&done.handle.0) {
+                continue;
+            }
+            match done.outcome {
+                OpOutcome::Fetched(_) => {
+                    report.ok += 1;
+                    report.bytes_fetched += done.bytes;
+                    report.latency.push(done.latency_ms() as f64);
+                    fp = fold64(fp, done.finished_ms ^ 0xF37C);
+                }
+                OpOutcome::Failed(_) => {
+                    report.failed += 1;
+                    report.latency.push(censor_ms);
+                    fp = fold64(fp, done.finished_ms ^ 0xFA11);
+                }
+                OpOutcome::Stored(_) => {} // unreachable: storm never stores
+            }
+        }
+    }
+    let stragglers = api.cancel_all(ours.iter().map(|&h| OpHandle(h)).collect());
+    report.failed += stragglers;
+    for _ in 0..stragglers {
+        report.latency.push(censor_ms);
+    }
+    fp = fold64(fp, stragglers as u64);
+    report.elapsed_virtual_ms = api.api_now_ms().saturating_sub(start);
+    fp = fold64(fp, report.p(50.0) as u64);
+    fp = fold64(fp, report.p(99.0) as u64);
+    fp = fold64(fp, report.p(99.9) as u64);
+    fp = fold64(fp, report.ok as u64);
+    fp = fold64(fp, report.failed as u64);
+    report.fingerprint = fp;
+    report
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,6 +485,54 @@ mod tests {
             ..Default::default()
         };
         run_open_loop(&mut cluster, &spec, &mut refs)
+    }
+
+    #[test]
+    fn zipf_prefers_hot_ranks() {
+        let cdf = zipf_cdf(50, 1.2);
+        let mut rng = Rng::new(99);
+        let mut counts = vec![0usize; 50];
+        for _ in 0..2_000 {
+            counts[zipf_sample(&cdf, &mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[10], "rank 0 must beat rank 10: {counts:?}");
+        assert!(counts[0] > counts[49], "rank 0 must beat the tail");
+        assert!(counts[0] > 2_000 / 10, "heavy head: rank 0 draws >10% of mass");
+    }
+
+    fn storm_run(seed: u64) -> ReadStormReport {
+        let mut cfg = ClusterConfig::small_test(48);
+        cfg.seed = seed;
+        let mut cluster = Cluster::start(cfg);
+        let mut refs = Vec::new();
+        for i in 0..3u8 {
+            let data = vec![i + 1; 4_000];
+            let r = cluster
+                .store_blocking(0, &data, format!("storm-{i}").as_bytes(), 0)
+                .expect("seed store");
+            refs.push(r.value);
+        }
+        let spec = ReadStormSpec {
+            seed,
+            total_gets: 12,
+            target_in_flight: 4,
+            mean_interarrival_ms: 30.0,
+            ..Default::default()
+        };
+        run_read_storm(&mut cluster, &spec, &refs)
+    }
+
+    #[test]
+    fn read_storm_completes_and_is_deterministic() {
+        let a = storm_run(21);
+        assert_eq!(a.submitted, 12);
+        assert_eq!(a.ok, 12, "healthy cluster serves every get: {}", a.summary());
+        assert_eq!(a.latency.len(), 12, "one sample per submitted get");
+        assert!(a.availability() == 1.0);
+        let b = storm_run(21);
+        assert_eq!(a.fingerprint, b.fingerprint, "same seed must fingerprint-match");
+        let c = storm_run(22);
+        assert_ne!(a.fingerprint, c.fingerprint, "different seed must diverge");
     }
 
     #[test]

@@ -38,6 +38,13 @@
 //!                    aggregation; reports wall-s per virtual-s,
 //!                    resident bytes/peer, and events/s; emits
 //!                    `BENCH_scale.json`.
+//! * `bench-read`   — heavy-traffic read-path bench (ISSUE 10): zipf
+//!                    open-loop get storms against a cluster whose
+//!                    nearer replicas reply slow-loris, naive fan-out
+//!                    vs ranked + hedged + cached + coalesced, with
+//!                    tail latencies (p50/p99/p999), goodput per
+//!                    network byte, and the hedge/cache/coalesce
+//!                    rates; emits `BENCH_read.json`.
 //! * `tcp-demo`     — bring up a real-TCP localhost cluster and do one
 //!                    store/query round trip.
 //! * `sim`          — §6.1 durability simulations (fig4|fig5|fig6).
@@ -47,7 +54,9 @@
 
 use vault::analysis::{bounds, ctmc};
 use vault::api::VaultApi;
-use vault::coordinator::workload::{run_open_loop, Corpus, OpenLoopReport, OpenLoopSpec};
+use vault::coordinator::workload::{
+    run_open_loop, run_read_storm, Corpus, OpenLoopReport, OpenLoopSpec, ReadStormSpec,
+};
 use vault::coordinator::{Cluster, ClusterConfig, ClusterRuntime};
 use vault::crypto::Hash256;
 use vault::runtime::Runtime;
@@ -76,13 +85,14 @@ fn main() {
         "bench-audit" => cmd_bench_audit(&args),
         "bench-adversary" => cmd_bench_adversary(&args),
         "bench-scale" => cmd_bench_scale(&args),
+        "bench-read" => cmd_bench_read(&args),
         "tcp-demo" => cmd_tcp_demo(&args),
         "sim" => cmd_sim(&args),
         "analyze" => cmd_analyze(&args),
         "artifacts" => cmd_artifacts(&args),
         _ => {
             eprintln!(
-                "usage: vault <cluster|bench-ops|bench-codec|bench-maint|bench-epoch|bench-restart|bench-audit|bench-adversary|bench-scale|tcp-demo|sim|analyze|artifacts> [--flags]\n\
+                "usage: vault <cluster|bench-ops|bench-codec|bench-maint|bench-epoch|bench-restart|bench-audit|bench-adversary|bench-scale|bench-read|tcp-demo|sim|analyze|artifacts> [--flags]\n\
                  \n\
                  cluster     --peers 128 --objects 4 --size 262144 [--byzantine 0.1] [--churn 4]\n\
                  bench-ops   --peers 64 --ops 300 --inflight 32 --size 32768 [--sharded 0]\n\
@@ -98,6 +108,8 @@ fn main() {
                  \x20            [--seed 7] [--out BENCH_audit.json]\n\
                  bench-adversary [--smoke] [--seed 7] [--out BENCH_adversary.json]\n\
                  bench-scale [--smoke] [--virtual-s 60] [--seed 7] [--out BENCH_scale.json]\n\
+                 bench-read  [--smoke] [--gets 12000] [--inflight 10000] [--peers 96]\n\
+                 \x20            [--seed 7] [--out BENCH_read.json]\n\
                  tcp-demo    --peers 8 --size 65536\n\
                  sim         --fig 4|5|6 [--nodes 100000] [--objects 1000] [--churn 2.0] [--years 1]\n\
                  analyze     [--n 80] [--k 32] [--churn-q 0.01] [--evict 0] [--steps 512]\n\
@@ -961,6 +973,216 @@ fn cmd_bench_scale(args: &Args) {
             top.resident_bytes_per_peer
         );
     }
+}
+
+/// One read-storm trial row for `bench-read`.
+struct ReadBenchRow {
+    mode: &'static str,
+    peers: usize,
+    gets: usize,
+    in_flight: usize,
+    ok: usize,
+    failed: usize,
+    p50_ms: f64,
+    p99_ms: f64,
+    p999_ms: f64,
+    /// Delivered object bytes per client-plane network byte spent.
+    goodput_per_byte: f64,
+    hedge_rate: f64,
+    hedge_win_rate: f64,
+    hedge_budget_denied: u64,
+    cache_hit_rate: f64,
+    coalesce_rate: f64,
+    late_wins: u64,
+    elapsed_virtual_ms: u64,
+    fingerprint: u64,
+}
+
+impl ReadBenchRow {
+    fn json_row(&self) -> String {
+        format!(
+            "{{\"mode\": \"{}\", \"peers\": {}, \"gets\": {}, \"in_flight\": {}, \
+             \"ok\": {}, \"failed\": {}, \"p50_ms\": {:.1}, \"p99_ms\": {:.1}, \
+             \"p999_ms\": {:.1}, \"goodput_per_byte\": {:.4}, \"hedge_rate\": {:.4}, \
+             \"hedge_win_rate\": {:.4}, \"hedge_budget_denied\": {}, \
+             \"cache_hit_rate\": {:.4}, \"coalesce_rate\": {:.4}, \"late_wins\": {}, \
+             \"elapsed_virtual_ms\": {}, \"fingerprint\": \"{:016x}\"}}",
+            self.mode,
+            self.peers,
+            self.gets,
+            self.in_flight,
+            self.ok,
+            self.failed,
+            self.p50_ms,
+            self.p99_ms,
+            self.p999_ms,
+            self.goodput_per_byte,
+            self.hedge_rate,
+            self.hedge_win_rate,
+            self.hedge_budget_denied,
+            self.cache_hit_rate,
+            self.coalesce_rate,
+            self.late_wins,
+            self.elapsed_virtual_ms,
+            self.fingerprint,
+        )
+    }
+}
+
+/// Sum of sender-side `Purpose::Client` bytes across every peer — the
+/// denominator of goodput-per-byte.
+fn client_plane_bytes(cluster: &Cluster) -> u64 {
+    (0..cluster.net.len()).map(|i| cluster.net.peer(i).metrics.maint.client_bytes).sum()
+}
+
+/// One `bench-read` trial: seed a zipf corpus, degrade a quarter of the
+/// peers into slow-loris repliers (they serve, seven-eighths of the op
+/// timeout late), then fire an open-loop get storm from one pinned
+/// client — naively, or with the full ISSUE 10 read path enabled.
+fn run_read_trial(
+    peers: usize,
+    objects: usize,
+    gets: usize,
+    in_flight: usize,
+    interarrival_ms: f64,
+    seed: u64,
+    hedged: bool,
+) -> ReadBenchRow {
+    const OBJECT_LEN: usize = 32_768;
+    let mut cfg = ClusterConfig::small_test(peers);
+    cfg.seed = seed;
+    if hedged {
+        cfg.vault.read_ranking = true;
+        cfg.vault.read_hedge = true;
+        cfg.vault.hedge_budget_mtokens = 64_000;
+        cfg.vault.hedge_refill_mtokens = 4_000;
+        cfg.vault.read_cache_bytes = 8 << 20;
+        cfg.vault.read_coalesce = true;
+        cfg.vault.read_cancel = true;
+    }
+    let mut cluster = Cluster::start(cfg);
+    let mut rng = Rng::new(seed ^ 0xBEAD);
+    let mut refs = Vec::with_capacity(objects);
+    for i in 0..objects {
+        let mut data = vec![0u8; OBJECT_LEN];
+        rng.fill_bytes(&mut data);
+        let secret = format!("bench-read-{i}");
+        refs.push(
+            cluster.store_blocking(0, &data, secret.as_bytes(), 0).expect("seed store").value,
+        );
+    }
+    for i in rng.sample_indices(peers, (peers / 4).max(1)) {
+        cluster.net.peer_mut(i).fault.slow_loris = true;
+    }
+    let bytes_before = client_plane_bytes(&cluster);
+    let spec = ReadStormSpec {
+        seed: seed ^ 0x57_0B,
+        total_gets: gets,
+        target_in_flight: in_flight,
+        mean_interarrival_ms: interarrival_ms,
+        zipf_s: 1.1,
+        deadline_ms: None,
+        max_virtual_ms: 600_000,
+        single_client: true,
+    };
+    let report = run_read_storm(&mut cluster, &spec, &refs);
+    let net_bytes = client_plane_bytes(&cluster).saturating_sub(bytes_before);
+    let (mut hedges, mut wins, mut denied) = (0u64, 0u64, 0u64);
+    let (mut hits, mut misses, mut coalesced, mut late) = (0u64, 0u64, 0u64, 0u64);
+    for i in 0..cluster.net.len() {
+        let m = &cluster.net.peer(i).metrics;
+        hedges += m.hedges_issued;
+        wins += m.hedge_wins;
+        denied += m.hedge_budget_denied;
+        hits += m.read_cache_hits;
+        misses += m.read_cache_misses;
+        coalesced += m.coalesced_gets;
+        late += m.late_wins;
+    }
+    let submitted = report.submitted.max(1) as f64;
+    ReadBenchRow {
+        mode: if hedged { "hedged" } else { "naive" },
+        peers,
+        gets: report.submitted,
+        in_flight,
+        ok: report.ok,
+        failed: report.failed,
+        p50_ms: report.p(50.0),
+        p99_ms: report.p(99.0),
+        p999_ms: report.p(99.9),
+        goodput_per_byte: report.bytes_fetched as f64 / net_bytes.max(1) as f64,
+        hedge_rate: hedges as f64 / submitted,
+        hedge_win_rate: wins as f64 / hedges.max(1) as f64,
+        hedge_budget_denied: denied,
+        cache_hit_rate: hits as f64 / (hits + misses).max(1) as f64,
+        coalesce_rate: coalesced as f64 / submitted,
+        late_wins: late,
+        elapsed_virtual_ms: report.elapsed_virtual_ms,
+        fingerprint: report.fingerprint,
+    }
+}
+
+/// Heavy-traffic read-path benchmark (ISSUE 10): the same zipf get
+/// storm runs naive (seed-era fan-out) and with replica ranking +
+/// hedged requests + hot-object caching + request coalescing, against
+/// a cluster whose nearer replicas are slow. The full ladder holds
+/// 10k+ gets in flight; `--smoke` runs a 300-get storm for CI.
+fn cmd_bench_read(args: &Args) {
+    let smoke = args.bool("smoke");
+    let seed = args.get("seed", 7u64);
+    let peers = args.get("peers", if smoke { 48 } else { 96usize });
+    let gets = args.get("gets", if smoke { 300 } else { 12_000usize });
+    let in_flight = args.get("inflight", if smoke { 32 } else { 10_000usize });
+    let objects = if smoke { 12 } else { 64 };
+    let interarrival_ms = if smoke { 10.0 } else { 0.05 };
+    let out = args.str("out", "BENCH_read.json");
+    println!(
+        "bench-read{}: {} zipf gets, {} in flight, {} peers (quarter slow-loris), naive vs hedged",
+        if smoke { " (smoke)" } else { "" },
+        gets,
+        in_flight,
+        peers
+    );
+    let wall = Timer::start();
+    let rows = vec![
+        run_read_trial(peers, objects, gets, in_flight, interarrival_ms, seed, false),
+        run_read_trial(peers, objects, gets, in_flight, interarrival_ms, seed, true),
+    ];
+    for r in &rows {
+        println!(
+            "  {:>6}: p50 {:>6.0}ms p99 {:>6.0}ms p999 {:>6.0}ms, {:.4} goodput/B, \
+             hedge {:.3}/get (win {:.2}), cache hit {:.3}, coalesce {:.3}, {} ok / {} failed",
+            r.mode,
+            r.p50_ms,
+            r.p99_ms,
+            r.p999_ms,
+            r.goodput_per_byte,
+            r.hedge_rate,
+            r.hedge_win_rate,
+            r.cache_hit_rate,
+            r.coalesce_rate,
+            r.ok,
+            r.failed,
+        );
+    }
+    let wall_secs = wall.elapsed_s();
+    let p99_speedup = rows[0].p99_ms / rows[1].p99_ms.max(1e-9);
+    let row_json: Vec<String> = rows.iter().map(|r| format!("    {}", r.json_row())).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"read_path\",\n  \"schema\": \"vault-bench-read-v1\",\n  \
+         \"smoke\": {smoke},\n  \"estimated\": false,\n  \"seed\": {seed},\n  \
+         \"p99_speedup\": {p99_speedup:.2},\n  \"rows\": [\n{}\n  ],\n  \
+         \"wall_secs\": {wall_secs:.3}\n}}\n",
+        row_json.join(",\n"),
+    );
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("failed to write {out}: {e}"),
+    }
+    println!(
+        "hedged read path: p99 {:.0}ms vs naive {:.0}ms ({p99_speedup:.1}x) ({wall_secs:.1}s wall)",
+        rows[1].p99_ms, rows[0].p99_ms
+    );
 }
 
 /// Build a SimNet whose peers each hold ~`chunks_per_node` fragments of

@@ -636,6 +636,22 @@ impl ShardNet {
         op
     }
 
+    /// Propagate an API-level cancel into the issuing peer's query saga
+    /// (ISSUE 10, `VaultConfig::read_cancel`) — same shape as `query`:
+    /// mutate the peer, drain its outbox, barrier the effects.
+    pub fn cancel_client_op(&mut self, client: usize, op: u64) -> bool {
+        let routes = Arc::clone(&self.routes);
+        let opts = self.opts.clone();
+        let now = self.now_ms;
+        let (s, l) = self.index[client];
+        let shard = self.shards[s].as_mut().unwrap();
+        let mut out = Outbox::at(now);
+        let cancelled = shard.slots[l].peer.cancel_client_op(&mut out, op);
+        shard.drain(now, l, &mut out, &routes, &opts);
+        self.exchange();
+        cancelled
+    }
+
     // ---- event loop --------------------------------------------------------
 
     fn next_event_time(&self) -> Option<u64> {

@@ -421,6 +421,17 @@ impl SimNet {
         op
     }
 
+    /// Propagate an API-level cancel into the issuing peer's query saga
+    /// (ISSUE 10, `VaultConfig::read_cancel`): the saga is torn down so
+    /// its timeout re-fans stop; any coalesced waiters surface failure
+    /// events through the normal drain path.
+    pub fn cancel_client_op(&mut self, client: usize, op: u64) -> bool {
+        let mut out = Outbox::at(self.now_ms);
+        let cancelled = self.slots[client].peer.cancel_client_op(&mut out, op);
+        self.drain(client, &mut out);
+        cancelled
+    }
+
     // ---- event loop --------------------------------------------------------
 
     fn latency_for(&mut self, from_region: u8, to_region: u8, bytes: usize) -> u64 {

@@ -9,5 +9,6 @@
 //! node's groups.
 
 pub mod health;
+pub mod ranking;
 pub mod storage;
 pub mod wal;

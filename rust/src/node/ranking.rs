@@ -1,0 +1,377 @@
+//! Read-path client state (ISSUE 10): latency-aware replica ranking,
+//! the hedged-request trigger/budget, and the client-side chunk cache.
+//!
+//! [`ReplicaRanker`] scores each peer by a decayed EWMA of observed
+//! request latencies (integer fixed-point — no floats, no RNG, so
+//! enabling it perturbs no other consumer's draw sequence and stays
+//! deterministic across platforms). It also keeps a bounded ring of
+//! recent latency samples whose nearest-rank quantile drives the hedge
+//! delay, and the milli-token budget that bounds hedge amplification.
+//!
+//! [`ReadCache`] is a byte-bounded CLOCK cache over decoded chunks.
+//! Entries never expire by time; the owning peer invalidates the whole
+//! cache at every adopted epoch rotation (placement moved, so every
+//! cached chunk predates the boundary — see DESIGN.md §Read Path for
+//! the invalidation-ordering contract).
+
+use crate::crypto::Hash256;
+use crate::dht::NodeId;
+use crate::util::detmap::DetHashMap;
+
+/// EWMA fixed-point scale: scores are milliseconds × 16.
+const EWMA_SCALE: u64 = 16;
+
+/// Cost of one per-chunk hedge wave, in milli-tokens.
+pub const HEDGE_WAVE_COST: u64 = 1_000;
+
+/// Latency-ranking state one client peer owns (when
+/// `VaultConfig::read_ranking` or `read_hedge` is on).
+#[derive(Clone, Debug)]
+pub struct ReplicaRanker {
+    /// Prior score (fixed-point) for peers never observed — ranks them
+    /// behind every observed-fast peer but ahead of observed-slow ones.
+    prior: u64,
+    /// Decayed latency per peer, fixed-point ms×16, alpha = 1/4.
+    ewma: DetHashMap<NodeId, u64>,
+    /// Outstanding asks: `(op, peer) -> sent_ms` (the ranker tracks its
+    /// own sends so it works with the health plane off).
+    pending: DetHashMap<(u64, NodeId), u64>,
+    /// Bounded ring of recent latency samples (ms) for the hedge
+    /// quantile.
+    ring: Vec<u64>,
+    ring_cap: usize,
+    ring_at: usize,
+    /// Hedge amplification budget, milli-tokens.
+    mtokens: u64,
+    mtokens_cap: u64,
+}
+
+impl ReplicaRanker {
+    pub fn new(prior_ms: u64, budget_cap_mtokens: u64, ring_cap: usize) -> Self {
+        ReplicaRanker {
+            prior: prior_ms.max(1) * EWMA_SCALE,
+            ewma: DetHashMap::default(),
+            pending: DetHashMap::default(),
+            ring: Vec::new(),
+            ring_cap: ring_cap.max(1),
+            ring_at: 0,
+            mtokens: budget_cap_mtokens,
+            mtokens_cap: budget_cap_mtokens,
+        }
+    }
+
+    /// Register an outbound request `peer` is expected to answer.
+    pub fn track(&mut self, op: u64, peer: NodeId, now_ms: u64) {
+        self.pending.insert((op, peer), now_ms);
+    }
+
+    /// A reply arrived: fold the measured latency into the peer's EWMA
+    /// and the quantile ring. Untracked replies are ignored.
+    pub fn observe(&mut self, op: u64, peer: NodeId, now_ms: u64) -> Option<u64> {
+        let sent = self.pending.remove(&(op, peer))?;
+        let sample_ms = now_ms.saturating_sub(sent);
+        let fp = sample_ms * EWMA_SCALE;
+        let e = self.ewma.entry(peer).or_insert(fp);
+        // alpha = 1/4: e' = 3/4·e + 1/4·sample (integer, deterministic).
+        *e = (*e * 3 + fp) / 4;
+        if self.ring.len() < self.ring_cap {
+            self.ring.push(sample_ms);
+        } else {
+            self.ring[self.ring_at] = sample_ms;
+            self.ring_at = (self.ring_at + 1) % self.ring_cap;
+        }
+        Some(sample_ms)
+    }
+
+    /// Drop tracking for a finished/cancelled op without recording
+    /// samples (stragglers may still answer; their latency would be
+    /// the saga's lifetime, not the peer's).
+    pub fn forget_op(&mut self, op: u64) {
+        self.pending.retain(|(o, _), _| *o != op);
+    }
+
+    /// Fixed-point score: observed EWMA, or the prior for strangers.
+    pub fn score(&self, peer: &NodeId) -> u64 {
+        self.ewma.get(peer).copied().unwrap_or(self.prior)
+    }
+
+    /// Stable-sort `items` fastest-first by score; ties (and all-prior
+    /// lists) keep their incoming ring-distance order.
+    pub fn rank<T, F: Fn(&T) -> NodeId>(&self, items: &mut [T], id_of: F) {
+        if self.ewma.is_empty() {
+            return;
+        }
+        items.sort_by_key(|it| self.score(&id_of(it)));
+    }
+
+    /// Hedge-trigger delay: the `pct` nearest-rank quantile of the
+    /// recent-latency ring, clamped to `[timeout/32, timeout/2]`; with
+    /// no samples yet, `timeout/8`.
+    pub fn hedge_delay_ms(&self, pct: u64, timeout_ms: u64) -> u64 {
+        let lo = (timeout_ms / 32).max(1);
+        let hi = (timeout_ms / 2).max(1);
+        if self.ring.is_empty() {
+            return (timeout_ms / 8).clamp(lo, hi);
+        }
+        let mut sorted = self.ring.clone();
+        sorted.sort_unstable();
+        let pct = pct.clamp(1, 100) as usize;
+        let rank = (pct * sorted.len()).div_ceil(100).max(1);
+        sorted[rank - 1].clamp(lo, hi)
+    }
+
+    /// Earn refill tokens (one helping per submitted query), capped.
+    pub fn earn(&mut self, amount: u64) {
+        self.mtokens = (self.mtokens + amount).min(self.mtokens_cap);
+    }
+
+    /// Can a wave of `cost` milli-tokens be afforded right now?
+    pub fn can_spend(&self, cost: u64) -> bool {
+        self.mtokens >= cost
+    }
+
+    pub fn spend(&mut self, cost: u64) {
+        self.mtokens = self.mtokens.saturating_sub(cost);
+    }
+
+    pub fn budget_mtokens(&self) -> u64 {
+        self.mtokens
+    }
+}
+
+/// One CLOCK slot: a decoded chunk plus its reference bit.
+#[derive(Clone, Debug)]
+struct CacheEntry {
+    chash: Hash256,
+    bytes: Vec<u8>,
+    referenced: bool,
+}
+
+/// Byte-bounded client-side cache of decoded chunks, CLOCK eviction.
+#[derive(Clone, Debug, Default)]
+pub struct ReadCache {
+    cap_bytes: usize,
+    used_bytes: usize,
+    entries: Vec<CacheEntry>,
+    hand: usize,
+    index: DetHashMap<Hash256, usize>,
+}
+
+impl ReadCache {
+    pub fn new(cap_bytes: usize) -> Self {
+        ReadCache { cap_bytes, ..Default::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    /// Cache lookup; a hit sets the reference bit (second-chance).
+    pub fn get(&mut self, chash: &Hash256) -> Option<&[u8]> {
+        let &i = self.index.get(chash)?;
+        self.entries[i].referenced = true;
+        Some(&self.entries[i].bytes)
+    }
+
+    /// Insert a decoded chunk, evicting via the CLOCK hand until it
+    /// fits. Oversize chunks (bigger than the whole cache) and
+    /// duplicates are no-ops.
+    pub fn insert(&mut self, chash: Hash256, bytes: Vec<u8>) {
+        if bytes.len() > self.cap_bytes || self.index.contains_key(&chash) {
+            return;
+        }
+        while self.used_bytes + bytes.len() > self.cap_bytes && !self.entries.is_empty() {
+            self.evict_one();
+        }
+        self.index.insert(chash, self.entries.len());
+        self.used_bytes += bytes.len();
+        self.entries.push(CacheEntry { chash, bytes, referenced: false });
+    }
+
+    /// Advance the hand, clearing reference bits, until an unreferenced
+    /// entry falls out.
+    fn evict_one(&mut self) {
+        loop {
+            if self.hand >= self.entries.len() {
+                self.hand = 0;
+            }
+            if self.entries[self.hand].referenced {
+                self.entries[self.hand].referenced = false;
+                self.hand += 1;
+                continue;
+            }
+            let e = self.entries.swap_remove(self.hand);
+            self.used_bytes -= e.bytes.len();
+            self.index.remove(&e.chash);
+            // The swapped-in tail entry now lives at `hand`.
+            if self.hand < self.entries.len() {
+                let moved = self.entries[self.hand].chash;
+                self.index.insert(moved, self.hand);
+            }
+            return;
+        }
+    }
+
+    /// Rotation boundary: placement moved, so every cached chunk
+    /// predates the new epoch. Drop everything; returns how many
+    /// entries were invalidated.
+    pub fn invalidate_all(&mut self) -> u64 {
+        let n = self.entries.len() as u64;
+        self.entries.clear();
+        self.index.clear();
+        self.used_bytes = 0;
+        self.hand = 0;
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn id(tag: u8) -> NodeId {
+        NodeId(Hash256::of(&[tag]))
+    }
+
+    fn ch(tag: u8) -> Hash256 {
+        Hash256::of(&[0xCC, tag])
+    }
+
+    #[test]
+    fn ranker_orders_by_observed_latency() {
+        let mut r = ReplicaRanker::new(150, 8_000, 64);
+        let (fast, slow, unknown) = (id(1), id(2), id(3));
+        for op in 0..4 {
+            r.track(op, fast, 0);
+            r.observe(op, fast, 20);
+            r.track(op, slow, 0);
+            r.observe(op, slow, 2_000);
+        }
+        let mut v = vec![slow, unknown, fast];
+        r.rank(&mut v, |x| *x);
+        assert_eq!(v, vec![fast, unknown, slow], "fast < prior < slow");
+        assert!(r.score(&fast) < r.score(&unknown));
+        assert!(r.score(&unknown) < r.score(&slow));
+    }
+
+    #[test]
+    fn rank_without_observations_preserves_order() {
+        let r = ReplicaRanker::new(150, 0, 8);
+        let mut v = vec![id(3), id(1), id(2)];
+        r.rank(&mut v, |x| *x);
+        assert_eq!(v, vec![id(3), id(1), id(2)]);
+    }
+
+    #[test]
+    fn ewma_decays_toward_recent_samples() {
+        let mut r = ReplicaRanker::new(150, 0, 64);
+        let p = id(7);
+        r.track(1, p, 0);
+        r.observe(1, p, 1_000);
+        let slow_score = r.score(&p);
+        for op in 2..10 {
+            r.track(op, p, 0);
+            r.observe(op, p, 10);
+        }
+        assert!(r.score(&p) < slow_score / 4, "recent fast samples dominate");
+    }
+
+    #[test]
+    fn untracked_and_forgotten_replies_are_ignored() {
+        let mut r = ReplicaRanker::new(150, 0, 8);
+        assert_eq!(r.observe(9, id(1), 100), None);
+        r.track(9, id(1), 0);
+        r.forget_op(9);
+        assert_eq!(r.observe(9, id(1), 100), None);
+        assert!(r.ring.is_empty());
+    }
+
+    #[test]
+    fn hedge_delay_tracks_the_quantile_and_clamps() {
+        let mut r = ReplicaRanker::new(150, 0, 64);
+        // No samples: timeout/8 default.
+        assert_eq!(r.hedge_delay_ms(90, 3_000), 375);
+        for (i, ms) in [100u64, 200, 300, 400, 500, 600, 700, 800, 900, 1_000]
+            .iter()
+            .enumerate()
+        {
+            r.track(i as u64, id(1), 0);
+            r.observe(i as u64, id(1), *ms);
+        }
+        assert_eq!(r.hedge_delay_ms(90, 3_000), 900, "p90 of 100..=1000");
+        assert_eq!(r.hedge_delay_ms(50, 3_000), 500);
+        // Clamp floor and ceiling.
+        assert_eq!(r.hedge_delay_ms(1, 3_000), 100.max(3_000 / 32));
+        assert_eq!(r.hedge_delay_ms(100, 1_000), 500, "capped at timeout/2");
+    }
+
+    #[test]
+    fn ring_is_bounded() {
+        let mut r = ReplicaRanker::new(150, 0, 4);
+        for op in 0..20 {
+            r.track(op, id(1), 0);
+            r.observe(op, id(1), op * 10);
+        }
+        assert_eq!(r.ring.len(), 4);
+    }
+
+    #[test]
+    fn budget_spends_and_refills_to_cap() {
+        let mut r = ReplicaRanker::new(150, 2_500, 8);
+        assert!(r.can_spend(HEDGE_WAVE_COST));
+        r.spend(HEDGE_WAVE_COST);
+        r.spend(HEDGE_WAVE_COST);
+        assert_eq!(r.budget_mtokens(), 500);
+        assert!(!r.can_spend(HEDGE_WAVE_COST));
+        r.earn(10_000);
+        assert_eq!(r.budget_mtokens(), 2_500, "refill caps at the budget");
+    }
+
+    #[test]
+    fn cache_bounds_bytes_and_clock_prefers_referenced() {
+        let mut c = ReadCache::new(100);
+        c.insert(ch(1), vec![0; 40]);
+        c.insert(ch(2), vec![0; 40]);
+        assert_eq!(c.used_bytes(), 80);
+        // Touch entry 1 so its reference bit protects it.
+        assert!(c.get(&ch(1)).is_some());
+        c.insert(ch(3), vec![0; 40]);
+        assert!(c.used_bytes() <= 100);
+        assert!(c.get(&ch(1)).is_some(), "referenced entry survives");
+        assert!(c.get(&ch(2)).is_none(), "unreferenced entry evicted");
+        assert!(c.get(&ch(3)).is_some());
+    }
+
+    #[test]
+    fn cache_rejects_oversize_and_duplicates() {
+        let mut c = ReadCache::new(50);
+        c.insert(ch(1), vec![0; 60]);
+        assert!(c.is_empty(), "oversize insert is a no-op");
+        c.insert(ch(2), vec![1; 20]);
+        c.insert(ch(2), vec![2; 20]);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&ch(2)).unwrap(), &[1u8; 20][..], "first insert wins");
+    }
+
+    #[test]
+    fn invalidate_all_clears_everything() {
+        let mut c = ReadCache::new(1_000);
+        c.insert(ch(1), vec![0; 10]);
+        c.insert(ch(2), vec![0; 10]);
+        assert_eq!(c.invalidate_all(), 2);
+        assert!(c.is_empty());
+        assert_eq!(c.used_bytes(), 0);
+        assert!(c.get(&ch(1)).is_none());
+        // Still usable after invalidation.
+        c.insert(ch(3), vec![0; 10]);
+        assert!(c.get(&ch(3)).is_some());
+    }
+}

@@ -21,6 +21,8 @@ use crate::codec::ObjectId;
 use crate::crypto::vrf::VrfProof;
 use crate::crypto::Hash256;
 use crate::dht::{NodeId, PeerInfo};
+use crate::node::health::HealthTracker;
+use crate::node::ranking::{ReplicaRanker, HEDGE_WAVE_COST};
 
 use super::messages::{Msg, Purpose};
 use super::peer::VaultPeer;
@@ -56,6 +58,10 @@ pub(super) struct QueryChunk {
     pub asked: HashSet<NodeId>,
     pub next_candidate: usize,
     pub complete: bool,
+    /// Peers asked by a hedge wave (vs the primary fan-out). When the
+    /// fragment that completes the chunk came from one of these, the
+    /// hedge "won" the race and `hedge_wins` is credited.
+    pub hedged: HashSet<NodeId>,
 }
 
 pub(super) struct QueryOp {
@@ -64,6 +70,14 @@ pub(super) struct QueryOp {
     pub outer: OuterDecoder,
     pub chunks: HashMap<Hash256, QueryChunk>,
     pub done: bool,
+    /// Content digest of the requested `ObjectId` — the coalescing key:
+    /// concurrent gets for the same object on this client attach to the
+    /// in-flight saga instead of fanning out again.
+    pub object_key: Hash256,
+    /// Coalesced followers as `(op, started_ms)`; each gets its own
+    /// `QueryDone`/`OpFailed` with its own latency when the leader
+    /// saga settles.
+    pub waiters: Vec<(u64, u64)>,
 }
 
 impl QueryOp {
@@ -283,10 +297,66 @@ impl VaultPeer {
     }
 
     /// Issue a QUERY (Algorithm 1). Completion via [`AppEvent::QueryDone`].
+    ///
+    /// Read-path extensions (all flag-gated, default off):
+    /// * `read_coalesce` — an identical in-flight get on this client
+    ///   adopts the new op as a waiter; one saga serves all of them.
+    /// * `read_cache_bytes` — chunks decoded this epoch serve from the
+    ///   client cache without touching the network.
+    /// * `read_ranking` — candidates are ordered by observed EWMA
+    ///   latency and the fan-out narrows to `k_inner + read_slack`.
+    /// * `read_hedge` — a quantile-delayed `HedgeCheck` timer re-asks
+    ///   the next-ranked replicas for straggling chunks.
     pub fn client_query(&mut self, dir: &dyn Directory, out: &mut Outbox, id: &ObjectId) -> u64 {
         let op = self.fresh_op();
+        let object_key = id.digest();
+        if self.cfg.read_coalesce {
+            if let Some(leader) =
+                self.query_ops.values_mut().find(|q| !q.done && q.object_key == object_key)
+            {
+                leader.waiters.push((op, out.now_ms));
+                self.metrics.coalesced_gets += 1;
+                return op;
+            }
+        }
+        // Every admitted (non-coalesced) get earns back hedge budget;
+        // the budget cap bounds how bursty hedging can get.
+        let refill = self.cfg.hedge_refill_mtokens;
+        if let Some(rk) = self.ranker.as_mut() {
+            rk.earn(refill);
+        }
+        let mut outer = OuterDecoder::new(self.cfg.k_outer);
+        // Pass 1 — cache probe. Chunks already decoded this epoch feed
+        // the outer decoder directly; only the misses go to the network.
+        let mut missing: Vec<Hash256> = Vec::new();
+        match self.read_cache.as_mut() {
+            Some(rc) => {
+                for chash in &id.chunks {
+                    match rc.get(chash).map(|b| b.to_vec()) {
+                        Some(bytes) => {
+                            self.metrics.read_cache_hits += 1;
+                            outer.push(&bytes);
+                        }
+                        None => {
+                            self.metrics.read_cache_misses += 1;
+                            missing.push(*chash);
+                        }
+                    }
+                }
+            }
+            None => missing.extend(id.chunks.iter().copied()),
+        }
+        // Entirely (or sufficiently) cache-served: complete without a
+        // saga — no sends, no timers, no tracker state to leak.
+        if outer.rank() >= self.cfg.k_outer {
+            if let Some(object) = outer.recover() {
+                out.emit(AppEvent::QueryDone { op, data: object, latency_ms: 0 });
+                return op;
+            }
+        }
+        // Pass 2 — fan out for the missing chunks.
         let mut chunks = HashMap::default();
-        for chash in &id.chunks {
+        for chash in &missing {
             // Look where the chunk lives *now*; during a rotation
             // window also ask the previous epoch's neighborhood, where
             // retiring members keep serving until their grace expires.
@@ -296,9 +366,16 @@ impl VaultPeer {
                 let mut seen: HashSet<NodeId> = HashSet::default();
                 candidates.retain(|p| seen.insert(p.id));
             }
-            // Health plane: greylisted candidates go to the back of the
-            // fan-out order — still askable, just after everyone in
-            // better standing.
+            // Replica ranking: fastest-observed peers first (stable, so
+            // unobserved peers keep their ring order)...
+            if self.cfg.read_ranking {
+                if let Some(rk) = self.ranker.as_ref() {
+                    rk.rank(&mut candidates, |p| p.id);
+                }
+            }
+            // ...then the health plane: greylisted candidates go to the
+            // back of the fan-out order — still askable, just after
+            // everyone in better standing, however fast they once were.
             if let Some(h) = self.health.as_ref() {
                 h.deprioritize(&mut candidates, |p| p.id);
             }
@@ -308,14 +385,18 @@ impl VaultPeer {
                 asked: HashSet::default(),
                 next_candidate: 0,
                 complete: false,
+                hedged: HashSet::default(),
             };
-            let fanout = self.cfg.fetch_fanout;
+            // Ranked mode trusts the ordering: ask just enough for
+            // decodability plus a small slack, and let hedging cover
+            // the stragglers. Unranked mode keeps the wide blast.
+            let fanout = if self.cfg.read_ranking {
+                self.cfg.k_inner + self.cfg.read_slack
+            } else {
+                self.cfg.fetch_fanout
+            };
             let sent = Self::query_fan_out(&mut qc, out, op, *chash, fanout);
-            if let Some(h) = self.health.as_mut() {
-                for t in sent {
-                    h.track(op, t, out.now_ms);
-                }
-            }
+            Self::note_asked(&mut self.health, &mut self.ranker, op, &sent, out.now_ms);
             chunks.insert(*chash, qc);
         }
         self.query_ops.insert(
@@ -323,13 +404,87 @@ impl VaultPeer {
             QueryOp {
                 op,
                 started_ms: out.now_ms,
-                outer: OuterDecoder::new(self.cfg.k_outer),
+                outer,
                 chunks,
                 done: false,
+                object_key,
+                waiters: Vec::new(),
             },
         );
         out.timer(self.cfg.op_timeout_ms, TimerKind::OpTimeout { op });
+        if self.cfg.read_hedge {
+            if let Some(rk) = self.ranker.as_ref() {
+                let delay =
+                    rk.hedge_delay_ms(self.cfg.hedge_quantile_pct, self.cfg.op_timeout_ms);
+                out.timer(delay, TimerKind::HedgeCheck { op });
+            }
+        }
         op
+    }
+
+    /// Register a round of asks with both trackers. Free-standing so it
+    /// can be called while a `query_ops` entry is mutably borrowed
+    /// (disjoint field borrows).
+    fn note_asked(
+        health: &mut Option<HealthTracker>,
+        ranker: &mut Option<ReplicaRanker>,
+        op: u64,
+        sent: &[NodeId],
+        now_ms: u64,
+    ) {
+        if let Some(h) = health.as_mut() {
+            for t in sent {
+                h.track(op, *t, now_ms);
+            }
+        }
+        if let Some(rk) = ranker.as_mut() {
+            for t in sent {
+                rk.track(op, *t, now_ms);
+            }
+        }
+    }
+
+    /// `HedgeCheck` fired: any chunk still incomplete gets a wave of
+    /// the next-ranked candidates, budget permitting. Re-arms itself at
+    /// the current quantile delay while the saga lives; dies silently
+    /// once the op settles (no re-arm on unknown ops).
+    pub(super) fn query_hedge_check(&mut self, out: &mut Outbox, op: u64) {
+        if !self.cfg.read_hedge {
+            return;
+        }
+        let Some(rk) = self.ranker.as_mut() else { return };
+        let wave = self.cfg.hedge_wave.max(1);
+        let delay = rk.hedge_delay_ms(self.cfg.hedge_quantile_pct, self.cfg.op_timeout_ms);
+        let Some(qop) = self.query_ops.get_mut(&op) else { return };
+        if qop.done {
+            return;
+        }
+        for (chash, qc) in qop.chunks.iter_mut() {
+            if qc.complete {
+                continue;
+            }
+            if !rk.can_spend(HEDGE_WAVE_COST) {
+                self.metrics.hedge_budget_denied += 1;
+                continue;
+            }
+            let sent = Self::query_fan_out(qc, out, op, *chash, wave);
+            if sent.is_empty() {
+                // Candidates exhausted — nothing sent, nothing charged.
+                continue;
+            }
+            rk.spend(HEDGE_WAVE_COST);
+            self.metrics.hedges_issued += sent.len() as u64;
+            for t in &sent {
+                qc.hedged.insert(*t);
+                rk.track(op, *t, out.now_ms);
+            }
+            if let Some(h) = self.health.as_mut() {
+                for t in &sent {
+                    h.track(op, *t, out.now_ms);
+                }
+            }
+        }
+        out.timer(delay, TimerKind::HedgeCheck { op });
     }
 
     /// Returns the peers actually asked this round so the caller can
@@ -364,8 +519,12 @@ impl VaultPeer {
     ) {
         // The peer answered (hit or miss): clear its deadline; a reply
         // that barely beat the timeout still counts as a slow-trickle
-        // offense.
+        // offense. The ranker logs the round-trip either way — a fast
+        // "don't have it" is still a fast peer.
         self.health_resolve(op, from, out.now_ms);
+        if let Some(rk) = self.ranker.as_mut() {
+            rk.observe(op, from, out.now_ms);
+        }
         let k_outer = self.cfg.k_outer;
         let Some(qop) = self.query_ops.get_mut(&op) else { return };
         if qop.done {
@@ -382,11 +541,7 @@ impl VaultPeer {
             None => {
                 // Miss: try one more candidate.
                 let sent = Self::query_fan_out(qc, out, op, chash, 1);
-                if let Some(h) = self.health.as_mut() {
-                    for t in sent {
-                        h.track(op, t, out.now_ms);
-                    }
-                }
+                Self::note_asked(&mut self.health, &mut self.ranker, op, &sent, out.now_ms);
                 return;
             }
         }
@@ -402,12 +557,16 @@ impl VaultPeer {
             qc.complete = false;
             qc.decoder = InnerDecoder::new(chash, self.cfg.k_inner);
             let sent = Self::query_fan_out(qc, out, op, chash, 4);
-            if let Some(h) = self.health.as_mut() {
-                for t in sent {
-                    h.track(op, t, out.now_ms);
-                }
-            }
+            Self::note_asked(&mut self.health, &mut self.ranker, op, &sent, out.now_ms);
             return;
+        }
+        // Content-verified chunk: hot objects stay resident until the
+        // next epoch rotation invalidates placement.
+        if qc.hedged.contains(&from) {
+            self.metrics.hedge_wins += 1;
+        }
+        if let Some(rc) = self.read_cache.as_mut() {
+            rc.insert(chash, bytes.clone());
         }
         let advanced = qop.outer.push(&bytes);
         crate::log_debug!(
@@ -418,11 +577,24 @@ impl VaultPeer {
             if let Some(object) = qop.outer.recover() {
                 let latency = out.now_ms.saturating_sub(qop.started_ms);
                 qop.done = true;
+                let waiters = std::mem::take(&mut qop.waiters);
                 self.query_ops.remove(&op);
                 // Saga complete: stragglers may still answer; drop their
                 // deadlines without blame.
                 if let Some(h) = self.health.as_mut() {
                     h.forget_op(op);
+                }
+                if let Some(rk) = self.ranker.as_mut() {
+                    rk.forget_op(op);
+                }
+                // Coalesced followers complete with the leader, each at
+                // its own latency.
+                for (wop, wstarted) in &waiters {
+                    out.emit(AppEvent::QueryDone {
+                        op: *wop,
+                        data: object.clone(),
+                        latency_ms: out.now_ms.saturating_sub(*wstarted),
+                    });
                 }
                 out.emit(AppEvent::QueryDone { op, data: object, latency_ms: latency });
             }
@@ -439,7 +611,19 @@ impl VaultPeer {
         let Some(qop) = self.query_ops.get_mut(&op) else { return };
         if out.now_ms.saturating_sub(qop.started_ms) > deadline {
             let rank = qop.outer.rank();
+            let waiters = std::mem::take(&mut qop.waiters);
             self.query_ops.remove(&op);
+            if let Some(rk) = self.ranker.as_mut() {
+                rk.forget_op(op);
+            }
+            // Coalesced followers share the leader's fate.
+            for (wop, _) in waiters {
+                out.emit(AppEvent::OpFailed {
+                    op: wop,
+                    kind: "query",
+                    reason: "coalesced leader deadline exceeded".into(),
+                });
+            }
             out.emit(AppEvent::OpFailed {
                 op,
                 kind: "query",
@@ -450,11 +634,7 @@ impl VaultPeer {
         for (chash, qc) in qop.chunks.iter_mut() {
             if !qc.complete {
                 let sent = Self::query_fan_out(qc, out, op, *chash, fanout);
-                if let Some(h) = self.health.as_mut() {
-                    for t in sent {
-                        h.track(op, t, out.now_ms);
-                    }
-                }
+                Self::note_asked(&mut self.health, &mut self.ranker, op, &sent, out.now_ms);
             }
         }
         out.timer(timeout, TimerKind::OpTimeout { op });

@@ -146,6 +146,50 @@ pub struct VaultConfig {
     pub maint_wal_ms: u64,
     pub maint_hb_ms: u64,
     pub maint_repair_ms: u64,
+    /// Heavy-traffic read path (ISSUE 10). Every knob below defaults to
+    /// off/zero; with all of them off the get path is bit-identical to
+    /// the PR 9 trajectories (no extra sends, timers, or RNG draws), so
+    /// every pre-existing scenario fingerprint is preserved.
+    ///
+    /// Replica ranking: order each chunk's candidate list by decayed
+    /// observed latency (EWMA per peer, fed from `FragReply` arrivals)
+    /// before the health plane's greylist partition, and fan out to the
+    /// best-ranked `k_inner + read_slack` instead of `fetch_fanout`.
+    pub read_ranking: bool,
+    /// Extra ranked candidates asked beyond `k_inner` on the first
+    /// wave when `read_ranking` is on.
+    pub read_slack: usize,
+    /// Hedged requests: arm a `HedgeCheck` timer per query at the
+    /// `hedge_quantile_pct` quantile of recently observed chunk-fetch
+    /// latencies; when it fires with chunks still incomplete, ask the
+    /// next `hedge_wave` ranked candidates instead of waiting out the
+    /// full `op_timeout_ms` re-fan.
+    pub read_hedge: bool,
+    /// Hedge-trigger quantile (percent, nearest-rank) over the ranker's
+    /// recent-latency ring.
+    pub hedge_quantile_pct: u64,
+    /// Candidates asked per chunk per hedge wave.
+    pub hedge_wave: usize,
+    /// Hedge amplification budget, in milli-tokens per client: each
+    /// per-chunk hedge wave costs 1000, each submitted query earns
+    /// `hedge_refill_mtokens` back (capped here), so sustained hedging
+    /// is bounded to a fraction of primary traffic.
+    pub hedge_budget_mtokens: u64,
+    pub hedge_refill_mtokens: u64,
+    /// Client-side decoded-chunk cache capacity in bytes (CLOCK
+    /// eviction; 0 = off). Invalidated wholesale at every adopted
+    /// epoch rotation — see `peer::handle_epoch_update`.
+    pub read_cache_bytes: usize,
+    /// Request coalescing: a get for an object that an identical get is
+    /// already fetching on this client piggybacks on the in-flight saga
+    /// as a waiter instead of fanning out again; the one completion
+    /// fans out to every waiter.
+    pub read_coalesce: bool,
+    /// Propagate `VaultApi::cancel_op` into the issuing peer's saga:
+    /// the query op is torn down (no more timeout re-fans) and straggler
+    /// replies are counted under `Metrics::late_wins` instead of being
+    /// silently re-charged to a dead op.
+    pub read_cancel: bool,
 }
 
 /// When to cryptographically verify heartbeat claims.
@@ -199,6 +243,16 @@ impl Default for VaultConfig {
             maint_wal_ms: 0,
             maint_hb_ms: 0,
             maint_repair_ms: 0,
+            read_ranking: false,
+            read_slack: 2,
+            read_hedge: false,
+            hedge_quantile_pct: 90,
+            hedge_wave: 2,
+            hedge_budget_mtokens: 8_000,
+            hedge_refill_mtokens: 1_000,
+            read_cache_bytes: 0,
+            read_coalesce: false,
+            read_cancel: false,
         }
     }
 }
@@ -229,6 +283,11 @@ pub enum TimerKind {
     OpTimeout { op: u64 },
     /// Repair-join retry for a chunk this node is reconstructing.
     JoinRetry { chash: Hash256 },
+    /// Hedged-read check for a client query (ISSUE 10): fires at the
+    /// ranker's latency-quantile delay; chunks still incomplete get a
+    /// second wave of ranked candidates. Only armed with
+    /// `VaultConfig::read_hedge`.
+    HedgeCheck { op: u64 },
 }
 
 /// Completed-operation notifications surfaced to the embedding runtime.
@@ -458,6 +517,22 @@ pub struct Metrics {
     pub lazy_warms: u64,
     pub lazy_charged_claims: u64,
     pub lazy_charged_bytes: u64,
+    /// Read path (ISSUE 10): hedge waves sent / chunks completed by a
+    /// hedge-wave fragment / waves skipped because the token budget
+    /// was dry; client-side chunk-cache traffic and rotation
+    /// invalidations; gets collapsed onto an in-flight identical saga;
+    /// query sagas torn down by `cancel_op` propagation; and straggler
+    /// replies that arrived for an already-cancelled op (counted here
+    /// exactly once instead of being re-charged to the dead saga).
+    pub hedges_issued: u64,
+    pub hedge_wins: u64,
+    pub hedge_budget_denied: u64,
+    pub read_cache_hits: u64,
+    pub read_cache_misses: u64,
+    pub read_cache_invalidations: u64,
+    pub coalesced_gets: u64,
+    pub reads_cancelled: u64,
+    pub late_wins: u64,
     /// Sender-side per-purpose bandwidth (filled by the transports).
     pub maint: MaintStats,
 }

@@ -20,6 +20,7 @@ use crate::crypto::vrf::VrfProof;
 use crate::crypto::Hash256;
 use crate::dht::{NodeId, PeerInfo};
 use crate::node::health::{capped_backoff_ms, HealthTracker, Offense, Standing};
+use crate::node::ranking::{ReadCache, ReplicaRanker};
 use crate::node::storage::StoredFragment;
 use crate::node::wal::{self, Wal, WalOp, WalReplayReport};
 use crate::util::rng::Rng;
@@ -57,6 +58,14 @@ const SEEN_ANNOUNCE_CAP: usize = 8;
 /// Capped-backoff exponent for `JoinRetry`: retries wait at most
 /// `op_timeout_ms * 2^3` between attempts.
 const JOIN_BACKOFF_CAP_EXP: u32 = 3;
+
+/// Bounded memory of query ops torn down by `cancel_op` propagation
+/// (ISSUE 10): straggler replies addressed to one of these are counted
+/// under [`Metrics::late_wins`] instead of being silently dropped.
+const CANCELLED_READS_CAP: usize = 64;
+
+/// Recent-latency ring length backing the hedge-delay quantile.
+const RANKER_RING_CAP: usize = 128;
 
 /// Cold-group aggregation (ISSUE 9): consecutive stable maintenance
 /// ticks before a group freezes. Must stay comfortably below
@@ -354,6 +363,17 @@ pub struct VaultPeer {
     /// `None` unless `cfg.peer_health` — with the flag off not even the
     /// tracker's jitter stream is forked, so no RNG draw moves.
     pub health: Option<HealthTracker>,
+    /// Read-path replica ranking + hedge trigger/budget (ISSUE 10).
+    /// `None` unless `cfg.read_ranking` or `cfg.read_hedge`; draws no
+    /// RNG, so its existence perturbs nothing else.
+    pub ranker: Option<ReplicaRanker>,
+    /// Client-side decoded-chunk cache (ISSUE 10). `None` unless
+    /// `cfg.read_cache_bytes > 0`; invalidated wholesale at every
+    /// adopted epoch rotation.
+    pub read_cache: Option<ReadCache>,
+    /// Query ops torn down by `cancel_op` propagation (bounded FIFO);
+    /// straggler replies to these count under `Metrics::late_wins`.
+    pub(super) cancelled_reads: Vec<u64>,
     /// First gossiped [`SignedAnnounce`] seen per `(epoch, announcer)`
     /// (bounded cache): a second, conflicting one from the same key is
     /// self-contained equivocation evidence. Never feeds epoch
@@ -420,6 +440,17 @@ impl VaultPeer {
         } else {
             None
         };
+        // The ranker/cache never touch the RNG, timers, or the wire on
+        // their own, so constructing them is fingerprint-neutral; their
+        // flags gate every behavioral use site instead.
+        let ranker = (cfg.read_ranking || cfg.read_hedge).then(|| {
+            ReplicaRanker::new(
+                (cfg.op_timeout_ms / 16).max(1),
+                cfg.hedge_budget_mtokens,
+                RANKER_RING_CAP,
+            )
+        });
+        let read_cache = (cfg.read_cache_bytes > 0).then(|| ReadCache::new(cfg.read_cache_bytes));
         VaultPeer {
             cfg,
             key,
@@ -442,6 +473,9 @@ impl VaultPeer {
             audit_ledger: AuditLedger::default(),
             wal: Wal::new(),
             health,
+            ranker,
+            read_cache,
+            cancelled_reads: Vec::new(),
             seen_announces: HashMap::default(),
             adaptive_ctr: 0,
             table,
@@ -730,6 +764,7 @@ impl VaultPeer {
             }
             TimerKind::OpTimeout { op } => self.on_op_timeout(dir, out, op),
             TimerKind::JoinRetry { chash } => self.join_retry(dir, out, chash),
+            TimerKind::HedgeCheck { op } => self.query_hedge_check(out, op),
         }
     }
 
@@ -1677,6 +1712,14 @@ impl VaultPeer {
             beacon: ann.beacon,
             n_nodes: self.cfg.n_nodes as u64,
         });
+        // Read-cache invalidation contract (ISSUE 10): the rotation is
+        // adopted *here*, as its own delivered event — strictly before
+        // any later completion event could fan a coalesced get out to
+        // its waiters — so no waiter ever observes a pre-rotation
+        // cached chunk once the boundary has landed.
+        if let Some(rc) = self.read_cache.as_mut() {
+            self.metrics.read_cache_invalidations += rc.invalidate_all();
+        }
         self.rotate_groups(out);
         self.advance_audit_epoch(out);
     }
@@ -2642,6 +2685,13 @@ impl VaultPeer {
             self.query_frag_reply(dir, out, from, op, chash, frag);
             return;
         }
+        // Straggler answering a query `cancel_op` already tore down:
+        // visible exactly once under `late_wins`, never re-charged to
+        // the dead saga (ISSUE 10 satellite).
+        if self.cancelled_reads.contains(&op) {
+            self.metrics.late_wins += 1;
+            return;
+        }
         self.health_resolve(op, from, out.now_ms);
         let Some(js) = self.joins.get_mut(&chash) else { return };
         if js.op != op {
@@ -2810,6 +2860,41 @@ impl VaultPeer {
         } else if self.query_ops.contains_key(&op) {
             self.query_op_timeout(dir, out, op);
         }
+    }
+
+    /// Tear down a client query saga the API cancelled (ISSUE 10,
+    /// `VaultConfig::read_cancel`): without this, `cancel_op` only
+    /// removed the registry entry while the peer kept re-fanning
+    /// `GetFrag` waves until the op deadline — bandwidth charged to an
+    /// op nobody wanted anymore. The saga's pending timers die on their
+    /// own (`on_op_timeout` / `query_hedge_check` no-op and never
+    /// re-arm for an unknown op), no peer is blamed for outstanding
+    /// asks, and the op id is remembered (bounded FIFO) so straggler
+    /// replies surface as [`Metrics::late_wins`]. Waiters coalesced
+    /// onto the saga fail immediately — their registry entries were
+    /// cancelled or will expire, and a dangling waiter completion would
+    /// be dropped there anyway.
+    pub fn cancel_client_op(&mut self, out: &mut Outbox, op: u64) -> bool {
+        let Some(qop) = self.query_ops.remove(&op) else { return false };
+        if let Some(h) = self.health.as_mut() {
+            h.forget_op(op);
+        }
+        if let Some(rk) = self.ranker.as_mut() {
+            rk.forget_op(op);
+        }
+        for (wop, _) in qop.waiters {
+            out.emit(AppEvent::OpFailed {
+                op: wop,
+                kind: "query",
+                reason: "coalesced leader cancelled".into(),
+            });
+        }
+        if self.cancelled_reads.len() >= CANCELLED_READS_CAP {
+            self.cancelled_reads.remove(0);
+        }
+        self.cancelled_reads.push(op);
+        self.metrics.reads_cancelled += 1;
+        true
     }
 
     // ---- crash-restart recovery (ISSUE 6) --------------------------------

@@ -25,7 +25,7 @@
 use crate::api::{OpHandle, OpOutcome, VaultApi};
 use crate::chain::SignedAnnounce;
 use crate::codec::ObjectId;
-use crate::coordinator::workload::{run_open_loop, OpenLoopSpec};
+use crate::coordinator::workload::{run_open_loop, run_read_storm, OpenLoopSpec, ReadStormSpec};
 use crate::coordinator::{Cluster, ClusterConfig, ClusterRuntime};
 use crate::crypto::ed25519::SigningKey;
 use crate::crypto::Hash256;
@@ -146,6 +146,15 @@ pub enum Fault {
     /// heartbeats and audit challenges honestly — storage intact,
     /// audits green. Only per-request deadline accounting catches it.
     AdaptiveWithhold { object: usize, chunk: usize, members: usize },
+    /// Zipf-skewed, gets-only open-loop read storm (ISSUE 10) driven
+    /// through [`run_read_storm`]: exponential arrivals keep up to
+    /// `in_flight` gets outstanding until `gets` have been submitted,
+    /// targets drawn zipf(1.1) over the seeded corpus from one pinned
+    /// client (cache hits and coalescing are per-client). Every get
+    /// carries `deadline_ms`; failures contribute the deadline as a
+    /// censored latency sample, so the phase's `p99_ms` reflects
+    /// unavailability instead of hiding it.
+    ReadStorm { gets: usize, in_flight: usize, deadline_ms: u64 },
 }
 
 /// An invariant evaluated at the end of a phase.
@@ -220,6 +229,13 @@ pub enum Check {
     /// twins assert `[0, 0]` — audits stay green, which is exactly why
     /// the health plane has to exist.
     FaultedAuditSuspectersWithin { min: usize, max: usize },
+    /// Tail-latency budget (ISSUE 10): the phase's pooled open-loop /
+    /// read-storm p99 (censored failures included) must stay at or
+    /// below this many virtual ms. Read-path on-twins assert a budget
+    /// strictly under the storm deadline, which doubles as an
+    /// availability floor — a phase with ≥ 1% censored gets cannot
+    /// pass.
+    TailLatencyAtMost { p99_ms: f64 },
 }
 
 /// A timed phase: inject, advance virtual time, assert.
@@ -275,6 +291,12 @@ pub struct ScenarioSpec {
     /// byte-identical; when on, the fingerprint is still a pure
     /// function of `(seed, shards)` — see DESIGN.md §Scale Runtime.
     pub lazy_groups: bool,
+    /// Heavy-traffic read path (ISSUE 10): replica ranking, hedged
+    /// requests, the hot-object client cache, request coalescing, and
+    /// cancel propagation, all at once. Off by default so every
+    /// pre-existing scenario fingerprint is byte-identical — see
+    /// DESIGN.md §Read Path.
+    pub read_path: bool,
     /// Worker threads for the sharded runtime (0 = one per core). Never
     /// part of the outcome — `tests/scale_runtime.rs` pins it to
     /// several values and asserts identical fingerprints.
@@ -301,9 +323,19 @@ impl ScenarioSpec {
             audit_rate: 0.25,
             peer_health: false,
             lazy_groups: false,
+            read_path: false,
             workers: 0,
             phases: Vec::new(),
         }
+    }
+
+    /// Enable the heavy-traffic read path (ISSUE 10): EWMA replica
+    /// ranking, quantile-delayed hedged requests (with a widened token
+    /// budget so scenario storms are not budget-bound), the hot-object
+    /// client cache, request coalescing, and `cancel_op` propagation.
+    pub fn read_path(mut self) -> Self {
+        self.read_path = true;
+        self
     }
 
     /// Enable cold-group aggregation (ISSUE 9): stable, untouched
@@ -455,6 +487,18 @@ pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioReport {
     cfg.vault.audit_rate = spec.audit_rate;
     cfg.vault.peer_health = spec.peer_health;
     cfg.vault.lazy_groups = spec.lazy_groups;
+    if spec.read_path {
+        cfg.vault.read_ranking = true;
+        cfg.vault.read_hedge = true;
+        // Scenario storms concentrate hundreds of gets on one client;
+        // widen the hedge budget so the comparison measures the read
+        // path, not the rate limiter.
+        cfg.vault.hedge_budget_mtokens = 64_000;
+        cfg.vault.hedge_refill_mtokens = 4_000;
+        cfg.vault.read_cache_bytes = 4 << 20;
+        cfg.vault.read_coalesce = true;
+        cfg.vault.read_cancel = true;
+    }
     cfg.sim.workers = spec.workers;
     cfg.vault.heartbeat_ms = 5_000;
     cfg.vault.suspicion_ms = 15_000;
@@ -815,6 +859,24 @@ fn inject_fault<N: ClusterRuntime>(
                 *fp = fold(*fp, i as u64 ^ 0xAD47);
             }
         }
+        Fault::ReadStorm { gets, in_flight, deadline_ms } => {
+            let refs: Vec<ObjectId> = corpus.iter().map(|(id, _)| id.clone()).collect();
+            let spec = ReadStormSpec {
+                seed: rng.next_u64(),
+                total_gets: *gets,
+                target_in_flight: *in_flight,
+                mean_interarrival_ms: 25.0,
+                zipf_s: 1.1,
+                deadline_ms: Some(*deadline_ms),
+                max_virtual_ms: 240_000,
+                single_client: true,
+            };
+            let report = run_read_storm(cluster, &spec, &refs);
+            outcome.ops_ok += report.ok;
+            outcome.ops_failed += report.failed;
+            outcome.op_latency.extend(&report.latency);
+            *fp = fold(*fp, report.fingerprint);
+        }
     }
 }
 
@@ -1129,6 +1191,15 @@ fn run_check<N: ClusterRuntime>(
                         "faulted peer #{wi}: audit-suspected by {suspecters} peers, want [{min}, {max}]"
                     ));
                 }
+            }
+        }
+        Check::TailLatencyAtMost { p99_ms } => {
+            *fp = fold(*fp, outcome.p99_ms.to_bits() ^ 0x7A11);
+            if outcome.p99_ms > *p99_ms {
+                outcome.failures.push(format!(
+                    "p99 {:.0}ms exceeds tail budget {:.0}ms",
+                    outcome.p99_ms, p99_ms
+                ));
             }
         }
         Check::GroupsRecoveredTo(frac) => {

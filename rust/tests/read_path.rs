@@ -1,0 +1,267 @@
+//! ISSUE 10 — heavy-traffic read path: flag-off neutrality, cancel
+//! propagation with straggler accounting, hedged reads racing slow
+//! holders, and the cache-invalidation-before-waiter-fanout contract
+//! at epoch rotation.
+
+use vault::api::{OpOutcome, VaultApi};
+use vault::codec::ObjectId;
+use vault::coordinator::{Cluster, ClusterConfig};
+use vault::util::rng::Rng;
+
+fn obj(seed: u64, len: usize) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0u8; len];
+    rng.fill_bytes(&mut v);
+    v
+}
+
+/// Mark fragment holders slow-loris, capping how many of each chunk's
+/// group go slow so every chunk keeps `r_inner - cap` fast servers. A
+/// peer is only marked if doing so keeps *all* chunks it holds under
+/// the cap. `usize::MAX` marks every holder of every chunk.
+fn slow_holders(cluster: &mut Cluster, id: &ObjectId, cap: usize) -> usize {
+    let chunks = id.chunks.clone();
+    let mut slow_count = vec![0usize; chunks.len()];
+    let mut marked = 0;
+    for i in 0..cluster.net.len() {
+        let held: Vec<usize> = chunks
+            .iter()
+            .enumerate()
+            .filter(|(_, ch)| cluster.net.peer(i).fragment_index(ch).is_some())
+            .map(|(c, _)| c)
+            .collect();
+        if held.is_empty() || cluster.net.peer(i).fault.slow_loris {
+            continue;
+        }
+        if held.iter().all(|&c| slow_count[c] < cap) {
+            cluster.net.peer_mut(i).fault.slow_loris = true;
+            for &c in &held {
+                slow_count[c] += 1;
+            }
+            marked += 1;
+        }
+    }
+    marked
+}
+
+fn read_path_counters(cluster: &Cluster, peer: usize) -> u64 {
+    let m = &cluster.net.peer(peer).metrics;
+    m.hedges_issued
+        + m.hedge_wins
+        + m.hedge_budget_denied
+        + m.read_cache_hits
+        + m.read_cache_misses
+        + m.read_cache_invalidations
+        + m.coalesced_gets
+        + m.reads_cancelled
+        + m.late_wins
+}
+
+/// Every read-path flag defaults off, flag-off peers carry none of the
+/// new per-client state, and a full store/query round trip leaves all
+/// nine new counters at zero — the construction is inert unless asked
+/// for.
+#[test]
+fn read_path_flags_default_off_and_inert() {
+    let cfg = ClusterConfig::small_test(48);
+    assert!(!cfg.vault.read_ranking, "read_ranking must default off");
+    assert!(!cfg.vault.read_hedge, "read_hedge must default off");
+    assert!(!cfg.vault.read_coalesce, "read_coalesce must default off");
+    assert!(!cfg.vault.read_cancel, "read_cancel must default off");
+    assert_eq!(cfg.vault.read_cache_bytes, 0, "cache must default off");
+    let mut cluster = Cluster::start(cfg);
+    assert!(cluster.net.peer(0).ranker.is_none());
+    assert!(cluster.net.peer(0).read_cache.is_none());
+
+    let data = obj(11, 40_000);
+    let id = cluster.store_blocking(0, &data, b"s", 0).expect("store").value;
+    let got = cluster.query_blocking(0, &id).expect("query");
+    assert_eq!(got.value, data);
+    for i in 0..cluster.net.len() {
+        assert_eq!(
+            read_path_counters(&cluster, i),
+            0,
+            "peer {i}: flag-off traffic must not touch read-path counters"
+        );
+    }
+}
+
+/// Satellite 1 regression: with `read_cancel` on, cancelling a get
+/// tears the client saga down, and the already-in-flight replies from
+/// slow holders surface as `late_wins` — counted once, then the
+/// counters go quiet (no re-fan keeps the op alive).
+#[test]
+fn cancel_tears_down_saga_and_counts_stragglers_once() {
+    let mut cfg = ClusterConfig::small_test(48);
+    cfg.vault.read_cancel = true;
+    let mut cluster = Cluster::start(cfg);
+    let data = obj(21, 50_000);
+    let id = cluster.store_blocking(0, &data, b"s", 0).expect("store").value;
+    // Every holder serves slowly, so nothing completes before cancel.
+    slow_holders(&mut cluster, &id, usize::MAX);
+
+    let h = cluster.submit_get_with(0, &id, None);
+    let t = cluster.api_now_ms() + 1_000;
+    cluster.drive(t);
+    assert!(cluster.pending_contains(h), "no fragment should land before cancel");
+    assert!(cluster.cancel_op(h));
+    assert_eq!(
+        cluster.net.peer(0).metrics.reads_cancelled,
+        1,
+        "cancel must propagate to the peer saga when read_cancel is on"
+    );
+    let done = cluster.take_completion(h).expect("cancel surfaces a completion");
+    assert!(matches!(done.outcome, OpOutcome::Failed(_)));
+
+    // Slow-loris replies land ~2.6s after their request; drain them.
+    let t = cluster.api_now_ms() + 10_000;
+    cluster.drive(t);
+    let late = cluster.net.peer(0).metrics.late_wins;
+    assert!(late >= 1, "straggler replies after cancel must count as late_wins");
+    // Stragglers are counted once: with the saga gone there is no
+    // re-fan, so another long drive adds nothing.
+    let t = cluster.api_now_ms() + 30_000;
+    cluster.drive(t);
+    assert_eq!(cluster.net.peer(0).metrics.late_wins, late);
+    assert_eq!(cluster.net.peer(0).metrics.reads_cancelled, 1);
+}
+
+/// Flag-off contrast for satellite 1: the registry still cancels, but
+/// the peer saga is left alone (legacy behavior) — no teardown, no
+/// straggler accounting.
+#[test]
+fn cancel_without_flag_keeps_legacy_saga() {
+    let mut cluster = Cluster::start(ClusterConfig::small_test(48));
+    let data = obj(22, 50_000);
+    let id = cluster.store_blocking(0, &data, b"s", 0).expect("store").value;
+    slow_holders(&mut cluster, &id, usize::MAX);
+
+    let h = cluster.submit_get_with(0, &id, None);
+    let t = cluster.api_now_ms() + 1_000;
+    cluster.drive(t);
+    assert!(cluster.cancel_op(h));
+    let done = cluster.take_completion(h).expect("cancel surfaces a completion");
+    assert!(matches!(done.outcome, OpOutcome::Failed(_)));
+
+    let t = cluster.api_now_ms() + 40_000;
+    cluster.drive(t);
+    assert_eq!(cluster.net.peer(0).metrics.reads_cancelled, 0);
+    assert_eq!(cluster.net.peer(0).metrics.late_wins, 0);
+    // The orphaned saga's eventual QueryDone is dropped by the registry.
+    assert!(cluster.poll_completions().is_empty());
+}
+
+/// Tentpole: with ranking + hedging on, a read against groups whose
+/// nearer half serves slow-loris replies still completes well before
+/// the slow-reply delay — hedge waves reach the fast holders.
+#[test]
+fn hedged_ranked_get_beats_slow_holders() {
+    let mut cfg = ClusterConfig::small_test(48);
+    cfg.vault.read_ranking = true;
+    cfg.vault.read_hedge = true;
+    // Wide budget: this test measures the hedge path, not the limiter.
+    cfg.vault.hedge_budget_mtokens = 64_000;
+    cfg.vault.hedge_refill_mtokens = 4_000;
+    let slow_delay_ms = cfg.vault.op_timeout_ms - cfg.vault.op_timeout_ms / 8;
+    let mut cluster = Cluster::start(cfg);
+    let data = obj(31, 50_000);
+    let id = cluster.store_blocking(0, &data, b"s", 0).expect("store").value;
+    // Half of each chunk's group goes slow; the cap guarantees the
+    // other half (>= k_inner) stays fast, so hedge waves can finish
+    // every chunk without waiting out a slow reply.
+    slow_holders(&mut cluster, &id, 10);
+
+    let got = cluster.query_blocking(0, &id).expect("hedged query");
+    assert_eq!(got.value, data);
+    assert!(
+        got.latency_ms < slow_delay_ms,
+        "hedged read took {}ms — at least one chunk waited out a \
+         slow-loris reply ({}ms)",
+        got.latency_ms,
+        slow_delay_ms
+    );
+    let m = &cluster.net.peer(0).metrics;
+    assert!(m.hedges_issued > 0, "slow first wave must trigger hedge waves");
+}
+
+/// Satellite 3: an EpochUpdate that lands mid-coalesced-get empties the
+/// read cache *before* the leader's completion fans out to waiters —
+/// no waiter ever observes a pre-rotation cached chunk — and the
+/// post-rotation completion repopulates the cache.
+#[test]
+fn epoch_update_mid_coalesced_get_invalidates_cache_first() {
+    let mut cfg = ClusterConfig::small_test(48);
+    cfg.epoch_ms = 60_000;
+    cfg.vault.read_cache_bytes = 4 << 20;
+    cfg.vault.read_coalesce = true;
+    let k_outer = cfg.vault.k_outer;
+    let mut cluster = Cluster::start(cfg);
+
+    let data_x = obj(41, 30_000);
+    let data_y = obj(42, 30_000);
+    let id_x = cluster.store_blocking(0, &data_x, b"x", 0).expect("store x").value;
+    let id_y = cluster.store_blocking(0, &data_y, b"y", 0).expect("store y").value;
+
+    // Prime the cache with X, then prove a warm read is served from it.
+    cluster.query_blocking(0, &id_x).expect("prime x");
+    let hits_before = cluster.net.peer(0).metrics.read_cache_hits;
+    let warm = cluster.query_blocking(0, &id_x).expect("warm x");
+    assert_eq!(warm.value, data_x);
+    assert_eq!(warm.latency_ms, 0, "warm read must be served from cache");
+    let warm_hits = cluster.net.peer(0).metrics.read_cache_hits - hits_before;
+    assert!(
+        warm_hits >= k_outer as u64,
+        "warm read hit {warm_hits} chunks, need >= k_outer={k_outer}"
+    );
+
+    // Y's holders all serve slowly so the coalesced pair spans the
+    // 60s epoch boundary.
+    slow_holders(&mut cluster, &id_y, usize::MAX);
+    let boundary = 60_000;
+    let now = cluster.api_now_ms();
+    assert!(now < boundary - 1_000, "setup overran the first epoch ({now}ms)");
+    cluster.drive(boundary - 1_000);
+
+    let inv_before = cluster.net.peer(0).metrics.read_cache_invalidations;
+    let h_lead = cluster.submit_get_with(0, &id_y, None);
+    let h_wait = cluster.submit_get_with(0, &id_y, None);
+    assert_eq!(
+        cluster.net.peer(0).metrics.coalesced_gets,
+        1,
+        "second get of the same object must coalesce onto the leader"
+    );
+
+    let done_lead = cluster.drive_until_complete(h_lead);
+    let done_wait = cluster.drive_until_complete(h_wait);
+    assert!(
+        done_lead.submitted_ms < boundary && done_lead.finished_ms > boundary,
+        "leader get must straddle the epoch boundary (submitted {} finished {})",
+        done_lead.submitted_ms,
+        done_lead.finished_ms
+    );
+    match (&done_lead.outcome, &done_wait.outcome) {
+        (OpOutcome::Fetched(a), OpOutcome::Fetched(b)) => {
+            assert_eq!(a, &data_y, "leader bytes");
+            assert_eq!(b, &data_y, "waiter bytes must be bit-exact");
+        }
+        other => panic!("coalesced pair must both fetch, got {other:?}"),
+    }
+
+    // The rotation dropped X's pre-boundary entries — strictly before
+    // the leader's completion fanned out, since the leader was still
+    // waiting on slow holders when the boundary landed.
+    let invalidated = cluster.net.peer(0).metrics.read_cache_invalidations - inv_before;
+    assert!(
+        invalidated >= k_outer as u64,
+        "rotation mid-get invalidated {invalidated} entries, expected \
+         the {k_outer}+ chunks cached before the boundary"
+    );
+
+    // The post-rotation completion repopulated the cache: a fresh read
+    // of Y is served synchronously from post-boundary entries.
+    let hits_before = cluster.net.peer(0).metrics.read_cache_hits;
+    let again = cluster.query_blocking(0, &id_y).expect("warm y");
+    assert_eq!(again.value, data_y);
+    assert_eq!(again.latency_ms, 0, "post-rotation read must hit the cache");
+    assert!(cluster.net.peer(0).metrics.read_cache_hits - hits_before >= k_outer as u64);
+}
